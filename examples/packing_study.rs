@@ -1,0 +1,60 @@
+//! The §3.2 driver-processing study as a library consumer would run it:
+//! sweep Algorithm 2 over both packing strategies, print the Fig. 4
+//! table and a Fig. 5-style wiring timeline, and locate the two knees.
+//!
+//! ```bash
+//! cargo run --release --example packing_study
+//! ```
+
+use apple_moe::config::Packing;
+use apple_moe::packing::{run_point, run_sweep, PackingBenchConfig};
+use apple_moe::util::fmt::format_bytes;
+
+fn main() {
+    let cfg = PackingBenchConfig::default();
+    println!(
+        "benchmark: {} layers x {} matmuls, {} per matrix ({} prestacked)\n",
+        cfg.n_layers,
+        cfg.n_mpl,
+        format_bytes(cfg.matrix_bytes()),
+        format_bytes(cfg.stack_bytes())
+    );
+
+    let u = run_sweep(&cfg, Packing::Unstacked);
+    let p = run_sweep(&cfg, Packing::Prestacked);
+    println!("{:>8} {:>12} {:>12}", "T_wait", "unstacked", "prestacked");
+    for (a, b) in u.points.iter().zip(&p.points) {
+        println!(
+            "{:>6}ms {:>11.3}s {:>11.3}s",
+            a.t_wait_ms, a.per_sample_secs, b.per_sample_secs
+        );
+    }
+
+    // Locate the knees programmatically (what Fig. 4 shows visually).
+    let base = u.points[0].per_sample_secs;
+    let knee_u = u
+        .points
+        .iter()
+        .find(|pt| pt.per_sample_secs > 1.5 * base)
+        .map(|pt| pt.t_wait_ms);
+    let base_p = p.points[0].per_sample_secs;
+    let knee_p = p
+        .points
+        .iter()
+        .find(|pt| pt.per_sample_secs > 1.5 * base_p)
+        .map(|pt| pt.t_wait_ms);
+    println!("\nunstacked knee:  T_wait = {knee_u:?} ms (paper: 8)");
+    println!("prestacked knee: T_wait = {knee_p:?} ms (paper: just past 512)");
+
+    println!("\nFig. 5-style timeline (prestacked, T_wait = 1024 ms — the re-wire loop):");
+    let (_, events) = run_point(&cfg, Packing::Prestacked, 1024, true);
+    for e in events.iter().take(8) {
+        println!(
+            "  t={:>10.1}ms {} {:?} cost={:.0}ms",
+            e.at as f64 / 1e6,
+            if e.rewire { "REWIRE" } else { "wire  " },
+            e.id,
+            e.cost as f64 / 1e6
+        );
+    }
+}

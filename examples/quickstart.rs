@@ -1,0 +1,37 @@
+//! Quickstart: load the AOT artifacts and generate text with the dense
+//! single-node engine — the smallest end-to-end use of the stack.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::path::Path;
+
+use apple_moe::engine::{DenseEngine, Request, Sampler};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(
+        dir.join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    println!("loading dbrx-nano artifacts + compiling on the PJRT CPU client...");
+    let mut engine = DenseEngine::load(&dir, Sampler::Greedy, 42)?;
+    let m = &engine.runtime().manifest;
+    println!(
+        "model: {} layers, d={}, {} experts (top-{}), vocab {}",
+        m.n_layers, m.d_embed, m.n_experts, m.top_k, m.vocab
+    );
+
+    let req = Request::new(1, vec![11, 29, 83, 147], 24);
+    let res = engine.serve(&req)?;
+    println!("prompt:    {:?}", req.prompt);
+    println!("generated: {:?}", res.generated);
+    println!(
+        "prefill {:.1} tok/s | decode {:.1} tok/s",
+        res.metrics.prefill.tokens_per_sec(),
+        res.metrics.decode.tokens_per_sec()
+    );
+    Ok(())
+}

@@ -1,0 +1,183 @@
+"""AOT lowering: JAX -> HLO *text* artifacts + weight bundle.
+
+The rust runtime (`rust/src/runtime/`) loads these with
+``HloModuleProto::from_text_file`` on the PJRT CPU client. Text — NOT
+``.serialize()`` — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids that the crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids.
+
+Emitted into ``artifacts/`` (idempotent; `make artifacts` skips when
+fresh):
+
+  embed.hlo.txt         (embed, tok)                      -> (x,)
+  attn_router.hlo.txt   (ln1,wqkv,wo,ln2,wr,x,k,v,pos)    -> (h, moe_in, top_w, top_i, k', v')
+  experts_el8.hlo.txt   ([8,..] stacks, moe_in, idx, w)   -> (partial,)
+  experts_el16.hlo.txt  ([16,..] stacks, moe_in, idx, w)  -> (partial,)
+  lm_head.hlo.txt       (ln_f, lm_head, h)                -> (logits,)
+  dense_step.hlo.txt    (params..., tok, K, V, pos)       -> (logits, K', V')
+  weights.npz           all model weights (float32, flat names)
+  manifest.txt          dims + artifact inventory for the rust side
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.model import CFG, NUM_SLOTS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_artifacts(cfg=CFG):
+    """Return {name: hlo_text} for every role computation."""
+    d, dq, f, e, k = cfg.d_embed, cfg.d_qkv, cfg.d_ffn, cfg.n_experts, cfg.top_k
+    nh, nk, hd, s, v, nl = (
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.head_dim,
+        cfg.max_seq,
+        cfg.vocab,
+        cfg.n_layers,
+    )
+    arts = {}
+
+    arts["embed"] = to_hlo_text(
+        jax.jit(lambda t_, tok: (M.embed_step(t_, tok),)).lower(f32(v, d), i32(1))
+    )
+
+    def attn_router(ln1, wqkv, wo, ln2, wr, x, kc, vc, pos):
+        return M.attn_router_step(ln1, wqkv, wo, ln2, wr, x, kc, vc, pos, cfg)
+
+    arts["attn_router"] = to_hlo_text(
+        jax.jit(attn_router).lower(
+            f32(d), f32(d, dq), f32(nh * hd, d), f32(d), f32(d, e),
+            f32(1, d), f32(nk, s, hd), f32(nk, s, hd), i32(),
+        )
+    )
+
+    def experts(w1s, v1s, w2s, x, idx, w):
+        return (M.experts_forward(w1s, v1s, w2s, x, idx, w),)
+
+    def experts_fast(w1s, v1s, w2s, x, idx, w):
+        return (M.experts_forward_fast(w1s, v1s, w2s, x, idx, w),)
+
+    # Reference path: the L1 Pallas kernel (gridded, TPU-shaped).
+    for el in (8, 16):
+        arts[f"experts_el{el}"] = to_hlo_text(
+            jax.jit(experts).lower(
+                f32(el, d, f), f32(el, d, f), f32(el, f, d),
+                f32(1, d), i32(NUM_SLOTS), f32(NUM_SLOTS),
+            )
+        )
+    # Serving path: the fast slot-loop formulation (see §Perf), at
+    # NS = top_k for router-aided/selected-only and NS = NUM_SLOTS for
+    # busy-full.
+    for el in (8, 16):
+        for ns in (k, NUM_SLOTS):
+            arts[f"experts_el{el}_fast_ns{ns}"] = to_hlo_text(
+                jax.jit(experts_fast).lower(
+                    f32(el, d, f), f32(el, d, f), f32(el, f, d),
+                    f32(1, d), i32(ns), f32(ns),
+                )
+            )
+
+    # Fastest serving path: per-slot weights as direct arguments (the
+    # coordinator owns per-expert buffers) — no gather, no slicing.
+    def experts_direct(x, w, *ws):
+        return (M.experts_forward_direct(x, w, *ws),)
+
+    for ns in (k, NUM_SLOTS):
+        wspecs = []
+        for _ in range(ns):
+            wspecs += [f32(d, f), f32(d, f), f32(f, d)]
+        arts[f"experts_direct_ns{ns}"] = to_hlo_text(
+            jax.jit(experts_direct).lower(f32(1, d), f32(ns), *wspecs)
+        )
+
+    arts["lm_head"] = to_hlo_text(
+        jax.jit(lambda a, b, h: (M.lm_head_step(a, b, h),)).lower(
+            f32(d), f32(d, v), f32(1, d)
+        )
+    )
+
+    order = M.dense_param_order(cfg)
+    p0 = M.init_params(cfg)
+    param_specs = [f32(*p0[kk].shape) for kk in order]
+
+    def dense(*args):
+        params = list(args[: len(order)])
+        tok, kc, vc, pos = args[len(order) :]
+        return M.dense_decode_step(params, tok, kc, vc, pos, cfg)
+
+    arts["dense_step"] = to_hlo_text(
+        jax.jit(dense).lower(
+            *param_specs, i32(1), f32(nl, nk, s, hd), f32(nl, nk, s, hd), i32()
+        )
+    )
+    return arts
+
+
+def write_manifest(path, cfg=CFG):
+    with open(path, "w") as fh:
+        fh.write("# dbrx-nano artifact manifest (parsed by rust/src/runtime)\n")
+        for kk, vv in [
+            ("n_layers", cfg.n_layers),
+            ("d_embed", cfg.d_embed),
+            ("d_ffn", cfg.d_ffn),
+            ("n_experts", cfg.n_experts),
+            ("top_k", cfg.top_k),
+            ("n_heads", cfg.n_heads),
+            ("n_kv_heads", cfg.n_kv_heads),
+            ("head_dim", cfg.head_dim),
+            ("vocab", cfg.vocab),
+            ("max_seq", cfg.max_seq),
+            ("num_slots", NUM_SLOTS),
+            ("fast_num_slots", cfg.top_k),
+        ]:
+            fh.write(f"{kk} = {vv}\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    arts = lower_artifacts()
+    for name, text in arts.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    params = M.init_params(CFG, seed=args.seed)
+    npz_path = os.path.join(args.out_dir, "weights.npz")
+    np.savez(npz_path, **{kk: np.asarray(vv) for kk, vv in params.items()})
+    print(f"wrote {npz_path} ({os.path.getsize(npz_path)} bytes)")
+
+    write_manifest(os.path.join(args.out_dir, "manifest.txt"))
+    print("wrote manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

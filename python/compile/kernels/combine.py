@@ -1,0 +1,37 @@
+"""L1 Pallas kernel: weighted combine of expert-slot outputs.
+
+Computes ``out = sum_s w[s] * ys[s]`` — the per-node partial of the
+weighted sum whose cross-node completion is the Fig. 7 all-reduce.
+Padding slots (busy-full extras, LRU keep-warm runs) carry weight 0, so
+"zero out their response during the weighted sum" (§4.2) is literally
+this kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(ys_ref, w_ref, o_ref):
+    """Single-block kernel: ys [S, T, D], w [S], out [T, D]."""
+    ys = ys_ref[...]
+    w = w_ref[...]
+    o_ref[...] = jnp.einsum("s,std->td", w, ys)
+
+
+def combine_weighted(ys, w):
+    """Weighted sum over the slot axis.
+
+    Args:
+      ys: [S, T, D] slot outputs.
+      w:  [S] combine weights (0 for padding slots).
+
+    Returns:
+      [T, D].
+    """
+    s, t, d = ys.shape
+    return pl.pallas_call(
+        _combine_kernel,
+        out_shape=jax.ShapeDtypeStruct((t, d), ys.dtype),
+        interpret=True,
+    )(ys, w)

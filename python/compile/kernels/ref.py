@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels (build-time correctness gate).
+
+Every kernel in this package must match its `_ref` twin to float32
+tolerance; `python/tests/test_kernels.py` sweeps shapes with hypothesis.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_ffn_ref(x, w1, v1, w2):
+    """One expert: (silu(x @ w1) * (x @ v1)) @ w2."""
+    return (jax.nn.silu(x @ w1) * (x @ v1)) @ w2
+
+
+def expert_ffn_stacked_ref(x, w1s, v1s, w2s):
+    """[S,T,D] outputs for stacked expert weights (vmap of the single)."""
+    return jax.vmap(lambda a, b, c: expert_ffn_ref(x, a, b, c))(w1s, v1s, w2s)
+
+
+def combine_weighted_ref(ys, w):
+    """sum_s w[s] * ys[s] -> [T, D]."""
+    return jnp.einsum("s,std->td", w, ys)
+
+
+def moe_block_ref(x, w1s, v1s, w2s, top_idx, top_w):
+    """Full MoE block: gather selected experts, run, weighted-sum.
+
+    Args:
+      x: [T, D]; w1s/v1s/w2s: [E, ...] full expert stacks;
+      top_idx: [K] int32; top_w: [K].
+    """
+    ys = expert_ffn_stacked_ref(
+        x, w1s[top_idx], v1s[top_idx], w2s[top_idx]
+    )
+    return combine_weighted_ref(ys, top_w)

@@ -1,0 +1,297 @@
+"""L2: the DBRX-nano decoder in JAX, split into the per-role computations
+the rust coordinator executes (DESIGN.md §2).
+
+Roles (all static-shape, batch = 1 token, f32 on the CPU PJRT path):
+
+- ``embed_step``       token id -> residual stream input
+- ``attn_router_step`` one layer's pre-norm GQA attention decode step with
+                       KV-cache update, plus the top-4-of-16 router — the
+                       component replicated on every node under the
+                       decentralized design (§4.3 / Fig. 7)
+- ``experts_forward``  run up to NUM_SLOTS local experts (gathered from a
+                       prestacked stack by slot index) and return this
+                       node's weighted partial sum — the expert-parallel
+                       unit of Figs. 2–3
+- ``lm_head_step``     final norm + logits
+- ``dense_decode_step``the whole decoder in one computation (single-node
+                       baseline / quickstart path)
+
+Python never serves requests: ``aot.py`` lowers each role once to HLO
+text and the rust runtime executes the artifacts.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.combine import combine_weighted
+from compile.kernels.expert_ffn import expert_ffn_stacked
+
+
+@dataclasses.dataclass(frozen=True)
+class NanoConfig:
+    """dbrx-nano: DBRX's architecture at executable scale (same expert
+    count and top-k so routing statistics match the 132B model)."""
+
+    n_layers: int = 4
+    d_embed: int = 256
+    d_ffn: int = 448
+    n_experts: int = 16
+    top_k: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    head_dim: int = 32
+    vocab: int = 512
+    max_seq: int = 256
+
+    @property
+    def d_qkv(self) -> int:
+        return (self.n_heads + 2 * self.n_kv_heads) * self.head_dim
+
+
+CFG = NanoConfig()
+# Max expert slots a node executes per layer (= resident experts on the
+# largest supported cluster layout; padding slots carry weight 0).
+NUM_SLOTS = 8
+
+
+def init_params(cfg: NanoConfig = CFG, seed: int = 0) -> dict:
+    """Random (seeded) weights in the flat naming the npz bundle uses."""
+    key = jax.random.PRNGKey(seed)
+    ks = iter(jax.random.split(key, 8 + cfg.n_layers * 8))
+    scale = lambda fan_in: 1.0 / jnp.sqrt(fan_in)
+    p = {
+        "embed": jax.random.normal(next(ks), (cfg.vocab, cfg.d_embed)) * 0.02,
+        "ln_f": jnp.ones((cfg.d_embed,)),
+        "lm_head": jax.random.normal(next(ks), (cfg.d_embed, cfg.vocab))
+        * scale(cfg.d_embed),
+    }
+    for l in range(cfg.n_layers):
+        p[f"layer{l}.ln1"] = jnp.ones((cfg.d_embed,))
+        p[f"layer{l}.ln2"] = jnp.ones((cfg.d_embed,))
+        p[f"layer{l}.wqkv"] = (
+            jax.random.normal(next(ks), (cfg.d_embed, cfg.d_qkv)) * scale(cfg.d_embed)
+        )
+        p[f"layer{l}.wo"] = (
+            jax.random.normal(next(ks), (cfg.n_heads * cfg.head_dim, cfg.d_embed))
+            * scale(cfg.n_heads * cfg.head_dim)
+        )
+        p[f"layer{l}.wr"] = (
+            jax.random.normal(next(ks), (cfg.d_embed, cfg.n_experts)) * scale(cfg.d_embed)
+        )
+        # Prestacked expert weights: [E, D, F] / [E, F, D] (§4.1).
+        p[f"layer{l}.w1"] = (
+            jax.random.normal(next(ks), (cfg.n_experts, cfg.d_embed, cfg.d_ffn))
+            * scale(cfg.d_embed)
+        )
+        p[f"layer{l}.v1"] = (
+            jax.random.normal(next(ks), (cfg.n_experts, cfg.d_embed, cfg.d_ffn))
+            * scale(cfg.d_embed)
+        )
+        p[f"layer{l}.w2"] = (
+            jax.random.normal(next(ks), (cfg.n_experts, cfg.d_ffn, cfg.d_embed))
+            * scale(cfg.d_ffn)
+        )
+    return {k: v.astype(jnp.float32) for k, v in p.items()}
+
+
+def _topk(logits, k):
+    """Iterative argmax top-k.
+
+    ``jax.lax.top_k`` lowers to a dedicated `topk` HLO instruction that
+    the rust side's XLA (xla_extension 0.5.1 text parser) does not know;
+    k rounds of argmax+mask lower to plain reduce/select ops that parse
+    everywhere. k is 4 — the loop is unrolled at trace time.
+    """
+    vals, idxs = [], []
+    x = logits
+    for _ in range(k):
+        i = jnp.argmax(x)
+        vals.append(x[i])
+        idxs.append(i)
+        x = x.at[i].set(-jnp.inf)
+    return jnp.stack(vals), jnp.stack(idxs).astype(jnp.int32)
+
+
+def _layernorm(x, w, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * w
+
+
+def embed_step(embed, token):
+    """(V,D), i32[1] -> [1,D]."""
+    return jnp.take(embed, token, axis=0)
+
+
+def attn_router_step(ln1, wqkv, wo, ln2, wr, x, k_cache, v_cache, pos, cfg: NanoConfig = CFG):
+    """One layer's attention + router for one decode token.
+
+    Args:
+      x: [1, D] residual input; k_cache/v_cache: [Hkv, S, hd]; pos: i32[]
+         index of this token in the sequence.
+    Returns:
+      (h [1,D] post-attention residual, moe_in [1,D], top_w [K],
+       top_i i32[K], k_cache', v_cache')
+    """
+    h_in = _layernorm(x, ln1)
+    qkv = h_in @ wqkv  # [1, (H+2Hkv)*hd]
+    nh, nk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = qkv[0, : nh * hd].reshape(nh, hd)
+    k_new = qkv[0, nh * hd : nh * hd + nk * hd].reshape(nk, hd)
+    v_new = qkv[0, nh * hd + nk * hd :].reshape(nk, hd)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new[:, None, :], (0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new[:, None, :], (0, pos, 0))
+
+    group = nh // nk  # GQA: each kv head serves `group` query heads
+    kq = jnp.repeat(k_cache, group, axis=0)  # [H, S, hd]
+    vq = jnp.repeat(v_cache, group, axis=0)
+    scores = jnp.einsum("hd,hsd->hs", q, kq) / jnp.sqrt(float(hd))
+    mask = jnp.arange(cfg.max_seq) <= pos  # causal: attend up to self
+    scores = jnp.where(mask[None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    attn = jnp.einsum("hs,hsd->hd", probs, vq).reshape(1, nh * hd)
+    h = x + attn @ wo
+
+    moe_in = _layernorm(h, ln2)
+    logits = (moe_in @ wr)[0]  # [E]
+    top_vals, top_i = _topk(logits, cfg.top_k)
+    top_w = jax.nn.softmax(top_vals)  # DBRX renormalizes over selected
+    return h, moe_in, top_w, top_i, k_cache, v_cache
+
+
+def experts_forward(w1s, v1s, w2s, moe_in, slot_idx, slot_w):
+    """This node's weighted partial sum over up to NUM_SLOTS experts.
+
+    Args:
+      w1s/v1s/w2s: [E_local, ...] the node's prestacked resident experts.
+      moe_in: [1, D]; slot_idx: i32[NUM_SLOTS] *local* indices into the
+        stack (padding repeats index 0); slot_w: [NUM_SLOTS] combine
+        weights, 0 for padding (§4.2's zeroed responses).
+    Returns:
+      [1, D] partial sum (all-reduced across nodes by the coordinator).
+    """
+    g1 = jnp.take(w1s, slot_idx, axis=0)  # [NS, D, F]
+    gv = jnp.take(v1s, slot_idx, axis=0)
+    g2 = jnp.take(w2s, slot_idx, axis=0)  # [NS, F, D]
+    ys = expert_ffn_stacked(moe_in, g1, gv, g2)  # [NS, 1, D] (L1 kernel)
+    return combine_weighted(ys, slot_w)  # [1, D]   (L1 kernel)
+
+
+def experts_forward_fast(w1s, v1s, w2s, moe_in, slot_idx, slot_w):
+    """CPU-fast formulation of `experts_forward`: an unrolled
+    dynamic-slice slot loop instead of gather + batched matmul.
+
+    Numerically identical to the Pallas path (asserted by tests), but the
+    XLA CPU backend runs it ~12x faster because no `[NS, D, F]` gathered
+    copies are materialized — each slot's weights are sliced and fed
+    straight into the matmuls. Slot count comes from `slot_idx`'s static
+    shape; padding slots (weight 0) still cost their matmuls, so the
+    serving artifacts are emitted at NS = top_k for router-aided
+    balancing and NS = 8 for busy-full. See EXPERIMENTS.md §Perf.
+    """
+    t, d = moe_in.shape
+    ns = slot_idx.shape[0]
+    out = jnp.zeros((t, d), moe_in.dtype)
+    for s in range(ns):  # unrolled at trace time
+        g1 = jax.lax.dynamic_slice_in_dim(w1s, slot_idx[s], 1, 0)[0]
+        gv = jax.lax.dynamic_slice_in_dim(v1s, slot_idx[s], 1, 0)[0]
+        g2 = jax.lax.dynamic_slice_in_dim(w2s, slot_idx[s], 1, 0)[0]
+        h = jax.nn.silu(moe_in @ g1) * (moe_in @ gv)
+        out = out + slot_w[s] * (h @ g2)
+    return out
+
+
+def experts_forward_direct(moe_in, slot_w, *weights):
+    """Fastest serving formulation (§Perf, iteration 3): the coordinator
+    passes each slot's weight matrices as *direct arguments* — it holds
+    per-expert device buffers and indexes them by the planner's slot ids,
+    so no gather and no dynamic-slice copy happens inside the HLO at all.
+
+    Args:
+      moe_in: [1, D]; slot_w: [NS]; weights: NS triples (w1 [D,F],
+        v1 [D,F], w2 [F,D]), flattened.
+    """
+    t, d = moe_in.shape
+    ns = slot_w.shape[0]
+    assert len(weights) == 3 * ns
+    out = jnp.zeros((t, d), moe_in.dtype)
+    for s in range(ns):
+        g1, gv, g2 = weights[3 * s], weights[3 * s + 1], weights[3 * s + 2]
+        h = jax.nn.silu(moe_in @ g1) * (moe_in @ gv)
+        out = out + slot_w[s] * (h @ g2)
+    return out
+
+
+def lm_head_step(ln_f, lm_head, h):
+    """Final norm + logits: [1,D] -> [1,V]."""
+    return _layernorm(h, ln_f) @ lm_head
+
+
+def moe_layer_ref(p, l, moe_in, cfg: NanoConfig = CFG):
+    """Reference full-MoE block for one layer (selected experts only)."""
+    logits = (moe_in @ p[f"layer{l}.wr"])[0]
+    top_vals, top_i = _topk(logits, cfg.top_k)
+    top_w = jax.nn.softmax(top_vals)
+    ns = cfg.top_k
+    idx = top_i
+    pad = jnp.zeros((NUM_SLOTS - ns,), dtype=jnp.int32)
+    padw = jnp.zeros((NUM_SLOTS - ns,), dtype=moe_in.dtype)
+    return experts_forward(
+        p[f"layer{l}.w1"],
+        p[f"layer{l}.v1"],
+        p[f"layer{l}.w2"],
+        moe_in,
+        jnp.concatenate([idx, pad]),
+        jnp.concatenate([top_w, padw]),
+    )
+
+
+def dense_decode_step(params_flat, token, k_caches, v_caches, pos, cfg: NanoConfig = CFG):
+    """Single-process decode step over all layers (baseline path).
+
+    Args:
+      params_flat: list in the order produced by `dense_param_order`.
+      token: i32[1]; k_caches/v_caches: [L, Hkv, S, hd]; pos: i32[].
+    Returns:
+      (logits [1,V], k_caches', v_caches')
+    """
+    it = iter(params_flat)
+    embed = next(it)
+    x = embed_step(embed, token)
+    new_k, new_v = [], []
+    for l in range(cfg.n_layers):
+        ln1, wqkv, wo, ln2, wr, w1s, v1s, w2s = (next(it) for _ in range(8))
+        h, moe_in, top_w, top_i, kc, vc = attn_router_step(
+            ln1, wqkv, wo, ln2, wr, x, k_caches[l], v_caches[l], pos, cfg
+        )
+        new_k.append(kc)
+        new_v.append(vc)
+        # Fast slot-loop path at NS = top_k (no padding needed: the dense
+        # step runs exactly the selected experts).
+        moe_out = experts_forward_fast(w1s, v1s, w2s, moe_in, top_i, top_w)
+        x = h + moe_out
+    ln_f = next(it)
+    lm_head = next(it)
+    logits = lm_head_step(ln_f, lm_head, x)
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def dense_param_order(cfg: NanoConfig = CFG):
+    """Key order for `dense_decode_step`'s flat parameter list."""
+    keys = ["embed"]
+    for l in range(cfg.n_layers):
+        keys += [
+            f"layer{l}.ln1",
+            f"layer{l}.wqkv",
+            f"layer{l}.wo",
+            f"layer{l}.ln2",
+            f"layer{l}.wr",
+            f"layer{l}.w1",
+            f"layer{l}.v1",
+            f"layer{l}.w2",
+        ]
+    keys += ["ln_f", "lm_head"]
+    return keys

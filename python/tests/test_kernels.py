@@ -1,0 +1,128 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes; every case asserts allclose at f32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.combine import combine_weighted
+from compile.kernels.expert_ffn import expert_ffn_single, expert_ffn_stacked
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+class TestExpertFfn:
+    def test_single_matches_ref(self):
+        k = keys(0, 4)
+        x, w1, v1, w2 = rand(k[0], 2, 16), rand(k[1], 16, 24), rand(k[2], 16, 24), rand(k[3], 24, 16)
+        got = expert_ffn_single(x, w1, v1, w2)
+        want = ref.expert_ffn_ref(x, w1, v1, w2)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_stacked_matches_ref(self):
+        k = keys(1, 4)
+        s, t, d, f = 5, 3, 8, 12
+        x = rand(k[0], t, d)
+        w1s, v1s, w2s = rand(k[1], s, d, f), rand(k[2], s, d, f), rand(k[3], s, f, d)
+        got = expert_ffn_stacked(x, w1s, v1s, w2s)
+        want = ref.expert_ffn_stacked_ref(x, w1s, v1s, w2s)
+        assert got.shape == (s, t, d)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_slots_are_independent(self):
+        # Changing slot j's weights must not change slot i's output.
+        k = keys(2, 4)
+        s, t, d, f = 4, 1, 8, 8
+        x = rand(k[0], t, d)
+        w1s, v1s, w2s = rand(k[1], s, d, f), rand(k[2], s, d, f), rand(k[3], s, f, d)
+        base = expert_ffn_stacked(x, w1s, v1s, w2s)
+        w1s2 = w1s.at[2].set(0.0)
+        mod = expert_ffn_stacked(x, w1s2, v1s, w2s)
+        np.testing.assert_allclose(base[0], mod[0], rtol=1e-6)
+        np.testing.assert_allclose(base[1], mod[1], rtol=1e-6)
+        np.testing.assert_allclose(base[3], mod[3], rtol=1e-6)
+        assert not np.allclose(base[2], mod[2])
+
+    def test_zero_weights_give_zero_output(self):
+        x = jnp.ones((1, 8))
+        z = jnp.zeros((2, 8, 8))
+        out = expert_ffn_stacked(x, z, z, jnp.zeros((2, 8, 8)))
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        s=st.integers(1, 6),
+        t=st.integers(1, 4),
+        d=st.integers(1, 24),
+        f=st.integers(1, 32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, s, t, d, f, seed):
+        k = keys(seed, 4)
+        x = rand(k[0], t, d)
+        w1s, v1s, w2s = rand(k[1], s, d, f), rand(k[2], s, d, f), rand(k[3], s, f, d)
+        got = expert_ffn_stacked(x, w1s, v1s, w2s)
+        want = ref.expert_ffn_stacked_ref(x, w1s, v1s, w2s)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+class TestCombine:
+    def test_matches_ref(self):
+        k = keys(3, 2)
+        ys, w = rand(k[0], 6, 2, 8), rand(k[1], 6)
+        np.testing.assert_allclose(
+            combine_weighted(ys, w), ref.combine_weighted_ref(ys, w), rtol=1e-5, atol=1e-5
+        )
+
+    def test_padding_slots_zeroed(self):
+        # §4.2: zero-weight slots contribute nothing.
+        k = keys(4, 1)
+        ys = rand(k[0], 4, 1, 8)
+        w = jnp.array([0.5, 0.5, 0.0, 0.0])
+        got = combine_weighted(ys, w)
+        want = 0.5 * ys[0] + 0.5 * ys[1]
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        s=st.integers(1, 8),
+        t=st.integers(1, 4),
+        d=st.integers(1, 32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, s, t, d, seed):
+        k = keys(seed, 2)
+        ys, w = rand(k[0], s, t, d), rand(k[1], s)
+        np.testing.assert_allclose(
+            combine_weighted(ys, w),
+            ref.combine_weighted_ref(ys, w),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+
+
+class TestMoeBlock:
+    def test_gather_run_combine_matches_ref(self):
+        k = keys(5, 5)
+        e, d, f, topk = 16, 8, 12, 4
+        x = rand(k[0], 1, d)
+        w1s, v1s, w2s = rand(k[1], e, d, f), rand(k[2], e, d, f), rand(k[3], e, f, d)
+        idx = jnp.array([3, 7, 11, 15], dtype=jnp.int32)
+        w = jax.nn.softmax(rand(k[4], topk))
+        want = ref.moe_block_ref(x, w1s, v1s, w2s, idx, w)
+        ys = expert_ffn_stacked(x, w1s[idx], v1s[idx], w2s[idx])
+        got = combine_weighted(ys, w)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,45 @@
+//! Fig. 4: execution time vs added wait for the two weight-packing
+//! strategies (Algorithms 1–2), plus the Fig. 5 timeline trace.
+//!
+//! Paper shape to reproduce: curves overlap at T_wait < 8 ms; unstacking
+//! departs at ≥ 8 ms; prestacking stays flat until 512 ms then blows up.
+
+use apple_moe::config::Packing;
+use apple_moe::packing::{run_point, run_sweep, PackingBenchConfig};
+use apple_moe::util::bench::section;
+
+fn main() {
+    let cfg = PackingBenchConfig::default();
+    section("Fig. 4 — per-sample execution time (seconds) vs T_wait (ms)");
+    println!("{:>10} {:>14} {:>14} {:>10} {:>10}", "T_wait", "unstacked", "prestacked", "u-rewires", "p-rewires");
+    let u = run_sweep(&cfg, Packing::Unstacked);
+    let p = run_sweep(&cfg, Packing::Prestacked);
+    for (pu, pp) in u.points.iter().zip(&p.points) {
+        println!(
+            "{:>10} {:>14.3} {:>14.3} {:>10} {:>10}",
+            pu.t_wait_ms, pu.per_sample_secs, pp.per_sample_secs, pu.rewire_ops, pp.rewire_ops
+        );
+    }
+
+    section("paper anchors");
+    let base_u = u.points[0].per_sample_secs;
+    let at16 = u.points.iter().find(|x| x.t_wait_ms == 16).unwrap();
+    let p512 = p.points.iter().find(|x| x.t_wait_ms == 512).unwrap();
+    let p1024 = p.points.iter().find(|x| x.t_wait_ms == 1024).unwrap();
+    println!("unstacked departs past 8ms:    {} ({} -> {:.3}s)", at16.per_sample_secs > 2.0 * base_u, base_u, at16.per_sample_secs);
+    println!("prestacked flat through 512ms: {}", (p512.per_sample_secs - p.points[0].per_sample_secs).abs() < 0.1 * p.points[0].per_sample_secs.max(1e-3));
+    println!("prestacked blows past 512ms:   {} ({:.3}s at 1024ms)", p1024.per_sample_secs > 10.0 * p512.per_sample_secs, p1024.per_sample_secs);
+    println!("prestack warmup ~400ms:        {:.3}s", p.points[0].warmup_secs);
+
+    section("Fig. 5 — wiring timeline (unstacked, T_wait=32ms, first 16 events)");
+    let (_, events) = run_point(&cfg, Packing::Unstacked, 32, true);
+    for e in events.iter().take(16) {
+        println!(
+            "  t={:>10.3}ms {} {:?} cost={:.2}ms",
+            e.at as f64 / 1e6,
+            if e.rewire { "REWIRE" } else { "wire  " },
+            e.id,
+            e.cost as f64 / 1e6
+        );
+    }
+}

@@ -1,0 +1,80 @@
+//! Live-runtime hot-path microbenchmarks (the §Perf L3 targets): per-role
+//! artifact execution latency and the end-to-end live decode step, on
+//! real PJRT. Requires `make artifacts`; skips politely otherwise.
+
+use std::path::Path;
+
+use apple_moe::cluster::live::{LiveCluster, LiveConfig};
+use apple_moe::engine::request::Request;
+use apple_moe::runtime::NanoRuntime;
+use apple_moe::util::bench::{report, section, time_runs};
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        println!("skipping runtime_hotpath: run `make artifacts` first");
+        return;
+    }
+
+    section("role-artifact latencies (single PJRT client)");
+    let rt = NanoRuntime::load(&dir, true).expect("load");
+    let node = rt.build_node_experts(&(0..8).collect::<Vec<_>>()).unwrap();
+
+    let x = rt.embed(1).unwrap();
+    report("embed", &time_runs(3, 20, || {
+        rt.embed(7).unwrap();
+    }));
+
+    let k = rt.empty_layer_cache();
+    let v = rt.empty_layer_cache();
+    report("attn_router", &time_runs(3, 20, || {
+        rt.attn_router(0, &x, &k, &v, 0).unwrap();
+    }));
+
+    let ar = rt.attn_router(0, &x, &k, &v, 0).unwrap();
+    let idx = vec![0i32; rt.manifest.num_slots];
+    let w = vec![0.25f32; rt.manifest.num_slots];
+    report("experts pallas-ref (8 slots)", &time_runs(3, 20, || {
+        rt.node_experts(&node, 0, &ar.moe_in, &idx, &w).unwrap();
+    }));
+    let idx4 = vec![0i32; rt.manifest.fast_num_slots];
+    let w4 = vec![0.25f32; rt.manifest.fast_num_slots];
+    report("experts fast ns4 (serving path)", &time_runs(3, 20, || {
+        rt.node_experts_fast(&node, 0, &ar.moe_in, &idx4, &w4).unwrap();
+    }));
+    report("experts fast ns8 (busy-full path)", &time_runs(3, 20, || {
+        rt.node_experts_fast(&node, 0, &ar.moe_in, &idx, &w).unwrap();
+    }));
+    let lid4 = vec![0usize, 1, 2, 3];
+    let lid8: Vec<usize> = (0..8).collect();
+    report("experts direct ns4 (production)", &time_runs(3, 20, || {
+        rt.node_experts_direct(&node, 0, &ar.moe_in, &lid4, &w4).unwrap();
+    }));
+    report("experts direct ns8 (busy-full)", &time_runs(3, 20, || {
+        rt.node_experts_direct(&node, 0, &ar.moe_in, &lid8, &w).unwrap();
+    }));
+
+    report("lm_head", &time_runs(3, 20, || {
+        rt.lm_head(&x).unwrap();
+    }));
+
+    let kc = rt.empty_dense_cache();
+    let vc = rt.empty_dense_cache();
+    report("dense_step (whole model)", &time_runs(3, 10, || {
+        rt.dense_step(3, &kc, &vc, 0).unwrap();
+    }));
+
+    section("end-to-end live decode (2-node threaded cluster)");
+    let cluster = LiveCluster::start(LiveConfig::new(dir.clone(), 2)).expect("cluster");
+    let mut req = Request::synthetic(0, 4, 512);
+    req.max_new_tokens = 16;
+    let res = cluster.serve(req).unwrap();
+    cluster.shutdown();
+    let d = &res.metrics.decode;
+    let (moe, comm, misc) = d.breakdown_secs();
+    println!(
+        "decode: {:.1} tok/s ({:.4} s/token; MoE {moe:.4} Comm {comm:.4} Misc {misc:.4})",
+        d.tokens_per_sec(),
+        d.secs_per_token()
+    );
+}

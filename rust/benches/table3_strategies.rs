@@ -1,0 +1,64 @@
+//! Table 3: token-generation throughput and MoE/Comm/Misc breakdown of
+//! Naive vs P-L_B vs P-L_R-D on a two-node cluster (single user, 128
+//! prompt / 128 generated tokens), plus the footnote-3 prompt-eval rows.
+
+use apple_moe::cluster::sim::{ClusterSim, SimParams};
+use apple_moe::config::{ClusterConfig, EngineConfig, Strategy};
+use apple_moe::util::bench::{compare, section};
+use apple_moe::util::fmt::render_table;
+
+fn main() {
+    section("Table 3 — two-node strategy comparison (virtual time, dbrx-132b)");
+    let paper: [(Strategy, f64, f64, [f64; 3]); 3] = [
+        (Strategy::Naive, 1.2, 0.857, [0.378, 0.357, 0.122]),
+        (Strategy::PLb, 2.1, 0.485, [0.240, 0.168, 0.077]),
+        (Strategy::PLrD, 6.1, 0.166, [0.081, 0.038, 0.047]),
+    ];
+    let paper_prefill = [2.8, 4.8, 10.9];
+
+    let mut rows = vec![vec![
+        "Method".to_string(),
+        "gen TP".to_string(),
+        "s/token".to_string(),
+        "MoE".to_string(),
+        "Comm.".to_string(),
+        "Misc".to_string(),
+        "prefill TP".to_string(),
+    ]];
+    let mut measured = Vec::new();
+    for (strategy, ..) in &paper {
+        let cluster = ClusterConfig::new(2, *strategy);
+        let mut sim = ClusterSim::new(cluster, EngineConfig::default(), SimParams::default());
+        let m = sim.run_request();
+        let (moe, comm, misc) = m.decode.breakdown_secs();
+        rows.push(vec![
+            format!("{strategy}"),
+            format!("{:.1}", m.decode.tokens_per_sec()),
+            format!("{:.3}", m.decode.secs_per_token()),
+            format!("{moe:.3}"),
+            format!("{comm:.3}"),
+            format!("{misc:.3}"),
+            format!("{:.1}", m.prefill.tokens_per_sec()),
+        ]);
+        measured.push(m);
+    }
+    print!("{}", render_table(&rows));
+
+    section("paper vs measured");
+    for (i, (strategy, tp, spt, bd)) in paper.iter().enumerate() {
+        let m = &measured[i];
+        compare(&format!("{strategy} gen throughput"), *tp, m.decode.tokens_per_sec(), "tok/s");
+        compare(&format!("{strategy} s/token"), *spt, m.decode.secs_per_token(), "s");
+        let (moe, comm, misc) = m.decode.breakdown_secs();
+        compare(&format!("{strategy} MoE"), bd[0], moe, "s");
+        compare(&format!("{strategy} Comm"), bd[1], comm, "s");
+        compare(&format!("{strategy} Misc"), bd[2], misc, "s");
+        compare(&format!("{strategy} prompt eval"), paper_prefill[i],
+            m.prefill.tokens_per_sec(), "tok/s");
+    }
+
+    section("headline speedups (§5.2)");
+    let naive_moe = measured[0].decode.breakdown_secs().0;
+    compare("P-L_B MoE speedup", 1.7, naive_moe / measured[1].decode.breakdown_secs().0, "x");
+    compare("P-L_R-D MoE speedup", 5.2, naive_moe / measured[2].decode.breakdown_secs().0, "x");
+}

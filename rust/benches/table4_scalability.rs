@@ -1,0 +1,65 @@
+//! Table 4: P-L_R-D scalability from two to four nodes (plus the
+//! footnote-4 prompt-eval throughputs and §5.3's growing comm share).
+
+use apple_moe::cluster::sim::{ClusterSim, SimParams};
+use apple_moe::config::{ClusterConfig, EngineConfig, Strategy};
+use apple_moe::util::bench::{compare, section};
+use apple_moe::util::fmt::render_table;
+
+fn main() {
+    section("Table 4 — P-L_R-D scalability (virtual time, dbrx-132b)");
+    let paper: [(usize, f64, f64, [f64; 3], f64); 3] = [
+        (2, 6.1, 0.166, [0.081, 0.038, 0.047], 10.9),
+        (3, 6.5, 0.153, [0.068, 0.044, 0.041], 11.5),
+        (4, 7.0, 0.144, [0.054, 0.048, 0.042], 13.6),
+    ];
+    let mut rows = vec![vec![
+        "#Nodes".to_string(),
+        "gen TP".to_string(),
+        "s/token".to_string(),
+        "MoE".to_string(),
+        "Comm.".to_string(),
+        "Misc".to_string(),
+        "comm %".to_string(),
+        "prefill TP".to_string(),
+    ]];
+    let mut measured = Vec::new();
+    for (n, ..) in &paper {
+        let cluster = ClusterConfig::new(*n, Strategy::PLrD);
+        let mut sim = ClusterSim::new(cluster, EngineConfig::default(), SimParams::default());
+        let m = sim.run_request();
+        let (moe, comm, misc) = m.decode.breakdown_secs();
+        rows.push(vec![
+            n.to_string(),
+            format!("{:.1}", m.decode.tokens_per_sec()),
+            format!("{:.3}", m.decode.secs_per_token()),
+            format!("{moe:.3}"),
+            format!("{comm:.3}"),
+            format!("{misc:.3}"),
+            format!("{:.0}%", m.decode.comm_fraction() * 100.0),
+            format!("{:.1}", m.prefill.tokens_per_sec()),
+        ]);
+        measured.push(m);
+    }
+    print!("{}", render_table(&rows));
+
+    section("paper vs measured");
+    for (i, (n, tp, _spt, bd, pf)) in paper.iter().enumerate() {
+        let m = &measured[i];
+        compare(&format!("{n}-node gen TP"), *tp, m.decode.tokens_per_sec(), "tok/s");
+        let (moe, comm, _misc) = m.decode.breakdown_secs();
+        compare(&format!("{n}-node MoE"), bd[0], moe, "s");
+        compare(&format!("{n}-node Comm"), bd[1], comm, "s");
+        compare(&format!("{n}-node prompt eval"), *pf, m.prefill.tokens_per_sec(), "tok/s");
+    }
+    // §5.3: comm share grows 23% -> 29% -> 33%.
+    let paper_share = [0.23, 0.29, 0.33];
+    for (i, (n, ..)) in paper.iter().enumerate() {
+        compare(
+            &format!("{n}-node comm share"),
+            paper_share[i],
+            measured[i].decode.comm_fraction(),
+            "frac",
+        );
+    }
+}

@@ -1,0 +1,63 @@
+//! Table 6: Eq. 1 performance bounds for the 10 GbE cluster, 2–8 nodes.
+
+use apple_moe::config::{ModelDims, NetworkProfile, NodeHardware};
+use apple_moe::perfmodel::eq1::{
+    default_expected_experts, estimate, paper_expected_experts, PerfModelInputs,
+};
+use apple_moe::util::bench::{compare, section};
+use apple_moe::util::fmt::render_table;
+
+fn main() {
+    section("Table 6 — estimated bounds, 10 GbE (Eq. 1)");
+    // Paper rows: (#, load, comp, lat, trans, time, tp)
+    let paper: [(usize, f64, f64, f64); 5] = [
+        (2, 0.061, 0.103, 9.7),
+        (3, 0.055, 0.096, 10.4),
+        (4, 0.040, 0.081, 12.3),
+        (6, 0.031, 0.072, 13.9),
+        (8, 0.029, 0.070, 14.2),
+    ];
+    let mut rows = vec![vec![
+        "#".to_string(),
+        "E[experts]".to_string(),
+        "Load".to_string(),
+        "Comp.".to_string(),
+        "Lat.".to_string(),
+        "Trans.".to_string(),
+        "Time".to_string(),
+        "TP".to_string(),
+    ]];
+    let mut measured = Vec::new();
+    for (n, ..) in &paper {
+        let e = default_expected_experts(*n, 0xE1);
+        let est = estimate(&PerfModelInputs {
+            model: ModelDims::dbrx_132b(),
+            hardware: NodeHardware::m2_ultra(),
+            network: NetworkProfile::tcp_10gbe(),
+            n_nodes: *n,
+            expected_experts: e,
+        });
+        rows.push(vec![
+            n.to_string(),
+            format!("{e:.2}"),
+            format!("{:.3}", est.load_secs),
+            format!("{:.3}", est.compute_secs),
+            format!("{:.3}", est.latency_secs),
+            format!("{:.3}", est.transfer_secs),
+            format!("{:.3}", est.total_secs),
+            format!("{:.1}", est.tokens_per_sec),
+        ]);
+        measured.push(est);
+    }
+    print!("{}", render_table(&rows));
+
+    section("paper vs measured");
+    for (i, (n, load, time, tp)) in paper.iter().enumerate() {
+        compare(&format!("{n}-node GPU load"), *load, measured[i].load_secs, "s");
+        compare(&format!("{n}-node bound time"), *time, measured[i].total_secs, "s");
+        compare(&format!("{n}-node bound TP"), *tp, measured[i].tokens_per_sec, "tok/s");
+        if paper_expected_experts(*n).is_none() {
+            println!("  ({n}-node E[experts] derived by Monte-Carlo; paper value unpublished)");
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Minimal argv parser: `subcommand --key value --flag`.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Keys read so far (to report unknown/unused flags).
+    used: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the binary name).
+    pub fn parse(argv: Vec<String>) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                a.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument '{tok}'");
+            };
+            if key.is_empty() {
+                bail!("bare '--' is not supported");
+            }
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().unwrap();
+                    if a.values.insert(key.to_string(), v).is_some() {
+                        bail!("duplicate flag --{key}");
+                    }
+                }
+                _ => a.flags.push(key.to_string()),
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn subcommand(&self) -> Option<String> {
+        self.subcommand.clone()
+    }
+
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.used.insert(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get(&mut self, key: &str) -> Option<String> {
+        self.used.insert(key.to_string());
+        self.values.get(key).cloned()
+    }
+
+    pub fn str_or(&mut self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&mut self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&mut self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&mut self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Error if any provided flag was never consumed (typo protection).
+    pub fn finish(&self) -> Result<()> {
+        for k in self.values.keys().chain(self.flags.iter()) {
+            if !self.used.contains(k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect()).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_kv() {
+        let mut a = parse("simulate --nodes 4 --strategy p-lr-d --trace");
+        assert_eq!(a.subcommand().as_deref(), Some("simulate"));
+        assert_eq!(a.usize_or("nodes", 2).unwrap(), 4);
+        assert_eq!(a.str_or("strategy", "naive"), "p-lr-d");
+        assert!(a.flag("trace"));
+        assert!(!a.flag("other"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = parse("simulate");
+        assert_eq!(a.usize_or("nodes", 2).unwrap(), 2);
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let mut a = parse("x --nodes four");
+        assert!(a.usize_or("nodes", 2).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let mut a = parse("x --real 1 --bogus 2");
+        let _ = a.get("real");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn duplicate_flag_rejected() {
+        let r = Args::parse(
+            "x --a 1 --a 2".split_whitespace().map(String::from).collect(),
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help-like");
+        assert_eq!(a.subcommand(), None);
+    }
+}

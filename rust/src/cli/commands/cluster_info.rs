@@ -1,0 +1,59 @@
+//! `apple-moe cluster-info` — model arithmetic (Table 1 rows (a)–(e)),
+//! memory budget, and the expert placement for a cluster size.
+
+use anyhow::Result;
+
+use crate::cli::args::Args;
+use crate::config::{ClusterConfig, ModelDims, Strategy};
+use crate::model::counts::ModelCounts;
+use crate::model::layout::ExpertLayout;
+use crate::util::fmt::{format_bytes, render_table};
+
+pub fn run(args: &mut Args) -> Result<()> {
+    let nodes = args.usize_or("nodes", 2)?;
+    let model_name = args.str_or("model", "dbrx-132b");
+    args.finish()?;
+    let model = ModelDims::by_name(&model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}'"))?;
+    let c = ModelCounts::of(&model);
+
+    println!("# {} — derived quantities (paper Table 1)\n", model.name);
+    let rows = vec![
+        vec!["quantity".into(), "value".into()],
+        vec!["#Layers".into(), model.n_layers.to_string()],
+        vec![
+            "D_embed / D_qkv / D_ffn".into(),
+            format!("{} / {} / {}", model.d_embed, model.d_qkv_hidden, model.d_ffn),
+        ],
+        vec![
+            "experts (top-k)".into(),
+            format!("{} (top-{})", model.n_experts, model.top_k),
+        ],
+        vec!["comm data / token (a)".into(), format_bytes(c.comm_bytes)],
+        vec!["#Params_SA bytes (b)".into(), format_bytes(c.sa_param_bytes)],
+        vec!["#FLOPs_SA (c)".into(), format!("{:.1}e9", c.sa_flops / 1e9)],
+        vec![
+            "#Params/expert bytes (d)".into(),
+            format_bytes(c.expert_param_bytes),
+        ],
+        vec![
+            "#FLOPs/expert (e)".into(),
+            format!("{:.1}e9", c.expert_flops / 1e9),
+        ],
+        vec!["total params".into(), format!("{:.1}B", c.total_params(&model) as f64 / 1e9)],
+        vec!["total bytes".into(), format_bytes(c.total_bytes(&model))],
+    ];
+    print!("{}", render_table(&rows));
+
+    let cluster = ClusterConfig::new(nodes, Strategy::PLrD);
+    let budget = ExpertLayout::budget_experts_per_node(&cluster, &model);
+    let layout = ExpertLayout::build(&cluster, &model);
+    let (rmin, rmean, rmax) = layout.replication();
+    println!(
+        "\n# placement on {nodes} node(s): budget {budget} experts/node, replication min/mean/max = {rmin}/{rmean:.2}/{rmax}"
+    );
+    for (n, res) in layout.resident.iter().enumerate() {
+        println!("  node {n}: experts {res:?}");
+    }
+    Ok(())
+}

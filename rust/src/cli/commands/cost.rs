@@ -1,0 +1,67 @@
+//! `apple-moe cost` — Table 5 cost-efficiency comparison plus the §5.5
+//! NIC-upgrade variants.
+
+use anyhow::Result;
+
+use crate::cli::args::Args;
+use crate::config::{ModelDims, NetworkProfile, NodeHardware};
+use crate::perfmodel::cost::{cost_efficiency, table5};
+use crate::perfmodel::eq1::{estimate, PerfModelInputs};
+use crate::util::fmt::render_table;
+
+pub fn run(args: &mut Args) -> Result<()> {
+    args.finish()?;
+    let (db, ours) = table5();
+    let mut rows = vec![vec![
+        "Solution".to_string(),
+        "#Nodes".to_string(),
+        "Price/Node (USD)".to_string(),
+        "TP".to_string(),
+        "TP/USD".to_string(),
+    ]];
+    for r in [&db, &ours] {
+        rows.push(vec![
+            r.solution.clone(),
+            r.n_nodes.to_string(),
+            format!("{:.0}", r.price_per_node_usd),
+            format!("{:.1}", r.throughput_tps),
+            format!("{:.6}", r.tp_per_usd),
+        ]);
+    }
+    print!("{}", render_table(&rows));
+    println!(
+        "\ncost-efficiency ratio (ours/Databricks): {:.2}x\n",
+        ours.tp_per_usd / db.tp_per_usd
+    );
+
+    println!("# §5.5 NIC-upgrade projections (2-node bound via Eq. 1)\n");
+    let mut rows = vec![vec![
+        "NIC".to_string(),
+        "TP bound".to_string(),
+        "Price/Node".to_string(),
+        "TP/USD".to_string(),
+    ]];
+    for nic in [
+        NetworkProfile::tcp_10gbe(),
+        NetworkProfile::rocev2(),
+        NetworkProfile::infiniband(),
+    ] {
+        let est = estimate(&PerfModelInputs {
+            model: ModelDims::dbrx_132b(),
+            hardware: NodeHardware::m2_ultra(),
+            network: nic.clone(),
+            n_nodes: 2,
+            expected_experts: 2.65,
+        });
+        let row = cost_efficiency(&nic.name, 2, &NodeHardware::m2_ultra(), Some(&nic),
+            est.tokens_per_sec);
+        rows.push(vec![
+            nic.name.clone(),
+            format!("{:.1}", est.tokens_per_sec),
+            format!("{:.0}", row.price_per_node_usd),
+            format!("{:.6}", row.tp_per_usd),
+        ]);
+    }
+    print!("{}", render_table(&rows));
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! `apple-moe generate` — LIVE run: the nano model over a threaded
+//! cluster executing AOT artifacts via PJRT (no Python on the path).
+
+use anyhow::Result;
+
+use crate::cli::args::Args;
+use crate::cli::commands::artifacts_dir;
+use crate::cluster::live::{LiveCluster, LiveConfig};
+use crate::config::{Balancing, NetworkProfile, Topology};
+use crate::engine::request::Request;
+use crate::engine::sampling::Sampler;
+
+pub fn run(args: &mut Args) -> Result<()> {
+    let nodes = args.usize_or("nodes", 2)?;
+    let prompt_tokens = args.usize_or("prompt-tokens", 16)?;
+    let gen_tokens = args.usize_or("gen-tokens", 32)?;
+    let topology = match args.str_or("topology", "decentralized").as_str() {
+        "decentralized" | "d" => Topology::Decentralized,
+        "centralized" | "c" => Topology::Centralized,
+        other => anyhow::bail!("unknown topology '{other}'"),
+    };
+    let balancing = match args.str_or("balancing", "router-aided").as_str() {
+        "selected-only" | "naive" => Balancing::SelectedOnly,
+        "busy-full" | "lb" => Balancing::BusyFull,
+        "router-aided" | "lr" => Balancing::RouterAided,
+        other => anyhow::bail!("unknown balancing '{other}'"),
+    };
+    let network = match args.get("network") {
+        None => None,
+        Some(name) => Some(
+            NetworkProfile::by_name(&name)
+                .ok_or_else(|| anyhow::anyhow!("unknown network '{name}'"))?,
+        ),
+    };
+    let seed = args.u64_or("seed", 0xD8B2)?;
+    let dir = artifacts_dir(args);
+    args.finish()?;
+
+    let mut cfg = LiveConfig::new(dir, nodes);
+    cfg.topology = topology;
+    cfg.balancing = balancing;
+    cfg.network = network;
+    cfg.sampler = Sampler::Greedy;
+    cfg.seed = seed;
+
+    eprintln!("starting {nodes}-node live cluster (compiling artifacts on every node)...");
+    let cluster = LiveCluster::start(cfg)?;
+    for (n, res) in cluster.layout.resident.iter().enumerate() {
+        eprintln!("  node {n}: experts {res:?}");
+    }
+
+    let req = Request::synthetic(1, prompt_tokens, 512);
+    let req = Request { max_new_tokens: gen_tokens, ..req };
+    let res = cluster.serve(req)?;
+    cluster.shutdown();
+
+    println!("generated tokens: {:?}", res.generated);
+    let d = &res.metrics.decode;
+    let p = &res.metrics.prefill;
+    let (moe, comm, misc) = d.breakdown_secs();
+    println!(
+        "prompt eval: {:.1} tok/s | generation: {:.1} tok/s ({:.4} s/token; MoE {moe:.4} Comm {comm:.4} Misc {misc:.4})",
+        p.tokens_per_sec(),
+        d.tokens_per_sec(),
+        d.secs_per_token(),
+    );
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! One module per subcommand; each prints a paper table or runs the live
+//! system.
+
+pub mod cluster_info;
+pub mod cost;
+pub mod generate;
+pub mod multiuser;
+pub mod packing_bench;
+pub mod perf_model;
+pub mod serve;
+pub mod simulate;
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+use crate::cli::args::Args;
+use crate::config::{NetworkProfile, Strategy};
+
+pub(crate) fn parse_strategy(args: &mut Args) -> Result<Strategy> {
+    let s = args.str_or("strategy", "p-lr-d");
+    Strategy::by_name(&s).ok_or_else(|| anyhow::anyhow!("unknown strategy '{s}'"))
+}
+
+pub(crate) fn parse_network(args: &mut Args) -> Result<NetworkProfile> {
+    let s = args.str_or("network", "10gbe");
+    NetworkProfile::by_name(&s).ok_or_else(|| anyhow::anyhow!("unknown network '{s}'"))
+}
+
+pub(crate) fn artifacts_dir(args: &mut Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}

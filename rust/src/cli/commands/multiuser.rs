@@ -1,0 +1,66 @@
+//! `apple-moe multiuser` — the paper's future-work scenario: concurrent
+//! users on the simulated cluster, Poisson arrivals, iteration-level
+//! scheduling. Prints per-request latency/queueing and the aggregate.
+
+use anyhow::Result;
+
+use crate::cli::args::Args;
+use crate::cli::commands::parse_strategy;
+use crate::cluster::sim::{ClusterSim, SimParams};
+use crate::config::{ClusterConfig, EngineConfig};
+use crate::engine::scheduler::{serve_workload, SchedPolicy};
+use crate::trace::Workload;
+use crate::util::fmt::render_table;
+
+pub fn run(args: &mut Args) -> Result<()> {
+    let strategy = parse_strategy(args)?;
+    let nodes = args.usize_or("nodes", 2)?;
+    let requests = args.usize_or("requests", 8)?;
+    let rate = args.f64_or("rate", 0.1)?;
+    let prompt = args.usize_or("prompt-tokens", 64)?;
+    let gen = args.usize_or("gen-tokens", 128)?;
+    let policy = match args.str_or("policy", "round-robin").as_str() {
+        "round-robin" | "rr" => SchedPolicy::RoundRobin,
+        "fcfs" | "run-to-completion" => SchedPolicy::RunToCompletion,
+        other => anyhow::bail!("unknown policy '{other}'"),
+    };
+    let seed = args.u64_or("seed", 0xAB)?;
+    args.finish()?;
+    anyhow::ensure!(rate > 0.0, "--rate must be positive");
+
+    let mut engine = EngineConfig::default();
+    engine.prompt_tokens = prompt;
+    engine.gen_tokens = gen;
+    let mut sim = ClusterSim::new(ClusterConfig::new(nodes, strategy), engine, SimParams::default());
+    let workload = Workload::poisson(requests, rate, prompt, gen, seed);
+    let report = serve_workload(&mut sim, &workload, policy);
+
+    println!(
+        "# {requests} users at {rate} req/s on {nodes} nodes ({strategy}, {policy:?}, virtual time)\n"
+    );
+    let mut rows = vec![vec![
+        "req".to_string(),
+        "arrival (s)".to_string(),
+        "queue (s)".to_string(),
+        "first token (s)".to_string(),
+        "latency (s)".to_string(),
+    ]];
+    for o in &report.outcomes {
+        rows.push(vec![
+            o.id.to_string(),
+            format!("{:.1}", o.arrival_s),
+            format!("{:.2}", o.queueing_s),
+            format!("{:.2}", o.first_token_s),
+            format!("{:.2}", o.latency_s),
+        ]);
+    }
+    print!("{}", render_table(&rows));
+    println!(
+        "\nmakespan {:.1} s | aggregate {:.2} tok/s | mean latency {:.2} s | mean queueing {:.2} s",
+        report.makespan_s,
+        report.aggregate_tps,
+        report.mean_latency(),
+        report.mean_queueing()
+    );
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! `apple-moe packing-bench` — Algorithms 1–2 (Fig. 4 sweep; `--trace`
+//! prints the Fig. 5-style wiring timeline).
+
+use anyhow::Result;
+
+use crate::cli::args::Args;
+use crate::config::Packing;
+use crate::packing::{run_point, run_sweep, PackingBenchConfig};
+use crate::util::fmt::{format_bytes, render_table};
+
+pub fn run(args: &mut Args) -> Result<()> {
+    let trace = args.flag("trace");
+    let samples = args.usize_or("samples", 5)?;
+    args.finish()?;
+
+    let mut cfg = PackingBenchConfig::default();
+    cfg.n_samples = samples;
+    println!(
+        "# weight-packing benchmark: {} layers x {} matmuls of {}x{} f32 ({} / matrix, {} prestacked)\n",
+        cfg.n_layers,
+        cfg.n_mpl,
+        cfg.n,
+        cfg.n,
+        format_bytes(cfg.matrix_bytes()),
+        format_bytes(cfg.stack_bytes()),
+    );
+
+    let unstacked = run_sweep(&cfg, Packing::Unstacked);
+    let prestacked = run_sweep(&cfg, Packing::Prestacked);
+    let mut rows = vec![vec![
+        "T_wait (ms)".to_string(),
+        "unstacked (s)".to_string(),
+        "prestacked (s)".to_string(),
+        "unstacked driver (s)".to_string(),
+        "prestacked driver (s)".to_string(),
+    ]];
+    for (u, p) in unstacked.points.iter().zip(&prestacked.points) {
+        rows.push(vec![
+            u.t_wait_ms.to_string(),
+            format!("{:.3}", u.per_sample_secs),
+            format!("{:.3}", p.per_sample_secs),
+            format!("{:.3}", u.driver_secs),
+            format!("{:.3}", p.driver_secs),
+        ]);
+    }
+    print!("{}", render_table(&rows));
+
+    if trace {
+        println!("\n# Fig. 5 timeline (unstacked, T_wait = 32 ms, first 24 events)");
+        let (_, events) = run_point(&cfg, Packing::Unstacked, 32, true);
+        for e in events.iter().take(24) {
+            println!(
+                "  t={:>9.3}ms {} {:?} bytes={} cost={:.2}ms",
+                e.at as f64 / 1e6,
+                if e.rewire { "REWIRE" } else { "wire  " },
+                e.id,
+                format_bytes(e.bytes),
+                e.cost as f64 / 1e6,
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! `apple-moe perf-model` — Eq. 1 bounds: Table 6 (10 GbE, 2–8 nodes)
+//! and the Fig. 8 NIC projections.
+
+use anyhow::Result;
+
+use crate::cli::args::Args;
+use crate::config::{ModelDims, NetworkProfile, NodeHardware};
+use crate::perfmodel::eq1::{default_expected_experts, estimate, PerfModelInputs};
+use crate::util::fmt::render_table;
+
+pub fn run(args: &mut Args) -> Result<()> {
+    let max_nodes = args.usize_or("max-nodes", 8)?;
+    let seed = args.u64_or("seed", 0xE1)?;
+    args.finish()?;
+
+    let node_counts: Vec<usize> =
+        [2usize, 3, 4, 6, 8].into_iter().filter(|&n| n <= max_nodes).collect();
+
+    for profile in [
+        NetworkProfile::tcp_10gbe(),
+        NetworkProfile::rocev2(),
+        NetworkProfile::infiniband(),
+    ] {
+        println!("# Eq. 1 bounds with {} (latency {} ns)\n", profile.name, profile.latency_ns);
+        let mut rows = vec![vec![
+            "#".to_string(),
+            "E[experts]".to_string(),
+            "Load (s)".to_string(),
+            "Comp. (s)".to_string(),
+            "Lat. (s)".to_string(),
+            "Trans. (s)".to_string(),
+            "Time (s)".to_string(),
+            "TP (tok/s)".to_string(),
+        ]];
+        for &n in &node_counts {
+            let e = default_expected_experts(n, seed);
+            let est = estimate(&PerfModelInputs {
+                model: ModelDims::dbrx_132b(),
+                hardware: NodeHardware::m2_ultra(),
+                network: profile.clone(),
+                n_nodes: n,
+                expected_experts: e,
+            });
+            rows.push(vec![
+                n.to_string(),
+                format!("{e:.2}"),
+                format!("{:.3}", est.load_secs),
+                format!("{:.3}", est.compute_secs),
+                format!("{:.3}", est.latency_secs),
+                format!("{:.3}", est.transfer_secs),
+                format!("{:.3}", est.total_secs),
+                format!("{:.1}", est.tokens_per_sec),
+            ]);
+        }
+        print!("{}", render_table(&rows));
+        println!();
+    }
+    Ok(())
+}

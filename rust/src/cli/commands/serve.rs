@@ -1,0 +1,65 @@
+//! `apple-moe serve` — LIVE batch driver: feed synthetic requests
+//! through the cluster and report per-request latency + aggregate
+//! throughput (the end-to-end serving demo recorded in EXPERIMENTS.md).
+
+use anyhow::Result;
+use std::time::Instant;
+
+use crate::cli::args::Args;
+use crate::cli::commands::artifacts_dir;
+use crate::cluster::live::{LiveCluster, LiveConfig};
+use crate::engine::request::Request;
+use crate::util::fmt::render_table;
+use crate::util::stats::Summary;
+
+pub fn run(args: &mut Args) -> Result<()> {
+    let nodes = args.usize_or("nodes", 2)?;
+    let n_requests = args.usize_or("requests", 4)?;
+    let prompt_tokens = args.usize_or("prompt-tokens", 16)?;
+    let gen_tokens = args.usize_or("gen-tokens", 32)?;
+    let dir = artifacts_dir(args);
+    args.finish()?;
+
+    eprintln!("starting {nodes}-node live cluster...");
+    let cluster = LiveCluster::start(LiveConfig::new(dir, nodes))?;
+
+    let mut rows = vec![vec![
+        "req".to_string(),
+        "prefill tok/s".to_string(),
+        "decode tok/s".to_string(),
+        "latency (s)".to_string(),
+    ]];
+    let mut decode_tps = Vec::new();
+    let t_all = Instant::now();
+    let mut total_tokens = 0usize;
+    for i in 0..n_requests {
+        let mut req = Request::synthetic(i as u64, prompt_tokens, 512);
+        req.max_new_tokens = gen_tokens;
+        let t0 = Instant::now();
+        let res = cluster.serve(req)?;
+        let dt = t0.elapsed().as_secs_f64();
+        total_tokens += res.generated.len();
+        decode_tps.push(res.metrics.decode.tokens_per_sec());
+        rows.push(vec![
+            i.to_string(),
+            format!("{:.1}", res.metrics.prefill.tokens_per_sec()),
+            format!("{:.1}", res.metrics.decode.tokens_per_sec()),
+            format!("{dt:.2}"),
+        ]);
+    }
+    let wall = t_all.elapsed().as_secs_f64();
+    cluster.shutdown();
+
+    print!("{}", render_table(&rows));
+    if let Some(s) = Summary::of(&decode_tps) {
+        println!(
+            "\n{n_requests} requests, {total_tokens} generated tokens in {wall:.2} s ({:.1} tok/s aggregate)",
+            total_tokens as f64 / wall
+        );
+        println!(
+            "decode throughput per request: mean {:.1} / p50 {:.1} / min {:.1} tok/s",
+            s.mean, s.p50, s.min
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Hand-rolled CLI (the offline crate cache has no `clap`).
+//!
+//! Subcommands map one-to-one onto the paper's experiments:
+//!
+//! ```text
+//! apple-moe simulate      --strategy p-lr-d --nodes 2     (Tables 3–4)
+//! apple-moe packing-bench [--trace]                       (Figs. 4–5)
+//! apple-moe perf-model    [--network ib]                  (Table 6 / Fig. 8)
+//! apple-moe cost                                          (Table 5)
+//! apple-moe cluster-info  [--nodes 4]                     (Table 1 / layout)
+//! apple-moe generate      --nodes 2 --gen-tokens 32       (live PJRT run)
+//! apple-moe serve         --requests 8 --nodes 2          (live batch driver)
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+use anyhow::Result;
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let mut args = Args::parse(argv)?;
+    let cmd = args.subcommand().unwrap_or_else(|| "help".to_string());
+    match cmd.as_str() {
+        "simulate" => commands::simulate::run(&mut args),
+        "packing-bench" => commands::packing_bench::run(&mut args),
+        "perf-model" => commands::perf_model::run(&mut args),
+        "cost" => commands::cost::run(&mut args),
+        "cluster-info" => commands::cluster_info::run(&mut args),
+        "generate" => commands::generate::run(&mut args),
+        "multiuser" => commands::multiuser::run(&mut args),
+        "serve" => commands::serve::run(&mut args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}' (try `apple-moe help`)"),
+    }
+}
+
+pub const HELP: &str = "\
+apple-moe — multi-node expert parallelism for MoE LLMs
+reproduction of RACS'24 (DOI 10.1145/3649601.3698722)
+
+USAGE: apple-moe <SUBCOMMAND> [FLAGS]
+
+SUBCOMMANDS
+  simulate       virtual-time cluster run at DBRX-132B scale (Tables 3-4)
+                   --strategy naive|p-lb|p-lr-d  --nodes N
+                   --prompt-tokens N --gen-tokens N  --network 10gbe|rocev2|ib
+  packing-bench  Algorithm 1+2 weight-packing sweep (Fig. 4; --trace: Fig. 5)
+  perf-model     Eq. 1 performance bounds (Table 6, Fig. 8 projections)
+                   --max-nodes N  --network 10gbe|rocev2|ib
+  cost           cost-efficiency comparison (Table 5)
+  multiuser      concurrent-user serving on the simulated cluster
+                   --requests N --rate REQ_PER_S --policy round-robin|fcfs
+  cluster-info   model arithmetic + expert placement for a cluster
+                   --nodes N  --model dbrx-132b|dbrx-nano
+  generate       LIVE run: nano model over a threaded cluster via PJRT
+                   --nodes N --prompt-tokens N --gen-tokens N
+                   --topology decentralized|centralized  --artifacts DIR
+  serve          LIVE batch driver: synthetic requests, latency/throughput
+                   --requests N --nodes N --artifacts DIR
+  help           this text
+";

@@ -1,0 +1,501 @@
+//! Live threaded cluster: one OS thread per simulated Mac Studio node,
+//! each with its own PJRT runtime and the expert shard of Figs. 2–3,
+//! exchanging expert partials over the `network::transport` fabric.
+//!
+//! Two topologies, as in the paper:
+//!
+//! - **Decentralized** (`D`, Fig. 7): attention, router, weighted sum and
+//!   sampling are replicated on every node; the only traffic is the
+//!   per-layer all-reduce of expert partials (plus deterministic
+//!   replication of the sampler, which removes even the token
+//!   broadcast). This is the `P-L_R-D` wire protocol.
+//! - **Centralized** (Figs. 2–3): node 0 runs attention/router and
+//!   scatters `moe_in` + slot assignments to workers, which run experts
+//!   and send partials back — 2 communications per layer.
+//!
+//! All coordination logic (layout, planning, LRU) is the same
+//! `moe::Planner` the virtual-time DES uses.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::{Balancing, ClusterConfig, NetworkProfile, Strategy, Topology};
+use crate::engine::request::{Request, RequestResult};
+use crate::engine::sampling::Sampler;
+use crate::metrics::{RunMetrics, TokenBreakdown};
+use crate::model::layout::ExpertLayout;
+use crate::moe::balance::Planner;
+use crate::moe::router::RouterDraw;
+use crate::network::transport::{self, bytes_to_f32s, f32s_to_bytes, tag, Endpoint};
+use crate::runtime::{HostTensor, NanoRuntime};
+use crate::util::rng::Rng;
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(120);
+const PHASE_PARTIAL: u8 = 1;
+const PHASE_SCATTER: u8 = 2;
+const PHASE_GATHER: u8 = 3;
+
+/// Live-cluster configuration.
+#[derive(Debug, Clone)]
+pub struct LiveConfig {
+    pub artifacts: PathBuf,
+    pub n_nodes: usize,
+    pub topology: Topology,
+    pub balancing: Balancing,
+    /// Inject this profile's latency into deliveries (None = localhost).
+    pub network: Option<NetworkProfile>,
+    pub sampler: Sampler,
+    pub seed: u64,
+}
+
+impl LiveConfig {
+    pub fn new(artifacts: PathBuf, n_nodes: usize) -> LiveConfig {
+        LiveConfig {
+            artifacts,
+            n_nodes,
+            topology: Topology::Decentralized,
+            balancing: Balancing::RouterAided,
+            network: None,
+            sampler: Sampler::Greedy,
+            seed: 0xD8B2,
+        }
+    }
+
+    fn layout(&self) -> ExpertLayout {
+        let strategy = match (self.topology, self.balancing) {
+            (Topology::Decentralized, _) => Strategy::PLrD,
+            (_, Balancing::BusyFull) => Strategy::PLb,
+            _ => Strategy::Naive,
+        };
+        let mut cc = ClusterConfig::new(self.n_nodes, strategy);
+        // The experts artifacts are compiled for 8 or 16 residents.
+        cc.experts_per_node_cap = if self.n_nodes == 1 { 16 } else { 8 };
+        ExpertLayout::build(&cc, &crate::config::ModelDims::dbrx_nano())
+    }
+}
+
+enum Cmd {
+    Serve(Request),
+    Shutdown,
+}
+
+/// Handle to a running cluster.
+pub struct LiveCluster {
+    cmd_txs: Vec<Sender<Cmd>>,
+    result_rx: Receiver<Result<RequestResult>>,
+    handles: Vec<JoinHandle<()>>,
+    pub layout: ExpertLayout,
+}
+
+impl LiveCluster {
+    /// Spawn node threads (each compiles its own runtime) and wait until
+    /// every node reports ready.
+    pub fn start(cfg: LiveConfig) -> Result<LiveCluster> {
+        let layout = cfg.layout();
+        let endpoints = transport::fabric(cfg.n_nodes, cfg.network.clone());
+        let (result_tx, result_rx) = channel();
+        let (ready_tx, ready_rx) = channel();
+        let mut cmd_txs = Vec::new();
+        let mut handles = Vec::new();
+        for (node, ep) in endpoints.into_iter().enumerate() {
+            let (tx, rx) = channel();
+            cmd_txs.push(tx);
+            let cfg = cfg.clone();
+            let layout = layout.clone();
+            let result_tx = result_tx.clone();
+            let ready_tx = ready_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let r = NodeWorker::run(node, cfg, layout, ep, rx, result_tx, ready_tx);
+                if let Err(e) = r {
+                    log::error!("node {node} failed: {e:#}");
+                }
+            }));
+        }
+        for _ in 0..cfg.n_nodes {
+            ready_rx
+                .recv_timeout(Duration::from_secs(300))
+                .context("node startup timed out")?
+                .map_err(|e: String| anyhow::anyhow!(e))?;
+        }
+        Ok(LiveCluster { cmd_txs, result_rx, handles, layout })
+    }
+
+    /// Serve one request through the cluster (blocking).
+    pub fn serve(&self, req: Request) -> Result<RequestResult> {
+        for tx in &self.cmd_txs {
+            tx.send(Cmd::Serve(req.clone())).map_err(|_| anyhow::anyhow!("node down"))?;
+        }
+        self.result_rx
+            .recv_timeout(RECV_TIMEOUT)
+            .context("cluster result timeout")?
+    }
+
+    pub fn shutdown(mut self) {
+        for tx in &self.cmd_txs {
+            let _ = tx.send(Cmd::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+struct NodeWorker {
+    node: usize,
+    cfg: LiveConfig,
+    rt: NanoRuntime,
+    experts: crate::runtime::NodeExperts,
+    planner: Planner,
+    ep: Endpoint,
+    rng: Rng,
+}
+
+impl NodeWorker {
+    #[allow(clippy::too_many_arguments)]
+    fn run(
+        node: usize,
+        cfg: LiveConfig,
+        layout: ExpertLayout,
+        ep: Endpoint,
+        rx: Receiver<Cmd>,
+        result_tx: Sender<Result<RequestResult>>,
+        ready_tx: Sender<std::result::Result<(), String>>,
+    ) -> Result<()> {
+        let rt = match NanoRuntime::load(&cfg.artifacts, false) {
+            Ok(rt) => {
+                let _ = ready_tx.send(Ok(()));
+                rt
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(format!("{e:#}")));
+                return Err(e);
+            }
+        };
+        let experts = rt.build_node_experts(&layout.resident[node])?;
+        let planner = Planner::new(cfg.balancing, layout);
+        let rng = Rng::new(cfg.seed); // identical on every node:
+                                      // deterministic replicated sampling
+        let mut w = NodeWorker { node, cfg, rt, experts, planner, ep, rng };
+        while let Ok(cmd) = rx.recv() {
+            match cmd {
+                Cmd::Shutdown => break,
+                Cmd::Serve(req) => {
+                    let res = w.serve(&req);
+                    if w.node == 0 {
+                        let _ = result_tx.send(res);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn serve(&mut self, req: &Request) -> Result<RequestResult> {
+        match self.cfg.topology {
+            Topology::Decentralized => self.serve_decentralized(req),
+            Topology::Centralized => {
+                if self.node == 0 {
+                    self.serve_central_leader(req)
+                } else {
+                    self.serve_central_worker(req)
+                }
+            }
+        }
+    }
+
+    // ---------------- decentralized (P-L_R-D wire protocol) ----------
+
+    fn serve_decentralized(&mut self, req: &Request) -> Result<RequestResult> {
+        let m = self.rt.manifest.clone();
+        let mut metrics = RunMetrics::default();
+        let mut kc: Vec<HostTensor> =
+            (0..m.n_layers).map(|_| self.rt.empty_layer_cache()).collect();
+        let mut vc = kc.clone();
+        let mut generated = Vec::new();
+        let mut pos = 0usize;
+        let mut step: u32 = 0;
+        let mut last_logits = Vec::new();
+
+        let total = req.prompt.len() + req.max_new_tokens;
+        for i in 0..total {
+            if pos >= m.max_seq {
+                break;
+            }
+            let is_prefill = i < req.prompt.len();
+            let tok = if is_prefill {
+                req.prompt[i]
+            } else {
+                // Same logits + same sampler state on every node.
+                let next = self.cfg.sampler.sample(&last_logits, &mut self.rng);
+                if self.node == 0 {
+                    generated.push(next);
+                }
+                next
+            };
+
+            let mut b = TokenBreakdown::default();
+            let t_embed = Instant::now();
+            let mut x = self.rt.embed(tok)?;
+            b.misc_ns += t_embed.elapsed().as_nanos() as u64;
+
+            for l in 0..m.n_layers {
+                let t_misc = Instant::now();
+                let ar = self.rt.attn_router(l, &x, &kc[l], &vc[l], pos)?;
+                kc[l] = ar.k_cache;
+                vc[l] = ar.v_cache;
+                let draw = RouterDraw {
+                    selected: ar.top_i.clone(),
+                    weights: ar.top_w.clone(),
+                };
+                let plan = self.planner.plan_layer(&draw);
+                b.misc_ns += t_misc.elapsed().as_nanos() as u64;
+
+                // Local expert slots.
+                let t_moe = Instant::now();
+                let (idx, w) = self.slots_for(&plan.per_node[self.node]);
+                let partial =
+                    self.rt.node_experts_direct(&self.experts, l, &ar.moe_in, &idx, &w)?;
+                b.moe_ns += t_moe.elapsed().as_nanos() as u64;
+
+                // All-reduce (the envoy exchange of Fig. 7).
+                let t_comm = Instant::now();
+                let summed = self.all_reduce(&partial, PHASE_PARTIAL, l as u32, step)?;
+                b.comm_ns += t_comm.elapsed().as_nanos() as u64;
+
+                let t_sum = Instant::now();
+                for (xi, (hi, ci)) in x.iter_mut().zip(ar.h.iter().zip(&summed)) {
+                    *xi = hi + ci;
+                }
+                b.misc_ns += t_sum.elapsed().as_nanos() as u64;
+            }
+            let t_head = Instant::now();
+            last_logits = self.rt.lm_head(&x)?;
+            b.misc_ns += t_head.elapsed().as_nanos() as u64;
+
+            if is_prefill {
+                metrics.prefill.push(b);
+            } else {
+                metrics.decode.push(b);
+            }
+            pos += 1;
+            step += 1;
+        }
+        Ok(RequestResult { id: req.id, generated, metrics })
+    }
+
+    /// Exchange partials with every peer and sum in node order (bitwise
+    /// deterministic across nodes).
+    fn all_reduce(&mut self, partial: &[f32], phase: u8, layer: u32, step: u32) -> Result<Vec<f32>> {
+        if self.ep.n_nodes == 1 {
+            return Ok(partial.to_vec());
+        }
+        let t = tag(phase, layer, step);
+        self.ep.broadcast(t, &f32s_to_bytes(partial))?;
+        let envs = self.ep.gather(t, RECV_TIMEOUT)?;
+        let mut parts: Vec<(usize, Vec<f32>)> =
+            envs.into_iter().map(|e| (e.from, bytes_to_f32s(&e.payload))).collect();
+        parts.push((self.node, partial.to_vec()));
+        parts.sort_by_key(|(n, _)| *n);
+        let d = partial.len();
+        let mut acc = vec![0.0f32; d];
+        for (_, p) in parts {
+            for (a, v) in acc.iter_mut().zip(p) {
+                *a += v;
+            }
+        }
+        Ok(acc)
+    }
+
+    /// Map a `NodeWork` plan to the artifact's fixed slot arrays.
+    fn slots_for(&self, work: &crate::moe::balance::NodeWork) -> (Vec<usize>, Vec<f32>) {
+        // Busy-full plans need all resident slots; router-aided and
+        // selected-only never exceed top_k, so they use the smaller fast
+        // artifact (§Perf).
+        let ns = if self.cfg.balancing == Balancing::BusyFull {
+            self.rt.manifest.num_slots
+        } else {
+            self.rt.manifest.fast_num_slots
+        };
+        let mut idx = vec![0usize; ns];
+        let mut w = vec![0f32; ns];
+        for (s, run) in work.runs.iter().take(ns).enumerate() {
+            let local = self
+                .experts
+                .local_index(run.expert)
+                .expect("planner assigned a non-resident expert");
+            idx[s] = local;
+            w[s] = if run.is_padding { 0.0 } else { run.weight };
+        }
+        (idx, w)
+    }
+
+    // ---------------- centralized (Figs. 2–3 wire protocol) ----------
+
+    fn serve_central_leader(&mut self, req: &Request) -> Result<RequestResult> {
+        let m = self.rt.manifest.clone();
+        let mut metrics = RunMetrics::default();
+        let mut kc: Vec<HostTensor> =
+            (0..m.n_layers).map(|_| self.rt.empty_layer_cache()).collect();
+        let mut vc = kc.clone();
+        let mut generated = Vec::new();
+        let mut pos = 0usize;
+        let mut step: u32 = 0;
+        let mut last_logits = Vec::new();
+
+        let total = req.prompt.len() + req.max_new_tokens;
+        for i in 0..total {
+            if pos >= m.max_seq {
+                break;
+            }
+            let is_prefill = i < req.prompt.len();
+            let tok = if is_prefill {
+                req.prompt[i]
+            } else {
+                let next = self.cfg.sampler.sample(&last_logits, &mut self.rng);
+                generated.push(next);
+                next
+            };
+            let mut b = TokenBreakdown::default();
+            let t0 = Instant::now();
+            let mut x = self.rt.embed(tok)?;
+            b.misc_ns += t0.elapsed().as_nanos() as u64;
+
+            for l in 0..m.n_layers {
+                let t_misc = Instant::now();
+                let ar = self.rt.attn_router(l, &x, &kc[l], &vc[l], pos)?;
+                kc[l] = ar.k_cache;
+                vc[l] = ar.v_cache;
+                let draw = RouterDraw {
+                    selected: ar.top_i.clone(),
+                    weights: ar.top_w.clone(),
+                };
+                let plan = self.planner.plan_layer(&draw);
+                b.misc_ns += t_misc.elapsed().as_nanos() as u64;
+
+                // Scatter: moe_in + per-worker slot assignments.
+                let t_comm = Instant::now();
+                for peer in 1..self.ep.n_nodes {
+                    let work = &plan.per_node[peer];
+                    let mut payload = f32s_to_bytes(&ar.moe_in);
+                    // slot assignment appended: ns × (i32 idx, f32 w)
+                    let ns = if self.cfg.balancing == Balancing::BusyFull {
+                        self.rt.manifest.num_slots
+                    } else {
+                        self.rt.manifest.fast_num_slots
+                    };
+                    let (idx, w) =
+                        slots_for_layout(work, &self.planner.layout.resident[peer], ns);
+                    for s in 0..idx.len() {
+                        payload.extend_from_slice(&idx[s].to_le_bytes());
+                        payload.extend_from_slice(&w[s].to_le_bytes());
+                    }
+                    self.ep.send(peer, tag(PHASE_SCATTER, l as u32, step), payload)?;
+                }
+                b.comm_ns += t_comm.elapsed().as_nanos() as u64;
+
+                // Own experts.
+                let t_moe = Instant::now();
+                let (idx, w) = self.slots_for(&plan.per_node[0]);
+                let mine =
+                    self.rt.node_experts_direct(&self.experts, l, &ar.moe_in, &idx, &w)?;
+                b.moe_ns += t_moe.elapsed().as_nanos() as u64;
+
+                // Gather partials.
+                let t_gather = Instant::now();
+                let envs = self.ep.gather(tag(PHASE_GATHER, l as u32, step), RECV_TIMEOUT)?;
+                let mut sum = mine;
+                for e in envs {
+                    for (a, v) in sum.iter_mut().zip(bytes_to_f32s(&e.payload)) {
+                        *a += v;
+                    }
+                }
+                b.comm_ns += t_gather.elapsed().as_nanos() as u64;
+
+                for (xi, (hi, ci)) in x.iter_mut().zip(ar.h.iter().zip(&sum)) {
+                    *xi = hi + ci;
+                }
+            }
+            let t_head = Instant::now();
+            last_logits = self.rt.lm_head(&x)?;
+            b.misc_ns += t_head.elapsed().as_nanos() as u64;
+            if is_prefill {
+                metrics.prefill.push(b);
+            } else {
+                metrics.decode.push(b);
+            }
+            pos += 1;
+            step += 1;
+        }
+        // Tell workers the request is over: an empty payload on the tag
+        // they will wait for next (layer 0 of the step after the last).
+        self.ep.broadcast(tag(PHASE_SCATTER, 0, step), &[])?;
+        Ok(RequestResult { id: req.id, generated, metrics })
+    }
+
+    fn serve_central_worker(&mut self, _req: &Request) -> Result<RequestResult> {
+        let m = self.rt.manifest.clone();
+        let d = m.d_embed;
+        let mut step: u32 = 0;
+        let mut layer: u32 = 0;
+        loop {
+            // Wait for the next scatter in protocol order; an empty
+            // payload on the expected tag is the end-of-request marker.
+            let env = self.ep.recv_tag(tag(PHASE_SCATTER, layer, step), RECV_TIMEOUT)?;
+            if env.payload.is_empty() {
+                break;
+            }
+            let moe_in = bytes_to_f32s(&env.payload[..d * 4]);
+            let rest = &env.payload[d * 4..];
+            let ns = rest.len() / 8; // slot count rides on the wire
+            let mut idx = vec![0usize; ns];
+            let mut w = vec![0f32; ns];
+            for s in 0..ns {
+                let o = s * 8;
+                idx[s] = i32::from_le_bytes(rest[o..o + 4].try_into().unwrap()) as usize;
+                w[s] = f32::from_le_bytes(rest[o + 4..o + 8].try_into().unwrap());
+            }
+            let partial = self.rt.node_experts_direct(
+                &self.experts,
+                layer as usize,
+                &moe_in,
+                &idx,
+                &w,
+            )?;
+            self.ep
+                .send(0, tag(PHASE_GATHER, layer, step), f32s_to_bytes(&partial))?;
+            layer += 1;
+            if layer as usize == m.n_layers {
+                layer = 0;
+                step += 1;
+            }
+        }
+        Ok(RequestResult {
+            id: 0,
+            generated: vec![],
+            metrics: RunMetrics::default(),
+        })
+    }
+}
+
+/// Slot mapping for a remote worker's resident list (leader side).
+fn slots_for_layout(
+    work: &crate::moe::balance::NodeWork,
+    resident: &[usize],
+    ns: usize,
+) -> (Vec<i32>, Vec<f32>) {
+    let mut idx = vec![0i32; ns];
+    let mut w = vec![0f32; ns];
+    for (s, run) in work.runs.iter().take(ns).enumerate() {
+        let local = resident
+            .iter()
+            .position(|&e| e == run.expert)
+            .expect("planner assigned non-resident expert");
+        idx[s] = local as i32;
+        w[s] = if run.is_padding { 0.0 } else { run.weight };
+    }
+    (idx, w)
+}

@@ -1,0 +1,9 @@
+//! Cluster execution: the virtual-time discrete-event simulator (`sim`)
+//! that regenerates the paper's evaluation tables at DBRX-132B scale, and
+//! the live threaded cluster (`live`) that runs the nano model for real
+//! through PJRT with the same coordination logic.
+
+pub mod live;
+pub mod sim;
+
+pub use sim::{ClusterSim, SimParams};

@@ -1,0 +1,505 @@
+//! Configuration: model dimensions, node hardware, network profiles,
+//! cluster layout, engine/run parameters. Values default to the paper's
+//! Table 1 / Table 2 and can be overridden from a TOML-subset file
+//! (`toml.rs`) or CLI flags.
+
+pub mod toml;
+
+use std::fmt;
+use std::path::Path;
+
+use crate::config::toml::Document;
+
+/// Model architecture dimensions (decoder-only MoE, DBRX-shaped).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub name: String,
+    pub n_layers: usize,
+    /// Embedding / residual width (`D_embed`, paper: 6144).
+    pub d_embed: usize,
+    /// Total QKV projection output width (`D_qkv_hidden`, paper: 8192).
+    pub d_qkv_hidden: usize,
+    /// Expert FFN hidden width (`D_ffn`, paper: 10752).
+    pub d_ffn: usize,
+    pub n_experts: usize,
+    /// Experts activated per token (DBRX: 4 of 16).
+    pub top_k: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub vocab_size: usize,
+    /// Bytes per parameter (2 = bf16, the paper's "precision").
+    pub precision_bytes: usize,
+}
+
+impl ModelDims {
+    /// The paper's target: unquantized DBRX Instruct 132B (Table 1).
+    pub fn dbrx_132b() -> ModelDims {
+        ModelDims {
+            name: "dbrx-132b".into(),
+            n_layers: 40,
+            d_embed: 6144,
+            d_qkv_hidden: 8192,
+            d_ffn: 10752,
+            n_experts: 16,
+            top_k: 4,
+            n_heads: 48,
+            n_kv_heads: 8,
+            vocab_size: 100_352,
+            precision_bytes: 2,
+        }
+    }
+
+    /// Scaled-down DBRX-architecture model that is actually executed via
+    /// Pallas → HLO → PJRT CPU in examples and integration tests. Same
+    /// expert count / top-k (so routing statistics match) and the same
+    /// GQA structure; only widths shrink.
+    pub fn dbrx_nano() -> ModelDims {
+        ModelDims {
+            name: "dbrx-nano".into(),
+            n_layers: 4,
+            d_embed: 256,
+            d_qkv_hidden: 512, // (n_heads + 2*n_kv_heads) * head_dim
+            d_ffn: 448,
+            n_experts: 16,
+            top_k: 4,
+            n_heads: 8,
+            n_kv_heads: 4,
+            vocab_size: 512,
+            precision_bytes: 4, // f32 on the CPU PJRT path
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        // d_qkv_hidden = (n_heads + 2 * n_kv_heads) * head_dim
+        self.d_qkv_hidden / (self.n_heads + 2 * self.n_kv_heads)
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelDims> {
+        match name {
+            "dbrx-132b" => Some(Self::dbrx_132b()),
+            "dbrx-nano" => Some(Self::dbrx_nano()),
+            _ => None,
+        }
+    }
+}
+
+/// Per-node hardware (Table 2: Mac Studio, M2 Ultra).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeHardware {
+    pub name: String,
+    pub mem_bytes: u64,
+    /// Unified memory bandwidth, bytes/sec (Table 1: 800e9).
+    pub mem_bw: f64,
+    /// GPU BF16 FLOPS per node (Table 1: 54e12).
+    pub gpu_bf16_flops: f64,
+    /// List price per node in USD (Table 5: 6,599).
+    pub price_usd: f64,
+    /// Memory-bandwidth efficiency actually achieved by expert matmuls
+    /// (calibration constant; the paper's measured MoE times imply ≈0.66
+    /// of peak — see EXPERIMENTS.md §Calibration).
+    pub mem_efficiency: f64,
+}
+
+impl NodeHardware {
+    pub fn m2_ultra() -> NodeHardware {
+        NodeHardware {
+            name: "mac-studio-m2-ultra".into(),
+            mem_bytes: 192 * 1024 * 1024 * 1024,
+            mem_bw: 800e9,
+            gpu_bf16_flops: 54e12,
+            price_usd: 6_599.0,
+            mem_efficiency: 0.66,
+        }
+    }
+
+    /// The Databricks comparison system (Table 5): one DGX-class node
+    /// with 8×H100-80G, list price 289,000 USD, measured 112.5 tok/s.
+    pub fn dgx_h100_8x() -> NodeHardware {
+        NodeHardware {
+            name: "8x-h100-80g".into(),
+            mem_bytes: 8 * 80 * 1024 * 1024 * 1024,
+            mem_bw: 8.0 * 3.35e12,
+            gpu_bf16_flops: 8.0 * 989e12,
+            price_usd: 289_000.0,
+            mem_efficiency: 0.66,
+        }
+    }
+}
+
+/// Interconnect profile: per-message transport latency + link bandwidth
+/// (+ NIC price for the §5.5 cost projections).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkProfile {
+    pub name: String,
+    /// Transport software processing latency per message, ns.
+    pub latency_ns: u64,
+    /// Link bandwidth in bytes/sec.
+    pub bandwidth: f64,
+    /// Additional NIC cost per node, USD (0 for the built-in 10 GbE).
+    pub nic_price_usd: f64,
+}
+
+impl NetworkProfile {
+    /// Built-in 10 GbE over TCP/IP (Table 1: 1 ms latency, 1.25e9 B/s).
+    pub fn tcp_10gbe() -> NetworkProfile {
+        NetworkProfile {
+            name: "10gbe-tcp".into(),
+            latency_ns: 1_000_000,
+            bandwidth: 1.25e9,
+            nic_price_usd: 0.0,
+        }
+    }
+
+    /// RoCEv2 25 Gbps NIC (§5.5: 750 ns, 339 USD).
+    pub fn rocev2() -> NetworkProfile {
+        NetworkProfile {
+            name: "rocev2-25g".into(),
+            latency_ns: 750,
+            bandwidth: 3.125e9,
+            nic_price_usd: 339.0,
+        }
+    }
+
+    /// Infiniband 200 Gbps NIC (§5.5: 600 ns, 1,267 USD).
+    pub fn infiniband() -> NetworkProfile {
+        NetworkProfile {
+            name: "infiniband-200g".into(),
+            latency_ns: 600,
+            bandwidth: 25e9,
+            nic_price_usd: 1_267.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<NetworkProfile> {
+        match name {
+            "10gbe" | "10gbe-tcp" | "tcp" => Some(Self::tcp_10gbe()),
+            "rocev2" | "roce" => Some(Self::rocev2()),
+            "infiniband" | "ib" => Some(Self::infiniband()),
+            _ => None,
+        }
+    }
+}
+
+/// Weight packing strategy (§4.1 / Algorithm 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Packing {
+    /// Each weight matrix is a separate array (naive MLX loading).
+    Unstacked,
+    /// All of an expert's layer weights stacked into one array (`P`).
+    Prestacked,
+}
+
+/// Multi-node compute load-balancing strategy (§4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Balancing {
+    /// Only router-selected experts run (naive).
+    SelectedOnly,
+    /// Busy full loading (`L_B`): every expert runs every layer.
+    BusyFull,
+    /// Router-aided dynamic loading (`L_R`): pad each node up to the
+    /// cluster-wide max selected count using LRU experts.
+    RouterAided,
+}
+
+/// Communication topology (§4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Topology {
+    /// Fork-join through node 1 (Figs. 2–3): 2 communications per layer,
+    /// gRPC served from the GPU process.
+    Centralized,
+    /// Decentralized attention/router replicas + envoy all-reduce
+    /// (`D`, Fig. 7): 1 communication per layer.
+    Decentralized,
+}
+
+/// A named optimization level from the paper's evaluation (Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// `Naive`: unstacked, selected-only, centralized.
+    Naive,
+    /// `P-L_B`: prestacked + busy full loading, centralized.
+    PLb,
+    /// `P-L_R-D`: prestacked + router-aided + decentralized.
+    PLrD,
+}
+
+impl Strategy {
+    pub fn packing(self) -> Packing {
+        match self {
+            Strategy::Naive => Packing::Unstacked,
+            _ => Packing::Prestacked,
+        }
+    }
+
+    pub fn balancing(self) -> Balancing {
+        match self {
+            Strategy::Naive => Balancing::SelectedOnly,
+            Strategy::PLb => Balancing::BusyFull,
+            Strategy::PLrD => Balancing::RouterAided,
+        }
+    }
+
+    pub fn topology(self) -> Topology {
+        match self {
+            Strategy::PLrD => Topology::Decentralized,
+            _ => Topology::Centralized,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Strategy> {
+        match name.to_ascii_lowercase().as_str() {
+            "naive" => Some(Strategy::Naive),
+            "p-lb" | "plb" | "p-l_b" => Some(Strategy::PLb),
+            "p-lr-d" | "plrd" | "p-l_r-d" => Some(Strategy::PLrD),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Strategy; 3] {
+        [Strategy::Naive, Strategy::PLb, Strategy::PLrD]
+    }
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Strategy::Naive => "Naive",
+            Strategy::PLb => "P-L_B",
+            Strategy::PLrD => "P-L_R-D",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Full cluster configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub n_nodes: usize,
+    pub hardware: NodeHardware,
+    pub network: NetworkProfile,
+    pub strategy: Strategy,
+    /// Max experts a node may hold resident (overlapped placement for
+    /// 3–4 node clusters, §5.3). 0 = derive from memory budget.
+    pub experts_per_node_cap: usize,
+}
+
+impl ClusterConfig {
+    pub fn new(n_nodes: usize, strategy: Strategy) -> ClusterConfig {
+        ClusterConfig {
+            n_nodes,
+            hardware: NodeHardware::m2_ultra(),
+            network: NetworkProfile::tcp_10gbe(),
+            strategy,
+            experts_per_node_cap: 0,
+        }
+    }
+}
+
+/// Generation / workload parameters (§5.2: 128/128; Table 5: 2000/256).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineConfig {
+    pub model: ModelDims,
+    pub prompt_tokens: usize,
+    pub gen_tokens: usize,
+    pub batch_size: usize,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            model: ModelDims::dbrx_132b(),
+            prompt_tokens: 128,
+            gen_tokens: 128,
+            batch_size: 1,
+            seed: 0xD8B2,
+        }
+    }
+}
+
+/// Errors surfaced when loading/validating configuration.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io error reading {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error(transparent)]
+    Parse(#[from] toml::ParseError),
+    #[error("invalid config: {0}")]
+    Invalid(String),
+}
+
+/// Load a `ClusterConfig` + `EngineConfig` from a TOML file, with every
+/// field optional (defaults = paper setup).
+pub fn load_from_file(path: &Path) -> Result<(ClusterConfig, EngineConfig), ConfigError> {
+    let text = std::fs::read_to_string(path).map_err(|source| ConfigError::Io {
+        path: path.display().to_string(),
+        source,
+    })?;
+    load_from_str(&text)
+}
+
+pub fn load_from_str(text: &str) -> Result<(ClusterConfig, EngineConfig), ConfigError> {
+    let doc = Document::parse(text)?;
+
+    let strategy_name = doc.str_or("cluster.strategy", "p-lr-d").to_string();
+    let strategy = Strategy::by_name(&strategy_name)
+        .ok_or_else(|| ConfigError::Invalid(format!("unknown strategy '{strategy_name}'")))?;
+    let net_name = doc.str_or("cluster.network", "10gbe").to_string();
+    let network = NetworkProfile::by_name(&net_name)
+        .ok_or_else(|| ConfigError::Invalid(format!("unknown network '{net_name}'")))?;
+    let mut hardware = NodeHardware::m2_ultra();
+    hardware.mem_bw = doc.float_or("hardware.mem_bw", hardware.mem_bw);
+    hardware.gpu_bf16_flops = doc.float_or("hardware.gpu_bf16_flops", hardware.gpu_bf16_flops);
+    hardware.price_usd = doc.float_or("hardware.price_usd", hardware.price_usd);
+    hardware.mem_efficiency = doc.float_or("hardware.mem_efficiency", hardware.mem_efficiency);
+
+    let cluster = ClusterConfig {
+        n_nodes: doc.int_or("cluster.nodes", 2) as usize,
+        hardware,
+        network,
+        strategy,
+        experts_per_node_cap: doc.int_or("cluster.experts_per_node_cap", 0) as usize,
+    };
+
+    let model_name = doc.str_or("model.name", "dbrx-132b").to_string();
+    let model = ModelDims::by_name(&model_name)
+        .ok_or_else(|| ConfigError::Invalid(format!("unknown model '{model_name}'")))?;
+    let engine = EngineConfig {
+        model,
+        prompt_tokens: doc.int_or("engine.prompt_tokens", 128) as usize,
+        gen_tokens: doc.int_or("engine.gen_tokens", 128) as usize,
+        batch_size: doc.int_or("engine.batch_size", 1) as usize,
+        seed: doc.int_or("engine.seed", 0xD8B2) as u64,
+    };
+
+    validate(&cluster, &engine)?;
+    Ok((cluster, engine))
+}
+
+/// Sanity checks shared by file and CLI construction paths.
+pub fn validate(cluster: &ClusterConfig, engine: &EngineConfig) -> Result<(), ConfigError> {
+    let m = &engine.model;
+    if cluster.n_nodes == 0 {
+        return Err(ConfigError::Invalid("cluster.nodes must be >= 1".into()));
+    }
+    if m.n_experts % cluster.n_nodes != 0 && cluster.experts_per_node_cap == 0 {
+        // Non-divisible placements are allowed, but only with an explicit
+        // overlap cap (the paper's 3-node setup loads overlappingly).
+        if cluster.n_nodes > m.n_experts {
+            return Err(ConfigError::Invalid(format!(
+                "more nodes ({}) than experts ({})",
+                cluster.n_nodes, m.n_experts
+            )));
+        }
+    }
+    if m.top_k > m.n_experts {
+        return Err(ConfigError::Invalid(format!(
+            "top_k {} > n_experts {}",
+            m.top_k, m.n_experts
+        )));
+    }
+    if m.d_qkv_hidden % (m.n_heads + 2 * m.n_kv_heads) != 0 {
+        return Err(ConfigError::Invalid(
+            "d_qkv_hidden must be divisible by n_heads + 2*n_kv_heads".into(),
+        ));
+    }
+    if engine.batch_size == 0 || engine.gen_tokens == 0 {
+        return Err(ConfigError::Invalid("batch_size/gen_tokens must be >= 1".into()));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dbrx_132b_matches_table1() {
+        let m = ModelDims::dbrx_132b();
+        assert_eq!(m.n_layers, 40);
+        assert_eq!(m.d_embed, 6144);
+        assert_eq!(m.d_qkv_hidden, 8192);
+        assert_eq!(m.d_ffn, 10752);
+        assert_eq!(m.n_experts, 16);
+        assert_eq!(m.top_k, 4);
+        assert_eq!(m.precision_bytes, 2);
+        assert_eq!(m.head_dim(), 128);
+    }
+
+    #[test]
+    fn nano_head_dim_consistent() {
+        let m = ModelDims::dbrx_nano();
+        assert_eq!(m.head_dim() * (m.n_heads + 2 * m.n_kv_heads), m.d_qkv_hidden);
+    }
+
+    #[test]
+    fn network_profiles_match_paper() {
+        assert_eq!(NetworkProfile::tcp_10gbe().latency_ns, 1_000_000);
+        assert_eq!(NetworkProfile::rocev2().latency_ns, 750);
+        assert_eq!(NetworkProfile::infiniband().latency_ns, 600);
+        assert_eq!(NetworkProfile::by_name("ib").unwrap().name, "infiniband-200g");
+    }
+
+    #[test]
+    fn strategy_components() {
+        assert_eq!(Strategy::Naive.packing(), Packing::Unstacked);
+        assert_eq!(Strategy::PLb.balancing(), Balancing::BusyFull);
+        assert_eq!(Strategy::PLrD.topology(), Topology::Decentralized);
+        assert_eq!(Strategy::PLb.topology(), Topology::Centralized);
+        assert_eq!(Strategy::by_name("P-L_R-D"), Some(Strategy::PLrD));
+        assert_eq!(format!("{}", Strategy::PLrD), "P-L_R-D");
+    }
+
+    #[test]
+    fn load_defaults_from_empty() {
+        let (c, e) = load_from_str("").unwrap();
+        assert_eq!(c.n_nodes, 2);
+        assert_eq!(c.strategy, Strategy::PLrD);
+        assert_eq!(e.model.name, "dbrx-132b");
+        assert_eq!(e.prompt_tokens, 128);
+    }
+
+    #[test]
+    fn load_full_config() {
+        let (c, e) = load_from_str(
+            r#"
+[cluster]
+nodes = 4
+strategy = "naive"
+network = "rocev2"
+
+[hardware]
+mem_efficiency = 0.8
+
+[model]
+name = "dbrx-nano"
+
+[engine]
+prompt_tokens = 2000
+gen_tokens = 256
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.n_nodes, 4);
+        assert_eq!(c.strategy, Strategy::Naive);
+        assert_eq!(c.network.name, "rocev2-25g");
+        assert!((c.hardware.mem_efficiency - 0.8).abs() < 1e-12);
+        assert_eq!(e.model.name, "dbrx-nano");
+        assert_eq!(e.prompt_tokens, 2000);
+        assert_eq!(e.gen_tokens, 256);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(load_from_str("[cluster]\nnodes = 0").is_err());
+        assert!(load_from_str("[cluster]\nstrategy = \"bogus\"").is_err());
+        assert!(load_from_str("[cluster]\nnetwork = \"carrier-pigeon\"").is_err());
+        assert!(load_from_str("[model]\nname = \"gpt5\"").is_err());
+        assert!(load_from_str("[cluster]\nnodes = 32").is_err());
+        assert!(load_from_str("[engine]\ngen_tokens = 0").is_err());
+    }
+}

@@ -1,0 +1,411 @@
+//! A hand-rolled parser for the TOML subset our config files use — the
+//! offline crate cache has neither `serde` nor `toml`.
+//!
+//! Supported: `[table]` / `[a.b]` headers, `key = value` with string,
+//! integer, float, boolean and flat arrays of those, `#` comments, and
+//! bare/quoted keys. Unsupported (rejected with an error): inline tables,
+//! arrays-of-tables, multi-line strings, datetimes.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`bandwidth = 10` meaning 10.0).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+/// Flat document: keys are dotted paths (`cluster.network.latency_us`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Document {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Document, ParseError> {
+        let mut doc = Document::default();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = lineno + 1;
+            let s = strip_comment(raw).trim().to_string();
+            if s.is_empty() {
+                continue;
+            }
+            if let Some(rest) = s.strip_prefix('[') {
+                if s.starts_with("[[") {
+                    return Err(ParseError {
+                        line,
+                        msg: "arrays of tables are not supported".into(),
+                    });
+                }
+                let inner = rest.strip_suffix(']').ok_or_else(|| ParseError {
+                    line,
+                    msg: "unterminated table header".into(),
+                })?;
+                let name = inner.trim();
+                if name.is_empty()
+                    || !name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.')
+                {
+                    return Err(ParseError {
+                        line,
+                        msg: format!("invalid table name '{name}'"),
+                    });
+                }
+                prefix = name.to_string();
+                continue;
+            }
+            let eq = s.find('=').ok_or_else(|| ParseError {
+                line,
+                msg: "expected 'key = value'".into(),
+            })?;
+            let key = s[..eq].trim().trim_matches('"');
+            if key.is_empty() {
+                return Err(ParseError { line, msg: "empty key".into() });
+            }
+            let value = parse_value(s[eq + 1..].trim(), line)?;
+            let full = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            if doc.entries.insert(full.clone(), value).is_some() {
+                return Err(ParseError {
+                    line,
+                    msg: format!("duplicate key '{full}'"),
+                });
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// All keys under a dotted prefix (for iterating `[cluster.nodes]`).
+    pub fn keys_with_prefix<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> {
+        self.entries
+            .keys()
+            .filter(move |k| k.starts_with(prefix))
+            .map(|k| k.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Remove a `#` comment, respecting quoted strings.
+fn strip_comment(s: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &s[..i],
+            _ => {}
+        }
+    }
+    s
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    if s.is_empty() {
+        return Err(ParseError { line, msg: "missing value".into() });
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = find_closing_quote(rest).ok_or_else(|| ParseError {
+            line,
+            msg: "unterminated string".into(),
+        })?;
+        if !rest[end + 1..].trim().is_empty() {
+            return Err(ParseError {
+                line,
+                msg: format!("trailing characters after string: '{}'", &rest[end + 1..]),
+            });
+        }
+        return Ok(Value::Str(unescape(&rest[..end])));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| ParseError {
+            line,
+            msg: "unterminated array".into(),
+        })?;
+        let mut items = Vec::new();
+        for part in split_array_items(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let v = parse_value(part, line)?;
+            if let Value::Array(_) = v {
+                return Err(ParseError {
+                    line,
+                    msg: "nested arrays are not supported".into(),
+                });
+            }
+            items.push(v);
+        }
+        return Ok(Value::Array(items));
+    }
+    // Numbers: underscores allowed as digit separators.
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if cleaned.contains('.')
+        || ((cleaned.contains('e') || cleaned.contains('E')) && !cleaned.starts_with("0x"))
+    {
+        if let Ok(f) = cleaned.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    }
+    if let Some(hex) = cleaned.strip_prefix("0x") {
+        if let Ok(i) = i64::from_str_radix(hex, 16) {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ParseError { line, msg: format!("cannot parse value '{s}'") })
+}
+
+/// Byte index of the closing (unescaped) quote in a string body.
+fn find_closing_quote(s: &str) -> Option<usize> {
+    let bytes = s.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' => i += 2, // skip the escaped character
+            b'"' => return Some(i),
+            _ => i += 1,
+        }
+    }
+    None
+}
+
+/// Split array contents on commas, respecting quoted strings.
+fn split_array_items(s: &str) -> Vec<&str> {
+    let mut items = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                items.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&s[start..]);
+    items
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('\\') => out.push('\\'),
+                Some('"') => out.push('"'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_document() {
+        let doc = Document::parse(
+            r#"
+# cluster config
+name = "mac-studio"
+nodes = 4
+
+[network]
+profile = "10gbe"
+latency_ms = 1.0
+rdma = false
+ports = [1, 2, 3]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "mac-studio");
+        assert_eq!(doc.int_or("nodes", 0), 4);
+        assert_eq!(doc.str_or("network.profile", ""), "10gbe");
+        assert!((doc.float_or("network.latency_ms", 0.0) - 1.0).abs() < 1e-12);
+        assert!(!doc.bool_or("network.rdma", true));
+        let ports = doc.get("network.ports").unwrap().as_array().unwrap();
+        assert_eq!(ports.len(), 3);
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = Document::parse("x = 10").unwrap();
+        assert_eq!(doc.float_or("x", 0.0), 10.0);
+    }
+
+    #[test]
+    fn underscore_separators() {
+        let doc = Document::parse("bw = 800_000_000_000").unwrap();
+        assert_eq!(doc.int_or("bw", 0), 800_000_000_000);
+    }
+
+    #[test]
+    fn scientific_notation() {
+        let doc = Document::parse("flops = 54e12").unwrap();
+        assert_eq!(doc.float_or("flops", 0.0), 54e12);
+    }
+
+    #[test]
+    fn comments_in_strings_survive() {
+        let doc = Document::parse(r##"s = "a # b" # real comment"##).unwrap();
+        assert_eq!(doc.str_or("s", ""), "a # b");
+    }
+
+    #[test]
+    fn string_array() {
+        let doc = Document::parse(r#"xs = ["a", "b,c", "d"]"#).unwrap();
+        let xs = doc.get("xs").unwrap().as_array().unwrap();
+        assert_eq!(xs[1].as_str().unwrap(), "b,c");
+        assert_eq!(xs.len(), 3);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Document::parse("a = 1\nbad line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(Document::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn unsupported_forms_rejected() {
+        assert!(Document::parse("[[table]]").is_err());
+        assert!(Document::parse("a = [[1,2],[3]]").is_err());
+        assert!(Document::parse("a = \"unterminated").is_err());
+        assert!(Document::parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn escapes() {
+        let doc = Document::parse(r#"s = "a\nb\t\"q\"""#).unwrap();
+        assert_eq!(doc.str_or("s", ""), "a\nb\t\"q\"");
+    }
+
+    #[test]
+    fn nested_table_headers() {
+        let doc = Document::parse("[a.b]\nc = 1").unwrap();
+        assert_eq!(doc.int_or("a.b.c", 0), 1);
+    }
+
+    #[test]
+    fn keys_with_prefix_iterates() {
+        let doc = Document::parse("[n]\na = 1\nb = 2\n[m]\nc = 3").unwrap();
+        let keys: Vec<_> = doc.keys_with_prefix("n.").collect();
+        assert_eq!(keys, vec!["n.a", "n.b"]);
+    }
+}

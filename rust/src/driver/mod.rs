@@ -1,0 +1,347 @@
+//! Simulated unified-memory manager — the "driver processing" the paper
+//! observes in Apple's Metal driver (§3.2, Figs. 4–5).
+//!
+//! The real driver is closed source; the paper characterizes it
+//! behaviourally and so do we. The model, calibrated against Fig. 4:
+//!
+//! - Before the GPU may compute on an array, the array must be **wired**
+//!   (resident and unpageable). Wiring costs a fixed per-array driver call
+//!   plus `bytes / wire_bw` (the prestacked 32 GB benchmark array takes
+//!   ≈400 ms to wire ⇒ `wire_bw` ≈ 80 GB/s).
+//! - A wired array that has not been touched for an inactivity window is
+//!   **unwired** (a protection mechanism against GPU memory pressure —
+//!   the paper's conjecture). The window grows slowly with array size:
+//!   ≈300 ms for the 268 MB unstacked matrices (so Fig. 4's unstacked
+//!   curve departs once the inter-touch gap `40×(c+T_wait)` exceeds it,
+//!   i.e. at `T_wait ≈ 8 ms`) and 512 ms for multi-GB prestacked stacks
+//!   (so the prestacked curve departs at `T_wait ≈ 512 ms`).
+//! - Warmup wires everything up front (Algorithm 2 line 6); the
+//!   `P-L_R-D` standby computation (§4.2) is a `touch_all` between
+//!   requests.
+//!
+//! The simulator is deterministic and runs on any `Clock`-compatible
+//! timestamp stream: callers pass explicit `now` values in nanoseconds.
+
+pub mod params;
+
+pub use params::DriverParams;
+
+use std::collections::HashMap;
+
+use crate::model::weights::{ArrayId, WeightArray};
+use crate::simclock::Nanos;
+
+/// One wiring event, for Fig. 5-style timeline traces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireEvent {
+    /// Simulation time at which the driver began wiring.
+    pub at: Nanos,
+    pub id: ArrayId,
+    pub bytes: u64,
+    /// Driver processing time charged.
+    pub cost: Nanos,
+    /// True if this was a re-wire of a previously wired array (the
+    /// "repeated payment" of §4.2).
+    pub rewire: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct WiredState {
+    last_touch: Nanos,
+    bytes: u64,
+}
+
+/// Cumulative driver statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DriverStats {
+    pub wire_ops: u64,
+    pub rewire_ops: u64,
+    pub wired_bytes_total: u64,
+    pub driver_ns_total: Nanos,
+}
+
+/// The simulated driver for one node.
+#[derive(Debug)]
+pub struct DriverSim {
+    params: DriverParams,
+    wired: HashMap<ArrayId, WiredState>,
+    stats: DriverStats,
+    trace: Option<Vec<WireEvent>>,
+}
+
+impl DriverSim {
+    pub fn new(params: DriverParams) -> DriverSim {
+        DriverSim { params, wired: HashMap::new(), stats: DriverStats::default(), trace: None }
+    }
+
+    /// Enable event tracing (Fig. 5 timelines).
+    pub fn with_trace(mut self) -> DriverSim {
+        self.trace = Some(Vec::new());
+        self
+    }
+
+    pub fn params(&self) -> &DriverParams {
+        &self.params
+    }
+
+    pub fn stats(&self) -> DriverStats {
+        self.stats
+    }
+
+    pub fn trace(&self) -> &[WireEvent] {
+        self.trace.as_deref().unwrap_or(&[])
+    }
+
+    /// Is `id` wired at time `now` (i.e. wired and not idle-expired)?
+    pub fn is_wired(&self, id: ArrayId, now: Nanos) -> bool {
+        match self.wired.get(&id) {
+            None => false,
+            Some(s) => {
+                now.saturating_sub(s.last_touch) <= self.params.unwire_after(s.bytes)
+            }
+        }
+    }
+
+    /// Touch `arrays` for GPU compute starting at `now`. Returns the
+    /// driver processing time that must elapse before compute may start
+    /// (0 if everything is already wired and fresh). Updates last-touch
+    /// stamps to the end of the driver work.
+    pub fn touch(&mut self, arrays: &[WeightArray], now: Nanos) -> Nanos {
+        let mut cost: Nanos = 0;
+        for a in arrays {
+            let expired = match self.wired.get(&a.id) {
+                None => None, // never wired
+                Some(s) => {
+                    let idle = now.saturating_sub(s.last_touch);
+                    if idle > self.params.unwire_after(s.bytes) {
+                        Some(true) // unwired by inactivity -> re-wire
+                    } else {
+                        Some(false) // still wired
+                    }
+                }
+            };
+            let needs_wire = !matches!(expired, Some(false));
+            if needs_wire {
+                let rewire = expired == Some(true);
+                let c = if rewire {
+                    self.params.rewire_cost(a.bytes)
+                } else {
+                    self.params.wire_cost(a.bytes)
+                };
+                self.stats.wire_ops += 1;
+                if rewire {
+                    self.stats.rewire_ops += 1;
+                }
+                self.stats.wired_bytes_total += a.bytes;
+                self.stats.driver_ns_total += c;
+                if let Some(t) = &mut self.trace {
+                    t.push(WireEvent { at: now + cost, id: a.id, bytes: a.bytes, cost: c, rewire });
+                }
+                cost += c;
+            }
+        }
+        // All touched arrays are stamped at the moment compute can begin.
+        let stamp = now + cost;
+        for a in arrays {
+            self.wired.insert(a.id, WiredState { last_touch: stamp, bytes: a.bytes });
+        }
+        cost
+    }
+
+    /// Refresh last-touch stamps without charging wiring (models compute
+    /// *finishing* at `now`: the GPU referenced the data up to this
+    /// point). Only refreshes arrays that are currently wired.
+    pub fn refresh(&mut self, arrays: &[WeightArray], now: Nanos) {
+        for a in arrays {
+            if let Some(s) = self.wired.get_mut(&a.id) {
+                if now > s.last_touch {
+                    s.last_touch = now;
+                }
+            }
+        }
+    }
+
+    /// Warm up: wire every array, returning total driver time (system
+    /// startup / Algorithm 2 warmup). Equivalent to `touch`, named for
+    /// intent.
+    pub fn warmup(&mut self, arrays: &[WeightArray], now: Nanos) -> Nanos {
+        self.touch(arrays, now)
+    }
+
+    /// Number of arrays currently wired (fresh) at `now`.
+    pub fn wired_count(&self, now: Nanos) -> usize {
+        self.wired
+            .values()
+            .filter(|s| now.saturating_sub(s.last_touch) <= self.params.unwire_after(s.bytes))
+            .count()
+    }
+
+    /// Bytes currently wired (fresh) at `now`.
+    pub fn wired_bytes(&self, now: Nanos) -> u64 {
+        self.wired
+            .values()
+            .filter(|s| now.saturating_sub(s.last_touch) <= self.params.unwire_after(s.bytes))
+            .map(|s| s.bytes)
+            .sum()
+    }
+
+    /// Reset all wiring state (e.g. after a simulated reboot).
+    pub fn reset(&mut self) {
+        self.wired.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simclock::NS_PER_MS;
+
+    const MB: u64 = 1024 * 1024;
+    const GB: u64 = 1024 * MB;
+
+    fn arr(n: u16, bytes: u64) -> WeightArray {
+        WeightArray { id: ArrayId::ExpertStack { expert: n }, bytes }
+    }
+
+    #[test]
+    fn first_touch_pays_wire_cost() {
+        let mut d = DriverSim::new(DriverParams::default());
+        let a = [arr(0, GB)];
+        let c = d.touch(&a, 0);
+        assert!(c > 0);
+        assert_eq!(d.stats().wire_ops, 1);
+        assert_eq!(d.stats().rewire_ops, 0);
+    }
+
+    #[test]
+    fn second_touch_is_free_when_fresh() {
+        let mut d = DriverSim::new(DriverParams::default());
+        let a = [arr(0, GB)];
+        let c0 = d.touch(&a, 0);
+        let c1 = d.touch(&a, c0 + NS_PER_MS);
+        assert_eq!(c1, 0);
+        assert_eq!(d.stats().wire_ops, 1);
+    }
+
+    #[test]
+    fn idle_expiry_triggers_rewire() {
+        let p = DriverParams::default();
+        let mut d = DriverSim::new(p.clone());
+        let a = [arr(0, 256 * MB)];
+        let c0 = d.touch(&a, 0);
+        let window = p.unwire_after(256 * MB);
+        // Just inside the window: free.
+        assert_eq!(d.touch(&a, c0 + window), 0);
+        // Now wait past the window from the refreshed stamp: re-wire.
+        let last = c0 + window;
+        let c2 = d.touch(&a, last + window + NS_PER_MS);
+        assert!(c2 > 0);
+        assert_eq!(d.stats().rewire_ops, 1);
+    }
+
+    #[test]
+    fn window_grows_with_size() {
+        let p = DriverParams::default();
+        assert!(p.unwire_after(32 * GB) > p.unwire_after(256 * MB));
+        assert!(p.unwire_after(256 * MB) > p.unwire_after(MB));
+        // Fig. 4 anchors: ~512 ms for the 32 GB prestack...
+        let big = p.unwire_after(32 * GB);
+        assert!(
+            (400 * NS_PER_MS..650 * NS_PER_MS).contains(&big),
+            "32GB window {} ms",
+            big / NS_PER_MS
+        );
+        // ...and low enough for 268 MB matrices that a 40-layer pass with
+        // 8 ms sleeps (~380 ms inter-touch) expires them, while a pass
+        // with 4 ms sleeps (~220 ms) does not.
+        let small = p.unwire_after(268 * MB);
+        assert!(
+            (220 * NS_PER_MS..380 * NS_PER_MS).contains(&small),
+            "268MB window {} ms",
+            small / NS_PER_MS
+        );
+    }
+
+    #[test]
+    fn wire_cost_scales_with_bytes() {
+        let p = DriverParams::default();
+        // 32 GB prestack wires in ≈400 ms (Finding 2).
+        let c = p.wire_cost(32 * GB);
+        assert!(
+            (300 * NS_PER_MS..520 * NS_PER_MS).contains(&c),
+            "32GB wire {} ms",
+            c / NS_PER_MS
+        );
+        assert!(p.wire_cost(2 * GB) > p.wire_cost(GB));
+        // Fixed floor for tiny arrays.
+        assert!(p.wire_cost(1) >= p.fixed_ns);
+    }
+
+    #[test]
+    fn refresh_extends_lifetime_without_cost() {
+        let p = DriverParams::default();
+        let mut d = DriverSim::new(p.clone());
+        let a = [arr(0, 256 * MB)];
+        d.touch(&a, 0);
+        let w = p.unwire_after(256 * MB);
+        // Keep refreshing at 80% of the window; never expires.
+        let mut t = 0;
+        for _ in 0..10 {
+            t += w * 8 / 10;
+            d.refresh(&a, t);
+        }
+        assert_eq!(d.touch(&a, t + w / 2), 0);
+        assert_eq!(d.stats().wire_ops, 1);
+    }
+
+    #[test]
+    fn refresh_does_not_wire_unknown_arrays() {
+        let mut d = DriverSim::new(DriverParams::default());
+        d.refresh(&[arr(9, GB)], 100);
+        assert_eq!(d.wired_count(100), 0);
+        // First real touch still pays.
+        assert!(d.touch(&[arr(9, GB)], 200) > 0);
+    }
+
+    #[test]
+    fn trace_records_events() {
+        let mut d = DriverSim::new(DriverParams::default()).with_trace();
+        let a = [arr(0, GB), arr(1, GB)];
+        d.touch(&a, 0);
+        assert_eq!(d.trace().len(), 2);
+        assert!(!d.trace()[0].rewire);
+        // Second array's wiring starts after the first finishes.
+        assert_eq!(d.trace()[1].at, d.trace()[0].cost);
+    }
+
+    #[test]
+    fn wired_accounting() {
+        let p = DriverParams::default();
+        let mut d = DriverSim::new(p.clone());
+        let a = [arr(0, GB), arr(1, 2 * GB)];
+        let c = d.touch(&a, 0);
+        assert_eq!(d.wired_count(c), 2);
+        assert_eq!(d.wired_bytes(c), 3 * GB);
+        // After both windows pass, nothing is fresh.
+        let far = c + p.unwire_after(2 * GB) * 2;
+        assert_eq!(d.wired_count(far), 0);
+    }
+
+    #[test]
+    fn prop_touch_cost_is_monotone_in_cold_set() {
+        crate::util::prop::forall("cold arrays cost more", 64, |g| {
+            let p = DriverParams::default();
+            let mut d1 = DriverSim::new(p.clone());
+            let mut d2 = DriverSim::new(p);
+            let n = 1 + g.usize_in(0..8);
+            let arrays: Vec<WeightArray> =
+                (0..n as u16).map(|i| arr(i, (1 + g.u64_in(0..64)) * MB)).collect();
+            // d1 pre-warms a prefix, d2 pre-warms everything.
+            let split = g.usize_in(0..arrays.len());
+            d1.touch(&arrays[..split], 0);
+            d2.touch(&arrays, 0);
+            let t = NS_PER_MS; // fresh for all windows
+            d1.touch(&arrays, t) >= d2.touch(&arrays, t)
+        });
+    }
+}

@@ -1,0 +1,81 @@
+//! Single-node (dense) generation loop — the baseline path and the
+//! engine the quickstart example uses. Multi-node generation lives in
+//! `cluster::live` and produces the same tokens (verified by the
+//! integration tests) because both run the same artifacts.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::request::{Request, RequestResult};
+use crate::engine::sampling::Sampler;
+use crate::metrics::{RunMetrics, TokenBreakdown};
+use crate::runtime::{HostTensor, NanoRuntime};
+use crate::util::rng::Rng;
+
+/// Dense single-process engine over the whole-model decode artifact.
+pub struct DenseEngine {
+    rt: NanoRuntime,
+    sampler: Sampler,
+    rng: Rng,
+}
+
+impl DenseEngine {
+    pub fn load(artifacts: &Path, sampler: Sampler, seed: u64) -> Result<DenseEngine> {
+        let rt = NanoRuntime::load(artifacts, true)?;
+        Ok(DenseEngine { rt, sampler, rng: Rng::new(seed) })
+    }
+
+    pub fn runtime(&self) -> &NanoRuntime {
+        &self.rt
+    }
+
+    /// Serve one request: prefill the prompt token-by-token, then decode
+    /// `max_new_tokens`, collecting wall-clock metrics.
+    pub fn serve(&mut self, req: &Request) -> Result<RequestResult> {
+        let mut metrics = RunMetrics::default();
+        let mut kc: HostTensor = self.rt.empty_dense_cache();
+        let mut vc: HostTensor = self.rt.empty_dense_cache();
+        let mut pos = 0usize;
+        let max_seq = self.rt.manifest.max_seq;
+        let mut last_logits: Vec<f32> = Vec::new();
+
+        for &tok in &req.prompt {
+            anyhow::ensure!(pos < max_seq, "prompt exceeds max_seq {max_seq}");
+            let t0 = Instant::now();
+            let (logits, k2, v2) = self.rt.dense_step(tok, &kc, &vc, pos)?;
+            kc = k2;
+            vc = v2;
+            last_logits = logits;
+            pos += 1;
+            metrics.prefill.push(TokenBreakdown {
+                moe_ns: 0,
+                comm_ns: 0,
+                misc_ns: t0.elapsed().as_nanos() as u64,
+            });
+        }
+
+        let mut generated = Vec::with_capacity(req.max_new_tokens);
+        for _ in 0..req.max_new_tokens {
+            if pos >= max_seq {
+                break;
+            }
+            let next = self.sampler.sample(&last_logits, &mut self.rng);
+            generated.push(next);
+            let t0 = Instant::now();
+            let (logits, k2, v2) = self.rt.dense_step(next, &kc, &vc, pos)?;
+            kc = k2;
+            vc = v2;
+            last_logits = logits;
+            pos += 1;
+            metrics.decode.push(TokenBreakdown {
+                moe_ns: 0,
+                comm_ns: 0,
+                misc_ns: t0.elapsed().as_nanos() as u64,
+            });
+        }
+
+        Ok(RequestResult { id: req.id, generated, metrics })
+    }
+}

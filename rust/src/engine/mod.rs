@@ -1,0 +1,13 @@
+//! Token-generation engine: sampling, requests, and the single-node
+//! (dense) generation loop over the PJRT runtime. The multi-node loop
+//! lives in `cluster::live` and shares `sampling`/`request`.
+
+pub mod generation;
+pub mod scheduler;
+pub mod request;
+pub mod sampling;
+
+pub use generation::DenseEngine;
+pub use scheduler::{serve_workload, SchedPolicy, SchedReport};
+pub use request::{Request, RequestResult};
+pub use sampling::Sampler;

@@ -1,0 +1,51 @@
+//! Requests and results for the serving loop.
+
+use crate::metrics::RunMetrics;
+
+/// One generation request (the paper's workload is single-user, prompt
+/// and generation capped at 128 tokens; Table 5 uses 2000/256).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        Request { id, prompt, max_new_tokens }
+    }
+
+    /// Synthetic prompt of `len` tokens over `vocab` (seeded by id).
+    pub fn synthetic(id: u64, len: usize, vocab: usize) -> Request {
+        let mut rng = crate::util::rng::Rng::new(0xFEED ^ id);
+        let prompt = (0..len).map(|_| rng.below(vocab as u64) as u32).collect();
+        Request { id, prompt, max_new_tokens: 128 }
+    }
+}
+
+/// Completed request.
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub id: u64,
+    pub generated: Vec<u32>,
+    pub metrics: RunMetrics,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_prompt_in_vocab() {
+        let r = Request::synthetic(7, 128, 512);
+        assert_eq!(r.prompt.len(), 128);
+        assert!(r.prompt.iter().all(|&t| t < 512));
+    }
+
+    #[test]
+    fn synthetic_is_deterministic_per_id() {
+        assert_eq!(Request::synthetic(1, 16, 512), Request::synthetic(1, 16, 512));
+        assert_ne!(Request::synthetic(1, 16, 512), Request::synthetic(2, 16, 512));
+    }
+}

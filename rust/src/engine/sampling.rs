@@ -1,0 +1,104 @@
+//! Next-token sampling over the LM-head logits.
+
+use crate::util::rng::Rng;
+
+/// Sampling configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Sampler {
+    /// Argmax.
+    Greedy,
+    /// Top-k sampling with temperature.
+    TopK { k: usize, temperature: f64 },
+}
+
+impl Sampler {
+    /// Pick the next token id from `logits`.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
+        match self {
+            Sampler::Greedy => argmax(logits) as u32,
+            Sampler::TopK { k, temperature } => {
+                let k = (*k).clamp(1, logits.len());
+                let t = temperature.max(1e-6);
+                // Indices of the k largest logits.
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+                idx.truncate(k);
+                // Softmax over the survivors at temperature t.
+                let m = logits[idx[0]] as f64;
+                let exps: Vec<f64> = idx
+                    .iter()
+                    .map(|&i| ((logits[i] as f64 - m) / t).exp())
+                    .collect();
+                let z: f64 = exps.iter().sum();
+                let mut u = rng.f64() * z;
+                for (j, &e) in exps.iter().enumerate() {
+                    u -= e;
+                    if u <= 0.0 {
+                        return idx[j] as u32;
+                    }
+                }
+                idx[k - 1] as u32
+            }
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut rng = Rng::new(1);
+        let logits = vec![0.1, 3.0, -1.0, 2.9];
+        assert_eq!(Sampler::Greedy.sample(&logits, &mut rng), 1);
+    }
+
+    #[test]
+    fn topk_stays_in_topk() {
+        let mut rng = Rng::new(2);
+        let logits = vec![-10.0, 5.0, 4.0, -20.0, 4.5];
+        let s = Sampler::TopK { k: 3, temperature: 1.0 };
+        for _ in 0..200 {
+            let t = s.sample(&logits, &mut rng);
+            assert!([1u32, 2, 4].contains(&t), "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let mut rng = Rng::new(3);
+        let logits = vec![0.0, 1.0, 0.9];
+        let s = Sampler::TopK { k: 3, temperature: 0.01 };
+        let hits = (0..100)
+            .filter(|_| s.sample(&logits, &mut rng) == 1)
+            .count();
+        assert!(hits > 95, "{hits}");
+    }
+
+    #[test]
+    fn topk_k_one_is_greedy() {
+        let mut rng = Rng::new(4);
+        let logits = vec![0.5, 0.4, 9.0];
+        let s = Sampler::TopK { k: 1, temperature: 2.0 };
+        assert_eq!(s.sample(&logits, &mut rng), 2);
+    }
+
+    #[test]
+    fn handles_singleton_vocab() {
+        let mut rng = Rng::new(5);
+        assert_eq!(Sampler::Greedy.sample(&[1.0], &mut rng), 0);
+        let s = Sampler::TopK { k: 5, temperature: 1.0 };
+        assert_eq!(s.sample(&[1.0], &mut rng), 0);
+    }
+}

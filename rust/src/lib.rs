@@ -1,0 +1,32 @@
+//! `apple-moe` — multi-node expert parallelism for Mixture-of-Experts LLMs
+//! on (simulated) Apple Silicon clusters.
+//!
+//! Reproduction of *"Towards Building Private LLMs: Exploring Multi-Node
+//! Expert Parallelism on Apple Silicon for Mixture-of-Experts Large
+//! Language Model"* (ACM RACS '24, DOI 10.1145/3649601.3698722).
+//!
+//! The crate is the L3 coordinator of a three-layer stack:
+//! - L1: Pallas kernels (build-time Python, `python/compile/kernels/`)
+//! - L2: JAX decoder model (build-time Python, `python/compile/model.py`)
+//! - L3: this crate — cluster topology, expert-parallel scheduling, load
+//!   balancing, the simulated Metal-driver memory manager, the simulated
+//!   10GbE/RoCEv2/Infiniband interconnect, the Eq. 1 performance model,
+//!   and the PJRT runtime that executes the AOT-lowered artifacts.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod driver;
+pub mod engine;
+pub mod metrics;
+pub mod model;
+pub mod moe;
+pub mod network;
+pub mod packing;
+pub mod perfmodel;
+pub mod runtime;
+pub mod simclock;
+pub mod trace;
+pub mod util;

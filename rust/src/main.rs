@@ -1,0 +1,10 @@
+//! `apple-moe` CLI — see `apple-moe help` or `rust/src/cli/mod.rs`.
+
+fn main() {
+    apple_moe::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = apple_moe::cli::run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

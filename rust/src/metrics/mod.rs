@@ -1,0 +1,147 @@
+//! Per-token performance accounting, matching the decomposition the paper
+//! reports in Tables 3–4: **MoE** (expert compute incl. driver charges on
+//! the expert path), **Comm.** (wait: transport + remote stragglers) and
+//! **Misc** (self-attention, router, weighted sum).
+
+use crate::simclock::Nanos;
+use crate::util::stats::Welford;
+
+/// Time breakdown of one generated token.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TokenBreakdown {
+    pub moe_ns: Nanos,
+    pub comm_ns: Nanos,
+    pub misc_ns: Nanos,
+}
+
+impl TokenBreakdown {
+    pub fn total_ns(&self) -> Nanos {
+        self.moe_ns + self.comm_ns + self.misc_ns
+    }
+}
+
+/// Aggregated run metrics for one phase (prefill or decode).
+#[derive(Debug, Clone, Default)]
+pub struct PhaseMetrics {
+    pub tokens: u64,
+    pub moe: Welford,
+    pub comm: Welford,
+    pub misc: Welford,
+    pub total: Welford,
+}
+
+impl PhaseMetrics {
+    pub fn push(&mut self, b: TokenBreakdown) {
+        self.tokens += 1;
+        self.moe.push(b.moe_ns as f64);
+        self.comm.push(b.comm_ns as f64);
+        self.misc.push(b.misc_ns as f64);
+        self.total.push(b.total_ns() as f64);
+    }
+
+    /// Mean seconds/token.
+    pub fn secs_per_token(&self) -> f64 {
+        self.total.mean() / 1e9
+    }
+
+    /// Tokens per second (the paper's "gen TP.").
+    pub fn tokens_per_sec(&self) -> f64 {
+        let s = self.secs_per_token();
+        if s > 0.0 {
+            1.0 / s
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean breakdown in seconds (Table 3/4 columns).
+    pub fn breakdown_secs(&self) -> (f64, f64, f64) {
+        (self.moe.mean() / 1e9, self.comm.mean() / 1e9, self.misc.mean() / 1e9)
+    }
+
+    /// Communication share of token time (§5.3: 23%→33% from 2→4 nodes).
+    pub fn comm_fraction(&self) -> f64 {
+        if self.total.mean() == 0.0 {
+            0.0
+        } else {
+            self.comm.mean() / self.total.mean()
+        }
+    }
+}
+
+/// Full run report: prefill + decode phases, plus wall-clock bookends.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub prefill: PhaseMetrics,
+    pub decode: PhaseMetrics,
+    pub warmup_ns: Nanos,
+}
+
+impl RunMetrics {
+    /// Render a Table 3-style row: `gen TP | s/token | MoE Comm Misc`.
+    pub fn decode_row(&self, label: &str) -> Vec<String> {
+        let (moe, comm, misc) = self.decode.breakdown_secs();
+        vec![
+            label.to_string(),
+            format!("{:.1}", self.decode.tokens_per_sec()),
+            format!("{:.3}", self.decode.secs_per_token()),
+            format!("{moe:.3}"),
+            format!("{comm:.3}"),
+            format!("{misc:.3}"),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simclock::NS_PER_MS;
+
+    #[test]
+    fn breakdown_sums() {
+        let b = TokenBreakdown { moe_ns: 10, comm_ns: 20, misc_ns: 30 };
+        assert_eq!(b.total_ns(), 60);
+    }
+
+    #[test]
+    fn phase_aggregates() {
+        let mut p = PhaseMetrics::default();
+        for _ in 0..10 {
+            p.push(TokenBreakdown {
+                moe_ns: 81 * NS_PER_MS,
+                comm_ns: 38 * NS_PER_MS,
+                misc_ns: 47 * NS_PER_MS,
+            });
+        }
+        assert_eq!(p.tokens, 10);
+        // P-L_R-D's Table 3 row: 0.166 s/token -> 6.0 t/s.
+        assert!((p.secs_per_token() - 0.166).abs() < 1e-9);
+        assert!((p.tokens_per_sec() - 6.02).abs() < 0.05);
+        let (moe, comm, misc) = p.breakdown_secs();
+        assert!((moe - 0.081).abs() < 1e-9);
+        assert!((comm - 0.038).abs() < 1e-9);
+        assert!((misc - 0.047).abs() < 1e-9);
+        assert!((p.comm_fraction() - 0.229).abs() < 0.01);
+    }
+
+    #[test]
+    fn empty_phase_is_zero() {
+        let p = PhaseMetrics::default();
+        assert_eq!(p.tokens_per_sec(), 0.0);
+        assert_eq!(p.comm_fraction(), 0.0);
+    }
+
+    #[test]
+    fn decode_row_formats() {
+        let mut r = RunMetrics::default();
+        r.decode.push(TokenBreakdown {
+            moe_ns: 100 * NS_PER_MS,
+            comm_ns: 50 * NS_PER_MS,
+            misc_ns: 50 * NS_PER_MS,
+        });
+        let row = r.decode_row("Naive");
+        assert_eq!(row[0], "Naive");
+        assert_eq!(row[2], "0.200");
+        assert_eq!(row[1], "5.0");
+    }
+}

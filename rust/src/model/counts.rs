@@ -1,0 +1,194 @@
+//! Parameter/FLOP/traffic arithmetic — the paper's Table 1 rows (a)–(e).
+//!
+//! All byte quantities follow the paper's convention of counting parameter
+//! *bytes* (`#Params × precision`); FLOP counts follow its `2 × params`
+//! convention for matmul-dominated compute.
+
+use crate::config::ModelDims;
+
+/// Derived size/compute/traffic quantities for a model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCounts {
+    /// Self-attention parameter bytes, all layers — Table 1 row (b):
+    /// `(D_qkv_hidden × D_embed + D_embed²) × #Layers × precision`.
+    pub sa_param_bytes: u64,
+    /// Self-attention FLOPs per token, all layers — row (c): `2 × #Params_SA`.
+    pub sa_flops: f64,
+    /// One expert's parameter bytes, all layers — row (d):
+    /// `D_embed × D_ffn × 3 × #Layers × precision`.
+    pub expert_param_bytes: u64,
+    /// One expert's FLOPs per token, all layers — row (e):
+    /// `2 × D_embed × D_ffn × 3 × #Layers`.
+    pub expert_flops: f64,
+    /// All-reduce traffic per token, all layers — row (a):
+    /// `D_embed × 4 × #Layers × precision` (4 = bytes of the top-4
+    /// expert outputs exchanged each layer).
+    pub comm_bytes: u64,
+    /// Router parameter bytes, all layers (`D_embed × n_experts`; tiny,
+    /// not in Table 1 but needed by the weight catalog).
+    pub router_param_bytes: u64,
+    /// Embedding + LM-head parameter bytes (`2 × vocab × D_embed`).
+    pub embed_param_bytes: u64,
+}
+
+impl ModelCounts {
+    pub fn of(m: &ModelDims) -> ModelCounts {
+        let p = m.precision_bytes as u64;
+        let layers = m.n_layers as u64;
+        let d_embed = m.d_embed as u64;
+        let d_qkv = m.d_qkv_hidden as u64;
+        let d_ffn = m.d_ffn as u64;
+        let sa_param_bytes = (d_qkv * d_embed + d_embed * d_embed) * layers * p;
+        let expert_param_bytes = d_embed * d_ffn * 3 * layers * p;
+        ModelCounts {
+            sa_param_bytes,
+            // The paper's row (c) convention is `2 × #Params_SA` where
+            // `#Params_SA` is the *byte* figure of row (b) — ≈14e9. We
+            // follow the paper exactly so Eq. 1 / Table 6 reproduce.
+            sa_flops: 2.0 * sa_param_bytes as f64,
+            expert_param_bytes,
+            expert_flops: 2.0 * (d_embed * d_ffn * 3) as f64 * layers as f64,
+            comm_bytes: d_embed * 4 * layers * p,
+            router_param_bytes: d_embed * m.n_experts as u64 * layers * p,
+            embed_param_bytes: 2 * m.vocab_size as u64 * d_embed * p,
+        }
+    }
+
+    /// Bytes of one expert's weights in a *single* layer.
+    pub fn expert_layer_bytes(&self, m: &ModelDims) -> u64 {
+        self.expert_param_bytes / m.n_layers as u64
+    }
+
+    /// Bytes of the attention weights in a single layer.
+    pub fn sa_layer_bytes(&self, m: &ModelDims) -> u64 {
+        self.sa_param_bytes / m.n_layers as u64
+    }
+
+    /// All-reduce payload bytes exchanged per layer per token.
+    pub fn comm_layer_bytes(&self, m: &ModelDims) -> u64 {
+        self.comm_bytes / m.n_layers as u64
+    }
+
+    /// Total parameter count (not bytes) of the whole model.
+    pub fn total_params(&self, m: &ModelDims) -> u64 {
+        let p = m.precision_bytes as u64;
+        (self.sa_param_bytes
+            + self.expert_param_bytes * m.n_experts as u64
+            + self.router_param_bytes
+            + self.embed_param_bytes)
+            / p
+    }
+
+    /// Total model bytes resident when fully loaded.
+    pub fn total_bytes(&self, m: &ModelDims) -> u64 {
+        self.sa_param_bytes
+            + self.expert_param_bytes * m.n_experts as u64
+            + self.router_param_bytes
+            + self.embed_param_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDims;
+
+    /// Table 1 footnotes give the approximate magnitudes; we check the
+    /// exact formulas land within the paper's rounding.
+    #[test]
+    fn table1_row_a_comm_data() {
+        let m = ModelDims::dbrx_132b();
+        let c = ModelCounts::of(&m);
+        assert_eq!(c.comm_bytes, 6144 * 4 * 40 * 2); // 1,966,080
+        assert!((c.comm_bytes as f64 - 2e6).abs() / 2e6 < 0.02);
+    }
+
+    #[test]
+    fn table1_row_b_sa_params() {
+        let m = ModelDims::dbrx_132b();
+        let c = ModelCounts::of(&m);
+        assert_eq!(c.sa_param_bytes, (8192 * 6144 + 6144 * 6144) * 40 * 2);
+        assert!((c.sa_param_bytes as f64 - 7e9).abs() / 7e9 < 0.01);
+    }
+
+    #[test]
+    fn table1_row_c_sa_flops() {
+        let m = ModelDims::dbrx_132b();
+        let c = ModelCounts::of(&m);
+        assert!((c.sa_flops - 14e9).abs() / 14e9 < 0.01);
+    }
+
+    #[test]
+    fn table1_row_d_expert_params() {
+        let m = ModelDims::dbrx_132b();
+        let c = ModelCounts::of(&m);
+        assert_eq!(c.expert_param_bytes, 6144 * 10752 * 3 * 40 * 2);
+        assert!((c.expert_param_bytes as f64 - 16e9).abs() / 16e9 < 0.01);
+        // "Each expert has roughly 7.9 billion parameters" (§3.2).
+        let params_per_expert = c.expert_param_bytes / 2;
+        assert!((params_per_expert as f64 - 7.9e9).abs() / 7.9e9 < 0.01);
+    }
+
+    #[test]
+    fn table1_row_e_expert_flops() {
+        let m = ModelDims::dbrx_132b();
+        let c = ModelCounts::of(&m);
+        assert!((c.expert_flops - 16e9).abs() / 16e9 < 0.01);
+    }
+
+    #[test]
+    fn experts_are_96_percent_of_weights() {
+        // §3.2: "16 experts account for 96% of total weights".
+        let m = ModelDims::dbrx_132b();
+        let c = ModelCounts::of(&m);
+        let frac =
+            (c.expert_param_bytes * 16) as f64 / c.total_bytes(&m) as f64;
+        assert!((frac - 0.96) < 0.02 && frac > 0.93, "expert fraction {frac}");
+    }
+
+    #[test]
+    fn total_params_near_132b() {
+        let m = ModelDims::dbrx_132b();
+        let c = ModelCounts::of(&m);
+        let total = c.total_params(&m) as f64;
+        assert!(
+            (total - 132e9).abs() / 132e9 < 0.03,
+            "total params {:.1}B",
+            total / 1e9
+        );
+    }
+
+    #[test]
+    fn per_layer_slices_sum_back() {
+        let m = ModelDims::dbrx_132b();
+        let c = ModelCounts::of(&m);
+        assert_eq!(c.expert_layer_bytes(&m) * 40, c.expert_param_bytes);
+        assert_eq!(c.sa_layer_bytes(&m) * 40, c.sa_param_bytes);
+        assert_eq!(c.comm_layer_bytes(&m) * 40, c.comm_bytes);
+    }
+
+    /// §4.4: each layer's weights in a two-node system ≈ 1.2 GB — the
+    /// *executed* working set: E[2.65 experts/node/layer] plus attention.
+    #[test]
+    fn layer_working_set_two_nodes() {
+        let m = ModelDims::dbrx_132b();
+        let c = ModelCounts::of(&m);
+        let bytes = (2.65 * c.expert_layer_bytes(&m) as f64) as u64 + c.sa_layer_bytes(&m);
+        assert!(
+            (bytes as f64 - 1.2e9).abs() / 1.2e9 < 0.2,
+            "layer working set {} bytes",
+            bytes
+        );
+    }
+
+    #[test]
+    fn nano_counts_positive_and_consistent() {
+        let m = ModelDims::dbrx_nano();
+        let c = ModelCounts::of(&m);
+        assert!(c.total_bytes(&m) > 0);
+        assert_eq!(
+            c.expert_layer_bytes(&m),
+            (m.d_embed * m.d_ffn * 3 * m.precision_bytes) as u64
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! Model-structure arithmetic and expert placement.
+//!
+//! `counts` reproduces the paper's Table 1 derived rows (a)–(e) from the
+//! architecture dims; `layout` implements expert→node placement including
+//! the overlapped placement that §5.3 uses on 3- and 4-node clusters;
+//! `weights` enumerates the weight arrays a node holds under each packing
+//! strategy (the unit the simulated Metal driver wires and unwires).
+
+pub mod counts;
+pub mod layout;
+pub mod weights;
+
+pub use counts::ModelCounts;
+pub use layout::ExpertLayout;
+pub use weights::{ArrayId, WeightArray, WeightCatalog};

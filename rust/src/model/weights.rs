@@ -1,0 +1,220 @@
+//! Weight-array catalog: the unit of memory the simulated Metal driver
+//! wires and unwires is an *array* (an `mx.array` in the paper's MLX
+//! implementation). The packing strategy decides how weights group into
+//! arrays — that granularity is the whole point of §4.1.
+
+use crate::config::{ModelDims, Packing};
+use crate::model::counts::ModelCounts;
+
+/// Identifier for one loadable weight array on a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ArrayId {
+    /// Unstacked: one of the three FFN matrices (`w1`/`v1`/`w2`) of one
+    /// expert in one layer.
+    ExpertMat { expert: u16, layer: u16, mat: u8 },
+    /// Prestacked: one expert's full `[L, 3, ...]` stack (§4.1).
+    ExpertStack { expert: u16 },
+    /// Attention + norm weights of one layer (always one array per layer;
+    /// attention is not expert-sharded).
+    AttnLayer { layer: u16 },
+    /// Router weights of one layer.
+    RouterLayer { layer: u16 },
+    /// Token embedding + LM head (wired once, always hot).
+    Embed,
+}
+
+/// A weight array with its size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WeightArray {
+    pub id: ArrayId,
+    pub bytes: u64,
+}
+
+/// Catalog of every array a node holds, and lookup helpers to find the
+/// arrays touched by a given (layer, expert) computation.
+#[derive(Debug, Clone)]
+pub struct WeightCatalog {
+    pub packing: Packing,
+    pub n_layers: usize,
+    arrays: Vec<WeightArray>,
+    expert_mat_bytes: u64,
+    expert_stack_bytes: u64,
+}
+
+impl WeightCatalog {
+    /// Build the catalog for a node holding `resident_experts`.
+    pub fn build(
+        model: &ModelDims,
+        resident_experts: &[usize],
+        packing: Packing,
+    ) -> WeightCatalog {
+        let c = ModelCounts::of(model);
+        let expert_layer_bytes = c.expert_layer_bytes(model);
+        let expert_mat_bytes = expert_layer_bytes / 3;
+        let mut arrays = Vec::new();
+        match packing {
+            Packing::Unstacked => {
+                for &e in resident_experts {
+                    for l in 0..model.n_layers {
+                        for m in 0..3u8 {
+                            arrays.push(WeightArray {
+                                id: ArrayId::ExpertMat {
+                                    expert: e as u16,
+                                    layer: l as u16,
+                                    mat: m,
+                                },
+                                bytes: expert_mat_bytes,
+                            });
+                        }
+                    }
+                }
+            }
+            Packing::Prestacked => {
+                for &e in resident_experts {
+                    arrays.push(WeightArray {
+                        id: ArrayId::ExpertStack { expert: e as u16 },
+                        bytes: c.expert_param_bytes,
+                    });
+                }
+            }
+        }
+        for l in 0..model.n_layers {
+            arrays.push(WeightArray {
+                id: ArrayId::AttnLayer { layer: l as u16 },
+                bytes: c.sa_layer_bytes(model),
+            });
+            arrays.push(WeightArray {
+                id: ArrayId::RouterLayer { layer: l as u16 },
+                bytes: c.router_param_bytes / model.n_layers as u64,
+            });
+        }
+        arrays.push(WeightArray { id: ArrayId::Embed, bytes: c.embed_param_bytes });
+        WeightCatalog {
+            packing,
+            n_layers: model.n_layers,
+            arrays,
+            expert_mat_bytes,
+            expert_stack_bytes: c.expert_param_bytes,
+        }
+    }
+
+    pub fn arrays(&self) -> &[WeightArray] {
+        &self.arrays
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.arrays.iter().map(|a| a.bytes).sum()
+    }
+
+    /// The arrays touched when expert `e` computes in layer `l`.
+    /// Unstacked: the three per-layer matrices. Prestacked: the whole
+    /// stack array (one touch keeps the entire expert hot — §4.1's win).
+    pub fn expert_touch(&self, expert: usize, layer: usize) -> Vec<WeightArray> {
+        match self.packing {
+            Packing::Unstacked => (0..3u8)
+                .map(|m| WeightArray {
+                    id: ArrayId::ExpertMat {
+                        expert: expert as u16,
+                        layer: layer as u16,
+                        mat: m,
+                    },
+                    bytes: self.expert_mat_bytes,
+                })
+                .collect(),
+            Packing::Prestacked => vec![WeightArray {
+                id: ArrayId::ExpertStack { expert: expert as u16 },
+                bytes: self.expert_stack_bytes,
+            }],
+        }
+    }
+
+    /// Arrays touched by the non-expert work of layer `l` (attention,
+    /// router; the "Misc" column of Table 3).
+    pub fn misc_touch(&self, layer: usize) -> Vec<WeightArray> {
+        self.arrays
+            .iter()
+            .copied()
+            .filter(|a| {
+                matches!(
+                    a.id,
+                    ArrayId::AttnLayer { layer: l } | ArrayId::RouterLayer { layer: l }
+                    if l as usize == layer
+                )
+            })
+            .collect()
+    }
+
+    /// Bytes the GPU must stream for one expert in one layer (same under
+    /// both packings — packing changes wiring granularity, not compute).
+    pub fn expert_compute_bytes_per_layer(&self) -> u64 {
+        self.expert_mat_bytes * 3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelDims, Packing};
+
+    #[test]
+    fn unstacked_array_count() {
+        let m = ModelDims::dbrx_132b();
+        let cat = WeightCatalog::build(&m, &[0, 1, 2, 3, 4, 5, 6, 7], Packing::Unstacked);
+        // 8 experts × 40 layers × 3 mats + 40 attn + 40 router + 1 embed
+        assert_eq!(cat.arrays().len(), 8 * 40 * 3 + 40 + 40 + 1);
+    }
+
+    #[test]
+    fn prestacked_array_count() {
+        let m = ModelDims::dbrx_132b();
+        let cat = WeightCatalog::build(&m, &[0, 1, 2, 3, 4, 5, 6, 7], Packing::Prestacked);
+        assert_eq!(cat.arrays().len(), 8 + 40 + 40 + 1);
+    }
+
+    #[test]
+    fn total_bytes_independent_of_packing() {
+        let m = ModelDims::dbrx_132b();
+        let resident = [0, 1, 2, 3, 4, 5, 6, 7];
+        let a = WeightCatalog::build(&m, &resident, Packing::Unstacked).total_bytes();
+        let b = WeightCatalog::build(&m, &resident, Packing::Prestacked).total_bytes();
+        assert_eq!(a, b, "packing must not change resident bytes");
+        // 8 experts ≈ 127 GB + 7 GB SA — fits the 192 GB node.
+        assert!(a < 192 * 1024 * 1024 * 1024);
+    }
+
+    #[test]
+    fn expert_touch_granularity() {
+        let m = ModelDims::dbrx_132b();
+        let u = WeightCatalog::build(&m, &[3], Packing::Unstacked);
+        let p = WeightCatalog::build(&m, &[3], Packing::Prestacked);
+        let ut = u.expert_touch(3, 7);
+        let pt = p.expert_touch(3, 7);
+        assert_eq!(ut.len(), 3);
+        assert_eq!(pt.len(), 1);
+        // Unstacked touches only the layer slice; prestacked touches the
+        // whole 15.9 GB stack.
+        let ub: u64 = ut.iter().map(|a| a.bytes).sum();
+        assert_eq!(ub, u.expert_compute_bytes_per_layer());
+        assert_eq!(pt[0].bytes, ModelCounts::of(&m).expert_param_bytes);
+    }
+
+    #[test]
+    fn misc_touch_is_per_layer() {
+        let m = ModelDims::dbrx_132b();
+        let cat = WeightCatalog::build(&m, &[0], Packing::Prestacked);
+        let t = cat.misc_touch(5);
+        assert_eq!(t.len(), 2);
+        assert!(t.iter().all(|a| matches!(
+            a.id,
+            ArrayId::AttnLayer { layer: 5 } | ArrayId::RouterLayer { layer: 5 }
+        )));
+    }
+
+    #[test]
+    fn compute_bytes_match_counts() {
+        let m = ModelDims::dbrx_132b();
+        let cat = WeightCatalog::build(&m, &[0], Packing::Unstacked);
+        let c = ModelCounts::of(&m);
+        assert_eq!(cat.expert_compute_bytes_per_layer(), c.expert_layer_bytes(&m));
+    }
+}

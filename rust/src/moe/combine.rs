@@ -1,0 +1,102 @@
+//! Weighted combine of expert outputs (the all-reduce payload of Fig. 7).
+//!
+//! Each node contributes `Σ_e weight_e × y_e` over its *selected* runs
+//! (padding runs are zeroed — §4.2); the all-reduce sums the partials.
+//! The live cluster runs this through the L2 `combine` artifact on PJRT;
+//! this host-side version is the reference the integration tests compare
+//! against, and what the envoy uses for its reduction step.
+
+use crate::moe::balance::NodeWork;
+
+/// One node's partial sum: `Σ weight × expert_output`, zeroing padding.
+pub fn node_partial(work: &NodeWork, outputs: &[Vec<f32>], d: usize) -> Vec<f32> {
+    assert_eq!(work.runs.len(), outputs.len(), "one output per run");
+    let mut acc = vec![0.0f32; d];
+    for (run, y) in work.runs.iter().zip(outputs) {
+        assert_eq!(y.len(), d, "output width mismatch");
+        if run.is_padding {
+            continue; // zeroed response (busy-full / keep-warm)
+        }
+        for (a, &v) in acc.iter_mut().zip(y) {
+            *a += run.weight * v;
+        }
+    }
+    acc
+}
+
+/// All-reduce: elementwise sum of per-node partials.
+pub fn all_reduce(partials: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!partials.is_empty());
+    let d = partials[0].len();
+    let mut acc = vec![0.0f32; d];
+    for p in partials {
+        assert_eq!(p.len(), d);
+        for (a, &v) in acc.iter_mut().zip(p) {
+            *a += v;
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::balance::ExpertRun;
+
+    fn run(e: usize, w: f32, pad: bool) -> ExpertRun {
+        ExpertRun { expert: e, weight: w, is_padding: pad }
+    }
+
+    #[test]
+    fn partial_weights_and_zeroes() {
+        let work = NodeWork {
+            runs: vec![run(0, 0.75, false), run(1, 0.0, true), run(2, 0.25, false)],
+        };
+        let outputs = vec![vec![1.0, 2.0], vec![100.0, 100.0], vec![4.0, 8.0]];
+        let p = node_partial(&work, &outputs, 2);
+        // 0.75*[1,2] + 0 (padding) + 0.25*[4,8] = [1.75, 3.5]
+        assert_eq!(p, vec![1.75, 3.5]);
+    }
+
+    #[test]
+    fn all_reduce_sums() {
+        let r = all_reduce(&[vec![1.0, 2.0], vec![3.0, -2.0]]);
+        assert_eq!(r, vec![4.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_node_contributes_zero() {
+        let work = NodeWork { runs: vec![] };
+        let p = node_partial(&work, &[], 3);
+        assert_eq!(p, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn distributed_equals_centralized() {
+        // Splitting the weighted sum across nodes then all-reducing must
+        // equal the single-node weighted sum (the correctness claim of
+        // the decentralized design, §4.3).
+        let d = 8;
+        let ys: Vec<Vec<f32>> = (0..4)
+            .map(|i| (0..d).map(|j| (i * d + j) as f32 * 0.5 - 3.0).collect())
+            .collect();
+        let ws = [0.4f32, 0.3, 0.2, 0.1];
+
+        // Centralized: one node holds everything.
+        let central = NodeWork {
+            runs: (0..4).map(|i| run(i, ws[i], false)).collect(),
+        };
+        let want = node_partial(&central, &ys, d);
+
+        // Distributed: experts 0,1 on node A; 2,3 on node B.
+        let a = NodeWork { runs: vec![run(0, ws[0], false), run(1, ws[1], false)] };
+        let b = NodeWork { runs: vec![run(2, ws[2], false), run(3, ws[3], false)] };
+        let got = all_reduce(&[
+            node_partial(&a, &ys[..2].to_vec(), d),
+            node_partial(&b, &ys[2..].to_vec(), d),
+        ]);
+        for (w, g) in want.iter().zip(&got) {
+            assert!((w - g).abs() < 1e-5, "{want:?} vs {got:?}");
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Least-recently-used expert tracking (§4.2, router-aided dynamic
+//! loading): "the spare computation quota goes to the least recently used
+//! (LRU) experts", keeping every resident expert touched before the
+//! driver unwires it.
+
+/// Tracks last-use ticks for the experts resident on one node.
+#[derive(Debug, Clone)]
+pub struct LruTracker {
+    /// (expert id, last-use tick); tick 0 = never used.
+    entries: Vec<(usize, u64)>,
+    tick: u64,
+}
+
+impl LruTracker {
+    pub fn new(resident: &[usize]) -> LruTracker {
+        LruTracker {
+            entries: resident.iter().map(|&e| (e, 0)).collect(),
+            tick: 0,
+        }
+    }
+
+    /// Record that `expert` computed now. Unknown experts are ignored
+    /// (they are not resident here).
+    pub fn touch(&mut self, expert: usize) {
+        self.tick += 1;
+        if let Some(en) = self.entries.iter_mut().find(|(e, _)| *e == expert) {
+            en.1 = self.tick;
+        }
+    }
+
+    pub fn touch_all(&mut self, experts: &[usize]) {
+        for &e in experts {
+            self.touch(e);
+        }
+    }
+
+    /// The `k` least-recently-used resident experts, excluding `exclude`.
+    /// Ties (e.g. never-used) break by expert id for determinism.
+    pub fn least_recent(&self, k: usize, exclude: &[usize]) -> Vec<usize> {
+        let mut cands: Vec<(usize, u64)> = self
+            .entries
+            .iter()
+            .filter(|(e, _)| !exclude.contains(e))
+            .cloned()
+            .collect();
+        cands.sort_by_key(|&(e, t)| (t, e));
+        cands.truncate(k);
+        cands.into_iter().map(|(e, _)| e).collect()
+    }
+
+    /// Ticks since `expert` was last touched (`None` if not resident).
+    pub fn staleness(&self, expert: usize) -> Option<u64> {
+        self.entries
+            .iter()
+            .find(|(e, _)| *e == expert)
+            .map(|&(_, t)| self.tick.saturating_sub(t))
+    }
+
+    pub fn resident(&self) -> Vec<usize> {
+        self.entries.iter().map(|&(e, _)| e).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_used_come_first_by_id() {
+        let t = LruTracker::new(&[5, 3, 9]);
+        assert_eq!(t.least_recent(2, &[]), vec![3, 5]);
+    }
+
+    #[test]
+    fn touch_moves_to_back() {
+        let mut t = LruTracker::new(&[1, 2, 3]);
+        t.touch(1);
+        t.touch(2);
+        assert_eq!(t.least_recent(1, &[]), vec![3]);
+        t.touch(3);
+        assert_eq!(t.least_recent(1, &[]), vec![1]);
+    }
+
+    #[test]
+    fn exclude_is_honoured() {
+        let mut t = LruTracker::new(&[1, 2, 3]);
+        t.touch(1);
+        // 2 and 3 never used; exclude 2 -> 3 then 1.
+        assert_eq!(t.least_recent(2, &[2]), vec![3, 1]);
+    }
+
+    #[test]
+    fn foreign_experts_ignored() {
+        let mut t = LruTracker::new(&[1, 2]);
+        t.touch(99);
+        assert_eq!(t.staleness(99), None);
+        assert_eq!(t.resident(), vec![1, 2]);
+    }
+
+    #[test]
+    fn staleness_counts_ticks() {
+        let mut t = LruTracker::new(&[1, 2]);
+        t.touch(1);
+        t.touch(2);
+        t.touch(2);
+        assert_eq!(t.staleness(1), Some(2));
+        assert_eq!(t.staleness(2), Some(0));
+    }
+
+    #[test]
+    fn k_larger_than_pool_returns_all() {
+        let t = LruTracker::new(&[4, 7]);
+        assert_eq!(t.least_recent(10, &[]).len(), 2);
+    }
+
+    #[test]
+    fn prop_lru_padding_bounds_staleness() {
+        // The §4.2 guarantee: if every step pads with the LRU experts,
+        // no resident expert's staleness exceeds pool_size / pad steps.
+        crate::util::prop::forall("lru staleness bound", 64, |g| {
+            let pool: Vec<usize> = (0..8).collect();
+            let mut t = LruTracker::new(&pool);
+            let pad = 1 + g.usize_in(0..3);
+            let steps = 64;
+            for _ in 0..steps {
+                let lru = t.least_recent(pad, &[]);
+                t.touch_all(&lru);
+            }
+            // After warm-up rounds, max staleness (in touches) is at most
+            // ceil(8/pad) * pad (a full rotation).
+            pool.iter().all(|&e| {
+                t.staleness(e).unwrap() <= (8usize.div_ceil(pad) * pad) as u64
+            })
+        });
+    }
+}

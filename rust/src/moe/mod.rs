@@ -1,0 +1,17 @@
+//! Mixture-of-Experts coordination: router draws, expert→node assignment,
+//! the three load-balancing strategies of §4.2, LRU expert tracking, and
+//! the weighted combine.
+//!
+//! This module is pure logic shared verbatim by the virtual-time DES
+//! (`cluster::sim`) and the live threaded cluster (`cluster::live`) — the
+//! paper's contribution is exactly this coordination layer, so it must be
+//! identical in both execution modes.
+
+pub mod balance;
+pub mod combine;
+pub mod lru;
+pub mod router;
+
+pub use balance::{ExpertRun, LayerPlan, NodeWork, Planner};
+pub use lru::LruTracker;
+pub use router::{RouterDraw, SyntheticRouter};

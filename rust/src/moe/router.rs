@@ -1,0 +1,193 @@
+//! Router selections.
+//!
+//! The real DBRX router is a learned linear layer; its selections over a
+//! generic token stream are statistically close to uniform top-4-of-16
+//! (each expert is trained to receive balanced load). The DES uses a
+//! seeded synthetic router; the live cluster uses the actual router
+//! output from the L2 artifact (`attn_router` computation), and
+//! `RouterDraw` is the common carrier for both.
+
+use crate::util::rng::Rng;
+
+/// One layer's routing decision for one token.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouterDraw {
+    /// Selected expert ids, descending router weight, length = top_k.
+    pub selected: Vec<usize>,
+    /// Softmax weights over the selected experts (sum to 1).
+    pub weights: Vec<f32>,
+}
+
+impl RouterDraw {
+    /// Structural invariants shared by synthetic and real draws.
+    pub fn check(&self, n_experts: usize, top_k: usize) -> Result<(), String> {
+        if self.selected.len() != top_k {
+            return Err(format!("selected {} != top_k {top_k}", self.selected.len()));
+        }
+        if self.weights.len() != top_k {
+            return Err("weights length mismatch".into());
+        }
+        let mut sorted = self.selected.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != top_k {
+            return Err(format!("duplicate experts in {:?}", self.selected));
+        }
+        if self.selected.iter().any(|&e| e >= n_experts) {
+            return Err("expert id out of range".into());
+        }
+        let sum: f32 = self.weights.iter().sum();
+        if !(0.99..=1.01).contains(&sum) {
+            return Err(format!("weights sum {sum}"));
+        }
+        if self.weights.iter().any(|&w| w < 0.0) {
+            return Err("negative weight".into());
+        }
+        Ok(())
+    }
+}
+
+/// Seeded synthetic router. `skew = 0` draws uniformly; larger values
+/// bias selection toward low-numbered experts (Zipf-ish) for hot-expert
+/// ablations.
+#[derive(Debug, Clone)]
+pub struct SyntheticRouter {
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub skew: f64,
+    rng: Rng,
+}
+
+impl SyntheticRouter {
+    pub fn new(n_experts: usize, top_k: usize, seed: u64) -> SyntheticRouter {
+        SyntheticRouter { n_experts, top_k, skew: 0.0, rng: Rng::new(seed) }
+    }
+
+    pub fn with_skew(mut self, skew: f64) -> SyntheticRouter {
+        self.skew = skew;
+        self
+    }
+
+    /// Draw one layer's selection.
+    pub fn draw(&mut self) -> RouterDraw {
+        let selected = if self.skew <= 0.0 {
+            self.rng.sample_distinct(self.n_experts, self.top_k)
+        } else {
+            self.draw_skewed()
+        };
+        // Router weights: softmax over per-expert logits ~ N(0,1).
+        let logits: Vec<f64> = (0..self.top_k).map(|_| self.rng.normal()).collect();
+        let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = logits.iter().map(|l| (l - m).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let weights = exps.iter().map(|e| (e / z) as f32).collect();
+        RouterDraw { selected, weights }
+    }
+
+    /// Zipf-weighted distinct sampling for the skewed ablation.
+    fn draw_skewed(&mut self) -> Vec<usize> {
+        let w: Vec<f64> = (0..self.n_experts)
+            .map(|e| 1.0 / ((e + 1) as f64).powf(self.skew))
+            .collect();
+        let mut chosen = Vec::with_capacity(self.top_k);
+        let mut mask = vec![false; self.n_experts];
+        while chosen.len() < self.top_k {
+            let total: f64 = w
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !mask[*i])
+                .map(|(_, x)| x)
+                .sum();
+            let mut t = self.rng.f64() * total;
+            for (i, &wi) in w.iter().enumerate() {
+                if mask[i] {
+                    continue;
+                }
+                t -= wi;
+                if t <= 0.0 {
+                    mask[i] = true;
+                    chosen.push(i);
+                    break;
+                }
+            }
+        }
+        chosen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draw_is_valid() {
+        let mut r = SyntheticRouter::new(16, 4, 1);
+        for _ in 0..1000 {
+            r.draw().check(16, 4).unwrap();
+        }
+    }
+
+    #[test]
+    fn uniform_router_is_balanced() {
+        let mut r = SyntheticRouter::new(16, 4, 2);
+        let mut counts = [0usize; 16];
+        let n = 20_000;
+        for _ in 0..n {
+            for e in r.draw().selected {
+                counts[e] += 1;
+            }
+        }
+        let expect = n * 4 / 16;
+        for (e, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect as f64).abs() < expect as f64 * 0.1,
+                "expert {e}: {c} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn skewed_router_prefers_low_experts() {
+        let mut r = SyntheticRouter::new(16, 4, 3).with_skew(1.5);
+        let mut counts = [0usize; 16];
+        for _ in 0..5_000 {
+            let d = r.draw();
+            d.check(16, 4).unwrap();
+            for e in d.selected {
+                counts[e] += 1;
+            }
+        }
+        assert!(counts[0] > counts[15] * 3, "{counts:?}");
+    }
+
+    #[test]
+    fn check_rejects_malformed_draws() {
+        let bad_dup = RouterDraw { selected: vec![1, 1, 2, 3], weights: vec![0.25; 4] };
+        assert!(bad_dup.check(16, 4).is_err());
+        let bad_range = RouterDraw { selected: vec![1, 2, 3, 99], weights: vec![0.25; 4] };
+        assert!(bad_range.check(16, 4).is_err());
+        let bad_sum = RouterDraw { selected: vec![0, 1, 2, 3], weights: vec![0.5; 4] };
+        assert!(bad_sum.check(16, 4).is_err());
+        let bad_len = RouterDraw { selected: vec![0, 1, 2], weights: vec![0.33; 3] };
+        assert!(bad_len.check(16, 4).is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = SyntheticRouter::new(16, 4, 42);
+        let mut b = SyntheticRouter::new(16, 4, 42);
+        for _ in 0..50 {
+            assert_eq!(a.draw(), b.draw());
+        }
+    }
+
+    #[test]
+    fn prop_weights_descend_is_not_required_but_sum_holds() {
+        crate::util::prop::forall("router weights sum to 1", 128, |g| {
+            let seed = g.u64_in(0..1 << 32);
+            let mut r = SyntheticRouter::new(16, 4, seed);
+            let d = r.draw();
+            d.check(16, 4).is_ok()
+        });
+    }
+}

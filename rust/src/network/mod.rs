@@ -1,0 +1,118 @@
+//! Simulated interconnect (§3.1's key finding: at ~24.5 kB per exchange,
+//! *latency* dominates *bandwidth*, so the model is LogP-flavoured:
+//! `time(msg) = transport_latency + bytes / bandwidth`).
+//!
+//! Two pieces:
+//! - `cost`: pure arithmetic over a `NetworkProfile` (used by the DES and
+//!   the Eq. 1 performance model);
+//! - `transport`: a real message-passing fabric over in-process channels
+//!   for the threaded cluster, optionally injecting the profile's latency
+//!   into live runs (real mode) or charging it to the virtual clock.
+
+pub mod transport;
+
+use crate::config::{NetworkProfile, Topology};
+use crate::simclock::Nanos;
+
+/// Time for one point-to-point message of `bytes`.
+pub fn message_ns(profile: &NetworkProfile, bytes: u64) -> Nanos {
+    profile.latency_ns + (bytes as f64 / profile.bandwidth * 1e9) as Nanos
+}
+
+/// Extra per-message software overhead when the gRPC dispatcher runs
+/// inside the GPU process (no envoy, §4.3): serialization competes with
+/// compute. The envoy isolates this, so decentralized topology pays ≈0.
+/// Calibrated against Table 3: P-L_B comm ≈ 0.168 s over 80 messages
+/// (≈2.1 ms each = 1 ms transport + ≈1.1 ms in-process penalty).
+pub fn in_process_penalty_ns(topology: Topology) -> Nanos {
+    match topology {
+        Topology::Centralized => 1_100_000,
+        Topology::Decentralized => 0,
+    }
+}
+
+/// Communications performed per decoder layer per token (§4.3): the
+/// centralized fork-join sends router outputs out and expert outputs
+/// back (2); the decentralized design keeps only the all-reduce (1).
+pub fn comms_per_layer(topology: Topology) -> u32 {
+    match topology {
+        Topology::Centralized => 2,
+        Topology::Decentralized => 1,
+    }
+}
+
+/// Time for one *communication phase* of a layer: all peers exchange in
+/// parallel, so the phase costs one message (latency + payload) plus the
+/// in-process penalty where applicable.
+pub fn phase_ns(profile: &NetworkProfile, topology: Topology, payload_bytes: u64) -> Nanos {
+    message_ns(profile, payload_bytes) + in_process_penalty_ns(topology)
+}
+
+/// Per-layer communication time for a token (phases × per-phase cost).
+pub fn layer_comm_ns(
+    profile: &NetworkProfile,
+    topology: Topology,
+    payload_bytes: u64,
+) -> Nanos {
+    comms_per_layer(topology) as u64 * phase_ns(profile, topology, payload_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkProfile;
+    use crate::simclock::NS_PER_MS;
+
+    #[test]
+    fn latency_dominates_at_paper_payload() {
+        // §3.1: ~24,576 bytes exchanged; on 10 GbE the transfer is ~20 µs
+        // versus 1 ms latency.
+        let p = NetworkProfile::tcp_10gbe();
+        let t = message_ns(&p, 24_576);
+        let transfer = t - p.latency_ns;
+        assert!(transfer < p.latency_ns / 10, "transfer {transfer} ns");
+    }
+
+    #[test]
+    fn bandwidth_term_matters_for_big_payloads() {
+        let p = NetworkProfile::tcp_10gbe();
+        // 2 MB (the full per-token comm data) ≈ 1.6 ms of transfer.
+        let t = message_ns(&p, 2_000_000);
+        assert!(t > 2 * NS_PER_MS && t < 3 * NS_PER_MS, "{t} ns");
+    }
+
+    #[test]
+    fn topology_comm_counts() {
+        assert_eq!(comms_per_layer(Topology::Centralized), 2);
+        assert_eq!(comms_per_layer(Topology::Decentralized), 1);
+    }
+
+    #[test]
+    fn centralized_pays_in_process_penalty() {
+        let p = NetworkProfile::tcp_10gbe();
+        let c = phase_ns(&p, Topology::Centralized, 24_576);
+        let d = phase_ns(&p, Topology::Decentralized, 24_576);
+        assert!(c > d);
+        // Table 3 calibration: centralized phase ≈ 2.1 ms.
+        assert!((c as f64 / NS_PER_MS as f64 - 2.1).abs() < 0.2, "{c} ns");
+    }
+
+    #[test]
+    fn layer_comm_matches_table3_plrd() {
+        // P-L_R-D: 1 phase/layer ≈ 0.95 ms ⇒ 40 layers ≈ 0.038 s ✓
+        let p = NetworkProfile::tcp_10gbe();
+        let per_layer = layer_comm_ns(&p, Topology::Decentralized, 24_576);
+        let per_token = 40 * per_layer;
+        let secs = per_token as f64 / 1e9;
+        assert!((secs - 0.040).abs() < 0.005, "{secs} s");
+    }
+
+    #[test]
+    fn rdma_profiles_cut_latency_by_orders_of_magnitude() {
+        let tcp = message_ns(&NetworkProfile::tcp_10gbe(), 24_576);
+        let roce = message_ns(&NetworkProfile::rocev2(), 24_576);
+        let ib = message_ns(&NetworkProfile::infiniband(), 24_576);
+        assert!(tcp > 50 * roce, "tcp {tcp} roce {roce}");
+        assert!(roce > ib);
+    }
+}

@@ -1,0 +1,291 @@
+//! In-process message fabric for the threaded (live) cluster.
+//!
+//! Each node owns an `Endpoint`; endpoints are fully connected via mpsc
+//! channels (the "10 GbE switch"). A `NetworkProfile` can be attached to
+//! inject its transport latency + serialization time into deliveries, so
+//! live runs on localhost exhibit the paper's communication behaviour.
+//! Payloads are raw little-endian bytes; helpers convert `f32` slices
+//! (the expert outputs exchanged in the all-reduce).
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use crate::config::NetworkProfile;
+use crate::network::message_ns;
+
+/// A framed message between nodes.
+#[derive(Debug, Clone)]
+pub struct Envelope {
+    pub from: usize,
+    pub to: usize,
+    /// Application tag: (phase, layer, token) packed by the caller.
+    pub tag: u64,
+    pub payload: Vec<u8>,
+    deliver_at: Instant,
+}
+
+/// Errors from the fabric.
+#[derive(Debug, thiserror::Error)]
+pub enum NetError {
+    #[error("send to node {0} failed: peer disconnected")]
+    Disconnected(usize),
+    #[error("recv timed out after {0:?}")]
+    Timeout(Duration),
+    #[error("fabric closed")]
+    Closed,
+}
+
+/// One node's attachment to the fabric.
+pub struct Endpoint {
+    pub node: usize,
+    pub n_nodes: usize,
+    rx: Receiver<Envelope>,
+    txs: Vec<Sender<Envelope>>,
+    profile: Option<NetworkProfile>,
+    /// Messages that arrived while waiting for a different tag.
+    stash: Vec<Envelope>,
+    /// Delivery stats.
+    pub sent_msgs: u64,
+    pub sent_bytes: u64,
+    pub recv_msgs: u64,
+}
+
+/// Build a fully-connected fabric of `n` endpoints. `profile = None`
+/// delivers instantly (for unit tests); `Some` injects latency.
+pub fn fabric(n: usize, profile: Option<NetworkProfile>) -> Vec<Endpoint> {
+    let mut txs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel::<Envelope>();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    rxs.into_iter()
+        .enumerate()
+        .map(|(node, rx)| Endpoint {
+            node,
+            n_nodes: n,
+            rx,
+            txs: txs.clone(),
+            profile: profile.clone(),
+            stash: Vec::new(),
+            sent_msgs: 0,
+            sent_bytes: 0,
+            recv_msgs: 0,
+        })
+        .collect()
+}
+
+impl Endpoint {
+    /// Send `payload` to `to`. The injected network delay is attached as
+    /// an earliest-delivery time the receiver honours.
+    pub fn send(&mut self, to: usize, tag: u64, payload: Vec<u8>) -> Result<(), NetError> {
+        let delay = self
+            .profile
+            .as_ref()
+            .map(|p| Duration::from_nanos(message_ns(p, payload.len() as u64)))
+            .unwrap_or(Duration::ZERO);
+        self.sent_msgs += 1;
+        self.sent_bytes += payload.len() as u64;
+        let env = Envelope {
+            from: self.node,
+            to,
+            tag,
+            payload,
+            deliver_at: Instant::now() + delay,
+        };
+        self.txs[to].send(env).map_err(|_| NetError::Disconnected(to))
+    }
+
+    /// Broadcast to every other node.
+    pub fn broadcast(&mut self, tag: u64, payload: &[u8]) -> Result<(), NetError> {
+        for to in 0..self.n_nodes {
+            if to != self.node {
+                self.send(to, tag, payload.to_vec())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Receive the next message with `tag`, honouring delivery times.
+    /// Messages with other tags are stashed for later calls.
+    pub fn recv_tag(&mut self, tag: u64, timeout: Duration) -> Result<Envelope, NetError> {
+        // Check the stash first.
+        if let Some(i) = self.stash.iter().position(|e| e.tag == tag) {
+            let env = self.stash.remove(i);
+            wait_until(env.deliver_at);
+            self.recv_msgs += 1;
+            return Ok(env);
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline
+                .checked_duration_since(Instant::now())
+                .ok_or(NetError::Timeout(timeout))?;
+            match self.rx.recv_timeout(remaining) {
+                Ok(env) if env.tag == tag => {
+                    wait_until(env.deliver_at);
+                    self.recv_msgs += 1;
+                    return Ok(env);
+                }
+                Ok(env) => self.stash.push(env),
+                Err(RecvTimeoutError::Timeout) => return Err(NetError::Timeout(timeout)),
+                Err(RecvTimeoutError::Disconnected) => return Err(NetError::Closed),
+            }
+        }
+    }
+
+    /// Gather one `tag` message from every other node.
+    pub fn gather(
+        &mut self,
+        tag: u64,
+        timeout: Duration,
+    ) -> Result<Vec<Envelope>, NetError> {
+        let mut out = Vec::with_capacity(self.n_nodes - 1);
+        let mut seen = vec![false; self.n_nodes];
+        while out.len() < self.n_nodes - 1 {
+            let env = self.recv_tag(tag, timeout)?;
+            if !seen[env.from] {
+                seen[env.from] = true;
+                out.push(env);
+            }
+        }
+        out.sort_by_key(|e| e.from);
+        Ok(out)
+    }
+}
+
+fn wait_until(t: Instant) {
+    let now = Instant::now();
+    if t > now {
+        std::thread::sleep(t - now);
+    }
+}
+
+/// Pack an application tag from (phase, layer, token) — 8/24/32 bits.
+pub fn tag(phase: u8, layer: u32, token: u32) -> u64 {
+    ((phase as u64) << 56) | ((layer as u64 & 0xFF_FFFF) << 32) | token as u64
+}
+
+/// f32 slice → little-endian bytes.
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Little-endian bytes → f32 vec. Panics on misaligned length.
+pub fn bytes_to_f32s(bytes: &[u8]) -> Vec<f32> {
+    assert_eq!(bytes.len() % 4, 0, "payload not f32-aligned");
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    const T: Duration = Duration::from_secs(5);
+
+    #[test]
+    fn point_to_point_roundtrip() {
+        let mut eps = fabric(2, None);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, tag(1, 0, 0), f32s_to_bytes(&[1.0, 2.5])).unwrap();
+        let env = b.recv_tag(tag(1, 0, 0), T).unwrap();
+        assert_eq!(env.from, 0);
+        assert_eq!(bytes_to_f32s(&env.payload), vec![1.0, 2.5]);
+    }
+
+    #[test]
+    fn tags_demultiplex_out_of_order() {
+        let mut eps = fabric(2, None);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, tag(1, 7, 0), vec![7]).unwrap();
+        a.send(1, tag(1, 8, 0), vec![8]).unwrap();
+        // Ask for layer 8 first; layer 7 must be stashed, not lost.
+        assert_eq!(b.recv_tag(tag(1, 8, 0), T).unwrap().payload, vec![8]);
+        assert_eq!(b.recv_tag(tag(1, 7, 0), T).unwrap().payload, vec![7]);
+    }
+
+    #[test]
+    fn gather_collects_all_peers() {
+        let eps = fabric(4, None);
+        let mut handles = Vec::new();
+        let mut it = eps.into_iter();
+        let mut leader = it.next().unwrap();
+        for mut ep in it {
+            handles.push(std::thread::spawn(move || {
+                ep.send(0, tag(2, 3, 1), vec![ep.node as u8]).unwrap();
+            }));
+        }
+        let got = leader.gather(tag(2, 3, 1), T).unwrap();
+        assert_eq!(got.len(), 3);
+        assert_eq!(
+            got.iter().map(|e| e.from).collect::<Vec<_>>(),
+            vec![1, 2, 3]
+        );
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn broadcast_reaches_everyone() {
+        let mut eps = fabric(3, None);
+        let mut c = eps.pop().unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.broadcast(tag(3, 0, 0), &[42]).unwrap();
+        assert_eq!(b.recv_tag(tag(3, 0, 0), T).unwrap().payload, vec![42]);
+        assert_eq!(c.recv_tag(tag(3, 0, 0), T).unwrap().payload, vec![42]);
+        assert_eq!(a.sent_msgs, 2);
+    }
+
+    #[test]
+    fn injected_latency_delays_delivery() {
+        let profile = NetworkProfile {
+            name: "test-5ms".into(),
+            latency_ns: 5_000_000,
+            bandwidth: 1e12,
+            nic_price_usd: 0.0,
+        };
+        let mut eps = fabric(2, Some(profile));
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let t0 = Instant::now();
+        a.send(1, 1, vec![0; 64]).unwrap();
+        b.recv_tag(1, T).unwrap();
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(5), "delivered in {dt:?}");
+    }
+
+    #[test]
+    fn timeout_fires() {
+        let mut eps = fabric(2, None);
+        let mut b = eps.pop().unwrap();
+        let err = b.recv_tag(1, Duration::from_millis(20)).unwrap_err();
+        matches!(err, NetError::Timeout(_));
+    }
+
+    #[test]
+    fn f32_codec_roundtrip() {
+        let xs = vec![0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&xs)), xs);
+    }
+
+    #[test]
+    fn tag_packing_is_injective_across_fields() {
+        let a = tag(1, 2, 3);
+        assert_ne!(a, tag(2, 2, 3));
+        assert_ne!(a, tag(1, 3, 3));
+        assert_ne!(a, tag(1, 2, 4));
+    }
+}

@@ -1,0 +1,310 @@
+//! Algorithms 1 & 2 of the paper: the weight-packing micro-benchmark that
+//! exposes driver processing (Figs. 4–5).
+//!
+//! The benchmark emulates one DBRX expert during token generation: 40
+//! "layers", each three `[1,n] × [n,n]` matmuls, with an added sleep
+//! `T_wait` after every layer. Weights are packed either as 120 separate
+//! matrices (*unstacking*) or one 4-D stack (*prestacking*). Run over the
+//! simulated driver, the unstacked variant starts re-paying wiring once
+//! `T_wait` exceeds ≈8 ms and the prestacked one only past ≈512 ms —
+//! Fig. 4's two curves.
+
+use crate::config::Packing;
+use crate::driver::{DriverParams, DriverSim, WireEvent};
+use crate::model::weights::{ArrayId, WeightArray};
+use crate::simclock::{Nanos, NS_PER_MS};
+
+/// Benchmark parameters (paper defaults from Algorithms 1–2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackingBenchConfig {
+    pub n_layers: usize,
+    /// Matrices per layer (`N_mpl`).
+    pub n_mpl: usize,
+    /// Square matrix dimension (`n`).
+    pub n: usize,
+    /// Bytes per element (MLX default f32 = 4).
+    pub elem_bytes: usize,
+    /// Samples averaged per `T_wait` point (`N_samples`).
+    pub n_samples: usize,
+    /// Added waits to sweep, in milliseconds (0, 1, 2, 4 … 2048).
+    pub t_waits_ms: Vec<u64>,
+    /// Memory bandwidth × efficiency used for the matmul compute charge.
+    pub effective_mem_bw: f64,
+}
+
+impl Default for PackingBenchConfig {
+    fn default() -> Self {
+        let mut t_waits_ms = vec![0u64];
+        t_waits_ms.extend((0..=11).map(|p| 1u64 << p)); // 1..2048
+        PackingBenchConfig {
+            n_layers: 40,
+            n_mpl: 3,
+            n: 8192,
+            elem_bytes: 4,
+            n_samples: 5,
+            t_waits_ms,
+            effective_mem_bw: 800e9 * 0.66,
+        }
+    }
+}
+
+impl PackingBenchConfig {
+    /// Bytes of one `n × n` matrix.
+    pub fn matrix_bytes(&self) -> u64 {
+        (self.n * self.n * self.elem_bytes) as u64
+    }
+
+    /// Bytes of the whole prestacked `[L, N_mpl, n, n]` tensor.
+    pub fn stack_bytes(&self) -> u64 {
+        self.matrix_bytes() * (self.n_layers * self.n_mpl) as u64
+    }
+
+    /// GPU time for one layer's three vector-matrix products (memory
+    /// bound: the `[n,n]` operand stream dominates).
+    pub fn layer_compute_ns(&self) -> Nanos {
+        let bytes = self.matrix_bytes() as f64 * self.n_mpl as f64;
+        (bytes / self.effective_mem_bw * 1e9) as Nanos
+    }
+
+    /// The weight arrays under a packing strategy.
+    pub fn arrays(&self, packing: Packing) -> Vec<WeightArray> {
+        match packing {
+            Packing::Unstacked => {
+                let mut v = Vec::with_capacity(self.n_layers * self.n_mpl);
+                for l in 0..self.n_layers {
+                    for m in 0..self.n_mpl {
+                        v.push(WeightArray {
+                            id: ArrayId::ExpertMat { expert: 0, layer: l as u16, mat: m as u8 },
+                            bytes: self.matrix_bytes(),
+                        });
+                    }
+                }
+                v
+            }
+            Packing::Prestacked => vec![WeightArray {
+                id: ArrayId::ExpertStack { expert: 0 },
+                bytes: self.stack_bytes(),
+            }],
+        }
+    }
+
+    /// Arrays touched by layer `l`'s matmuls.
+    pub fn layer_touch(&self, packing: Packing, layer: usize) -> Vec<WeightArray> {
+        match packing {
+            Packing::Unstacked => (0..self.n_mpl)
+                .map(|m| WeightArray {
+                    id: ArrayId::ExpertMat { expert: 0, layer: layer as u16, mat: m as u8 },
+                    bytes: self.matrix_bytes(),
+                })
+                .collect(),
+            Packing::Prestacked => vec![WeightArray {
+                id: ArrayId::ExpertStack { expert: 0 },
+                bytes: self.stack_bytes(),
+            }],
+        }
+    }
+}
+
+/// One Fig. 4 data point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackingPoint {
+    pub packing: Packing,
+    pub t_wait_ms: u64,
+    /// Average per-sample time with waits subtracted (Algorithm 2 l.26),
+    /// in seconds.
+    pub per_sample_secs: f64,
+    /// Portion of the per-sample time spent in driver processing.
+    pub driver_secs: f64,
+    /// Initial warmup cost (only meaningful at the first point).
+    pub warmup_secs: f64,
+    pub rewire_ops: u64,
+}
+
+/// Full Fig. 4 sweep result for one strategy.
+#[derive(Debug, Clone)]
+pub struct PackingSweep {
+    pub packing: Packing,
+    pub points: Vec<PackingPoint>,
+}
+
+/// Run Algorithm 2 for one strategy and one `T_wait`, returning the data
+/// point and (optionally) the wire-event trace for Fig. 5.
+pub fn run_point(
+    cfg: &PackingBenchConfig,
+    packing: Packing,
+    t_wait_ms: u64,
+    trace: bool,
+) -> (PackingPoint, Vec<WireEvent>) {
+    let mut driver = DriverSim::new(DriverParams::default());
+    if trace {
+        driver = driver.with_trace();
+    }
+    let mut now: Nanos = 0;
+    let t_wait = t_wait_ms * NS_PER_MS;
+    let compute = cfg.layer_compute_ns();
+
+    // Warmup: wire down all needed memory, then run one untimed pass
+    // (Algorithm 2 lines 6–12).
+    let all = cfg.arrays(packing);
+    let warmup_ns = driver.warmup(&all, now);
+    now += warmup_ns;
+    for l in 0..cfg.n_layers {
+        let t = cfg.layer_touch(packing, l);
+        now += driver.touch(&t, now);
+        now += compute;
+        driver.refresh(&t, now);
+    }
+
+    // Measure: N_samples passes of (layers × (matmuls; eval; sleep)).
+    let start = now;
+    let driver_before = driver.stats().driver_ns_total;
+    let rewires_before = driver.stats().rewire_ops;
+    for _ in 0..cfg.n_samples {
+        for l in 0..cfg.n_layers {
+            let t = cfg.layer_touch(packing, l);
+            now += driver.touch(&t, now);
+            now += compute;
+            driver.refresh(&t, now);
+            now += t_wait; // sleep_in_milliseconds(T_wait)
+        }
+    }
+    let total = now - start;
+    let driver_ns = driver.stats().driver_ns_total - driver_before;
+    // T_sample = (T_end - T_start)/N_samples - T_wait × N_layers
+    let per_sample = total as f64 / cfg.n_samples as f64
+        - (t_wait * cfg.n_layers as u64) as f64;
+    let point = PackingPoint {
+        packing,
+        t_wait_ms,
+        per_sample_secs: per_sample / 1e9,
+        driver_secs: driver_ns as f64 / cfg.n_samples as f64 / 1e9,
+        warmup_secs: warmup_ns as f64 / 1e9,
+        rewire_ops: driver.stats().rewire_ops - rewires_before,
+    };
+    let events = driver.trace().to_vec();
+    (point, events)
+}
+
+/// Run the full Fig. 4 sweep for one strategy.
+pub fn run_sweep(cfg: &PackingBenchConfig, packing: Packing) -> PackingSweep {
+    let points = cfg
+        .t_waits_ms
+        .iter()
+        .map(|&w| run_point(cfg, packing, w, false).0)
+        .collect();
+    PackingSweep { packing, points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_matches_paper() {
+        let cfg = PackingBenchConfig::default();
+        // 8192² f32 ≈ 268 MB; stack = 120 × that ≈ 32 GB.
+        assert_eq!(cfg.matrix_bytes(), 8192 * 8192 * 4);
+        assert!((cfg.stack_bytes() as f64 - 32e9).abs() / 32e9 < 0.01);
+        assert_eq!(cfg.arrays(Packing::Unstacked).len(), 120);
+        assert_eq!(cfg.arrays(Packing::Prestacked).len(), 1);
+    }
+
+    #[test]
+    fn finding1_unstacked_departs_after_8ms() {
+        let cfg = PackingBenchConfig::default();
+        let base = run_point(&cfg, Packing::Unstacked, 0, false).0;
+        let at4 = run_point(&cfg, Packing::Unstacked, 4, false).0;
+        let at16 = run_point(&cfg, Packing::Unstacked, 16, false).0;
+        // Stable below the knee…
+        assert!(
+            (at4.per_sample_secs - base.per_sample_secs).abs()
+                < 0.15 * base.per_sample_secs,
+            "4ms {} vs base {}",
+            at4.per_sample_secs,
+            base.per_sample_secs
+        );
+        // …and clearly above it past the knee (driver re-wiring).
+        assert!(
+            at16.per_sample_secs > 2.0 * base.per_sample_secs,
+            "16ms {} vs base {}",
+            at16.per_sample_secs,
+            base.per_sample_secs
+        );
+        assert!(at16.rewire_ops > 0);
+    }
+
+    #[test]
+    fn finding2_prestacked_stable_until_512ms() {
+        let cfg = PackingBenchConfig::default();
+        let base = run_point(&cfg, Packing::Prestacked, 0, false).0;
+        for w in [8u64, 64, 256, 512] {
+            let p = run_point(&cfg, Packing::Prestacked, w, false).0;
+            assert!(
+                (p.per_sample_secs - base.per_sample_secs).abs()
+                    < 0.1 * base.per_sample_secs.max(1e-3),
+                "prestacked unstable at {w}ms: {} vs {}",
+                p.per_sample_secs,
+                base.per_sample_secs
+            );
+        }
+        let blown = run_point(&cfg, Packing::Prestacked, 1024, false).0;
+        assert!(
+            blown.per_sample_secs > 10.0 * base.per_sample_secs,
+            "1024ms should blow up: {} vs {}",
+            blown.per_sample_secs,
+            base.per_sample_secs
+        );
+    }
+
+    #[test]
+    fn gap_between_strategies_in_the_window() {
+        // Fig. 4: clear gap for 8 <= T_wait <= 512.
+        let cfg = PackingBenchConfig::default();
+        for w in [16u64, 64, 256] {
+            let u = run_point(&cfg, Packing::Unstacked, w, false).0;
+            let p = run_point(&cfg, Packing::Prestacked, w, false).0;
+            assert!(
+                u.per_sample_secs > 1.5 * p.per_sample_secs,
+                "no gap at {w}ms: unstacked {} prestacked {}",
+                u.per_sample_secs,
+                p.per_sample_secs
+            );
+        }
+    }
+
+    #[test]
+    fn finding2_prestacked_warmup_longer() {
+        // "it requires a longer time (400 ms) initially for the driver to
+        // load the larger data" — wiring one 32 GB array vs 120 small
+        // ones differs by the per-array fixed cost; the *single-array*
+        // wire is ≈400 ms.
+        let cfg = PackingBenchConfig::default();
+        let p = run_point(&cfg, Packing::Prestacked, 0, false).0;
+        assert!(
+            (0.38..0.46).contains(&p.warmup_secs),
+            "prestack warmup {} s",
+            p.warmup_secs
+        );
+    }
+
+    #[test]
+    fn trace_shows_rewire_timeline() {
+        let cfg = PackingBenchConfig::default();
+        let (_, events) = run_point(&cfg, Packing::Unstacked, 32, true);
+        let rewires: Vec<_> = events.iter().filter(|e| e.rewire).collect();
+        assert!(!rewires.is_empty(), "expected Fig. 5a-style re-wires");
+        // Events are time-ordered.
+        for w in events.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+    }
+
+    #[test]
+    fn sweep_covers_all_waits() {
+        let mut cfg = PackingBenchConfig::default();
+        cfg.t_waits_ms = vec![0, 8, 512];
+        let s = run_sweep(&cfg, Packing::Prestacked);
+        assert_eq!(s.points.len(), 3);
+        assert_eq!(s.points[1].t_wait_ms, 8);
+    }
+}

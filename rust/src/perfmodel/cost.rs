@@ -1,0 +1,105 @@
+//! Cost-efficiency arithmetic (Table 5) and the §5.5 NIC-upgrade cost
+//! deltas.
+
+use crate::config::{NetworkProfile, NodeHardware};
+
+/// One row of Table 5.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostRow {
+    pub solution: String,
+    pub n_nodes: usize,
+    pub price_per_node_usd: f64,
+    pub throughput_tps: f64,
+    pub total_price_usd: f64,
+    pub tp_per_usd: f64,
+}
+
+/// Compute a cost row.
+pub fn cost_efficiency(
+    solution: &str,
+    n_nodes: usize,
+    hardware: &NodeHardware,
+    nic: Option<&NetworkProfile>,
+    throughput_tps: f64,
+) -> CostRow {
+    let nic_cost = nic.map_or(0.0, |n| n.nic_price_usd);
+    let per_node = hardware.price_usd + nic_cost;
+    let total = per_node * n_nodes as f64;
+    CostRow {
+        solution: solution.to_string(),
+        n_nodes,
+        price_per_node_usd: per_node,
+        throughput_tps,
+        total_price_usd: total,
+        tp_per_usd: throughput_tps / total,
+    }
+}
+
+/// Table 5's two rows with the paper's measured throughputs.
+pub fn table5() -> (CostRow, CostRow) {
+    let databricks = cost_efficiency(
+        "Databricks (8xH100, TRT-LLM)",
+        1,
+        &NodeHardware::dgx_h100_8x(),
+        None,
+        112.5,
+    );
+    let ours = cost_efficiency(
+        "Ours (2x Mac Studio, P-L_R-D)",
+        2,
+        &NodeHardware::m2_ultra(),
+        None,
+        5.9,
+    );
+    (databricks, ours)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_reproduces() {
+        let (db, ours) = table5();
+        assert!((db.tp_per_usd - 0.000389).abs() < 1e-5, "{}", db.tp_per_usd);
+        assert!((ours.tp_per_usd - 0.000447).abs() < 1e-5, "{}", ours.tp_per_usd);
+    }
+
+    #[test]
+    fn headline_1_15x_cost_efficiency() {
+        let (db, ours) = table5();
+        let ratio = ours.tp_per_usd / db.tp_per_usd;
+        assert!((ratio - 1.15).abs() < 0.02, "ratio {ratio}");
+    }
+
+    #[test]
+    fn setup_is_22x_cheaper() {
+        let (db, ours) = table5();
+        let ratio = db.total_price_usd / ours.total_price_usd;
+        assert!((ratio - 21.9).abs() < 0.5, "price ratio {ratio}");
+    }
+
+    #[test]
+    fn nic_upgrade_cost_deltas_match_5_5() {
+        // §5.5: +5% with RoCEv2, +20% with Infiniband per node.
+        let base = NodeHardware::m2_ultra().price_usd;
+        let roce = cost_efficiency("roce", 2, &NodeHardware::m2_ultra(),
+            Some(&NetworkProfile::rocev2()), 16.0);
+        let ib = cost_efficiency("ib", 2, &NodeHardware::m2_ultra(),
+            Some(&NetworkProfile::infiniband()), 16.3);
+        let roce_pct = (roce.price_per_node_usd - base) / base;
+        let ib_pct = (ib.price_per_node_usd - base) / base;
+        assert!((roce_pct - 0.05).abs() < 0.01, "roce +{roce_pct}");
+        assert!((ib_pct - 0.20).abs() < 0.01, "ib +{ib_pct}");
+    }
+
+    #[test]
+    fn rdma_improves_cost_efficiency() {
+        // The §5.5 headline: higher throughput at a small cost increase
+        // ⇒ significantly better TP/USD than the 10 GbE baseline.
+        let base = cost_efficiency("tcp", 2, &NodeHardware::m2_ultra(), None, 9.7);
+        let roce = cost_efficiency("roce", 2, &NodeHardware::m2_ultra(),
+            Some(&NetworkProfile::rocev2()), 16.0);
+        assert!(roce.tp_per_usd > 1.4 * base.tp_per_usd);
+    }
+}

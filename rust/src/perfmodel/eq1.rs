@@ -1,0 +1,178 @@
+//! Equation (1): the lower-bound inference time per generated token for a
+//! `P-L_R-D` expert-parallel cluster.
+//!
+//! ```text
+//! Est = Max( GPU Load, GPU Compute ) + ( Latency + Data Transfer )
+//!   GPU Load    = (#Params_SA + #Params/expert × E[#exec]) / mem_bw
+//!   GPU Compute = (#FLOPs_SA + #FLOPs/expert × E[#exec]) / flops
+//!   Latency     = comm_latency × #Layers
+//!   Transfer    = comm_data / comm_bw
+//! ```
+//!
+//! Variables and values are Table 1; `estimate` reproduces Table 6 rows.
+
+use crate::config::{ModelDims, NetworkProfile, NodeHardware};
+use crate::model::counts::ModelCounts;
+
+/// Inputs to Eq. 1 for one cluster configuration.
+#[derive(Debug, Clone)]
+pub struct PerfModelInputs {
+    pub model: ModelDims,
+    pub hardware: NodeHardware,
+    pub network: NetworkProfile,
+    pub n_nodes: usize,
+    /// `E[#exec experts/node/layer]` — measured (Table 1) or estimated by
+    /// `expected_experts::expected_experts_per_node_layer`.
+    pub expected_experts: f64,
+}
+
+/// The decomposed estimate (one Table 6 row).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Estimate {
+    pub load_secs: f64,
+    pub compute_secs: f64,
+    pub latency_secs: f64,
+    pub transfer_secs: f64,
+    /// `max(load, compute) + latency + transfer`.
+    pub total_secs: f64,
+    pub tokens_per_sec: f64,
+}
+
+/// Evaluate Eq. 1.
+pub fn estimate(inp: &PerfModelInputs) -> Estimate {
+    let c = ModelCounts::of(&inp.model);
+    let load_bytes =
+        c.sa_param_bytes as f64 + c.expert_param_bytes as f64 * inp.expected_experts;
+    let load = load_bytes / inp.hardware.mem_bw;
+    let flops = c.sa_flops + c.expert_flops * inp.expected_experts;
+    let compute = flops / inp.hardware.gpu_bf16_flops;
+    let latency = inp.network.latency_ns as f64 / 1e9 * inp.model.n_layers as f64;
+    let transfer = c.comm_bytes as f64 / inp.network.bandwidth;
+    let total = load.max(compute) + latency + transfer;
+    Estimate {
+        load_secs: load,
+        compute_secs: compute,
+        latency_secs: latency,
+        transfer_secs: transfer,
+        total_secs: total,
+        tokens_per_sec: 1.0 / total,
+    }
+}
+
+/// Table 1's measured `E[#exec experts/node/layer]` for the paper's node
+/// counts (used to regenerate Table 6 exactly; our own Monte-Carlo
+/// estimator lives in `expected_experts`).
+pub fn paper_expected_experts(n_nodes: usize) -> Option<f64> {
+    match n_nodes {
+        2 => Some(2.65),
+        3 => Some(2.32),
+        4 => Some(1.57),
+        _ => None,
+    }
+}
+
+/// Interpolated/extrapolated `E[#exec]` for node counts the paper lists
+/// in Table 6 but not Table 1 (6 and 8 nodes). The paper does not state
+/// the values it used; we derive them with the Monte-Carlo estimator
+/// over the overlapped placement (see `expected_experts`), which
+/// reproduces the 2/3/4-node measurements.
+pub fn default_expected_experts(n_nodes: usize, seed: u64) -> f64 {
+    if let Some(v) = paper_expected_experts(n_nodes) {
+        v
+    } else {
+        super::expected_experts::expected_experts_per_node_layer(n_nodes, 8, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelDims, NetworkProfile, NodeHardware};
+
+    fn inputs(n_nodes: usize, e: f64) -> PerfModelInputs {
+        PerfModelInputs {
+            model: ModelDims::dbrx_132b(),
+            hardware: NodeHardware::m2_ultra(),
+            network: NetworkProfile::tcp_10gbe(),
+            n_nodes,
+            expected_experts: e,
+        }
+    }
+
+    /// Table 6, row by row (Load / Comp / Lat / Trans / Time / TP).
+    #[test]
+    fn table6_two_nodes() {
+        let e = estimate(&inputs(2, 2.65));
+        assert!((e.load_secs - 0.061).abs() < 0.002, "load {}", e.load_secs);
+        assert!(e.compute_secs < 0.0015, "comp {}", e.compute_secs);
+        assert!((e.latency_secs - 0.040).abs() < 1e-9);
+        assert!((e.transfer_secs - 0.002).abs() < 0.001);
+        assert!((e.total_secs - 0.103).abs() < 0.003, "time {}", e.total_secs);
+        assert!((e.tokens_per_sec - 9.7).abs() < 0.3, "tp {}", e.tokens_per_sec);
+    }
+
+    #[test]
+    fn table6_three_nodes() {
+        let e = estimate(&inputs(3, 2.32));
+        assert!((e.load_secs - 0.055).abs() < 0.002);
+        assert!((e.total_secs - 0.096).abs() < 0.003);
+        assert!((e.tokens_per_sec - 10.4).abs() < 0.4);
+    }
+
+    #[test]
+    fn table6_four_nodes() {
+        let e = estimate(&inputs(4, 1.57));
+        assert!((e.load_secs - 0.040).abs() < 0.002);
+        assert!((e.total_secs - 0.081).abs() < 0.003);
+        assert!((e.tokens_per_sec - 12.3).abs() < 0.4);
+    }
+
+    #[test]
+    fn load_dominates_compute_on_m2_ultra() {
+        // §4.4: "In most cases, the maximum is the load time."
+        for &(n, e) in &[(2usize, 2.65f64), (3, 2.32), (4, 1.57)] {
+            let est = estimate(&inputs(n, e));
+            assert!(est.load_secs > est.compute_secs, "nodes {n}");
+        }
+    }
+
+    /// §5.5 / Fig. 8: RDMA NICs lift the 2-node bound from 9.7 to ≈16.3.
+    #[test]
+    fn rdma_projection_two_nodes() {
+        let mut inp = inputs(2, 2.65);
+        inp.network = NetworkProfile::rocev2();
+        let roce = estimate(&inp);
+        assert!(
+            (roce.tokens_per_sec - 16.0).abs() < 0.8,
+            "roce tp {}",
+            roce.tokens_per_sec
+        );
+        inp.network = NetworkProfile::infiniband();
+        let ib = estimate(&inp);
+        assert!(
+            (ib.tokens_per_sec - 16.3).abs() < 0.8,
+            "ib tp {}",
+            ib.tokens_per_sec
+        );
+        assert!(ib.tokens_per_sec > roce.tokens_per_sec);
+    }
+
+    #[test]
+    fn paper_expected_experts_table1() {
+        assert_eq!(paper_expected_experts(2), Some(2.65));
+        assert_eq!(paper_expected_experts(3), Some(2.32));
+        assert_eq!(paper_expected_experts(4), Some(1.57));
+        assert_eq!(paper_expected_experts(8), None);
+    }
+
+    #[test]
+    fn more_nodes_never_slower_in_the_bound() {
+        let mut prev = f64::INFINITY;
+        for n in [2usize, 3, 4, 6, 8] {
+            let e = default_expected_experts(n, 99);
+            let t = estimate(&inputs(n, e)).total_secs;
+            assert!(t <= prev + 1e-9, "{n} nodes: {t} > {prev}");
+            prev = t;
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! The paper's performance model (§4.4, Eq. 1) and its applications:
+//! Table 6 (bounds for 2–8 nodes on 10 GbE), Fig. 8 (bounds vs realized,
+//! plus RoCEv2/Infiniband NIC projections) and Table 5 (cost efficiency
+//! vs the Databricks 8×H100 system).
+
+pub mod cost;
+pub mod eq1;
+pub mod expected_experts;
+
+pub use cost::{cost_efficiency, CostRow};
+pub use eq1::{estimate, Estimate, PerfModelInputs};
+pub use expected_experts::expected_experts_per_node_layer;

@@ -1,0 +1,148 @@
+//! `artifacts/manifest.txt` — the dims contract between `aot.py` and the
+//! rust runtime (simple `key = value` lines, parsed with the config
+//! module's TOML-subset parser).
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use crate::config::toml::Document;
+
+/// Parsed manifest of the nano model's artifacts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub n_layers: usize,
+    pub d_embed: usize,
+    pub d_ffn: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub num_slots: usize,
+    /// Slot count of the fast serving artifacts (= top_k).
+    pub fast_num_slots: usize,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let doc = Document::parse(text).context("manifest parse")?;
+        let get = |k: &str| -> Result<usize> {
+            let v = doc.int_or(k, -1);
+            if v < 0 {
+                bail!("manifest missing key '{k}'");
+            }
+            Ok(v as usize)
+        };
+        let m = Manifest {
+            n_layers: get("n_layers")?,
+            d_embed: get("d_embed")?,
+            d_ffn: get("d_ffn")?,
+            n_experts: get("n_experts")?,
+            top_k: get("top_k")?,
+            n_heads: get("n_heads")?,
+            n_kv_heads: get("n_kv_heads")?,
+            head_dim: get("head_dim")?,
+            vocab: get("vocab")?,
+            max_seq: get("max_seq")?,
+            num_slots: get("num_slots")?,
+            fast_num_slots: {
+                let v = doc.int_or("fast_num_slots", -1);
+                if v < 0 {
+                    doc.int_or("top_k", 4) as usize // older manifests
+                } else {
+                    v as usize
+                }
+            },
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.top_k > self.n_experts {
+            bail!("top_k > n_experts");
+        }
+        if self.n_heads % self.n_kv_heads != 0 {
+            bail!("n_heads must be divisible by n_kv_heads (GQA)");
+        }
+        if self.num_slots < self.top_k {
+            bail!("num_slots < top_k");
+        }
+        Ok(())
+    }
+
+    /// The matching `ModelDims` (for layout/planning at nano scale).
+    pub fn model_dims(&self) -> crate::config::ModelDims {
+        crate::config::ModelDims {
+            name: "dbrx-nano".into(),
+            n_layers: self.n_layers,
+            d_embed: self.d_embed,
+            d_qkv_hidden: (self.n_heads + 2 * self.n_kv_heads) * self.head_dim,
+            d_ffn: self.d_ffn,
+            n_experts: self.n_experts,
+            top_k: self.top_k,
+            n_heads: self.n_heads,
+            n_kv_heads: self.n_kv_heads,
+            vocab_size: self.vocab,
+            precision_bytes: 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# dbrx-nano artifact manifest
+n_layers = 4
+d_embed = 256
+d_ffn = 448
+n_experts = 16
+top_k = 4
+n_heads = 8
+n_kv_heads = 4
+head_dim = 32
+vocab = 512
+max_seq = 256
+num_slots = 8
+fast_num_slots = 4
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.n_layers, 4);
+        assert_eq!(m.num_slots, 8);
+        assert_eq!(m.fast_num_slots, 4);
+        let dims = m.model_dims();
+        assert_eq!(dims.d_qkv_hidden, 512);
+        assert_eq!(dims.head_dim(), 32);
+    }
+
+    #[test]
+    fn missing_key_rejected() {
+        assert!(Manifest::parse("n_layers = 4").is_err());
+    }
+
+    #[test]
+    fn invalid_gqa_rejected() {
+        let bad = SAMPLE.replace("n_kv_heads = 4", "n_kv_heads = 3");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn num_slots_must_cover_topk() {
+        let bad = SAMPLE.replace("num_slots = 8", "num_slots = 2");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

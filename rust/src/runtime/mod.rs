@@ -1,0 +1,92 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! `weights.npz`, `manifest.txt`) and executes them on the CPU PJRT
+//! client. This is the only module that touches the `xla` crate; Python
+//! never runs on the request path.
+//!
+//! Weights live on-device as `PjRtBuffer`s created once at load time;
+//! the hot path converts activations to buffers and calls `execute_b`.
+
+pub mod manifest;
+pub mod nano;
+
+pub use manifest::Manifest;
+pub use nano::{AttnRouterOut, NanoRuntime, NodeExperts};
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Load + compile one HLO-text artifact.
+pub fn compile_artifact(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    name: &str,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = dir.join(format!("{name}.hlo.txt"));
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 path")?,
+    )
+    .with_context(|| format!("parsing {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {name}"))
+}
+
+/// Host-side f32 tensor (row-major) — the carrier between the engine and
+/// the runtime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor { dims, data }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> HostTensor {
+        let n = dims.iter().product();
+        HostTensor { dims, data: vec![0.0; n] }
+    }
+
+    pub fn scalar_i32(_v: i32) -> ! {
+        unreachable!("use NanoRuntime helpers for i32 inputs")
+    }
+
+    /// Upload to the device.
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        Ok(client.buffer_from_host_buffer(&self.data, &self.dims, None)?)
+    }
+
+    /// Download a literal into a HostTensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(HostTensor::new(dims, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checked() {
+        let t = HostTensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.dims, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_rejects_mismatch() {
+        HostTensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn zeros_has_right_len() {
+        assert_eq!(HostTensor::zeros(vec![4, 5]).data.len(), 20);
+    }
+}

@@ -1,0 +1,165 @@
+//! Clocks for the two execution modes of the cluster (DESIGN.md §5).
+//!
+//! Paper-scale phenomena (driver wiring, 10 GbE latency) are milliseconds
+//! while the nano model's real compute is microseconds, so benches that
+//! regenerate the paper's tables run on a *virtual* clock advanced by the
+//! cost models, and the real end-to-end path uses the wall clock. All
+//! coordinator logic is written against the `Clock` trait so both modes
+//! share routing/balancing/protocol code.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Nanoseconds since clock epoch.
+pub type Nanos = u64;
+
+pub const NS_PER_US: u64 = 1_000;
+pub const NS_PER_MS: u64 = 1_000_000;
+pub const NS_PER_SEC: u64 = 1_000_000_000;
+
+/// Convert seconds (f64) to nanos, saturating.
+pub fn secs_to_ns(s: f64) -> Nanos {
+    if s <= 0.0 {
+        0
+    } else {
+        (s * 1e9).round() as u64
+    }
+}
+
+/// Convert nanos to seconds.
+pub fn ns_to_secs(ns: Nanos) -> f64 {
+    ns as f64 / 1e9
+}
+
+/// A monotonic clock the simulation can either advance manually (virtual
+/// mode) or read from the OS (real mode).
+pub trait Clock: Send + Sync {
+    /// Current time in nanoseconds since the clock's epoch.
+    fn now(&self) -> Nanos;
+    /// Advance the clock by `ns`. Virtual clocks jump; the real clock
+    /// sleeps (used to inject simulated link latency into live runs).
+    fn advance(&self, ns: Nanos);
+    /// True if time is simulated (benches) rather than wall time.
+    fn is_virtual(&self) -> bool;
+}
+
+/// Virtual clock: an atomic counter. `advance` is a simple add, `now` a
+/// load. Deterministic and free, which is what the DES needs.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    ns: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Arc<Self> {
+        Arc::new(VirtualClock { ns: AtomicU64::new(0) })
+    }
+
+    /// Set the clock to an absolute time (DES event dispatch). Only moves
+    /// forward; going backwards is a simulation bug.
+    pub fn set(&self, t: Nanos) {
+        let prev = self.ns.swap(t, Ordering::SeqCst);
+        debug_assert!(t >= prev, "virtual clock moved backwards: {prev} -> {t}");
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Nanos {
+        self.ns.load(Ordering::SeqCst)
+    }
+
+    fn advance(&self, ns: Nanos) {
+        self.ns.fetch_add(ns, Ordering::SeqCst);
+    }
+
+    fn is_virtual(&self) -> bool {
+        true
+    }
+}
+
+/// Wall clock anchored at construction.
+#[derive(Debug)]
+pub struct RealClock {
+    epoch: Instant,
+}
+
+impl RealClock {
+    pub fn new() -> Arc<Self> {
+        Arc::new(RealClock { epoch: Instant::now() })
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> Nanos {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    fn advance(&self, ns: Nanos) {
+        // Injecting virtual delay into a live run = actually waiting.
+        if ns > 0 {
+            std::thread::sleep(std::time::Duration::from_nanos(ns));
+        }
+    }
+
+    fn is_virtual(&self) -> bool {
+        false
+    }
+}
+
+/// A stopwatch over any `Clock`.
+pub struct Stopwatch<'a> {
+    clock: &'a dyn Clock,
+    start: Nanos,
+}
+
+impl<'a> Stopwatch<'a> {
+    pub fn start(clock: &'a dyn Clock) -> Self {
+        Stopwatch { clock, start: clock.now() }
+    }
+
+    pub fn elapsed(&self) -> Nanos {
+        self.clock.now().saturating_sub(self.start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_advances() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), 0);
+        c.advance(5 * NS_PER_MS);
+        assert_eq!(c.now(), 5 * NS_PER_MS);
+        c.set(10 * NS_PER_MS);
+        assert_eq!(c.now(), 10 * NS_PER_MS);
+        assert!(c.is_virtual());
+    }
+
+    #[test]
+    fn real_clock_progresses() {
+        let c = RealClock::new();
+        let t0 = c.now();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(c.now() > t0);
+        assert!(!c.is_virtual());
+    }
+
+    #[test]
+    fn stopwatch_over_virtual() {
+        let c = VirtualClock::new();
+        let sw = Stopwatch::start(&*c);
+        c.advance(123);
+        assert_eq!(sw.elapsed(), 123);
+    }
+
+    #[test]
+    fn conversions_roundtrip() {
+        assert_eq!(secs_to_ns(0.001), NS_PER_MS);
+        assert_eq!(secs_to_ns(1.0), NS_PER_SEC);
+        assert!((ns_to_secs(NS_PER_SEC) - 1.0).abs() < 1e-12);
+        assert_eq!(secs_to_ns(-1.0), 0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Workload generation and router-statistics harvesting.
+//!
+//! `Workload` produces the request mixes the evaluation uses (single-user
+//! 128/128, the Table 5 2000/256 mix, and Poisson multi-user arrivals for
+//! the beyond-paper serving ablation). `RouterStats` harvests
+//! `E[#exec experts/node/layer]` from simulated or live routing — the
+//! measured variable of Table 1.
+
+use crate::config::Balancing;
+use crate::engine::request::Request;
+use crate::model::layout::ExpertLayout;
+use crate::moe::balance::Planner;
+use crate::moe::router::SyntheticRouter;
+use crate::util::rng::Rng;
+use crate::util::stats::Welford;
+
+/// A stream of requests with arrival times (seconds).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub requests: Vec<(f64, Request)>,
+}
+
+impl Workload {
+    /// The paper's single-user workload: back-to-back requests.
+    pub fn single_user(n: usize, prompt: usize, gen: usize) -> Workload {
+        let requests = (0..n)
+            .map(|i| {
+                let mut r = Request::synthetic(i as u64, prompt, 512);
+                r.max_new_tokens = gen;
+                (0.0, r)
+            })
+            .collect();
+        Workload { requests }
+    }
+
+    /// Poisson arrivals at `rate` req/s (the multi-user extension the
+    /// paper's conclusion names as future work).
+    pub fn poisson(n: usize, rate: f64, prompt: usize, gen: usize, seed: u64) -> Workload {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        let requests = (0..n)
+            .map(|i| {
+                t += rng.exponential(rate);
+                let mut r = Request::synthetic(i as u64, prompt, 512);
+                r.max_new_tokens = gen;
+                (t, r)
+            })
+            .collect();
+        Workload { requests }
+    }
+}
+
+/// Collects per-layer executed-expert statistics.
+#[derive(Debug, Clone, Default)]
+pub struct RouterStats {
+    pub mean_executed: Welford,
+    pub max_executed: Welford,
+    pub per_expert_selections: Vec<u64>,
+}
+
+impl RouterStats {
+    pub fn new(n_experts: usize) -> RouterStats {
+        RouterStats {
+            per_expert_selections: vec![0; n_experts],
+            ..Default::default()
+        }
+    }
+
+    /// Harvest statistics over `draws` synthetic routing decisions.
+    pub fn harvest(
+        layout: &ExpertLayout,
+        balancing: Balancing,
+        draws: usize,
+        seed: u64,
+    ) -> RouterStats {
+        let mut stats = RouterStats::new(layout.n_experts);
+        let mut planner = Planner::new(balancing, layout.clone());
+        let mut router = SyntheticRouter::new(layout.n_experts, 4, seed);
+        for _ in 0..draws {
+            let d = router.draw();
+            for &e in &d.selected {
+                stats.per_expert_selections[e] += 1;
+            }
+            let plan = planner.plan_layer(&d);
+            stats.mean_executed.push(plan.mean_executed());
+            stats.max_executed.push(plan.max_executed() as f64);
+        }
+        stats
+    }
+
+    /// Chi-square-ish balance score: max/min selection ratio (1 = even).
+    pub fn balance_ratio(&self) -> f64 {
+        let max = *self.per_expert_selections.iter().max().unwrap_or(&0) as f64;
+        let min = *self.per_expert_selections.iter().min().unwrap_or(&0) as f64;
+        if min == 0.0 {
+            f64::INFINITY
+        } else {
+            max / min
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelDims, Strategy};
+
+    fn layout(n: usize) -> ExpertLayout {
+        let mut c = ClusterConfig::new(n, Strategy::PLrD);
+        c.experts_per_node_cap = 8;
+        ExpertLayout::build(&c, &ModelDims::dbrx_132b())
+    }
+
+    #[test]
+    fn single_user_is_sequential() {
+        let w = Workload::single_user(3, 128, 128);
+        assert_eq!(w.requests.len(), 3);
+        assert!(w.requests.iter().all(|(t, _)| *t == 0.0));
+        assert_eq!(w.requests[0].1.prompt.len(), 128);
+    }
+
+    #[test]
+    fn poisson_arrivals_increase() {
+        let w = Workload::poisson(50, 2.0, 16, 16, 7);
+        for pair in w.requests.windows(2) {
+            assert!(pair[0].0 <= pair[1].0);
+        }
+        let mean_gap = w.requests.last().unwrap().0 / 50.0;
+        assert!((mean_gap - 0.5).abs() < 0.2, "gap {mean_gap}");
+    }
+
+    #[test]
+    fn harvest_matches_table1_two_nodes() {
+        let s = RouterStats::harvest(&layout(2), Balancing::RouterAided, 30_000, 3);
+        assert!((s.mean_executed.mean() - 2.65).abs() < 0.05);
+        assert!(s.balance_ratio() < 1.1, "uniform router should be even");
+    }
+
+    #[test]
+    fn busy_full_always_executes_all() {
+        let s = RouterStats::harvest(&layout(2), Balancing::BusyFull, 1000, 4);
+        assert_eq!(s.mean_executed.mean(), 8.0);
+        assert_eq!(s.max_executed.mean(), 8.0);
+    }
+
+    #[test]
+    fn selected_only_mean_is_topk_over_nodes() {
+        let s = RouterStats::harvest(&layout(2), Balancing::SelectedOnly, 30_000, 5);
+        assert!((s.mean_executed.mean() - 2.0).abs() < 0.05, "4/2 nodes");
+    }
+}

@@ -1,0 +1,56 @@
+//! Tiny benchmark harness (no `criterion` offline): warmup + N samples,
+//! summary stats, and paper-table printing helpers shared by the
+//! `rust/benches/*.rs` targets (`harness = false`).
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Run `f` `samples` times after `warmup` runs; returns per-run seconds.
+pub fn time_runs<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..samples)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Print a `name: mean ± std (p50 min..max) xN` line from samples.
+pub fn report(name: &str, secs: &[f64]) {
+    if let Some(s) = Summary::of(secs) {
+        println!(
+            "{name}: {:.4}s ± {:.4} (p50 {:.4}, range {:.4}..{:.4}) x{}",
+            s.mean, s.std_dev, s.p50, s.min, s.max, s.n
+        );
+    }
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// A paper-vs-measured comparison line.
+pub fn compare(label: &str, paper: f64, measured: f64, unit: &str) {
+    let ratio = if paper != 0.0 { measured / paper } else { f64::NAN };
+    println!("{label:<44} paper {paper:>8.3} {unit:<9} measured {measured:>8.3} {unit:<9} ratio {ratio:>5.2}x");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_runs_counts() {
+        let mut n = 0;
+        let xs = time_runs(2, 5, || n += 1);
+        assert_eq!(xs.len(), 5);
+        assert_eq!(n, 7);
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+}

@@ -1,0 +1,137 @@
+//! Human-readable formatting of byte counts and nanosecond durations.
+
+/// Format a byte count with binary units: `1536 -> "1.50 KiB"`.
+pub fn format_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    if bytes < 1024 {
+        return format!("{bytes} B");
+    }
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    format!("{v:.2} {}", UNITS[unit])
+}
+
+/// Format a nanosecond duration at an appropriate scale.
+pub fn format_duration_ns(ns: u64) -> String {
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Left-pad / right-align helpers for plain-text tables.
+pub fn pad_left(s: &str, width: usize) -> String {
+    if s.len() >= width {
+        s.to_string()
+    } else {
+        format!("{}{}", " ".repeat(width - s.len()), s)
+    }
+}
+
+pub fn pad_right(s: &str, width: usize) -> String {
+    if s.len() >= width {
+        s.to_string()
+    } else {
+        format!("{}{}", s, " ".repeat(width - s.len()))
+    }
+}
+
+/// Render a simple aligned text table: first row is the header.
+/// Numeric-looking cells are right-aligned, text cells left-aligned.
+pub fn render_table(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let cols = rows.iter().map(|r| r.len()).max().unwrap();
+    let mut widths = vec![0usize; cols];
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let numeric = |s: &str| {
+        !s.is_empty()
+            && s.chars()
+                .all(|c| c.is_ascii_digit() || ".-+e%×x/<".contains(c))
+    };
+    let mut out = String::new();
+    for (ri, row) in rows.iter().enumerate() {
+        let mut line = String::new();
+        for (i, cell) in row.iter().enumerate() {
+            let cell = if ri > 0 && numeric(cell) {
+                pad_left(cell, widths[i])
+            } else {
+                pad_right(cell, widths[i])
+            };
+            line.push_str(&cell);
+            if i + 1 < row.len() {
+                line.push_str("  ");
+            }
+        }
+        out.push_str(line.trim_end());
+        out.push('\n');
+        if ri == 0 {
+            for (i, w) in widths.iter().enumerate() {
+                out.push_str(&"-".repeat(*w));
+                if i + 1 < widths.len() {
+                    out.push_str("  ");
+                }
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(format_bytes(0), "0 B");
+        assert_eq!(format_bytes(1023), "1023 B");
+        assert_eq!(format_bytes(1536), "1.50 KiB");
+        assert_eq!(format_bytes(1024 * 1024), "1.00 MiB");
+        assert_eq!(format_bytes(192 * 1024 * 1024 * 1024), "192.00 GiB");
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(format_duration_ns(999), "999 ns");
+        assert_eq!(format_duration_ns(1_500), "1.50 µs");
+        assert_eq!(format_duration_ns(2_500_000), "2.50 ms");
+        assert_eq!(format_duration_ns(1_166_000_000), "1.166 s");
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(&[
+            vec!["name".into(), "tp".into()],
+            vec!["naive".into(), "1.2".into()],
+            vec!["p-lr-d".into(), "6.1".into()],
+        ]);
+        assert!(t.contains("name"));
+        assert!(t.lines().count() == 4);
+        // numeric column right-aligned
+        let lines: Vec<&str> = t.lines().collect();
+        assert!(lines[2].ends_with("1.2"));
+        assert!(lines[3].ends_with("6.1"));
+    }
+
+    #[test]
+    fn pad_functions() {
+        assert_eq!(pad_left("ab", 4), "  ab");
+        assert_eq!(pad_right("ab", 4), "ab  ");
+        assert_eq!(pad_left("abcd", 2), "abcd");
+    }
+}

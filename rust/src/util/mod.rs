@@ -1,0 +1,15 @@
+//! Small self-contained substrates the offline environment forces us to
+//! build ourselves: a PRNG (no `rand`), summary statistics (no `criterion`),
+//! a property-testing harness (no `proptest`), byte/duration formatting,
+//! and a minimal `log` backend.
+
+pub mod bench;
+pub mod fmt;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use fmt::{format_bytes, format_duration_ns};
+pub use rng::Rng;
+pub use stats::Summary;

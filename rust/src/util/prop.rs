@@ -1,0 +1,155 @@
+//! Minimal property-testing harness (the offline cache has no `proptest`).
+//!
+//! A property is checked over `cases` seeded generations. On failure the
+//! harness re-runs the generator over a deterministic shrink schedule
+//! (halving/decrementing the seed-derived "size" knob) and reports the
+//! smallest failing case it found, plus the seed needed to replay it.
+//!
+//! ```no_run
+//! use apple_moe::util::prop::{forall, Gen};
+//! forall("sorted stays sorted", 256, |g| {
+//!     let mut v = g.vec_u64(0..64, 0..1000);
+//!     v.sort_unstable();
+//!     v.windows(2).all(|w| w[0] <= w[1])
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Generation context handed to properties: an RNG plus a `size` knob that
+/// the shrinker lowers when hunting for a minimal counterexample.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    /// Uniform u64 in [lo, hi), clamped by the current shrink size.
+    pub fn u64_in(&mut self, r: std::ops::Range<u64>) -> u64 {
+        let span = (r.end - r.start).min(self.size.max(1) as u64);
+        r.start + self.rng.below(span.max(1))
+    }
+
+    pub fn usize_in(&mut self, r: std::ops::Range<usize>) -> usize {
+        self.u64_in(r.start as u64..r.end as u64) as usize
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vector with length drawn from `len` and elements from `vals`.
+    pub fn vec_u64(
+        &mut self,
+        len: std::ops::Range<usize>,
+        vals: std::ops::Range<u64>,
+    ) -> Vec<u64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.u64_in(vals.clone())).collect()
+    }
+
+    /// `k` distinct indices below `n` — mirrors router expert selection.
+    pub fn distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        self.rng.sample_distinct(n, k)
+    }
+}
+
+/// Result of a property run (exposed for the harness's own tests).
+#[derive(Debug)]
+pub struct Failure {
+    pub name: String,
+    pub seed: u64,
+    pub size: usize,
+}
+
+/// Check `prop` over `cases` generated inputs; panics on failure with a
+/// replayable seed. Honours `APPLE_MOE_PROP_SEED` for replay.
+pub fn forall<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> bool,
+{
+    if let Some(f) = forall_inner(name, cases, &prop) {
+        panic!(
+            "property '{}' failed: replay with APPLE_MOE_PROP_SEED={} (size {})",
+            f.name, f.seed, f.size
+        );
+    }
+}
+
+fn forall_inner<F>(name: &str, cases: usize, prop: &F) -> Option<Failure>
+where
+    F: Fn(&mut Gen) -> bool,
+{
+    let base_seed = std::env::var("APPLE_MOE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok());
+    if let Some(seed) = base_seed {
+        // Replay mode: single case at full size.
+        let mut g = Gen { rng: Rng::new(seed), size: usize::MAX };
+        if !prop(&mut g) {
+            return Some(Failure { name: name.into(), seed, size: usize::MAX });
+        }
+        return None;
+    }
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 + case as u64;
+        // Grow size with case index so early cases are small already.
+        let size = 1 + case * 8;
+        let mut g = Gen { rng: Rng::new(seed), size };
+        if !prop(&mut g) {
+            // Shrink: retry the same seed at smaller sizes.
+            let mut best = Failure { name: name.into(), seed, size };
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                let mut g = Gen { rng: Rng::new(seed), size: s };
+                if !prop(&mut g) {
+                    best.size = s;
+                }
+            }
+            return Some(best);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("reverse twice is identity", 128, |g| {
+            let v = g.vec_u64(0..32, 0..100);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            v == w
+        });
+    }
+
+    #[test]
+    fn failing_property_is_caught_and_shrunk() {
+        let f = forall_inner("len < 5", 256, &|g: &mut Gen| {
+            g.vec_u64(0..64, 0..10).len() < 5
+        })
+        .expect("property should fail");
+        // The shrinker should find a failing size well below the max.
+        assert!(f.size <= 64, "shrunk size {}", f.size);
+    }
+
+    #[test]
+    fn distinct_gen_is_distinct() {
+        forall("distinct draws distinct", 128, |g| {
+            let v = g.distinct(16, 4);
+            let mut w = v.clone();
+            w.sort_unstable();
+            w.dedup();
+            w.len() == 4
+        });
+    }
+}

@@ -1,0 +1,59 @@
+//! Integration: CLI subcommands end-to-end through the library entry
+//! point (`cli::run`), checking they execute and print the expected
+//! table shapes. The live subcommands are covered by
+//! `integration_cluster.rs`; here we exercise the analysis commands.
+
+use apple_moe::cli;
+
+fn run(cmd: &str) -> anyhow::Result<()> {
+    cli::run(cmd.split_whitespace().map(String::from).collect())
+}
+
+#[test]
+fn simulate_all_strategies() {
+    for s in ["naive", "p-lb", "p-lr-d"] {
+        run(&format!("simulate --strategy {s} --nodes 2 --gen-tokens 16 --prompt-tokens 8"))
+            .unwrap_or_else(|e| panic!("simulate {s}: {e:#}"));
+    }
+}
+
+#[test]
+fn simulate_rejects_bad_input() {
+    assert!(run("simulate --strategy bogus").is_err());
+    assert!(run("simulate --nodes 0").is_err());
+    assert!(run("simulate --nodes two").is_err());
+    assert!(run("simulate --bogus-flag 1").is_err());
+}
+
+#[test]
+fn perf_model_and_cost() {
+    run("perf-model --max-nodes 4").unwrap();
+    run("cost").unwrap();
+}
+
+#[test]
+fn cluster_info_both_models() {
+    run("cluster-info --nodes 2").unwrap();
+    run("cluster-info --nodes 4 --model dbrx-nano").unwrap();
+    assert!(run("cluster-info --model gpt5").is_err());
+}
+
+#[test]
+fn packing_bench_small() {
+    run("packing-bench --samples 1").unwrap();
+}
+
+#[test]
+fn multiuser_runs_and_validates() {
+    run("multiuser --requests 3 --rate 0.1 --gen-tokens 16 --prompt-tokens 8").unwrap();
+    run("multiuser --requests 3 --rate 0.1 --policy fcfs --gen-tokens 16 --prompt-tokens 8")
+        .unwrap();
+    assert!(run("multiuser --rate 0").is_err());
+    assert!(run("multiuser --policy sjf").is_err());
+}
+
+#[test]
+fn help_and_unknown() {
+    run("help").unwrap();
+    assert!(run("frobnicate").is_err());
+}

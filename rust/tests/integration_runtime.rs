@@ -1,0 +1,207 @@
+//! Integration: the rust runtime executes the AOT artifacts and the
+//! distributed role composition matches the dense single-step — the
+//! load-bearing correctness claim of the whole three-layer stack.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use std::path::{Path, PathBuf};
+
+use apple_moe::runtime::{HostTensor, NanoRuntime};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn allclose(a: &[f32], b: &[f32], tol: f32) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= tol * (1.0 + y.abs()))
+}
+
+#[test]
+fn manifest_and_artifacts_load() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = NanoRuntime::load(&dir, false).expect("load runtime");
+    assert_eq!(rt.manifest.n_experts, 16);
+    assert_eq!(rt.manifest.top_k, 4);
+}
+
+#[test]
+fn embed_matches_weight_row() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = NanoRuntime::load(&dir, false).unwrap();
+    let x = rt.embed(5).unwrap();
+    let table = rt.host_weight("embed").unwrap();
+    let d = rt.manifest.d_embed;
+    assert!(allclose(&x, &table.data[5 * d..6 * d], 1e-6));
+}
+
+#[test]
+fn router_output_is_valid_topk() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = NanoRuntime::load(&dir, false).unwrap();
+    let x = rt.embed(17).unwrap();
+    let k = rt.empty_layer_cache();
+    let v = rt.empty_layer_cache();
+    let out = rt.attn_router(0, &x, &k, &v, 0).unwrap();
+    assert_eq!(out.top_i.len(), 4);
+    let mut ids = out.top_i.clone();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 4, "duplicate experts {:?}", out.top_i);
+    assert!(out.top_i.iter().all(|&e| e < 16));
+    let sum: f32 = out.top_w.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-4, "weights sum {sum}");
+    // KV cache position 0 must now be populated.
+    let hd = rt.manifest.head_dim;
+    let written: f32 = out.k_cache.data[..hd].iter().map(|x| x.abs()).sum();
+    assert!(written > 0.0);
+}
+
+/// The headline: distributed expert parallelism over 2 nodes ==
+/// the dense single-process step, token for token.
+#[test]
+fn two_node_distributed_equals_dense() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = NanoRuntime::load(&dir, true).unwrap();
+    let m = rt.manifest.clone();
+    let ns = m.num_slots;
+
+    // Node expert partitions (Fig. 3).
+    let node0 = rt.build_node_experts(&(0..8).collect::<Vec<_>>()).unwrap();
+    let node1 = rt.build_node_experts(&(8..16).collect::<Vec<_>>()).unwrap();
+
+    // Dense reference.
+    let mut kc_d = rt.empty_dense_cache();
+    let mut vc_d = rt.empty_dense_cache();
+
+    // Distributed state: per-layer caches.
+    let mut kc: Vec<HostTensor> = (0..m.n_layers).map(|_| rt.empty_layer_cache()).collect();
+    let mut vc: Vec<HostTensor> = (0..m.n_layers).map(|_| rt.empty_layer_cache()).collect();
+
+    for (pos, tok) in [3u32, 99, 200, 7].iter().enumerate() {
+        let (want_logits, kd, vd) = rt.dense_step(*tok, &kc_d, &vc_d, pos).unwrap();
+        kc_d = kd;
+        vc_d = vd;
+
+        // Distributed step.
+        let mut x = rt.embed(*tok).unwrap();
+        for l in 0..m.n_layers {
+            let ar = rt.attn_router(l, &x, &kc[l], &vc[l], pos).unwrap();
+            kc[l] = ar.k_cache.clone();
+            vc[l] = ar.v_cache.clone();
+            let mut combined = vec![0.0f32; m.d_embed];
+            for node in [&node0, &node1] {
+                let mut idx = vec![0i32; ns];
+                let mut w = vec![0f32; ns];
+                let mut slot = 0;
+                for (i, &e) in ar.top_i.iter().enumerate() {
+                    if let Some(local) = node.local_index(e) {
+                        idx[slot] = local as i32;
+                        w[slot] = ar.top_w[i];
+                        slot += 1;
+                    }
+                }
+                let partial = rt.node_experts(node, l, &ar.moe_in, &idx, &w).unwrap();
+                for (c, p) in combined.iter_mut().zip(&partial) {
+                    *c += p; // the all-reduce
+                }
+            }
+            for i in 0..m.d_embed {
+                x = if i == 0 { x } else { x };
+            }
+            for (xi, (hi, ci)) in x.iter_mut().zip(ar.h.iter().zip(&combined)) {
+                *xi = hi + ci;
+            }
+        }
+        let got_logits = rt.lm_head(&x).unwrap();
+        assert!(
+            allclose(&got_logits, &want_logits, 5e-4),
+            "logits diverge at pos {pos}"
+        );
+    }
+}
+
+#[test]
+fn sixteen_resident_node_matches_partition() {
+    // A single node holding all 16 experts must produce the same MoE
+    // output as the 8+8 partition (placement invariance).
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = NanoRuntime::load(&dir, false).unwrap();
+    let m = rt.manifest.clone();
+    let ns = m.num_slots;
+    let all = rt.build_node_experts(&(0..16).collect::<Vec<_>>()).unwrap();
+    let n0 = rt.build_node_experts(&(0..8).collect::<Vec<_>>()).unwrap();
+    let n1 = rt.build_node_experts(&(8..16).collect::<Vec<_>>()).unwrap();
+
+    let x = rt.embed(42).unwrap();
+    let k = rt.empty_layer_cache();
+    let v = rt.empty_layer_cache();
+    let ar = rt.attn_router(0, &x, &k, &v, 0).unwrap();
+
+    // All-on-one-node.
+    let mut idx = vec![0i32; ns];
+    let mut w = vec![0f32; ns];
+    for (i, &e) in ar.top_i.iter().enumerate() {
+        idx[i] = all.local_index(e).unwrap() as i32;
+        w[i] = ar.top_w[i];
+    }
+    let want = rt.node_experts(&all, 0, &ar.moe_in, &idx, &w).unwrap();
+
+    // Partitioned.
+    let mut got = vec![0.0f32; m.d_embed];
+    for node in [&n0, &n1] {
+        let mut idx = vec![0i32; ns];
+        let mut w = vec![0f32; ns];
+        let mut slot = 0;
+        for (i, &e) in ar.top_i.iter().enumerate() {
+            if let Some(local) = node.local_index(e) {
+                idx[slot] = local as i32;
+                w[slot] = ar.top_w[i];
+                slot += 1;
+            }
+        }
+        let p = rt.node_experts(node, 0, &ar.moe_in, &idx, &w).unwrap();
+        for (g, x) in got.iter_mut().zip(&p) {
+            *g += x;
+        }
+    }
+    assert!(allclose(&got, &want, 1e-4));
+}
+
+#[test]
+fn padding_slots_change_nothing() {
+    // LRU keep-warm runs carry weight 0 — numerics must be identical.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = NanoRuntime::load(&dir, false).unwrap();
+    let ns = rt.manifest.num_slots;
+    let node = rt.build_node_experts(&(0..8).collect::<Vec<_>>()).unwrap();
+    let x = rt.embed(3).unwrap();
+    let k = rt.empty_layer_cache();
+    let v = rt.empty_layer_cache();
+    let ar = rt.attn_router(0, &x, &k, &v, 0).unwrap();
+
+    let mut idx = vec![0i32; ns];
+    let mut w = vec![0f32; ns];
+    let mut slot = 0;
+    for (i, &e) in ar.top_i.iter().enumerate() {
+        if let Some(local) = node.local_index(e) {
+            idx[slot] = local as i32;
+            w[slot] = ar.top_w[i];
+            slot += 1;
+        }
+    }
+    let a = rt.node_experts(&node, 0, &ar.moe_in, &idx, &w).unwrap();
+    // Point the padding slots at a busy expert (weight stays 0).
+    let mut idx2 = idx.clone();
+    for s in slot..ns {
+        idx2[s] = 7;
+    }
+    let b = rt.node_experts(&node, 0, &ar.moe_in, &idx2, &w).unwrap();
+    assert_eq!(a, b);
+}
