@@ -15,6 +15,10 @@ fresh):
   experts_el16.hlo.txt  ([16,..] stacks, moe_in, idx, w)  -> (partial,)
   lm_head.hlo.txt       (ln_f, lm_head, h)                -> (logits,)
   dense_step.hlo.txt    (params..., tok, K, V, pos)       -> (logits, K', V')
+  dev_*.hlo.txt         single-output UNTUPLED roles for the
+                        device-resident decode path (see
+                        `lower_device_artifacts`) — buffers chain between
+                        executables without host staging
   weights.npz           all model weights (float32, flat names)
   manifest.txt          dims + artifact inventory for the rust side
 """
@@ -35,6 +39,23 @@ def to_hlo_text(lowered) -> str:
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
         str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def to_hlo_text_untupled(lowered) -> str:
+    """Lower a SINGLE-output computation with an ARRAY root (no tuple).
+
+    PJRT returns a tuple root as one opaque buffer that can only be read
+    through a host literal, so tuple-rooted artifacts force a device->host
+    round trip per call. With ``return_tuple=False`` the root is the array
+    itself and ``execute`` hands back a plain buffer the rust coordinator
+    can chain into the next executable — the contract of every ``dev_*``
+    (device-resident) artifact.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
     )
     return comp.as_hlo_text()
 
@@ -136,6 +157,67 @@ def lower_artifacts(cfg=CFG):
     return arts
 
 
+def lower_device_artifacts(cfg=CFG, donate_caches=False):
+    """Return {name: hlo_text} for the ``dev_*`` device-resident roles.
+
+    Every artifact here has exactly one output and is lowered UNTUPLED so
+    the rust runtime keeps the result as a `PjRtBuffer` (see
+    `to_hlo_text_untupled`). Together they decompose `attn_router` such
+    that the K/V caches and the x/h/moe_in activations never cross the
+    host boundary during decode; only `dev_router`'s packed [2K] top-k and
+    the expert partial (the all-reduce payload) are downloaded.
+
+    ``donate_caches=True`` adds input/output aliasing (donation) hints on
+    the cache-append roles so PJRT may update the cache in place. Off by
+    default: the rust `execute` wrapper does not mark its argument buffers
+    donatable, and CPU PJRT rejects donation of externally referenced
+    buffers at run time.
+    """
+    d, dq, e, k = cfg.d_embed, cfg.d_qkv, cfg.n_experts, cfg.top_k
+    nh, nk, hd, s, v = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.max_seq, cfg.vocab
+    arts = {}
+
+    arts["dev_embed"] = to_hlo_text_untupled(
+        jax.jit(M.embed_step).lower(f32(v, d), i32(1))
+    )
+    arts["dev_qkv"] = to_hlo_text_untupled(
+        jax.jit(M.qkv_step).lower(f32(d), f32(d, dq), f32(1, d))
+    )
+    donate = dict(donate_argnums=(0,)) if donate_caches else {}
+    arts["dev_k_append"] = to_hlo_text_untupled(
+        jax.jit(M.k_append_step, **donate).lower(f32(nk, s, hd), f32(1, dq), i32())
+    )
+    arts["dev_v_append"] = to_hlo_text_untupled(
+        jax.jit(M.v_append_step, **donate).lower(f32(nk, s, hd), f32(1, dq), i32())
+    )
+    arts["dev_attn_out"] = to_hlo_text_untupled(
+        jax.jit(M.attn_out_step).lower(
+            f32(nh * hd, d), f32(1, d), f32(1, dq), f32(nk, s, hd), f32(nk, s, hd), i32()
+        )
+    )
+    arts["dev_moe_norm"] = to_hlo_text_untupled(
+        jax.jit(M.moe_norm_step).lower(f32(d), f32(1, d))
+    )
+    arts["dev_router"] = to_hlo_text_untupled(
+        jax.jit(M.router_step).lower(f32(d, e), f32(1, d))
+    )
+    arts["dev_residual"] = to_hlo_text_untupled(
+        jax.jit(M.residual_add_step).lower(f32(1, d), f32(1, d))
+    )
+    # Direct-args expert path, untupled (same math as experts_direct_*).
+    for ns in (k, NUM_SLOTS):
+        wspecs = []
+        for _ in range(ns):
+            wspecs += [f32(d, cfg.d_ffn), f32(d, cfg.d_ffn), f32(cfg.d_ffn, d)]
+        arts[f"dev_experts_ns{ns}"] = to_hlo_text_untupled(
+            jax.jit(M.experts_forward_direct).lower(f32(1, d), f32(ns), *wspecs)
+        )
+    arts["dev_lm_head"] = to_hlo_text_untupled(
+        jax.jit(M.lm_head_step).lower(f32(d), f32(d, v), f32(1, d))
+    )
+    return arts
+
+
 def write_manifest(path, cfg=CFG):
     with open(path, "w") as fh:
         fh.write("# dbrx-nano artifact manifest (parsed by rust/src/runtime)\n")
@@ -152,6 +234,9 @@ def write_manifest(path, cfg=CFG):
             ("max_seq", cfg.max_seq),
             ("num_slots", NUM_SLOTS),
             ("fast_num_slots", cfg.top_k),
+            # The untupled dev_* artifact set is present (device-resident
+            # decode path; rust falls back to the host path when 0/absent).
+            ("device_artifacts", 1),
         ]:
             fh.write(f"{kk} = {vv}\n")
 
@@ -160,10 +245,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out-dir", default="../artifacts")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--donate-caches",
+        action="store_true",
+        help="add input/output aliasing hints on dev_{k,v}_append "
+        "(see lower_device_artifacts; off by default)",
+    )
     args = ap.parse_args()
     os.makedirs(args.out_dir, exist_ok=True)
 
     arts = lower_artifacts()
+    arts.update(lower_device_artifacts(donate_caches=args.donate_caches))
     for name, text in arts.items():
         path = os.path.join(args.out_dir, f"{name}.hlo.txt")
         with open(path, "w") as fh:

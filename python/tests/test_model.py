@@ -65,7 +65,9 @@ class TestAttnRouter:
         np.testing.assert_allclose(np.asarray(top_w).sum(), 1.0, rtol=1e-5)
 
     def test_kv_cache_appends_at_pos(self, params):
-        x = jnp.ones((1, CFG.d_embed)) * 0.1
+        # A constant x layernorms to exactly zero (so the written K rows
+        # would be zero too) — use a varying input to see the write.
+        x = params["embed"][5][None, :]
         kc = jnp.zeros((CFG.n_kv_heads, CFG.max_seq, CFG.head_dim))
         _, _, _, _, kc1, vc1 = M.attn_router_step(
             params["layer0.ln1"], params["layer0.wqkv"], params["layer0.wo"],
@@ -193,6 +195,59 @@ class TestDistributedEqualsDense:
         np.testing.assert_allclose(a, b, rtol=1e-6)
 
 
+class TestDeviceDecomposition:
+    """The untupled device-resident roles must reproduce the fused
+    `attn_router_step` exactly — the numerical contract behind the rust
+    `DeviceState` decode path (zero per-layer cache round trips)."""
+
+    def test_decomposed_equals_fused(self, params):
+        rs = np.random.RandomState(11)
+        x = jnp.asarray(rs.randn(1, CFG.d_embed).astype(np.float32))
+        shape = (CFG.n_kv_heads, CFG.max_seq, CFG.head_dim)
+        kc = jnp.asarray(rs.randn(*shape).astype(np.float32)) * 0.1
+        vc = jnp.asarray(rs.randn(*shape).astype(np.float32)) * 0.1
+        pos = jnp.int32(5)
+        l = 0
+        ln1, wqkv, wo, ln2, wr = (
+            params[f"layer{l}.{n}"] for n in ["ln1", "wqkv", "wo", "ln2", "wr"]
+        )
+        h_f, moe_in_f, top_w_f, top_i_f, kc_f, vc_f = M.attn_router_step(
+            ln1, wqkv, wo, ln2, wr, x, kc, vc, pos
+        )
+
+        qkv = M.qkv_step(ln1, wqkv, x)
+        kc_d = M.k_append_step(kc, qkv, pos)
+        vc_d = M.v_append_step(vc, qkv, pos)
+        h_d = M.attn_out_step(wo, x, qkv, kc_d, vc_d, pos)
+        moe_in_d = M.moe_norm_step(ln2, h_d)
+        packed = M.router_step(wr, moe_in_d)
+
+        np.testing.assert_allclose(kc_d, kc_f, rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(vc_d, vc_f, rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(h_d, h_f, rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(moe_in_d, moe_in_f, rtol=1e-6, atol=1e-7)
+        k = CFG.top_k
+        np.testing.assert_allclose(packed[:k], top_w_f, rtol=1e-6, atol=1e-7)
+        np.testing.assert_array_equal(
+            np.asarray(packed[k:]).round().astype(np.int32), np.asarray(top_i_f)
+        )
+
+    def test_router_indices_exact_in_f32(self):
+        # The packed top-k rides indices as f32; they must round-trip
+        # exactly for every representable expert id.
+        ids = jnp.arange(CFG.n_experts, dtype=jnp.int32)
+        as_f = ids.astype(jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(as_f).round().astype(np.int32), np.asarray(ids)
+        )
+
+    def test_residual_add(self, params):
+        rs = np.random.RandomState(12)
+        h = jnp.asarray(rs.randn(1, CFG.d_embed).astype(np.float32))
+        s = jnp.asarray(rs.randn(1, CFG.d_embed).astype(np.float32))
+        np.testing.assert_array_equal(M.residual_add_step(h, s), h + s)
+
+
 class TestAotPipeline:
     def test_lower_all_artifacts(self):
         arts = aot.lower_artifacts()
@@ -219,3 +274,21 @@ class TestAotPipeline:
             assert mod is not None, name
             # Tuple-root convention the rust loader expects.
             assert "ROOT" in text and "tuple" in text, name
+
+    def test_device_artifacts_lower_untupled(self):
+        """The dev_* set must have ARRAY roots (no tuple) so PJRT returns
+        chainable buffers — the whole point of the device-resident path."""
+        from jax._src.lib import xla_client as xc
+
+        arts = aot.lower_device_artifacts()
+        assert set(arts) == {
+            "dev_embed", "dev_qkv", "dev_k_append", "dev_v_append",
+            "dev_attn_out", "dev_moe_norm", "dev_router", "dev_residual",
+            "dev_experts_ns4", "dev_experts_ns8", "dev_lm_head",
+        }
+        for name, text in arts.items():
+            assert text.startswith("HloModule"), f"{name} not HLO text"
+            mod = xc._xla.hlo_module_from_text(text)
+            assert mod is not None, name
+            root = [ln for ln in text.splitlines() if "ROOT" in ln]
+            assert root and "tuple(" not in root[-1], f"{name} root is a tuple"

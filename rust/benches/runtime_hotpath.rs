@@ -6,7 +6,8 @@ use std::path::Path;
 
 use apple_moe::cluster::live::{LiveCluster, LiveConfig};
 use apple_moe::engine::request::Request;
-use apple_moe::runtime::NanoRuntime;
+use apple_moe::metrics::PhaseMetrics;
+use apple_moe::runtime::{DeviceState, NanoRuntime};
 use apple_moe::util::bench::{report, section, time_runs};
 
 fn main() {
@@ -64,17 +65,96 @@ fn main() {
         rt.dense_step(3, &kc, &vc, 0).unwrap();
     }));
 
+    if rt.has_device_path() {
+        section("host-roundtrip vs device-resident decode step (single node)");
+        // Host path: the fused attn_router round-trips both caches per
+        // layer; device path: DeviceState keeps everything on device.
+        // Transfer meters accumulate over every closure invocation.
+        const WARMUP: usize = 3;
+        const SAMPLES: usize = 20;
+        const STEPS: f64 = (WARMUP + SAMPLES) as f64;
+        let node16 = rt.build_node_experts(&(0..16).collect::<Vec<_>>()).unwrap();
+        let m = rt.manifest.clone();
+        {
+            let mut kcs: Vec<_> = (0..m.n_layers).map(|_| rt.empty_layer_cache()).collect();
+            let mut vcs = kcs.clone();
+            let mut pos = 0usize;
+            rt.take_transfer_stats();
+            let samples = time_runs(WARMUP, SAMPLES, || {
+                let mut x = rt.embed(7).unwrap();
+                for l in 0..m.n_layers {
+                    let ar = rt.attn_router(l, &x, &kcs[l], &vcs[l], pos).unwrap();
+                    kcs[l] = ar.k_cache;
+                    vcs[l] = ar.v_cache;
+                    let ids: Vec<usize> = ar
+                        .top_i
+                        .iter()
+                        .map(|&e| node16.local_index(e).unwrap())
+                        .collect();
+                    let p =
+                        rt.node_experts_direct(&node16, l, &ar.moe_in, &ids, &ar.top_w).unwrap();
+                    for (xi, (hi, ci)) in x.iter_mut().zip(ar.h.iter().zip(&p)) {
+                        *xi = hi + ci;
+                    }
+                }
+                rt.lm_head(&x).unwrap();
+                pos = (pos + 1) % m.max_seq;
+            });
+            let ts = rt.take_transfer_stats();
+            report("decode step host-roundtrip", &samples);
+            println!(
+                "  transfers: {:.1} KiB/step over {STEPS:.0} steps",
+                (ts.h2d_bytes + ts.d2h_bytes) as f64 / STEPS / 1024.0
+            );
+        }
+        {
+            let mut st = DeviceState::new(&rt).unwrap();
+            let mut pos = 0usize;
+            rt.take_transfer_stats();
+            let samples = time_runs(WARMUP, SAMPLES, || {
+                st.begin_token(&rt, 7).unwrap();
+                for l in 0..m.n_layers {
+                    let (top_w, top_i) = st.attn_router(&rt, l, pos).unwrap();
+                    let ids: Vec<usize> =
+                        top_i.iter().map(|&e| node16.local_index(e).unwrap()).collect();
+                    let p = st.node_experts(&rt, &node16, l, &ids, &top_w).unwrap();
+                    st.finish_layer_device(&rt, &p).unwrap();
+                }
+                st.logits(&rt).unwrap();
+                pos = (pos + 1) % m.max_seq;
+            });
+            let ts = rt.take_transfer_stats();
+            report("decode step device-resident", &samples);
+            println!(
+                "  transfers: {:.1} KiB/step over {STEPS:.0} steps",
+                (ts.h2d_bytes + ts.d2h_bytes) as f64 / STEPS / 1024.0
+            );
+        }
+    } else {
+        println!("\n(artifacts predate the dev_* set: skipping device-resident section)");
+    }
+
     section("end-to-end live decode (2-node threaded cluster)");
-    let cluster = LiveCluster::start(LiveConfig::new(dir.clone(), 2)).expect("cluster");
-    let mut req = Request::synthetic(0, 4, 512);
-    req.max_new_tokens = 16;
-    let res = cluster.serve(req).unwrap();
-    cluster.shutdown();
-    let d = &res.metrics.decode;
-    let (moe, comm, misc) = d.breakdown_secs();
-    println!(
-        "decode: {:.1} tok/s ({:.4} s/token; MoE {moe:.4} Comm {comm:.4} Misc {misc:.4})",
-        d.tokens_per_sec(),
-        d.secs_per_token()
-    );
+    let run_cluster = |device_resident: bool| -> PhaseMetrics {
+        let mut cfg = LiveConfig::new(dir.clone(), 2);
+        cfg.device_resident = device_resident;
+        let cluster = LiveCluster::start(cfg).expect("cluster");
+        let mut req = Request::synthetic(0, 4, 512);
+        req.max_new_tokens = 16;
+        let res = cluster.serve(req).unwrap();
+        cluster.shutdown();
+        res.metrics.decode.clone()
+    };
+    for (label, device) in [("host-roundtrip", false), ("device-resident", true)] {
+        let d = run_cluster(device);
+        let (moe, comm, misc) = d.breakdown_secs();
+        println!(
+            "decode [{label}]: {:.1} tok/s ({:.4} s/token; MoE {moe:.4} Comm {comm:.4} \
+             Misc {misc:.4}; {:.1} KiB/token h<->d, {:.4} s/token in transfers)",
+            d.tokens_per_sec(),
+            d.secs_per_token(),
+            d.transfer_bytes_per_token() / 1024.0,
+            d.transfer_secs_per_token(),
+        );
+    }
 }

@@ -33,6 +33,9 @@ pub fn run(args: &mut Args) -> Result<()> {
         ),
     };
     let seed = args.u64_or("seed", 0xD8B2)?;
+    // Force the host-tensor reference path (per-layer cache round trips;
+    // the default device-resident path is the §Perf-optimized regime).
+    let host_path = args.flag("host-path");
     let dir = artifacts_dir(args);
     args.finish()?;
 
@@ -42,6 +45,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     cfg.network = network;
     cfg.sampler = Sampler::Greedy;
     cfg.seed = seed;
+    cfg.device_resident = !host_path;
 
     eprintln!("starting {nodes}-node live cluster (compiling artifacts on every node)...");
     let cluster = LiveCluster::start(cfg)?;
@@ -63,6 +67,11 @@ pub fn run(args: &mut Args) -> Result<()> {
         p.tokens_per_sec(),
         d.tokens_per_sec(),
         d.secs_per_token(),
+    );
+    println!(
+        "host<->device: {:.1} KiB/token ({:.4} s/token in transfers)",
+        d.transfer_bytes_per_token() / 1024.0,
+        d.transfer_secs_per_token(),
     );
     Ok(())
 }

@@ -17,11 +17,14 @@ pub fn run(args: &mut Args) -> Result<()> {
     let n_requests = args.usize_or("requests", 4)?;
     let prompt_tokens = args.usize_or("prompt-tokens", 16)?;
     let gen_tokens = args.usize_or("gen-tokens", 32)?;
+    let host_path = args.flag("host-path");
     let dir = artifacts_dir(args);
     args.finish()?;
 
     eprintln!("starting {nodes}-node live cluster...");
-    let cluster = LiveCluster::start(LiveConfig::new(dir, nodes))?;
+    let mut cfg = LiveConfig::new(dir, nodes);
+    cfg.device_resident = !host_path;
+    let cluster = LiveCluster::start(cfg)?;
 
     let mut rows = vec![vec![
         "req".to_string(),

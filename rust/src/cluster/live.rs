@@ -16,6 +16,7 @@
 //! All coordination logic (layout, planning, LRU) is the same
 //! `moe::Planner` the virtual-time DES uses.
 
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -31,7 +32,8 @@ use crate::model::layout::ExpertLayout;
 use crate::moe::balance::Planner;
 use crate::moe::router::RouterDraw;
 use crate::network::transport::{self, bytes_to_f32s, f32s_to_bytes, tag, Endpoint};
-use crate::runtime::{HostTensor, NanoRuntime};
+use crate::runtime::nano::resident_index;
+use crate::runtime::{DeviceState, HostTensor, NanoRuntime};
 use crate::util::rng::Rng;
 
 const RECV_TIMEOUT: Duration = Duration::from_secs(120);
@@ -50,6 +52,12 @@ pub struct LiveConfig {
     pub network: Option<NetworkProfile>,
     pub sampler: Sampler,
     pub seed: u64,
+    /// Serve on the device-resident decode path (`DeviceState`): K/V
+    /// caches and activations stay as PJRT buffers across the whole
+    /// loop — zero per-layer cache round trips (§Perf). Falls back to
+    /// the host-tensor reference path when the artifacts predate the
+    /// `dev_*` set. `false` forces the reference path.
+    pub device_resident: bool,
 }
 
 impl LiveConfig {
@@ -62,6 +70,7 @@ impl LiveConfig {
             network: None,
             sampler: Sampler::Greedy,
             seed: 0xD8B2,
+            device_resident: true,
         }
     }
 
@@ -150,6 +159,9 @@ struct NodeWorker {
     rt: NanoRuntime,
     experts: crate::runtime::NodeExperts,
     planner: Planner,
+    /// Global→local expert maps per node (the centralized leader maps
+    /// remote peers' slot assignments without linear scans).
+    peer_index: Vec<HashMap<usize, usize>>,
     ep: Endpoint,
     rng: Rng,
 }
@@ -176,10 +188,11 @@ impl NodeWorker {
             }
         };
         let experts = rt.build_node_experts(&layout.resident[node])?;
+        let peer_index = layout.resident.iter().map(|r| resident_index(r)).collect();
         let planner = Planner::new(cfg.balancing, layout);
         let rng = Rng::new(cfg.seed); // identical on every node:
                                       // deterministic replicated sampling
-        let mut w = NodeWorker { node, cfg, rt, experts, planner, ep, rng };
+        let mut w = NodeWorker { node, cfg, rt, experts, planner, peer_index, ep, rng };
         while let Ok(cmd) = rx.recv() {
             match cmd {
                 Cmd::Shutdown => break,
@@ -195,16 +208,52 @@ impl NodeWorker {
     }
 
     fn serve(&mut self, req: &Request) -> Result<RequestResult> {
+        let device = self.cfg.device_resident && self.rt.has_device_path();
+        if self.cfg.device_resident && !device {
+            log::warn!(
+                "node {}: artifacts lack the dev_* set — serving on the \
+                 host-tensor reference path (re-run `make artifacts`)",
+                self.node
+            );
+        }
         match self.cfg.topology {
+            Topology::Decentralized if device => self.serve_decentralized_dev(req),
             Topology::Decentralized => self.serve_decentralized(req),
             Topology::Centralized => {
-                if self.node == 0 {
-                    self.serve_central_leader(req)
-                } else {
+                if self.node != 0 {
+                    // Workers only ever see wire traffic (moe_in comes
+                    // off the scatter and must be uploaded either way);
+                    // one code path serves both modes.
                     self.serve_central_worker(req)
+                } else if device {
+                    self.serve_central_leader_dev(req)
+                } else {
+                    self.serve_central_leader(req)
                 }
             }
         }
+    }
+
+    /// Choose step `i`'s input token: prompt token during prefill, else
+    /// sample from the last logits. `replicated` marks the decentralized
+    /// protocol, where every node runs the same deterministic sampler
+    /// but only node 0 records the generated token.
+    fn next_token(
+        &mut self,
+        req: &Request,
+        i: usize,
+        last_logits: &[f32],
+        generated: &mut Vec<u32>,
+        replicated: bool,
+    ) -> u32 {
+        if i < req.prompt.len() {
+            return req.prompt[i];
+        }
+        let next = self.cfg.sampler.sample(last_logits, &mut self.rng);
+        if !replicated || self.node == 0 {
+            generated.push(next);
+        }
+        next
     }
 
     // ---------------- decentralized (P-L_R-D wire protocol) ----------
@@ -226,18 +275,10 @@ impl NodeWorker {
                 break;
             }
             let is_prefill = i < req.prompt.len();
-            let tok = if is_prefill {
-                req.prompt[i]
-            } else {
-                // Same logits + same sampler state on every node.
-                let next = self.cfg.sampler.sample(&last_logits, &mut self.rng);
-                if self.node == 0 {
-                    generated.push(next);
-                }
-                next
-            };
+            let tok = self.next_token(req, i, &last_logits, &mut generated, true);
 
             let mut b = TokenBreakdown::default();
+            self.rt.take_transfer_stats();
             let t_embed = Instant::now();
             let mut x = self.rt.embed(tok)?;
             b.misc_ns += t_embed.elapsed().as_nanos() as u64;
@@ -275,6 +316,85 @@ impl NodeWorker {
             let t_head = Instant::now();
             last_logits = self.rt.lm_head(&x)?;
             b.misc_ns += t_head.elapsed().as_nanos() as u64;
+            note_transfers(&mut b, &self.rt);
+
+            if is_prefill {
+                metrics.prefill.push(b);
+            } else {
+                metrics.decode.push(b);
+            }
+            pos += 1;
+            step += 1;
+        }
+        Ok(RequestResult { id: req.id, generated, metrics })
+    }
+
+    /// Decentralized serving on the device-resident path: identical wire
+    /// protocol (P-L_R-D) and identical math, but K/V caches and the
+    /// x/h/moe_in activations never leave the device — the only host
+    /// crossings per layer are the router's top-k and the all-reduce
+    /// payload (see `runtime::device`). Per-bucket times here attribute
+    /// async PJRT work to whichever call blocks first (see the
+    /// `TokenBreakdown` caveat); totals stay comparable to the host
+    /// path.
+    fn serve_decentralized_dev(&mut self, req: &Request) -> Result<RequestResult> {
+        let m = self.rt.manifest.clone();
+        let mut metrics = RunMetrics::default();
+        let mut state = DeviceState::new(&self.rt)?;
+        let mut generated = Vec::new();
+        let mut pos = 0usize;
+        let mut step: u32 = 0;
+        let mut last_logits = Vec::new();
+
+        let total = req.prompt.len() + req.max_new_tokens;
+        for i in 0..total {
+            if pos >= m.max_seq {
+                break;
+            }
+            let is_prefill = i < req.prompt.len();
+            let tok = self.next_token(req, i, &last_logits, &mut generated, true);
+
+            let mut b = TokenBreakdown::default();
+            self.rt.take_transfer_stats();
+            let t_embed = Instant::now();
+            state.begin_token(&self.rt, tok)?;
+            b.misc_ns += t_embed.elapsed().as_nanos() as u64;
+
+            for l in 0..m.n_layers {
+                let t_misc = Instant::now();
+                let (top_w, top_i) = state.attn_router(&self.rt, l, pos)?;
+                let draw = RouterDraw { selected: top_i, weights: top_w };
+                let plan = self.planner.plan_layer(&draw);
+                b.misc_ns += t_misc.elapsed().as_nanos() as u64;
+
+                let t_moe = Instant::now();
+                let (idx, w) = self.slots_for(&plan.per_node[self.node]);
+                let partial = state.node_experts(&self.rt, &self.experts, l, &idx, &w)?;
+                b.moe_ns += t_moe.elapsed().as_nanos() as u64;
+
+                if self.ep.n_nodes == 1 {
+                    // Single node: the local partial IS the sum — it
+                    // never leaves the device.
+                    let t_sum = Instant::now();
+                    state.finish_layer_device(&self.rt, &partial)?;
+                    b.misc_ns += t_sum.elapsed().as_nanos() as u64;
+                } else {
+                    // The partial must hit the wire: this download (and
+                    // the summed upload) are protocol traffic.
+                    let t_comm = Instant::now();
+                    let mine = self.rt.download_f32(&partial)?;
+                    let summed = self.all_reduce(&mine, PHASE_PARTIAL, l as u32, step)?;
+                    b.comm_ns += t_comm.elapsed().as_nanos() as u64;
+
+                    let t_sum = Instant::now();
+                    state.finish_layer_host(&self.rt, &summed)?;
+                    b.misc_ns += t_sum.elapsed().as_nanos() as u64;
+                }
+            }
+            let t_head = Instant::now();
+            last_logits = state.logits(&self.rt)?;
+            b.misc_ns += t_head.elapsed().as_nanos() as u64;
+            note_transfers(&mut b, &self.rt);
 
             if is_prefill {
                 metrics.prefill.push(b);
@@ -310,27 +430,22 @@ impl NodeWorker {
         Ok(acc)
     }
 
-    /// Map a `NodeWork` plan to the artifact's fixed slot arrays.
-    fn slots_for(&self, work: &crate::moe::balance::NodeWork) -> (Vec<usize>, Vec<f32>) {
-        // Busy-full plans need all resident slots; router-aided and
-        // selected-only never exceed top_k, so they use the smaller fast
-        // artifact (§Perf).
-        let ns = if self.cfg.balancing == Balancing::BusyFull {
+    /// Slot count the artifacts expect under the active balancing mode:
+    /// busy-full plans need all resident slots; router-aided and
+    /// selected-only never exceed top_k, so they use the smaller fast
+    /// artifact (§Perf).
+    fn plan_ns(&self) -> usize {
+        if self.cfg.balancing == Balancing::BusyFull {
             self.rt.manifest.num_slots
         } else {
             self.rt.manifest.fast_num_slots
-        };
-        let mut idx = vec![0usize; ns];
-        let mut w = vec![0f32; ns];
-        for (s, run) in work.runs.iter().take(ns).enumerate() {
-            let local = self
-                .experts
-                .local_index(run.expert)
-                .expect("planner assigned a non-resident expert");
-            idx[s] = local;
-            w[s] = if run.is_padding { 0.0 } else { run.weight };
         }
-        (idx, w)
+    }
+
+    /// Map this node's `NodeWork` plan to the artifact's fixed slot
+    /// arrays.
+    fn slots_for(&self, work: &crate::moe::balance::NodeWork) -> (Vec<usize>, Vec<f32>) {
+        slots_from_index(work, &self.peer_index[self.node], self.plan_ns())
     }
 
     // ---------------- centralized (Figs. 2–3 wire protocol) ----------
@@ -352,14 +467,9 @@ impl NodeWorker {
                 break;
             }
             let is_prefill = i < req.prompt.len();
-            let tok = if is_prefill {
-                req.prompt[i]
-            } else {
-                let next = self.cfg.sampler.sample(&last_logits, &mut self.rng);
-                generated.push(next);
-                next
-            };
+            let tok = self.next_token(req, i, &last_logits, &mut generated, false);
             let mut b = TokenBreakdown::default();
+            self.rt.take_transfer_stats();
             let t0 = Instant::now();
             let mut x = self.rt.embed(tok)?;
             b.misc_ns += t0.elapsed().as_nanos() as u64;
@@ -378,23 +488,7 @@ impl NodeWorker {
 
                 // Scatter: moe_in + per-worker slot assignments.
                 let t_comm = Instant::now();
-                for peer in 1..self.ep.n_nodes {
-                    let work = &plan.per_node[peer];
-                    let mut payload = f32s_to_bytes(&ar.moe_in);
-                    // slot assignment appended: ns × (i32 idx, f32 w)
-                    let ns = if self.cfg.balancing == Balancing::BusyFull {
-                        self.rt.manifest.num_slots
-                    } else {
-                        self.rt.manifest.fast_num_slots
-                    };
-                    let (idx, w) =
-                        slots_for_layout(work, &self.planner.layout.resident[peer], ns);
-                    for s in 0..idx.len() {
-                        payload.extend_from_slice(&idx[s].to_le_bytes());
-                        payload.extend_from_slice(&w[s].to_le_bytes());
-                    }
-                    self.ep.send(peer, tag(PHASE_SCATTER, l as u32, step), payload)?;
-                }
+                self.scatter_layer(&plan, &ar.moe_in, l as u32, step)?;
                 b.comm_ns += t_comm.elapsed().as_nanos() as u64;
 
                 // Own experts.
@@ -406,13 +500,7 @@ impl NodeWorker {
 
                 // Gather partials.
                 let t_gather = Instant::now();
-                let envs = self.ep.gather(tag(PHASE_GATHER, l as u32, step), RECV_TIMEOUT)?;
-                let mut sum = mine;
-                for e in envs {
-                    for (a, v) in sum.iter_mut().zip(bytes_to_f32s(&e.payload)) {
-                        *a += v;
-                    }
-                }
+                let sum = self.gather_partials(mine, l as u32, step)?;
                 b.comm_ns += t_gather.elapsed().as_nanos() as u64;
 
                 for (xi, (hi, ci)) in x.iter_mut().zip(ar.h.iter().zip(&sum)) {
@@ -422,6 +510,7 @@ impl NodeWorker {
             let t_head = Instant::now();
             last_logits = self.rt.lm_head(&x)?;
             b.misc_ns += t_head.elapsed().as_nanos() as u64;
+            note_transfers(&mut b, &self.rt);
             if is_prefill {
                 metrics.prefill.push(b);
             } else {
@@ -434,6 +523,118 @@ impl NodeWorker {
         // they will wait for next (layer 0 of the step after the last).
         self.ep.broadcast(tag(PHASE_SCATTER, 0, step), &[])?;
         Ok(RequestResult { id: req.id, generated, metrics })
+    }
+
+    /// Centralized leader on the device-resident path: the Figs. 2–3
+    /// wire protocol is unchanged (workers cannot tell the difference);
+    /// the leader's caches/activations stay on device. The scatter's
+    /// `moe_in` download and the gather-sum upload are protocol traffic.
+    fn serve_central_leader_dev(&mut self, req: &Request) -> Result<RequestResult> {
+        let m = self.rt.manifest.clone();
+        let mut metrics = RunMetrics::default();
+        let mut state = DeviceState::new(&self.rt)?;
+        let mut generated = Vec::new();
+        let mut pos = 0usize;
+        let mut step: u32 = 0;
+        let mut last_logits = Vec::new();
+
+        let total = req.prompt.len() + req.max_new_tokens;
+        for i in 0..total {
+            if pos >= m.max_seq {
+                break;
+            }
+            let is_prefill = i < req.prompt.len();
+            let tok = self.next_token(req, i, &last_logits, &mut generated, false);
+            let mut b = TokenBreakdown::default();
+            self.rt.take_transfer_stats();
+            let t0 = Instant::now();
+            state.begin_token(&self.rt, tok)?;
+            b.misc_ns += t0.elapsed().as_nanos() as u64;
+
+            for l in 0..m.n_layers {
+                let t_misc = Instant::now();
+                let (top_w, top_i) = state.attn_router(&self.rt, l, pos)?;
+                let draw = RouterDraw { selected: top_i, weights: top_w };
+                let plan = self.planner.plan_layer(&draw);
+                b.misc_ns += t_misc.elapsed().as_nanos() as u64;
+
+                let t_comm = Instant::now();
+                if self.ep.n_nodes > 1 {
+                    let moe_in = state.moe_in_host(&self.rt)?; // scatter payload
+                    self.scatter_layer(&plan, &moe_in, l as u32, step)?;
+                }
+                b.comm_ns += t_comm.elapsed().as_nanos() as u64;
+
+                let t_moe = Instant::now();
+                let (idx, w) = self.slots_for(&plan.per_node[0]);
+                let partial = state.node_experts(&self.rt, &self.experts, l, &idx, &w)?;
+                b.moe_ns += t_moe.elapsed().as_nanos() as u64;
+
+                if self.ep.n_nodes == 1 {
+                    let t_sum = Instant::now();
+                    state.finish_layer_device(&self.rt, &partial)?;
+                    b.misc_ns += t_sum.elapsed().as_nanos() as u64;
+                } else {
+                    let t_gather = Instant::now();
+                    let mine = self.rt.download_f32(&partial)?;
+                    let sum = self.gather_partials(mine, l as u32, step)?;
+                    b.comm_ns += t_gather.elapsed().as_nanos() as u64;
+
+                    let t_sum = Instant::now();
+                    state.finish_layer_host(&self.rt, &sum)?;
+                    b.misc_ns += t_sum.elapsed().as_nanos() as u64;
+                }
+            }
+            let t_head = Instant::now();
+            last_logits = state.logits(&self.rt)?;
+            b.misc_ns += t_head.elapsed().as_nanos() as u64;
+            note_transfers(&mut b, &self.rt);
+            if is_prefill {
+                metrics.prefill.push(b);
+            } else {
+                metrics.decode.push(b);
+            }
+            pos += 1;
+            step += 1;
+        }
+        self.ep.broadcast(tag(PHASE_SCATTER, 0, step), &[])?;
+        Ok(RequestResult { id: req.id, generated, metrics })
+    }
+
+    /// Leader-side scatter: `moe_in` + per-worker slot assignments
+    /// (shared by the host and device-resident centralized loops).
+    fn scatter_layer(
+        &mut self,
+        plan: &crate::moe::balance::LayerPlan,
+        moe_in: &[f32],
+        layer: u32,
+        step: u32,
+    ) -> Result<()> {
+        let ns = self.plan_ns();
+        for peer in 1..self.ep.n_nodes {
+            let work = &plan.per_node[peer];
+            let mut payload = f32s_to_bytes(moe_in);
+            // slot assignment appended: ns × (i32 idx, f32 w)
+            let (idx, w) = slots_from_index(work, &self.peer_index[peer], ns);
+            for s in 0..idx.len() {
+                payload.extend_from_slice(&(idx[s] as i32).to_le_bytes());
+                payload.extend_from_slice(&w[s].to_le_bytes());
+            }
+            self.ep.send(peer, tag(PHASE_SCATTER, layer, step), payload)?;
+        }
+        Ok(())
+    }
+
+    /// Leader-side gather: sum own partial with every worker's.
+    fn gather_partials(&mut self, mine: Vec<f32>, layer: u32, step: u32) -> Result<Vec<f32>> {
+        let envs = self.ep.gather(tag(PHASE_GATHER, layer, step), RECV_TIMEOUT)?;
+        let mut sum = mine;
+        for e in envs {
+            for (a, v) in sum.iter_mut().zip(bytes_to_f32s(&e.payload)) {
+                *a += v;
+            }
+        }
+        Ok(sum)
     }
 
     fn serve_central_worker(&mut self, _req: &Request) -> Result<RequestResult> {
@@ -481,21 +682,29 @@ impl NodeWorker {
     }
 }
 
-/// Slot mapping for a remote worker's resident list (leader side).
-fn slots_for_layout(
+/// Map a `NodeWork` plan onto `ns` fixed slot arrays via a node's
+/// global→local expert map (precomputed once per cluster in
+/// `NodeWorker::run`); padding slots carry weight 0.
+fn slots_from_index(
     work: &crate::moe::balance::NodeWork,
-    resident: &[usize],
+    index: &HashMap<usize, usize>,
     ns: usize,
-) -> (Vec<i32>, Vec<f32>) {
-    let mut idx = vec![0i32; ns];
+) -> (Vec<usize>, Vec<f32>) {
+    let mut idx = vec![0usize; ns];
     let mut w = vec![0f32; ns];
     for (s, run) in work.runs.iter().take(ns).enumerate() {
-        let local = resident
-            .iter()
-            .position(|&e| e == run.expert)
-            .expect("planner assigned non-resident expert");
-        idx[s] = local as i32;
+        let local = *index.get(&run.expert).expect("planner assigned non-resident expert");
+        idx[s] = local;
         w[s] = if run.is_padding { 0.0 } else { run.weight };
     }
     (idx, w)
+}
+
+/// Fold the runtime's per-token transfer meter into a breakdown.
+fn note_transfers(b: &mut TokenBreakdown, rt: &NanoRuntime) {
+    let ts = rt.take_transfer_stats();
+    b.h2d_ns = ts.h2d_ns;
+    b.d2h_ns = ts.d2h_ns;
+    b.h2d_bytes = ts.h2d_bytes;
+    b.d2h_bytes = ts.d2h_bytes;
 }

@@ -259,22 +259,43 @@ impl ClusterSim {
 
     /// Simulate prompt evaluation (prefill) of `tokens` prompt tokens.
     /// MLX prompt processing amortizes weight loads and communications
-    /// over `prefill_chunk` tokens; misc is charged per token.
+    /// over `prefill_chunk` tokens; misc is charged per token. Both the
+    /// booked per-token breakdowns and the virtual clock follow that
+    /// model (the clock advances via `prefill_chunk_step`, so
+    /// single-request runs and the multi-user scheduler agree on what a
+    /// prompt costs).
     pub fn prefill(&mut self, tokens: usize, metrics: &mut RunMetrics) {
-        let c = self.params.prefill_chunk.max(1) as u64;
-        for _ in 0..tokens {
-            let full = self.decode_token_inner_scaled(c);
-            metrics.prefill.push(full);
+        let c = self.params.prefill_chunk.max(1);
+        let mut left = tokens;
+        while left > 0 {
+            let chunk = c.min(left);
+            let b = self.prefill_chunk_step(chunk);
+            // Book per token: misc as charged, moe/comm amortized.
+            let per_token = TokenBreakdown {
+                moe_ns: b.moe_ns / chunk as u64,
+                comm_ns: b.comm_ns / chunk as u64,
+                misc_ns: b.misc_ns / chunk as u64,
+                ..b
+            };
+            for _ in 0..chunk {
+                metrics.prefill.push(per_token);
+            }
+            left -= chunk;
         }
     }
 
-    fn decode_token_inner_scaled(&mut self, amortize: u64) -> TokenBreakdown {
+    /// Advance the clock for ONE prompt-evaluation engine step covering
+    /// a chunk of `tokens` prompt tokens: weight loads / communications
+    /// are paid once per chunk, misc is charged per token. Returns the
+    /// whole chunk's breakdown (misc already multiplied). Used directly
+    /// by the multi-user scheduler, where a chunked prompt step competes
+    /// with other requests' decode steps for the single pipeline.
+    pub fn prefill_chunk_step(&mut self, tokens: usize) -> TokenBreakdown {
+        let t = tokens.max(1) as u64;
         let b = self.decode_token();
-        TokenBreakdown {
-            moe_ns: b.moe_ns / amortize,
-            comm_ns: b.comm_ns / amortize,
-            misc_ns: b.misc_ns,
-        }
+        let extra_misc = (t - 1) * b.misc_ns;
+        self.now += extra_misc;
+        TokenBreakdown { misc_ns: t * b.misc_ns, ..b }
     }
 
     /// Run a full request: warmup (first request only), prefill, decode.
@@ -312,6 +333,39 @@ mod tests {
         let engine = EngineConfig::default(); // 128 in / 128 out, dbrx-132b
         let mut sim = ClusterSim::new(cluster, engine, SimParams::default());
         sim.run_request()
+    }
+
+    #[test]
+    fn prefill_chunk_step_amortizes_moe_comm_only() {
+        // A chunk of c prompt tokens costs c x misc + ONE moe/comm —
+        // cheaper than c decode steps, dearer than one.
+        let mk = || {
+            let mut s = ClusterSim::new(
+                ClusterConfig::new(2, Strategy::PLrD),
+                EngineConfig::default(),
+                SimParams::default(),
+            );
+            s.warmup();
+            s
+        };
+        let mut a = mk();
+        let t0 = a.virtual_now();
+        let b = a.prefill_chunk_step(4);
+        let chunk_ns = a.virtual_now() - t0;
+        assert_eq!(b.misc_ns % 4, 0, "misc charged per token");
+
+        let mut c = mk();
+        let t0 = c.virtual_now();
+        let one = c.decode_token();
+        let one_ns = c.virtual_now() - t0;
+        assert!(chunk_ns > one_ns, "chunk must cost more than one step");
+        assert!(
+            chunk_ns < 4 * one_ns,
+            "chunk of 4 must amortize below 4 full steps: {chunk_ns} vs {}",
+            4 * one_ns
+        );
+        // Clock delta = (moe+comm) once + 4x misc.
+        assert_eq!(chunk_ns, one.moe_ns + one.comm_ns + 4 * one.misc_ns);
     }
 
     /// Table 3, row "Naive": 1.2 t/s, breakdown 0.378 / 0.357 / 0.122.

@@ -41,6 +41,7 @@ impl DenseEngine {
         let max_seq = self.rt.manifest.max_seq;
         let mut last_logits: Vec<f32> = Vec::new();
 
+        self.rt.take_transfer_stats(); // exclude warmup/load transfers
         for &tok in &req.prompt {
             anyhow::ensure!(pos < max_seq, "prompt exceeds max_seq {max_seq}");
             let t0 = Instant::now();
@@ -49,10 +50,15 @@ impl DenseEngine {
             vc = v2;
             last_logits = logits;
             pos += 1;
+            let ts = self.rt.take_transfer_stats();
             metrics.prefill.push(TokenBreakdown {
                 moe_ns: 0,
                 comm_ns: 0,
                 misc_ns: t0.elapsed().as_nanos() as u64,
+                h2d_ns: ts.h2d_ns,
+                d2h_ns: ts.d2h_ns,
+                h2d_bytes: ts.h2d_bytes,
+                d2h_bytes: ts.d2h_bytes,
             });
         }
 
@@ -69,10 +75,15 @@ impl DenseEngine {
             vc = v2;
             last_logits = logits;
             pos += 1;
+            let ts = self.rt.take_transfer_stats();
             metrics.decode.push(TokenBreakdown {
                 moe_ns: 0,
                 comm_ns: 0,
                 misc_ns: t0.elapsed().as_nanos() as u64,
+                h2d_ns: ts.h2d_ns,
+                d2h_ns: ts.d2h_ns,
+                h2d_bytes: ts.h2d_bytes,
+                d2h_bytes: ts.d2h_bytes,
             });
         }
 

@@ -1,0 +1,232 @@
+//! Device-resident decode state — the live-cluster hot path without
+//! per-layer host round trips.
+//!
+//! The host-tensor reference path ([`NanoRuntime::attn_router`]) executes
+//! the fused per-layer artifact, whose *tuple* root PJRT hands back as a
+//! single opaque buffer: the only way to use any element is to download
+//! the whole tuple — both `[Hkv, S, hd]` K/V caches included — and
+//! re-upload the caches on the next step. At nano scale that is ~1 MB of
+//! host↔device traffic per layer per token, reproducing exactly the
+//! unoptimized memory-management regime the paper engineered away
+//! (§Perf optimization schemes).
+//!
+//! [`DeviceState`] instead drives the *untupled* `dev_*` role
+//! executables (single array roots, see `aot.py::lower_device_artifacts`)
+//! and keeps everything that can stay on the device on the device:
+//!
+//! - the per-layer K/V caches, for the whole request lifetime;
+//! - the residual stream `x`, the post-attention residual `h`, and the
+//!   normed MoE input, between roles within a token;
+//! - small repeated uploads (the `pos` scalar, the slot-weight vector)
+//!   behind value-keyed reuse caches, so an unchanged value costs zero
+//!   transfers.
+//!
+//! Per layer, the only host crossings left are the two the protocol
+//! itself demands: the router's packed top-k (the host-side planner
+//! consumes it) and the expert partial/all-reduce payload (it must hit
+//! the wire). Remaining residency gaps (sampler-on-device, wire-direct
+//! DMA) are tracked in ROADMAP.md "Open items".
+//!
+//! One `DeviceState` per (request, node); like the runtime itself it is
+//! thread-local by construction (PJRT handles are not `Send`).
+//!
+//! Numerical contract: identical math to the fused reference path,
+//! asserted op-for-op by `test_model.py::TestDeviceDecomposition` and
+//! end-to-end (logits within 1e-5, tokens identical) by
+//! `rust/tests/integration_runtime.rs` / `integration_cluster.rs`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::nano::NodeExperts;
+use crate::runtime::{HostTensor, NanoRuntime};
+
+/// Per-request decode state kept as `PjRtBuffer`s across the whole loop.
+pub struct DeviceState {
+    /// Residual stream [1, D] (valid between `begin_token` and `logits`).
+    x: Option<xla::PjRtBuffer>,
+    /// Post-attention residual [1, D] (valid within a layer).
+    h: Option<xla::PjRtBuffer>,
+    /// Normed MoE input [1, D] (valid within a layer).
+    moe_in: Option<xla::PjRtBuffer>,
+    /// Per-layer K/V caches [Hkv, S, hd], resident for the request.
+    k: Vec<Option<xla::PjRtBuffer>>,
+    v: Vec<Option<xla::PjRtBuffer>>,
+    /// Reused upload of the position scalar (same for all layers of a
+    /// token: one 4-byte upload per token instead of one per role call).
+    pos_cache: Option<(i32, xla::PjRtBuffer)>,
+    /// Reused upload of the slot-weight vector, keyed by value (padding
+    /// layers under busy-full frequently repeat it).
+    slot_w_cache: Option<(Vec<f32>, xla::PjRtBuffer)>,
+}
+
+impl DeviceState {
+    /// Fresh state with zeroed caches. The cache upload happens ONCE per
+    /// request here — never again during decode.
+    pub fn new(rt: &NanoRuntime) -> Result<DeviceState> {
+        rt.dev()?; // fail fast when the artifacts lack the dev_* set
+        let m = &rt.manifest;
+        let zero = HostTensor::zeros(vec![m.n_kv_heads, m.max_seq, m.head_dim]);
+        let mut k = Vec::with_capacity(m.n_layers);
+        let mut v = Vec::with_capacity(m.n_layers);
+        for _ in 0..m.n_layers {
+            k.push(Some(rt.upload_tensor(&zero)?));
+            v.push(Some(rt.upload_tensor(&zero)?));
+        }
+        Ok(DeviceState {
+            x: None,
+            h: None,
+            moe_in: None,
+            k,
+            v,
+            pos_cache: None,
+            slot_w_cache: None,
+        })
+    }
+
+    /// Embed `token` into the device-resident residual stream.
+    pub fn begin_token(&mut self, rt: &NanoRuntime, token: u32) -> Result<()> {
+        let tok = rt.buf_i32(&[token as i32], &[1])?;
+        self.x = Some(rt.run_dev(&rt.dev()?.embed, &[rt.embed_weight_buf(), &tok])?);
+        Ok(())
+    }
+
+    /// One layer's attention + routing, caches and activations staying on
+    /// device. Returns `(top_w, top_i)` — the packed [2K] router download
+    /// is one of the two host crossings this path performs per layer.
+    pub fn attn_router(
+        &mut self,
+        rt: &NanoRuntime,
+        layer: usize,
+        pos: usize,
+    ) -> Result<(Vec<f32>, Vec<usize>)> {
+        let dev = rt.dev()?;
+        let w = rt.attn_weights(layer);
+        let (ln1, wqkv, wo, ln2, wr) = (&w[0], &w[1], &w[2], &w[3], &w[4]);
+        let x = self.x.take().context("begin_token not called")?;
+
+        if self.pos_cache.as_ref().map(|(p, _)| *p) != Some(pos as i32) {
+            self.pos_cache = Some((pos as i32, rt.buf_i32(&[pos as i32], &[])?));
+        }
+        let (pv, pos_b) = self.pos_cache.take().expect("just ensured");
+        let kc = self.k[layer].take().context("cache buffer missing")?;
+        let vc = self.v[layer].take().context("cache buffer missing")?;
+
+        let qkv = rt.run_dev(&dev.qkv, &[ln1, wqkv, &x])?;
+        let new_k = rt.run_dev(&dev.k_append, &[&kc, &qkv, &pos_b])?;
+        let new_v = rt.run_dev(&dev.v_append, &[&vc, &qkv, &pos_b])?;
+        // `kc`/`vc` drop here: the state only ever references the newest
+        // cache generation (donation-safe if the artifacts alias I/O).
+        let h = rt.run_dev(&dev.attn_out, &[wo, &x, &qkv, &new_k, &new_v, &pos_b])?;
+        let moe_in = rt.run_dev(&dev.moe_norm, &[ln2, &h])?;
+        // The router consumes the normed buffer directly: one layernorm
+        // per layer, and its packed [2K] output is the only download.
+        let packed_buf = rt.run_dev(&dev.router, &[wr, &moe_in])?;
+        let packed = rt.download_f32(&packed_buf)?;
+
+        self.k[layer] = Some(new_k);
+        self.v[layer] = Some(new_v);
+        self.pos_cache = Some((pv, pos_b));
+        self.x = Some(x);
+        self.h = Some(h);
+        self.moe_in = Some(moe_in);
+
+        let k = rt.manifest.top_k;
+        if packed.len() != 2 * k {
+            bail!("router returned {} values, expected {}", packed.len(), 2 * k);
+        }
+        let top_w = packed[..k].to_vec();
+        let top_i = packed[k..].iter().map(|&f| f.round() as usize).collect();
+        Ok((top_w, top_i))
+    }
+
+    /// Download the current MoE input (centralized leader only: the
+    /// scatter payload must hit the wire, so this crossing is protocol
+    /// traffic, not overhead).
+    pub fn moe_in_host(&self, rt: &NanoRuntime) -> Result<Vec<f32>> {
+        let b = self.moe_in.as_ref().context("no moe_in: run attn_router first")?;
+        rt.download_f32(b)
+    }
+
+    /// Run this node's experts on the device-resident MoE input via the
+    /// direct-args executables. `local_ids.len()` selects the artifact
+    /// (fast_num_slots or num_slots). The returned partial stays on
+    /// device — download it only when it must hit the wire.
+    pub fn node_experts(
+        &mut self,
+        rt: &NanoRuntime,
+        node: &NodeExperts,
+        layer: usize,
+        local_ids: &[usize],
+        slot_w: &[f32],
+    ) -> Result<xla::PjRtBuffer> {
+        let dev = rt.dev()?;
+        let m = &rt.manifest;
+        let ns = local_ids.len();
+        if slot_w.len() != ns {
+            bail!("local_ids/slot_w length mismatch");
+        }
+        let exe = if ns == m.fast_num_slots {
+            &dev.experts_fast
+        } else if ns == m.num_slots {
+            &dev.experts_full
+        } else {
+            bail!("no dev experts executable for ns={ns}");
+        };
+        if self.slot_w_cache.as_ref().map(|(w, _)| w.as_slice()) != Some(slot_w) {
+            self.slot_w_cache = Some((slot_w.to_vec(), rt.buf_f32(slot_w, &[ns])?));
+        }
+        let (wv, wb) = self.slot_w_cache.take().expect("just ensured");
+        let moe_in = self.moe_in.take().context("no moe_in: run attn_router first")?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(2 + 3 * ns);
+        args.push(&moe_in);
+        args.push(&wb);
+        let row = &node.per_expert[layer];
+        for &local in local_ids {
+            let (w1, v1, w2) = row
+                .get(local)
+                .with_context(|| format!("slot id {local} out of range"))?;
+            args.push(w1);
+            args.push(v1);
+            args.push(w2);
+        }
+        let partial = rt.run_dev(exe, &args)?;
+
+        self.moe_in = Some(moe_in);
+        self.slot_w_cache = Some((wv, wb));
+        Ok(partial)
+    }
+
+    /// Close the layer with an all-reduced sum that is *already on
+    /// device* (single-node case: the local partial IS the sum — zero
+    /// crossings).
+    pub fn finish_layer_device(
+        &mut self,
+        rt: &NanoRuntime,
+        moe_sum: &xla::PjRtBuffer,
+    ) -> Result<()> {
+        let h = self.h.take().context("no h: run attn_router first")?;
+        self.x = Some(rt.run_dev(&rt.dev()?.residual, &[&h, moe_sum])?);
+        self.moe_in = None;
+        Ok(())
+    }
+
+    /// Close the layer with a host-side sum (multi-node: the summed
+    /// partials came off the wire, so this upload is protocol traffic).
+    pub fn finish_layer_host(&mut self, rt: &NanoRuntime, moe_sum: &[f32]) -> Result<()> {
+        let d = rt.manifest.d_embed;
+        if moe_sum.len() != d {
+            bail!("moe sum has {} elements, expected {d}", moe_sum.len());
+        }
+        let sum = rt.buf_f32(moe_sum, &[1, d])?;
+        self.finish_layer_device(rt, &sum)
+    }
+
+    /// Final norm + logits, downloaded for the host-side sampler (the
+    /// one per-token crossing; sampler-on-device is a tracked gap).
+    pub fn logits(&self, rt: &NanoRuntime) -> Result<Vec<f32>> {
+        let x = self.x.as_ref().context("no residual stream: token not run")?;
+        let b = rt.run_dev(&rt.dev()?.lm_head, &[rt.lnf_buf(), rt.head_buf(), x])?;
+        rt.download_f32(&b)
+    }
+}

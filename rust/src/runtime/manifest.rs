@@ -23,6 +23,10 @@ pub struct Manifest {
     pub num_slots: usize,
     /// Slot count of the fast serving artifacts (= top_k).
     pub fast_num_slots: usize,
+    /// The untupled `dev_*` artifact set is present (device-resident
+    /// decode path). Older artifact dirs lack it; the runtime then falls
+    /// back to the host-tensor reference path.
+    pub device_artifacts: bool,
 }
 
 impl Manifest {
@@ -55,6 +59,7 @@ impl Manifest {
                     v as usize
                 }
             },
+            device_artifacts: doc.int_or("device_artifacts", 0) != 0,
         };
         m.validate()?;
         Ok(m)
@@ -127,6 +132,13 @@ fast_num_slots = 4
         let dims = m.model_dims();
         assert_eq!(dims.d_qkv_hidden, 512);
         assert_eq!(dims.head_dim(), 32);
+    }
+
+    #[test]
+    fn device_artifacts_flag_defaults_off() {
+        assert!(!Manifest::parse(SAMPLE).unwrap().device_artifacts);
+        let with = format!("{SAMPLE}device_artifacts = 1\n");
+        assert!(Manifest::parse(&with).unwrap().device_artifacts);
     }
 
     #[test]

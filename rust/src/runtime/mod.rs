@@ -3,14 +3,51 @@
 //! client. This is the only module that touches the `xla` crate; Python
 //! never runs on the request path.
 //!
-//! Weights live on-device as `PjRtBuffer`s created once at load time;
-//! the hot path converts activations to buffers and calls `execute_b`.
+//! Weights live on-device as `PjRtBuffer`s created once at load time.
+//! Two execution paths share them:
+//!
+//! - the **host-tensor reference path** ([`NanoRuntime::attn_router`]
+//!   etc.): every activation and both K/V caches cross the host boundary
+//!   each call — simple, and the numerical baseline;
+//! - the **device-resident path** ([`device::DeviceState`]): activations
+//!   and caches stay as `PjRtBuffer`s across the whole decode loop; only
+//!   the router's top-k and the all-reduce payload touch the host.
+//!
+//! Every host↔device crossing in either path is metered through
+//! [`TransferStats`] so the live cluster can report `h2d`/`d2h` time and
+//! bytes per token (and tests can assert the device path stays off the
+//! PCIe-equivalent).
 
+pub mod device;
 pub mod manifest;
 pub mod nano;
 
+pub use device::DeviceState;
 pub use manifest::Manifest;
 pub use nano::{AttnRouterOut, NanoRuntime, NodeExperts};
+
+/// Host↔device transfer accounting, accumulated inside the runtime and
+/// drained per token by the serving loops ([`NanoRuntime::take_transfer_stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransferStats {
+    /// Time spent uploading host data to device buffers.
+    pub h2d_ns: u64,
+    /// Time spent downloading device buffers/literals to the host. On
+    /// PJRT the download also waits for the producing computation, so
+    /// this is an upper bound on pure transfer time.
+    pub d2h_ns: u64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+}
+
+impl TransferStats {
+    pub fn add(&mut self, other: TransferStats) {
+        self.h2d_ns += other.h2d_ns;
+        self.d2h_ns += other.d2h_ns;
+        self.h2d_bytes += other.h2d_bytes;
+        self.d2h_bytes += other.d2h_bytes;
+    }
+}
 
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -88,5 +125,15 @@ mod tests {
     #[test]
     fn zeros_has_right_len() {
         assert_eq!(HostTensor::zeros(vec![4, 5]).data.len(), 20);
+    }
+
+    #[test]
+    fn transfer_stats_accumulate() {
+        let mut a = TransferStats { h2d_ns: 1, d2h_ns: 2, h2d_bytes: 3, d2h_bytes: 4 };
+        a.add(TransferStats { h2d_ns: 10, d2h_ns: 20, h2d_bytes: 30, d2h_bytes: 40 });
+        assert_eq!(
+            a,
+            TransferStats { h2d_ns: 11, d2h_ns: 22, h2d_bytes: 33, d2h_bytes: 44 }
+        );
     }
 }

@@ -7,11 +7,13 @@
 //! buffers are replicated (the decentralized design, §4.3).
 
 use anyhow::{bail, Context, Result};
+use std::cell::{Cell, OnceCell};
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
 
 use crate::runtime::manifest::Manifest;
-use crate::runtime::{compile_artifact, HostTensor};
+use crate::runtime::{compile_artifact, HostTensor, TransferStats};
 
 /// Output of the per-layer attention + router artifact.
 #[derive(Debug, Clone)]
@@ -39,16 +41,70 @@ pub struct LayerExperts {
 /// A node's resident experts across all layers (+ the global→local map).
 pub struct NodeExperts {
     pub resident: Vec<usize>,
+    /// Global expert id → local slot, precomputed once (the planner asks
+    /// per slot per layer per token — a linear scan was O(n²) over runs).
+    index: HashMap<usize, usize>,
     pub layers: Vec<LayerExperts>,
     /// Per-expert buffers for the direct-args serving path (§Perf):
     /// `per_expert[layer][local] = (w1, v1, w2)`.
     pub per_expert: Vec<Vec<(xla::PjRtBuffer, xla::PjRtBuffer, xla::PjRtBuffer)>>,
 }
 
+/// Build the global→local map for a resident list (shared with the
+/// centralized leader, which needs one per *remote* peer as well).
+pub fn resident_index(resident: &[usize]) -> HashMap<usize, usize> {
+    resident.iter().enumerate().map(|(local, &e)| (e, local)).collect()
+}
+
 impl NodeExperts {
-    /// Map a global expert id to its local slot in the stack.
+    /// Map a global expert id to its local slot in the stack (O(1)).
     pub fn local_index(&self, expert: usize) -> Option<usize> {
-        self.resident.iter().position(|&e| e == expert)
+        self.index.get(&expert).copied()
+    }
+}
+
+/// The untupled single-output executables of the device-resident decode
+/// path (`dev_*.hlo.txt`, emitted by `aot.py::lower_device_artifacts`).
+/// Each returns an ARRAY root, so `execute_b` hands back a plain
+/// `PjRtBuffer` that chains into the next role without host staging.
+pub(crate) struct DeviceExes {
+    pub(crate) embed: xla::PjRtLoadedExecutable,
+    pub(crate) qkv: xla::PjRtLoadedExecutable,
+    pub(crate) k_append: xla::PjRtLoadedExecutable,
+    pub(crate) v_append: xla::PjRtLoadedExecutable,
+    pub(crate) attn_out: xla::PjRtLoadedExecutable,
+    pub(crate) moe_norm: xla::PjRtLoadedExecutable,
+    pub(crate) router: xla::PjRtLoadedExecutable,
+    pub(crate) residual: xla::PjRtLoadedExecutable,
+    /// Direct-args experts at ns = fast_num_slots / num_slots.
+    pub(crate) experts_fast: xla::PjRtLoadedExecutable,
+    pub(crate) experts_full: xla::PjRtLoadedExecutable,
+    pub(crate) lm_head: xla::PjRtLoadedExecutable,
+}
+
+impl DeviceExes {
+    fn compile(client: &xla::PjRtClient, dir: &Path, manifest: &Manifest) -> Result<DeviceExes> {
+        Ok(DeviceExes {
+            embed: compile_artifact(client, dir, "dev_embed")?,
+            qkv: compile_artifact(client, dir, "dev_qkv")?,
+            k_append: compile_artifact(client, dir, "dev_k_append")?,
+            v_append: compile_artifact(client, dir, "dev_v_append")?,
+            attn_out: compile_artifact(client, dir, "dev_attn_out")?,
+            moe_norm: compile_artifact(client, dir, "dev_moe_norm")?,
+            router: compile_artifact(client, dir, "dev_router")?,
+            residual: compile_artifact(client, dir, "dev_residual")?,
+            experts_fast: compile_artifact(
+                client,
+                dir,
+                &format!("dev_experts_ns{}", manifest.fast_num_slots),
+            )?,
+            experts_full: compile_artifact(
+                client,
+                dir,
+                &format!("dev_experts_ns{}", manifest.num_slots),
+            )?,
+            lm_head: compile_artifact(client, dir, "dev_lm_head")?,
+        })
     }
 }
 
@@ -67,6 +123,15 @@ pub struct NanoRuntime {
     experts_direct_exes: [xla::PjRtLoadedExecutable; 2],
     lm_head_exe: xla::PjRtLoadedExecutable,
     dense_exe: Option<xla::PjRtLoadedExecutable>,
+    /// The untupled device-resident role set, compiled lazily on first
+    /// use (host-path-only runs never pay the 11 extra compilations;
+    /// pre-`dev_*` artifact dirs never populate it).
+    device_exes: OnceCell<DeviceExes>,
+    /// Where the artifacts were loaded from (for lazy compilation).
+    artifact_dir: PathBuf,
+    /// Host↔device transfer meter (single-threaded per node — PJRT
+    /// handles are not `Send` — so a `Cell` suffices).
+    transfers: Cell<TransferStats>,
     /// Host copies of every weight (for stack slicing + the dense path).
     host_weights: HashMap<String, HostTensor>,
     /// Device buffers for the replicated (non-expert) weights.
@@ -104,7 +169,6 @@ impl NanoRuntime {
         } else {
             None
         };
-
         // Weights: npz -> host tensors -> device buffers.
         let npz = dir.join("weights.npz");
         let mut host_weights = HashMap::new();
@@ -149,6 +213,9 @@ impl NanoRuntime {
             experts_direct_exes,
             lm_head_exe,
             dense_exe,
+            device_exes: OnceCell::new(),
+            artifact_dir: dir.to_path_buf(),
+            transfers: Cell::new(TransferStats::default()),
             host_weights,
             embed_buf,
             lnf_buf,
@@ -165,22 +232,129 @@ impl NanoRuntime {
         self.host_weights.get(key)
     }
 
-    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    /// The untupled `dev_*` executables are available (device-resident
+    /// decode path). Cheap: consults the manifest, does not compile.
+    pub fn has_device_path(&self) -> bool {
+        self.manifest.device_artifacts
     }
 
-    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    /// The device-resident executables, compiled on first use.
+    pub(crate) fn dev(&self) -> Result<&DeviceExes> {
+        if !self.manifest.device_artifacts {
+            bail!("artifacts lack the dev_* set — re-run `make artifacts`");
+        }
+        if self.device_exes.get().is_none() {
+            let exes = DeviceExes::compile(&self.client, &self.artifact_dir, &self.manifest)?;
+            let _ = self.device_exes.set(exes);
+        }
+        Ok(self.device_exes.get().expect("just populated"))
     }
 
-    /// Execute and unpack the tuple root into literals.
+    pub(crate) fn attn_weights(&self, layer: usize) -> &[xla::PjRtBuffer; 5] {
+        &self.attn_bufs[layer]
+    }
+
+    pub(crate) fn embed_weight_buf(&self) -> &xla::PjRtBuffer {
+        &self.embed_buf
+    }
+
+    pub(crate) fn lnf_buf(&self) -> &xla::PjRtBuffer {
+        &self.lnf_buf
+    }
+
+    pub(crate) fn head_buf(&self) -> &xla::PjRtBuffer {
+        &self.head_buf
+    }
+
+    // ---- host↔device transfer metering -------------------------------
+
+    fn note_h2d(&self, bytes: u64, ns: u64) {
+        let mut t = self.transfers.get();
+        t.h2d_bytes += bytes;
+        t.h2d_ns += ns;
+        self.transfers.set(t);
+    }
+
+    fn note_d2h(&self, bytes: u64, ns: u64) {
+        let mut t = self.transfers.get();
+        t.d2h_bytes += bytes;
+        t.d2h_ns += ns;
+        self.transfers.set(t);
+    }
+
+    /// Cumulative transfer stats since the last [`take_transfer_stats`].
+    pub fn transfer_stats(&self) -> TransferStats {
+        self.transfers.get()
+    }
+
+    /// Drain the transfer meter (serving loops call this per token).
+    pub fn take_transfer_stats(&self) -> TransferStats {
+        self.transfers.replace(TransferStats::default())
+    }
+
+    pub(crate) fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        let t0 = Instant::now();
+        let b = self.client.buffer_from_host_buffer(data, dims, None)?;
+        self.note_h2d(4 * data.len() as u64, t0.elapsed().as_nanos() as u64);
+        Ok(b)
+    }
+
+    pub(crate) fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        let t0 = Instant::now();
+        let b = self.client.buffer_from_host_buffer(data, dims, None)?;
+        self.note_h2d(4 * data.len() as u64, t0.elapsed().as_nanos() as u64);
+        Ok(b)
+    }
+
+    /// Metered host-tensor upload (the K/V caches of the reference path).
+    pub(crate) fn upload_tensor(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        self.buf_f32(&t.data, &t.dims)
+    }
+
+    /// Download an f32 array buffer to the host (metered). On PJRT the
+    /// download also waits for the producing computation.
+    pub fn download_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
+        let lit = buf.to_literal_sync()?;
+        let out = lit.to_vec::<f32>()?;
+        self.note_d2h(4 * out.len() as u64, t0.elapsed().as_nanos() as u64);
+        Ok(out)
+    }
+
+    /// Execute and unpack the tuple root into literals (host path: the
+    /// whole output tuple — caches included — crosses to the host).
     fn run(
+        &self,
         exe: &xla::PjRtLoadedExecutable,
         args: &[&xla::PjRtBuffer],
     ) -> Result<Vec<xla::Literal>> {
         let out = exe.execute_b(args)?;
+        let t0 = Instant::now();
         let lit = out[0][0].to_literal_sync()?;
-        Ok(lit.to_tuple()?)
+        let parts = lit.to_tuple()?;
+        let ns = t0.elapsed().as_nanos() as u64;
+        let mut bytes = 0u64;
+        for p in &parts {
+            let n: u64 = p.array_shape()?.dims().iter().map(|&d| d as u64).product();
+            bytes += 4 * n;
+        }
+        self.note_d2h(bytes, ns);
+        Ok(parts)
+    }
+
+    /// Execute an untupled single-output executable, keeping the result
+    /// on device (the device-resident hot path: NO transfer recorded).
+    pub(crate) fn run_dev(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<xla::PjRtBuffer> {
+        let mut out = exe.execute_b(args)?;
+        let mut replica = out.pop().context("executable returned no replicas")?;
+        if replica.len() != 1 {
+            bail!("dev executable returned {} outputs, expected 1", replica.len());
+        }
+        Ok(replica.remove(0))
     }
 
     /// Build the device-resident expert stacks for a node holding
@@ -231,13 +405,18 @@ impl NanoRuntime {
             }
             per_expert.push(row);
         }
-        Ok(NodeExperts { resident: resident.to_vec(), layers, per_expert })
+        Ok(NodeExperts {
+            resident: resident.to_vec(),
+            index: resident_index(resident),
+            layers,
+            per_expert,
+        })
     }
 
     /// Token id -> residual input [1, D].
     pub fn embed(&self, token: u32) -> Result<Vec<f32>> {
         let tok = self.buf_i32(&[token as i32], &[1])?;
-        let parts = Self::run(&self.embed_exe, &[&self.embed_buf, &tok])?;
+        let parts = self.run(&self.embed_exe, &[&self.embed_buf, &tok])?;
         Ok(parts[0].to_vec::<f32>()?)
     }
 
@@ -253,11 +432,11 @@ impl NanoRuntime {
     ) -> Result<AttnRouterOut> {
         let m = &self.manifest;
         let xb = self.buf_f32(x, &[1, m.d_embed])?;
-        let kb = k_cache.to_buffer(&self.client)?;
-        let vb = v_cache.to_buffer(&self.client)?;
+        let kb = self.upload_tensor(k_cache)?;
+        let vb = self.upload_tensor(v_cache)?;
         let pb = self.buf_i32(&[pos as i32], &[])?;
         let w = &self.attn_bufs[layer];
-        let parts = Self::run(
+        let parts = self.run(
             &self.attn_router_exe,
             &[&w[0], &w[1], &w[2], &w[3], &w[4], &xb, &kb, &vb, &pb],
         )?;
@@ -296,7 +475,7 @@ impl NanoRuntime {
         let xb = self.buf_f32(moe_in, &[1, m.d_embed])?;
         let ib = self.buf_i32(slot_idx, &[m.num_slots])?;
         let wb = self.buf_f32(slot_w, &[m.num_slots])?;
-        let parts = Self::run(exe, &[&le.w1, &le.v1, &le.w2, &xb, &ib, &wb])?;
+        let parts = self.run(exe, &[&le.w1, &le.v1, &le.w2, &xb, &ib, &wb])?;
         Ok(parts[0].to_vec::<f32>()?)
     }
 
@@ -329,7 +508,7 @@ impl NanoRuntime {
         let xb = self.buf_f32(moe_in, &[1, m.d_embed])?;
         let ib = self.buf_i32(slot_idx, &[ns])?;
         let wb = self.buf_f32(slot_w, &[ns])?;
-        let parts = Self::run(exe, &[&le.w1, &le.v1, &le.w2, &xb, &ib, &wb])?;
+        let parts = self.run(exe, &[&le.w1, &le.v1, &le.w2, &xb, &ib, &wb])?;
         Ok(parts[0].to_vec::<f32>()?)
     }
 
@@ -372,14 +551,14 @@ impl NanoRuntime {
             args.push(v1);
             args.push(w2);
         }
-        let parts = Self::run(exe, &args)?;
+        let parts = self.run(exe, &args)?;
         Ok(parts[0].to_vec::<f32>()?)
     }
 
     /// Final norm + logits [1, V].
     pub fn lm_head(&self, h: &[f32]) -> Result<Vec<f32>> {
         let hb = self.buf_f32(h, &[1, self.manifest.d_embed])?;
-        let parts = Self::run(&self.lm_head_exe, &[&self.lnf_buf, &self.head_buf, &hb])?;
+        let parts = self.run(&self.lm_head_exe, &[&self.lnf_buf, &self.head_buf, &hb])?;
         Ok(parts[0].to_vec::<f32>()?)
     }
 
@@ -397,23 +576,26 @@ impl NanoRuntime {
             .as_ref()
             .context("runtime loaded without the dense executable")?;
         let m = &self.manifest;
-        // Assemble the flat arg list in dense_param_order.
+        // Assemble the flat arg list in dense_param_order. The weight
+        // uploads are metered too: re-uploading the whole model every
+        // step IS this path's transfer cost, and the h2d column would
+        // invert the dense-vs-distributed comparison if they bypassed
+        // the meter.
         let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
-        owned.push(self.host_weights["embed"].to_buffer(&self.client)?);
+        owned.push(self.upload_tensor(&self.host_weights["embed"])?);
         for l in 0..m.n_layers {
             for name in ["ln1", "wqkv", "wo", "ln2", "wr", "w1", "v1", "w2"] {
-                owned.push(self.host_weights[&format!("layer{l}.{name}")]
-                    .to_buffer(&self.client)?);
+                owned.push(self.upload_tensor(&self.host_weights[&format!("layer{l}.{name}")])?);
             }
         }
-        owned.push(self.host_weights["ln_f"].to_buffer(&self.client)?);
-        owned.push(self.host_weights["lm_head"].to_buffer(&self.client)?);
+        owned.push(self.upload_tensor(&self.host_weights["ln_f"])?);
+        owned.push(self.upload_tensor(&self.host_weights["lm_head"])?);
         owned.push(self.buf_i32(&[token as i32], &[1])?);
-        owned.push(k_caches.to_buffer(&self.client)?);
-        owned.push(v_caches.to_buffer(&self.client)?);
+        owned.push(self.upload_tensor(k_caches)?);
+        owned.push(self.upload_tensor(v_caches)?);
         owned.push(self.buf_i32(&[pos as i32], &[])?);
         let refs: Vec<&xla::PjRtBuffer> = owned.iter().collect();
-        let parts = Self::run(exe, &refs)?;
+        let parts = self.run(exe, &refs)?;
         Ok((
             parts[0].to_vec::<f32>()?,
             HostTensor::from_literal(&parts[1])?,

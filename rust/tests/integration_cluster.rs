@@ -83,6 +83,76 @@ fn single_node_cluster_works() {
     assert_eq!(res.generated, want);
 }
 
+/// Serve `req` on a cluster forced to the given decode path.
+fn serve_on_path(
+    dir: &Path,
+    nodes: usize,
+    topology: Topology,
+    device_resident: bool,
+    req: &Request,
+) -> apple_moe::engine::request::RequestResult {
+    let mut cfg = LiveConfig::new(dir.to_path_buf(), nodes);
+    cfg.topology = topology;
+    if topology == Topology::Centralized {
+        cfg.balancing = Balancing::SelectedOnly;
+    }
+    cfg.device_resident = device_resident;
+    let cluster = LiveCluster::start(cfg).unwrap();
+    let res = cluster.serve(req.clone()).unwrap();
+    cluster.shutdown();
+    res
+}
+
+/// The §Perf acceptance: for both topologies and 1/2 nodes, the
+/// device-resident decode loop generates the same tokens as the
+/// host-roundtrip reference loop — while performing ZERO per-layer K/V
+/// cache host crossings (the per-token transfer counters stay under one
+/// cache's size; the reference path moves every cache twice per layer).
+#[test]
+fn device_resident_cluster_matches_host_path() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = apple_moe::runtime::Manifest::load(&dir).unwrap();
+    if !manifest.device_artifacts {
+        eprintln!("skipping: artifacts predate the dev_* set");
+        return;
+    }
+    let req = Request::new(10, vec![3, 141, 59], 8);
+    // One full generation of K/V caches (all layers, one direction).
+    let caches_bytes = (manifest.n_kv_heads
+        * manifest.max_seq
+        * manifest.head_dim
+        * 4
+        * manifest.n_layers) as f64;
+
+    for topology in [Topology::Decentralized, Topology::Centralized] {
+        for nodes in [1usize, 2] {
+            let host = serve_on_path(&dir, nodes, topology, false, &req);
+            let dev = serve_on_path(&dir, nodes, topology, true, &req);
+            assert_eq!(
+                dev.generated, host.generated,
+                "tokens diverge: {topology:?} x {nodes} nodes"
+            );
+            // Decode-phase transfer accounting: the host path
+            // round-trips all caches every token; the device path must
+            // stay under a quarter of ONE cache generation per token.
+            let host_bpt = host.metrics.decode.transfer_bytes_per_token();
+            let dev_bpt = dev.metrics.decode.transfer_bytes_per_token();
+            assert!(
+                host_bpt > caches_bytes,
+                "host path moved {host_bpt} B/token — meter broken? ({topology:?} x {nodes})"
+            );
+            assert!(
+                dev_bpt < caches_bytes / 4.0,
+                "device path moved {dev_bpt} B/token ({topology:?} x {nodes})"
+            );
+            assert!(
+                dev_bpt < host_bpt / 10.0,
+                "device path should move >=10x fewer bytes: {dev_bpt} vs {host_bpt}"
+            );
+        }
+    }
+}
+
 #[test]
 fn multiple_requests_reuse_cluster() {
     let Some(dir) = artifacts_dir() else { return };

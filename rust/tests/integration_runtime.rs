@@ -6,7 +6,7 @@
 
 use std::path::{Path, PathBuf};
 
-use apple_moe::runtime::{HostTensor, NanoRuntime};
+use apple_moe::runtime::{DeviceState, HostTensor, NanoRuntime};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -112,9 +112,6 @@ fn two_node_distributed_equals_dense() {
                     *c += p; // the all-reduce
                 }
             }
-            for i in 0..m.d_embed {
-                x = if i == 0 { x } else { x };
-            }
             for (xi, (hi, ci)) in x.iter_mut().zip(ar.h.iter().zip(&combined)) {
                 *xi = hi + ci;
             }
@@ -172,6 +169,79 @@ fn sixteen_resident_node_matches_partition() {
         }
     }
     assert!(allclose(&got, &want, 1e-4));
+}
+
+/// The §Perf tentpole: the device-resident decode path (untupled dev_*
+/// executables, caches and activations never leaving the device) must
+/// reproduce the host-roundtrip reference path's logits within 1e-5 —
+/// while moving orders of magnitude fewer bytes across the host
+/// boundary per token.
+#[test]
+fn device_resident_path_matches_host_path() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = NanoRuntime::load(&dir, false).unwrap();
+    if !rt.has_device_path() {
+        eprintln!("skipping: artifacts predate the dev_* set");
+        return;
+    }
+    let m = rt.manifest.clone();
+    let node = rt.build_node_experts(&(0..16).collect::<Vec<_>>()).unwrap();
+    let layer_cache_bytes = (m.n_kv_heads * m.max_seq * m.head_dim * 4) as u64;
+
+    // Host-path state.
+    let mut kc: Vec<HostTensor> = (0..m.n_layers).map(|_| rt.empty_layer_cache()).collect();
+    let mut vc: Vec<HostTensor> = (0..m.n_layers).map(|_| rt.empty_layer_cache()).collect();
+    // Device-path state (cache upload happens once, here).
+    let mut st = DeviceState::new(&rt).unwrap();
+
+    for (pos, tok) in [3u32, 99, 200, 7, 42].iter().enumerate() {
+        // Reference step (host round trips).
+        rt.take_transfer_stats();
+        let mut x = rt.embed(*tok).unwrap();
+        for l in 0..m.n_layers {
+            let ar = rt.attn_router(l, &x, &kc[l], &vc[l], pos).unwrap();
+            kc[l] = ar.k_cache.clone();
+            vc[l] = ar.v_cache.clone();
+            let ids: Vec<usize> =
+                ar.top_i.iter().map(|&e| node.local_index(e).unwrap()).collect();
+            let partial = rt
+                .node_experts_direct(&node, l, &ar.moe_in, &ids, &ar.top_w)
+                .unwrap();
+            for (xi, (hi, ci)) in x.iter_mut().zip(ar.h.iter().zip(&partial)) {
+                *xi = hi + ci;
+            }
+        }
+        let want = rt.lm_head(&x).unwrap();
+        let host_ts = rt.take_transfer_stats();
+
+        // Device-resident step: same math, buffers stay put.
+        st.begin_token(&rt, *tok).unwrap();
+        for l in 0..m.n_layers {
+            let (top_w, top_i) = st.attn_router(&rt, l, pos).unwrap();
+            let ids: Vec<usize> =
+                top_i.iter().map(|&e| node.local_index(e).unwrap()).collect();
+            let partial = st.node_experts(&rt, &node, l, &ids, &top_w).unwrap();
+            st.finish_layer_device(&rt, &partial).unwrap();
+        }
+        let got = st.logits(&rt).unwrap();
+        let dev_ts = rt.take_transfer_stats();
+
+        assert!(allclose(&got, &want, 1e-5), "logits diverge at pos {pos}");
+
+        // The acceptance counter: the reference path round-trips every
+        // cache both ways every layer; the device path must not move
+        // even ONE cache's worth of bytes for the whole token.
+        let host_bytes = host_ts.h2d_bytes + host_ts.d2h_bytes;
+        let dev_bytes = dev_ts.h2d_bytes + dev_ts.d2h_bytes;
+        assert!(
+            host_bytes > 3 * m.n_layers as u64 * layer_cache_bytes,
+            "host path moved only {host_bytes} B — meter broken?"
+        );
+        assert!(
+            dev_bytes < layer_cache_bytes,
+            "device path moved {dev_bytes} B (>= one {layer_cache_bytes} B cache)"
+        );
+    }
 }
 
 #[test]
