@@ -1,12 +1,14 @@
 //! `apple-moe generate` — LIVE run: the nano model over a threaded
 //! cluster executing AOT artifacts via PJRT (no Python on the path).
 
+use std::time::Duration;
+
 use anyhow::Result;
 
 use crate::cli::args::Args;
-use crate::cli::commands::artifacts_dir;
+use crate::cli::commands::{artifacts_dir, parse_balancing, parse_topology};
 use crate::cluster::live::{LiveCluster, LiveConfig};
-use crate::config::{Balancing, NetworkProfile, Topology};
+use crate::config::NetworkProfile;
 use crate::engine::request::Request;
 use crate::engine::sampling::Sampler;
 
@@ -14,17 +16,8 @@ pub fn run(args: &mut Args) -> Result<()> {
     let nodes = args.usize_or("nodes", 2)?;
     let prompt_tokens = args.usize_or("prompt-tokens", 16)?;
     let gen_tokens = args.usize_or("gen-tokens", 32)?;
-    let topology = match args.str_or("topology", "decentralized").as_str() {
-        "decentralized" | "d" => Topology::Decentralized,
-        "centralized" | "c" => Topology::Centralized,
-        other => anyhow::bail!("unknown topology '{other}'"),
-    };
-    let balancing = match args.str_or("balancing", "router-aided").as_str() {
-        "selected-only" | "naive" => Balancing::SelectedOnly,
-        "busy-full" | "lb" => Balancing::BusyFull,
-        "router-aided" | "lr" => Balancing::RouterAided,
-        other => anyhow::bail!("unknown balancing '{other}'"),
-    };
+    let topology = parse_topology(args)?;
+    let balancing = parse_balancing(args)?;
     let network = match args.get("network") {
         None => None,
         Some(name) => Some(
@@ -33,6 +26,7 @@ pub fn run(args: &mut Args) -> Result<()> {
         ),
     };
     let seed = args.u64_or("seed", 0xD8B2)?;
+    let recv_timeout = args.u64_or("recv-timeout-secs", 120)?;
     // Force the host-tensor reference path (per-layer cache round trips;
     // the default device-resident path is the §Perf-optimized regime).
     let host_path = args.flag("host-path");
@@ -46,6 +40,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     cfg.sampler = Sampler::Greedy;
     cfg.seed = seed;
     cfg.device_resident = !host_path;
+    cfg.recv_timeout = Duration::from_secs(recv_timeout.max(1));
 
     eprintln!("starting {nodes}-node live cluster (compiling artifacts on every node)...");
     let cluster = LiveCluster::start(cfg)?;
@@ -72,6 +67,11 @@ pub fn run(args: &mut Args) -> Result<()> {
         "host<->device: {:.1} KiB/token ({:.4} s/token in transfers)",
         d.transfer_bytes_per_token() / 1024.0,
         d.transfer_secs_per_token(),
+    );
+    println!(
+        "wire traffic: {:.1} KiB/token across {} messages",
+        d.wire_bytes_per_token() / 1024.0,
+        d.net_msgs,
     );
     Ok(())
 }

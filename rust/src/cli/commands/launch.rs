@@ -1,0 +1,182 @@
+//! `apple-moe launch` — spawn N `apple-moe node` processes on loopback
+//! (or on the topology from `--cluster hosts.toml`) and drive the same
+//! request flow `serve` runs on threads. This is the one-command proof
+//! that the wire protocols survive real process isolation: same
+//! artifacts, same planner, same request stream — but every node is its
+//! own OS process talking `network::tcp`.
+
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::cli::args::Args;
+use crate::config::ClusterHosts;
+
+pub fn run(args: &mut Args) -> Result<()> {
+    let nodes = args.usize_or("nodes", 2)?;
+    let cluster = args.get("cluster");
+    let topology = args.str_or("topology", "decentralized");
+    let balancing = args.str_or("balancing", "router-aided");
+    let n_requests = args.usize_or("requests", 1)?;
+    let prompt_tokens = args.usize_or("prompt-tokens", 16)?;
+    let gen_tokens = args.usize_or("gen-tokens", 32)?;
+    let seed = args.u64_or("seed", 0xD8B2)?;
+    let recv_timeout_flag = args.get("recv-timeout-secs");
+    let host_path = args.flag("host-path");
+    let out = args.get("out");
+    let artifacts = args.str_or("artifacts", "artifacts");
+    args.finish()?;
+    anyhow::ensure!(nodes >= 1, "--nodes must be >= 1");
+
+    let recv_timeout = match &recv_timeout_flag {
+        None => 120,
+        Some(v) => v
+            .parse::<u64>()
+            .map_err(|_| anyhow::anyhow!("--recv-timeout-secs expects an integer, got '{v}'"))?,
+    };
+    let hosts_path = match cluster {
+        Some(p) => {
+            if recv_timeout_flag.is_some() {
+                eprintln!(
+                    "launch: warning: --recv-timeout-secs is ignored with --cluster \
+                     (set recv_timeout_secs in {p} instead)"
+                );
+            }
+            let hosts = ClusterHosts::load(std::path::Path::new(&p))?;
+            anyhow::ensure!(
+                hosts.n_nodes() == nodes,
+                "--nodes {nodes} but {p} lists {} host(s)",
+                hosts.n_nodes()
+            );
+            PathBuf::from(p)
+        }
+        None => write_loopback_hosts(nodes, recv_timeout)?,
+    };
+    // Artifacts are resolved per-process: make the path absolute so the
+    // children agree with us regardless of their cwd.
+    let artifacts = std::fs::canonicalize(&artifacts)
+        .with_context(|| format!("artifacts dir '{artifacts}' not found"))?;
+
+    let exe = std::env::current_exe().context("resolving own binary for node processes")?;
+    eprintln!(
+        "launch: spawning {nodes} node process(es), topology {topology}, hosts {}",
+        hosts_path.display()
+    );
+    let mut children = Vec::with_capacity(nodes);
+    for id in 0..nodes {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("node")
+            .arg("--id")
+            .arg(id.to_string())
+            .arg("--cluster")
+            .arg(&hosts_path)
+            .arg("--topology")
+            .arg(&topology)
+            .arg("--balancing")
+            .arg(&balancing)
+            .arg("--requests")
+            .arg(n_requests.to_string())
+            .arg("--prompt-tokens")
+            .arg(prompt_tokens.to_string())
+            .arg("--gen-tokens")
+            .arg(gen_tokens.to_string())
+            .arg("--seed")
+            .arg(seed.to_string())
+            .arg("--artifacts")
+            .arg(&artifacts);
+        if host_path {
+            cmd.arg("--host-path");
+        }
+        if id == 0 {
+            if let Some(out) = &out {
+                cmd.arg("--out").arg(out);
+            }
+            cmd.stdout(Stdio::inherit());
+        } else {
+            // Workers print nothing of value; keep the launcher's stdout
+            // clean (stderr stays shared for their log lines).
+            cmd.stdout(Stdio::null());
+        }
+        let child = match cmd.spawn() {
+            Ok(c) => c,
+            Err(e) => {
+                // Don't leak the nodes already started.
+                kill_all(&mut children);
+                return Err(e).with_context(|| format!("spawning node {id}"));
+            }
+        };
+        children.push((id, child));
+    }
+
+    // Poll ALL children: a crash of any node is detected promptly (the
+    // survivors would otherwise sit in their wire waits for the full
+    // recv timeout), and the rest are torn down immediately.
+    let mut done = vec![false; children.len()];
+    let mut failed: Option<(usize, String)> = None;
+    while failed.is_none() && done.iter().any(|d| !d) {
+        let mut progressed = false;
+        for (i, (id, child)) in children.iter_mut().enumerate() {
+            if done[i] {
+                continue;
+            }
+            match child.try_wait() {
+                Ok(None) => {}
+                Ok(Some(status)) => {
+                    done[i] = true;
+                    progressed = true;
+                    if !status.success() {
+                        failed = Some((*id, format!("{status}")));
+                    }
+                }
+                Err(e) => {
+                    done[i] = true;
+                    failed = Some((*id, format!("wait failed: {e}")));
+                }
+            }
+        }
+        if !progressed && failed.is_none() {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+    if let Some((id, why)) = failed {
+        kill_all(&mut children);
+        anyhow::bail!("node {id} exited abnormally ({why}); cluster torn down");
+    }
+    eprintln!("launch: all {nodes} node process(es) exited cleanly");
+    Ok(())
+}
+
+fn kill_all(children: &mut [(usize, std::process::Child)]) {
+    for (_, child) in children {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+}
+
+/// Pick `n` free loopback ports and write the topology to a temp
+/// hosts.toml the node processes can all read.
+fn write_loopback_hosts(n: usize, recv_timeout_secs: u64) -> Result<PathBuf> {
+    let mut hosts = Vec::with_capacity(n);
+    {
+        // Bind ephemeral listeners to reserve distinct ports, then free
+        // them for the children (a small race, acceptable on loopback).
+        let mut listeners = Vec::with_capacity(n);
+        for _ in 0..n {
+            let l = std::net::TcpListener::bind("127.0.0.1:0")?;
+            hosts.push(format!("127.0.0.1:{}", l.local_addr()?.port()));
+            listeners.push(l);
+        }
+    }
+    let cfg = ClusterHosts {
+        hosts,
+        recv_timeout: Duration::from_secs(recv_timeout_secs.max(1)),
+        connect_timeout: Duration::from_secs(120),
+    };
+    let path = std::env::temp_dir().join(format!("apple-moe-hosts-{}.toml", std::process::id()));
+    std::fs::write(&path, cfg.render())
+        .with_context(|| format!("writing {}", path.display()))?;
+    eprintln!("launch: wrote loopback topology to {}", path.display());
+    Ok(path)
+}

@@ -4,7 +4,10 @@
 pub mod cluster_info;
 pub mod cost;
 pub mod generate;
+pub mod launch;
 pub mod multiuser;
+pub mod net_bench;
+pub mod node;
 pub mod packing_bench;
 pub mod perf_model;
 pub mod serve;
@@ -14,7 +17,7 @@ use anyhow::Result;
 use std::path::PathBuf;
 
 use crate::cli::args::Args;
-use crate::config::{NetworkProfile, Strategy};
+use crate::config::{Balancing, NetworkProfile, Strategy, Topology};
 
 pub(crate) fn parse_strategy(args: &mut Args) -> Result<Strategy> {
     let s = args.str_or("strategy", "p-lr-d");
@@ -28,4 +31,21 @@ pub(crate) fn parse_network(args: &mut Args) -> Result<NetworkProfile> {
 
 pub(crate) fn artifacts_dir(args: &mut Args) -> PathBuf {
     PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+pub(crate) fn parse_topology(args: &mut Args) -> Result<Topology> {
+    match args.str_or("topology", "decentralized").as_str() {
+        "decentralized" | "d" => Ok(Topology::Decentralized),
+        "centralized" | "c" => Ok(Topology::Centralized),
+        other => anyhow::bail!("unknown topology '{other}'"),
+    }
+}
+
+pub(crate) fn parse_balancing(args: &mut Args) -> Result<Balancing> {
+    match args.str_or("balancing", "router-aided").as_str() {
+        "selected-only" | "naive" => Ok(Balancing::SelectedOnly),
+        "busy-full" | "lb" => Ok(Balancing::BusyFull),
+        "router-aided" | "lr" => Ok(Balancing::RouterAided),
+        other => anyhow::bail!("unknown balancing '{other}'"),
+    }
 }

@@ -1,0 +1,131 @@
+//! `apple-moe net-bench` — transport microbenchmark: ping-pong RTT
+//! percentiles and streaming bandwidth at the paper's §3.1 payload size
+//! (~24.5 kB), for the in-process fabric and the real TCP backend,
+//! printed next to the configured `NetworkProfile`'s prediction so a
+//! profile can be validated against the network it claims to model.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::cli::args::Args;
+use crate::cli::commands::parse_network;
+use crate::network::transport::{self, tag, Endpoint};
+use crate::network::{message_ns, tcp};
+use crate::util::fmt::render_table;
+use crate::util::stats::Summary;
+
+const BENCH_TIMEOUT: Duration = Duration::from_secs(60);
+const PHASE_PING: u8 = 9;
+const PHASE_PONG: u8 = 10;
+const PHASE_STREAM: u8 = 11;
+const PHASE_ACK: u8 = 12;
+
+pub fn run(args: &mut Args) -> Result<()> {
+    let payload = args.usize_or("payload", 24_576)?;
+    let iters = args.usize_or("iters", 200)?;
+    let warmup = args.usize_or("warmup", 20)?;
+    let stream_msgs = args.usize_or("stream-msgs", 128)?;
+    let backend = args.str_or("backend", "both");
+    let profile = parse_network(args)?;
+    args.finish()?;
+    anyhow::ensure!(iters >= 1 && stream_msgs >= 1, "--iters/--stream-msgs must be >= 1");
+
+    let backends: Vec<&str> = match backend.as_str() {
+        "inproc" | "in-process" => vec!["inproc"],
+        "tcp" => vec!["tcp"],
+        "both" => vec!["inproc", "tcp"],
+        other => anyhow::bail!("unknown backend '{other}' (inproc|tcp|both)"),
+    };
+
+    let mut rows = vec![vec![
+        "backend".to_string(),
+        "RTT p50 (us)".to_string(),
+        "RTT p90 (us)".to_string(),
+        "RTT p99 (us)".to_string(),
+        "one-way BW (MiB/s)".to_string(),
+    ]];
+    for kind in backends {
+        let mut eps = match kind {
+            "tcp" => tcp::loopback_fabric(2)?,
+            _ => transport::fabric(2, None),
+        };
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        let (rtt, bw) = bench_pair(a, b, payload, warmup, iters, stream_msgs)?;
+        rows.push(vec![
+            kind.to_string(),
+            format!("{:.1}", rtt.p50),
+            format!("{:.1}", rtt.p90),
+            format!("{:.1}", rtt.p99),
+            format!("{:.1}", bw / (1024.0 * 1024.0)),
+        ]);
+    }
+    println!(
+        "transport microbenchmark: {payload} B payload, {iters} ping-pongs, {stream_msgs}-message stream\n"
+    );
+    print!("{}", render_table(&rows));
+
+    // The model's prediction for one message of this size — RTT is two
+    // of them. If the measured p50 is far off, the profile does not
+    // describe this network.
+    let one_way_ns = message_ns(&profile, payload as u64);
+    println!(
+        "\nprofile '{}': predicted one-way {:.1} us (latency {:.1} us + {} B / {:.2} GB/s), RTT {:.1} us",
+        profile.name,
+        one_way_ns as f64 / 1e3,
+        profile.latency_ns as f64 / 1e3,
+        payload,
+        profile.bandwidth / 1e9,
+        2.0 * one_way_ns as f64 / 1e3,
+    );
+    Ok(())
+}
+
+/// Drive endpoint `a` against an echo thread owning `b`. Returns RTT
+/// percentiles (µs) and one-way streaming bandwidth (bytes/sec).
+fn bench_pair(
+    mut a: Endpoint,
+    mut b: Endpoint,
+    payload: usize,
+    warmup: usize,
+    iters: usize,
+    stream_msgs: usize,
+) -> Result<(Summary, f64)> {
+    let total = warmup + iters;
+    let echo = std::thread::spawn(move || -> Result<(), transport::NetError> {
+        for i in 0..total as u32 {
+            let env = b.recv_tag(tag(PHASE_PING, 0, i), BENCH_TIMEOUT)?;
+            b.send(0, tag(PHASE_PONG, 0, i), env.payload)?;
+        }
+        for j in 0..stream_msgs as u32 {
+            b.recv_tag(tag(PHASE_STREAM, 0, j), BENCH_TIMEOUT)?;
+        }
+        b.send(0, tag(PHASE_ACK, 0, 0), vec![1])?;
+        Ok(())
+    });
+
+    let buf = vec![0x5Au8; payload];
+    let mut rtt_us = Vec::with_capacity(iters);
+    for i in 0..total as u32 {
+        let t0 = Instant::now();
+        a.send(1, tag(PHASE_PING, 0, i), buf.clone())?;
+        a.recv_tag(tag(PHASE_PONG, 0, i), BENCH_TIMEOUT)?;
+        if i as usize >= warmup {
+            rtt_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+    }
+
+    let t0 = Instant::now();
+    for j in 0..stream_msgs as u32 {
+        a.send(1, tag(PHASE_STREAM, 0, j), buf.clone())?;
+    }
+    a.recv_tag(tag(PHASE_ACK, 0, 0), BENCH_TIMEOUT)?;
+    let bw = (stream_msgs * payload) as f64 / t0.elapsed().as_secs_f64();
+
+    echo.join()
+        .map_err(|_| anyhow::anyhow!("echo thread panicked"))?
+        .map_err(anyhow::Error::from)?;
+    let rtt = Summary::of(&rtt_us).ok_or_else(|| anyhow::anyhow!("no RTT samples"))?;
+    Ok((rtt, bw))
+}

@@ -1,0 +1,112 @@
+//! `apple-moe node` — ONE node's daemon: join a real TCP cluster
+//! described by a hosts.toml and run this node's serve loop
+//! out-of-process (the multi-machine deployment the paper actually
+//! built, versus the threaded emulation `generate`/`serve` run).
+//!
+//! Every node of the cluster must be started with the same request
+//! flags (`--requests/--prompt-tokens/--gen-tokens/--seed`): the
+//! request stream is derived deterministically from them, exactly like
+//! `LiveCluster::serve` broadcasting each request to all node threads.
+//! Node 0 prints the generated token streams (and writes them to
+//! `--out` when given); other nodes only serve wire traffic.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::cli::args::Args;
+use crate::cli::commands::{artifacts_dir, parse_balancing, parse_topology};
+use crate::cluster::live::{run_node, LiveConfig};
+use crate::config::ClusterHosts;
+use crate::engine::request::{Request, RequestResult};
+use crate::network::tcp::{self, TcpOptions};
+
+pub fn run(args: &mut Args) -> Result<()> {
+    let id = args
+        .get("id")
+        .ok_or_else(|| anyhow::anyhow!("--id N is required (this node's index in hosts.toml)"))?
+        .parse::<usize>()
+        .context("--id expects an integer")?;
+    let cluster_path = args
+        .get("cluster")
+        .ok_or_else(|| anyhow::anyhow!("--cluster hosts.toml is required"))?;
+    let topology = parse_topology(args)?;
+    let balancing = parse_balancing(args)?;
+    let n_requests = args.usize_or("requests", 1)?;
+    let prompt_tokens = args.usize_or("prompt-tokens", 16)?;
+    let gen_tokens = args.usize_or("gen-tokens", 32)?;
+    let seed = args.u64_or("seed", 0xD8B2)?;
+    let host_path = args.flag("host-path");
+    let out = args.get("out");
+    let dir = artifacts_dir(args);
+    args.finish()?;
+
+    let hosts = ClusterHosts::load(Path::new(&cluster_path))
+        .with_context(|| format!("loading {cluster_path}"))?;
+    anyhow::ensure!(
+        id < hosts.n_nodes(),
+        "--id {id} out of range: hosts.toml lists {} node(s)",
+        hosts.n_nodes()
+    );
+
+    let mut cfg = LiveConfig::new(dir, hosts.n_nodes());
+    cfg.topology = topology;
+    cfg.balancing = balancing;
+    cfg.seed = seed;
+    cfg.device_resident = !host_path;
+    cfg.recv_timeout = hosts.recv_timeout;
+
+    eprintln!(
+        "node {id}: listening on {}, joining {}-node cluster...",
+        hosts.hosts[id],
+        hosts.n_nodes()
+    );
+    let opts = TcpOptions { connect_timeout: hosts.connect_timeout, nodelay: true };
+    let ep = tcp::endpoint(id, &hosts.hosts, &opts)?;
+    eprintln!("node {id}: fabric up; loading artifacts and serving {n_requests} request(s)...");
+
+    let requests: Vec<Request> = (0..n_requests)
+        .map(|i| {
+            let mut r = Request::synthetic(i as u64, prompt_tokens, 512);
+            r.max_new_tokens = gen_tokens;
+            r
+        })
+        .collect();
+    let results = run_node(&cfg, ep, &requests)?;
+
+    if id == 0 {
+        report(&results, out.as_deref())?;
+    }
+    eprintln!("node {id}: done");
+    Ok(())
+}
+
+/// Node 0's report: one `tokens[...]` line per request plus a decode
+/// summary; `--out` gets the bare token streams (one line per request)
+/// for machine comparison against the in-process fabric.
+fn report(results: &[RequestResult], out: Option<&str>) -> Result<()> {
+    let mut lines = Vec::with_capacity(results.len());
+    for res in results {
+        let toks =
+            res.generated.iter().map(u32::to_string).collect::<Vec<_>>().join(" ");
+        println!("tokens[{}]: {toks}", res.id);
+        let d = &res.metrics.decode;
+        println!(
+            "req {}: prefill {:.1} tok/s | decode {:.1} tok/s | wire {:.1} KiB/token",
+            res.id,
+            res.metrics.prefill.tokens_per_sec(),
+            d.tokens_per_sec(),
+            d.wire_bytes_per_token() / 1024.0,
+        );
+        lines.push(toks);
+    }
+    if let Some(path) = out {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating --out {path}"))?;
+        for l in &lines {
+            writeln!(f, "{l}")?;
+        }
+    }
+    Ok(())
+}

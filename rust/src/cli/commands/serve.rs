@@ -17,6 +17,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     let n_requests = args.usize_or("requests", 4)?;
     let prompt_tokens = args.usize_or("prompt-tokens", 16)?;
     let gen_tokens = args.usize_or("gen-tokens", 32)?;
+    let recv_timeout = args.u64_or("recv-timeout-secs", 120)?;
     let host_path = args.flag("host-path");
     let dir = artifacts_dir(args);
     args.finish()?;
@@ -24,6 +25,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     eprintln!("starting {nodes}-node live cluster...");
     let mut cfg = LiveConfig::new(dir, nodes);
     cfg.device_resident = !host_path;
+    cfg.recv_timeout = std::time::Duration::from_secs(recv_timeout.max(1));
     let cluster = LiveCluster::start(cfg)?;
 
     let mut rows = vec![vec![

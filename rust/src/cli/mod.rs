@@ -10,7 +10,47 @@
 //! apple-moe cluster-info  [--nodes 4]                     (Table 1 / layout)
 //! apple-moe generate      --nodes 2 --gen-tokens 32       (live PJRT run)
 //! apple-moe serve         --requests 8 --nodes 2          (live batch driver)
+//! apple-moe node          --id 0 --cluster hosts.toml     (one real node)
+//! apple-moe launch        --nodes 2 --requests 4          (multi-process run)
+//! apple-moe net-bench     [--backend tcp]                 (transport RTT/BW)
 //! ```
+//!
+//! # Running a real multi-process cluster
+//!
+//! `generate`/`serve` emulate the cluster with one thread per node
+//! inside a single process. The `node` daemon runs ONE node over the
+//! real TCP fabric (`network::tcp`), so a cluster can span OS processes
+//! — and machines, exactly like the paper's 2–4 Mac Studios on 10 GbE.
+//!
+//! Describe the topology in a `hosts.toml` (index = node id):
+//!
+//! ```toml
+//! [cluster]
+//! hosts = ["10.0.0.1:7420", "10.0.0.2:7420"]
+//! recv_timeout_secs = 120     # optional: bound on any wire wait
+//! connect_timeout_secs = 120  # optional: join-time dial retry window
+//! ```
+//!
+//! then start every node with the SAME request flags (the request
+//! stream is derived from them deterministically; node 0 prints the
+//! generated tokens):
+//!
+//! ```text
+//! mac1$ apple-moe node --id 0 --cluster hosts.toml --requests 4 --gen-tokens 32
+//! mac2$ apple-moe node --id 1 --cluster hosts.toml --requests 4 --gen-tokens 32
+//! ```
+//!
+//! Start order does not matter: joining nodes redial until
+//! `connect_timeout_secs`. On a single machine, `apple-moe launch
+//! --nodes 2` does all of the above on loopback — it picks free ports,
+//! writes the hosts.toml, spawns the node processes and reaps them.
+//! The token streams are byte-identical to the in-process fabric for
+//! both topologies (asserted by `tests/integration_process.rs`).
+//!
+//! `apple-moe net-bench` measures ping-pong RTT percentiles and
+//! streaming bandwidth for both backends at the paper's 24.5 kB payload
+//! and prints the configured `NetworkProfile`'s prediction next to the
+//! measurement, so profiles can be validated against the real network.
 
 pub mod args;
 pub mod commands;
@@ -32,6 +72,9 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "generate" => commands::generate::run(&mut args),
         "multiuser" => commands::multiuser::run(&mut args),
         "serve" => commands::serve::run(&mut args),
+        "node" => commands::node::run(&mut args),
+        "launch" => commands::launch::run(&mut args),
+        "net-bench" => commands::net_bench::run(&mut args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -63,5 +106,16 @@ SUBCOMMANDS
                    --topology decentralized|centralized  --artifacts DIR
   serve          LIVE batch driver: synthetic requests, latency/throughput
                    --requests N --nodes N --artifacts DIR
+  node           LIVE multi-process: run ONE node over the real TCP fabric
+                   --id N --cluster hosts.toml --requests N --gen-tokens N
+                   --topology decentralized|centralized --artifacts DIR
+  launch         LIVE multi-process: spawn N loopback node processes
+                   --nodes N --requests N --gen-tokens N [--cluster hosts.toml]
+  net-bench      transport microbenchmark: RTT percentiles + bandwidth
+                   --backend inproc|tcp|both --payload BYTES --iters N
   help           this text
+
+hosts.toml for node/launch:   [cluster]
+                              hosts = [\"10.0.0.1:7420\", \"10.0.0.2:7420\"]
+                              recv_timeout_secs = 120
 ";

@@ -15,6 +15,13 @@
 //!
 //! All coordination logic (layout, planning, LRU) is the same
 //! `moe::Planner` the virtual-time DES uses.
+//!
+//! The wire protocols are written against `network::transport::Endpoint`
+//! and are therefore transport-generic: `LiveCluster` runs every node as
+//! a thread on the in-process mpsc backend, while [`run_node`] runs ONE
+//! node's serve loop in the calling process over any endpoint (the
+//! `apple-moe node` daemon hands it a `network::tcp` endpoint, making
+//! the cluster span OS processes and machines).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -36,7 +43,9 @@ use crate::runtime::nano::resident_index;
 use crate::runtime::{DeviceState, HostTensor, NanoRuntime};
 use crate::util::rng::Rng;
 
-const RECV_TIMEOUT: Duration = Duration::from_secs(120);
+/// Default bound on any single wire wait (`LiveConfig::recv_timeout`,
+/// `[cluster] recv_timeout_secs` in hosts.toml).
+pub const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(120);
 const PHASE_PARTIAL: u8 = 1;
 const PHASE_SCATTER: u8 = 2;
 const PHASE_GATHER: u8 = 3;
@@ -58,6 +67,9 @@ pub struct LiveConfig {
     /// the host-tensor reference path when the artifacts predate the
     /// `dev_*` set. `false` forces the reference path.
     pub device_resident: bool,
+    /// Bound on any single wire wait (all-reduce/scatter/gather); a
+    /// breach is reported with the ids of the peers that went silent.
+    pub recv_timeout: Duration,
 }
 
 impl LiveConfig {
@@ -71,6 +83,7 @@ impl LiveConfig {
             sampler: Sampler::Greedy,
             seed: 0xD8B2,
             device_resident: true,
+            recv_timeout: DEFAULT_RECV_TIMEOUT,
         }
     }
 
@@ -97,6 +110,7 @@ pub struct LiveCluster {
     cmd_txs: Vec<Sender<Cmd>>,
     result_rx: Receiver<Result<RequestResult>>,
     handles: Vec<JoinHandle<()>>,
+    recv_timeout: Duration,
     pub layout: ExpertLayout,
 }
 
@@ -130,16 +144,29 @@ impl LiveCluster {
                 .context("node startup timed out")?
                 .map_err(|e: String| anyhow::anyhow!(e))?;
         }
-        Ok(LiveCluster { cmd_txs, result_rx, handles, layout })
+        Ok(LiveCluster {
+            cmd_txs,
+            result_rx,
+            handles,
+            recv_timeout: cfg.recv_timeout,
+            layout,
+        })
     }
 
     /// Serve one request through the cluster (blocking).
     pub fn serve(&self, req: Request) -> Result<RequestResult> {
+        // `recv_timeout` bounds a single wire wait; the whole request is
+        // many of them (node 0 errors out on any stalled wait and sends
+        // that error here, and a dead node 0 disconnects the channel
+        // immediately) — so the end-to-end bound only backstops a
+        // wedged-but-alive node and must scale with the request.
+        let tokens = (req.prompt.len() + req.max_new_tokens).max(1) as u32;
+        let result_timeout = self.recv_timeout.saturating_mul(tokens);
         for tx in &self.cmd_txs {
             tx.send(Cmd::Serve(req.clone())).map_err(|_| anyhow::anyhow!("node down"))?;
         }
         self.result_rx
-            .recv_timeout(RECV_TIMEOUT)
+            .recv_timeout(result_timeout)
             .context("cluster result timeout")?
     }
 
@@ -166,8 +193,44 @@ struct NodeWorker {
     rng: Rng,
 }
 
+/// Run ONE node's serve loop in the calling process, over any endpoint.
+///
+/// This is the out-of-process twin of `LiveCluster`: the `apple-moe
+/// node` daemon builds a `network::tcp` endpoint and calls this, so the
+/// same wire protocols (and the same planner/runtime stack) span OS
+/// processes and machines. Every node of the cluster must be handed the
+/// same `requests` in the same order — exactly what `LiveCluster::serve`
+/// does by broadcasting each request to all node threads. Only node 0's
+/// results carry tokens and metrics.
+pub fn run_node(
+    cfg: &LiveConfig,
+    ep: Endpoint,
+    requests: &[Request],
+) -> Result<Vec<RequestResult>> {
+    anyhow::ensure!(
+        ep.n_nodes() == cfg.n_nodes,
+        "endpoint is attached to a {}-node fabric but the config says {} nodes",
+        ep.n_nodes(),
+        cfg.n_nodes
+    );
+    let node = ep.node();
+    let layout = cfg.layout();
+    let mut w = NodeWorker::new(node, cfg.clone(), layout, ep)?;
+    requests.iter().map(|req| w.serve(req)).collect()
+}
+
 impl NodeWorker {
-    #[allow(clippy::too_many_arguments)]
+    /// Load this node's runtime + expert shard and attach the endpoint.
+    fn new(node: usize, cfg: LiveConfig, layout: ExpertLayout, ep: Endpoint) -> Result<NodeWorker> {
+        let rt = NanoRuntime::load(&cfg.artifacts, false)?;
+        let experts = rt.build_node_experts(&layout.resident[node])?;
+        let peer_index = layout.resident.iter().map(|r| resident_index(r)).collect();
+        let planner = Planner::new(cfg.balancing, layout);
+        let rng = Rng::new(cfg.seed); // identical on every node:
+                                      // deterministic replicated sampling
+        Ok(NodeWorker { node, cfg, rt, experts, planner, peer_index, ep, rng })
+    }
+
     fn run(
         node: usize,
         cfg: LiveConfig,
@@ -177,22 +240,16 @@ impl NodeWorker {
         result_tx: Sender<Result<RequestResult>>,
         ready_tx: Sender<std::result::Result<(), String>>,
     ) -> Result<()> {
-        let rt = match NanoRuntime::load(&cfg.artifacts, false) {
-            Ok(rt) => {
+        let mut w = match NodeWorker::new(node, cfg, layout, ep) {
+            Ok(w) => {
                 let _ = ready_tx.send(Ok(()));
-                rt
+                w
             }
             Err(e) => {
                 let _ = ready_tx.send(Err(format!("{e:#}")));
                 return Err(e);
             }
         };
-        let experts = rt.build_node_experts(&layout.resident[node])?;
-        let peer_index = layout.resident.iter().map(|r| resident_index(r)).collect();
-        let planner = Planner::new(cfg.balancing, layout);
-        let rng = Rng::new(cfg.seed); // identical on every node:
-                                      // deterministic replicated sampling
-        let mut w = NodeWorker { node, cfg, rt, experts, planner, peer_index, ep, rng };
         while let Ok(cmd) = rx.recv() {
             match cmd {
                 Cmd::Shutdown => break,
@@ -279,6 +336,7 @@ impl NodeWorker {
 
             let mut b = TokenBreakdown::default();
             self.rt.take_transfer_stats();
+            self.ep.take_stats();
             let t_embed = Instant::now();
             let mut x = self.rt.embed(tok)?;
             b.misc_ns += t_embed.elapsed().as_nanos() as u64;
@@ -317,6 +375,7 @@ impl NodeWorker {
             last_logits = self.rt.lm_head(&x)?;
             b.misc_ns += t_head.elapsed().as_nanos() as u64;
             note_transfers(&mut b, &self.rt);
+            note_wire(&mut b, self.ep.take_stats());
 
             if is_prefill {
                 metrics.prefill.push(b);
@@ -356,6 +415,7 @@ impl NodeWorker {
 
             let mut b = TokenBreakdown::default();
             self.rt.take_transfer_stats();
+            self.ep.take_stats();
             let t_embed = Instant::now();
             state.begin_token(&self.rt, tok)?;
             b.misc_ns += t_embed.elapsed().as_nanos() as u64;
@@ -372,7 +432,7 @@ impl NodeWorker {
                 let partial = state.node_experts(&self.rt, &self.experts, l, &idx, &w)?;
                 b.moe_ns += t_moe.elapsed().as_nanos() as u64;
 
-                if self.ep.n_nodes == 1 {
+                if self.ep.n_nodes() == 1 {
                     // Single node: the local partial IS the sum — it
                     // never leaves the device.
                     let t_sum = Instant::now();
@@ -395,6 +455,7 @@ impl NodeWorker {
             last_logits = state.logits(&self.rt)?;
             b.misc_ns += t_head.elapsed().as_nanos() as u64;
             note_transfers(&mut b, &self.rt);
+            note_wire(&mut b, self.ep.take_stats());
 
             if is_prefill {
                 metrics.prefill.push(b);
@@ -410,12 +471,15 @@ impl NodeWorker {
     /// Exchange partials with every peer and sum in node order (bitwise
     /// deterministic across nodes).
     fn all_reduce(&mut self, partial: &[f32], phase: u8, layer: u32, step: u32) -> Result<Vec<f32>> {
-        if self.ep.n_nodes == 1 {
+        if self.ep.n_nodes() == 1 {
             return Ok(partial.to_vec());
         }
         let t = tag(phase, layer, step);
         self.ep.broadcast(t, &f32s_to_bytes(partial))?;
-        let envs = self.ep.gather(t, RECV_TIMEOUT)?;
+        let envs = self
+            .ep
+            .gather(t, self.cfg.recv_timeout)
+            .with_context(|| format!("node {}: all-reduce, layer {layer}", self.node))?;
         let mut parts: Vec<(usize, Vec<f32>)> =
             envs.into_iter().map(|e| (e.from, bytes_to_f32s(&e.payload))).collect();
         parts.push((self.node, partial.to_vec()));
@@ -470,6 +534,7 @@ impl NodeWorker {
             let tok = self.next_token(req, i, &last_logits, &mut generated, false);
             let mut b = TokenBreakdown::default();
             self.rt.take_transfer_stats();
+            self.ep.take_stats();
             let t0 = Instant::now();
             let mut x = self.rt.embed(tok)?;
             b.misc_ns += t0.elapsed().as_nanos() as u64;
@@ -511,6 +576,7 @@ impl NodeWorker {
             last_logits = self.rt.lm_head(&x)?;
             b.misc_ns += t_head.elapsed().as_nanos() as u64;
             note_transfers(&mut b, &self.rt);
+            note_wire(&mut b, self.ep.take_stats());
             if is_prefill {
                 metrics.prefill.push(b);
             } else {
@@ -547,6 +613,7 @@ impl NodeWorker {
             let tok = self.next_token(req, i, &last_logits, &mut generated, false);
             let mut b = TokenBreakdown::default();
             self.rt.take_transfer_stats();
+            self.ep.take_stats();
             let t0 = Instant::now();
             state.begin_token(&self.rt, tok)?;
             b.misc_ns += t0.elapsed().as_nanos() as u64;
@@ -559,7 +626,7 @@ impl NodeWorker {
                 b.misc_ns += t_misc.elapsed().as_nanos() as u64;
 
                 let t_comm = Instant::now();
-                if self.ep.n_nodes > 1 {
+                if self.ep.n_nodes() > 1 {
                     let moe_in = state.moe_in_host(&self.rt)?; // scatter payload
                     self.scatter_layer(&plan, &moe_in, l as u32, step)?;
                 }
@@ -570,7 +637,7 @@ impl NodeWorker {
                 let partial = state.node_experts(&self.rt, &self.experts, l, &idx, &w)?;
                 b.moe_ns += t_moe.elapsed().as_nanos() as u64;
 
-                if self.ep.n_nodes == 1 {
+                if self.ep.n_nodes() == 1 {
                     let t_sum = Instant::now();
                     state.finish_layer_device(&self.rt, &partial)?;
                     b.misc_ns += t_sum.elapsed().as_nanos() as u64;
@@ -589,6 +656,7 @@ impl NodeWorker {
             last_logits = state.logits(&self.rt)?;
             b.misc_ns += t_head.elapsed().as_nanos() as u64;
             note_transfers(&mut b, &self.rt);
+            note_wire(&mut b, self.ep.take_stats());
             if is_prefill {
                 metrics.prefill.push(b);
             } else {
@@ -611,7 +679,7 @@ impl NodeWorker {
         step: u32,
     ) -> Result<()> {
         let ns = self.plan_ns();
-        for peer in 1..self.ep.n_nodes {
+        for peer in 1..self.ep.n_nodes() {
             let work = &plan.per_node[peer];
             let mut payload = f32s_to_bytes(moe_in);
             // slot assignment appended: ns × (i32 idx, f32 w)
@@ -627,7 +695,10 @@ impl NodeWorker {
 
     /// Leader-side gather: sum own partial with every worker's.
     fn gather_partials(&mut self, mine: Vec<f32>, layer: u32, step: u32) -> Result<Vec<f32>> {
-        let envs = self.ep.gather(tag(PHASE_GATHER, layer, step), RECV_TIMEOUT)?;
+        let envs = self
+            .ep
+            .gather(tag(PHASE_GATHER, layer, step), self.cfg.recv_timeout)
+            .with_context(|| format!("leader: gathering partials, layer {layer}"))?;
         let mut sum = mine;
         for e in envs {
             for (a, v) in sum.iter_mut().zip(bytes_to_f32s(&e.payload)) {
@@ -645,7 +716,15 @@ impl NodeWorker {
         loop {
             // Wait for the next scatter in protocol order; an empty
             // payload on the expected tag is the end-of-request marker.
-            let env = self.ep.recv_tag(tag(PHASE_SCATTER, layer, step), RECV_TIMEOUT)?;
+            let env = self
+                .ep
+                .recv_tag(tag(PHASE_SCATTER, layer, step), self.cfg.recv_timeout)
+                .with_context(|| {
+                    format!(
+                        "node {}: waiting for scatter from leader (node 0), layer {layer}",
+                        self.node
+                    )
+                })?;
             if env.payload.is_empty() {
                 break;
             }
@@ -707,4 +786,10 @@ fn note_transfers(b: &mut TokenBreakdown, rt: &NanoRuntime) {
     b.d2h_ns = ts.d2h_ns;
     b.h2d_bytes = ts.h2d_bytes;
     b.d2h_bytes = ts.d2h_bytes;
+}
+
+/// Fold the endpoint's per-token wire meter into a breakdown.
+fn note_wire(b: &mut TokenBreakdown, ls: transport::LinkStats) {
+    b.net_msgs = ls.msgs();
+    b.net_bytes = ls.bytes();
 }

@@ -7,8 +7,9 @@ pub mod toml;
 
 use std::fmt;
 use std::path::Path;
+use std::time::Duration;
 
-use crate::config::toml::Document;
+use crate::config::toml::{Document, Value};
 
 /// Model architecture dimensions (decoder-only MoE, DBRX-shaped).
 #[derive(Debug, Clone, PartialEq)]
@@ -380,6 +381,102 @@ pub fn load_from_str(text: &str) -> Result<(ClusterConfig, EngineConfig), Config
     Ok((cluster, engine))
 }
 
+/// The process topology of a real (multi-process / multi-machine)
+/// cluster: one `host:port` per node, in node-id order, plus the wire
+/// timeouts. Loaded from a `hosts.toml`:
+///
+/// ```toml
+/// [cluster]
+/// hosts = ["10.0.0.1:7420", "10.0.0.2:7420"]
+/// recv_timeout_secs = 120     # optional (default 120)
+/// connect_timeout_secs = 120  # optional (default 120)
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterHosts {
+    /// `host:port` listen addresses; index = node id.
+    pub hosts: Vec<String>,
+    /// Bound on any single wire wait during serving.
+    pub recv_timeout: Duration,
+    /// How long joining nodes keep redialing peers that are not up yet.
+    pub connect_timeout: Duration,
+}
+
+impl ClusterHosts {
+    pub fn n_nodes(&self) -> usize {
+        self.hosts.len()
+    }
+
+    pub fn load(path: &Path) -> Result<ClusterHosts, ConfigError> {
+        let text = std::fs::read_to_string(path).map_err(|source| ConfigError::Io {
+            path: path.display().to_string(),
+            source,
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<ClusterHosts, ConfigError> {
+        let doc = Document::parse(text)?;
+        let entries = doc
+            .get("cluster.hosts")
+            .and_then(Value::as_array)
+            .ok_or_else(|| {
+                ConfigError::Invalid(
+                    "hosts.toml needs `[cluster] hosts = [\"host:port\", ...]`".into(),
+                )
+            })?;
+        let mut hosts = Vec::with_capacity(entries.len());
+        for v in entries {
+            let s = v.as_str().ok_or_else(|| {
+                ConfigError::Invalid(format!("cluster.hosts entries must be strings, got {v:?}"))
+            })?;
+            let port_ok = |p: &str| matches!(p.parse::<u16>(), Ok(port) if port > 0);
+            match s.rsplit_once(':') {
+                Some((host, port)) if !host.is_empty() && port_ok(port) => {}
+                _ => {
+                    return Err(ConfigError::Invalid(format!(
+                        "bad host address '{s}' (expected host:port, port 1-65535)"
+                    )))
+                }
+            }
+            if hosts.iter().any(|h| h == s) {
+                return Err(ConfigError::Invalid(format!("duplicate host address '{s}'")));
+            }
+            hosts.push(s.to_string());
+        }
+        if hosts.is_empty() {
+            return Err(ConfigError::Invalid("cluster.hosts must list at least one node".into()));
+        }
+        let recv = doc.int_or("cluster.recv_timeout_secs", 120);
+        let connect = doc.int_or("cluster.connect_timeout_secs", 120);
+        if recv < 1 || connect < 1 {
+            return Err(ConfigError::Invalid(
+                "recv_timeout_secs / connect_timeout_secs must be >= 1".into(),
+            ));
+        }
+        Ok(ClusterHosts {
+            hosts,
+            recv_timeout: Duration::from_secs(recv as u64),
+            connect_timeout: Duration::from_secs(connect as u64),
+        })
+    }
+
+    /// Render back to TOML (the `launch` orchestrator writes the
+    /// auto-generated loopback topology for its node processes).
+    pub fn render(&self) -> String {
+        let hosts = self
+            .hosts
+            .iter()
+            .map(|h| format!("\"{h}\""))
+            .collect::<Vec<_>>()
+            .join(", ");
+        format!(
+            "[cluster]\nhosts = [{hosts}]\nrecv_timeout_secs = {}\nconnect_timeout_secs = {}\n",
+            self.recv_timeout.as_secs(),
+            self.connect_timeout.as_secs()
+        )
+    }
+}
+
 /// Sanity checks shared by file and CLI construction paths.
 pub fn validate(cluster: &ClusterConfig, engine: &EngineConfig) -> Result<(), ConfigError> {
     let m = &engine.model;
@@ -491,6 +588,45 @@ gen_tokens = 256
         assert_eq!(e.model.name, "dbrx-nano");
         assert_eq!(e.prompt_tokens, 2000);
         assert_eq!(e.gen_tokens, 256);
+    }
+
+    #[test]
+    fn cluster_hosts_parse_and_roundtrip() {
+        let h = ClusterHosts::parse(
+            r#"
+[cluster]
+hosts = ["10.0.0.1:7420", "10.0.0.2:7421"]
+recv_timeout_secs = 30
+"#,
+        )
+        .unwrap();
+        assert_eq!(h.n_nodes(), 2);
+        assert_eq!(h.hosts[1], "10.0.0.2:7421");
+        assert_eq!(h.recv_timeout, Duration::from_secs(30));
+        // Defaults: the old hardcoded 120 s constant.
+        assert_eq!(h.connect_timeout, Duration::from_secs(120));
+        let h2 = ClusterHosts::parse(&h.render()).unwrap();
+        assert_eq!(h, h2);
+    }
+
+    #[test]
+    fn cluster_hosts_default_timeout_is_120s() {
+        let h = ClusterHosts::parse("[cluster]\nhosts = [\"127.0.0.1:7420\"]").unwrap();
+        assert_eq!(h.recv_timeout, Duration::from_secs(120));
+    }
+
+    #[test]
+    fn cluster_hosts_rejects_bad_input() {
+        assert!(ClusterHosts::parse("").is_err());
+        assert!(ClusterHosts::parse("[cluster]\nhosts = []").is_err());
+        assert!(ClusterHosts::parse("[cluster]\nhosts = [\"no-port\"]").is_err());
+        assert!(ClusterHosts::parse("[cluster]\nhosts = [\"h:99999\"]").is_err());
+        assert!(ClusterHosts::parse("[cluster]\nhosts = [\"h:0\"]").is_err());
+        assert!(ClusterHosts::parse("[cluster]\nhosts = [\"h:1\", \"h:1\"]").is_err());
+        assert!(ClusterHosts::parse(
+            "[cluster]\nhosts = [\"h:1\"]\nrecv_timeout_secs = 0"
+        )
+        .is_err());
     }
 
     #[test]

@@ -59,6 +59,7 @@ impl DenseEngine {
                 d2h_ns: ts.d2h_ns,
                 h2d_bytes: ts.h2d_bytes,
                 d2h_bytes: ts.d2h_bytes,
+                ..Default::default()
             });
         }
 
@@ -84,6 +85,7 @@ impl DenseEngine {
                 d2h_ns: ts.d2h_ns,
                 h2d_bytes: ts.h2d_bytes,
                 d2h_bytes: ts.d2h_bytes,
+                ..Default::default()
             });
         }
 

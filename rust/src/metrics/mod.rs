@@ -35,6 +35,13 @@ pub struct TokenBreakdown {
     pub d2h_ns: Nanos,
     pub h2d_bytes: u64,
     pub d2h_bytes: u64,
+    /// Wire messages exchanged with peers for this token (sent + recv;
+    /// live cluster only, drained from `Endpoint::take_stats`). Like
+    /// h2d/d2h this is sub-accounting: the wait time already lives in
+    /// `comm_ns`.
+    pub net_msgs: u64,
+    /// Wire bytes exchanged with peers for this token (sent + recv).
+    pub net_bytes: u64,
 }
 
 impl TokenBreakdown {
@@ -61,6 +68,9 @@ pub struct PhaseMetrics {
     pub d2h: Welford,
     pub h2d_bytes: u64,
     pub d2h_bytes: u64,
+    /// Wire (node↔node) traffic sub-accounting (see [`TokenBreakdown`]).
+    pub net_msgs: u64,
+    pub net_bytes: u64,
 }
 
 impl PhaseMetrics {
@@ -74,6 +84,8 @@ impl PhaseMetrics {
         self.d2h.push(b.d2h_ns as f64);
         self.h2d_bytes += b.h2d_bytes;
         self.d2h_bytes += b.d2h_bytes;
+        self.net_msgs += b.net_msgs;
+        self.net_bytes += b.net_bytes;
     }
 
     /// Mean host↔device bytes moved per token (the §Perf headline: the
@@ -89,6 +101,16 @@ impl PhaseMetrics {
     /// Mean seconds spent in host↔device transfers per token.
     pub fn transfer_secs_per_token(&self) -> f64 {
         (self.h2d.mean() + self.d2h.mean()) / 1e9
+    }
+
+    /// Mean wire bytes exchanged with peers per token (§3.1: for the
+    /// paper's setup this is ~24.5 kB per layer per direction).
+    pub fn wire_bytes_per_token(&self) -> f64 {
+        if self.tokens == 0 {
+            0.0
+        } else {
+            self.net_bytes as f64 / self.tokens as f64
+        }
     }
 
     /// Mean seconds/token.
@@ -168,6 +190,8 @@ mod tests {
             d2h_ns: 30,
             h2d_bytes: 1024,
             d2h_bytes: 2048,
+            net_msgs: 4,
+            net_bytes: 512,
         };
         assert_eq!(b.total_ns(), 200);
         assert_eq!(b.transfer_bytes(), 3072);
@@ -176,9 +200,12 @@ mod tests {
         assert_eq!(p.tokens, 2);
         assert_eq!(p.h2d_bytes, 2048);
         assert_eq!(p.d2h_bytes, 4096);
+        assert_eq!(p.net_msgs, 8);
+        assert_eq!(p.net_bytes, 1024);
         assert!((p.transfer_bytes_per_token() - 3072.0).abs() < 1e-9);
         assert!((p.transfer_secs_per_token() - 70e-9).abs() < 1e-15);
-        // total time unchanged by transfer sub-accounting
+        assert!((p.wire_bytes_per_token() - 512.0).abs() < 1e-9);
+        // total time unchanged by transfer/wire sub-accounting
         assert!((p.total.mean() - 200.0).abs() < 1e-9);
     }
 

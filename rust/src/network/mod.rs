@@ -2,13 +2,17 @@
 //! *latency* dominates *bandwidth*, so the model is LogP-flavoured:
 //! `time(msg) = transport_latency + bytes / bandwidth`).
 //!
-//! Two pieces:
+//! Three pieces:
 //! - `cost`: pure arithmetic over a `NetworkProfile` (used by the DES and
 //!   the Eq. 1 performance model);
-//! - `transport`: a real message-passing fabric over in-process channels
-//!   for the threaded cluster, optionally injecting the profile's latency
-//!   into live runs (real mode) or charging it to the virtual clock.
+//! - `transport`: the `Transport` backend trait plus the in-process mpsc
+//!   fabric for the threaded cluster, optionally injecting the profile's
+//!   latency into live runs (real mode) or charging it to the virtual
+//!   clock;
+//! - `tcp`: the socket backend — framed envelopes over `TcpStream`, so
+//!   the same wire protocols span OS processes and machines.
 
+pub mod tcp;
 pub mod transport;
 
 use crate::config::{NetworkProfile, Topology};
@@ -105,6 +109,26 @@ mod tests {
         let per_token = 40 * per_layer;
         let secs = per_token as f64 / 1e9;
         assert!((secs - 0.040).abs() < 0.005, "{secs} s");
+    }
+
+    #[test]
+    fn cost_model_pinned_to_section_4_3_calibration() {
+        // The §4.3 calibration the in-process penalty was fitted to:
+        // Table 3's P-L_B comm column is ≈0.168 s over 40 layers × 2
+        // messages = 80 messages. Each message is 1 ms transport latency
+        // + 24,576 B / 1.25 GB/s ≈ 19.66 µs transfer + 1.1 ms in-process
+        // gRPC penalty ≈ 2.12 ms. Pin the exact model outputs so a
+        // refactor of the wire layer cannot silently shift the numbers.
+        let p = NetworkProfile::tcp_10gbe();
+        assert_eq!(message_ns(&p, 24_576), 1_000_000 + 19_660);
+        assert_eq!(in_process_penalty_ns(Topology::Centralized), 1_100_000);
+        assert_eq!(in_process_penalty_ns(Topology::Decentralized), 0);
+        let phase = phase_ns(&p, Topology::Centralized, 24_576);
+        assert_eq!(phase, 2_119_660);
+        let table3_comm_secs = 80.0 * phase as f64 / 1e9;
+        assert!((table3_comm_secs - 0.168).abs() < 0.005, "{table3_comm_secs} s");
+        // Decentralized drops the penalty AND one of the two messages.
+        assert_eq!(layer_comm_ns(&p, Topology::Decentralized, 24_576), 1_019_660);
     }
 
     #[test]

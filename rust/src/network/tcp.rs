@@ -1,0 +1,483 @@
+//! Socket-backed [`Transport`]: the live cluster over real TCP, one OS
+//! process (or machine) per node.
+//!
+//! Wire format (all integers little-endian):
+//!
+//! - **Handshake** (once per connection, both directions):
+//!   `b"AMOE"` magic, `u16` protocol version, `u32` node id, `u32`
+//!   cluster size. Version or cluster-size mismatch aborts the join.
+//! - **Frame** (one per [`Envelope`]): `u32` payload length, `u32` from,
+//!   `u32` to, `u64` tag, then the payload bytes.
+//!
+//! Mesh establishment: node `i` listens on `hosts[i]`; it dials every
+//! lower-id peer (with retry until `connect_timeout`, so start order
+//! does not matter) and accepts one connection from every higher-id
+//! peer. `TCP_NODELAY` is set on every stream — the paper's exchanges
+//! are ~24.5 kB and latency-dominated (§3.1), so Nagle coalescing is
+//! pure harm here. One reader thread per peer decodes frames into a
+//! channel, giving the endpoint the same any-peer blocking receive the
+//! in-process fabric has.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use crate::network::transport::{Endpoint, Envelope, NetError, Transport};
+
+pub const PROTOCOL_VERSION: u16 = 1;
+const MAGIC: [u8; 4] = *b"AMOE";
+const HANDSHAKE_LEN: usize = 14;
+const FRAME_HEADER_LEN: usize = 20;
+/// Corrupt-stream guard: no protocol message comes close to this.
+const MAX_FRAME_PAYLOAD: u32 = 1 << 30;
+
+/// Socket knobs for one node's fabric attachment.
+#[derive(Debug, Clone)]
+pub struct TcpOptions {
+    /// How long to keep redialing peers that have not bound yet (also
+    /// bounds the whole mesh establishment, including handshakes).
+    pub connect_timeout: Duration,
+    /// Disable Nagle coalescing (keep `true`: §3.1 latency regime).
+    pub nodelay: bool,
+}
+
+impl Default for TcpOptions {
+    fn default() -> Self {
+        TcpOptions { connect_timeout: Duration::from_secs(120), nodelay: true }
+    }
+}
+
+/// Encode one envelope as a length-prefixed frame.
+pub fn encode_frame(env: &Envelope) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(FRAME_HEADER_LEN + env.payload.len());
+    buf.extend_from_slice(&(env.payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&(env.from as u32).to_le_bytes());
+    buf.extend_from_slice(&(env.to as u32).to_le_bytes());
+    buf.extend_from_slice(&env.tag.to_le_bytes());
+    buf.extend_from_slice(&env.payload);
+    buf
+}
+
+/// Decode one frame from a byte stream (blocking read).
+pub fn decode_frame(r: &mut impl Read) -> std::io::Result<Envelope> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    r.read_exact(&mut header)?;
+    let len = u32::from_le_bytes([header[0], header[1], header[2], header[3]]);
+    if len > MAX_FRAME_PAYLOAD {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame payload of {len} bytes exceeds the {MAX_FRAME_PAYLOAD} B cap"),
+        ));
+    }
+    let from = u32::from_le_bytes([header[4], header[5], header[6], header[7]]) as usize;
+    let to = u32::from_le_bytes([header[8], header[9], header[10], header[11]]) as usize;
+    let tag = u64::from_le_bytes(header[12..20].try_into().unwrap());
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok(Envelope { from, to, tag, payload })
+}
+
+fn write_handshake(s: &mut TcpStream, node: usize, n_nodes: usize) -> Result<(), NetError> {
+    let mut buf = Vec::with_capacity(HANDSHAKE_LEN);
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+    buf.extend_from_slice(&(node as u32).to_le_bytes());
+    buf.extend_from_slice(&(n_nodes as u32).to_le_bytes());
+    s.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_handshake(s: &mut TcpStream) -> Result<(usize, usize), NetError> {
+    let mut buf = [0u8; HANDSHAKE_LEN];
+    s.read_exact(&mut buf)?;
+    if buf[0..4] != MAGIC {
+        return Err(NetError::Handshake("bad magic (not an apple-moe peer)".into()));
+    }
+    let version = u16::from_le_bytes([buf[4], buf[5]]);
+    if version != PROTOCOL_VERSION {
+        return Err(NetError::Handshake(format!(
+            "peer speaks protocol v{version}, this binary speaks v{PROTOCOL_VERSION}"
+        )));
+    }
+    let node = u32::from_le_bytes([buf[6], buf[7], buf[8], buf[9]]) as usize;
+    let n = u32::from_le_bytes([buf[10], buf[11], buf[12], buf[13]]) as usize;
+    Ok((node, n))
+}
+
+/// Socket-backed transport: full mesh of `TcpStream`s, one reader
+/// thread per peer feeding a shared channel.
+pub struct TcpTransport {
+    node: usize,
+    n_nodes: usize,
+    /// Write halves, indexed by peer id (`None` at our own slot).
+    writers: Vec<Option<TcpStream>>,
+    rx: Receiver<Envelope>,
+}
+
+impl Transport for TcpTransport {
+    fn node(&self) -> usize {
+        self.node
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    fn send_raw(&mut self, env: Envelope) -> Result<(), NetError> {
+        let to = env.to;
+        let stream = self
+            .writers
+            .get_mut(to)
+            .and_then(Option::as_mut)
+            .ok_or(NetError::Disconnected(to))?;
+        let frame = encode_frame(&env);
+        stream.write_all(&frame).map_err(|_| NetError::Disconnected(to))
+    }
+
+    fn recv_raw(&mut self, timeout: Duration) -> Result<Envelope, NetError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(env) => Ok(env),
+            Err(RecvTimeoutError::Timeout) => Err(NetError::Timeout(timeout)),
+            Err(RecvTimeoutError::Disconnected) => Err(NetError::Closed),
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // Unblock peers (and our own reader threads) waiting on these
+        // connections.
+        for w in self.writers.iter().flatten() {
+            let _ = w.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+fn reader_loop(stream: TcpStream, tx: Sender<Envelope>, node: usize, peer: usize) {
+    let mut r = std::io::BufReader::new(stream);
+    loop {
+        match decode_frame(&mut r) {
+            Ok(env) => {
+                // A frame must carry the identity the peer handshook
+                // with — anything else is a corrupt or lying stream, and
+                // forwarding it would poison gather's per-peer tracking.
+                if env.from != peer || env.to != node {
+                    log::warn!(
+                        "node {node}: dropping peer {peer}'s connection: frame claims \
+                         from={} to={}",
+                        env.from,
+                        env.to
+                    );
+                    return;
+                }
+                if tx.send(env).is_err() {
+                    return; // endpoint dropped
+                }
+            }
+            Err(e) => {
+                // EOF is the normal end of a session; anything else is
+                // worth a log line but not a crash (the serve loop will
+                // surface a timeout naming this peer).
+                if e.kind() != std::io::ErrorKind::UnexpectedEof {
+                    log::debug!("node {node}: reader for peer {peer} stopped: {e}");
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn connect_retry(addr: &str, deadline: Instant) -> Result<TcpStream, NetError> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(NetError::Handshake(format!(
+                        "could not connect to peer at {addr}: {e}"
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Accept with a deadline (a plain `accept` would hang forever on a
+/// peer that never starts).
+fn accept_deadline(
+    listener: &TcpListener,
+    deadline: Instant,
+) -> Result<TcpStream, NetError> {
+    listener.set_nonblocking(true)?;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                listener.set_nonblocking(false)?;
+                stream.set_nonblocking(false)?;
+                return Ok(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(NetError::Handshake(
+                        "timed out waiting for higher-id peers to dial in".into(),
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => return Err(NetError::Io(e)),
+        }
+    }
+}
+
+/// Time left until `deadline`, or a handshake error once it has passed.
+fn time_left(deadline: Instant) -> Result<Duration, NetError> {
+    let d = deadline.saturating_duration_since(Instant::now());
+    if d.is_zero() {
+        return Err(NetError::Handshake("mesh establishment timed out".into()));
+    }
+    Ok(d)
+}
+
+/// Establish the full mesh for `node` over a pre-bound listener.
+fn establish(
+    node: usize,
+    listener: TcpListener,
+    addrs: &[String],
+    opts: &TcpOptions,
+) -> Result<TcpTransport, NetError> {
+    let n = addrs.len();
+    let deadline = Instant::now() + opts.connect_timeout;
+    let mut writers: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+
+    // Dial every lower-id peer.
+    for peer in 0..node {
+        let mut stream = connect_retry(&addrs[peer], deadline)?;
+        stream.set_read_timeout(Some(time_left(deadline)?))?;
+        write_handshake(&mut stream, node, n)?;
+        let (pid, pn) = read_handshake(&mut stream)?;
+        if pid != peer || pn != n {
+            return Err(NetError::Handshake(format!(
+                "peer at {} identifies as node {pid} of {pn}, expected node {peer} of {n}",
+                addrs[peer]
+            )));
+        }
+        writers[peer] = Some(stream);
+    }
+    // Accept one connection from every higher-id peer (any order). A
+    // connection that fails the handshake (a port scan, a health probe,
+    // a stray client) is dropped and accepting continues — only the
+    // deadline or a protocol conflict between VALID peers is fatal.
+    let mut accepted = 0;
+    while accepted < n - node - 1 {
+        let mut stream = accept_deadline(&listener, deadline)?;
+        stream.set_read_timeout(Some(time_left(deadline)?))?;
+        let (pid, pn) = match read_handshake(&mut stream) {
+            Ok(hs) => hs,
+            Err(e) => {
+                log::debug!("node {node}: dropping stray connection during join: {e}");
+                continue;
+            }
+        };
+        if pn != n || pid <= node || pid >= n {
+            log::debug!(
+                "node {node}: dropping unexpected join from node {pid} of {pn} \
+                 (this cluster has {n} nodes)"
+            );
+            continue;
+        }
+        if writers[pid].is_some() {
+            return Err(NetError::Handshake(format!("node {pid} connected twice")));
+        }
+        write_handshake(&mut stream, node, n)?;
+        writers[pid] = Some(stream);
+        accepted += 1;
+    }
+
+    // Mesh complete: tune the sockets and start the reader threads.
+    let (tx, rx) = channel();
+    for (peer, slot) in writers.iter().enumerate() {
+        if let Some(stream) = slot {
+            stream.set_nodelay(opts.nodelay)?;
+            stream.set_read_timeout(None)?;
+            let rdr = stream.try_clone()?;
+            let tx = tx.clone();
+            std::thread::spawn(move || reader_loop(rdr, tx, node, peer));
+        }
+    }
+    Ok(TcpTransport { node, n_nodes: n, writers, rx })
+}
+
+/// Join a cluster as `node`: bind `addrs[node]`, mesh up with every
+/// peer, and return the ready-to-serve [`Endpoint`].
+pub fn endpoint(node: usize, addrs: &[String], opts: &TcpOptions) -> Result<Endpoint, NetError> {
+    if node >= addrs.len() {
+        return Err(NetError::Handshake(format!(
+            "node id {node} out of range for a {}-host cluster",
+            addrs.len()
+        )));
+    }
+    let listener = TcpListener::bind(addrs[node].as_str())?;
+    Ok(Endpoint::new(Box::new(establish(node, listener, addrs, opts)?)))
+}
+
+/// A full TCP fabric over loopback inside one process (unit tests and
+/// `net-bench`): binds `n` ephemeral ports and meshes `n` endpoints
+/// concurrently. Returned in node order.
+pub fn loopback_fabric(n: usize) -> Result<Vec<Endpoint>, NetError> {
+    let opts = TcpOptions { connect_timeout: Duration::from_secs(30), nodelay: true };
+    let mut listeners = Vec::with_capacity(n);
+    let mut addrs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let l = TcpListener::bind("127.0.0.1:0")?;
+        addrs.push(format!("127.0.0.1:{}", l.local_addr()?.port()));
+        listeners.push(l);
+    }
+    let handles: Vec<_> = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(node, listener)| {
+            let addrs = addrs.clone();
+            let opts = opts.clone();
+            std::thread::spawn(move || establish(node, listener, &addrs, &opts))
+        })
+        .collect();
+    let mut eps = Vec::with_capacity(n);
+    for h in handles {
+        let t = h.join().expect("fabric thread panicked")?;
+        eps.push(Endpoint::new(Box::new(t)));
+    }
+    Ok(eps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::transport::{bytes_to_f32s, f32s_to_bytes, tag};
+    use crate::util::prop::forall;
+
+    const T: Duration = Duration::from_secs(10);
+
+    #[test]
+    fn frame_roundtrip_property() {
+        // Satellite: encode/decode round-trip over empty and large
+        // payloads and the full (phase, layer, token) tag packing.
+        forall("tcp frame round-trips", 96, |g| {
+            let len = match g.usize_in(0..4) {
+                0 => 0,                        // empty payload (end-of-request marker)
+                1 => g.usize_in(1..64),        // tiny control messages
+                2 => 24_576,                   // the paper's §3.1 exchange size
+                _ => g.usize_in(1..262_144),   // large payloads
+            };
+            let payload: Vec<u8> = (0..len).map(|i| (g.u64_in(0..256) ^ i as u64) as u8).collect();
+            let env = Envelope {
+                from: g.usize_in(0..16),
+                to: g.usize_in(0..16),
+                tag: tag(
+                    g.u64_in(0..256) as u8,
+                    g.u64_in(0..0x100_0000) as u32,
+                    g.u64_in(0..0x1_0000_0000) as u32,
+                ),
+                payload,
+            };
+            let bytes = encode_frame(&env);
+            let mut cursor = std::io::Cursor::new(bytes);
+            decode_frame(&mut cursor).unwrap() == env
+        });
+    }
+
+    #[test]
+    fn decode_rejects_oversized_frames() {
+        let mut bytes = encode_frame(&Envelope { from: 0, to: 1, tag: 7, payload: vec![1] });
+        bytes[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_frame(&mut std::io::Cursor::new(bytes)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn loopback_point_to_point() {
+        let mut eps = loopback_fabric(2).unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, tag(1, 0, 0), f32s_to_bytes(&[1.0, -2.5])).unwrap();
+        let env = b.recv_tag(tag(1, 0, 0), T).unwrap();
+        assert_eq!(env.from, 0);
+        assert_eq!(bytes_to_f32s(&env.payload), vec![1.0, -2.5]);
+        // And the reverse direction on the same connection.
+        b.send(0, tag(1, 0, 1), vec![9]).unwrap();
+        assert_eq!(a.recv_tag(tag(1, 0, 1), T).unwrap().payload, vec![9]);
+        assert_eq!(a.stats().sent_msgs, 1);
+        assert_eq!(a.stats().recv_msgs, 1);
+    }
+
+    #[test]
+    fn loopback_tags_demultiplex_out_of_order() {
+        let mut eps = loopback_fabric(2).unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, tag(1, 7, 0), vec![7]).unwrap();
+        a.send(1, tag(1, 8, 0), vec![8]).unwrap();
+        assert_eq!(b.recv_tag(tag(1, 8, 0), T).unwrap().payload, vec![8]);
+        assert_eq!(b.recv_tag(tag(1, 7, 0), T).unwrap().payload, vec![7]);
+    }
+
+    #[test]
+    fn loopback_three_node_gather_and_broadcast() {
+        let eps = loopback_fabric(3).unwrap();
+        let mut it = eps.into_iter();
+        let mut leader = it.next().unwrap();
+        let mut handles = Vec::new();
+        for mut ep in it {
+            handles.push(std::thread::spawn(move || {
+                // Every worker: receive the broadcast, echo its node id.
+                let env = ep.recv_tag(tag(2, 0, 0), T).unwrap();
+                assert_eq!(env.payload, vec![42]);
+                ep.send(0, tag(3, 0, 0), vec![ep.node() as u8]).unwrap();
+            }));
+        }
+        leader.broadcast(tag(2, 0, 0), &[42]).unwrap();
+        let got = leader.gather(tag(3, 0, 0), T).unwrap();
+        assert_eq!(got.iter().map(|e| e.from).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(got.iter().map(|e| e.payload[0] as usize).collect::<Vec<_>>(), vec![1, 2]);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn large_payload_crosses_loopback() {
+        // The paper's 24.5 kB all-reduce partial, plus a deliberately
+        // bigger frame to exercise the BufReader refill path.
+        let mut eps = loopback_fabric(2).unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        for (i, len) in [24_576usize, 1_000_000].into_iter().enumerate() {
+            let payload: Vec<u8> = (0..len).map(|j| (j % 251) as u8).collect();
+            a.send(1, tag(1, 0, i as u32), payload.clone()).unwrap();
+            let env = b.recv_tag(tag(1, 0, i as u32), T).unwrap();
+            assert_eq!(env.payload, payload);
+        }
+    }
+
+    #[test]
+    fn handshake_rejects_wrong_version() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // A "future" peer with a bumped protocol version.
+            let mut buf = Vec::new();
+            buf.extend_from_slice(&MAGIC);
+            buf.extend_from_slice(&(PROTOCOL_VERSION + 1).to_le_bytes());
+            buf.extend_from_slice(&1u32.to_le_bytes());
+            buf.extend_from_slice(&2u32.to_le_bytes());
+            s.write_all(&buf).unwrap();
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(T)).unwrap();
+        let err = read_handshake(&mut stream).unwrap_err();
+        assert!(matches!(err, NetError::Handshake(_)), "got {err:?}");
+        h.join().unwrap();
+    }
+}

@@ -1,12 +1,22 @@
-//! In-process message fabric for the threaded (live) cluster.
+//! Message fabric for the live cluster, split into a [`Transport`]
+//! backend trait and a backend-agnostic [`Endpoint`].
 //!
-//! Each node owns an `Endpoint`; endpoints are fully connected via mpsc
-//! channels (the "10 GbE switch"). A `NetworkProfile` can be attached to
-//! inject its transport latency + serialization time into deliveries, so
-//! live runs on localhost exhibit the paper's communication behaviour.
+//! Each node owns an `Endpoint`; the `Endpoint` implements everything
+//! the wire protocols need (tagged receive with an out-of-order stash,
+//! broadcast, gather, per-link accounting) on top of a raw backend:
+//!
+//! - [`InProcess`] (this module): endpoints fully connected via mpsc
+//!   channels (the "10 GbE switch" emulated inside one OS process). A
+//!   `NetworkProfile` can be attached to inject its transport latency +
+//!   serialization time into deliveries, so live runs on localhost
+//!   exhibit the paper's communication behaviour.
+//! - [`crate::network::tcp`]: real length-prefixed frames over
+//!   `TcpStream`, one OS process (or machine) per node.
+//!
 //! Payloads are raw little-endian bytes; helpers convert `f32` slices
 //! (the expert outputs exchanged in the all-reduce).
 
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
@@ -14,14 +24,13 @@ use crate::config::NetworkProfile;
 use crate::network::message_ns;
 
 /// A framed message between nodes.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Envelope {
     pub from: usize,
     pub to: usize,
     /// Application tag: (phase, layer, token) packed by the caller.
     pub tag: u64,
     pub payload: Vec<u8>,
-    deliver_at: Instant,
 }
 
 /// Errors from the fabric.
@@ -31,120 +40,203 @@ pub enum NetError {
     Disconnected(usize),
     #[error("recv timed out after {0:?}")]
     Timeout(Duration),
+    #[error("gather timed out after {timeout:?}: no message from node(s) {missing:?}")]
+    GatherTimeout { timeout: Duration, missing: Vec<usize> },
     #[error("fabric closed")]
     Closed,
+    #[error("handshake failed: {0}")]
+    Handshake(String),
+    #[error("network io: {0}")]
+    Io(#[from] std::io::Error),
 }
 
-/// One node's attachment to the fabric.
-pub struct Endpoint {
-    pub node: usize,
-    pub n_nodes: usize,
-    rx: Receiver<Envelope>,
-    txs: Vec<Sender<Envelope>>,
-    profile: Option<NetworkProfile>,
-    /// Messages that arrived while waiting for a different tag.
-    stash: Vec<Envelope>,
-    /// Delivery stats.
+/// A raw point-to-point backend: delivers whole envelopes between the
+/// nodes of one cluster. Implementations: [`InProcess`] (mpsc channels),
+/// [`crate::network::tcp::TcpTransport`] (sockets).
+pub trait Transport: Send {
+    /// This endpoint's node id.
+    fn node(&self) -> usize;
+    /// Cluster size.
+    fn n_nodes(&self) -> usize;
+    /// Send one envelope (`env.to` selects the peer).
+    fn send_raw(&mut self, env: Envelope) -> Result<(), NetError>;
+    /// Blocking receive of the next envelope, any tag.
+    fn recv_raw(&mut self, timeout: Duration) -> Result<Envelope, NetError>;
+}
+
+/// Per-endpoint traffic accounting: messages, bytes and time spent in
+/// the transport. Drained per token by the serve loops into
+/// `TokenBreakdown::net_*` (the wire-traffic analogue of the h2d/d2h
+/// transfer meter).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LinkStats {
     pub sent_msgs: u64,
     pub sent_bytes: u64,
+    /// Time spent inside backend sends (serialization + socket write).
+    pub send_ns: u64,
     pub recv_msgs: u64,
+    pub recv_bytes: u64,
+    /// Time blocked waiting in tagged receives.
+    pub recv_wait_ns: u64,
 }
 
-/// Build a fully-connected fabric of `n` endpoints. `profile = None`
-/// delivers instantly (for unit tests); `Some` injects latency.
+impl LinkStats {
+    pub fn add(&mut self, o: LinkStats) {
+        self.sent_msgs += o.sent_msgs;
+        self.sent_bytes += o.sent_bytes;
+        self.send_ns += o.send_ns;
+        self.recv_msgs += o.recv_msgs;
+        self.recv_bytes += o.recv_bytes;
+        self.recv_wait_ns += o.recv_wait_ns;
+    }
+
+    pub fn msgs(&self) -> u64 {
+        self.sent_msgs + self.recv_msgs
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.sent_bytes + self.recv_bytes
+    }
+}
+
+/// One node's attachment to the fabric: tagged receive (with an
+/// out-of-order stash), broadcast, gather and accounting over any
+/// [`Transport`] backend.
+pub struct Endpoint {
+    backend: Box<dyn Transport>,
+    /// Messages that arrived while waiting for a different tag, keyed
+    /// by tag (FIFO per tag).
+    stash: HashMap<u64, VecDeque<Envelope>>,
+    stats: LinkStats,
+}
+
+/// Build a fully-connected in-process fabric of `n` endpoints.
+/// `profile = None` delivers instantly (for unit tests); `Some` injects
+/// the profile's latency into every delivery.
 pub fn fabric(n: usize, profile: Option<NetworkProfile>) -> Vec<Endpoint> {
     let mut txs = Vec::with_capacity(n);
     let mut rxs = Vec::with_capacity(n);
     for _ in 0..n {
-        let (tx, rx) = channel::<Envelope>();
+        let (tx, rx) = channel::<(Envelope, Instant)>();
         txs.push(tx);
         rxs.push(rx);
     }
     rxs.into_iter()
         .enumerate()
-        .map(|(node, rx)| Endpoint {
-            node,
-            n_nodes: n,
-            rx,
-            txs: txs.clone(),
-            profile: profile.clone(),
-            stash: Vec::new(),
-            sent_msgs: 0,
-            sent_bytes: 0,
-            recv_msgs: 0,
+        .map(|(node, rx)| {
+            Endpoint::new(Box::new(InProcess {
+                node,
+                n_nodes: n,
+                rx,
+                txs: txs.clone(),
+                profile: profile.clone(),
+                pending: Vec::new(),
+            }))
         })
         .collect()
 }
 
 impl Endpoint {
-    /// Send `payload` to `to`. The injected network delay is attached as
-    /// an earliest-delivery time the receiver honours.
+    pub fn new(backend: Box<dyn Transport>) -> Endpoint {
+        Endpoint { backend, stash: HashMap::new(), stats: LinkStats::default() }
+    }
+
+    pub fn node(&self) -> usize {
+        self.backend.node()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.backend.n_nodes()
+    }
+
+    /// Traffic accounting since construction (or the last `take_stats`).
+    pub fn stats(&self) -> LinkStats {
+        self.stats
+    }
+
+    /// Drain the traffic counters (per-token metering).
+    pub fn take_stats(&mut self) -> LinkStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    /// Send `payload` to `to`.
     pub fn send(&mut self, to: usize, tag: u64, payload: Vec<u8>) -> Result<(), NetError> {
-        let delay = self
-            .profile
-            .as_ref()
-            .map(|p| Duration::from_nanos(message_ns(p, payload.len() as u64)))
-            .unwrap_or(Duration::ZERO);
-        self.sent_msgs += 1;
-        self.sent_bytes += payload.len() as u64;
-        let env = Envelope {
-            from: self.node,
-            to,
-            tag,
-            payload,
-            deliver_at: Instant::now() + delay,
-        };
-        self.txs[to].send(env).map_err(|_| NetError::Disconnected(to))
+        let from = self.backend.node();
+        let bytes = payload.len() as u64;
+        let t0 = Instant::now();
+        self.backend.send_raw(Envelope { from, to, tag, payload })?;
+        self.stats.sent_msgs += 1;
+        self.stats.sent_bytes += bytes;
+        self.stats.send_ns += t0.elapsed().as_nanos() as u64;
+        Ok(())
     }
 
     /// Broadcast to every other node.
     pub fn broadcast(&mut self, tag: u64, payload: &[u8]) -> Result<(), NetError> {
-        for to in 0..self.n_nodes {
-            if to != self.node {
+        for to in 0..self.n_nodes() {
+            if to != self.node() {
                 self.send(to, tag, payload.to_vec())?;
             }
         }
         Ok(())
     }
 
-    /// Receive the next message with `tag`, honouring delivery times.
-    /// Messages with other tags are stashed for later calls.
+    /// Receive the next message with `tag`. Messages with other tags are
+    /// stashed (per-tag FIFO) for later calls.
     pub fn recv_tag(&mut self, tag: u64, timeout: Duration) -> Result<Envelope, NetError> {
+        let t0 = Instant::now();
         // Check the stash first.
-        if let Some(i) = self.stash.iter().position(|e| e.tag == tag) {
-            let env = self.stash.remove(i);
-            wait_until(env.deliver_at);
-            self.recv_msgs += 1;
-            return Ok(env);
+        if let Some(q) = self.stash.get_mut(&tag) {
+            if let Some(env) = q.pop_front() {
+                if q.is_empty() {
+                    self.stash.remove(&tag);
+                }
+                self.note_recv(&env, t0);
+                return Ok(env);
+            }
         }
         let deadline = Instant::now() + timeout;
         loop {
             let remaining = deadline
                 .checked_duration_since(Instant::now())
                 .ok_or(NetError::Timeout(timeout))?;
-            match self.rx.recv_timeout(remaining) {
+            match self.backend.recv_raw(remaining) {
                 Ok(env) if env.tag == tag => {
-                    wait_until(env.deliver_at);
-                    self.recv_msgs += 1;
+                    self.note_recv(&env, t0);
                     return Ok(env);
                 }
-                Ok(env) => self.stash.push(env),
-                Err(RecvTimeoutError::Timeout) => return Err(NetError::Timeout(timeout)),
-                Err(RecvTimeoutError::Disconnected) => return Err(NetError::Closed),
+                Ok(env) => {
+                    self.stash.entry(env.tag).or_default().push_back(env);
+                }
+                Err(NetError::Timeout(_)) => return Err(NetError::Timeout(timeout)),
+                Err(e) => return Err(e),
             }
         }
     }
 
-    /// Gather one `tag` message from every other node.
-    pub fn gather(
-        &mut self,
-        tag: u64,
-        timeout: Duration,
-    ) -> Result<Vec<Envelope>, NetError> {
-        let mut out = Vec::with_capacity(self.n_nodes - 1);
-        let mut seen = vec![false; self.n_nodes];
-        while out.len() < self.n_nodes - 1 {
-            let env = self.recv_tag(tag, timeout)?;
+    fn note_recv(&mut self, env: &Envelope, t0: Instant) {
+        self.stats.recv_msgs += 1;
+        self.stats.recv_bytes += env.payload.len() as u64;
+        self.stats.recv_wait_ns += t0.elapsed().as_nanos() as u64;
+    }
+
+    /// Gather one `tag` message from every other node. A timeout names
+    /// the peers that never delivered.
+    pub fn gather(&mut self, tag: u64, timeout: Duration) -> Result<Vec<Envelope>, NetError> {
+        let n = self.n_nodes();
+        let mut out = Vec::with_capacity(n - 1);
+        let mut seen = vec![false; n];
+        seen[self.node()] = true;
+        while out.len() < n - 1 {
+            let env = match self.recv_tag(tag, timeout) {
+                Ok(env) => env,
+                Err(NetError::Timeout(t)) => {
+                    let missing: Vec<usize> =
+                        (0..n).filter(|&p| !seen[p]).collect();
+                    return Err(NetError::GatherTimeout { timeout: t, missing });
+                }
+                Err(e) => return Err(e),
+            };
             if !seen[env.from] {
                 seen[env.from] = true;
                 out.push(env);
@@ -153,6 +245,85 @@ impl Endpoint {
         out.sort_by_key(|e| e.from);
         Ok(out)
     }
+}
+
+/// The original mpsc fabric, now one backend among several: instant (or
+/// profile-delayed) in-process delivery between threads.
+pub struct InProcess {
+    node: usize,
+    n_nodes: usize,
+    rx: Receiver<(Envelope, Instant)>,
+    txs: Vec<Sender<(Envelope, Instant)>>,
+    profile: Option<NetworkProfile>,
+    /// Arrived but not yet deliverable (injected latency still running).
+    pending: Vec<(Instant, Envelope)>,
+}
+
+impl Transport for InProcess {
+    fn node(&self) -> usize {
+        self.node
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// The injected network delay is attached as an earliest-delivery
+    /// time the receiver honours.
+    fn send_raw(&mut self, env: Envelope) -> Result<(), NetError> {
+        let delay = self
+            .profile
+            .as_ref()
+            .map(|p| Duration::from_nanos(message_ns(p, env.payload.len() as u64)))
+            .unwrap_or(Duration::ZERO);
+        let to = env.to;
+        self.txs[to]
+            .send((env, Instant::now() + delay))
+            .map_err(|_| NetError::Disconnected(to))
+    }
+
+    /// Delivers in `deliver_at` order, not channel order: delays overlap
+    /// as they would on a real wire (a small later message overtakes a
+    /// large earlier one), instead of serializing behind the head of the
+    /// channel. A message that arrived within the caller's deadline is
+    /// delivered even if its injected latency runs past it (blocking
+    /// delivery semantics).
+    fn recv_raw(&mut self, timeout: Duration) -> Result<Envelope, NetError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if !self.pending.is_empty() {
+                // Earliest-delivering pending message (ties: FIFO).
+                let i = (0..self.pending.len()).min_by_key(|&i| self.pending[i].0).unwrap();
+                let at = self.pending[i].0;
+                // While its latency runs, keep draining arrivals — one
+                // of them may be deliverable even earlier.
+                match self.rx.recv_timeout(at.saturating_duration_since(Instant::now())) {
+                    Ok(arrival) => {
+                        self.pending.push(swap_pair(arrival));
+                        continue;
+                    }
+                    Err(_) => {
+                        // Reached `at` (or senders are gone): deliver.
+                        let (at, env) = self.pending.remove(i);
+                        wait_until(at);
+                        return Ok(env);
+                    }
+                }
+            }
+            let remaining = deadline
+                .checked_duration_since(Instant::now())
+                .ok_or(NetError::Timeout(timeout))?;
+            match self.rx.recv_timeout(remaining) {
+                Ok(arrival) => self.pending.push(swap_pair(arrival)),
+                Err(RecvTimeoutError::Timeout) => return Err(NetError::Timeout(timeout)),
+                Err(RecvTimeoutError::Disconnected) => return Err(NetError::Closed),
+            }
+        }
+    }
+}
+
+fn swap_pair((env, at): (Envelope, Instant)) -> (Instant, Envelope) {
+    (at, env)
 }
 
 fn wait_until(t: Instant) {
@@ -216,6 +387,36 @@ mod tests {
     }
 
     #[test]
+    fn stash_preserves_per_tag_fifo_across_interleavings() {
+        // Two senders interleave two tag streams; draining one tag
+        // entirely first must stash the other stream in order, and
+        // repeated sends on the SAME tag must come back FIFO.
+        let mut eps = fabric(3, None);
+        let mut c = eps.pop().unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let ta = tag(1, 1, 0);
+        let tb = tag(1, 2, 0);
+        a.send(2, ta, vec![1]).unwrap();
+        b.send(2, tb, vec![10]).unwrap();
+        a.send(2, ta, vec![2]).unwrap();
+        b.send(2, tb, vec![11]).unwrap();
+        a.send(2, ta, vec![3]).unwrap();
+        // Drain tag B first: every tag-A message is stashed.
+        assert_eq!(c.recv_tag(tb, T).unwrap().payload, vec![10]);
+        assert_eq!(c.recv_tag(tb, T).unwrap().payload, vec![11]);
+        // Tag A now comes entirely from the stash, in send order.
+        assert_eq!(c.recv_tag(ta, T).unwrap().payload, vec![1]);
+        assert_eq!(c.recv_tag(ta, T).unwrap().payload, vec![2]);
+        assert_eq!(c.recv_tag(ta, T).unwrap().payload, vec![3]);
+        // Stash fully drained (nothing left to time out on quickly).
+        assert!(matches!(
+            c.recv_tag(ta, Duration::from_millis(10)),
+            Err(NetError::Timeout(_))
+        ));
+    }
+
+    #[test]
     fn gather_collects_all_peers() {
         let eps = fabric(4, None);
         let mut handles = Vec::new();
@@ -223,7 +424,7 @@ mod tests {
         let mut leader = it.next().unwrap();
         for mut ep in it {
             handles.push(std::thread::spawn(move || {
-                ep.send(0, tag(2, 3, 1), vec![ep.node as u8]).unwrap();
+                ep.send(0, tag(2, 3, 1), vec![ep.node() as u8]).unwrap();
             }));
         }
         let got = leader.gather(tag(2, 3, 1), T).unwrap();
@@ -238,6 +439,21 @@ mod tests {
     }
 
     #[test]
+    fn gather_timeout_names_missing_peers() {
+        let mut eps = fabric(3, None);
+        let _c = eps.pop().unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        // Only node 1 reports; node 2 stays silent.
+        b.send(0, tag(2, 0, 0), vec![1]).unwrap();
+        let err = a.gather(tag(2, 0, 0), Duration::from_millis(30)).unwrap_err();
+        match err {
+            NetError::GatherTimeout { missing, .. } => assert_eq!(missing, vec![2]),
+            other => panic!("expected GatherTimeout, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn broadcast_reaches_everyone() {
         let mut eps = fabric(3, None);
         let mut c = eps.pop().unwrap();
@@ -246,7 +462,12 @@ mod tests {
         a.broadcast(tag(3, 0, 0), &[42]).unwrap();
         assert_eq!(b.recv_tag(tag(3, 0, 0), T).unwrap().payload, vec![42]);
         assert_eq!(c.recv_tag(tag(3, 0, 0), T).unwrap().payload, vec![42]);
-        assert_eq!(a.sent_msgs, 2);
+        assert_eq!(a.stats().sent_msgs, 2);
+        assert_eq!(a.stats().sent_bytes, 2);
+        assert_eq!(b.stats().recv_msgs, 1);
+        // Counters drain for per-token metering.
+        assert_eq!(a.take_stats().sent_msgs, 2);
+        assert_eq!(a.stats().sent_msgs, 0);
     }
 
     #[test]
@@ -272,7 +493,7 @@ mod tests {
         let mut eps = fabric(2, None);
         let mut b = eps.pop().unwrap();
         let err = b.recv_tag(1, Duration::from_millis(20)).unwrap_err();
-        matches!(err, NetError::Timeout(_));
+        assert!(matches!(err, NetError::Timeout(_)));
     }
 
     #[test]

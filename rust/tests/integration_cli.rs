@@ -53,6 +53,30 @@ fn multiuser_runs_and_validates() {
 }
 
 #[test]
+fn net_bench_runs_both_backends() {
+    // Small but real: exercises the in-process AND loopback-TCP
+    // transports end-to-end (no artifacts needed).
+    run("net-bench --iters 4 --warmup 1 --payload 2048 --stream-msgs 8").unwrap();
+}
+
+#[test]
+fn net_bench_rejects_bad_input() {
+    assert!(run("net-bench --backend carrier-pigeon").is_err());
+    assert!(run("net-bench --iters 0").is_err());
+}
+
+#[test]
+fn node_and_launch_validate_args() {
+    // `node` needs an id and a hosts file before it touches the network.
+    assert!(run("node").is_err());
+    assert!(run("node --id 0").is_err());
+    assert!(run("node --id 0 --cluster /nonexistent/hosts.toml").is_err());
+    // `launch` cross-checks --nodes against the hosts file.
+    assert!(run("launch --nodes 0").is_err());
+    assert!(run("launch --cluster /nonexistent/hosts.toml").is_err());
+}
+
+#[test]
 fn help_and_unknown() {
     run("help").unwrap();
     assert!(run("frobnicate").is_err());

@@ -1,0 +1,146 @@
+//! Integration: the REAL multi-process cluster. `apple-moe launch`
+//! spawns one OS process per node, meshed over loopback TCP
+//! (`network::tcp`), and must generate byte-identical token streams to
+//! the in-process mpsc fabric for both topologies — the acceptance
+//! criterion for the socket transport subsystem. Skips politely until
+//! `make artifacts` has run (like every live-cluster test).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use apple_moe::cluster::live::{LiveCluster, LiveConfig};
+use apple_moe::config::{Balancing, Topology};
+use apple_moe::engine::Request;
+
+const N_REQUESTS: usize = 2;
+const PROMPT_TOKENS: usize = 4;
+const GEN_TOKENS: usize = 6;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+/// The same request stream `apple-moe node` derives from its flags.
+fn requests() -> Vec<Request> {
+    (0..N_REQUESTS)
+        .map(|i| {
+            let mut r = Request::synthetic(i as u64, PROMPT_TOKENS, 512);
+            r.max_new_tokens = GEN_TOKENS;
+            r
+        })
+        .collect()
+}
+
+/// Token streams from the threaded in-process cluster.
+fn in_process_tokens(dir: &Path, topology: Topology, balancing: Balancing) -> Vec<Vec<u32>> {
+    let mut cfg = LiveConfig::new(dir.to_path_buf(), 2);
+    cfg.topology = topology;
+    cfg.balancing = balancing;
+    let cluster = LiveCluster::start(cfg).unwrap();
+    let out = requests()
+        .into_iter()
+        .map(|req| cluster.serve(req).unwrap().generated)
+        .collect();
+    cluster.shutdown();
+    out
+}
+
+/// Token streams from 2 real node processes via `apple-moe launch`.
+fn multi_process_tokens(dir: &Path, topology: &str, balancing: &str) -> Vec<Vec<u32>> {
+    let out_path = std::env::temp_dir().join(format!(
+        "apple-moe-test-{}-{topology}.tokens",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&out_path);
+    let n_requests = N_REQUESTS.to_string();
+    let prompt = PROMPT_TOKENS.to_string();
+    let gen = GEN_TOKENS.to_string();
+    let status = Command::new(env!("CARGO_BIN_EXE_apple-moe"))
+        .args([
+            "launch",
+            "--nodes",
+            "2",
+            "--topology",
+            topology,
+            "--balancing",
+            balancing,
+            "--requests",
+            n_requests.as_str(),
+            "--prompt-tokens",
+            prompt.as_str(),
+            "--gen-tokens",
+            gen.as_str(),
+            "--recv-timeout-secs",
+            "120",
+            "--artifacts",
+        ])
+        .arg(dir)
+        .arg("--out")
+        .arg(&out_path)
+        .status()
+        .expect("spawning apple-moe launch");
+    assert!(status.success(), "launch ({topology}) exited with {status}");
+    let text = std::fs::read_to_string(&out_path).expect("reading --out token file");
+    let _ = std::fs::remove_file(&out_path);
+    text.lines()
+        .map(|l| {
+            l.split_whitespace()
+                .map(|t| t.parse::<u32>().expect("token id"))
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn launch_decentralized_matches_in_process_fabric() {
+    let Some(dir) = artifacts_dir() else { return };
+    let want = in_process_tokens(&dir, Topology::Decentralized, Balancing::RouterAided);
+    let got = multi_process_tokens(&dir, "decentralized", "router-aided");
+    assert_eq!(got.len(), N_REQUESTS);
+    assert!(got.iter().all(|g| g.len() == GEN_TOKENS));
+    assert_eq!(got, want, "TCP multi-process tokens diverge from in-process fabric");
+}
+
+#[test]
+fn launch_centralized_matches_in_process_fabric() {
+    let Some(dir) = artifacts_dir() else { return };
+    let want = in_process_tokens(&dir, Topology::Centralized, Balancing::SelectedOnly);
+    let got = multi_process_tokens(&dir, "centralized", "selected-only");
+    assert_eq!(got, want, "TCP multi-process tokens diverge from in-process fabric");
+}
+
+/// `run_node` + a loopback TCP fabric inside one process: the same
+/// equivalence without process spawning (finer-grained failure mode,
+/// and it exercises `network::tcp` under cargo's default test runner).
+#[test]
+fn tcp_fabric_in_process_nodes_match_mpsc_fabric() {
+    let Some(dir) = artifacts_dir() else { return };
+    let want = in_process_tokens(&dir, Topology::Decentralized, Balancing::RouterAided);
+
+    let eps = apple_moe::network::tcp::loopback_fabric(2).unwrap();
+    let reqs = requests();
+    let mut handles = Vec::new();
+    for ep in eps {
+        let mut cfg = LiveConfig::new(dir.clone(), 2);
+        cfg.topology = Topology::Decentralized;
+        cfg.balancing = Balancing::RouterAided;
+        let reqs = reqs.clone();
+        handles.push(std::thread::spawn(move || {
+            apple_moe::cluster::live::run_node(&cfg, ep, &reqs).unwrap()
+        }));
+    }
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let got: Vec<Vec<u32>> = results[0].iter().map(|r| r.generated.clone()).collect();
+    assert_eq!(got, want, "run_node over TCP diverges from LiveCluster");
+    // Wire accounting flowed into the metrics: the decentralized
+    // protocol exchanges one partial per peer per layer per token.
+    let decode = &results[0][0].metrics.decode;
+    assert!(decode.net_bytes > 0, "no wire traffic metered");
+    assert!(decode.net_msgs > 0);
+}
