@@ -1,5 +1,6 @@
-//! Quickstart: load the AOT artifacts and generate text with the dense
-//! single-node engine — the smallest end-to-end use of the stack.
+//! Quickstart: load the AOT artifacts and stream generated tokens from
+//! the dense single-node engine — the smallest end-to-end use of the
+//! streaming serving API (`Engine::submit` → `TokenEvent` stream).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
@@ -7,7 +8,7 @@
 
 use std::path::Path;
 
-use apple_moe::engine::{DenseEngine, Request, Sampler};
+use apple_moe::engine::{DenseEngine, Request, Sampler, TokenEvent};
 
 fn main() -> anyhow::Result<()> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -17,21 +18,45 @@ fn main() -> anyhow::Result<()> {
     );
 
     println!("loading dbrx-nano artifacts + compiling on the PJRT CPU client...");
-    let mut engine = DenseEngine::load(&dir, Sampler::Greedy, 42)?;
-    let m = &engine.runtime().manifest;
+    let engine = DenseEngine::load(&dir)?;
+    let m = engine.manifest();
     println!(
         "model: {} layers, d={}, {} experts (top-{}), vocab {}",
         m.n_layers, m.d_embed, m.n_experts, m.top_k, m.vocab
     );
 
-    let req = Request::new(1, vec![11, 29, 83, 147], 24);
-    let res = engine.serve(&req)?;
+    // Sampling is per-request: this one decodes greedily with a private
+    // seed; swap in Sampler::TopK { k, temperature } to sample.
+    let mut req = Request::new(1, vec![11, 29, 83, 147], 24);
+    req.sampling.sampler = Sampler::Greedy;
+    req.sampling.seed = 42;
     println!("prompt:    {:?}", req.prompt);
-    println!("generated: {:?}", res.generated);
+
+    // submit() returns at once; tokens stream on the handle as the
+    // worker decodes them.
+    let handle = engine.submit(req)?;
+    print!("generated:");
+    let result = loop {
+        match handle.next_event().expect("engine dropped the stream") {
+            TokenEvent::Started { ttft_s, .. } => {
+                eprintln!("(first token after {ttft_s:.2} s)");
+            }
+            TokenEvent::Token { id, logprob } => {
+                print!(" {id}");
+                let _ = logprob; // ln p(token) under the full softmax
+            }
+            TokenEvent::Done { result } => break result,
+            TokenEvent::Failed { error, .. } => anyhow::bail!("generation failed: {error}"),
+        }
+    };
+    println!();
+    println!("finish:    {:?}", result.finish);
     println!(
-        "prefill {:.1} tok/s | decode {:.1} tok/s",
-        res.metrics.prefill.tokens_per_sec(),
-        res.metrics.decode.tokens_per_sec()
+        "prefill {:.1} tok/s | decode {:.1} tok/s | ttft {:.2} s | latency {:.2} s",
+        result.metrics.prefill.tokens_per_sec(),
+        result.metrics.decode.tokens_per_sec(),
+        result.metrics.ttft_s(),
+        result.metrics.latency_s(),
     );
     Ok(())
 }

@@ -139,9 +139,8 @@ fn main() {
         let mut cfg = LiveConfig::new(dir.clone(), 2);
         cfg.device_resident = device_resident;
         let cluster = LiveCluster::start(cfg).expect("cluster");
-        let mut req = Request::synthetic(0, 4, 512);
-        req.max_new_tokens = 16;
-        let res = cluster.serve(req).unwrap();
+        let req = Request::synthetic(0, 4, 512, 16);
+        let res = cluster.submit(req).unwrap().join().unwrap();
         cluster.shutdown();
         res.metrics.decode.clone()
     };

@@ -1,16 +1,19 @@
 //! `apple-moe generate` — LIVE run: the nano model over a threaded
 //! cluster executing AOT artifacts via PJRT (no Python on the path).
+//! Streams tokens to stdout as they decode; sampling is per-request
+//! (`--sampler/--top-k/--temperature/--seed/--stop`).
 
+use std::io::Write;
 use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::cli::args::Args;
-use crate::cli::commands::{artifacts_dir, parse_balancing, parse_topology};
+use crate::cli::commands::{artifacts_dir, parse_balancing, parse_sampling, parse_topology};
 use crate::cluster::live::{LiveCluster, LiveConfig};
 use crate::config::NetworkProfile;
+use crate::engine::api::TokenEvent;
 use crate::engine::request::Request;
-use crate::engine::sampling::Sampler;
 
 pub fn run(args: &mut Args) -> Result<()> {
     let nodes = args.usize_or("nodes", 2)?;
@@ -25,7 +28,7 @@ pub fn run(args: &mut Args) -> Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("unknown network '{name}'"))?,
         ),
     };
-    let seed = args.u64_or("seed", 0xD8B2)?;
+    let sampling = parse_sampling(args, gen_tokens)?;
     let recv_timeout = args.u64_or("recv-timeout-secs", 120)?;
     // Force the host-tensor reference path (per-layer cache round trips;
     // the default device-resident path is the §Perf-optimized regime).
@@ -37,8 +40,6 @@ pub fn run(args: &mut Args) -> Result<()> {
     cfg.topology = topology;
     cfg.balancing = balancing;
     cfg.network = network;
-    cfg.sampler = Sampler::Greedy;
-    cfg.seed = seed;
     cfg.device_resident = !host_path;
     cfg.recv_timeout = Duration::from_secs(recv_timeout.max(1));
 
@@ -48,12 +49,35 @@ pub fn run(args: &mut Args) -> Result<()> {
         eprintln!("  node {n}: experts {res:?}");
     }
 
-    let req = Request::synthetic(1, prompt_tokens, 512);
-    let req = Request { max_new_tokens: gen_tokens, ..req };
-    let res = cluster.serve(req)?;
+    let mut req = Request::synthetic(1, prompt_tokens, 512, gen_tokens);
+    req.sampling = sampling;
+    let handle = cluster.submit(req)?;
+
+    print!("generated tokens:");
+    let _ = std::io::stdout().flush();
+    let res = loop {
+        match handle.next_event() {
+            Some(TokenEvent::Started { ttft_s, .. }) => {
+                eprintln!("first token after {ttft_s:.2} s");
+            }
+            Some(TokenEvent::Token { id, .. }) => {
+                print!(" {id}");
+                let _ = std::io::stdout().flush();
+            }
+            Some(TokenEvent::Done { result }) => break result,
+            Some(TokenEvent::Failed { error, .. }) => {
+                println!();
+                anyhow::bail!("generation failed: {error}")
+            }
+            None => {
+                println!();
+                anyhow::bail!("cluster dropped the stream")
+            }
+        }
+    };
+    println!();
     cluster.shutdown();
 
-    println!("generated tokens: {:?}", res.generated);
     let d = &res.metrics.decode;
     let p = &res.metrics.prefill;
     let (moe, comm, misc) = d.breakdown_secs();
@@ -62,6 +86,12 @@ pub fn run(args: &mut Args) -> Result<()> {
         p.tokens_per_sec(),
         d.tokens_per_sec(),
         d.secs_per_token(),
+    );
+    println!(
+        "ttft: {:.2} s | end-to-end latency: {:.2} s (finish: {:?})",
+        res.metrics.ttft_s(),
+        res.metrics.latency_s(),
+        res.finish,
     );
     println!(
         "host<->device: {:.1} KiB/token ({:.4} s/token in transfers)",

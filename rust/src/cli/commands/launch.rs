@@ -22,6 +22,8 @@ pub fn run(args: &mut Args) -> Result<()> {
     let n_requests = args.usize_or("requests", 1)?;
     let prompt_tokens = args.usize_or("prompt-tokens", 16)?;
     let gen_tokens = args.usize_or("gen-tokens", 32)?;
+    let concurrency = args.usize_or("concurrency", 2)?;
+    let policy = args.str_or("policy", "round-robin");
     let seed = args.u64_or("seed", 0xD8B2)?;
     let recv_timeout_flag = args.get("recv-timeout-secs");
     let host_path = args.flag("host-path");
@@ -82,6 +84,10 @@ pub fn run(args: &mut Args) -> Result<()> {
             .arg(prompt_tokens.to_string())
             .arg("--gen-tokens")
             .arg(gen_tokens.to_string())
+            .arg("--concurrency")
+            .arg(concurrency.to_string())
+            .arg("--policy")
+            .arg(&policy)
             .arg("--seed")
             .arg(seed.to_string())
             .arg("--artifacts")

@@ -18,6 +18,8 @@ use std::path::PathBuf;
 
 use crate::cli::args::Args;
 use crate::config::{Balancing, NetworkProfile, Strategy, Topology};
+use crate::engine::sampling::{Sampler, SamplingParams};
+use crate::engine::scheduler::SchedPolicy;
 
 pub(crate) fn parse_strategy(args: &mut Args) -> Result<Strategy> {
     let s = args.str_or("strategy", "p-lr-d");
@@ -48,4 +50,40 @@ pub(crate) fn parse_balancing(args: &mut Args) -> Result<Balancing> {
         "router-aided" | "lr" => Ok(Balancing::RouterAided),
         other => anyhow::bail!("unknown balancing '{other}'"),
     }
+}
+
+pub(crate) fn parse_policy(args: &mut Args) -> Result<SchedPolicy> {
+    match args.str_or("policy", "round-robin").as_str() {
+        "round-robin" | "rr" => Ok(SchedPolicy::RoundRobin),
+        "fcfs" | "run-to-completion" => Ok(SchedPolicy::RunToCompletion),
+        other => anyhow::bail!("unknown policy '{other}'"),
+    }
+}
+
+/// Per-request sampling from CLI flags: `--sampler greedy|top-k`,
+/// `--top-k K`, `--temperature T`, `--seed S`, `--stop "id,id,..."`.
+pub(crate) fn parse_sampling(args: &mut Args, max_new_tokens: usize) -> Result<SamplingParams> {
+    let seed = args.u64_or("seed", 0xD8B2)?;
+    // Consume the top-k knobs regardless of the chosen sampler so an
+    // unused flag reads as "ignored", not "unknown".
+    let k = args.usize_or("top-k", 40)?;
+    let temperature = args.f64_or("temperature", 0.8)?;
+    let sampler = match args.str_or("sampler", "greedy").as_str() {
+        "greedy" => Sampler::Greedy,
+        "top-k" | "topk" => Sampler::TopK { k, temperature },
+        other => anyhow::bail!("unknown sampler '{other}' (greedy|top-k)"),
+    };
+    let stop = match args.get("stop") {
+        None => Vec::new(),
+        Some(s) => s
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| {
+                t.trim().parse::<u32>().map_err(|_| {
+                    anyhow::anyhow!("--stop expects comma-separated token ids, got '{t}'")
+                })
+            })
+            .collect::<Result<Vec<u32>>>()?,
+    };
+    Ok(SamplingParams { sampler, seed, stop, max_new_tokens })
 }

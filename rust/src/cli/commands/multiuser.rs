@@ -5,10 +5,10 @@
 use anyhow::Result;
 
 use crate::cli::args::Args;
-use crate::cli::commands::parse_strategy;
+use crate::cli::commands::{parse_policy, parse_strategy};
 use crate::cluster::sim::{ClusterSim, SimParams};
 use crate::config::{ClusterConfig, EngineConfig};
-use crate::engine::scheduler::{serve_workload, SchedPolicy};
+use crate::engine::scheduler::serve_workload;
 use crate::trace::Workload;
 use crate::util::fmt::render_table;
 
@@ -19,11 +19,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     let rate = args.f64_or("rate", 0.1)?;
     let prompt = args.usize_or("prompt-tokens", 64)?;
     let gen = args.usize_or("gen-tokens", 128)?;
-    let policy = match args.str_or("policy", "round-robin").as_str() {
-        "round-robin" | "rr" => SchedPolicy::RoundRobin,
-        "fcfs" | "run-to-completion" => SchedPolicy::RunToCompletion,
-        other => anyhow::bail!("unknown policy '{other}'"),
-    };
+    let policy = parse_policy(args)?;
     let seed = args.u64_or("seed", 0xAB)?;
     args.finish()?;
     anyhow::ensure!(rate > 0.0, "--rate must be positive");

@@ -3,12 +3,14 @@
 //! out-of-process (the multi-machine deployment the paper actually
 //! built, versus the threaded emulation `generate`/`serve` run).
 //!
-//! Every node of the cluster must be started with the same request
-//! flags (`--requests/--prompt-tokens/--gen-tokens/--seed`): the
-//! request stream is derived deterministically from them, exactly like
-//! `LiveCluster::serve` broadcasting each request to all node threads.
-//! Node 0 prints the generated token streams (and writes them to
-//! `--out` when given); other nodes only serve wire traffic.
+//! Node 0 is the scheduler: it derives the request stream from its
+//! flags (`--requests/--prompt-tokens/--gen-tokens/--seed`), interleaves
+//! up to `--concurrency` requests per the iteration-level scheduler,
+//! and prints the generated token streams (plus `--out` for machine
+//! comparison). Followers need no request flags at all — admissions
+//! arrive over the control plane with the full request aboard (the
+//! flags are still accepted on followers, and ignored, so one shared
+//! command line works for every node).
 
 use std::io::Write;
 use std::path::Path;
@@ -16,7 +18,9 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::cli::args::Args;
-use crate::cli::commands::{artifacts_dir, parse_balancing, parse_topology};
+use crate::cli::commands::{
+    artifacts_dir, parse_balancing, parse_policy, parse_sampling, parse_topology,
+};
 use crate::cluster::live::{run_node, LiveConfig};
 use crate::config::ClusterHosts;
 use crate::engine::request::{Request, RequestResult};
@@ -36,11 +40,14 @@ pub fn run(args: &mut Args) -> Result<()> {
     let n_requests = args.usize_or("requests", 1)?;
     let prompt_tokens = args.usize_or("prompt-tokens", 16)?;
     let gen_tokens = args.usize_or("gen-tokens", 32)?;
-    let seed = args.u64_or("seed", 0xD8B2)?;
+    let concurrency = args.usize_or("concurrency", 2)?;
+    let policy = parse_policy(args)?;
+    let sampling = parse_sampling(args, gen_tokens)?;
     let host_path = args.flag("host-path");
     let out = args.get("out");
     let dir = artifacts_dir(args);
     args.finish()?;
+    anyhow::ensure!(concurrency >= 1, "--concurrency must be >= 1");
 
     let hosts = ClusterHosts::load(Path::new(&cluster_path))
         .with_context(|| format!("loading {cluster_path}"))?;
@@ -53,9 +60,10 @@ pub fn run(args: &mut Args) -> Result<()> {
     let mut cfg = LiveConfig::new(dir, hosts.n_nodes());
     cfg.topology = topology;
     cfg.balancing = balancing;
-    cfg.seed = seed;
     cfg.device_resident = !host_path;
     cfg.recv_timeout = hosts.recv_timeout;
+    cfg.max_active = concurrency;
+    cfg.policy = policy;
 
     eprintln!(
         "node {id}: listening on {}, joining {}-node cluster...",
@@ -68,8 +76,10 @@ pub fn run(args: &mut Args) -> Result<()> {
 
     let requests: Vec<Request> = (0..n_requests)
         .map(|i| {
-            let mut r = Request::synthetic(i as u64, prompt_tokens, 512);
-            r.max_new_tokens = gen_tokens;
+            let mut r = Request::synthetic(i as u64, prompt_tokens, 512, gen_tokens);
+            let mut s = sampling.clone();
+            s.seed ^= i as u64; // per-request sampler stream (matches `serve`)
+            r.sampling = s;
             r
         })
         .collect();
@@ -82,7 +92,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-/// Node 0's report: one `tokens[...]` line per request plus a decode
+/// Node 0's report: one `tokens[...]` line per request plus a serving
 /// summary; `--out` gets the bare token streams (one line per request)
 /// for machine comparison against the in-process fabric.
 fn report(results: &[RequestResult], out: Option<&str>) -> Result<()> {
@@ -93,8 +103,11 @@ fn report(results: &[RequestResult], out: Option<&str>) -> Result<()> {
         println!("tokens[{}]: {toks}", res.id);
         let d = &res.metrics.decode;
         println!(
-            "req {}: prefill {:.1} tok/s | decode {:.1} tok/s | wire {:.1} KiB/token",
+            "req {}: queue {:.2} s | ttft {:.2} s | latency {:.2} s | prefill {:.1} tok/s | decode {:.1} tok/s | wire {:.1} KiB/token",
             res.id,
+            res.metrics.queueing_s(),
+            res.metrics.ttft_s(),
+            res.metrics.latency_s(),
             res.metrics.prefill.tokens_per_sec(),
             d.tokens_per_sec(),
             d.wire_bytes_per_token() / 1024.0,

@@ -1,14 +1,21 @@
-//! `apple-moe serve` — LIVE batch driver: feed synthetic requests
-//! through the cluster and report per-request latency + aggregate
-//! throughput (the end-to-end serving demo recorded in EXPERIMENTS.md).
+//! `apple-moe serve` — LIVE serving driver on the streaming API: submit
+//! a batch of synthetic requests, interleave them with the
+//! iteration-level scheduler (`--concurrency`), stream tokens as they
+//! decode, and report per-request TTFT / queueing / latency plus the
+//! aggregate. `--json` emits the machine-readable per-request report CI
+//! tracks (the BENCH_serve.json perf trajectory); `--transport tcp`
+//! runs the node mesh over real loopback sockets.
 
 use anyhow::Result;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::cli::args::Args;
-use crate::cli::commands::artifacts_dir;
-use crate::cluster::live::{LiveCluster, LiveConfig};
-use crate::engine::request::Request;
+use crate::cli::commands::{
+    artifacts_dir, parse_balancing, parse_policy, parse_sampling, parse_topology,
+};
+use crate::cluster::live::{LiveCluster, LiveConfig, TransportKind};
+use crate::engine::api::TokenEvent;
+use crate::engine::request::{Request, RequestResult};
 use crate::util::fmt::render_table;
 use crate::util::stats::Summary;
 
@@ -17,48 +24,143 @@ pub fn run(args: &mut Args) -> Result<()> {
     let n_requests = args.usize_or("requests", 4)?;
     let prompt_tokens = args.usize_or("prompt-tokens", 16)?;
     let gen_tokens = args.usize_or("gen-tokens", 32)?;
+    let concurrency = args.usize_or("concurrency", 2)?;
+    let policy = parse_policy(args)?;
+    let transport = match args.str_or("transport", "inproc").as_str() {
+        "inproc" | "in-process" => TransportKind::InProcess,
+        "tcp" => TransportKind::TcpLoopback,
+        other => anyhow::bail!("unknown transport '{other}' (inproc|tcp)"),
+    };
+    let topology = parse_topology(args)?;
+    let balancing = parse_balancing(args)?;
     let recv_timeout = args.u64_or("recv-timeout-secs", 120)?;
     let host_path = args.flag("host-path");
+    let stream = args.flag("stream");
+    let json = args.flag("json");
+    let sampling = parse_sampling(args, gen_tokens)?;
     let dir = artifacts_dir(args);
     args.finish()?;
+    anyhow::ensure!(n_requests >= 1, "--requests must be >= 1");
+    anyhow::ensure!(concurrency >= 1, "--concurrency must be >= 1");
 
-    eprintln!("starting {nodes}-node live cluster...");
     let mut cfg = LiveConfig::new(dir, nodes);
+    cfg.topology = topology;
+    cfg.balancing = balancing;
     cfg.device_resident = !host_path;
-    cfg.recv_timeout = std::time::Duration::from_secs(recv_timeout.max(1));
+    cfg.recv_timeout = Duration::from_secs(recv_timeout.max(1));
+    cfg.max_active = concurrency;
+    cfg.policy = policy;
+    cfg.transport = transport;
+
+    eprintln!(
+        "starting {nodes}-node live cluster ({} transport, concurrency {concurrency})...",
+        match transport {
+            TransportKind::InProcess => "in-process",
+            TransportKind::TcpLoopback => "loopback-tcp",
+        }
+    );
     let cluster = LiveCluster::start(cfg)?;
 
-    let mut rows = vec![vec![
-        "req".to_string(),
-        "prefill tok/s".to_string(),
-        "decode tok/s".to_string(),
-        "latency (s)".to_string(),
-    ]];
-    let mut decode_tps = Vec::new();
+    // Submit everything up front: the scheduler admits `concurrency`
+    // requests at a time, so later submissions meter real queueing
+    // delay while earlier ones interleave their decode iterations.
     let t_all = Instant::now();
-    let mut total_tokens = 0usize;
+    let mut handles = Vec::with_capacity(n_requests);
     for i in 0..n_requests {
-        let mut req = Request::synthetic(i as u64, prompt_tokens, 512);
-        req.max_new_tokens = gen_tokens;
-        let t0 = Instant::now();
-        let res = cluster.serve(req)?;
-        let dt = t0.elapsed().as_secs_f64();
-        total_tokens += res.generated.len();
-        decode_tps.push(res.metrics.decode.tokens_per_sec());
-        rows.push(vec![
-            i.to_string(),
-            format!("{:.1}", res.metrics.prefill.tokens_per_sec()),
-            format!("{:.1}", res.metrics.decode.tokens_per_sec()),
-            format!("{dt:.2}"),
-        ]);
+        let mut req = Request::synthetic(i as u64, prompt_tokens, 512, gen_tokens);
+        let mut s = sampling.clone();
+        s.seed ^= i as u64; // per-request sampler stream
+        req.sampling = s;
+        handles.push(cluster.submit(req)?);
+    }
+
+    // Drain all event streams as tokens decode (this is the streaming
+    // proof: events arrive while other requests are still in flight).
+    // The inactivity bound backstops a wedged-but-alive cluster — a
+    // hung accelerator call that no wire timeout can see.
+    let idle_limit = Duration::from_secs(recv_timeout.max(1)).saturating_mul(2);
+    let mut last_progress = Instant::now();
+    let mut done: Vec<Option<RequestResult>> = (0..n_requests).map(|_| None).collect();
+    let mut remaining = n_requests;
+    while remaining > 0 {
+        let mut progressed = false;
+        for (i, h) in handles.iter().enumerate() {
+            if done[i].is_some() {
+                continue;
+            }
+            while let Some(ev) = h.try_event() {
+                progressed = true;
+                match ev {
+                    TokenEvent::Started { ttft_s, queued_s } => {
+                        if !json {
+                            eprintln!(
+                                "req {i}: first token at {ttft_s:.2} s (queued {queued_s:.2} s)"
+                            );
+                        }
+                    }
+                    TokenEvent::Token { id, .. } => {
+                        if stream && !json {
+                            println!("req {i} token {id}");
+                        }
+                    }
+                    TokenEvent::Done { result } => {
+                        done[i] = Some(result);
+                        remaining -= 1;
+                        break;
+                    }
+                    TokenEvent::Failed { error, .. } => {
+                        anyhow::bail!("request {i} failed: {error}")
+                    }
+                }
+            }
+        }
+        if progressed {
+            last_progress = Instant::now();
+        } else {
+            anyhow::ensure!(
+                last_progress.elapsed() < idle_limit,
+                "no serving progress for {idle_limit:?} — cluster wedged?"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
     }
     let wall = t_all.elapsed().as_secs_f64();
     cluster.shutdown();
 
+    let results: Vec<RequestResult> =
+        done.into_iter().map(|r| r.expect("all requests completed")).collect();
+    if json {
+        println!("{}", json_report(&results, wall, nodes, concurrency));
+        return Ok(());
+    }
+
+    let mut rows = vec![vec![
+        "req".to_string(),
+        "queue (s)".to_string(),
+        "ttft (s)".to_string(),
+        "latency (s)".to_string(),
+        "prefill tok/s".to_string(),
+        "decode tok/s".to_string(),
+    ]];
+    let mut decode_tps = Vec::new();
+    let mut total_tokens = 0usize;
+    for r in &results {
+        total_tokens += r.generated.len();
+        decode_tps.push(r.metrics.decode.tokens_per_sec());
+        rows.push(vec![
+            r.id.to_string(),
+            format!("{:.2}", r.metrics.queueing_s()),
+            format!("{:.2}", r.metrics.ttft_s()),
+            format!("{:.2}", r.metrics.latency_s()),
+            format!("{:.1}", r.metrics.prefill.tokens_per_sec()),
+            format!("{:.1}", r.metrics.decode.tokens_per_sec()),
+        ]);
+    }
     print!("{}", render_table(&rows));
     if let Some(s) = Summary::of(&decode_tps) {
         println!(
-            "\n{n_requests} requests, {total_tokens} generated tokens in {wall:.2} s ({:.1} tok/s aggregate)",
+            "\n{n_requests} requests, {total_tokens} generated tokens in {wall:.2} s \
+             ({:.1} tok/s aggregate, concurrency {concurrency}, {policy:?})",
             total_tokens as f64 / wall
         );
         println!(
@@ -67,4 +169,78 @@ pub fn run(args: &mut Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Hand-rolled JSON (the offline crate cache has no serde): one record
+/// per request plus the aggregates, parsed by CI's multiproc-smoke job.
+fn json_report(
+    results: &[RequestResult],
+    wall_s: f64,
+    nodes: usize,
+    concurrency: usize,
+) -> String {
+    let total: usize = results.iter().map(|r| r.generated.len()).sum();
+    let mut s = String::from("{\"requests\":[");
+    for (i, r) in results.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let d = &r.metrics.decode;
+        s.push_str(&format!(
+            "{{\"id\":{},\"ttft_s\":{:.6},\"queueing_s\":{:.6},\"latency_s\":{:.6},\
+             \"decode_tps\":{:.3},\"generated\":{},\"net_bytes\":{}}}",
+            r.id,
+            r.metrics.ttft_s(),
+            r.metrics.queueing_s(),
+            r.metrics.latency_s(),
+            d.tokens_per_sec(),
+            r.generated.len(),
+            d.net_bytes + r.metrics.prefill.net_bytes,
+        ));
+    }
+    s.push_str(&format!(
+        "],\"nodes\":{nodes},\"concurrency\":{concurrency},\"wall_s\":{wall_s:.6},\
+         \"aggregate_tps\":{:.3}}}",
+        if wall_s > 0.0 { total as f64 / wall_s } else { 0.0 },
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::request::FinishReason;
+    use crate::metrics::RunMetrics;
+
+    #[test]
+    fn json_report_shape() {
+        let m = RunMetrics {
+            queueing_ns: 5_000_000,
+            ttft_ns: 100_000_000,
+            latency_ns: 900_000_000,
+            ..Default::default()
+        };
+        let r = RequestResult {
+            id: 0,
+            generated: vec![1, 2, 3],
+            finish: FinishReason::Length,
+            metrics: m,
+        };
+        let j = json_report(&[r], 1.5, 2, 2);
+        assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
+        for key in [
+            "\"requests\":[",
+            "\"ttft_s\":0.100000",
+            "\"queueing_s\":0.005000",
+            "\"latency_s\":0.900000",
+            "\"decode_tps\":",
+            "\"net_bytes\":",
+            "\"generated\":3",
+            "\"nodes\":2",
+            "\"concurrency\":2",
+            "\"aggregate_tps\":2.000",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+    }
 }

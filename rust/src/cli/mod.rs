@@ -51,6 +51,43 @@
 //! streaming bandwidth for both backends at the paper's 24.5 kB payload
 //! and prints the configured `NetworkProfile`'s prediction next to the
 //! measurement, so profiles can be validated against the real network.
+//!
+//! # Streaming serving API
+//!
+//! Every serving path — `DenseEngine`, `LiveCluster`, the simulator's
+//! `SimEngine` — implements one trait, `engine::api::Engine`:
+//! `submit(Request)` returns a `RequestHandle` immediately, and the
+//! handle streams `TokenEvent`s as the request decodes:
+//!
+//! ```text
+//! Started { ttft_s, queued_s }   first token out (TTFT measured)
+//! Token   { id, logprob }        one generated token, in order
+//! Done    { result }             terminal: tokens + metrics + finish
+//! Failed  { id, error }          terminal: the request died
+//! ```
+//!
+//! `handle.join()` blocks to the terminal event (the old blocking
+//! `serve` is exactly `submit(req)?.join()`); `handle.cancel()` is
+//! cooperative — the scheduler frees the request's decode state at its
+//! next iteration and the stream ends with `Done` (finish reason
+//! `Cancelled`, partial tokens), while other in-flight requests keep
+//! decoding.
+//!
+//! **Per-request sampling.** `Request.sampling` carries the sampler
+//! kind, RNG seed, stop-token set and `max_new_tokens`; on the CLI the
+//! serving commands take `--sampler greedy|top-k --top-k K
+//! --temperature T --seed S --stop "id,id,..."`. On the decentralized
+//! topology the seed rides the admission broadcast so every node
+//! replays the identical sampler stream.
+//!
+//! **Multi-user scheduling.** `serve` (and `node`/`launch`) take
+//! `--concurrency N --policy round-robin|fcfs`: node 0 runs the
+//! Orca-style iteration-level scheduler — each in-flight request owns
+//! its own device-resident decode state, and every iteration advances
+//! one request by one token. Per-request queueing delay, TTFT and
+//! latency are metered on real hardware and reported (machine-readable
+//! with `serve --json`); `serve --transport tcp` runs the same thing
+//! over real loopback sockets.
 
 pub mod args;
 pub mod commands;
@@ -101,16 +138,25 @@ SUBCOMMANDS
                    --requests N --rate REQ_PER_S --policy round-robin|fcfs
   cluster-info   model arithmetic + expert placement for a cluster
                    --nodes N  --model dbrx-132b|dbrx-nano
-  generate       LIVE run: nano model over a threaded cluster via PJRT
+  generate       LIVE run: nano model over a threaded cluster via PJRT,
+                 streaming tokens as they decode
                    --nodes N --prompt-tokens N --gen-tokens N
                    --topology decentralized|centralized  --artifacts DIR
-  serve          LIVE batch driver: synthetic requests, latency/throughput
-                   --requests N --nodes N --artifacts DIR
+                   --sampler greedy|top-k --top-k K --temperature T
+                   --seed S --stop \"id,id,...\"
+  serve          LIVE multi-user serving: iteration-level scheduler,
+                 per-request TTFT/queueing/latency (+sampling flags)
+                   --requests N --concurrency N --policy round-robin|fcfs
+                   --nodes N --transport inproc|tcp --json --stream
+                   --artifacts DIR
   node           LIVE multi-process: run ONE node over the real TCP fabric
+                 (node 0 schedules; followers need no request flags)
                    --id N --cluster hosts.toml --requests N --gen-tokens N
+                   --concurrency N --policy round-robin|fcfs
                    --topology decentralized|centralized --artifacts DIR
   launch         LIVE multi-process: spawn N loopback node processes
-                   --nodes N --requests N --gen-tokens N [--cluster hosts.toml]
+                   --nodes N --requests N --gen-tokens N --concurrency N
+                   [--cluster hosts.toml]
   net-bench      transport microbenchmark: RTT percentiles + bandwidth
                    --backend inproc|tcp|both --payload BYTES --iters N
   help           this text

@@ -1,6 +1,9 @@
 //! Live threaded cluster: one OS thread per simulated Mac Studio node,
 //! each with its own PJRT runtime and the expert shard of Figs. 2–3,
-//! exchanging expert partials over the `network::transport` fabric.
+//! exchanging expert partials over the `network::transport` fabric —
+//! now behind the streaming `Engine` API with an iteration-level
+//! multi-user scheduler (the paper's stated future work) running on
+//! real hardware.
 //!
 //! Two topologies, as in the paper:
 //!
@@ -13,32 +16,66 @@
 //!   scatters `moe_in` + slot assignments to workers, which run experts
 //!   and send partials back — 2 communications per layer.
 //!
+//! # Scheduling
+//!
+//! Node 0 is the scheduler (Orca-style iteration-level round-robin,
+//! ported from the virtual-time `engine::scheduler` onto real
+//! hardware): every in-flight request owns its own decode state (a
+//! [`DeviceState`] on the device-resident path, per-layer K/V host
+//! tensors on the reference path), and each scheduler iteration
+//! advances ONE request by ONE token. Admission is capped at
+//! `LiveConfig::max_active`; requests beyond the cap queue, and their
+//! queueing delay / TTFT / end-to-end latency are metered into
+//! [`RunMetrics`].
+//!
+//! The schedule must be identical on every node of the decentralized
+//! topology (they all hold per-request KV caches and replicated
+//! samplers), so node 0 broadcasts each scheduling decision on a
+//! control plane (`PHASE_CTRL`, ops admit/step/cancel/shutdown) that
+//! followers replay in order; the admission message carries the full
+//! encoded request, so only node 0 ever needs to know the workload.
+//! Centralized workers are stateless per iteration — each scatter
+//! carries its layer id and a global sequence number, so they need no
+//! control plane at all (an empty scatter is the shutdown marker).
+//! Data-plane messages are tagged per request
+//! ([`transport::req_tag`]): partials of different in-flight requests
+//! demultiplex by admission sequence number.
+//!
 //! All coordination logic (layout, planning, LRU) is the same
-//! `moe::Planner` the virtual-time DES uses.
+//! `moe::Planner` the virtual-time DES uses. Interleaving cannot change
+//! any request's tokens: selected-expert assignment is a pure function
+//! of the router draw, and the planner's history-dependent padding runs
+//! carry weight 0 (exact zeros in the partial sums).
 //!
 //! The wire protocols are written against `network::transport::Endpoint`
 //! and are therefore transport-generic: `LiveCluster` runs every node as
-//! a thread on the in-process mpsc backend, while [`run_node`] runs ONE
-//! node's serve loop in the calling process over any endpoint (the
-//! `apple-moe node` daemon hands it a `network::tcp` endpoint, making
-//! the cluster span OS processes and machines).
+//! a thread (on the in-process mpsc backend or, with
+//! [`TransportKind::TcpLoopback`], on real loopback sockets), while
+//! [`run_node`] runs ONE node's serve loop in the calling process over
+//! any endpoint (the `apple-moe node` daemon hands it a `network::tcp`
+//! endpoint, making the cluster span OS processes and machines).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::config::{Balancing, ClusterConfig, NetworkProfile, Strategy, Topology};
-use crate::engine::request::{Request, RequestResult};
-use crate::engine::sampling::Sampler;
+use crate::engine::api::{Engine, RequestHandle, TokenEvent};
+use crate::engine::request::{FinishReason, Request, RequestResult};
+use crate::engine::scheduler::SchedPolicy;
 use crate::metrics::{RunMetrics, TokenBreakdown};
 use crate::model::layout::ExpertLayout;
 use crate::moe::balance::Planner;
 use crate::moe::router::RouterDraw;
-use crate::network::transport::{self, bytes_to_f32s, f32s_to_bytes, tag, Endpoint};
+use crate::network::transport::{
+    self, bytes_to_f32s, f32s_to_bytes, req_tag, tag, Endpoint, Envelope, NetError,
+};
 use crate::runtime::nano::resident_index;
 use crate::runtime::{DeviceState, HostTensor, NanoRuntime};
 use crate::util::rng::Rng;
@@ -49,6 +86,29 @@ pub const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(120);
 const PHASE_PARTIAL: u8 = 1;
 const PHASE_SCATTER: u8 = 2;
 const PHASE_GATHER: u8 = 3;
+const PHASE_CTRL: u8 = 4;
+
+/// Control-plane opcodes (first payload byte of a `PHASE_CTRL` message).
+const OP_SHUTDOWN: u8 = 0;
+const OP_ADMIT: u8 = 1;
+const OP_STEP: u8 = 2;
+const OP_CANCEL: u8 = 3;
+
+/// Poll interval while a node idles between requests (waiting for the
+/// next control message or scatter). Idleness is unbounded by design —
+/// an always-on node — so this only paces shutdown checks.
+const IDLE_POLL: Duration = Duration::from_millis(200);
+
+/// Which fabric backend `LiveCluster` meshes its node threads with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// mpsc channels between the node threads (the default emulation;
+    /// supports injected `NetworkProfile` latency).
+    InProcess,
+    /// Real loopback TCP sockets between the node threads
+    /// (`network::tcp`): the socket wire format without process spawning.
+    TcpLoopback,
+}
 
 /// Live-cluster configuration.
 #[derive(Debug, Clone)]
@@ -57,10 +117,9 @@ pub struct LiveConfig {
     pub n_nodes: usize,
     pub topology: Topology,
     pub balancing: Balancing,
-    /// Inject this profile's latency into deliveries (None = localhost).
+    /// Inject this profile's latency into deliveries (None = localhost;
+    /// in-process transport only).
     pub network: Option<NetworkProfile>,
-    pub sampler: Sampler,
-    pub seed: u64,
     /// Serve on the device-resident decode path (`DeviceState`): K/V
     /// caches and activations stay as PJRT buffers across the whole
     /// loop — zero per-layer cache round trips (§Perf). Falls back to
@@ -70,6 +129,14 @@ pub struct LiveConfig {
     /// Bound on any single wire wait (all-reduce/scatter/gather); a
     /// breach is reported with the ids of the peers that went silent.
     pub recv_timeout: Duration,
+    /// Iteration-level scheduler: how many requests may hold decode
+    /// state and interleave at once; submissions beyond this queue and
+    /// meter real queueing delay.
+    pub max_active: usize,
+    /// Which in-flight request decodes next each iteration.
+    pub policy: SchedPolicy,
+    /// Fabric backend for the node threads.
+    pub transport: TransportKind,
 }
 
 impl LiveConfig {
@@ -80,10 +147,11 @@ impl LiveConfig {
             topology: Topology::Decentralized,
             balancing: Balancing::RouterAided,
             network: None,
-            sampler: Sampler::Greedy,
-            seed: 0xD8B2,
             device_resident: true,
             recv_timeout: DEFAULT_RECV_TIMEOUT,
+            max_active: 2,
+            policy: SchedPolicy::RoundRobin,
+            transport: TransportKind::InProcess,
         }
     }
 
@@ -100,17 +168,26 @@ impl LiveConfig {
     }
 }
 
+/// A submitted-but-not-yet-admitted request (leader side).
+struct Pending {
+    req: Request,
+    submitted: Instant,
+    events: Sender<TokenEvent>,
+    cancel: Arc<AtomicBool>,
+}
+
 enum Cmd {
-    Serve(Request),
+    Submit(Box<Pending>),
     Shutdown,
 }
 
-/// Handle to a running cluster.
+/// Handle to a running cluster. Implements [`Engine`]: submit requests,
+/// stream their tokens, cancel mid-decode. Dropping the handle shuts
+/// the cluster down (in-flight requests fail, node threads join) — so
+/// early `?` returns in callers no longer leak node or reader threads.
 pub struct LiveCluster {
     cmd_txs: Vec<Sender<Cmd>>,
-    result_rx: Receiver<Result<RequestResult>>,
     handles: Vec<JoinHandle<()>>,
-    recv_timeout: Duration,
     pub layout: ExpertLayout,
 }
 
@@ -119,8 +196,16 @@ impl LiveCluster {
     /// every node reports ready.
     pub fn start(cfg: LiveConfig) -> Result<LiveCluster> {
         let layout = cfg.layout();
-        let endpoints = transport::fabric(cfg.n_nodes, cfg.network.clone());
-        let (result_tx, result_rx) = channel();
+        let endpoints = match cfg.transport {
+            TransportKind::InProcess => transport::fabric(cfg.n_nodes, cfg.network.clone()),
+            TransportKind::TcpLoopback => {
+                anyhow::ensure!(
+                    cfg.network.is_none(),
+                    "network profiles are injected by the in-process fabric only"
+                );
+                crate::network::tcp::loopback_fabric(cfg.n_nodes)?
+            }
+        };
         let (ready_tx, ready_rx) = channel();
         let mut cmd_txs = Vec::new();
         let mut handles = Vec::new();
@@ -129,10 +214,9 @@ impl LiveCluster {
             cmd_txs.push(tx);
             let cfg = cfg.clone();
             let layout = layout.clone();
-            let result_tx = result_tx.clone();
             let ready_tx = ready_tx.clone();
             handles.push(std::thread::spawn(move || {
-                let r = NodeWorker::run(node, cfg, layout, ep, rx, result_tx, ready_tx);
+                let r = NodeWorker::run(node, cfg, layout, ep, rx, ready_tx);
                 if let Err(e) = r {
                     log::error!("node {node} failed: {e:#}");
                 }
@@ -144,33 +228,29 @@ impl LiveCluster {
                 .context("node startup timed out")?
                 .map_err(|e: String| anyhow::anyhow!(e))?;
         }
-        Ok(LiveCluster {
-            cmd_txs,
-            result_rx,
-            handles,
-            recv_timeout: cfg.recv_timeout,
-            layout,
-        })
+        Ok(LiveCluster { cmd_txs, handles, layout })
     }
 
-    /// Serve one request through the cluster (blocking).
-    pub fn serve(&self, req: Request) -> Result<RequestResult> {
-        // `recv_timeout` bounds a single wire wait; the whole request is
-        // many of them (node 0 errors out on any stalled wait and sends
-        // that error here, and a dead node 0 disconnects the channel
-        // immediately) — so the end-to-end bound only backstops a
-        // wedged-but-alive node and must scale with the request.
-        let tokens = (req.prompt.len() + req.max_new_tokens).max(1) as u32;
-        let result_timeout = self.recv_timeout.saturating_mul(tokens);
-        for tx in &self.cmd_txs {
-            tx.send(Cmd::Serve(req.clone())).map_err(|_| anyhow::anyhow!("node down"))?;
-        }
-        self.result_rx
-            .recv_timeout(result_timeout)
-            .context("cluster result timeout")?
+    /// Submit a request to the scheduler on node 0. Returns immediately;
+    /// tokens stream on the handle as they decode.
+    pub fn submit(&self, req: Request) -> Result<RequestHandle> {
+        anyhow::ensure!(!req.prompt.is_empty(), "request {} has an empty prompt", req.id);
+        let (handle, events, cancel) = RequestHandle::channel(req.id);
+        let p = Pending { req, submitted: Instant::now(), events, cancel };
+        self.cmd_txs[0]
+            .send(Cmd::Submit(Box::new(p)))
+            .map_err(|_| anyhow::anyhow!("cluster is down (node 0 exited)"))?;
+        Ok(handle)
     }
 
+    /// Stop the cluster: in-flight requests receive a terminal `Failed`
+    /// event, followers are told to exit over the fabric, and every node
+    /// thread is joined. (Also what `Drop` does.)
     pub fn shutdown(mut self) {
+        self.teardown();
+    }
+
+    fn teardown(&mut self) {
         for tx in &self.cmd_txs {
             let _ = tx.send(Cmd::Shutdown);
         }
@@ -180,17 +260,16 @@ impl LiveCluster {
     }
 }
 
-struct NodeWorker {
-    node: usize,
-    cfg: LiveConfig,
-    rt: NanoRuntime,
-    experts: crate::runtime::NodeExperts,
-    planner: Planner,
-    /// Global→local expert maps per node (the centralized leader maps
-    /// remote peers' slot assignments without linear scans).
-    peer_index: Vec<HashMap<usize, usize>>,
-    ep: Endpoint,
-    rng: Rng,
+impl Engine for LiveCluster {
+    fn submit(&mut self, req: Request) -> Result<RequestHandle> {
+        LiveCluster::submit(self, req)
+    }
+}
+
+impl Drop for LiveCluster {
+    fn drop(&mut self) {
+        self.teardown();
+    }
 }
 
 /// Run ONE node's serve loop in the calling process, over any endpoint.
@@ -198,10 +277,11 @@ struct NodeWorker {
 /// This is the out-of-process twin of `LiveCluster`: the `apple-moe
 /// node` daemon builds a `network::tcp` endpoint and calls this, so the
 /// same wire protocols (and the same planner/runtime stack) span OS
-/// processes and machines. Every node of the cluster must be handed the
-/// same `requests` in the same order — exactly what `LiveCluster::serve`
-/// does by broadcasting each request to all node threads. Only node 0's
-/// results carry tokens and metrics.
+/// processes and machines. Node 0 schedules `requests` (interleaving up
+/// to `cfg.max_active` of them) and returns their results in
+/// submission order; followers ignore `requests` entirely — admissions
+/// arrive over the control plane with the full request aboard — and
+/// return an empty vec once node 0 shuts the cluster down.
 pub fn run_node(
     cfg: &LiveConfig,
     ep: Endpoint,
@@ -216,19 +296,142 @@ pub fn run_node(
     let node = ep.node();
     let layout = cfg.layout();
     let mut w = NodeWorker::new(node, cfg.clone(), layout, ep)?;
-    requests.iter().map(|req| w.serve(req)).collect()
+    if node != 0 {
+        w.follow(None)?;
+        return Ok(Vec::new());
+    }
+    // Node 0: drive the scheduler over a local queue. Everything runs on
+    // this thread, so the event streams buffer in their (unbounded)
+    // channels and are drained into results afterwards.
+    let (tx, rx) = channel();
+    let mut event_rxs = Vec::with_capacity(requests.len());
+    for req in requests {
+        anyhow::ensure!(!req.prompt.is_empty(), "request {} has an empty prompt", req.id);
+        let (handle, events, cancel) = RequestHandle::channel(req.id);
+        event_rxs.push((req.id, handle));
+        tx.send(Cmd::Submit(Box::new(Pending {
+            req: req.clone(),
+            submitted: Instant::now(),
+            events,
+            cancel,
+        })))
+        .expect("local queue open");
+    }
+    drop(tx); // the leader exits (and tells followers to) once the queue drains
+    w.lead(&rx)?;
+    let mut out = Vec::with_capacity(event_rxs.len());
+    for (id, handle) in event_rxs {
+        let mut result = None;
+        while let Some(ev) = handle.try_event() {
+            match ev {
+                TokenEvent::Done { result: r } => result = Some(r),
+                TokenEvent::Failed { error, .. } => {
+                    anyhow::bail!("request {id} failed: {error}")
+                }
+                _ => {}
+            }
+        }
+        out.push(result.ok_or_else(|| anyhow::anyhow!("request {id} never completed"))?);
+    }
+    Ok(out)
+}
+
+/// Per-request decode state: a device-resident `DeviceState` or the
+/// host-tensor reference caches. One per in-flight request; dropped
+/// (freeing the buffers) the moment the request finishes or cancels.
+enum DecodeState {
+    Dev(DeviceState),
+    Host { kc: Vec<HostTensor>, vc: Vec<HostTensor> },
+}
+
+/// One in-flight request on a node.
+struct ActiveRequest {
+    req: Request,
+    /// Admission sequence number: demultiplexes this request's
+    /// data-plane traffic (`req_tag`) and names it on the control plane.
+    seq: u16,
+    state: DecodeState,
+    /// The request's private sampler stream (identical on every
+    /// replicated-sampling node: seeded from `req.sampling.seed`).
+    rng: Rng,
+    pos: usize,
+    step: u32,
+    last_logits: Vec<f32>,
+    generated: Vec<u32>,
+    metrics: RunMetrics,
+    finish: Option<FinishReason>,
+    // Leader-side serving-surface state (None on followers).
+    submitted: Option<Instant>,
+    first_token: Option<Instant>,
+    events: Option<Sender<TokenEvent>>,
+    cancel: Option<Arc<AtomicBool>>,
+}
+
+fn emit_done(a: ActiveRequest, finish: FinishReason) {
+    let ActiveRequest { req, generated, mut metrics, events, submitted, .. } = a;
+    if let Some(s) = submitted {
+        metrics.latency_ns = s.elapsed().as_nanos() as u64;
+    }
+    let result = RequestResult { id: req.id, generated, finish, metrics };
+    if let Some(ev) = events {
+        let _ = ev.send(TokenEvent::Done { result });
+    }
+}
+
+fn emit_failed(a: &ActiveRequest, error: &str) {
+    if let Some(ev) = &a.events {
+        let _ = ev.send(TokenEvent::Failed { id: a.req.id, error: error.to_string() });
+    }
+}
+
+fn fail_pending(p: &Pending, error: &str) {
+    let _ = p
+        .events
+        .send(TokenEvent::Failed { id: p.req.id, error: error.to_string() });
+}
+
+struct NodeWorker {
+    node: usize,
+    cfg: LiveConfig,
+    rt: NanoRuntime,
+    experts: crate::runtime::NodeExperts,
+    planner: Planner,
+    /// Global→local expert maps per node (the centralized leader maps
+    /// remote peers' slot assignments without linear scans).
+    peer_index: Vec<HashMap<usize, usize>>,
+    ep: Endpoint,
+    /// Control-plane sequence number (leader increments per broadcast,
+    /// followers per replayed message).
+    ctrl_seq: u32,
+    /// Centralized topology: global scatter/gather sequence number (one
+    /// per (request, layer) iteration, shared leader/workers).
+    wseq: u32,
 }
 
 impl NodeWorker {
     /// Load this node's runtime + expert shard and attach the endpoint.
     fn new(node: usize, cfg: LiveConfig, layout: ExpertLayout, ep: Endpoint) -> Result<NodeWorker> {
         let rt = NanoRuntime::load(&cfg.artifacts, false)?;
+        if cfg.device_resident && !rt.has_device_path() {
+            log::warn!(
+                "node {node}: artifacts lack the dev_* set — serving on the \
+                 host-tensor reference path (re-run `make artifacts`)"
+            );
+        }
         let experts = rt.build_node_experts(&layout.resident[node])?;
         let peer_index = layout.resident.iter().map(|r| resident_index(r)).collect();
         let planner = Planner::new(cfg.balancing, layout);
-        let rng = Rng::new(cfg.seed); // identical on every node:
-                                      // deterministic replicated sampling
-        Ok(NodeWorker { node, cfg, rt, experts, planner, peer_index, ep, rng })
+        Ok(NodeWorker {
+            node,
+            cfg,
+            rt,
+            experts,
+            planner,
+            peer_index,
+            ep,
+            ctrl_seq: 0,
+            wseq: 0,
+        })
     }
 
     fn run(
@@ -237,7 +440,6 @@ impl NodeWorker {
         layout: ExpertLayout,
         ep: Endpoint,
         rx: Receiver<Cmd>,
-        result_tx: Sender<Result<RequestResult>>,
         ready_tx: Sender<std::result::Result<(), String>>,
     ) -> Result<()> {
         let mut w = match NodeWorker::new(node, cfg, layout, ep) {
@@ -250,13 +452,245 @@ impl NodeWorker {
                 return Err(e);
             }
         };
-        while let Ok(cmd) = rx.recv() {
-            match cmd {
-                Cmd::Shutdown => break,
-                Cmd::Serve(req) => {
-                    let res = w.serve(&req);
-                    if w.node == 0 {
-                        let _ = result_tx.send(res);
+        if node == 0 {
+            w.lead(&rx)
+        } else {
+            w.follow(Some(&rx))
+        }
+    }
+
+    fn use_device(&self) -> bool {
+        self.cfg.device_resident && self.rt.has_device_path()
+    }
+
+    /// Allocate decode state and book-keeping for a newly admitted
+    /// request.
+    fn admit(
+        &self,
+        req: Request,
+        seq: u16,
+        submitted: Option<Instant>,
+        events: Option<Sender<TokenEvent>>,
+        cancel: Option<Arc<AtomicBool>>,
+    ) -> Result<ActiveRequest> {
+        let state = if self.use_device() {
+            DecodeState::Dev(DeviceState::new(&self.rt)?)
+        } else {
+            let kc: Vec<HostTensor> = (0..self.rt.manifest.n_layers)
+                .map(|_| self.rt.empty_layer_cache())
+                .collect();
+            let vc = kc.clone();
+            DecodeState::Host { kc, vc }
+        };
+        let rng = Rng::new(req.sampling.seed);
+        Ok(ActiveRequest {
+            req,
+            seq,
+            state,
+            rng,
+            pos: 0,
+            step: 0,
+            last_logits: Vec::new(),
+            generated: Vec::new(),
+            metrics: RunMetrics::default(),
+            finish: None,
+            submitted,
+            first_token: None,
+            events,
+            cancel,
+        })
+    }
+
+    // ---------------- leader: the iteration-level scheduler ----------
+
+    /// Node 0's serve loop: pump submissions, admit up to `max_active`,
+    /// interleave one token per active request per iteration under the
+    /// configured policy, stream events, and replicate every decision to
+    /// the followers. Exits when told to shut down, or when the command
+    /// channel closes and all work has drained. On error — a wire or
+    /// runtime failure dooms the whole schedule, since peers are
+    /// mid-protocol — everything in flight gets a terminal `Failed`
+    /// event and the followers are told to exit before bubbling up.
+    fn lead(&mut self, rx: &Receiver<Cmd>) -> Result<()> {
+        let mut pending: VecDeque<Pending> = VecDeque::new();
+        let mut active: Vec<ActiveRequest> = Vec::new();
+        let r = self.lead_loop(rx, &mut pending, &mut active);
+        if let Err(e) = &r {
+            let msg = format!("{e:#}");
+            for a in active.drain(..) {
+                emit_failed(&a, &msg);
+            }
+            for p in pending.drain(..) {
+                fail_pending(&p, &msg);
+            }
+            let _ = self.broadcast_shutdown();
+        }
+        r
+    }
+
+    fn lead_loop(
+        &mut self,
+        rx: &Receiver<Cmd>,
+        pending: &mut VecDeque<Pending>,
+        active: &mut Vec<ActiveRequest>,
+    ) -> Result<()> {
+        let mut next_seq: u16 = 0;
+        let mut rr: usize = 0;
+        let mut open = true;
+
+        loop {
+            // 1. Pump commands: block when idle, drain without blocking
+            //    while requests are in flight.
+            loop {
+                let cmd = if open && active.is_empty() && pending.is_empty() {
+                    match rx.recv() {
+                        Ok(c) => Some(c),
+                        Err(_) => {
+                            open = false;
+                            None
+                        }
+                    }
+                } else if open {
+                    match rx.try_recv() {
+                        Ok(c) => Some(c),
+                        Err(TryRecvError::Empty) => None,
+                        Err(TryRecvError::Disconnected) => {
+                            open = false;
+                            None
+                        }
+                    }
+                } else {
+                    None
+                };
+                match cmd {
+                    Some(Cmd::Submit(p)) => pending.push_back(*p),
+                    Some(Cmd::Shutdown) => {
+                        for p in pending.drain(..) {
+                            fail_pending(&p, "cluster shut down");
+                        }
+                        for a in active.drain(..) {
+                            emit_failed(&a, "cluster shut down");
+                        }
+                        // Best effort: a follower that already honoured
+                        // its own shutdown command has dropped its
+                        // endpoint, and that must not fail a clean exit.
+                        let _ = self.broadcast_shutdown();
+                        return Ok(());
+                    }
+                    None => break,
+                }
+            }
+            if !open && active.is_empty() && pending.is_empty() {
+                // All submitters are gone and the work has drained: a
+                // clean end of service (the `run_node` path). Followers
+                // must learn about it, so this send IS load-bearing.
+                self.broadcast_shutdown()?;
+                return Ok(());
+            }
+
+            // 2. Cancellation sweep — pending first (never admitted),
+            //    then active (frees their decode state; followers drop
+            //    theirs via OP_CANCEL).
+            let mut i = 0;
+            while i < pending.len() {
+                if pending[i].cancel.load(Ordering::Relaxed) {
+                    let p = pending.remove(i).expect("index in bounds");
+                    let waited = p.submitted.elapsed().as_nanos() as u64;
+                    let metrics = RunMetrics {
+                        queueing_ns: waited,
+                        latency_ns: waited,
+                        ..Default::default()
+                    };
+                    let _ = p.events.send(TokenEvent::Done {
+                        result: RequestResult {
+                            id: p.req.id,
+                            generated: Vec::new(),
+                            finish: FinishReason::Cancelled,
+                            metrics,
+                        },
+                    });
+                } else {
+                    i += 1;
+                }
+            }
+            let mut i = 0;
+            while i < active.len() {
+                let cancelled =
+                    active[i].cancel.as_ref().is_some_and(|c| c.load(Ordering::Relaxed));
+                if cancelled {
+                    let a = active.remove(i);
+                    if self.cfg.topology == Topology::Decentralized {
+                        self.ctrl(OP_CANCEL, &a.seq.to_le_bytes())?;
+                    }
+                    emit_done(a, FinishReason::Cancelled);
+                } else {
+                    i += 1;
+                }
+            }
+
+            // 3. Admission up to the concurrency cap.
+            while active.len() < self.cfg.max_active.max(1) {
+                let Some(p) = pending.pop_front() else { break };
+                let seq = next_seq;
+                next_seq = next_seq.wrapping_add(1);
+                if self.cfg.topology == Topology::Decentralized {
+                    let mut body = p.req.encode();
+                    let mut framed = seq.to_le_bytes().to_vec();
+                    framed.append(&mut body);
+                    self.ctrl(OP_ADMIT, &framed)?;
+                }
+                let Pending { req, submitted, events, cancel } = p;
+                let mut a =
+                    self.admit(req, seq, Some(submitted), Some(events), Some(cancel))?;
+                a.metrics.queueing_ns = submitted.elapsed().as_nanos() as u64;
+                active.push(a);
+            }
+            if active.is_empty() {
+                continue;
+            }
+
+            // 4. One iteration: pick a request, advance it one token.
+            let i = match self.cfg.policy {
+                SchedPolicy::RoundRobin => rr % active.len(),
+                SchedPolicy::RunToCompletion => 0,
+            };
+            rr = rr.wrapping_add(1);
+            self.lead_one(&mut active[i])?;
+            if active[i].finish.is_some() {
+                let a = active.remove(i);
+                let finish = a.finish.expect("checked above");
+                emit_done(a, finish);
+            }
+        }
+    }
+
+    /// Replicate the step decision (decentralized) and run it locally,
+    /// streaming the sampled token to the request's handle.
+    fn lead_one(&mut self, a: &mut ActiveRequest) -> Result<()> {
+        if self.cfg.topology == Topology::Decentralized {
+            self.ctrl(OP_STEP, &a.seq.to_le_bytes())?;
+        }
+        let decoded = self.step(a)?;
+        if let Some((tok, lp)) = decoded {
+            if a.first_token.is_none() {
+                a.first_token = Some(Instant::now());
+                if let Some(s) = a.submitted {
+                    a.metrics.ttft_ns = s.elapsed().as_nanos() as u64;
+                }
+                if let Some(ev) = &a.events {
+                    let _ = ev.send(TokenEvent::Started {
+                        ttft_s: a.metrics.ttft_ns as f64 / 1e9,
+                        queued_s: a.metrics.queueing_ns as f64 / 1e9,
+                    });
+                }
+            }
+            if let Some(ev) = &a.events {
+                if ev.send(TokenEvent::Token { id: tok, logprob: Some(lp) }).is_err() {
+                    // The handle was dropped without cancel(): nobody can
+                    // observe this stream. Self-cancel so the next sweep
+                    // frees the decode state (and tells followers).
+                    if let Some(c) = &a.cancel {
+                        c.store(true, Ordering::Relaxed);
                     }
                 }
             }
@@ -264,131 +698,269 @@ impl NodeWorker {
         Ok(())
     }
 
-    fn serve(&mut self, req: &Request) -> Result<RequestResult> {
-        let device = self.cfg.device_resident && self.rt.has_device_path();
-        if self.cfg.device_resident && !device {
-            log::warn!(
-                "node {}: artifacts lack the dev_* set — serving on the \
-                 host-tensor reference path (re-run `make artifacts`)",
-                self.node
-            );
-        }
+    /// Broadcast one scheduling decision to the followers (decentralized
+    /// topology; centralized workers are driven by the scatter stream).
+    fn ctrl(&mut self, op: u8, body: &[u8]) -> Result<()> {
+        let mut payload = Vec::with_capacity(1 + body.len());
+        payload.push(op);
+        payload.extend_from_slice(body);
+        self.ep.broadcast(tag(PHASE_CTRL, 0, self.ctrl_seq), &payload)?;
+        self.ctrl_seq = self.ctrl_seq.wrapping_add(1);
+        Ok(())
+    }
+
+    fn broadcast_shutdown(&mut self) -> Result<()> {
         match self.cfg.topology {
-            Topology::Decentralized if device => self.serve_decentralized_dev(req),
-            Topology::Decentralized => self.serve_decentralized(req),
+            Topology::Decentralized => self.ctrl(OP_SHUTDOWN, &[]),
             Topology::Centralized => {
-                if self.node != 0 {
-                    // Workers only ever see wire traffic (moe_in comes
-                    // off the scatter and must be uploaded either way);
-                    // one code path serves both modes.
-                    self.serve_central_worker(req)
-                } else if device {
-                    self.serve_central_leader_dev(req)
-                } else {
-                    self.serve_central_leader(req)
-                }
+                // Workers wait on the scatter stream: an empty scatter at
+                // the next global sequence number ends them.
+                let w = self.wseq;
+                self.wseq = self.wseq.wrapping_add(1);
+                self.ep.broadcast(tag(PHASE_SCATTER, 0, w), &[])?;
+                Ok(())
             }
         }
     }
 
-    /// Choose step `i`'s input token: prompt token during prefill, else
-    /// sample from the last logits. `replicated` marks the decentralized
-    /// protocol, where every node runs the same deterministic sampler
-    /// but only node 0 records the generated token.
-    fn next_token(
+    // ---------------- followers ----------
+
+    fn follow(&mut self, rx: Option<&Receiver<Cmd>>) -> Result<()> {
+        match self.cfg.topology {
+            Topology::Decentralized => self.follow_decentralized(rx),
+            Topology::Centralized => self.follow_central_worker(rx),
+        }
+    }
+
+    /// Idle-tolerant wait for the next message on `t`: loops on short
+    /// timeouts indefinitely (a node between requests is idle, not
+    /// broken), checking the local command channel — when one exists —
+    /// so an in-process cluster can always shut its followers down.
+    /// Returns `None` on local shutdown. A closed fabric is an error
+    /// bubble-up (TCP followers exit when their peers hang up).
+    fn recv_or_shutdown(
         &mut self,
-        req: &Request,
-        i: usize,
-        last_logits: &[f32],
-        generated: &mut Vec<u32>,
-        replicated: bool,
-    ) -> u32 {
-        if i < req.prompt.len() {
-            return req.prompt[i];
+        t: u64,
+        rx: Option<&Receiver<Cmd>>,
+    ) -> Result<Option<Envelope>> {
+        loop {
+            if let Some(rx) = rx {
+                loop {
+                    match rx.try_recv() {
+                        Ok(Cmd::Shutdown) => return Ok(None),
+                        Ok(Cmd::Submit(p)) => {
+                            // Followers never schedule; a stray submit is
+                            // failed rather than silently dropped.
+                            fail_pending(&p, "submitted to a follower node");
+                        }
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => return Ok(None),
+                    }
+                }
+            }
+            match self.ep.recv_tag(t, IDLE_POLL) {
+                Ok(env) => return Ok(Some(env)),
+                Err(NetError::Timeout(_)) => continue,
+                Err(e) => return Err(e.into()),
+            }
         }
-        let next = self.cfg.sampler.sample(last_logits, &mut self.rng);
-        if !replicated || self.node == 0 {
-            generated.push(next);
+    }
+
+    /// Decentralized follower: replay node 0's control plane in order —
+    /// admissions (full request aboard), steps (replicated compute +
+    /// sampling), cancellations (drop the request's decode state).
+    fn follow_decentralized(&mut self, rx: Option<&Receiver<Cmd>>) -> Result<()> {
+        let mut active: Vec<ActiveRequest> = Vec::new();
+        loop {
+            let t = tag(PHASE_CTRL, 0, self.ctrl_seq);
+            let Some(env) = self.recv_or_shutdown(t, rx)? else {
+                return Ok(());
+            };
+            self.ctrl_seq = self.ctrl_seq.wrapping_add(1);
+            let Some((&op, body)) = env.payload.split_first() else {
+                anyhow::bail!("node {}: empty control message", self.node);
+            };
+            match op {
+                OP_SHUTDOWN => return Ok(()),
+                OP_ADMIT => {
+                    anyhow::ensure!(body.len() > 2, "short admit message");
+                    let seq = u16::from_le_bytes(body[0..2].try_into().unwrap());
+                    let req = Request::decode(&body[2..])
+                        .with_context(|| format!("node {}: decoding admission", self.node))?;
+                    let a = self.admit(req, seq, None, None, None)?;
+                    active.push(a);
+                }
+                OP_CANCEL => {
+                    anyhow::ensure!(body.len() == 2, "short cancel message");
+                    let seq = u16::from_le_bytes(body[0..2].try_into().unwrap());
+                    active.retain(|a| a.seq != seq);
+                }
+                OP_STEP => {
+                    anyhow::ensure!(body.len() == 2, "short step message");
+                    let seq = u16::from_le_bytes(body[0..2].try_into().unwrap());
+                    let Some(a) = active.iter_mut().find(|a| a.seq == seq) else {
+                        anyhow::bail!(
+                            "node {}: step for unknown request seq {seq}",
+                            self.node
+                        );
+                    };
+                    self.step(a)?;
+                    if a.finish.is_some() {
+                        active.retain(|a| a.finish.is_none());
+                    }
+                }
+                other => anyhow::bail!("node {}: unknown ctrl opcode {other}", self.node),
+            }
         }
-        next
+    }
+
+    /// Centralized worker: stateless per iteration. Each scatter carries
+    /// (layer, moe_in, slot assignments) under a global sequence number;
+    /// the worker computes its partial and replies on the same number.
+    /// An empty scatter is the shutdown marker.
+    fn follow_central_worker(&mut self, rx: Option<&Receiver<Cmd>>) -> Result<()> {
+        let d = self.rt.manifest.d_embed;
+        loop {
+            let t = tag(PHASE_SCATTER, 0, self.wseq);
+            let Some(env) = self.recv_or_shutdown(t, rx)? else {
+                return Ok(());
+            };
+            if env.payload.is_empty() {
+                return Ok(());
+            }
+            anyhow::ensure!(
+                env.payload.len() >= 4 + d * 4,
+                "node {}: short scatter payload",
+                self.node
+            );
+            let layer =
+                u32::from_le_bytes(env.payload[0..4].try_into().unwrap()) as usize;
+            let moe_in = bytes_to_f32s(&env.payload[4..4 + d * 4]);
+            let rest = &env.payload[4 + d * 4..];
+            let ns = rest.len() / 8; // slot count rides on the wire
+            let mut idx = vec![0usize; ns];
+            let mut w = vec![0f32; ns];
+            for s in 0..ns {
+                let o = s * 8;
+                idx[s] = i32::from_le_bytes(rest[o..o + 4].try_into().unwrap()) as usize;
+                w[s] = f32::from_le_bytes(rest[o + 4..o + 8].try_into().unwrap());
+            }
+            let partial =
+                self.rt.node_experts_direct(&self.experts, layer, &moe_in, &idx, &w)?;
+            self.ep
+                .send(0, tag(PHASE_GATHER, 0, self.wseq), f32s_to_bytes(&partial))?;
+            self.wseq = self.wseq.wrapping_add(1);
+        }
+    }
+
+    // ---------------- one engine iteration ----------
+
+    /// Advance `a` by one iteration: consume the next prompt token
+    /// during prefill, else sample one token and run its forward pass.
+    /// Sets `a.finish` when the request completed. Returns the token
+    /// sampled this iteration (with its logprob) if this was a decode
+    /// iteration.
+    fn step(&mut self, a: &mut ActiveRequest) -> Result<Option<(u32, f32)>> {
+        if a.pos >= self.rt.manifest.max_seq {
+            a.finish = Some(FinishReason::Length);
+            return Ok(None);
+        }
+        let is_prefill = a.pos < a.req.prompt.len();
+        let (tok, decoded) = if is_prefill {
+            (a.req.prompt[a.pos], None)
+        } else {
+            // Replicated on every decentralized node: same seed, same
+            // draw count, same token.
+            let (t, lp) = a.req.sampling.sampler.sample_lp(&a.last_logits, &mut a.rng);
+            a.generated.push(t);
+            if a.req.sampling.stop.contains(&t) {
+                // The stop token is recorded but its forward pass is
+                // skipped.
+                a.finish = Some(FinishReason::Stop);
+                return Ok(Some((t, lp)));
+            }
+            (t, Some((t, lp)))
+        };
+
+        let on_device = matches!(a.state, DecodeState::Dev(_));
+        let b = match (self.cfg.topology, on_device) {
+            (Topology::Decentralized, true) => self.forward_decentralized_dev(a, tok)?,
+            (Topology::Decentralized, false) => self.forward_decentralized_host(a, tok)?,
+            (Topology::Centralized, true) => self.forward_central_leader_dev(a, tok)?,
+            (Topology::Centralized, false) => self.forward_central_leader_host(a, tok)?,
+        };
+
+        if is_prefill {
+            a.metrics.prefill.push(b);
+        } else {
+            a.metrics.decode.push(b);
+        }
+        a.pos += 1;
+        a.step += 1;
+        if a.generated.len() >= a.req.sampling.max_new_tokens {
+            a.finish = Some(FinishReason::Length);
+        }
+        Ok(decoded)
     }
 
     // ---------------- decentralized (P-L_R-D wire protocol) ----------
 
-    fn serve_decentralized(&mut self, req: &Request) -> Result<RequestResult> {
-        let m = self.rt.manifest.clone();
-        let mut metrics = RunMetrics::default();
-        let mut kc: Vec<HostTensor> =
-            (0..m.n_layers).map(|_| self.rt.empty_layer_cache()).collect();
-        let mut vc = kc.clone();
-        let mut generated = Vec::new();
-        let mut pos = 0usize;
-        let mut step: u32 = 0;
-        let mut last_logits = Vec::new();
+    fn forward_decentralized_host(
+        &mut self,
+        a: &mut ActiveRequest,
+        tok: u32,
+    ) -> Result<TokenBreakdown> {
+        let n_layers = self.rt.manifest.n_layers;
+        let mut b = TokenBreakdown::default();
+        self.rt.take_transfer_stats();
+        self.ep.take_stats();
+        let t_embed = Instant::now();
+        let mut x = self.rt.embed(tok)?;
+        b.misc_ns += t_embed.elapsed().as_nanos() as u64;
 
-        let total = req.prompt.len() + req.max_new_tokens;
-        for i in 0..total {
-            if pos >= m.max_seq {
-                break;
+        let DecodeState::Host { kc, vc } = &mut a.state else {
+            anyhow::bail!("host forward on device state")
+        };
+        for l in 0..n_layers {
+            let t_misc = Instant::now();
+            let ar = self.rt.attn_router(l, &x, &kc[l], &vc[l], a.pos)?;
+            kc[l] = ar.k_cache;
+            vc[l] = ar.v_cache;
+            let draw = RouterDraw {
+                selected: ar.top_i.clone(),
+                weights: ar.top_w.clone(),
+            };
+            let plan = self.planner.plan_layer(&draw);
+            b.misc_ns += t_misc.elapsed().as_nanos() as u64;
+
+            // Local expert slots.
+            let t_moe = Instant::now();
+            let (idx, w) = self.slots_for(&plan.per_node[self.node]);
+            let partial =
+                self.rt.node_experts_direct(&self.experts, l, &ar.moe_in, &idx, &w)?;
+            b.moe_ns += t_moe.elapsed().as_nanos() as u64;
+
+            // All-reduce (the envoy exchange of Fig. 7), demultiplexed
+            // per request.
+            let t_comm = Instant::now();
+            let summed = self.all_reduce(&partial, a.seq, l as u32, a.step)?;
+            b.comm_ns += t_comm.elapsed().as_nanos() as u64;
+
+            let t_sum = Instant::now();
+            for (xi, (hi, ci)) in x.iter_mut().zip(ar.h.iter().zip(&summed)) {
+                *xi = hi + ci;
             }
-            let is_prefill = i < req.prompt.len();
-            let tok = self.next_token(req, i, &last_logits, &mut generated, true);
-
-            let mut b = TokenBreakdown::default();
-            self.rt.take_transfer_stats();
-            self.ep.take_stats();
-            let t_embed = Instant::now();
-            let mut x = self.rt.embed(tok)?;
-            b.misc_ns += t_embed.elapsed().as_nanos() as u64;
-
-            for l in 0..m.n_layers {
-                let t_misc = Instant::now();
-                let ar = self.rt.attn_router(l, &x, &kc[l], &vc[l], pos)?;
-                kc[l] = ar.k_cache;
-                vc[l] = ar.v_cache;
-                let draw = RouterDraw {
-                    selected: ar.top_i.clone(),
-                    weights: ar.top_w.clone(),
-                };
-                let plan = self.planner.plan_layer(&draw);
-                b.misc_ns += t_misc.elapsed().as_nanos() as u64;
-
-                // Local expert slots.
-                let t_moe = Instant::now();
-                let (idx, w) = self.slots_for(&plan.per_node[self.node]);
-                let partial =
-                    self.rt.node_experts_direct(&self.experts, l, &ar.moe_in, &idx, &w)?;
-                b.moe_ns += t_moe.elapsed().as_nanos() as u64;
-
-                // All-reduce (the envoy exchange of Fig. 7).
-                let t_comm = Instant::now();
-                let summed = self.all_reduce(&partial, PHASE_PARTIAL, l as u32, step)?;
-                b.comm_ns += t_comm.elapsed().as_nanos() as u64;
-
-                let t_sum = Instant::now();
-                for (xi, (hi, ci)) in x.iter_mut().zip(ar.h.iter().zip(&summed)) {
-                    *xi = hi + ci;
-                }
-                b.misc_ns += t_sum.elapsed().as_nanos() as u64;
-            }
-            let t_head = Instant::now();
-            last_logits = self.rt.lm_head(&x)?;
-            b.misc_ns += t_head.elapsed().as_nanos() as u64;
-            note_transfers(&mut b, &self.rt);
-            note_wire(&mut b, self.ep.take_stats());
-
-            if is_prefill {
-                metrics.prefill.push(b);
-            } else {
-                metrics.decode.push(b);
-            }
-            pos += 1;
-            step += 1;
+            b.misc_ns += t_sum.elapsed().as_nanos() as u64;
         }
-        Ok(RequestResult { id: req.id, generated, metrics })
+        let t_head = Instant::now();
+        a.last_logits = self.rt.lm_head(&x)?;
+        b.misc_ns += t_head.elapsed().as_nanos() as u64;
+        note_transfers(&mut b, &self.rt);
+        note_wire(&mut b, self.ep.take_stats());
+        Ok(b)
     }
 
-    /// Decentralized serving on the device-resident path: identical wire
+    /// Decentralized forward on the device-resident path: identical wire
     /// protocol (P-L_R-D) and identical math, but K/V caches and the
     /// x/h/moe_in activations never leave the device — the only host
     /// crossings per layer are the router's top-k and the all-reduce
@@ -396,90 +968,81 @@ impl NodeWorker {
     /// async PJRT work to whichever call blocks first (see the
     /// `TokenBreakdown` caveat); totals stay comparable to the host
     /// path.
-    fn serve_decentralized_dev(&mut self, req: &Request) -> Result<RequestResult> {
-        let m = self.rt.manifest.clone();
-        let mut metrics = RunMetrics::default();
-        let mut state = DeviceState::new(&self.rt)?;
-        let mut generated = Vec::new();
-        let mut pos = 0usize;
-        let mut step: u32 = 0;
-        let mut last_logits = Vec::new();
+    fn forward_decentralized_dev(
+        &mut self,
+        a: &mut ActiveRequest,
+        tok: u32,
+    ) -> Result<TokenBreakdown> {
+        let n_layers = self.rt.manifest.n_layers;
+        let mut b = TokenBreakdown::default();
+        self.rt.take_transfer_stats();
+        self.ep.take_stats();
+        let DecodeState::Dev(state) = &mut a.state else {
+            anyhow::bail!("device forward on host state")
+        };
+        let t_embed = Instant::now();
+        state.begin_token(&self.rt, tok)?;
+        b.misc_ns += t_embed.elapsed().as_nanos() as u64;
 
-        let total = req.prompt.len() + req.max_new_tokens;
-        for i in 0..total {
-            if pos >= m.max_seq {
-                break;
-            }
-            let is_prefill = i < req.prompt.len();
-            let tok = self.next_token(req, i, &last_logits, &mut generated, true);
+        for l in 0..n_layers {
+            let t_misc = Instant::now();
+            let (top_w, top_i) = state.attn_router(&self.rt, l, a.pos)?;
+            let draw = RouterDraw { selected: top_i, weights: top_w };
+            let plan = self.planner.plan_layer(&draw);
+            b.misc_ns += t_misc.elapsed().as_nanos() as u64;
 
-            let mut b = TokenBreakdown::default();
-            self.rt.take_transfer_stats();
-            self.ep.take_stats();
-            let t_embed = Instant::now();
-            state.begin_token(&self.rt, tok)?;
-            b.misc_ns += t_embed.elapsed().as_nanos() as u64;
+            let t_moe = Instant::now();
+            let (idx, w) = self.slots_for(&plan.per_node[self.node]);
+            let partial = state.node_experts(&self.rt, &self.experts, l, &idx, &w)?;
+            b.moe_ns += t_moe.elapsed().as_nanos() as u64;
 
-            for l in 0..m.n_layers {
-                let t_misc = Instant::now();
-                let (top_w, top_i) = state.attn_router(&self.rt, l, pos)?;
-                let draw = RouterDraw { selected: top_i, weights: top_w };
-                let plan = self.planner.plan_layer(&draw);
-                b.misc_ns += t_misc.elapsed().as_nanos() as u64;
-
-                let t_moe = Instant::now();
-                let (idx, w) = self.slots_for(&plan.per_node[self.node]);
-                let partial = state.node_experts(&self.rt, &self.experts, l, &idx, &w)?;
-                b.moe_ns += t_moe.elapsed().as_nanos() as u64;
-
-                if self.ep.n_nodes() == 1 {
-                    // Single node: the local partial IS the sum — it
-                    // never leaves the device.
-                    let t_sum = Instant::now();
-                    state.finish_layer_device(&self.rt, &partial)?;
-                    b.misc_ns += t_sum.elapsed().as_nanos() as u64;
-                } else {
-                    // The partial must hit the wire: this download (and
-                    // the summed upload) are protocol traffic.
-                    let t_comm = Instant::now();
-                    let mine = self.rt.download_f32(&partial)?;
-                    let summed = self.all_reduce(&mine, PHASE_PARTIAL, l as u32, step)?;
-                    b.comm_ns += t_comm.elapsed().as_nanos() as u64;
-
-                    let t_sum = Instant::now();
-                    state.finish_layer_host(&self.rt, &summed)?;
-                    b.misc_ns += t_sum.elapsed().as_nanos() as u64;
-                }
-            }
-            let t_head = Instant::now();
-            last_logits = state.logits(&self.rt)?;
-            b.misc_ns += t_head.elapsed().as_nanos() as u64;
-            note_transfers(&mut b, &self.rt);
-            note_wire(&mut b, self.ep.take_stats());
-
-            if is_prefill {
-                metrics.prefill.push(b);
+            if self.ep.n_nodes() == 1 {
+                // Single node: the local partial IS the sum — it never
+                // leaves the device.
+                let t_sum = Instant::now();
+                state.finish_layer_device(&self.rt, &partial)?;
+                b.misc_ns += t_sum.elapsed().as_nanos() as u64;
             } else {
-                metrics.decode.push(b);
+                // The partial must hit the wire: this download (and the
+                // summed upload) are protocol traffic.
+                let t_comm = Instant::now();
+                let mine = self.rt.download_f32(&partial)?;
+                let summed = self.all_reduce(&mine, a.seq, l as u32, a.step)?;
+                b.comm_ns += t_comm.elapsed().as_nanos() as u64;
+
+                let t_sum = Instant::now();
+                state.finish_layer_host(&self.rt, &summed)?;
+                b.misc_ns += t_sum.elapsed().as_nanos() as u64;
             }
-            pos += 1;
-            step += 1;
         }
-        Ok(RequestResult { id: req.id, generated, metrics })
+        let t_head = Instant::now();
+        a.last_logits = state.logits(&self.rt)?;
+        b.misc_ns += t_head.elapsed().as_nanos() as u64;
+        note_transfers(&mut b, &self.rt);
+        note_wire(&mut b, self.ep.take_stats());
+        Ok(b)
     }
 
     /// Exchange partials with every peer and sum in node order (bitwise
     /// deterministic across nodes).
-    fn all_reduce(&mut self, partial: &[f32], phase: u8, layer: u32, step: u32) -> Result<Vec<f32>> {
+    fn all_reduce(
+        &mut self,
+        partial: &[f32],
+        seq: u16,
+        layer: u32,
+        step: u32,
+    ) -> Result<Vec<f32>> {
         if self.ep.n_nodes() == 1 {
             return Ok(partial.to_vec());
         }
-        let t = tag(phase, layer, step);
+        let t = req_tag(PHASE_PARTIAL, seq, layer, step);
         self.ep.broadcast(t, &f32s_to_bytes(partial))?;
         let envs = self
             .ep
             .gather(t, self.cfg.recv_timeout)
-            .with_context(|| format!("node {}: all-reduce, layer {layer}", self.node))?;
+            .with_context(|| {
+                format!("node {}: all-reduce, request seq {seq}, layer {layer}", self.node)
+            })?;
         let mut parts: Vec<(usize, Vec<f32>)> =
             envs.into_iter().map(|e| (e.from, bytes_to_f32s(&e.payload))).collect();
         parts.push((self.node, partial.to_vec()));
@@ -514,137 +1077,120 @@ impl NodeWorker {
 
     // ---------------- centralized (Figs. 2–3 wire protocol) ----------
 
-    fn serve_central_leader(&mut self, req: &Request) -> Result<RequestResult> {
-        let m = self.rt.manifest.clone();
-        let mut metrics = RunMetrics::default();
-        let mut kc: Vec<HostTensor> =
-            (0..m.n_layers).map(|_| self.rt.empty_layer_cache()).collect();
-        let mut vc = kc.clone();
-        let mut generated = Vec::new();
-        let mut pos = 0usize;
-        let mut step: u32 = 0;
-        let mut last_logits = Vec::new();
+    fn forward_central_leader_host(
+        &mut self,
+        a: &mut ActiveRequest,
+        tok: u32,
+    ) -> Result<TokenBreakdown> {
+        let n_layers = self.rt.manifest.n_layers;
+        let mut b = TokenBreakdown::default();
+        self.rt.take_transfer_stats();
+        self.ep.take_stats();
+        let t0 = Instant::now();
+        let mut x = self.rt.embed(tok)?;
+        b.misc_ns += t0.elapsed().as_nanos() as u64;
 
-        let total = req.prompt.len() + req.max_new_tokens;
-        for i in 0..total {
-            if pos >= m.max_seq {
-                break;
+        let DecodeState::Host { kc, vc } = &mut a.state else {
+            anyhow::bail!("host forward on device state")
+        };
+        for l in 0..n_layers {
+            let t_misc = Instant::now();
+            let ar = self.rt.attn_router(l, &x, &kc[l], &vc[l], a.pos)?;
+            kc[l] = ar.k_cache;
+            vc[l] = ar.v_cache;
+            let draw = RouterDraw {
+                selected: ar.top_i.clone(),
+                weights: ar.top_w.clone(),
+            };
+            let plan = self.planner.plan_layer(&draw);
+            b.misc_ns += t_misc.elapsed().as_nanos() as u64;
+
+            // Scatter: layer + moe_in + per-worker slot assignments
+            // under one global sequence number.
+            let w_iter = self.next_wseq();
+            let t_comm = Instant::now();
+            if let Some(w_iter) = w_iter {
+                self.scatter_layer(&plan, &ar.moe_in, l as u32, w_iter)?;
             }
-            let is_prefill = i < req.prompt.len();
-            let tok = self.next_token(req, i, &last_logits, &mut generated, false);
-            let mut b = TokenBreakdown::default();
-            self.rt.take_transfer_stats();
-            self.ep.take_stats();
-            let t0 = Instant::now();
-            let mut x = self.rt.embed(tok)?;
-            b.misc_ns += t0.elapsed().as_nanos() as u64;
+            b.comm_ns += t_comm.elapsed().as_nanos() as u64;
 
-            for l in 0..m.n_layers {
-                let t_misc = Instant::now();
-                let ar = self.rt.attn_router(l, &x, &kc[l], &vc[l], pos)?;
-                kc[l] = ar.k_cache;
-                vc[l] = ar.v_cache;
-                let draw = RouterDraw {
-                    selected: ar.top_i.clone(),
-                    weights: ar.top_w.clone(),
-                };
-                let plan = self.planner.plan_layer(&draw);
-                b.misc_ns += t_misc.elapsed().as_nanos() as u64;
+            // Own experts.
+            let t_moe = Instant::now();
+            let (idx, w) = self.slots_for(&plan.per_node[0]);
+            let mine =
+                self.rt.node_experts_direct(&self.experts, l, &ar.moe_in, &idx, &w)?;
+            b.moe_ns += t_moe.elapsed().as_nanos() as u64;
 
-                // Scatter: moe_in + per-worker slot assignments.
-                let t_comm = Instant::now();
-                self.scatter_layer(&plan, &ar.moe_in, l as u32, step)?;
-                b.comm_ns += t_comm.elapsed().as_nanos() as u64;
+            // Gather partials.
+            let t_gather = Instant::now();
+            let sum = match w_iter {
+                Some(w_iter) => self.gather_partials(mine, w_iter, l as u32)?,
+                None => mine,
+            };
+            b.comm_ns += t_gather.elapsed().as_nanos() as u64;
 
-                // Own experts.
-                let t_moe = Instant::now();
-                let (idx, w) = self.slots_for(&plan.per_node[0]);
-                let mine =
-                    self.rt.node_experts_direct(&self.experts, l, &ar.moe_in, &idx, &w)?;
-                b.moe_ns += t_moe.elapsed().as_nanos() as u64;
-
-                // Gather partials.
-                let t_gather = Instant::now();
-                let sum = self.gather_partials(mine, l as u32, step)?;
-                b.comm_ns += t_gather.elapsed().as_nanos() as u64;
-
-                for (xi, (hi, ci)) in x.iter_mut().zip(ar.h.iter().zip(&sum)) {
-                    *xi = hi + ci;
-                }
+            for (xi, (hi, ci)) in x.iter_mut().zip(ar.h.iter().zip(&sum)) {
+                *xi = hi + ci;
             }
-            let t_head = Instant::now();
-            last_logits = self.rt.lm_head(&x)?;
-            b.misc_ns += t_head.elapsed().as_nanos() as u64;
-            note_transfers(&mut b, &self.rt);
-            note_wire(&mut b, self.ep.take_stats());
-            if is_prefill {
-                metrics.prefill.push(b);
-            } else {
-                metrics.decode.push(b);
-            }
-            pos += 1;
-            step += 1;
         }
-        // Tell workers the request is over: an empty payload on the tag
-        // they will wait for next (layer 0 of the step after the last).
-        self.ep.broadcast(tag(PHASE_SCATTER, 0, step), &[])?;
-        Ok(RequestResult { id: req.id, generated, metrics })
+        let t_head = Instant::now();
+        a.last_logits = self.rt.lm_head(&x)?;
+        b.misc_ns += t_head.elapsed().as_nanos() as u64;
+        note_transfers(&mut b, &self.rt);
+        note_wire(&mut b, self.ep.take_stats());
+        Ok(b)
     }
 
     /// Centralized leader on the device-resident path: the Figs. 2–3
     /// wire protocol is unchanged (workers cannot tell the difference);
     /// the leader's caches/activations stay on device. The scatter's
     /// `moe_in` download and the gather-sum upload are protocol traffic.
-    fn serve_central_leader_dev(&mut self, req: &Request) -> Result<RequestResult> {
-        let m = self.rt.manifest.clone();
-        let mut metrics = RunMetrics::default();
-        let mut state = DeviceState::new(&self.rt)?;
-        let mut generated = Vec::new();
-        let mut pos = 0usize;
-        let mut step: u32 = 0;
-        let mut last_logits = Vec::new();
+    fn forward_central_leader_dev(
+        &mut self,
+        a: &mut ActiveRequest,
+        tok: u32,
+    ) -> Result<TokenBreakdown> {
+        let n_layers = self.rt.manifest.n_layers;
+        let mut b = TokenBreakdown::default();
+        self.rt.take_transfer_stats();
+        self.ep.take_stats();
+        let DecodeState::Dev(state) = &mut a.state else {
+            anyhow::bail!("device forward on host state")
+        };
+        let t0 = Instant::now();
+        state.begin_token(&self.rt, tok)?;
+        b.misc_ns += t0.elapsed().as_nanos() as u64;
 
-        let total = req.prompt.len() + req.max_new_tokens;
-        for i in 0..total {
-            if pos >= m.max_seq {
-                break;
+        for l in 0..n_layers {
+            let t_misc = Instant::now();
+            let (top_w, top_i) = state.attn_router(&self.rt, l, a.pos)?;
+            let draw = RouterDraw { selected: top_i, weights: top_w };
+            let plan = self.planner.plan_layer(&draw);
+            b.misc_ns += t_misc.elapsed().as_nanos() as u64;
+
+            let w_iter = self.next_wseq();
+            let t_comm = Instant::now();
+            if let Some(w_iter) = w_iter {
+                let moe_in = state.moe_in_host(&self.rt)?; // scatter payload
+                self.scatter_layer(&plan, &moe_in, l as u32, w_iter)?;
             }
-            let is_prefill = i < req.prompt.len();
-            let tok = self.next_token(req, i, &last_logits, &mut generated, false);
-            let mut b = TokenBreakdown::default();
-            self.rt.take_transfer_stats();
-            self.ep.take_stats();
-            let t0 = Instant::now();
-            state.begin_token(&self.rt, tok)?;
-            b.misc_ns += t0.elapsed().as_nanos() as u64;
+            b.comm_ns += t_comm.elapsed().as_nanos() as u64;
 
-            for l in 0..m.n_layers {
-                let t_misc = Instant::now();
-                let (top_w, top_i) = state.attn_router(&self.rt, l, pos)?;
-                let draw = RouterDraw { selected: top_i, weights: top_w };
-                let plan = self.planner.plan_layer(&draw);
-                b.misc_ns += t_misc.elapsed().as_nanos() as u64;
+            let t_moe = Instant::now();
+            let (idx, w) = self.slots_for(&plan.per_node[0]);
+            let partial = state.node_experts(&self.rt, &self.experts, l, &idx, &w)?;
+            b.moe_ns += t_moe.elapsed().as_nanos() as u64;
 
-                let t_comm = Instant::now();
-                if self.ep.n_nodes() > 1 {
-                    let moe_in = state.moe_in_host(&self.rt)?; // scatter payload
-                    self.scatter_layer(&plan, &moe_in, l as u32, step)?;
-                }
-                b.comm_ns += t_comm.elapsed().as_nanos() as u64;
-
-                let t_moe = Instant::now();
-                let (idx, w) = self.slots_for(&plan.per_node[0]);
-                let partial = state.node_experts(&self.rt, &self.experts, l, &idx, &w)?;
-                b.moe_ns += t_moe.elapsed().as_nanos() as u64;
-
-                if self.ep.n_nodes() == 1 {
+            match w_iter {
+                None => {
                     let t_sum = Instant::now();
                     state.finish_layer_device(&self.rt, &partial)?;
                     b.misc_ns += t_sum.elapsed().as_nanos() as u64;
-                } else {
+                }
+                Some(w_iter) => {
                     let t_gather = Instant::now();
                     let mine = self.rt.download_f32(&partial)?;
-                    let sum = self.gather_partials(mine, l as u32, step)?;
+                    let sum = self.gather_partials(mine, w_iter, l as u32)?;
                     b.comm_ns += t_gather.elapsed().as_nanos() as u64;
 
                     let t_sum = Instant::now();
@@ -652,52 +1198,58 @@ impl NodeWorker {
                     b.misc_ns += t_sum.elapsed().as_nanos() as u64;
                 }
             }
-            let t_head = Instant::now();
-            last_logits = state.logits(&self.rt)?;
-            b.misc_ns += t_head.elapsed().as_nanos() as u64;
-            note_transfers(&mut b, &self.rt);
-            note_wire(&mut b, self.ep.take_stats());
-            if is_prefill {
-                metrics.prefill.push(b);
-            } else {
-                metrics.decode.push(b);
-            }
-            pos += 1;
-            step += 1;
         }
-        self.ep.broadcast(tag(PHASE_SCATTER, 0, step), &[])?;
-        Ok(RequestResult { id: req.id, generated, metrics })
+        let t_head = Instant::now();
+        a.last_logits = state.logits(&self.rt)?;
+        b.misc_ns += t_head.elapsed().as_nanos() as u64;
+        note_transfers(&mut b, &self.rt);
+        note_wire(&mut b, self.ep.take_stats());
+        Ok(b)
     }
 
-    /// Leader-side scatter: `moe_in` + per-worker slot assignments
-    /// (shared by the host and device-resident centralized loops).
+    /// Allocate the next scatter/gather sequence number — `None` on a
+    /// single-node cluster (no workers to talk to).
+    fn next_wseq(&mut self) -> Option<u32> {
+        if self.ep.n_nodes() == 1 {
+            return None;
+        }
+        let w = self.wseq;
+        self.wseq = self.wseq.wrapping_add(1);
+        Some(w)
+    }
+
+    /// Leader-side scatter: layer + `moe_in` + per-worker slot
+    /// assignments (shared by the host and device-resident centralized
+    /// loops).
     fn scatter_layer(
         &mut self,
         plan: &crate::moe::balance::LayerPlan,
         moe_in: &[f32],
         layer: u32,
-        step: u32,
+        wseq: u32,
     ) -> Result<()> {
         let ns = self.plan_ns();
         for peer in 1..self.ep.n_nodes() {
             let work = &plan.per_node[peer];
-            let mut payload = f32s_to_bytes(moe_in);
+            let mut payload = Vec::with_capacity(4 + moe_in.len() * 4 + ns * 8);
+            payload.extend_from_slice(&layer.to_le_bytes());
+            payload.extend_from_slice(&f32s_to_bytes(moe_in));
             // slot assignment appended: ns × (i32 idx, f32 w)
             let (idx, w) = slots_from_index(work, &self.peer_index[peer], ns);
             for s in 0..idx.len() {
                 payload.extend_from_slice(&(idx[s] as i32).to_le_bytes());
                 payload.extend_from_slice(&w[s].to_le_bytes());
             }
-            self.ep.send(peer, tag(PHASE_SCATTER, layer, step), payload)?;
+            self.ep.send(peer, tag(PHASE_SCATTER, 0, wseq), payload)?;
         }
         Ok(())
     }
 
     /// Leader-side gather: sum own partial with every worker's.
-    fn gather_partials(&mut self, mine: Vec<f32>, layer: u32, step: u32) -> Result<Vec<f32>> {
+    fn gather_partials(&mut self, mine: Vec<f32>, wseq: u32, layer: u32) -> Result<Vec<f32>> {
         let envs = self
             .ep
-            .gather(tag(PHASE_GATHER, layer, step), self.cfg.recv_timeout)
+            .gather(tag(PHASE_GATHER, 0, wseq), self.cfg.recv_timeout)
             .with_context(|| format!("leader: gathering partials, layer {layer}"))?;
         let mut sum = mine;
         for e in envs {
@@ -707,63 +1259,11 @@ impl NodeWorker {
         }
         Ok(sum)
     }
-
-    fn serve_central_worker(&mut self, _req: &Request) -> Result<RequestResult> {
-        let m = self.rt.manifest.clone();
-        let d = m.d_embed;
-        let mut step: u32 = 0;
-        let mut layer: u32 = 0;
-        loop {
-            // Wait for the next scatter in protocol order; an empty
-            // payload on the expected tag is the end-of-request marker.
-            let env = self
-                .ep
-                .recv_tag(tag(PHASE_SCATTER, layer, step), self.cfg.recv_timeout)
-                .with_context(|| {
-                    format!(
-                        "node {}: waiting for scatter from leader (node 0), layer {layer}",
-                        self.node
-                    )
-                })?;
-            if env.payload.is_empty() {
-                break;
-            }
-            let moe_in = bytes_to_f32s(&env.payload[..d * 4]);
-            let rest = &env.payload[d * 4..];
-            let ns = rest.len() / 8; // slot count rides on the wire
-            let mut idx = vec![0usize; ns];
-            let mut w = vec![0f32; ns];
-            for s in 0..ns {
-                let o = s * 8;
-                idx[s] = i32::from_le_bytes(rest[o..o + 4].try_into().unwrap()) as usize;
-                w[s] = f32::from_le_bytes(rest[o + 4..o + 8].try_into().unwrap());
-            }
-            let partial = self.rt.node_experts_direct(
-                &self.experts,
-                layer as usize,
-                &moe_in,
-                &idx,
-                &w,
-            )?;
-            self.ep
-                .send(0, tag(PHASE_GATHER, layer, step), f32s_to_bytes(&partial))?;
-            layer += 1;
-            if layer as usize == m.n_layers {
-                layer = 0;
-                step += 1;
-            }
-        }
-        Ok(RequestResult {
-            id: 0,
-            generated: vec![],
-            metrics: RunMetrics::default(),
-        })
-    }
 }
 
 /// Map a `NodeWork` plan onto `ns` fixed slot arrays via a node's
 /// global→local expert map (precomputed once per cluster in
-/// `NodeWorker::run`); padding slots carry weight 0.
+/// `NodeWorker::new`); padding slots carry weight 0.
 fn slots_from_index(
     work: &crate::moe::balance::NodeWork,
     index: &HashMap<usize, usize>,

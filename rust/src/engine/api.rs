@@ -1,0 +1,249 @@
+//! The unified streaming serving API: one [`Engine`] trait for every
+//! serving path (dense single-node, live multi-node cluster,
+//! virtual-time simulator).
+//!
+//! `submit(Request)` returns immediately with a [`RequestHandle`] that
+//! streams [`TokenEvent`]s over a channel:
+//!
+//! - `Started { ttft_s, queued_s }` — the first generated token is out;
+//!   carries the measured time-to-first-token and how much of it was
+//!   spent queued for admission.
+//! - `Token { id, logprob }` — one generated token (including the
+//!   first), in generation order.
+//! - `Done { result }` — terminal: the full [`RequestResult`] (tokens,
+//!   metrics, finish reason). The token ids observed via `Token` events
+//!   are identical to `result.generated` (asserted by the integration
+//!   tests).
+//! - `Failed { id, error }` — terminal: the request died (engine error
+//!   or engine shutdown mid-flight).
+//!
+//! The handle also supports `cancel()` — a cooperative flag the engine
+//! polls between iterations; a cancelled request finishes with
+//! [`crate::engine::request::FinishReason::Cancelled`] and whatever
+//! tokens it had generated — and blocking `join()`, which drains the
+//! stream and returns the final result (the old blocking `serve`
+//! methods are gone; `submit(req)?.join()` is their replacement).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::engine::request::{Request, RequestResult};
+
+/// One event in a request's generation stream. See the module docs for
+/// the lifecycle (`Started` → `Token`* → `Done` | `Failed`).
+#[derive(Debug, Clone)]
+pub enum TokenEvent {
+    /// First generated token is out. `ttft_s` is submission → first
+    /// token; `queued_s` is the share of it spent waiting for admission.
+    Started { ttft_s: f64, queued_s: f64 },
+    /// One generated token, with its log-probability under the model's
+    /// full-vocabulary softmax when the engine computes logits (`None`
+    /// for the virtual-time simulator, which models time, not content).
+    Token { id: u32, logprob: Option<f32> },
+    /// Terminal: the request completed (including cancellation — check
+    /// `result.finish`).
+    Done { result: RequestResult },
+    /// Terminal: the request died without a result.
+    Failed { id: u64, error: String },
+}
+
+/// A serving engine: anything that can accept a request and stream its
+/// generation. Implemented by `DenseEngine`, `cluster::live::LiveCluster`
+/// and `engine::scheduler::SimEngine`.
+pub trait Engine {
+    /// Submit a request for generation. Returns immediately; tokens
+    /// arrive on the handle as they decode.
+    fn submit(&mut self, req: Request) -> Result<RequestHandle>;
+}
+
+/// Caller's end of one in-flight request: an event stream plus a
+/// cooperative cancellation flag.
+pub struct RequestHandle {
+    id: u64,
+    events: Receiver<TokenEvent>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl RequestHandle {
+    /// Wire up a handle (for `Engine` implementors): returns the handle,
+    /// the sender the engine streams events into, and the shared
+    /// cancellation flag it must poll between iterations.
+    pub fn channel(id: u64) -> (RequestHandle, Sender<TokenEvent>, Arc<AtomicBool>) {
+        let (tx, rx) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        (RequestHandle { id, events: rx, cancel: cancel.clone() }, tx, cancel)
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Ask the engine to stop this request at its next scheduling
+    /// iteration. Cooperative: already-queued events still arrive, and
+    /// the stream ends with `Done` (finish reason `Cancelled`, partial
+    /// tokens) once the engine observes the flag.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    /// Next event, blocking. `None` once the stream is over (a terminal
+    /// event was delivered, or the engine went away).
+    pub fn next_event(&self) -> Option<TokenEvent> {
+        self.events.recv().ok()
+    }
+
+    /// Non-blocking poll for the next event.
+    pub fn try_event(&self) -> Option<TokenEvent> {
+        self.events.try_recv().ok()
+    }
+
+    /// Drain the stream to its terminal event and return the result
+    /// (the blocking-serve compatibility path: `submit(req)?.join()`).
+    pub fn join(self) -> Result<RequestResult> {
+        loop {
+            match self.events.recv() {
+                Ok(TokenEvent::Done { result }) => return Ok(result),
+                Ok(TokenEvent::Failed { id, error }) => {
+                    anyhow::bail!("request {id} failed: {error}")
+                }
+                Ok(_) => {}
+                Err(_) => anyhow::bail!(
+                    "request {}: engine dropped the stream before completion",
+                    self.id
+                ),
+            }
+        }
+    }
+
+    /// Like [`RequestHandle::join`], but bounded by an INACTIVITY
+    /// timeout: the clock resets on every event, so a long generation
+    /// that keeps streaming never trips it, while a wedged engine (hung
+    /// accelerator call — something the engine's own wire timeouts
+    /// cannot see) errors out after `idle` without an event.
+    pub fn join_timeout(self, idle: std::time::Duration) -> Result<RequestResult> {
+        loop {
+            match self.events.recv_timeout(idle) {
+                Ok(TokenEvent::Done { result }) => return Ok(result),
+                Ok(TokenEvent::Failed { id, error }) => {
+                    anyhow::bail!("request {id} failed: {error}")
+                }
+                Ok(_) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => anyhow::bail!(
+                    "request {}: no event for {idle:?} — engine wedged?",
+                    self.id
+                ),
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => anyhow::bail!(
+                    "request {}: engine dropped the stream before completion",
+                    self.id
+                ),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::request::FinishReason;
+    use crate::metrics::RunMetrics;
+
+    fn done(id: u64, generated: Vec<u32>) -> TokenEvent {
+        TokenEvent::Done {
+            result: RequestResult {
+                id,
+                generated,
+                finish: FinishReason::Length,
+                metrics: RunMetrics::default(),
+            },
+        }
+    }
+
+    #[test]
+    fn join_returns_the_terminal_result() {
+        let (h, tx, _cancel) = RequestHandle::channel(7);
+        tx.send(TokenEvent::Started { ttft_s: 0.1, queued_s: 0.0 }).unwrap();
+        tx.send(TokenEvent::Token { id: 42, logprob: None }).unwrap();
+        tx.send(done(7, vec![42])).unwrap();
+        let r = h.join().unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.generated, vec![42]);
+    }
+
+    #[test]
+    fn streamed_tokens_match_result() {
+        let (h, tx, _cancel) = RequestHandle::channel(1);
+        for t in [5u32, 6, 7] {
+            tx.send(TokenEvent::Token { id: t, logprob: Some(-0.5) }).unwrap();
+        }
+        tx.send(done(1, vec![5, 6, 7])).unwrap();
+        let mut streamed = Vec::new();
+        let result = loop {
+            match h.next_event().expect("stream ended early") {
+                TokenEvent::Token { id, .. } => streamed.push(id),
+                TokenEvent::Done { result } => break result,
+                _ => {}
+            }
+        };
+        assert_eq!(streamed, result.generated);
+    }
+
+    #[test]
+    fn join_timeout_trips_on_a_silent_engine_but_not_on_progress() {
+        use std::time::Duration;
+        let (h, tx, _cancel) = RequestHandle::channel(8);
+        // Keep the sender alive and silent: join_timeout must trip.
+        let err = h.join_timeout(Duration::from_millis(20)).unwrap_err().to_string();
+        assert!(err.contains("no event"), "{err}");
+        drop(tx);
+        // With steady events the same bound never trips.
+        let (h, tx, _cancel) = RequestHandle::channel(9);
+        std::thread::spawn(move || {
+            for t in 0..5u32 {
+                tx.send(TokenEvent::Token { id: t, logprob: None }).unwrap();
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            tx.send(done(9, (0..5).collect())).unwrap();
+        });
+        let r = h.join_timeout(Duration::from_millis(500)).unwrap();
+        assert_eq!(r.generated.len(), 5);
+    }
+
+    #[test]
+    fn join_fails_on_failed_event() {
+        let (h, tx, _cancel) = RequestHandle::channel(3);
+        tx.send(TokenEvent::Failed { id: 3, error: "boom".into() }).unwrap();
+        let err = h.join().unwrap_err().to_string();
+        assert!(err.contains("boom"), "{err}");
+    }
+
+    #[test]
+    fn join_fails_when_engine_drops_the_stream() {
+        let (h, tx, _cancel) = RequestHandle::channel(9);
+        drop(tx);
+        assert!(h.join().is_err());
+    }
+
+    #[test]
+    fn cancel_flag_is_shared_with_the_engine() {
+        let (h, _tx, cancel) = RequestHandle::channel(2);
+        assert!(!cancel.load(Ordering::Relaxed));
+        h.cancel();
+        assert!(cancel.load(Ordering::Relaxed));
+        assert!(h.is_cancelled());
+    }
+
+    #[test]
+    fn try_event_is_non_blocking() {
+        let (h, tx, _cancel) = RequestHandle::channel(4);
+        assert!(h.try_event().is_none());
+        tx.send(TokenEvent::Token { id: 1, logprob: None }).unwrap();
+        assert!(matches!(h.try_event(), Some(TokenEvent::Token { id: 1, .. })));
+    }
+}

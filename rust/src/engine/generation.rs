@@ -1,94 +1,216 @@
-//! Single-node (dense) generation loop — the baseline path and the
-//! engine the quickstart example uses. Multi-node generation lives in
+//! Single-node (dense) engine over the whole-model decode artifact —
+//! the baseline path, now behind the streaming [`Engine`] API. The PJRT
+//! runtime lives on a dedicated worker thread that serves submitted
+//! requests FIFO, streaming [`TokenEvent`]s back and honouring
+//! cancellation between engine steps. Multi-node generation lives in
 //! `cluster::live` and produces the same tokens (verified by the
 //! integration tests) because both run the same artifacts.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::engine::request::{Request, RequestResult};
-use crate::engine::sampling::Sampler;
+use crate::engine::api::{Engine, RequestHandle, TokenEvent};
+use crate::engine::request::{FinishReason, Request, RequestResult};
 use crate::metrics::{RunMetrics, TokenBreakdown};
-use crate::runtime::{HostTensor, NanoRuntime};
+use crate::runtime::{HostTensor, Manifest, NanoRuntime, TransferStats};
 use crate::util::rng::Rng;
 
-/// Dense single-process engine over the whole-model decode artifact.
+struct Job {
+    req: Request,
+    submitted: Instant,
+    events: Sender<TokenEvent>,
+    cancel: Arc<AtomicBool>,
+}
+
+/// Dense single-process engine: a handle to the worker thread that owns
+/// the runtime. Dropping it drains the queue and joins the thread.
 pub struct DenseEngine {
-    rt: NanoRuntime,
-    sampler: Sampler,
-    rng: Rng,
+    tx: Option<Sender<Job>>,
+    worker: Option<JoinHandle<()>>,
+    manifest: Manifest,
 }
 
 impl DenseEngine {
-    pub fn load(artifacts: &Path, sampler: Sampler, seed: u64) -> Result<DenseEngine> {
-        let rt = NanoRuntime::load(artifacts, true)?;
-        Ok(DenseEngine { rt, sampler, rng: Rng::new(seed) })
-    }
-
-    pub fn runtime(&self) -> &NanoRuntime {
-        &self.rt
-    }
-
-    /// Serve one request: prefill the prompt token-by-token, then decode
-    /// `max_new_tokens`, collecting wall-clock metrics.
-    pub fn serve(&mut self, req: &Request) -> Result<RequestResult> {
-        let mut metrics = RunMetrics::default();
-        let mut kc: HostTensor = self.rt.empty_dense_cache();
-        let mut vc: HostTensor = self.rt.empty_dense_cache();
-        let mut pos = 0usize;
-        let max_seq = self.rt.manifest.max_seq;
-        let mut last_logits: Vec<f32> = Vec::new();
-
-        self.rt.take_transfer_stats(); // exclude warmup/load transfers
-        for &tok in &req.prompt {
-            anyhow::ensure!(pos < max_seq, "prompt exceeds max_seq {max_seq}");
-            let t0 = Instant::now();
-            let (logits, k2, v2) = self.rt.dense_step(tok, &kc, &vc, pos)?;
-            kc = k2;
-            vc = v2;
-            last_logits = logits;
-            pos += 1;
-            let ts = self.rt.take_transfer_stats();
-            metrics.prefill.push(TokenBreakdown {
-                moe_ns: 0,
-                comm_ns: 0,
-                misc_ns: t0.elapsed().as_nanos() as u64,
-                h2d_ns: ts.h2d_ns,
-                d2h_ns: ts.d2h_ns,
-                h2d_bytes: ts.h2d_bytes,
-                d2h_bytes: ts.d2h_bytes,
-                ..Default::default()
-            });
+    /// Load the artifacts and spawn the worker (which compiles the dense
+    /// artifact set on the PJRT CPU client before reporting ready).
+    pub fn load(artifacts: &Path) -> Result<DenseEngine> {
+        let manifest = Manifest::load(artifacts)?;
+        let dir = artifacts.to_path_buf();
+        let (tx, rx) = channel::<Job>();
+        let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
+        let worker = std::thread::spawn(move || {
+            let rt = match NanoRuntime::load(&dir, true) {
+                Ok(rt) => {
+                    let _ = ready_tx.send(Ok(()));
+                    rt
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            while let Ok(job) = rx.recv() {
+                serve_job(&rt, job);
+            }
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(DenseEngine { tx: Some(tx), worker: Some(worker), manifest }),
+            Ok(Err(e)) => {
+                drop(tx); // close the queue so the worker cannot outlive us
+                let _ = worker.join();
+                anyhow::bail!("dense engine failed to load: {e}")
+            }
+            Err(_) => {
+                drop(tx);
+                let _ = worker.join();
+                anyhow::bail!("dense engine worker died during load")
+            }
         }
+    }
 
-        let mut generated = Vec::with_capacity(req.max_new_tokens);
-        for _ in 0..req.max_new_tokens {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Submit a request; the single runtime serves submissions FIFO, so
+    /// later requests meter queueing delay while earlier ones decode.
+    pub fn submit(&self, req: Request) -> Result<RequestHandle> {
+        anyhow::ensure!(!req.prompt.is_empty(), "request {} has an empty prompt", req.id);
+        let (handle, events, cancel) = RequestHandle::channel(req.id);
+        let job = Job { req, submitted: Instant::now(), events, cancel };
+        self.tx
+            .as_ref()
+            .expect("queue open while engine exists")
+            .send(job)
+            .map_err(|_| anyhow::anyhow!("dense engine worker is gone"))?;
+        Ok(handle)
+    }
+}
+
+impl Engine for DenseEngine {
+    fn submit(&mut self, req: Request) -> Result<RequestHandle> {
+        DenseEngine::submit(self, req)
+    }
+}
+
+impl Drop for DenseEngine {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue; the worker drains and exits
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run one request start-to-finish on the worker thread, streaming
+/// events. Every job ends in a terminal event.
+fn serve_job(rt: &NanoRuntime, job: Job) {
+    match generate(rt, &job) {
+        Ok(result) => {
+            let _ = job.events.send(TokenEvent::Done { result });
+        }
+        Err(e) => {
+            let _ = job
+                .events
+                .send(TokenEvent::Failed { id: job.req.id, error: format!("{e:#}") });
+        }
+    }
+}
+
+fn breakdown(wall: Instant, ts: TransferStats) -> TokenBreakdown {
+    TokenBreakdown {
+        misc_ns: wall.elapsed().as_nanos() as u64,
+        h2d_ns: ts.h2d_ns,
+        d2h_ns: ts.d2h_ns,
+        h2d_bytes: ts.h2d_bytes,
+        d2h_bytes: ts.d2h_bytes,
+        ..Default::default()
+    }
+}
+
+/// Prefill the prompt token-by-token, then decode up to
+/// `max_new_tokens`, sampling with the request's own parameters and
+/// checking the cancellation flag between engine steps.
+fn generate(rt: &NanoRuntime, job: &Job) -> Result<RequestResult> {
+    let req = &job.req;
+    let mut metrics = RunMetrics {
+        queueing_ns: job.submitted.elapsed().as_nanos() as u64,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(req.sampling.seed);
+    let mut kc: HostTensor = rt.empty_dense_cache();
+    let mut vc: HostTensor = rt.empty_dense_cache();
+    let mut pos = 0usize;
+    let max_seq = rt.manifest.max_seq;
+    let mut last_logits: Vec<f32> = Vec::new();
+    let mut generated = Vec::with_capacity(req.sampling.max_new_tokens);
+    let mut finish = FinishReason::Length;
+    let mut cancelled = false;
+
+    rt.take_transfer_stats(); // exclude warmup/load transfers
+    for &tok in &req.prompt {
+        if job.cancel.load(Ordering::Relaxed) {
+            cancelled = true;
+            break;
+        }
+        anyhow::ensure!(pos < max_seq, "prompt exceeds max_seq {max_seq}");
+        let t0 = Instant::now();
+        let (logits, k2, v2) = rt.dense_step(tok, &kc, &vc, pos)?;
+        kc = k2;
+        vc = v2;
+        last_logits = logits;
+        pos += 1;
+        metrics.prefill.push(breakdown(t0, rt.take_transfer_stats()));
+    }
+
+    if !cancelled {
+        for _ in 0..req.sampling.max_new_tokens {
+            if job.cancel.load(Ordering::Relaxed) {
+                cancelled = true;
+                break;
+            }
             if pos >= max_seq {
                 break;
             }
-            let next = self.sampler.sample(&last_logits, &mut self.rng);
+            let (next, lp) = req.sampling.sampler.sample_lp(&last_logits, &mut rng);
             generated.push(next);
+            if generated.len() == 1 {
+                metrics.ttft_ns = job.submitted.elapsed().as_nanos() as u64;
+                let _ = job.events.send(TokenEvent::Started {
+                    ttft_s: metrics.ttft_ns as f64 / 1e9,
+                    queued_s: metrics.queueing_ns as f64 / 1e9,
+                });
+            }
+            if job.events.send(TokenEvent::Token { id: next, logprob: Some(lp) }).is_err() {
+                // The handle is gone: nobody can observe this stream, so
+                // decoding on would be work into the void.
+                cancelled = true;
+                break;
+            }
+            if req.sampling.stop.contains(&next) {
+                // Stop token recorded but its forward pass skipped (same
+                // semantics as the live scheduler).
+                finish = FinishReason::Stop;
+                break;
+            }
             let t0 = Instant::now();
-            let (logits, k2, v2) = self.rt.dense_step(next, &kc, &vc, pos)?;
+            let (logits, k2, v2) = rt.dense_step(next, &kc, &vc, pos)?;
             kc = k2;
             vc = v2;
             last_logits = logits;
             pos += 1;
-            let ts = self.rt.take_transfer_stats();
-            metrics.decode.push(TokenBreakdown {
-                moe_ns: 0,
-                comm_ns: 0,
-                misc_ns: t0.elapsed().as_nanos() as u64,
-                h2d_ns: ts.h2d_ns,
-                d2h_ns: ts.d2h_ns,
-                h2d_bytes: ts.h2d_bytes,
-                d2h_bytes: ts.d2h_bytes,
-                ..Default::default()
-            });
+            metrics.decode.push(breakdown(t0, rt.take_transfer_stats()));
         }
-
-        Ok(RequestResult { id: req.id, generated, metrics })
     }
+    if cancelled {
+        finish = FinishReason::Cancelled;
+    }
+    metrics.latency_ns = job.submitted.elapsed().as_nanos() as u64;
+    Ok(RequestResult { id: req.id, generated, finish, metrics })
 }

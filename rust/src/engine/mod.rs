@@ -1,13 +1,17 @@
-//! Token-generation engine: sampling, requests, and the single-node
-//! (dense) generation loop over the PJRT runtime. The multi-node loop
-//! lives in `cluster::live` and shares `sampling`/`request`.
+//! Token-generation engines behind one streaming serving API
+//! (`engine::api`): sampling, requests, the single-node (dense)
+//! generation worker, and the multi-user schedulers. The multi-node
+//! serve loops live in `cluster::live` and implement the same
+//! [`Engine`] trait.
 
+pub mod api;
 pub mod generation;
-pub mod scheduler;
 pub mod request;
 pub mod sampling;
+pub mod scheduler;
 
+pub use api::{Engine, RequestHandle, TokenEvent};
 pub use generation::DenseEngine;
-pub use scheduler::{serve_workload, SchedPolicy, SchedReport};
-pub use request::{Request, RequestResult};
-pub use sampling::Sampler;
+pub use request::{FinishReason, Request, RequestResult};
+pub use sampling::{Sampler, SamplingParams};
+pub use scheduler::{serve_workload, SchedOutcome, SchedPolicy, SchedReport, SimEngine};

@@ -1,27 +1,135 @@
-//! Requests and results for the serving loop.
+//! Requests and results for the serving engines.
 
+use anyhow::Result;
+
+use crate::engine::sampling::{Sampler, SamplingParams};
 use crate::metrics::RunMetrics;
 
 /// One generation request (the paper's workload is single-user, prompt
-/// and generation capped at 128 tokens; Table 5 uses 2000/256).
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// and generation capped at 128 tokens; Table 5 uses 2000/256). Carries
+/// its own per-request [`SamplingParams`] — sampler kind, seed, stop
+/// set, generation budget.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<u32>,
-    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
 }
 
 impl Request {
+    /// Greedy request with the given generation budget.
     pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
-        Request { id, prompt, max_new_tokens }
+        Request { id, prompt, sampling: SamplingParams::greedy(max_new_tokens) }
+    }
+
+    pub fn with_sampling(id: u64, prompt: Vec<u32>, sampling: SamplingParams) -> Request {
+        Request { id, prompt, sampling }
     }
 
     /// Synthetic prompt of `len` tokens over `vocab` (seeded by id).
-    pub fn synthetic(id: u64, len: usize, vocab: usize) -> Request {
+    pub fn synthetic(id: u64, len: usize, vocab: usize, max_new_tokens: usize) -> Request {
         let mut rng = crate::util::rng::Rng::new(0xFEED ^ id);
         let prompt = (0..len).map(|_| rng.below(vocab as u64) as u32).collect();
-        Request { id, prompt, max_new_tokens: 128 }
+        Request::new(id, prompt, max_new_tokens)
     }
+
+    pub fn max_new_tokens(&self) -> usize {
+        self.sampling.max_new_tokens
+    }
+
+    /// Wire codec for the live cluster's admission broadcast (the leader
+    /// ships the full request — prompt and sampling — to its followers,
+    /// so only node 0 needs to know the workload).
+    pub fn encode(&self) -> Vec<u8> {
+        let s = &self.sampling;
+        let mut b = Vec::with_capacity(40 + 4 * (self.prompt.len() + s.stop.len()));
+        b.extend_from_slice(&self.id.to_le_bytes());
+        b.extend_from_slice(&(self.prompt.len() as u32).to_le_bytes());
+        for &t in &self.prompt {
+            b.extend_from_slice(&t.to_le_bytes());
+        }
+        b.extend_from_slice(&(s.max_new_tokens as u32).to_le_bytes());
+        b.extend_from_slice(&s.seed.to_le_bytes());
+        b.extend_from_slice(&(s.stop.len() as u32).to_le_bytes());
+        for &t in &s.stop {
+            b.extend_from_slice(&t.to_le_bytes());
+        }
+        match &s.sampler {
+            Sampler::Greedy => b.push(0),
+            Sampler::TopK { k, temperature } => {
+                b.push(1);
+                b.extend_from_slice(&(*k as u32).to_le_bytes());
+                b.extend_from_slice(&temperature.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    /// Inverse of [`Request::encode`]; rejects truncated or trailing
+    /// bytes (a corrupt admission message must not half-apply).
+    pub fn decode(bytes: &[u8]) -> Result<Request> {
+        let mut c = Cursor { b: bytes, at: 0 };
+        let id = c.u64()?;
+        let n = c.u32()? as usize;
+        let prompt = (0..n).map(|_| c.u32()).collect::<Result<Vec<u32>>>()?;
+        let max_new_tokens = c.u32()? as usize;
+        let seed = c.u64()?;
+        let n = c.u32()? as usize;
+        let stop = (0..n).map(|_| c.u32()).collect::<Result<Vec<u32>>>()?;
+        let sampler = match c.u8()? {
+            0 => Sampler::Greedy,
+            1 => Sampler::TopK { k: c.u32()? as usize, temperature: c.f64()? },
+            k => anyhow::bail!("unknown sampler kind {k} on the wire"),
+        };
+        anyhow::ensure!(c.at == bytes.len(), "trailing bytes in encoded request");
+        Ok(Request {
+            id,
+            prompt,
+            sampling: SamplingParams { sampler, seed, stop, max_new_tokens },
+        })
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(self.at + n <= self.b.len(), "truncated encoded request");
+        let s = &self.b[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Why a request stopped generating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Budget (`max_new_tokens`) or context window (`max_seq`) exhausted.
+    Length,
+    /// A stop token was sampled (it is the last entry of `generated`).
+    Stop,
+    /// `RequestHandle::cancel()` — `generated` holds the prefix decoded
+    /// before the engine observed the flag.
+    Cancelled,
 }
 
 /// Completed request.
@@ -29,6 +137,7 @@ impl Request {
 pub struct RequestResult {
     pub id: u64,
     pub generated: Vec<u32>,
+    pub finish: FinishReason,
     pub metrics: RunMetrics,
 }
 
@@ -38,14 +147,46 @@ mod tests {
 
     #[test]
     fn synthetic_prompt_in_vocab() {
-        let r = Request::synthetic(7, 128, 512);
+        let r = Request::synthetic(7, 128, 512, 16);
         assert_eq!(r.prompt.len(), 128);
         assert!(r.prompt.iter().all(|&t| t < 512));
+        assert_eq!(r.max_new_tokens(), 16);
     }
 
     #[test]
     fn synthetic_is_deterministic_per_id() {
-        assert_eq!(Request::synthetic(1, 16, 512), Request::synthetic(1, 16, 512));
-        assert_ne!(Request::synthetic(1, 16, 512), Request::synthetic(2, 16, 512));
+        assert_eq!(
+            Request::synthetic(1, 16, 512, 8),
+            Request::synthetic(1, 16, 512, 8)
+        );
+        assert_ne!(
+            Request::synthetic(1, 16, 512, 8),
+            Request::synthetic(2, 16, 512, 8)
+        );
+    }
+
+    #[test]
+    fn codec_roundtrips_greedy() {
+        let r = Request::new(99, vec![1, 2, 3, 500], 32);
+        assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn codec_roundtrips_topk_with_stops() {
+        let mut r = Request::synthetic(5, 8, 512, 64);
+        r.sampling.sampler = Sampler::TopK { k: 7, temperature: 0.65 };
+        r.sampling.seed = 0xDEADBEEF;
+        r.sampling.stop = vec![0, 11, 499];
+        assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn codec_rejects_truncation_and_trailing_bytes() {
+        let bytes = Request::new(1, vec![4, 5], 8).encode();
+        assert!(Request::decode(&bytes[..bytes.len() - 1]).is_err());
+        let mut longer = bytes.clone();
+        longer.push(0);
+        assert!(Request::decode(&longer).is_err());
+        assert!(Request::decode(&[]).is_err());
     }
 }

@@ -1,4 +1,5 @@
-//! Next-token sampling over the LM-head logits.
+//! Next-token sampling over the LM-head logits, and the per-request
+//! sampling configuration of the streaming serving API.
 
 use crate::util::rng::Rng;
 
@@ -11,10 +12,53 @@ pub enum Sampler {
     TopK { k: usize, temperature: f64 },
 }
 
+/// Per-request sampling parameters (the streaming API replaces the old
+/// engine-global `Sampler` with these: every request carries its own
+/// sampler kind, RNG seed, stop set and generation budget).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    pub sampler: Sampler,
+    /// Seed of the request's private RNG stream. On the decentralized
+    /// live topology every node derives the identical stream from it
+    /// (deterministic replicated sampling), so it rides the admission
+    /// broadcast.
+    pub seed: u64,
+    /// Generation stops once a sampled token is in this set. The stop
+    /// token IS included in the output (finish reason `Stop`) — keeping
+    /// it visible makes replicated-sampling nodes trivially consistent.
+    pub stop: Vec<u32>,
+    pub max_new_tokens: usize,
+}
+
+impl SamplingParams {
+    /// Greedy decoding with the default seed and no stop tokens.
+    pub fn greedy(max_new_tokens: usize) -> SamplingParams {
+        SamplingParams {
+            sampler: Sampler::Greedy,
+            seed: 0xD8B2,
+            stop: Vec::new(),
+            max_new_tokens,
+        }
+    }
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams::greedy(128)
+    }
+}
+
 impl Sampler {
     /// Pick the next token id from `logits`.
     pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
-        match self {
+        self.sample_lp(logits, rng).0
+    }
+
+    /// Pick the next token id and return its log-probability under the
+    /// FULL softmax of `logits` (temperature-free): streamed logprobs
+    /// stay comparable across sampler kinds and requests.
+    pub fn sample_lp(&self, logits: &[f32], rng: &mut Rng) -> (u32, f32) {
+        let tok = match self {
             Sampler::Greedy => argmax(logits) as u32,
             Sampler::TopK { k, temperature } => {
                 let k = (*k).clamp(1, logits.len());
@@ -31,15 +75,18 @@ impl Sampler {
                     .collect();
                 let z: f64 = exps.iter().sum();
                 let mut u = rng.f64() * z;
+                let mut chosen = idx[k - 1];
                 for (j, &e) in exps.iter().enumerate() {
                     u -= e;
                     if u <= 0.0 {
-                        return idx[j] as u32;
+                        chosen = idx[j];
+                        break;
                     }
                 }
-                idx[k - 1] as u32
+                chosen as u32
             }
-        }
+        };
+        (tok, log_softmax_at(logits, tok as usize))
     }
 }
 
@@ -51,6 +98,13 @@ fn argmax(xs: &[f32]) -> usize {
         }
     }
     best
+}
+
+/// `ln softmax(logits)[i]`, computed stably (f64 accumulation).
+fn log_softmax_at(logits: &[f32], i: usize) -> f32 {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let z: f64 = logits.iter().map(|&x| ((x - m) as f64).exp()).sum();
+    ((logits[i] - m) as f64 - z.ln()) as f32
 }
 
 #[cfg(test)]
@@ -100,5 +154,35 @@ mod tests {
         assert_eq!(Sampler::Greedy.sample(&[1.0], &mut rng), 0);
         let s = Sampler::TopK { k: 5, temperature: 1.0 };
         assert_eq!(s.sample(&[1.0], &mut rng), 0);
+    }
+
+    #[test]
+    fn logprob_is_full_softmax() {
+        let mut rng = Rng::new(6);
+        // Uniform logits: every token has probability 1/4.
+        let (_, lp) = Sampler::Greedy.sample_lp(&[2.0, 2.0, 2.0, 2.0], &mut rng);
+        assert!((lp - (0.25f32).ln()).abs() < 1e-5, "{lp}");
+        // Singleton vocab: probability 1.
+        let (_, lp) = Sampler::Greedy.sample_lp(&[3.7], &mut rng);
+        assert!(lp.abs() < 1e-6, "{lp}");
+    }
+
+    #[test]
+    fn logprob_tracks_the_chosen_token() {
+        let mut rng = Rng::new(7);
+        let logits = vec![0.0, 5.0, 0.0];
+        let (tok, lp) = Sampler::Greedy.sample_lp(&logits, &mut rng);
+        assert_eq!(tok, 1);
+        // p ~= e^5 / (e^5 + 2) => logprob just under 0.
+        assert!(lp < 0.0 && lp > -0.05, "{lp}");
+    }
+
+    #[test]
+    fn sampling_params_defaults() {
+        let p = SamplingParams::default();
+        assert_eq!(p.max_new_tokens, 128);
+        assert_eq!(p.sampler, Sampler::Greedy);
+        assert!(p.stop.is_empty());
+        assert_eq!(SamplingParams::greedy(7).max_new_tokens, 7);
     }
 }

@@ -143,15 +143,36 @@ impl PhaseMetrics {
     }
 }
 
-/// Full run report: prefill + decode phases, plus wall-clock bookends.
+/// Full run report: prefill + decode phases, plus wall-clock bookends
+/// and the serving-surface timing the streaming engines meter.
 #[derive(Debug, Clone, Default)]
 pub struct RunMetrics {
     pub prefill: PhaseMetrics,
     pub decode: PhaseMetrics,
     pub warmup_ns: Nanos,
+    /// Submission → admission (the request left the queue and owns
+    /// decode state). Wall ns on the live engines, virtual ns in the
+    /// simulator; 0 when not metered.
+    pub queueing_ns: Nanos,
+    /// Submission → first generated token out (time to first token).
+    pub ttft_ns: Nanos,
+    /// Submission → terminal event (end-to-end request latency).
+    pub latency_ns: Nanos,
 }
 
 impl RunMetrics {
+    pub fn queueing_s(&self) -> f64 {
+        self.queueing_ns as f64 / 1e9
+    }
+
+    pub fn ttft_s(&self) -> f64 {
+        self.ttft_ns as f64 / 1e9
+    }
+
+    pub fn latency_s(&self) -> f64 {
+        self.latency_ns as f64 / 1e9
+    }
+
     /// Render a Table 3-style row: `gen TP | s/token | MoE Comm Misc`.
     pub fn decode_row(&self, label: &str) -> Vec<String> {
         let (moe, comm, misc) = self.decode.breakdown_secs();
@@ -236,6 +257,20 @@ mod tests {
         let p = PhaseMetrics::default();
         assert_eq!(p.tokens_per_sec(), 0.0);
         assert_eq!(p.comm_fraction(), 0.0);
+    }
+
+    #[test]
+    fn serving_timing_accessors_convert_ns() {
+        let r = RunMetrics {
+            queueing_ns: 500_000_000,
+            ttft_ns: 1_500_000_000,
+            latency_ns: 3_000_000_000,
+            ..Default::default()
+        };
+        assert!((r.queueing_s() - 0.5).abs() < 1e-12);
+        assert!((r.ttft_s() - 1.5).abs() < 1e-12);
+        assert!((r.latency_s() - 3.0).abs() < 1e-12);
+        assert_eq!(RunMetrics::default().ttft_ns, 0);
     }
 
     #[test]

@@ -338,6 +338,17 @@ pub fn tag(phase: u8, layer: u32, token: u32) -> u64 {
     ((phase as u64) << 56) | ((layer as u64 & 0xFF_FFFF) << 32) | token as u64
 }
 
+/// Pack a per-request application tag from (phase, request seq, layer,
+/// step) — 8/16/8/32 bits. The live scheduler interleaves in-flight
+/// requests at iteration level, so data-plane messages demultiplex by
+/// the request's admission sequence number as well as (layer, step).
+pub fn req_tag(phase: u8, req: u16, layer: u32, step: u32) -> u64 {
+    ((phase as u64) << 56)
+        | ((req as u64) << 40)
+        | ((layer as u64 & 0xFF) << 32)
+        | step as u64
+}
+
 /// f32 slice → little-endian bytes.
 pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(xs.len() * 4);
@@ -508,5 +519,14 @@ mod tests {
         assert_ne!(a, tag(2, 2, 3));
         assert_ne!(a, tag(1, 3, 3));
         assert_ne!(a, tag(1, 2, 4));
+    }
+
+    #[test]
+    fn req_tag_packing_is_injective_across_fields() {
+        let a = req_tag(1, 9, 2, 3);
+        assert_ne!(a, req_tag(2, 9, 2, 3));
+        assert_ne!(a, req_tag(1, 10, 2, 3));
+        assert_ne!(a, req_tag(1, 9, 3, 3));
+        assert_ne!(a, req_tag(1, 9, 2, 4));
     }
 }

@@ -24,11 +24,7 @@ impl Workload {
     /// The paper's single-user workload: back-to-back requests.
     pub fn single_user(n: usize, prompt: usize, gen: usize) -> Workload {
         let requests = (0..n)
-            .map(|i| {
-                let mut r = Request::synthetic(i as u64, prompt, 512);
-                r.max_new_tokens = gen;
-                (0.0, r)
-            })
+            .map(|i| (0.0, Request::synthetic(i as u64, prompt, 512, gen)))
             .collect();
         Workload { requests }
     }
@@ -41,9 +37,7 @@ impl Workload {
         let requests = (0..n)
             .map(|i| {
                 t += rng.exponential(rate);
-                let mut r = Request::synthetic(i as u64, prompt, 512);
-                r.max_new_tokens = gen;
-                (t, r)
+                (t, Request::synthetic(i as u64, prompt, 512, gen))
             })
             .collect();
         Workload { requests }

@@ -66,6 +66,20 @@ fn net_bench_rejects_bad_input() {
 }
 
 #[test]
+fn serve_and_generate_validate_args() {
+    // All of these fail during flag parsing/validation, before any
+    // cluster (or artifacts) are touched.
+    assert!(run("serve --concurrency 0").is_err());
+    assert!(run("serve --transport carrier-pigeon").is_err());
+    assert!(run("serve --policy sjf").is_err());
+    assert!(run("serve --requests 0").is_err());
+    assert!(run("serve --sampler bogus").is_err());
+    assert!(run("serve --stop 1,x,3").is_err());
+    assert!(run("generate --sampler bogus").is_err());
+    assert!(run("generate --stop ,,a").is_err());
+}
+
+#[test]
 fn node_and_launch_validate_args() {
     // `node` needs an id and a hosts file before it touches the network.
     assert!(run("node").is_err());

@@ -1,13 +1,19 @@
 //! Integration: the live threaded cluster (decentralized P-L_R-D wire
 //! protocol AND centralized Figs. 2–3 protocol) generates exactly the
 //! same tokens as the dense single-node engine — the correctness claim
-//! behind Table 3's comparisons.
+//! behind Table 3's comparisons — now through the streaming serving
+//! API: tokens observed event-by-event must equal the joined result,
+//! concurrent (iteration-level interleaved) serving must be
+//! token-identical to serial serving, and cancellation must free a
+//! request's decode state without disturbing the others.
 
 use std::path::{Path, PathBuf};
 
 use apple_moe::cluster::live::{LiveCluster, LiveConfig};
 use apple_moe::config::{Balancing, Topology};
-use apple_moe::engine::{DenseEngine, Request, Sampler};
+use apple_moe::engine::request::RequestResult;
+use apple_moe::engine::scheduler::SchedPolicy;
+use apple_moe::engine::{DenseEngine, FinishReason, Request, TokenEvent};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -20,8 +26,18 @@ fn artifacts_dir() -> Option<PathBuf> {
 }
 
 fn dense_tokens(dir: &Path, req: &Request) -> Vec<u32> {
-    let mut engine = DenseEngine::load(dir, Sampler::Greedy, 1).unwrap();
-    engine.serve(req).unwrap().generated
+    let engine = DenseEngine::load(dir).unwrap();
+    engine.submit(req.clone()).unwrap().join().unwrap().generated
+}
+
+/// Blocking single-request serve on the streaming API (inactivity-
+/// bounded so a wedged cluster fails the test instead of hanging it).
+fn serve_one(cluster: &LiveCluster, req: &Request) -> RequestResult {
+    cluster
+        .submit(req.clone())
+        .unwrap()
+        .join_timeout(std::time::Duration::from_secs(600))
+        .unwrap()
 }
 
 #[test]
@@ -33,12 +49,16 @@ fn decentralized_two_nodes_matches_dense() {
 
     let cfg = LiveConfig::new(dir.clone(), 2);
     let cluster = LiveCluster::start(cfg).unwrap();
-    let res = cluster.serve(req).unwrap();
+    let res = serve_one(&cluster, &req);
     cluster.shutdown();
     assert_eq!(res.generated, want, "distributed generation diverged");
     assert_eq!(res.metrics.decode.tokens, 12);
+    assert_eq!(res.finish, FinishReason::Length);
     // The all-reduce path must actually have been exercised.
     assert!(res.metrics.decode.breakdown_secs().1 > 0.0, "no comm time?");
+    // Serving-surface timing is metered on real hardware now.
+    assert!(res.metrics.ttft_ns > 0, "ttft not metered");
+    assert!(res.metrics.latency_ns >= res.metrics.ttft_ns);
 }
 
 #[test]
@@ -51,7 +71,7 @@ fn centralized_two_nodes_matches_dense() {
     cfg.topology = Topology::Centralized;
     cfg.balancing = Balancing::SelectedOnly;
     let cluster = LiveCluster::start(cfg).unwrap();
-    let res = cluster.serve(req).unwrap();
+    let res = serve_one(&cluster, &req);
     cluster.shutdown();
     assert_eq!(res.generated, want, "centralized generation diverged");
 }
@@ -67,7 +87,7 @@ fn busy_full_loading_matches_dense() {
     let mut cfg = LiveConfig::new(dir.clone(), 2);
     cfg.balancing = Balancing::BusyFull;
     let cluster = LiveCluster::start(cfg).unwrap();
-    let res = cluster.serve(req).unwrap();
+    let res = serve_one(&cluster, &req);
     cluster.shutdown();
     assert_eq!(res.generated, want, "busy-full generation diverged");
 }
@@ -78,7 +98,7 @@ fn single_node_cluster_works() {
     let req = Request::new(4, vec![42], 5);
     let want = dense_tokens(&dir, &req);
     let cluster = LiveCluster::start(LiveConfig::new(dir.clone(), 1)).unwrap();
-    let res = cluster.serve(req).unwrap();
+    let res = serve_one(&cluster, &req);
     cluster.shutdown();
     assert_eq!(res.generated, want);
 }
@@ -90,7 +110,7 @@ fn serve_on_path(
     topology: Topology,
     device_resident: bool,
     req: &Request,
-) -> apple_moe::engine::request::RequestResult {
+) -> RequestResult {
     let mut cfg = LiveConfig::new(dir.to_path_buf(), nodes);
     cfg.topology = topology;
     if topology == Topology::Centralized {
@@ -98,7 +118,7 @@ fn serve_on_path(
     }
     cfg.device_resident = device_resident;
     let cluster = LiveCluster::start(cfg).unwrap();
-    let res = cluster.serve(req.clone()).unwrap();
+    let res = serve_one(&cluster, req);
     cluster.shutdown();
     res
 }
@@ -157,15 +177,229 @@ fn device_resident_cluster_matches_host_path() {
 fn multiple_requests_reuse_cluster() {
     let Some(dir) = artifacts_dir() else { return };
     let cluster = LiveCluster::start(LiveConfig::new(dir.clone(), 2)).unwrap();
-    let r1 = cluster.serve(Request::new(5, vec![1, 2, 3], 4)).unwrap();
-    let r2 = cluster.serve(Request::new(6, vec![9, 9], 4)).unwrap();
+    let r1 = serve_one(&cluster, &Request::new(5, vec![1, 2, 3], 4));
+    let r2 = serve_one(&cluster, &Request::new(6, vec![9, 9], 4));
     cluster.shutdown();
     assert_eq!(r1.generated.len(), 4);
     assert_eq!(r2.generated.len(), 4);
     // Same prompts must reproduce across a fresh cluster (KV state and
     // sampler reset per request).
     let cluster2 = LiveCluster::start(LiveConfig::new(dir, 2)).unwrap();
-    let r1b = cluster2.serve(Request::new(7, vec![1, 2, 3], 4)).unwrap();
+    let r1b = serve_one(&cluster2, &Request::new(7, vec![1, 2, 3], 4));
     cluster2.shutdown();
     assert_eq!(r1.generated, r1b.generated);
+}
+
+/// Streaming equivalence (satellite): tokens observed event-by-event
+/// via `TokenEvent::Token` are identical to `join()`'s
+/// `RequestResult.generated`, on both the dense engine and the live
+/// cluster; `Started` precedes the first token and carries the TTFT.
+#[test]
+fn streamed_tokens_match_joined_result() {
+    let Some(dir) = artifacts_dir() else { return };
+    let req = Request::new(11, vec![7, 77, 177], 6);
+    let want = dense_tokens(&dir, &req);
+
+    // Dense engine: drain the stream by hand.
+    let engine = DenseEngine::load(&dir).unwrap();
+    let handle = engine.submit(req.clone()).unwrap();
+    let (streamed, result) = drain(&handle);
+    assert_eq!(streamed, result.generated, "dense stream != joined result");
+    assert_eq!(result.generated, want);
+
+    // Live 2-node cluster: same contract over the fabric.
+    let cluster = LiveCluster::start(LiveConfig::new(dir, 2)).unwrap();
+    let handle = cluster.submit(req).unwrap();
+    let (streamed, result) = drain(&handle);
+    cluster.shutdown();
+    assert_eq!(streamed, result.generated, "live stream != joined result");
+    assert_eq!(result.generated, want);
+}
+
+/// Collect (streamed token ids, final result) from a handle, asserting
+/// event-order invariants along the way.
+fn drain(handle: &apple_moe::engine::RequestHandle) -> (Vec<u32>, RequestResult) {
+    let mut streamed = Vec::new();
+    let mut started = false;
+    loop {
+        match handle.next_event().expect("stream ended without terminal event") {
+            TokenEvent::Started { ttft_s, .. } => {
+                assert!(!started, "Started emitted twice");
+                assert!(streamed.is_empty(), "Started must precede the first token");
+                assert!(ttft_s > 0.0);
+                started = true;
+            }
+            TokenEvent::Token { id, logprob } => {
+                assert!(started, "Token before Started");
+                assert!(logprob.is_some(), "live engines report logprobs");
+                streamed.push(id);
+            }
+            TokenEvent::Done { result } => {
+                assert!(started || result.generated.is_empty());
+                return (streamed, result);
+            }
+            TokenEvent::Failed { error, .. } => panic!("request failed: {error}"),
+        }
+    }
+}
+
+/// The acceptance criterion: ≥2 interleaved requests on the live
+/// cluster, round-robin at iteration level, token-identical per request
+/// to serial serving — on both topologies — with queueing metered for
+/// the request that waits for admission.
+#[test]
+fn concurrent_round_robin_matches_serial() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reqs = [
+        Request::new(20, vec![3, 141, 59, 26], 6),
+        Request::new(21, vec![10, 20, 30], 6),
+        Request::new(22, vec![100, 200], 5),
+    ];
+
+    for topology in [Topology::Decentralized, Topology::Centralized] {
+        let mk = |max_active: usize, policy: SchedPolicy| {
+            let mut cfg = LiveConfig::new(dir.clone(), 2);
+            cfg.topology = topology;
+            if topology == Topology::Centralized {
+                cfg.balancing = Balancing::SelectedOnly;
+            }
+            cfg.max_active = max_active;
+            cfg.policy = policy;
+            LiveCluster::start(cfg).unwrap()
+        };
+
+        // Serial reference: one at a time, run to completion.
+        let serial = mk(1, SchedPolicy::RunToCompletion);
+        let want: Vec<Vec<u32>> =
+            reqs.iter().map(|r| serve_one(&serial, r).generated).collect();
+        serial.shutdown();
+
+        // Concurrent: submit all three, concurrency 2, round-robin.
+        let cluster = mk(2, SchedPolicy::RoundRobin);
+        let handles: Vec<_> =
+            reqs.iter().map(|r| cluster.submit(r.clone()).unwrap()).collect();
+        let results: Vec<RequestResult> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        cluster.shutdown();
+
+        for (r, w) in results.iter().zip(&want) {
+            assert_eq!(
+                &r.generated, w,
+                "interleaved tokens diverge from serial ({topology:?}, req {})",
+                r.id
+            );
+        }
+        // Interleaving evidence: the second request's first token came
+        // out BEFORE the first request finished (round-robin), which
+        // serial scheduling cannot do.
+        assert!(
+            results[1].metrics.ttft_s() < results[0].metrics.latency_s(),
+            "no interleaving observed ({topology:?}): ttft[1]={} vs latency[0]={}",
+            results[1].metrics.ttft_s(),
+            results[0].metrics.latency_s()
+        );
+        // The third request had to wait for an admission slot: its
+        // queueing delay spans at least until the first finisher freed
+        // one, so it must exceed request 0's time-to-first-token.
+        assert!(
+            results[2].metrics.queueing_s() > results[0].metrics.ttft_s(),
+            "queueing delay not metered ({topology:?}): queue[2]={} vs ttft[0]={}",
+            results[2].metrics.queueing_s(),
+            results[0].metrics.ttft_s()
+        );
+    }
+}
+
+/// Cancellation: cancelling one of two in-flight requests mid-decode
+/// frees its slot while the other request (and a subsequently submitted
+/// one) complete with unchanged tokens.
+#[test]
+fn cancel_mid_decode_keeps_cluster_serving() {
+    let Some(dir) = artifacts_dir() else { return };
+    let long = Request::new(30, vec![3, 141, 59, 26], 64);
+    let short = Request::new(31, vec![10, 20, 30], 6);
+    let long_want = dense_tokens(&dir, &long);
+    let short_want = dense_tokens(&dir, &short);
+
+    let mut cfg = LiveConfig::new(dir.clone(), 2);
+    cfg.max_active = 2;
+    let cluster = LiveCluster::start(cfg).unwrap();
+    let h_long = cluster.submit(long).unwrap();
+    let h_short = cluster.submit(short).unwrap();
+
+    // Wait until the long request is demonstrably mid-decode, then
+    // cancel it.
+    let mut seen = 0;
+    while seen < 2 {
+        match h_long.next_event().expect("stream died") {
+            TokenEvent::Token { .. } => seen += 1,
+            TokenEvent::Done { .. } | TokenEvent::Failed { .. } => {
+                panic!("long request finished before cancel")
+            }
+            _ => {}
+        }
+    }
+    h_long.cancel();
+    let cancelled = h_long.join().unwrap();
+    assert_eq!(cancelled.finish, FinishReason::Cancelled);
+    assert!(
+        cancelled.generated.len() >= 2 && cancelled.generated.len() < 64,
+        "expected a partial stream, got {} tokens",
+        cancelled.generated.len()
+    );
+    // The partial tokens are a prefix of the uncancelled stream.
+    assert_eq!(
+        cancelled.generated[..],
+        long_want[..cancelled.generated.len()],
+        "cancelled prefix diverged"
+    );
+
+    // The concurrent request is untouched...
+    let short_res = h_short.join().unwrap();
+    assert_eq!(short_res.generated, short_want);
+    // ...and the cluster keeps serving new requests afterwards.
+    let after = serve_one(&cluster, &Request::new(32, vec![9, 9], 4));
+    assert_eq!(after.generated.len(), 4);
+    assert_eq!(after.finish, FinishReason::Length);
+    cluster.shutdown();
+}
+
+/// Per-request stop tokens: generation halts on the stop token (kept as
+/// the last output token, finish reason `Stop`) — replicated across the
+/// decentralized nodes.
+#[test]
+fn stop_tokens_halt_generation() {
+    let Some(dir) = artifacts_dir() else { return };
+    let req = Request::new(40, vec![3, 141, 59, 26], 8);
+    let want = dense_tokens(&dir, &req);
+    assert!(want.len() >= 3);
+    // Stop on the latest token whose value does not occur earlier in the
+    // stream (greedy decode may repeat tokens; the first occurrence is
+    // where generation must halt).
+    let j = (0..want.len())
+        .rev()
+        .find(|&j| !want[..j].contains(&want[j]))
+        .unwrap();
+
+    let mut stopped = req.clone();
+    stopped.sampling.stop = vec![want[j]];
+    let cluster = LiveCluster::start(LiveConfig::new(dir, 2)).unwrap();
+    let res = serve_one(&cluster, &stopped);
+    cluster.shutdown();
+    assert_eq!(res.finish, FinishReason::Stop);
+    assert_eq!(res.generated, want[..=j].to_vec());
+}
+
+/// The Drop satellite: a cluster abandoned without `shutdown()` (the
+/// early-`?` path in CLI commands and tests) must join its node threads
+/// and fail the in-flight work instead of leaking threads.
+#[test]
+fn dropping_cluster_joins_threads_and_fails_inflight() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cluster = LiveCluster::start(LiveConfig::new(dir, 2)).unwrap();
+    let handle = cluster.submit(Request::new(50, vec![1, 2, 3], 200)).unwrap();
+    drop(cluster); // no shutdown() — Drop must tear everything down
+    // The in-flight request ends in a terminal failure (or a closed
+    // stream), never a hang.
+    assert!(handle.join().is_err(), "abandoned request should fail");
 }

@@ -2,7 +2,10 @@
 //! spawns one OS process per node, meshed over loopback TCP
 //! (`network::tcp`), and must generate byte-identical token streams to
 //! the in-process mpsc fabric for both topologies — the acceptance
-//! criterion for the socket transport subsystem. Skips politely until
+//! criterion for the socket transport subsystem. The node processes now
+//! run the iteration-level scheduler (concurrency 2 by default), so
+//! this also asserts that interleaved serving over real sockets stays
+//! token-identical to serial in-process serving. Skips politely until
 //! `make artifacts` has run (like every live-cluster test).
 
 use std::path::{Path, PathBuf};
@@ -10,6 +13,7 @@ use std::process::Command;
 
 use apple_moe::cluster::live::{LiveCluster, LiveConfig};
 use apple_moe::config::{Balancing, Topology};
+use apple_moe::engine::scheduler::SchedPolicy;
 use apple_moe::engine::Request;
 
 const N_REQUESTS: usize = 2;
@@ -26,32 +30,37 @@ fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
-/// The same request stream `apple-moe node` derives from its flags.
+/// The same request stream `apple-moe node` derives from its flags
+/// (including the per-request seed derivation, seed ^ id).
 fn requests() -> Vec<Request> {
     (0..N_REQUESTS)
         .map(|i| {
-            let mut r = Request::synthetic(i as u64, PROMPT_TOKENS, 512);
-            r.max_new_tokens = GEN_TOKENS;
+            let mut r = Request::synthetic(i as u64, PROMPT_TOKENS, 512, GEN_TOKENS);
+            r.sampling.seed ^= i as u64;
             r
         })
         .collect()
 }
 
-/// Token streams from the threaded in-process cluster.
+/// Token streams from the threaded in-process cluster, served strictly
+/// serially (the reference the interleaved runs must reproduce).
 fn in_process_tokens(dir: &Path, topology: Topology, balancing: Balancing) -> Vec<Vec<u32>> {
     let mut cfg = LiveConfig::new(dir.to_path_buf(), 2);
     cfg.topology = topology;
     cfg.balancing = balancing;
+    cfg.max_active = 1;
+    cfg.policy = SchedPolicy::RunToCompletion;
     let cluster = LiveCluster::start(cfg).unwrap();
     let out = requests()
         .into_iter()
-        .map(|req| cluster.serve(req).unwrap().generated)
+        .map(|req| cluster.submit(req).unwrap().join().unwrap().generated)
         .collect();
     cluster.shutdown();
     out
 }
 
-/// Token streams from 2 real node processes via `apple-moe launch`.
+/// Token streams from 2 real node processes via `apple-moe launch`
+/// (which defaults to concurrency 2: the requests interleave).
 fn multi_process_tokens(dir: &Path, topology: &str, balancing: &str) -> Vec<Vec<u32>> {
     let out_path = std::env::temp_dir().join(format!(
         "apple-moe-test-{}-{topology}.tokens",
@@ -76,6 +85,8 @@ fn multi_process_tokens(dir: &Path, topology: &str, balancing: &str) -> Vec<Vec<
             prompt.as_str(),
             "--gen-tokens",
             gen.as_str(),
+            "--concurrency",
+            "2",
             "--recv-timeout-secs",
             "120",
             "--artifacts",
@@ -118,6 +129,9 @@ fn launch_centralized_matches_in_process_fabric() {
 /// `run_node` + a loopback TCP fabric inside one process: the same
 /// equivalence without process spawning (finer-grained failure mode,
 /// and it exercises `network::tcp` under cargo's default test runner).
+/// Node 0 schedules both requests concurrently (round-robin, the
+/// `req_tag` per-request demux on the wire); followers receive the
+/// workload over the admission broadcast — they are handed NO requests.
 #[test]
 fn tcp_fabric_in_process_nodes_match_mpsc_fabric() {
     let Some(dir) = artifacts_dir() else { return };
@@ -130,7 +144,11 @@ fn tcp_fabric_in_process_nodes_match_mpsc_fabric() {
         let mut cfg = LiveConfig::new(dir.clone(), 2);
         cfg.topology = Topology::Decentralized;
         cfg.balancing = Balancing::RouterAided;
-        let reqs = reqs.clone();
+        cfg.max_active = 2;
+        cfg.policy = SchedPolicy::RoundRobin;
+        // Followers get an empty request list: admissions ride the
+        // control plane.
+        let reqs = if ep.node() == 0 { reqs.clone() } else { Vec::new() };
         handles.push(std::thread::spawn(move || {
             apple_moe::cluster::live::run_node(&cfg, ep, &reqs).unwrap()
         }));
@@ -138,9 +156,61 @@ fn tcp_fabric_in_process_nodes_match_mpsc_fabric() {
     let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
     let got: Vec<Vec<u32>> = results[0].iter().map(|r| r.generated.clone()).collect();
     assert_eq!(got, want, "run_node over TCP diverges from LiveCluster");
+    assert!(results[1].is_empty(), "followers return no results");
     // Wire accounting flowed into the metrics: the decentralized
     // protocol exchanges one partial per peer per layer per token.
     let decode = &results[0][0].metrics.decode;
     assert!(decode.net_bytes > 0, "no wire traffic metered");
     assert!(decode.net_msgs > 0);
+    // And the serving surface is metered on the TCP path too.
+    assert!(results[0][0].metrics.latency_ns > 0);
+}
+
+/// `serve --transport tcp --json` end-to-end through the binary: the
+/// machine-readable report CI tracks must parse (loosely validated here
+/// by checking its key fields; CI runs a real JSON parser over it).
+#[test]
+fn serve_json_over_tcp_transport_emits_report() {
+    let Some(dir) = artifacts_dir() else { return };
+    let out = Command::new(env!("CARGO_BIN_EXE_apple-moe"))
+        .args([
+            "serve",
+            "--nodes",
+            "2",
+            "--requests",
+            "3",
+            "--concurrency",
+            "2",
+            "--prompt-tokens",
+            "4",
+            "--gen-tokens",
+            "5",
+            "--transport",
+            "tcp",
+            "--json",
+            "--artifacts",
+        ])
+        .arg(&dir)
+        .output()
+        .expect("spawning apple-moe serve");
+    assert!(
+        out.status.success(),
+        "serve --json failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8(out.stdout).expect("utf8 report");
+    let line = text.trim();
+    assert!(line.starts_with('{') && line.ends_with('}'), "not a JSON object: {line}");
+    for key in [
+        "\"requests\":[",
+        "\"ttft_s\":",
+        "\"queueing_s\":",
+        "\"latency_s\":",
+        "\"decode_tps\":",
+        "\"net_bytes\":",
+        "\"concurrency\":2",
+        "\"aggregate_tps\":",
+    ] {
+        assert!(line.contains(key), "missing {key} in {line}");
+    }
 }
