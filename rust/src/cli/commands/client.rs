@@ -1,0 +1,153 @@
+//! `apple-moe client` — a remote client for a serving daemon
+//! (`apple-moe node --id 0 --client-port P`, or `launch --client-port
+//! P`): submit requests over TCP, stream their tokens back, and report
+//! per-request TTFT / queueing / latency exactly like `serve` does —
+//! except the engine lives across the network
+//! (`engine::remote::RemoteEngine`).
+//!
+//! The synthetic request stream is derived from the same flags (and
+//! the same seed derivation, `seed ^ id`) as `serve`/`node`, so a
+//! remote run is directly comparable — token-identical, in fact — to an
+//! in-process one. `--prompt "id,id,..."` sends one explicit prompt
+//! instead. `--shutdown` sends the administrative stop after the
+//! requests drain (alone, it just stops the daemon).
+
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::cli::args::Args;
+use crate::cli::commands::{drain_handles, parse_sampling};
+use crate::engine::api::Engine;
+use crate::engine::remote::RemoteEngine;
+use crate::engine::request::Request;
+
+pub fn run(args: &mut Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("--connect host:port is required (the daemon's --client-port)"))?;
+    let shutdown = args.flag("shutdown");
+    let n_requests = args.usize_or("requests", if shutdown { 0 } else { 1 })?;
+    let prompt = args.get("prompt");
+    let prompt_tokens = args.usize_or("prompt-tokens", 16)?;
+    let gen_tokens = args.usize_or("gen-tokens", 32)?;
+    let idle_secs = args.u64_or("idle-timeout-secs", 300)?;
+    let stream = args.flag("stream");
+    let json = args.flag("json");
+    let out = args.get("out");
+    let sampling = parse_sampling(args, gen_tokens)?;
+    args.finish()?;
+
+    // Build (and validate) the request stream before dialing anything.
+    let requests: Vec<Request> = match prompt {
+        Some(p) => {
+            anyhow::ensure!(
+                n_requests <= 1,
+                "--prompt sends one explicit request; drop --requests"
+            );
+            let toks = p
+                .split(',')
+                .filter(|t| !t.trim().is_empty())
+                .map(|t| {
+                    t.trim().parse::<u32>().map_err(|_| {
+                        anyhow::anyhow!("--prompt expects comma-separated token ids, got '{t}'")
+                    })
+                })
+                .collect::<Result<Vec<u32>>>()?;
+            anyhow::ensure!(!toks.is_empty(), "--prompt has no token ids");
+            vec![Request::with_sampling(0, toks, sampling.clone())]
+        }
+        None => (0..n_requests)
+            .map(|i| {
+                let mut r = Request::synthetic(i as u64, prompt_tokens, 512, gen_tokens);
+                let mut s = sampling.clone();
+                s.seed ^= i as u64; // per-request sampler stream (matches `serve`)
+                r.sampling = s;
+                r
+            })
+            .collect(),
+    };
+
+    let mut engine = RemoteEngine::connect(&addr)?;
+    let hello = engine.server();
+    eprintln!(
+        "connected to {addr}: {}-node cluster, concurrency {}",
+        hello.n_nodes, hello.max_active
+    );
+
+    let t_all = Instant::now();
+    let mut handles = Vec::with_capacity(requests.len());
+    for req in requests {
+        handles.push(engine.submit(req)?);
+    }
+
+    // Drain all event streams as tokens arrive off the socket. The
+    // inactivity bound backstops a daemon that died without closing the
+    // connection cleanly.
+    let idle_limit = Duration::from_secs(idle_secs.max(1));
+    let drained = drain_handles(&handles, stream, json, idle_limit);
+    let wall = t_all.elapsed().as_secs_f64();
+
+    // An asked-for shutdown is sent even when a request failed: the
+    // user's intent was "drain, then stop the cluster", and leaving the
+    // daemon running on error would strand every node process.
+    if shutdown {
+        match engine.shutdown_server() {
+            Ok(()) => eprintln!("sent shutdown to the daemon"),
+            Err(e) => eprintln!("warning: could not send shutdown: {e:#}"),
+        }
+    }
+    let results = drained?;
+
+    // `--out` gets the bare token streams under BOTH report formats
+    // (machine comparison against the in-process fabric).
+    if let Some(path) = &out {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating --out {path}"))?;
+        for res in &results {
+            let toks =
+                res.generated.iter().map(u32::to_string).collect::<Vec<_>>().join(" ");
+            writeln!(f, "{toks}")?;
+        }
+    }
+
+    if json {
+        println!(
+            "{}",
+            super::serve::json_report(
+                &results,
+                wall,
+                hello.n_nodes as usize,
+                hello.max_active as usize
+            )
+        );
+        return Ok(());
+    }
+    for res in &results {
+        let toks =
+            res.generated.iter().map(u32::to_string).collect::<Vec<_>>().join(" ");
+        println!("tokens[{}]: {toks}", res.id);
+        println!(
+            "req {}: queue {:.2} s | ttft {:.2} s | latency {:.2} s | decode {:.1} tok/s | wire {:.1} KiB/token",
+            res.id,
+            res.metrics.queueing_s(),
+            res.metrics.ttft_s(),
+            res.metrics.latency_s(),
+            res.metrics.decode.tokens_per_sec(),
+            res.metrics.decode.wire_bytes_per_token() / 1024.0,
+        );
+    }
+    if !results.is_empty() {
+        let link = engine.stats();
+        eprintln!(
+            "{} request(s) in {wall:.2} s; client link: sent {} msgs / {} B, recv {} msgs / {} B",
+            results.len(),
+            link.sent_msgs,
+            link.sent_bytes,
+            link.recv_msgs,
+            link.recv_bytes
+        );
+    }
+    Ok(())
+}

@@ -19,7 +19,10 @@ pub fn run(args: &mut Args) -> Result<()> {
     let cluster = args.get("cluster");
     let topology = args.str_or("topology", "decentralized");
     let balancing = args.str_or("balancing", "router-aided");
-    let n_requests = args.usize_or("requests", 1)?;
+    let client_port = args.get("client-port");
+    // A daemon cluster defaults to no local requests (matching `node
+    // --client-port`): remote clients are the workload.
+    let n_requests = args.usize_or("requests", if client_port.is_some() { 0 } else { 1 })?;
     let prompt_tokens = args.usize_or("prompt-tokens", 16)?;
     let gen_tokens = args.usize_or("gen-tokens", 32)?;
     let concurrency = args.usize_or("concurrency", 2)?;
@@ -98,6 +101,11 @@ pub fn run(args: &mut Args) -> Result<()> {
         if id == 0 {
             if let Some(out) = &out {
                 cmd.arg("--out").arg(out);
+            }
+            // Only node 0 (the scheduler) serves remote clients; with a
+            // client port the cluster runs until `client --shutdown`.
+            if let Some(p) = &client_port {
+                cmd.arg("--client-port").arg(p);
             }
             cmd.stdout(Stdio::inherit());
         } else {

@@ -1,6 +1,7 @@
 //! One module per subcommand; each prints a paper table or runs the live
 //! system.
 
+pub mod client;
 pub mod cluster_info;
 pub mod cost;
 pub mod generate;
@@ -15,11 +16,76 @@ pub mod simulate;
 
 use anyhow::Result;
 use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
 use crate::cli::args::Args;
 use crate::config::{Balancing, NetworkProfile, Strategy, Topology};
+use crate::engine::api::{RequestHandle, TokenEvent};
+use crate::engine::request::RequestResult;
 use crate::engine::sampling::{Sampler, SamplingParams};
 use crate::engine::scheduler::SchedPolicy;
+
+/// Drain a batch of streaming handles to completion, polling so tokens
+/// from different requests interleave as they arrive (the streaming
+/// proof: events show up while other requests are still in flight).
+/// Shared by `serve` (in-process engines) and `client` (RemoteEngine
+/// across the wire). `stream` prints tokens as they decode (suppressed
+/// under `json`); the inactivity bound backstops a wedged engine or a
+/// dead connection — something no wire timeout inside the engine can
+/// see from here.
+pub(crate) fn drain_handles(
+    handles: &[RequestHandle],
+    stream: bool,
+    json: bool,
+    idle_limit: Duration,
+) -> Result<Vec<RequestResult>> {
+    let mut last_progress = Instant::now();
+    let mut done: Vec<Option<RequestResult>> = (0..handles.len()).map(|_| None).collect();
+    let mut remaining = handles.len();
+    while remaining > 0 {
+        let mut progressed = false;
+        for (i, h) in handles.iter().enumerate() {
+            if done[i].is_some() {
+                continue;
+            }
+            while let Some(ev) = h.try_event() {
+                progressed = true;
+                match ev {
+                    TokenEvent::Started { ttft_s, queued_s } => {
+                        if !json {
+                            eprintln!(
+                                "req {i}: first token at {ttft_s:.2} s (queued {queued_s:.2} s)"
+                            );
+                        }
+                    }
+                    TokenEvent::Token { id, .. } => {
+                        if stream && !json {
+                            println!("req {i} token {id}");
+                        }
+                    }
+                    TokenEvent::Done { result } => {
+                        done[i] = Some(result);
+                        remaining -= 1;
+                        break;
+                    }
+                    TokenEvent::Failed { error, .. } => {
+                        anyhow::bail!("request {i} failed: {error}")
+                    }
+                }
+            }
+        }
+        if progressed {
+            last_progress = Instant::now();
+        } else {
+            anyhow::ensure!(
+                last_progress.elapsed() < idle_limit,
+                "no serving progress for {idle_limit:?} — engine wedged?"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    Ok(done.into_iter().map(|r| r.expect("all requests completed")).collect())
+}
 
 pub(crate) fn parse_strategy(args: &mut Args) -> Result<Strategy> {
     let s = args.str_or("strategy", "p-lr-d");

@@ -11,6 +11,14 @@
 //! arrive over the control plane with the full request aboard (the
 //! flags are still accepted on followers, and ignored, so one shared
 //! command line works for every node).
+//!
+//! With `--client-port P` node 0 additionally becomes a *daemon* for
+//! remote clients: the client gateway accepts any number of
+//! `apple-moe client` / `RemoteEngine` connections on that port,
+//! multiplexes their requests into the same scheduler, and streams
+//! tokens back over the wire (`network::proto`). The daemon then
+//! outlives its local request list and exits when a client sends the
+//! administrative shutdown (`apple-moe client --shutdown`).
 
 use std::io::Write;
 use std::path::Path;
@@ -21,7 +29,7 @@ use crate::cli::args::Args;
 use crate::cli::commands::{
     artifacts_dir, parse_balancing, parse_policy, parse_sampling, parse_topology,
 };
-use crate::cluster::live::{run_node, LiveConfig};
+use crate::cluster::live::{run_node_serving, ClientServing, LiveConfig};
 use crate::config::ClusterHosts;
 use crate::engine::request::{Request, RequestResult};
 use crate::network::tcp::{self, TcpOptions};
@@ -37,7 +45,15 @@ pub fn run(args: &mut Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--cluster hosts.toml is required"))?;
     let topology = parse_topology(args)?;
     let balancing = parse_balancing(args)?;
-    let n_requests = args.usize_or("requests", 1)?;
+    let client_port = match args.get("client-port") {
+        None => None,
+        Some(p) => Some(
+            p.parse::<u16>()
+                .map_err(|_| anyhow::anyhow!("--client-port expects a port number, got '{p}'"))?,
+        ),
+    };
+    // A daemon serving remote clients defaults to no local requests.
+    let n_requests = args.usize_or("requests", if client_port.is_some() { 0 } else { 1 })?;
     let prompt_tokens = args.usize_or("prompt-tokens", 16)?;
     let gen_tokens = args.usize_or("gen-tokens", 32)?;
     let concurrency = args.usize_or("concurrency", 2)?;
@@ -48,6 +64,10 @@ pub fn run(args: &mut Args) -> Result<()> {
     let dir = artifacts_dir(args);
     args.finish()?;
     anyhow::ensure!(concurrency >= 1, "--concurrency must be >= 1");
+    anyhow::ensure!(
+        client_port.is_none() || id == 0,
+        "--client-port only applies to node 0 (the scheduler)"
+    );
 
     let hosts = ClusterHosts::load(Path::new(&cluster_path))
         .with_context(|| format!("loading {cluster_path}"))?;
@@ -70,9 +90,26 @@ pub fn run(args: &mut Args) -> Result<()> {
         hosts.hosts[id],
         hosts.n_nodes()
     );
-    let opts = TcpOptions { connect_timeout: hosts.connect_timeout, nodelay: true };
+    let opts = TcpOptions { connect_timeout: hosts.connect_timeout, ..Default::default() };
     let ep = tcp::endpoint(id, &hosts.hosts, &opts)?;
     eprintln!("node {id}: fabric up; loading artifacts and serving {n_requests} request(s)...");
+
+    // Bind the client port before the (slow) artifact load so clients
+    // can start their connect retries immediately; the gateway only
+    // begins accepting once the serve loop is up.
+    let clients = match client_port {
+        None => None,
+        Some(p) => {
+            let listener = std::net::TcpListener::bind(("0.0.0.0", p))
+                .with_context(|| format!("binding client port {p}"))?;
+            eprintln!(
+                "node {id}: serving remote clients on {} (stop with `apple-moe client \
+                 --connect ... --shutdown`)",
+                listener.local_addr()?
+            );
+            Some(ClientServing::new(listener))
+        }
+    };
 
     let requests: Vec<Request> = (0..n_requests)
         .map(|i| {
@@ -83,7 +120,7 @@ pub fn run(args: &mut Args) -> Result<()> {
             r
         })
         .collect();
-    let results = run_node(&cfg, ep, &requests)?;
+    let results = run_node_serving(&cfg, ep, &requests, clients)?;
 
     if id == 0 {
         report(&results, out.as_deref())?;

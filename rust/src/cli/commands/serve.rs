@@ -11,10 +11,10 @@ use std::time::{Duration, Instant};
 
 use crate::cli::args::Args;
 use crate::cli::commands::{
-    artifacts_dir, parse_balancing, parse_policy, parse_sampling, parse_topology,
+    artifacts_dir, drain_handles, parse_balancing, parse_policy, parse_sampling,
+    parse_topology,
 };
 use crate::cluster::live::{LiveCluster, LiveConfig, TransportKind};
-use crate::engine::api::TokenEvent;
 use crate::engine::request::{Request, RequestResult};
 use crate::util::fmt::render_table;
 use crate::util::stats::Summary;
@@ -74,61 +74,13 @@ pub fn run(args: &mut Args) -> Result<()> {
         handles.push(cluster.submit(req)?);
     }
 
-    // Drain all event streams as tokens decode (this is the streaming
-    // proof: events arrive while other requests are still in flight).
-    // The inactivity bound backstops a wedged-but-alive cluster — a
-    // hung accelerator call that no wire timeout can see.
+    // Drain all event streams as tokens decode. The inactivity bound
+    // backstops a wedged-but-alive cluster — a hung accelerator call
+    // that no wire timeout can see.
     let idle_limit = Duration::from_secs(recv_timeout.max(1)).saturating_mul(2);
-    let mut last_progress = Instant::now();
-    let mut done: Vec<Option<RequestResult>> = (0..n_requests).map(|_| None).collect();
-    let mut remaining = n_requests;
-    while remaining > 0 {
-        let mut progressed = false;
-        for (i, h) in handles.iter().enumerate() {
-            if done[i].is_some() {
-                continue;
-            }
-            while let Some(ev) = h.try_event() {
-                progressed = true;
-                match ev {
-                    TokenEvent::Started { ttft_s, queued_s } => {
-                        if !json {
-                            eprintln!(
-                                "req {i}: first token at {ttft_s:.2} s (queued {queued_s:.2} s)"
-                            );
-                        }
-                    }
-                    TokenEvent::Token { id, .. } => {
-                        if stream && !json {
-                            println!("req {i} token {id}");
-                        }
-                    }
-                    TokenEvent::Done { result } => {
-                        done[i] = Some(result);
-                        remaining -= 1;
-                        break;
-                    }
-                    TokenEvent::Failed { error, .. } => {
-                        anyhow::bail!("request {i} failed: {error}")
-                    }
-                }
-            }
-        }
-        if progressed {
-            last_progress = Instant::now();
-        } else {
-            anyhow::ensure!(
-                last_progress.elapsed() < idle_limit,
-                "no serving progress for {idle_limit:?} — cluster wedged?"
-            );
-            std::thread::sleep(Duration::from_millis(2));
-        }
-    }
+    let results = drain_handles(&handles, stream, json, idle_limit)?;
     let wall = t_all.elapsed().as_secs_f64();
     cluster.shutdown();
-
-    let results: Vec<RequestResult> =
-        done.into_iter().map(|r| r.expect("all requests completed")).collect();
     if json {
         println!("{}", json_report(&results, wall, nodes, concurrency));
         return Ok(());
@@ -173,7 +125,9 @@ pub fn run(args: &mut Args) -> Result<()> {
 
 /// Hand-rolled JSON (the offline crate cache has no serde): one record
 /// per request plus the aggregates, parsed by CI's multiproc-smoke job.
-fn json_report(
+/// Shared with `apple-moe client` (the BENCH_remote_serve.json report
+/// has the same shape).
+pub(crate) fn json_report(
     results: &[RequestResult],
     wall_s: f64,
     nodes: usize,

@@ -12,6 +12,7 @@
 //! apple-moe serve         --requests 8 --nodes 2          (live batch driver)
 //! apple-moe node          --id 0 --cluster hosts.toml     (one real node)
 //! apple-moe launch        --nodes 2 --requests 4          (multi-process run)
+//! apple-moe client        --connect host:7533 --prompt .. (remote client)
 //! apple-moe net-bench     [--backend tcp]                 (transport RTT/BW)
 //! ```
 //!
@@ -51,6 +52,48 @@
 //! streaming bandwidth for both backends at the paper's 24.5 kB payload
 //! and prints the configured `NetworkProfile`'s prediction next to the
 //! measurement, so profiles can be validated against the real network.
+//!
+//! # Remote clients
+//!
+//! The paper's end goal is a *private LLM service*: a cluster that
+//! serves people who are not standing at node 0's terminal. With
+//! `--client-port P`, node 0 (started via `node` or `launch`) runs a
+//! client gateway next to its scheduler — a real daemon:
+//!
+//! ```text
+//! mac1$ apple-moe node --id 0 --cluster hosts.toml --client-port 7533
+//! mac2$ apple-moe node --id 1 --cluster hosts.toml
+//! any $ apple-moe client --connect mac1:7533 --prompt "11,29,83" --stream
+//! any $ apple-moe client --connect mac1:7533 --requests 4 --json
+//! any $ apple-moe client --connect mac1:7533 --shutdown
+//! ```
+//!
+//! The client protocol (`network::proto`, magic `AMOC`) is
+//! length-prefixed frames: `Submit` carries the same encoded `Request`
+//! the scheduler's admission broadcast uses, and the daemon streams
+//! `Started`/`Token`/`Done`/`Failed` events back — the `TokenEvent`
+//! lifecycle with the request id aboard, so any number of in-flight
+//! requests multiplex over one connection (and any number of
+//! connections multiplex into the scheduler). In code, the same surface
+//! is `engine::RemoteEngine`, which implements the `Engine` trait over
+//! the socket: `submit`/`stream`/`cancel`/`join` behave identically
+//! whether the engine is in-process or across the network, and the
+//! token streams are byte-identical to a local `submit` (asserted by
+//! `tests/integration_process.rs` on both topologies).
+//!
+//! **Failure semantics.** A client that disconnects mid-stream behaves
+//! exactly like a dropped `RequestHandle`: its requests self-cancel at
+//! the scheduler's next sweep, their `max_active` slots free, and every
+//! other connection keeps streaming. `cancel` is cooperative end to
+//! end (flag → `Cancel` frame → scheduler sweep → `Done`/`Cancelled`).
+//! The daemon keeps serving after its local request list drains and
+//! exits when a client sends `--shutdown` (in-flight requests drain
+//! first). While the cluster idles, node 0 heartbeats its followers on
+//! the control plane; a follower that hears nothing for
+//! `recv_timeout_secs` exits with a named `LeaderLost` error instead of
+//! idling forever — so killing node 0 tears the whole mesh down
+//! promptly, even on >2-node clusters. Per-connection traffic is
+//! metered (`LinkStats`) and logged when each connection closes.
 //!
 //! # Streaming serving API
 //!
@@ -111,6 +154,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "serve" => commands::serve::run(&mut args),
         "node" => commands::node::run(&mut args),
         "launch" => commands::launch::run(&mut args),
+        "client" => commands::client::run(&mut args),
         "net-bench" => commands::net_bench::run(&mut args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -154,9 +198,15 @@ SUBCOMMANDS
                    --id N --cluster hosts.toml --requests N --gen-tokens N
                    --concurrency N --policy round-robin|fcfs
                    --topology decentralized|centralized --artifacts DIR
+                   --client-port P   (node 0: serve remote clients, daemon mode)
   launch         LIVE multi-process: spawn N loopback node processes
                    --nodes N --requests N --gen-tokens N --concurrency N
-                   [--cluster hosts.toml]
+                   [--cluster hosts.toml] [--client-port P]
+  client         remote client for a --client-port daemon: submit over TCP,
+                 stream tokens back, report ttft/queueing/latency
+                   --connect host:port --requests N --prompt-tokens N
+                   --gen-tokens N [--prompt "id,id,..."] [--stream] [--json]
+                   [--out FILE] [--shutdown]  (+sampling flags)
   net-bench      transport microbenchmark: RTT percentiles + bandwidth
                    --backend inproc|tcp|both --payload BYTES --iters N
   help           this text

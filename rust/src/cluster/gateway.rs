@@ -1,0 +1,736 @@
+//! Client gateway: the accept loop that makes node 0 a *serving
+//! daemon* for remote clients.
+//!
+//! The gateway listens on the daemon's `--client-port`, handshakes
+//! each connection with the [`crate::network::proto`] client protocol,
+//! and multiplexes any number of connections (each carrying any number
+//! of in-flight requests) into the scheduler's submission channel via
+//! a caller-supplied submit function — the same path in-process
+//! [`crate::cluster::live::LiveCluster::submit`] takes, so remote and
+//! local requests are indistinguishable to the scheduler and their
+//! token streams are identical.
+//!
+//! Per connection: one reader thread decodes [`ClientMsg`] frames
+//! (Submit / Cancel / Shutdown), and one forwarder thread per in-flight
+//! request copies its [`TokenEvent`] stream back as [`ServerMsg`]
+//! frames. A client that vanishes mid-stream behaves exactly like a
+//! dropped `RequestHandle`: the first failed write (or the reader's
+//! EOF) cancels the connection's in-flight requests, the scheduler's
+//! next sweep frees their `max_active` slots, and every other request
+//! keeps serving.
+//!
+//! Traffic is metered per connection ([`LinkStats`], logged when the
+//! connection closes) and aggregated into [`GatewayStats`].
+
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::engine::api::{RequestHandle, TokenEvent};
+use crate::engine::request::Request;
+use crate::network::proto::{self, ClientMsg, ServerHello, ServerMsg};
+use crate::network::transport::LinkStats;
+
+/// Default bound on a client connection's handshake read (a
+/// connect-then-silent socket must not wedge the accept loop, mirroring
+/// the mesh's `TcpOptions::handshake_timeout`).
+pub const DEFAULT_CLIENT_HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Poll cadence of the accept loop (it runs non-blocking so a stop
+/// request is honoured promptly).
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+
+/// Bound on any single frame write to a client. A client that submits
+/// work and then stops *reading* would otherwise wedge its forwarder
+/// threads in `write_all` forever (the kernel send buffer fills), and
+/// with them the daemon's shutdown join. A write that trips this makes
+/// the connection count as vanished: its requests self-cancel.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Aggregate serving-surface accounting across all client connections.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GatewayStats {
+    /// Connections that completed the client handshake.
+    pub connections: u64,
+    /// Requests submitted into the scheduler on behalf of clients.
+    pub requests: u64,
+    /// Total client-facing wire traffic (sum of the per-connection
+    /// meters).
+    pub link: LinkStats,
+}
+
+struct Inner {
+    stop: AtomicBool,
+    hello: ServerHello,
+    /// Read-shutdown handles for every LIVE connection (keyed by conn
+    /// id; each connection removes itself on close so a long-lived
+    /// daemon does not leak one fd per served client), so a stop
+    /// request unblocks their reader threads (writes — the in-flight
+    /// token streams — are left open to drain).
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    /// Connection threads, joined at `finish` so the aggregate
+    /// accounting is complete (and no thread outlives the daemon).
+    /// Finished threads are reaped opportunistically by the accept loop.
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    stats: Mutex<GatewayStats>,
+}
+
+impl Inner {
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    fn request_stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for c in self.conns.lock().expect("conns lock").values() {
+            let _ = c.shutdown(Shutdown::Read);
+        }
+    }
+}
+
+/// A running client listener. Owned by the node-0 serve loop
+/// ([`crate::cluster::live::run_node_serving`]); dropping it without
+/// [`ClientGateway::finish`] force-stops the accept loop.
+pub struct ClientGateway {
+    inner: Arc<Inner>,
+    accept: Option<JoinHandle<()>>,
+    local_addr: SocketAddr,
+}
+
+impl ClientGateway {
+    /// Start accepting clients on `listener`. `submit` injects one
+    /// request into the scheduler and returns its streaming handle —
+    /// it is cloned into every connection thread.
+    pub fn start<F>(
+        listener: TcpListener,
+        hello: ServerHello,
+        handshake_timeout: Duration,
+        submit: F,
+    ) -> Result<ClientGateway>
+    where
+        F: Fn(Request) -> Result<RequestHandle> + Clone + Send + 'static,
+    {
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let inner = Arc::new(Inner {
+            stop: AtomicBool::new(false),
+            hello,
+            conns: Mutex::new(HashMap::new()),
+            threads: Mutex::new(Vec::new()),
+            stats: Mutex::new(GatewayStats::default()),
+        });
+        let accept_inner = inner.clone();
+        let accept = std::thread::spawn(move || {
+            accept_loop(accept_inner, listener, handshake_timeout, submit);
+        });
+        Ok(ClientGateway { inner, accept: Some(accept), local_addr })
+    }
+
+    /// The address clients dial (useful when the listener was bound to
+    /// port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// True once a client's `Shutdown` (or [`ClientGateway::finish`])
+    /// asked the daemon to stop.
+    pub fn stop_requested(&self) -> bool {
+        self.inner.stopping()
+    }
+
+    /// Stop accepting, unblock every connection reader, join the accept
+    /// loop and return the aggregate accounting. In-flight token
+    /// streams drain to their clients before the connections close.
+    pub fn finish(mut self) -> GatewayStats {
+        self.teardown();
+        *self.inner.stats.lock().expect("stats lock")
+    }
+
+    fn teardown(&mut self) {
+        self.inner.request_stop();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // Joining the connection threads completes the per-connection
+        // accounting (they aggregate into `stats` as they exit). Safe
+        // by construction: their reads were unblocked by request_stop,
+        // and their forwarders hold terminal events already — the serve
+        // loop has exited by the time anyone calls this.
+        let threads: Vec<_> =
+            std::mem::take(&mut *self.inner.threads.lock().expect("threads lock"));
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ClientGateway {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+fn accept_loop<F>(
+    inner: Arc<Inner>,
+    listener: TcpListener,
+    handshake_timeout: Duration,
+    submit: F,
+) where
+    F: Fn(Request) -> Result<RequestHandle> + Clone + Send + 'static,
+{
+    let mut next_conn: u64 = 0;
+    while !inner.stopping() {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let conn_id = next_conn;
+                next_conn += 1;
+                // Everything per-connection — including the (deadline-
+                // bounded) handshake — runs on the connection's own
+                // thread: one connect-then-silent socket must not
+                // head-of-line block other clients' accepts.
+                let conn_inner = inner.clone();
+                let conn_submit = submit.clone();
+                let handle = std::thread::spawn(move || {
+                    conn_entry(conn_inner, stream, conn_submit, conn_id, peer, handshake_timeout);
+                });
+                // Track the new thread and reap the ones that finished
+                // (a long-lived daemon must not accumulate a handle per
+                // served client).
+                let mut threads = inner.threads.lock().expect("threads lock");
+                threads.retain(|h| !h.is_finished());
+                threads.push(handle);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => {
+                // Transient accept failures (ECONNABORTED, fd pressure)
+                // must not silently turn remote serving off for good —
+                // back off and keep accepting; only a stop request ends
+                // the loop.
+                log::debug!("client gateway: accept failed (retrying): {e}");
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+}
+
+/// One accepted connection, handshake to close (its own thread).
+fn conn_entry<F>(
+    inner: Arc<Inner>,
+    mut stream: TcpStream,
+    submit: F,
+    conn_id: u64,
+    peer: SocketAddr,
+    handshake_timeout: Duration,
+) where
+    F: Fn(Request) -> Result<RequestHandle>,
+{
+    if let Err(e) = handshake_conn(&mut stream, handshake_timeout, inner.hello) {
+        log::debug!("client gateway: dropping {peer}: {e:#}");
+        return;
+    }
+    if let Ok(clone) = stream.try_clone() {
+        inner.conns.lock().expect("conns lock").insert(conn_id, clone);
+    } else {
+        return;
+    }
+    // Close the stop race: request_stop() read-shuts only the sockets
+    // registered at sweep time. If the stop landed while this
+    // connection was mid-handshake, its insert above missed the sweep —
+    // observe the stop ourselves so the new reader cannot block
+    // forever. (The conns mutex orders this check: either the sweep saw
+    // our insert, or our post-insert load sees the stop flag.)
+    if inner.stopping() {
+        if let Some(c) = inner.conns.lock().expect("conns lock").get(&conn_id) {
+            let _ = c.shutdown(Shutdown::Read);
+        }
+    }
+    inner.stats.lock().expect("stats lock").connections += 1;
+    conn_loop(inner, stream, submit, conn_id, peer);
+}
+
+/// Handshake one accepted client connection: blocking mode, a read
+/// deadline for the hello, then steady-state socket tuning.
+fn handshake_conn(
+    stream: &mut TcpStream,
+    handshake_timeout: Duration,
+    hello: ServerHello,
+) -> Result<()> {
+    // The listener runs non-blocking; the accepted stream must not.
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(handshake_timeout))?;
+    proto::server_handshake(stream, hello)?;
+    stream.set_read_timeout(None)?;
+    // Reads block indefinitely (an idle client is fine); writes are
+    // bounded so a client that stops reading cannot wedge the daemon.
+    stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+    stream.set_nodelay(true)?;
+    Ok(())
+}
+
+fn conn_loop<F>(
+    inner: Arc<Inner>,
+    stream: TcpStream,
+    submit: F,
+    conn_id: u64,
+    peer: SocketAddr,
+) where
+    F: Fn(Request) -> Result<RequestHandle>,
+{
+    let Ok(wstream) = stream.try_clone() else { return };
+    let writer = Arc::new(Mutex::new(wstream));
+    let link = Arc::new(Mutex::new(LinkStats::default()));
+    let mut reader = BufReader::new(stream);
+    // In-flight requests on this connection. Shared with the forwarder
+    // threads, which remove their request on its terminal event — so a
+    // finished id may be reused by the client (the "unique among
+    // in-flight requests" contract of `network::proto`).
+    let cancels: Arc<Mutex<HashMap<u64, crate::engine::api::Canceller>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let mut forwarders: Vec<JoinHandle<()>> = Vec::new();
+    let mut n_requests: u64 = 0;
+    let mut graceful = false;
+    loop {
+        let body = match proto::read_frame(&mut reader) {
+            Ok(b) => b,
+            Err(e) => {
+                // EOF (or a read-shutdown from `request_stop`): if the
+                // daemon is stopping this is a drain, otherwise the
+                // client vanished and its requests must self-cancel.
+                graceful = inner.stopping();
+                if !graceful && e.kind() != std::io::ErrorKind::UnexpectedEof {
+                    log::debug!("client conn {conn_id} ({peer}): read failed: {e}");
+                }
+                break;
+            }
+        };
+        {
+            let mut l = link.lock().expect("link lock");
+            l.recv_msgs += 1;
+            l.recv_bytes += body.len() as u64 + 4;
+        }
+        let msg = match ClientMsg::decode(&body) {
+            Ok(m) => m,
+            Err(e) => {
+                // Protocol violation: drop the connection (its requests
+                // self-cancel below, like any vanished client).
+                log::warn!("client conn {conn_id} ({peer}): bad frame: {e:#}");
+                break;
+            }
+        };
+        match msg {
+            ClientMsg::Submit(req) => {
+                let id = req.id;
+                let in_flight = cancels.lock().expect("cancels lock").contains_key(&id);
+                let outcome = if in_flight {
+                    Err(anyhow::anyhow!(
+                        "request id {id} is already in flight on this connection"
+                    ))
+                } else if req.prompt.is_empty() {
+                    Err(anyhow::anyhow!("request {id} has an empty prompt"))
+                } else {
+                    submit(req)
+                };
+                match outcome {
+                    Ok(handle) => {
+                        inner.stats.lock().expect("stats lock").requests += 1;
+                        n_requests += 1;
+                        cancels.lock().expect("cancels lock").insert(id, handle.canceller());
+                        let w = writer.clone();
+                        let l = link.clone();
+                        let c = cancels.clone();
+                        // Reap finished forwarders as we go: a
+                        // persistent connection serves many requests
+                        // and must not accumulate a joinable thread
+                        // per request.
+                        forwarders.retain(|h| !h.is_finished());
+                        forwarders
+                            .push(std::thread::spawn(move || forward(w, l, c, handle)));
+                    }
+                    Err(e) => {
+                        let msg = ServerMsg::Failed { id, error: format!("{e:#}") };
+                        if write_server_counted(&writer, &link, &msg).is_err() {
+                            graceful = false;
+                            break;
+                        }
+                    }
+                }
+            }
+            ClientMsg::Cancel(id) => {
+                if let Some(c) = cancels.lock().expect("cancels lock").get(&id) {
+                    c.cancel();
+                }
+            }
+            ClientMsg::Shutdown => {
+                log::info!("client conn {conn_id} ({peer}): shutdown requested");
+                graceful = true;
+                inner.request_stop();
+                break;
+            }
+        }
+    }
+    if !graceful {
+        // Dead-client slot reclamation: cancel everything this
+        // connection had in flight so the scheduler's next sweep frees
+        // the decode state and admission slots.
+        for c in cancels.lock().expect("cancels lock").values() {
+            c.cancel();
+        }
+    }
+    for f in forwarders {
+        let _ = f.join();
+    }
+    // This connection is done: stop holding its fd in the stop-handle
+    // map (a long-lived daemon serves many short-lived clients).
+    inner.conns.lock().expect("conns lock").remove(&conn_id);
+    let l = *link.lock().expect("link lock");
+    log::info!(
+        "client conn {conn_id} ({peer}) closed: {n_requests} request(s), \
+         sent {} msgs / {} B, recv {} msgs / {} B",
+        l.sent_msgs,
+        l.sent_bytes,
+        l.recv_msgs,
+        l.recv_bytes
+    );
+    inner.stats.lock().expect("stats lock").link.add(l);
+}
+
+/// Copy one request's event stream onto the client socket, removing the
+/// request from the connection's in-flight map on its terminal event. A
+/// failed (or timed-out) write means the client is gone: cancel the
+/// request (freeing its scheduler slot at the next sweep), poison the
+/// socket so sibling forwarders fail fast, and stop forwarding.
+fn forward(
+    writer: Arc<Mutex<TcpStream>>,
+    link: Arc<Mutex<LinkStats>>,
+    cancels: Arc<Mutex<HashMap<u64, crate::engine::api::Canceller>>>,
+    handle: RequestHandle,
+) {
+    let id = handle.id();
+    let canceller = handle.canceller();
+    let mut saw_terminal = false;
+    while let Some(ev) = handle.next_event() {
+        let msg = match ev {
+            TokenEvent::Started { ttft_s, queued_s } => {
+                ServerMsg::Started { id, ttft_s, queued_s }
+            }
+            TokenEvent::Token { id: token, logprob } => {
+                ServerMsg::Token { id, token, logprob }
+            }
+            TokenEvent::Done { result } => ServerMsg::Done { result },
+            TokenEvent::Failed { error, .. } => ServerMsg::Failed { id, error },
+        };
+        let terminal = matches!(msg, ServerMsg::Done { .. } | ServerMsg::Failed { .. });
+        if terminal {
+            // Retire the id BEFORE the terminal frame hits the wire:
+            // the proto contract lets the client reuse it the moment it
+            // reads Done/Failed, and the read must not race the remove.
+            cancels.lock().expect("cancels lock").remove(&id);
+        }
+        if write_server_counted(&writer, &link, &msg).is_err() {
+            canceller.cancel();
+            let _ = writer.lock().expect("writer lock").shutdown(Shutdown::Both);
+            break;
+        }
+        if terminal {
+            saw_terminal = true;
+            break;
+        }
+    }
+    if !saw_terminal {
+        if !canceller.is_cancelled() {
+            // The engine dropped the stream without a terminal event
+            // (it shut down mid-request); tell the client rather than
+            // going silent.
+            let _ = write_server_counted(
+                &writer,
+                &link,
+                &ServerMsg::Failed { id, error: "engine dropped the stream".into() },
+            );
+        }
+        // Retire the id on the non-terminal exits only: after a
+        // terminal event the client may already have REUSED the id (the
+        // remove-before-write above), and an unconditional remove here
+        // would delete the new request's canceller.
+        cancels.lock().expect("cancels lock").remove(&id);
+    }
+}
+
+fn write_server_counted(
+    writer: &Arc<Mutex<TcpStream>>,
+    link: &Arc<Mutex<LinkStats>>,
+    msg: &ServerMsg,
+) -> std::io::Result<()> {
+    let body = msg.encode();
+    let mut w = writer.lock().expect("writer lock");
+    proto::write_frame(&mut *w, &body)?;
+    drop(w);
+    let mut l = link.lock().expect("link lock");
+    l.sent_msgs += 1;
+    l.sent_bytes += body.len() as u64 + 4;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::request::FinishReason;
+    use crate::metrics::RunMetrics;
+    use std::sync::atomic::AtomicU64;
+    use std::time::Instant;
+
+    /// A fake engine: each submitted request gets a thread that streams
+    /// `max_new_tokens` synthetic tokens (prompt[0] + i), politely
+    /// honouring the cancel flag between tokens.
+    fn fake_engine(
+        token_delay: Duration,
+        observed_cancels: Arc<AtomicU64>,
+    ) -> impl Fn(Request) -> Result<RequestHandle> + Clone + Send + 'static {
+        move |req: Request| {
+            let (handle, events, cancel) = RequestHandle::channel(req.id);
+            let observed = observed_cancels.clone();
+            std::thread::spawn(move || {
+                let _ = events.send(TokenEvent::Started { ttft_s: 0.01, queued_s: 0.0 });
+                let mut generated = Vec::new();
+                let mut finish = FinishReason::Length;
+                for i in 0..req.sampling.max_new_tokens as u32 {
+                    if cancel.load(Ordering::Relaxed) {
+                        observed.fetch_add(1, Ordering::Relaxed);
+                        finish = FinishReason::Cancelled;
+                        break;
+                    }
+                    let t = req.prompt[0].wrapping_add(i);
+                    generated.push(t);
+                    let _ = events.send(TokenEvent::Token { id: t, logprob: Some(-0.5) });
+                    std::thread::sleep(token_delay);
+                }
+                let _ = events.send(TokenEvent::Done {
+                    result: crate::engine::request::RequestResult {
+                        id: req.id,
+                        generated,
+                        finish,
+                        metrics: RunMetrics::default(),
+                    },
+                });
+            });
+            Ok(handle)
+        }
+    }
+
+    fn start_gateway(
+        token_delay: Duration,
+        cancels: Arc<AtomicU64>,
+    ) -> (ClientGateway, SocketAddr) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let gw = ClientGateway::start(
+            listener,
+            ServerHello { n_nodes: 2, max_active: 2 },
+            Duration::from_millis(500),
+            fake_engine(token_delay, cancels),
+        )
+        .unwrap();
+        let addr = gw.local_addr();
+        (gw, addr)
+    }
+
+    fn connect(addr: SocketAddr) -> (TcpStream, ServerHello) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let hello = proto::client_handshake(&mut s).unwrap();
+        (s, hello)
+    }
+
+    #[test]
+    fn submit_streams_tokens_and_result_over_the_socket() {
+        let cancels = Arc::new(AtomicU64::new(0));
+        let (gw, addr) = start_gateway(Duration::ZERO, cancels);
+        let (mut s, hello) = connect(addr);
+        assert_eq!(hello, ServerHello { n_nodes: 2, max_active: 2 });
+
+        let req = Request::new(7, vec![100], 5);
+        proto::write_client(&mut s, &ClientMsg::Submit(req)).unwrap();
+        let mut streamed = Vec::new();
+        let result = loop {
+            match proto::read_server(&mut s).unwrap() {
+                ServerMsg::Started { id, .. } => assert_eq!(id, 7),
+                ServerMsg::Token { id, token, .. } => {
+                    assert_eq!(id, 7);
+                    streamed.push(token);
+                }
+                ServerMsg::Done { result } => break result,
+                ServerMsg::Failed { error, .. } => panic!("failed: {error}"),
+            }
+        };
+        assert_eq!(result.id, 7);
+        assert_eq!(result.generated, vec![100, 101, 102, 103, 104]);
+        assert_eq!(streamed, result.generated);
+        let stats = gw.finish();
+        assert_eq!(stats.connections, 1);
+        assert_eq!(stats.requests, 1);
+        // Started + 5 tokens + Done, all metered.
+        assert_eq!(stats.link.sent_msgs, 7);
+        assert!(stats.link.sent_bytes > 0);
+        assert_eq!(stats.link.recv_msgs, 1);
+    }
+
+    #[test]
+    fn multiplexes_requests_and_connections() {
+        let cancels = Arc::new(AtomicU64::new(0));
+        let (gw, addr) = start_gateway(Duration::from_millis(1), cancels);
+        let (mut a, _) = connect(addr);
+        let (mut b, _) = connect(addr);
+        // Two requests interleaved on connection A, one on B.
+        proto::write_client(&mut a, &ClientMsg::Submit(Request::new(1, vec![10], 4))).unwrap();
+        proto::write_client(&mut a, &ClientMsg::Submit(Request::new(2, vec![20], 4))).unwrap();
+        proto::write_client(&mut b, &ClientMsg::Submit(Request::new(3, vec![30], 4))).unwrap();
+        let drain = |s: &mut TcpStream, want: usize| {
+            let mut done = std::collections::HashMap::new();
+            while done.len() < want {
+                match proto::read_server(s).unwrap() {
+                    ServerMsg::Done { result } => {
+                        done.insert(result.id, result.generated);
+                    }
+                    ServerMsg::Failed { error, .. } => panic!("failed: {error}"),
+                    _ => {}
+                }
+            }
+            done
+        };
+        let got_a = drain(&mut a, 2);
+        let got_b = drain(&mut b, 1);
+        assert_eq!(got_a[&1], vec![10, 11, 12, 13]);
+        assert_eq!(got_a[&2], vec![20, 21, 22, 23]);
+        assert_eq!(got_b[&3], vec![30, 31, 32, 33]);
+        let stats = gw.finish();
+        assert_eq!(stats.connections, 2);
+        assert_eq!(stats.requests, 3);
+    }
+
+    #[test]
+    fn duplicate_in_flight_id_is_rejected_without_killing_the_connection() {
+        let cancels = Arc::new(AtomicU64::new(0));
+        let (gw, addr) = start_gateway(Duration::from_millis(5), cancels);
+        let (mut s, _) = connect(addr);
+        proto::write_client(&mut s, &ClientMsg::Submit(Request::new(1, vec![10], 8))).unwrap();
+        proto::write_client(&mut s, &ClientMsg::Submit(Request::new(1, vec![10], 8))).unwrap();
+        let mut saw_failed = false;
+        let mut saw_done = false;
+        while !(saw_failed && saw_done) {
+            match proto::read_server(&mut s).unwrap() {
+                ServerMsg::Failed { id, error } => {
+                    assert_eq!(id, 1);
+                    assert!(error.contains("already in flight"), "{error}");
+                    saw_failed = true;
+                }
+                ServerMsg::Done { result } => {
+                    assert_eq!(result.generated.len(), 8);
+                    saw_done = true;
+                }
+                _ => {}
+            }
+        }
+        gw.finish();
+    }
+
+    #[test]
+    fn finished_request_id_can_be_reused() {
+        // The proto contract: ids must be unique among IN-FLIGHT
+        // requests of a connection — a completed id is free for reuse.
+        let cancels = Arc::new(AtomicU64::new(0));
+        let (gw, addr) = start_gateway(Duration::ZERO, cancels);
+        let (mut s, _) = connect(addr);
+        for round in 0..2u32 {
+            proto::write_client(
+                &mut s,
+                &ClientMsg::Submit(Request::new(4, vec![100 + round], 3)),
+            )
+            .unwrap();
+            let result = loop {
+                match proto::read_server(&mut s).unwrap() {
+                    ServerMsg::Done { result } => break result,
+                    ServerMsg::Failed { error, .. } => {
+                        panic!("round {round} failed: {error}")
+                    }
+                    _ => {}
+                }
+            };
+            // No settling sleep: the id is retired BEFORE the Done
+            // frame is written, so reading Done is proof of reusability.
+            assert_eq!(result.generated[0], 100 + round);
+        }
+        gw.finish();
+    }
+
+    #[test]
+    fn vanished_client_cancels_its_requests_and_spares_others() {
+        // The dead-client reclamation path at protocol level: client A
+        // drops mid-stream, its request must observe the cancel flag;
+        // client B (connected the whole time) still completes.
+        let cancels = Arc::new(AtomicU64::new(0));
+        let (gw, addr) = start_gateway(Duration::from_millis(10), cancels.clone());
+        let (mut a, _) = connect(addr);
+        let (mut b, _) = connect(addr);
+        proto::write_client(&mut a, &ClientMsg::Submit(Request::new(1, vec![10], 1000))).unwrap();
+        // Read one token to make sure the stream is live, then vanish.
+        loop {
+            if let ServerMsg::Token { .. } = proto::read_server(&mut a).unwrap() {
+                break;
+            }
+        }
+        drop(a);
+        proto::write_client(&mut b, &ClientMsg::Submit(Request::new(2, vec![20], 4))).unwrap();
+        let result = loop {
+            match proto::read_server(&mut b).unwrap() {
+                ServerMsg::Done { result } => break result,
+                ServerMsg::Failed { error, .. } => panic!("failed: {error}"),
+                _ => {}
+            }
+        };
+        assert_eq!(result.generated, vec![20, 21, 22, 23]);
+        // A's engine-side worker observed the cancellation.
+        let t0 = Instant::now();
+        while cancels.load(Ordering::Relaxed) == 0 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "vanished client's request was never cancelled"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        gw.finish();
+    }
+
+    #[test]
+    fn shutdown_message_stops_the_gateway_after_draining() {
+        let cancels = Arc::new(AtomicU64::new(0));
+        let (gw, addr) = start_gateway(Duration::from_millis(2), cancels);
+        let (mut s, _) = connect(addr);
+        proto::write_client(&mut s, &ClientMsg::Submit(Request::new(9, vec![50], 6))).unwrap();
+        proto::write_client(&mut s, &ClientMsg::Shutdown).unwrap();
+        // The in-flight request still drains to completion.
+        let result = loop {
+            match proto::read_server(&mut s).unwrap() {
+                ServerMsg::Done { result } => break result,
+                ServerMsg::Failed { error, .. } => panic!("failed: {error}"),
+                _ => {}
+            }
+        };
+        assert_eq!(result.generated.len(), 6);
+        assert!(gw.stop_requested());
+        let t0 = Instant::now();
+        gw.finish();
+        assert!(t0.elapsed() < Duration::from_secs(5), "finish() hung");
+        // And new connections are refused (accept loop gone).
+        std::thread::sleep(Duration::from_millis(50));
+        let refused = TcpStream::connect(addr)
+            .map(|mut c| proto::client_handshake(&mut c).is_err())
+            .unwrap_or(true);
+        assert!(refused, "gateway still serving after shutdown");
+    }
+}

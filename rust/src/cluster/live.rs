@@ -58,7 +58,7 @@
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -93,10 +93,20 @@ const OP_SHUTDOWN: u8 = 0;
 const OP_ADMIT: u8 = 1;
 const OP_STEP: u8 = 2;
 const OP_CANCEL: u8 = 3;
+/// Leader liveness beacon while the cluster idles between requests
+/// (decentralized control plane; the centralized topology uses
+/// [`SCATTER_HEARTBEAT`]). Followers replay and discard it.
+const OP_HEARTBEAT: u8 = 4;
+
+/// Centralized heartbeat marker: a 1-byte scatter payload (a real
+/// scatter is ≥ 4 + 4·d bytes, an empty one is the shutdown marker).
+const SCATTER_HEARTBEAT: u8 = 0xAB;
 
 /// Poll interval while a node idles between requests (waiting for the
-/// next control message or scatter). Idleness is unbounded by design —
-/// an always-on node — so this only paces shutdown checks.
+/// next control message or scatter). Idleness is *served* by the leader
+/// heartbeat — an always-on node stays idle indefinitely as long as the
+/// leader keeps proving it is alive — so this only paces shutdown and
+/// deadline checks.
 const IDLE_POLL: Duration = Duration::from_millis(200);
 
 /// Which fabric backend `LiveCluster` meshes its node threads with.
@@ -153,6 +163,13 @@ impl LiveConfig {
             policy: SchedPolicy::RoundRobin,
             transport: TransportKind::InProcess,
         }
+    }
+
+    /// How often the idle leader proves it is alive on the control
+    /// plane. Derived from `recv_timeout` so several heartbeats fit in
+    /// every follower's liveness window.
+    pub fn heartbeat_period(&self) -> Duration {
+        (self.recv_timeout / 4).clamp(Duration::from_millis(50), Duration::from_secs(5))
     }
 
     fn layout(&self) -> ExpertLayout {
@@ -287,6 +304,44 @@ pub fn run_node(
     ep: Endpoint,
     requests: &[Request],
 ) -> Result<Vec<RequestResult>> {
+    run_node_serving(cfg, ep, requests, None)
+}
+
+/// A client listener for node 0 (see [`crate::cluster::gateway`]):
+/// attach it with [`run_node_serving`] and the node becomes a serving
+/// daemon — remote `apple-moe client`s (or [`crate::engine::RemoteEngine`]s)
+/// submit requests over the socket and stream their tokens back.
+pub struct ClientServing {
+    pub listener: std::net::TcpListener,
+    /// Bound on a connecting client's handshake read (a
+    /// connect-then-silent socket must not wedge the accept loop).
+    pub handshake_timeout: Duration,
+}
+
+impl ClientServing {
+    pub fn new(listener: std::net::TcpListener) -> ClientServing {
+        ClientServing {
+            listener,
+            handshake_timeout: crate::cluster::gateway::DEFAULT_CLIENT_HANDSHAKE_TIMEOUT,
+        }
+    }
+}
+
+/// [`run_node`] with an optional client listener on node 0.
+///
+/// With `clients` attached, node 0 keeps serving after the local
+/// `requests` drain: any number of remote connections multiplex into
+/// the same scheduler queue (their streams are token-identical to an
+/// in-process `submit`), and the daemon exits when a client sends the
+/// administrative shutdown (`apple-moe client --shutdown`). A client
+/// that vanishes mid-stream self-cancels at the next scheduler sweep,
+/// freeing its `max_active` slot for everyone else.
+pub fn run_node_serving(
+    cfg: &LiveConfig,
+    ep: Endpoint,
+    requests: &[Request],
+    clients: Option<ClientServing>,
+) -> Result<Vec<RequestResult>> {
     anyhow::ensure!(
         ep.n_nodes() == cfg.n_nodes,
         "endpoint is attached to a {}-node fabric but the config says {} nodes",
@@ -294,6 +349,10 @@ pub fn run_node(
         cfg.n_nodes
     );
     let node = ep.node();
+    anyhow::ensure!(
+        node == 0 || clients.is_none(),
+        "only node 0 (the scheduler) can serve remote clients"
+    );
     let layout = cfg.layout();
     let mut w = NodeWorker::new(node, cfg.clone(), layout, ep)?;
     if node != 0 {
@@ -303,6 +362,13 @@ pub fn run_node(
     // Node 0: drive the scheduler over a local queue. Everything runs on
     // this thread, so the event streams buffer in their (unbounded)
     // channels and are drained into results afterwards.
+    //
+    // The gateway slot is declared BEFORE the channel: locals unwind in
+    // reverse declaration order, so a panic inside `lead` drops `rx`
+    // (and with it any queued submissions' event senders) before the
+    // gateway's Drop joins forwarder threads — the same join-deadlock
+    // hazard the explicit `drop(rx)` below closes on the error path.
+    let mut gateway: Option<crate::cluster::gateway::ClientGateway> = None;
     let (tx, rx) = channel();
     let mut event_rxs = Vec::with_capacity(requests.len());
     for req in requests {
@@ -317,8 +383,64 @@ pub fn run_node(
         })))
         .expect("local queue open");
     }
-    drop(tx); // the leader exits (and tells followers to) once the queue drains
-    w.lead(&rx)?;
+    match clients {
+        None => {}
+        Some(c) => {
+            // The gateway's submit closure is the remote twin of
+            // `LiveCluster::submit`; its Sender clones keep the command
+            // channel (and therefore the serve loop) open until the
+            // gateway stops — that is what makes this a daemon.
+            let submit_tx = tx.clone();
+            let submit = move |req: Request| -> Result<RequestHandle> {
+                let (handle, events, cancel) = RequestHandle::channel(req.id);
+                submit_tx
+                    .send(Cmd::Submit(Box::new(Pending {
+                        req,
+                        submitted: Instant::now(),
+                        events,
+                        cancel,
+                    })))
+                    .map_err(|_| anyhow::anyhow!("cluster is shutting down"))?;
+                Ok(handle)
+            };
+            let hello = crate::network::proto::ServerHello {
+                n_nodes: cfg.n_nodes as u32,
+                max_active: cfg.max_active.max(1) as u32,
+            };
+            let gw = crate::cluster::gateway::ClientGateway::start(
+                c.listener,
+                hello,
+                c.handshake_timeout,
+                submit,
+            )?;
+            log::info!("node 0: serving remote clients on {}", gw.local_addr());
+            gateway = Some(gw);
+        }
+    }
+    drop(tx); // without clients the leader exits once the local queue drains
+    let served = w.lead(&rx);
+    // On the error path, submissions may still be queued in the channel;
+    // dropping the receiver drops their event senders, so the gateway's
+    // forwarder threads (joined below) observe end-of-stream instead of
+    // blocking forever.
+    drop(rx);
+    if let Some(gw) = gateway {
+        // Normal exit means a client's Shutdown stopped the gateway
+        // first; on the error path this force-stops it so connection
+        // threads unblock. Either way the accounting comes home.
+        let stats = gw.finish();
+        log::info!(
+            "client gateway: {} connection(s), {} remote request(s), \
+             sent {} msgs / {} B, recv {} msgs / {} B",
+            stats.connections,
+            stats.requests,
+            stats.link.sent_msgs,
+            stats.link.sent_bytes,
+            stats.link.recv_msgs,
+            stats.link.recv_bytes
+        );
+    }
+    served?;
     let mut out = Vec::with_capacity(event_rxs.len());
     for (id, handle) in event_rxs {
         let mut result = None;
@@ -538,14 +660,26 @@ impl NodeWorker {
         let mut rr: usize = 0;
         let mut open = true;
 
+        // First heartbeat up front: followers bound their idle waits on
+        // leader traffic, so the leader announces itself the moment its
+        // serve loop is up (not a heartbeat period later).
+        self.heartbeat();
+
         loop {
             // 1. Pump commands: block when idle, drain without blocking
             //    while requests are in flight.
             loop {
                 let cmd = if open && active.is_empty() && pending.is_empty() {
-                    match rx.recv() {
+                    // Idle: block for the next submission, waking every
+                    // heartbeat period to prove liveness to the
+                    // followers (they bound their idle waits on it).
+                    match rx.recv_timeout(self.cfg.heartbeat_period()) {
                         Ok(c) => Some(c),
-                        Err(_) => {
+                        Err(RecvTimeoutError::Timeout) => {
+                            self.heartbeat();
+                            None
+                        }
+                        Err(RecvTimeoutError::Disconnected) => {
                             open = false;
                             None
                         }
@@ -700,13 +834,38 @@ impl NodeWorker {
 
     /// Broadcast one scheduling decision to the followers (decentralized
     /// topology; centralized workers are driven by the scatter stream).
+    ///
+    /// The sequence number advances even when the broadcast errors
+    /// (matching `next_wseq` on the centralized plane): a partial
+    /// broadcast — delivered to some followers, failed on a dead one —
+    /// must not make the leader re-tag its next message with a number
+    /// the survivors already consumed, or they would desync and read a
+    /// live leader as lost.
     fn ctrl(&mut self, op: u8, body: &[u8]) -> Result<()> {
         let mut payload = Vec::with_capacity(1 + body.len());
         payload.push(op);
         payload.extend_from_slice(body);
-        self.ep.broadcast(tag(PHASE_CTRL, 0, self.ctrl_seq), &payload)?;
+        let t = tag(PHASE_CTRL, 0, self.ctrl_seq);
         self.ctrl_seq = self.ctrl_seq.wrapping_add(1);
+        self.ep.broadcast(t, &payload)?;
         Ok(())
+    }
+
+    /// Prove liveness to the followers while idle. Best-effort: a send
+    /// failure here either races a legitimate teardown (followers
+    /// already exited) or precedes a hard error the next real control
+    /// message will surface — neither should kill an idle leader.
+    fn heartbeat(&mut self) {
+        match self.cfg.topology {
+            Topology::Decentralized => {
+                let _ = self.ctrl(OP_HEARTBEAT, &[]);
+            }
+            Topology::Centralized => {
+                if let Some(w) = self.next_wseq() {
+                    let _ = self.ep.broadcast(tag(PHASE_SCATTER, 0, w), &[SCATTER_HEARTBEAT]);
+                }
+            }
+        }
     }
 
     fn broadcast_shutdown(&mut self) -> Result<()> {
@@ -732,35 +891,58 @@ impl NodeWorker {
         }
     }
 
-    /// Idle-tolerant wait for the next message on `t`: loops on short
-    /// timeouts indefinitely (a node between requests is idle, not
-    /// broken), checking the local command channel — when one exists —
-    /// so an in-process cluster can always shut its followers down.
-    /// Returns `None` on local shutdown. A closed fabric is an error
-    /// bubble-up (TCP followers exit when their peers hang up).
+    /// Idle-tolerant wait for the next message on `t`, bounded by the
+    /// leader's liveness: the idle leader heartbeats every
+    /// [`LiveConfig::heartbeat_period`], so `recv_timeout` without ANY
+    /// leader traffic means node 0 is gone — the follower exits with
+    /// [`NetError::LeaderLost`] instead of idling forever. (Before this
+    /// bound, a TCP follower in a >2-node mesh whose leader died
+    /// mid-idle only noticed when ALL its peers hung up, because the
+    /// surviving followers' connections kept the fabric channel open.)
+    /// Also checks the local command channel — when one exists — so an
+    /// in-process cluster can always shut its followers down; returns
+    /// `None` on local shutdown.
+    ///
+    /// The bound also covers the follower's FIRST wait, so node-to-node
+    /// startup skew (runtime compile times) must stay under
+    /// `recv_timeout`; the leader heartbeats immediately when its serve
+    /// loop comes up to keep that window as wide as possible.
     fn recv_or_shutdown(
         &mut self,
         t: u64,
         rx: Option<&Receiver<Cmd>>,
     ) -> Result<Option<Envelope>> {
+        let Some(rx) = rx else {
+            // Out-of-process follower (the `apple-moe node` daemon):
+            // no local channel, the leader bound is the only exit.
+            return Ok(Some(recv_from_leader(
+                &mut self.ep,
+                t,
+                self.cfg.recv_timeout,
+                IDLE_POLL,
+            )?));
+        };
+        let deadline = Instant::now() + self.cfg.recv_timeout;
         loop {
-            if let Some(rx) = rx {
-                loop {
-                    match rx.try_recv() {
-                        Ok(Cmd::Shutdown) => return Ok(None),
-                        Ok(Cmd::Submit(p)) => {
-                            // Followers never schedule; a stray submit is
-                            // failed rather than silently dropped.
-                            fail_pending(&p, "submitted to a follower node");
-                        }
-                        Err(TryRecvError::Empty) => break,
-                        Err(TryRecvError::Disconnected) => return Ok(None),
+            loop {
+                match rx.try_recv() {
+                    Ok(Cmd::Shutdown) => return Ok(None),
+                    Ok(Cmd::Submit(p)) => {
+                        // Followers never schedule; a stray submit is
+                        // failed rather than silently dropped.
+                        fail_pending(&p, "submitted to a follower node");
                     }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => return Ok(None),
                 }
             }
             match self.ep.recv_tag(t, IDLE_POLL) {
                 Ok(env) => return Ok(Some(env)),
-                Err(NetError::Timeout(_)) => continue,
+                Err(NetError::Timeout(_)) => {
+                    if Instant::now() >= deadline {
+                        return Err(NetError::LeaderLost(self.cfg.recv_timeout).into());
+                    }
+                }
                 Err(e) => return Err(e.into()),
             }
         }
@@ -782,6 +964,7 @@ impl NodeWorker {
             };
             match op {
                 OP_SHUTDOWN => return Ok(()),
+                OP_HEARTBEAT => {} // liveness beacon; the seq bump above replays it
                 OP_ADMIT => {
                     anyhow::ensure!(body.len() > 2, "short admit message");
                     let seq = u16::from_le_bytes(body[0..2].try_into().unwrap());
@@ -827,6 +1010,12 @@ impl NodeWorker {
             };
             if env.payload.is_empty() {
                 return Ok(());
+            }
+            if env.payload.len() == 1 && env.payload[0] == SCATTER_HEARTBEAT {
+                // Leader liveness beacon: consume its sequence number
+                // and keep waiting for real work.
+                self.wseq = self.wseq.wrapping_add(1);
+                continue;
             }
             anyhow::ensure!(
                 env.payload.len() >= 4 + d * 4,
@@ -1279,6 +1468,36 @@ fn slots_from_index(
     (idx, w)
 }
 
+/// Liveness-bounded idle wait for the leader's next `t`-tagged message.
+///
+/// Polls in `poll`-sized slices so the wait stays responsive, and
+/// returns [`NetError::LeaderLost`] once `bound` elapses with no
+/// leader traffic at all. While node 0 is alive this never fires: its
+/// idle heartbeat period ([`LiveConfig::heartbeat_period`]) is several
+/// times shorter than any sane `bound`. This is the liveness fix for
+/// >2-node TCP meshes — the surviving followers' connections keep the
+/// fabric open, so leader death used to be invisible to an idle
+/// follower.
+pub fn recv_from_leader(
+    ep: &mut Endpoint,
+    t: u64,
+    bound: Duration,
+    poll: Duration,
+) -> Result<Envelope, NetError> {
+    let deadline = Instant::now() + bound;
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return Err(NetError::LeaderLost(bound));
+        }
+        match ep.recv_tag(t, poll.min(left)) {
+            Ok(env) => return Ok(env),
+            Err(NetError::Timeout(_)) => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
 /// Fold the runtime's per-token transfer meter into a breakdown.
 fn note_transfers(b: &mut TokenBreakdown, rt: &NanoRuntime) {
     let ts = rt.take_transfer_stats();
@@ -1292,4 +1511,100 @@ fn note_transfers(b: &mut TokenBreakdown, rt: &NanoRuntime) {
 fn note_wire(b: &mut TokenBreakdown, ls: transport::LinkStats) {
     b.net_msgs = ls.msgs();
     b.net_bytes = ls.bytes();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Regression (ROADMAP ">2-node TCP follower liveness"): in a
+    /// 3-node loopback mesh, killing node 0 mid-idle must surface as
+    /// `NetError::LeaderLost` on BOTH followers within the liveness
+    /// bound. Before the heartbeat bound, the followers' own 1↔2
+    /// connection kept each fabric channel open, so the idle wait span
+    /// was unbounded — this test would hang.
+    #[test]
+    fn three_node_followers_detect_leader_death_mid_idle() {
+        let bound = Duration::from_millis(600);
+        let mut eps = crate::network::tcp::loopback_fabric(3).unwrap();
+        let f2 = eps.pop().unwrap();
+        let f1 = eps.pop().unwrap();
+        let mut leader = eps.pop().unwrap();
+
+        let follower = move |mut ep: Endpoint| {
+            move || {
+                // Replay the idle control plane the way `follow_decentralized`
+                // does: heartbeats arrive in sequence until the leader dies.
+                let mut seq = 0u32;
+                let mut beats = 0;
+                loop {
+                    match recv_from_leader(
+                        &mut ep,
+                        tag(PHASE_CTRL, 0, seq),
+                        bound,
+                        Duration::from_millis(20),
+                    ) {
+                        Ok(env) => {
+                            assert_eq!(env.payload, vec![OP_HEARTBEAT]);
+                            seq = seq.wrapping_add(1);
+                            beats += 1;
+                        }
+                        Err(e) => return (beats, e),
+                    }
+                }
+            }
+        };
+        let h1 = std::thread::spawn(follower(f1));
+        let h2 = std::thread::spawn(follower(f2));
+
+        // Node 0 heartbeats a few times while idle, then dies.
+        for seq in 0..3u32 {
+            leader.broadcast(tag(PHASE_CTRL, 0, seq), &[OP_HEARTBEAT]).unwrap();
+            std::thread::sleep(Duration::from_millis(30));
+        }
+        let t_death = Instant::now();
+        drop(leader);
+
+        for h in [h1, h2] {
+            let (beats, err) = h.join().unwrap();
+            assert_eq!(beats, 3, "follower missed heartbeats");
+            assert!(
+                matches!(err, NetError::LeaderLost(_)),
+                "expected LeaderLost, got {err:?}"
+            );
+        }
+        let detect = t_death.elapsed();
+        assert!(
+            detect < bound + Duration::from_secs(2),
+            "leader death took {detect:?} to detect (bound {bound:?})"
+        );
+    }
+
+    /// While heartbeats keep arriving, the bound never fires — liveness
+    /// must not misread an idle-but-healthy leader as dead.
+    #[test]
+    fn heartbeats_keep_idle_followers_alive_past_the_bound() {
+        let bound = Duration::from_millis(500);
+        let mut eps = crate::network::tcp::loopback_fabric(2).unwrap();
+        let mut follower_ep = eps.pop().unwrap();
+        let mut leader = eps.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            for seq in 0..6u32 {
+                recv_from_leader(
+                    &mut follower_ep,
+                    tag(PHASE_CTRL, 0, seq),
+                    bound,
+                    Duration::from_millis(10),
+                )
+                .expect("heartbeat arrived within the bound");
+            }
+        });
+        // 6 beats spaced well under the bound: the total wait (600 ms)
+        // exceeds the bound, but no single gap comes close to it.
+        for seq in 0..6u32 {
+            leader.broadcast(tag(PHASE_CTRL, 0, seq), &[OP_HEARTBEAT]).unwrap();
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        h.join().unwrap();
+    }
 }

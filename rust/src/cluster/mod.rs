@@ -3,6 +3,7 @@
 //! the live threaded cluster (`live`) that runs the nano model for real
 //! through PJRT with the same coordination logic.
 
+pub mod gateway;
 pub mod live;
 pub mod sim;
 

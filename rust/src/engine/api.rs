@@ -93,6 +93,13 @@ impl RequestHandle {
         self.cancel.load(Ordering::Relaxed)
     }
 
+    /// Detached cancellation handle: lets a serving surface (e.g. the
+    /// remote-client gateway) cancel this request after the
+    /// `RequestHandle` itself has been moved into a streaming thread.
+    pub fn canceller(&self) -> Canceller {
+        Canceller { flag: self.cancel.clone() }
+    }
+
     /// Next event, blocking. `None` once the stream is over (a terminal
     /// event was delivered, or the engine went away).
     pub fn next_event(&self) -> Option<TokenEvent> {
@@ -145,6 +152,25 @@ impl RequestHandle {
                 ),
             }
         }
+    }
+}
+
+/// Clonable, send-anywhere cancellation flag for one request (see
+/// [`RequestHandle::canceller`]). Semantics are identical to
+/// [`RequestHandle::cancel`]: cooperative, observed by the engine at
+/// its next scheduling iteration.
+#[derive(Clone)]
+pub struct Canceller {
+    flag: Arc<AtomicBool>,
+}
+
+impl Canceller {
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Relaxed)
     }
 }
 
@@ -237,6 +263,17 @@ mod tests {
         h.cancel();
         assert!(cancel.load(Ordering::Relaxed));
         assert!(h.is_cancelled());
+    }
+
+    #[test]
+    fn canceller_is_detached_from_the_handle() {
+        let (h, _tx, cancel) = RequestHandle::channel(5);
+        let c = h.canceller();
+        assert!(!c.is_cancelled());
+        drop(h); // e.g. the handle moved into a streaming thread that died
+        c.cancel();
+        assert!(cancel.load(Ordering::Relaxed));
+        assert!(c.is_cancelled());
     }
 
     #[test]

@@ -6,12 +6,14 @@
 
 pub mod api;
 pub mod generation;
+pub mod remote;
 pub mod request;
 pub mod sampling;
 pub mod scheduler;
 
-pub use api::{Engine, RequestHandle, TokenEvent};
+pub use api::{Canceller, Engine, RequestHandle, TokenEvent};
 pub use generation::DenseEngine;
+pub use remote::RemoteEngine;
 pub use request::{FinishReason, Request, RequestResult};
 pub use sampling::{Sampler, SamplingParams};
 pub use scheduler::{serve_workload, SchedOutcome, SchedPolicy, SchedReport, SimEngine};

@@ -1,0 +1,503 @@
+//! [`RemoteEngine`]: the [`Engine`] trait over a socket.
+//!
+//! Connects to the client listener of an `apple-moe node --client-port`
+//! daemon (node 0 of a live cluster) and speaks
+//! [`crate::network::proto`]. `submit` ships the encoded request;
+//! events stream back and are demultiplexed by request id into each
+//! handle's channel — so `submit`/`stream`/`cancel`/`join` behave
+//! identically whether the engine is in-process (`LiveCluster`,
+//! `DenseEngine`) or across the network, and any number of requests
+//! can be in flight on one connection.
+//!
+//! Cancellation is cooperative end to end: `RequestHandle::cancel`
+//! sets the local flag, a pump thread notices and sends a `Cancel`
+//! frame, the daemon's gateway flips the scheduler-side flag, and the
+//! stream ends with `Done { finish: Cancelled }` like any local
+//! cancel.
+
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::engine::api::{Canceller, Engine, RequestHandle, TokenEvent};
+use crate::engine::request::Request;
+use crate::network::proto::{self, ClientMsg, ServerHello, ServerMsg};
+use crate::network::transport::LinkStats;
+
+/// How often the cancel pump scans for locally-cancelled requests.
+const CANCEL_POLL: Duration = Duration::from_millis(20);
+
+/// Bound on the server's handshake reply. A daemon that accepted the
+/// TCP connection but has not started its gateway yet (artifacts still
+/// compiling) simply fails the attempt — callers retry-connect instead
+/// of blocking indefinitely inside the handshake.
+const HELLO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Bound on any single frame write (mirrors the gateway's write
+/// timeout): a daemon that wedges without closing the socket must not
+/// trap submit/cancel — or `Drop`, which needs the writer mutex —
+/// inside an unbounded `write_all`.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+struct InFlight {
+    events: Sender<TokenEvent>,
+    canceller: Canceller,
+    cancel_sent: bool,
+}
+
+struct Shared {
+    inflight: Mutex<HashMap<u64, InFlight>>,
+    writer: Mutex<TcpStream>,
+    stats: Mutex<LinkStats>,
+    closed: AtomicBool,
+}
+
+impl Shared {
+    fn write_msg(&self, msg: &ClientMsg) -> std::io::Result<()> {
+        let body = msg.encode();
+        let mut w = self.writer.lock().expect("writer lock");
+        if let Err(e) = proto::write_frame(&mut *w, &body) {
+            // A failed (possibly partial) write desyncs the frame
+            // stream: poison the socket so the reader fails every
+            // in-flight request promptly, instead of later writes
+            // (submit retries, the cancel pump) appending bytes at an
+            // arbitrary mid-frame offset.
+            let _ = w.shutdown(Shutdown::Both);
+            return Err(e);
+        }
+        drop(w);
+        let mut s = self.stats.lock().expect("stats lock");
+        s.sent_msgs += 1;
+        s.sent_bytes += body.len() as u64 + 4;
+        Ok(())
+    }
+
+    /// Terminate every in-flight stream with `Failed` (server gone).
+    /// Marks the connection closed UNDER the inflight lock: `submit`
+    /// checks the flag under the same lock, so a request can never be
+    /// registered after this drain (it would hang forever with no
+    /// reader left to fail it).
+    fn fail_all(&self, error: &str) {
+        let mut map = self.inflight.lock().expect("inflight lock");
+        self.closed.store(true, Ordering::Relaxed);
+        for (id, f) in map.drain() {
+            let _ = f.events.send(TokenEvent::Failed { id, error: error.to_string() });
+        }
+    }
+}
+
+/// A serving engine that lives on the other end of a TCP connection.
+pub struct RemoteEngine {
+    shared: Arc<Shared>,
+    hello: ServerHello,
+    stop: Arc<AtomicBool>,
+    reader: Option<JoinHandle<()>>,
+    pump: Option<JoinHandle<()>>,
+}
+
+impl RemoteEngine {
+    /// Dial a serving daemon's client port and handshake.
+    pub fn connect(addr: &str) -> Result<RemoteEngine> {
+        let mut stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to serving daemon at {addr}"))?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(HELLO_TIMEOUT))?;
+        let hello = proto::client_handshake(&mut stream)
+            .with_context(|| format!("handshaking with {addr}"))?;
+        stream.set_read_timeout(None)?;
+        stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+        let shared = Arc::new(Shared {
+            inflight: Mutex::new(HashMap::new()),
+            writer: Mutex::new(stream.try_clone()?),
+            stats: Mutex::new(LinkStats::default()),
+            closed: AtomicBool::new(false),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let r_shared = shared.clone();
+        let reader = std::thread::spawn(move || reader_loop(r_shared, stream));
+        let p_shared = shared.clone();
+        let p_stop = stop.clone();
+        let pump = std::thread::spawn(move || cancel_pump(p_shared, p_stop));
+        Ok(RemoteEngine {
+            shared,
+            hello,
+            stop,
+            reader: Some(reader),
+            pump: Some(pump),
+        })
+    }
+
+    /// What the daemon reported at handshake (cluster size, concurrency).
+    pub fn server(&self) -> ServerHello {
+        self.hello
+    }
+
+    /// Client-side wire accounting since connect.
+    pub fn stats(&self) -> LinkStats {
+        *self.shared.stats.lock().expect("stats lock")
+    }
+
+    /// Ask the daemon to drain in-flight requests and shut the whole
+    /// cluster down (the administrative stop `apple-moe client
+    /// --shutdown` sends).
+    pub fn shutdown_server(&self) -> Result<()> {
+        self.shared
+            .write_msg(&ClientMsg::Shutdown)
+            .context("sending shutdown to the serving daemon")
+    }
+
+    fn teardown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Unblock the reader; in-flight streams get a terminal Failed.
+        let _ = self.shared.writer.lock().expect("writer lock").shutdown(Shutdown::Both);
+        if let Some(h) = self.pump.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Engine for RemoteEngine {
+    fn submit(&mut self, req: Request) -> Result<RequestHandle> {
+        anyhow::ensure!(!req.prompt.is_empty(), "request {} has an empty prompt", req.id);
+        let (handle, events, _cancel) = RequestHandle::channel(req.id);
+        {
+            let mut map = self.shared.inflight.lock().expect("inflight lock");
+            // Checked under the lock: `fail_all` sets the flag and
+            // drains under this same mutex, so either it sees our entry
+            // (and fails it) or we see the closed flag here — a handle
+            // that nobody will ever resolve cannot be handed out.
+            anyhow::ensure!(
+                !self.shared.closed.load(Ordering::Relaxed),
+                "connection to the serving daemon is closed"
+            );
+            anyhow::ensure!(
+                !map.contains_key(&req.id),
+                "request id {} is already in flight on this connection",
+                req.id
+            );
+            map.insert(
+                req.id,
+                InFlight {
+                    events,
+                    canceller: handle.canceller(),
+                    cancel_sent: false,
+                },
+            );
+        }
+        if let Err(e) = self.shared.write_msg(&ClientMsg::Submit(req)) {
+            let id = handle.id();
+            self.shared.inflight.lock().expect("inflight lock").remove(&id);
+            return Err(anyhow::anyhow!("submitting request {id}: {e}"));
+        }
+        Ok(handle)
+    }
+}
+
+impl Drop for RemoteEngine {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+/// Decode server frames and demultiplex them into the per-request
+/// event channels. Exits on EOF/error, failing whatever is still in
+/// flight.
+fn reader_loop(shared: Arc<Shared>, stream: TcpStream) {
+    let mut r = BufReader::new(stream);
+    loop {
+        let msg = match proto::read_frame(&mut r).and_then(|body| {
+            ServerMsg::decode(&body)
+                .map(|m| (m, body.len() as u64 + 4))
+                .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+        }) {
+            Ok((m, bytes)) => {
+                let mut s = shared.stats.lock().expect("stats lock");
+                s.recv_msgs += 1;
+                s.recv_bytes += bytes;
+                m
+            }
+            Err(e) => {
+                shared.closed.store(true, Ordering::Relaxed);
+                let why = if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                    "server closed the connection".to_string()
+                } else {
+                    format!("connection to the server broke: {e}")
+                };
+                shared.fail_all(&why);
+                return;
+            }
+        };
+        let id = msg.id();
+        let mut map = shared.inflight.lock().expect("inflight lock");
+        let Some(f) = map.get(&id) else {
+            // Late event for a request whose handle already got its
+            // terminal message (e.g. a token racing a cancel). Drop it.
+            continue;
+        };
+        let (ev, terminal) = match msg {
+            ServerMsg::Started { ttft_s, queued_s, .. } => {
+                (TokenEvent::Started { ttft_s, queued_s }, false)
+            }
+            ServerMsg::Token { token, logprob, .. } => {
+                (TokenEvent::Token { id: token, logprob }, false)
+            }
+            ServerMsg::Done { result } => (TokenEvent::Done { result }, true),
+            ServerMsg::Failed { error, .. } => (TokenEvent::Failed { id, error }, true),
+        };
+        let _ = f.events.send(ev);
+        if terminal {
+            map.remove(&id);
+        }
+    }
+}
+
+/// Forward local `RequestHandle::cancel` flags to the server as
+/// `Cancel` frames (once per request).
+fn cancel_pump(shared: Arc<Shared>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Relaxed) {
+        // Collect under the lock, write with it RELEASED: a blocking
+        // socket write must not freeze the reader/submit paths, which
+        // share this mutex.
+        let pending: Vec<u64> = {
+            let map = shared.inflight.lock().expect("inflight lock");
+            map.iter()
+                .filter(|(_, f)| f.canceller.is_cancelled() && !f.cancel_sent)
+                .map(|(&id, _)| id)
+                .collect()
+        };
+        for id in pending {
+            if shared.write_msg(&ClientMsg::Cancel(id)).is_ok() {
+                // The request may have finished while the frame was in
+                // flight; marking a missing entry is a no-op (and the
+                // server ignores cancels for unknown ids).
+                let mut map = shared.inflight.lock().expect("inflight lock");
+                if let Some(f) = map.get_mut(&id) {
+                    f.cancel_sent = true;
+                }
+            }
+        }
+        std::thread::sleep(CANCEL_POLL);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::request::{FinishReason, RequestResult};
+    use crate::metrics::RunMetrics;
+    use std::io::Write;
+    use std::net::TcpListener;
+
+    /// A hand-rolled mock daemon good for one connection: handshakes,
+    /// then serves Submit/Cancel with a scripted token stream.
+    fn mock_server(
+        tokens_per_request: u32,
+        delay: Duration,
+    ) -> (String, JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = format!("127.0.0.1:{}", listener.local_addr().unwrap().port());
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            proto::server_handshake(&mut s, ServerHello { n_nodes: 2, max_active: 2 })
+                .unwrap();
+            let mut reader = BufReader::new(s.try_clone().unwrap());
+            let writer = Arc::new(Mutex::new(s));
+            let cancelled: Arc<Mutex<std::collections::HashSet<u64>>> =
+                Arc::new(Mutex::new(std::collections::HashSet::new()));
+            let mut workers = Vec::new();
+            while let Ok(msg) = proto::read_client(&mut reader) {
+                match msg {
+                    ClientMsg::Submit(req) => {
+                        let w = writer.clone();
+                        let c = cancelled.clone();
+                        workers.push(std::thread::spawn(move || {
+                            let id = req.id;
+                            {
+                                let mut w = w.lock().unwrap();
+                                proto::write_server(
+                                    &mut *w,
+                                    &ServerMsg::Started { id, ttft_s: 0.25, queued_s: 0.1 },
+                                )
+                                .unwrap();
+                            }
+                            let mut generated = Vec::new();
+                            let mut finish = FinishReason::Length;
+                            for i in 0..tokens_per_request {
+                                if c.lock().unwrap().contains(&id) {
+                                    finish = FinishReason::Cancelled;
+                                    break;
+                                }
+                                let t = req.prompt[0] + i;
+                                generated.push(t);
+                                let mut w = w.lock().unwrap();
+                                proto::write_server(
+                                    &mut *w,
+                                    &ServerMsg::Token { id, token: t, logprob: Some(-1.0) },
+                                )
+                                .unwrap();
+                                drop(w);
+                                std::thread::sleep(delay);
+                            }
+                            let result = RequestResult {
+                                id,
+                                generated,
+                                finish,
+                                metrics: RunMetrics {
+                                    ttft_ns: 250_000_000,
+                                    queueing_ns: 100_000_000,
+                                    latency_ns: 500_000_000,
+                                    ..Default::default()
+                                },
+                            };
+                            let mut w = w.lock().unwrap();
+                            let _ = proto::write_server(&mut *w, &ServerMsg::Done { result });
+                        }));
+                    }
+                    ClientMsg::Cancel(id) => {
+                        cancelled.lock().unwrap().insert(id);
+                    }
+                    ClientMsg::Shutdown => break,
+                }
+            }
+            for w in workers {
+                let _ = w.join();
+            }
+        });
+        (addr, h)
+    }
+
+    #[test]
+    fn submit_join_roundtrip() {
+        let (addr, server) = mock_server(4, Duration::ZERO);
+        let mut eng = RemoteEngine::connect(&addr).unwrap();
+        assert_eq!(eng.server(), ServerHello { n_nodes: 2, max_active: 2 });
+        let r = eng.submit(Request::new(5, vec![100], 4)).unwrap().join().unwrap();
+        assert_eq!(r.id, 5);
+        assert_eq!(r.generated, vec![100, 101, 102, 103]);
+        assert_eq!(r.finish, FinishReason::Length);
+        assert_eq!(r.metrics.ttft_ns, 250_000_000);
+        assert!(eng.stats().sent_msgs >= 1);
+        assert!(eng.stats().recv_msgs >= 6); // Started + 4 tokens + Done
+        eng.shutdown_server().unwrap();
+        drop(eng);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn streamed_events_match_result_and_multiplex_by_id() {
+        let (addr, server) = mock_server(3, Duration::from_millis(1));
+        let mut eng = RemoteEngine::connect(&addr).unwrap();
+        let h1 = eng.submit(Request::new(1, vec![10], 3)).unwrap();
+        let h2 = eng.submit(Request::new(2, vec![20], 3)).unwrap();
+        let drain = |h: RequestHandle| {
+            let mut streamed = Vec::new();
+            loop {
+                match h.next_event().expect("stream ended early") {
+                    TokenEvent::Token { id, .. } => streamed.push(id),
+                    TokenEvent::Done { result } => return (streamed, result),
+                    TokenEvent::Failed { error, .. } => panic!("failed: {error}"),
+                    _ => {}
+                }
+            }
+        };
+        let (s2, r2) = drain(h2);
+        let (s1, r1) = drain(h1);
+        assert_eq!(s1, r1.generated);
+        assert_eq!(s2, r2.generated);
+        assert_eq!(r1.generated, vec![10, 11, 12]);
+        assert_eq!(r2.generated, vec![20, 21, 22]);
+        eng.shutdown_server().unwrap();
+        drop(eng);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn cancel_crosses_the_wire() {
+        let (addr, server) = mock_server(10_000, Duration::from_millis(5));
+        let mut eng = RemoteEngine::connect(&addr).unwrap();
+        let h = eng.submit(Request::new(7, vec![100], 10_000)).unwrap();
+        // Wait for the stream to be live, then cancel.
+        loop {
+            if let Some(TokenEvent::Token { .. }) = h.next_event() {
+                break;
+            }
+        }
+        h.cancel();
+        let r = h.join().unwrap();
+        assert_eq!(r.finish, FinishReason::Cancelled);
+        assert!(r.generated.len() < 10_000, "cancel never reached the server");
+        eng.shutdown_server().unwrap();
+        drop(eng);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn duplicate_in_flight_id_is_rejected_locally() {
+        let (addr, server) = mock_server(1000, Duration::from_millis(2));
+        let mut eng = RemoteEngine::connect(&addr).unwrap();
+        let h = eng.submit(Request::new(3, vec![1], 1000)).unwrap();
+        assert!(eng.submit(Request::new(3, vec![1], 4)).is_err());
+        h.cancel();
+        let _ = h.join();
+        eng.shutdown_server().unwrap();
+        drop(eng);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn server_death_fails_in_flight_requests() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = format!("127.0.0.1:{}", listener.local_addr().unwrap().port());
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            proto::server_handshake(&mut s, ServerHello { n_nodes: 1, max_active: 1 })
+                .unwrap();
+            // Accept one submit, stream one token, then die.
+            let mut reader = BufReader::new(s.try_clone().unwrap());
+            let msg = proto::read_client(&mut reader).unwrap();
+            let ClientMsg::Submit(req) = msg else { panic!("expected submit") };
+            proto::write_server(
+                &mut s,
+                &ServerMsg::Token { id: req.id, token: 42, logprob: None },
+            )
+            .unwrap();
+            s.flush().unwrap();
+        });
+        let mut eng = RemoteEngine::connect(&addr).unwrap();
+        let h = eng.submit(Request::new(9, vec![5], 100)).unwrap();
+        let err = h.join().unwrap_err().to_string();
+        assert!(
+            err.contains("closed") || err.contains("broke"),
+            "unexpected error: {err}"
+        );
+        server.join().unwrap();
+        // And new submissions are refused.
+        assert!(eng.submit(Request::new(10, vec![5], 4)).is_err());
+    }
+
+    #[test]
+    fn connect_to_a_mesh_port_fails_cleanly() {
+        // A client that dials a *mesh* port must get a handshake error,
+        // not a hang: the mesh peer speaks AMOE, not AMOC.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = format!("127.0.0.1:{}", listener.local_addr().unwrap().port());
+        let mesh = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // A mesh node greets with its own handshake immediately.
+            s.write_all(b"AMOE\x01\x00\x00\x00\x00\x00\x02\x00\x00\x00").unwrap();
+        });
+        let err = format!("{:#}", RemoteEngine::connect(&addr).unwrap_err());
+        assert!(err.contains("magic"), "unexpected error: {err}");
+        mesh.join().unwrap();
+    }
+}

@@ -68,7 +68,7 @@ impl Request {
     /// Inverse of [`Request::encode`]; rejects truncated or trailing
     /// bytes (a corrupt admission message must not half-apply).
     pub fn decode(bytes: &[u8]) -> Result<Request> {
-        let mut c = Cursor { b: bytes, at: 0 };
+        let mut c = crate::util::wire::Cursor::new(bytes);
         let id = c.u64()?;
         let n = c.u32()? as usize;
         let prompt = (0..n).map(|_| c.u32()).collect::<Result<Vec<u32>>>()?;
@@ -81,42 +81,12 @@ impl Request {
             1 => Sampler::TopK { k: c.u32()? as usize, temperature: c.f64()? },
             k => anyhow::bail!("unknown sampler kind {k} on the wire"),
         };
-        anyhow::ensure!(c.at == bytes.len(), "trailing bytes in encoded request");
+        anyhow::ensure!(c.done(), "trailing bytes in encoded request");
         Ok(Request {
             id,
             prompt,
             sampling: SamplingParams { sampler, seed, stop, max_new_tokens },
         })
-    }
-}
-
-struct Cursor<'a> {
-    b: &'a [u8],
-    at: usize,
-}
-
-impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        anyhow::ensure!(self.at + n <= self.b.len(), "truncated encoded request");
-        let s = &self.b[self.at..self.at + n];
-        self.at += n;
-        Ok(s)
-    }
-
-    fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
-    }
-
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 }
 

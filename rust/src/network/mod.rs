@@ -10,8 +10,12 @@
 //!   latency into live runs (real mode) or charging it to the virtual
 //!   clock;
 //! - `tcp`: the socket backend — framed envelopes over `TcpStream`, so
-//!   the same wire protocols span OS processes and machines.
+//!   the same wire protocols span OS processes and machines;
+//! - `proto`: the client-facing remote serving protocol (submit over
+//!   the socket, stream `TokenEvent`s back) spoken between `apple-moe
+//!   client` / `RemoteEngine` and the client listener on node 0.
 
+pub mod proto;
 pub mod tcp;
 pub mod transport;
 

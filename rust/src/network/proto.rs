@@ -1,0 +1,585 @@
+//! Client-facing remote serving protocol: the wire format spoken
+//! between `apple-moe client` (or any [`crate::engine::remote::RemoteEngine`])
+//! and the client listener on node 0 of a live cluster.
+//!
+//! This is a *different* protocol from the node↔node mesh
+//! (`network::tcp`): clients are untrusted strangers that come and go,
+//! so the framing carries no node identities — just a request id — and
+//! the handshake uses its own magic so a client that dials a mesh port
+//! (or a node that dials a client port) fails fast instead of wedging.
+//!
+//! Wire format (all integers little-endian):
+//!
+//! - **Client handshake**: client sends `b"AMOC"` magic + `u16`
+//!   protocol version; the server replies with the same magic/version
+//!   plus `u32 n_nodes` and `u32 max_active` (so the client can report
+//!   the cluster shape it is talking to).
+//! - **Frame** (both directions): `u32` body length, then the body. The
+//!   first body byte is the message kind.
+//! - **Client → server** ([`ClientMsg`]): `Submit` carries one encoded
+//!   [`Request`] ([`Request::encode`], the same codec the scheduler's
+//!   admission broadcast uses); `Cancel` carries the request id;
+//!   `Shutdown` asks the daemon to drain in-flight requests and exit
+//!   (the administrative stop `apple-moe client --shutdown` sends).
+//! - **Server → client** ([`ServerMsg`]): mirrors
+//!   [`crate::engine::api::TokenEvent`] with the request id added to
+//!   every message, so any number of in-flight requests multiplex over
+//!   one connection: `Started`/`Token`/`Done`/`Failed`.
+//!
+//! `Done` ships the full [`RequestResult`]: generated tokens, finish
+//! reason, and the serving metrics. Phase metrics cross the wire as
+//! per-token *means* plus counters (the Welford accumulators cannot be
+//! serialized losslessly); per-token means, totals, throughput and the
+//! byte counters survive exactly, higher moments (variance) do not.
+
+use std::io::{Read, Write};
+
+use anyhow::Result;
+
+use crate::engine::request::{FinishReason, Request, RequestResult};
+use crate::metrics::{PhaseMetrics, RunMetrics};
+use crate::util::wire::Cursor;
+
+/// Client-port handshake magic (distinct from the mesh's `AMOE`).
+pub const CLIENT_MAGIC: [u8; 4] = *b"AMOC";
+pub const CLIENT_PROTOCOL_VERSION: u16 = 1;
+/// Corrupt-stream guard; prompts are token ids, nothing legitimate
+/// comes near this.
+const MAX_CLIENT_FRAME: u32 = 1 << 26;
+
+const K_SUBMIT: u8 = 1;
+const K_CANCEL: u8 = 2;
+const K_SHUTDOWN: u8 = 3;
+const K_STARTED: u8 = 16;
+const K_TOKEN: u8 = 17;
+const K_DONE: u8 = 18;
+const K_FAILED: u8 = 19;
+
+/// What the server tells a freshly-handshaken client about itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerHello {
+    pub n_nodes: u32,
+    pub max_active: u32,
+}
+
+/// One message from a client to the serving daemon.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientMsg {
+    /// Submit a request for generation. The id must be unique among the
+    /// connection's in-flight requests.
+    Submit(Request),
+    /// Cooperatively cancel an in-flight request by id.
+    Cancel(u64),
+    /// Administrative: stop accepting clients, drain in-flight
+    /// requests, shut the whole cluster down.
+    Shutdown,
+}
+
+/// One event from the serving daemon to a client — `TokenEvent` with
+/// the request id aboard (the connection multiplexes many requests).
+/// (No `PartialEq`: `RequestResult` carries Welford accumulators.)
+#[derive(Debug, Clone)]
+pub enum ServerMsg {
+    Started { id: u64, ttft_s: f64, queued_s: f64 },
+    Token { id: u64, token: u32, logprob: Option<f32> },
+    Done { result: RequestResult },
+    Failed { id: u64, error: String },
+}
+
+impl ClientMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        match self {
+            ClientMsg::Submit(req) => {
+                b.push(K_SUBMIT);
+                b.extend_from_slice(&req.encode());
+            }
+            ClientMsg::Cancel(id) => {
+                b.push(K_CANCEL);
+                b.extend_from_slice(&id.to_le_bytes());
+            }
+            ClientMsg::Shutdown => b.push(K_SHUTDOWN),
+        }
+        b
+    }
+
+    pub fn decode(body: &[u8]) -> Result<ClientMsg> {
+        let Some((&kind, rest)) = body.split_first() else {
+            anyhow::bail!("empty client message");
+        };
+        match kind {
+            K_SUBMIT => Ok(ClientMsg::Submit(Request::decode(rest)?)),
+            K_CANCEL => {
+                anyhow::ensure!(rest.len() == 8, "short cancel message");
+                Ok(ClientMsg::Cancel(u64::from_le_bytes(rest.try_into().unwrap())))
+            }
+            K_SHUTDOWN => {
+                anyhow::ensure!(rest.is_empty(), "trailing bytes in shutdown message");
+                Ok(ClientMsg::Shutdown)
+            }
+            k => anyhow::bail!("unknown client message kind {k}"),
+        }
+    }
+}
+
+impl ServerMsg {
+    /// The request this event belongs to.
+    pub fn id(&self) -> u64 {
+        match self {
+            ServerMsg::Started { id, .. }
+            | ServerMsg::Token { id, .. }
+            | ServerMsg::Failed { id, .. } => *id,
+            ServerMsg::Done { result } => result.id,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        match self {
+            ServerMsg::Started { id, ttft_s, queued_s } => {
+                b.push(K_STARTED);
+                b.extend_from_slice(&id.to_le_bytes());
+                b.extend_from_slice(&ttft_s.to_le_bytes());
+                b.extend_from_slice(&queued_s.to_le_bytes());
+            }
+            ServerMsg::Token { id, token, logprob } => {
+                b.push(K_TOKEN);
+                b.extend_from_slice(&id.to_le_bytes());
+                b.extend_from_slice(&token.to_le_bytes());
+                match logprob {
+                    None => b.push(0),
+                    Some(lp) => {
+                        b.push(1);
+                        b.extend_from_slice(&lp.to_le_bytes());
+                    }
+                }
+            }
+            ServerMsg::Done { result } => {
+                b.push(K_DONE);
+                encode_result(&mut b, result);
+            }
+            ServerMsg::Failed { id, error } => {
+                b.push(K_FAILED);
+                b.extend_from_slice(&id.to_le_bytes());
+                b.extend_from_slice(&(error.len() as u32).to_le_bytes());
+                b.extend_from_slice(error.as_bytes());
+            }
+        }
+        b
+    }
+
+    pub fn decode(body: &[u8]) -> Result<ServerMsg> {
+        let Some((&kind, rest)) = body.split_first() else {
+            anyhow::bail!("empty server message");
+        };
+        let mut c = Cursor::new(rest);
+        let msg = match kind {
+            K_STARTED => ServerMsg::Started {
+                id: c.u64()?,
+                ttft_s: c.f64()?,
+                queued_s: c.f64()?,
+            },
+            K_TOKEN => {
+                let id = c.u64()?;
+                let token = c.u32()?;
+                let logprob = match c.u8()? {
+                    0 => None,
+                    1 => Some(c.f32()?),
+                    m => anyhow::bail!("bad logprob marker {m}"),
+                };
+                ServerMsg::Token { id, token, logprob }
+            }
+            K_DONE => ServerMsg::Done { result: decode_result(&mut c)? },
+            K_FAILED => {
+                let id = c.u64()?;
+                let n = c.u32()? as usize;
+                let error = String::from_utf8(c.take(n)?.to_vec())
+                    .map_err(|_| anyhow::anyhow!("non-utf8 error string"))?;
+                ServerMsg::Failed { id, error }
+            }
+            k => anyhow::bail!("unknown server message kind {k}"),
+        };
+        anyhow::ensure!(c.done(), "trailing bytes in server message");
+        Ok(msg)
+    }
+}
+
+// ---------------- framing ----------------
+
+fn io_invalid(e: impl std::fmt::Display) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(4 + body.len());
+    buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    buf.extend_from_slice(body);
+    w.write_all(&buf)
+}
+
+/// Read one length-prefixed frame (blocking).
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len);
+    if len > MAX_CLIENT_FRAME {
+        return Err(io_invalid(format!(
+            "client frame of {len} bytes exceeds the {MAX_CLIENT_FRAME} B cap"
+        )));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    Ok(body)
+}
+
+pub fn write_client(w: &mut impl Write, m: &ClientMsg) -> std::io::Result<()> {
+    write_frame(w, &m.encode())
+}
+
+pub fn read_client(r: &mut impl Read) -> std::io::Result<ClientMsg> {
+    ClientMsg::decode(&read_frame(r)?).map_err(io_invalid)
+}
+
+pub fn write_server(w: &mut impl Write, m: &ServerMsg) -> std::io::Result<()> {
+    write_frame(w, &m.encode())
+}
+
+pub fn read_server(r: &mut impl Read) -> std::io::Result<ServerMsg> {
+    ServerMsg::decode(&read_frame(r)?).map_err(io_invalid)
+}
+
+// ---------------- handshake ----------------
+
+/// Client side: announce ourselves, read the server's reply.
+pub fn client_handshake(s: &mut (impl Read + Write)) -> Result<ServerHello> {
+    let mut hello = Vec::with_capacity(6);
+    hello.extend_from_slice(&CLIENT_MAGIC);
+    hello.extend_from_slice(&CLIENT_PROTOCOL_VERSION.to_le_bytes());
+    s.write_all(&hello)?;
+    let mut buf = [0u8; 14];
+    s.read_exact(&mut buf)
+        .map_err(|e| anyhow::anyhow!("reading server hello: {e} (is this a client port?)"))?;
+    check_magic_version(&buf)?;
+    Ok(ServerHello {
+        n_nodes: u32::from_le_bytes(buf[6..10].try_into().unwrap()),
+        max_active: u32::from_le_bytes(buf[10..14].try_into().unwrap()),
+    })
+}
+
+/// Server side: read the client's announcement, reply with the cluster
+/// shape. The caller is expected to have armed a read timeout — a
+/// connect-then-silent socket must not wedge the accept loop.
+pub fn server_handshake(s: &mut (impl Read + Write), hello: ServerHello) -> Result<()> {
+    let mut buf = [0u8; 6];
+    s.read_exact(&mut buf)?;
+    check_magic_version(&buf)?;
+    let mut reply = Vec::with_capacity(14);
+    reply.extend_from_slice(&CLIENT_MAGIC);
+    reply.extend_from_slice(&CLIENT_PROTOCOL_VERSION.to_le_bytes());
+    reply.extend_from_slice(&hello.n_nodes.to_le_bytes());
+    reply.extend_from_slice(&hello.max_active.to_le_bytes());
+    s.write_all(&reply)?;
+    Ok(())
+}
+
+fn check_magic_version(buf: &[u8]) -> Result<()> {
+    anyhow::ensure!(
+        buf[0..4] == CLIENT_MAGIC,
+        "bad magic (not an apple-moe client port)"
+    );
+    let version = u16::from_le_bytes([buf[4], buf[5]]);
+    anyhow::ensure!(
+        version == CLIENT_PROTOCOL_VERSION,
+        "peer speaks client protocol v{version}, this binary speaks v{CLIENT_PROTOCOL_VERSION}"
+    );
+    Ok(())
+}
+
+// ---------------- result codec ----------------
+
+fn encode_phase(b: &mut Vec<u8>, p: &PhaseMetrics) {
+    b.extend_from_slice(&p.tokens.to_le_bytes());
+    for mean in [p.moe.mean(), p.comm.mean(), p.misc.mean(), p.h2d.mean(), p.d2h.mean()] {
+        b.extend_from_slice(&mean.to_le_bytes());
+    }
+    for n in [p.h2d_bytes, p.d2h_bytes, p.net_msgs, p.net_bytes] {
+        b.extend_from_slice(&n.to_le_bytes());
+    }
+}
+
+fn decode_phase(c: &mut Cursor) -> Result<PhaseMetrics> {
+    let tokens = c.u64()?;
+    // The rebuild below iterates `tokens` times; cap it so a corrupt
+    // (or hostile) frame cannot spin the decoder.
+    anyhow::ensure!(tokens <= 1 << 24, "implausible token count {tokens} on the wire");
+    let (moe, comm, misc, h2d, d2h) = (c.f64()?, c.f64()?, c.f64()?, c.f64()?, c.f64()?);
+    let mut p = PhaseMetrics::default();
+    // Rebuild the accumulators from the per-token means: pushing the
+    // mean `tokens` times reproduces mean and count exactly (Welford's
+    // increment is (x - m)/n = 0 after the first push); the byte/msg
+    // counters are totals and transfer directly.
+    for _ in 0..tokens {
+        p.moe.push(moe);
+        p.comm.push(comm);
+        p.misc.push(misc);
+        p.total.push(moe + comm + misc);
+        p.h2d.push(h2d);
+        p.d2h.push(d2h);
+    }
+    p.tokens = tokens;
+    p.h2d_bytes = c.u64()?;
+    p.d2h_bytes = c.u64()?;
+    p.net_msgs = c.u64()?;
+    p.net_bytes = c.u64()?;
+    Ok(p)
+}
+
+fn encode_result(b: &mut Vec<u8>, r: &RequestResult) {
+    b.extend_from_slice(&r.id.to_le_bytes());
+    b.extend_from_slice(&(r.generated.len() as u32).to_le_bytes());
+    for &t in &r.generated {
+        b.extend_from_slice(&t.to_le_bytes());
+    }
+    b.push(match r.finish {
+        FinishReason::Length => 0,
+        FinishReason::Stop => 1,
+        FinishReason::Cancelled => 2,
+    });
+    let m = &r.metrics;
+    for n in [m.warmup_ns, m.queueing_ns, m.ttft_ns, m.latency_ns] {
+        b.extend_from_slice(&n.to_le_bytes());
+    }
+    encode_phase(b, &m.prefill);
+    encode_phase(b, &m.decode);
+}
+
+fn decode_result(c: &mut Cursor) -> Result<RequestResult> {
+    let id = c.u64()?;
+    let n = c.u32()? as usize;
+    let generated = (0..n).map(|_| c.u32()).collect::<Result<Vec<u32>>>()?;
+    let finish = match c.u8()? {
+        0 => FinishReason::Length,
+        1 => FinishReason::Stop,
+        2 => FinishReason::Cancelled,
+        k => anyhow::bail!("unknown finish reason {k} on the wire"),
+    };
+    let mut metrics = RunMetrics {
+        warmup_ns: c.u64()?,
+        queueing_ns: c.u64()?,
+        ttft_ns: c.u64()?,
+        latency_ns: c.u64()?,
+        ..Default::default()
+    };
+    metrics.prefill = decode_phase(c)?;
+    metrics.decode = decode_phase(c)?;
+    Ok(RequestResult { id, generated, finish, metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::sampling::Sampler;
+    use crate::metrics::TokenBreakdown;
+    use crate::util::prop::{forall, Gen};
+
+    fn gen_request(g: &mut Gen) -> Request {
+        let mut r = Request::synthetic(
+            g.u64_in(0..1 << 32),
+            g.usize_in(1..64),
+            512,
+            g.usize_in(1..256),
+        );
+        if g.bool() {
+            r.sampling.sampler = Sampler::TopK {
+                k: g.usize_in(1..64),
+                temperature: 0.1 + g.f64_unit(),
+            };
+        }
+        r.sampling.seed = g.u64_in(0..u64::MAX >> 1);
+        r.sampling.stop = (0..g.usize_in(0..4)).map(|_| g.u64_in(0..512) as u32).collect();
+        r
+    }
+
+    fn gen_phase(g: &mut Gen) -> PhaseMetrics {
+        let mut p = PhaseMetrics::default();
+        // Constant per-token breakdown: means survive the wire exactly.
+        let b = TokenBreakdown {
+            moe_ns: g.u64_in(0..1 << 30),
+            comm_ns: g.u64_in(0..1 << 30),
+            misc_ns: g.u64_in(0..1 << 30),
+            h2d_ns: g.u64_in(0..1 << 20),
+            d2h_ns: g.u64_in(0..1 << 20),
+            h2d_bytes: g.u64_in(0..1 << 20),
+            d2h_bytes: g.u64_in(0..1 << 20),
+            net_msgs: g.u64_in(0..64),
+            net_bytes: g.u64_in(0..1 << 20),
+        };
+        for _ in 0..g.usize_in(0..32) {
+            p.push(b);
+        }
+        p
+    }
+
+    fn gen_result(g: &mut Gen) -> RequestResult {
+        let metrics = RunMetrics {
+            warmup_ns: g.u64_in(0..1 << 40),
+            queueing_ns: g.u64_in(0..1 << 40),
+            ttft_ns: g.u64_in(0..1 << 40),
+            latency_ns: g.u64_in(0..1 << 40),
+            prefill: gen_phase(g),
+            decode: gen_phase(g),
+        };
+        RequestResult {
+            id: g.u64_in(0..1 << 48),
+            generated: (0..g.usize_in(0..64)).map(|_| g.u64_in(0..512) as u32).collect(),
+            finish: match g.usize_in(0..3) {
+                0 => FinishReason::Length,
+                1 => FinishReason::Stop,
+                _ => FinishReason::Cancelled,
+            },
+            metrics,
+        }
+    }
+
+    fn phase_eq(a: &PhaseMetrics, b: &PhaseMetrics) -> bool {
+        let close = |x: f64, y: f64| (x - y).abs() <= 1e-9 * x.abs().max(y.abs()).max(1.0);
+        a.tokens == b.tokens
+            && close(a.moe.mean(), b.moe.mean())
+            && close(a.comm.mean(), b.comm.mean())
+            && close(a.misc.mean(), b.misc.mean())
+            && close(a.total.mean(), b.total.mean())
+            && close(a.h2d.mean(), b.h2d.mean())
+            && close(a.d2h.mean(), b.d2h.mean())
+            && a.h2d_bytes == b.h2d_bytes
+            && a.d2h_bytes == b.d2h_bytes
+            && a.net_msgs == b.net_msgs
+            && a.net_bytes == b.net_bytes
+    }
+
+    fn result_eq(a: &RequestResult, b: &RequestResult) -> bool {
+        a.id == b.id
+            && a.generated == b.generated
+            && a.finish == b.finish
+            && a.metrics.warmup_ns == b.metrics.warmup_ns
+            && a.metrics.queueing_ns == b.metrics.queueing_ns
+            && a.metrics.ttft_ns == b.metrics.ttft_ns
+            && a.metrics.latency_ns == b.metrics.latency_ns
+            && phase_eq(&a.metrics.prefill, &b.metrics.prefill)
+            && phase_eq(&a.metrics.decode, &b.metrics.decode)
+    }
+
+    fn server_msg_eq(a: &ServerMsg, b: &ServerMsg) -> bool {
+        match (a, b) {
+            (
+                ServerMsg::Started { id: ia, ttft_s: ta, queued_s: qa },
+                ServerMsg::Started { id: ib, ttft_s: tb, queued_s: qb },
+            ) => ia == ib && ta == tb && qa == qb,
+            (
+                ServerMsg::Token { id: ia, token: ta, logprob: la },
+                ServerMsg::Token { id: ib, token: tb, logprob: lb },
+            ) => ia == ib && ta == tb && la == lb,
+            (ServerMsg::Done { result: ra }, ServerMsg::Done { result: rb }) => {
+                result_eq(ra, rb)
+            }
+            (
+                ServerMsg::Failed { id: ia, error: ea },
+                ServerMsg::Failed { id: ib, error: eb },
+            ) => ia == ib && ea == eb,
+            _ => false,
+        }
+    }
+
+    #[test]
+    fn client_msg_roundtrip_property() {
+        forall("client frames round-trip", 128, |g| {
+            let msg = match g.usize_in(0..3) {
+                0 => ClientMsg::Submit(gen_request(g)),
+                1 => ClientMsg::Cancel(g.u64_in(0..u64::MAX >> 1)),
+                _ => ClientMsg::Shutdown,
+            };
+            let mut wire = Vec::new();
+            write_client(&mut wire, &msg).unwrap();
+            read_client(&mut std::io::Cursor::new(wire)).unwrap() == msg
+        });
+    }
+
+    #[test]
+    fn server_msg_roundtrip_property() {
+        forall("server frames round-trip", 128, |g| {
+            let msg = match g.usize_in(0..4) {
+                0 => ServerMsg::Started {
+                    id: g.u64_in(0..1 << 48),
+                    ttft_s: g.f64_unit() * 100.0,
+                    queued_s: g.f64_unit(),
+                },
+                1 => ServerMsg::Token {
+                    id: g.u64_in(0..1 << 48),
+                    token: g.u64_in(0..1 << 32) as u32,
+                    logprob: if g.bool() { Some(-(g.f64_unit() as f32)) } else { None },
+                },
+                2 => ServerMsg::Failed {
+                    id: g.u64_in(0..1 << 48),
+                    error: format!("wire error {}", g.u64_in(0..1000)),
+                },
+                _ => ServerMsg::Done { result: gen_result(g) },
+            };
+            let mut wire = Vec::new();
+            write_server(&mut wire, &msg).unwrap();
+            let back = read_server(&mut std::io::Cursor::new(wire)).unwrap();
+            server_msg_eq(&msg, &back)
+        });
+    }
+
+    #[test]
+    fn read_frame_rejects_oversized() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut std::io::Cursor::new(wire)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn decode_rejects_truncation_and_trailing_bytes() {
+        let body = ServerMsg::Started { id: 1, ttft_s: 0.5, queued_s: 0.1 }.encode();
+        assert!(ServerMsg::decode(&body[..body.len() - 1]).is_err());
+        let mut longer = body.clone();
+        longer.push(0);
+        assert!(ServerMsg::decode(&longer).is_err());
+        assert!(ServerMsg::decode(&[]).is_err());
+        assert!(ClientMsg::decode(&[]).is_err());
+        assert!(ClientMsg::decode(&[99]).is_err());
+    }
+
+    #[test]
+    fn handshake_roundtrip_over_a_socket() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            server_handshake(&mut s, ServerHello { n_nodes: 3, max_active: 2 }).unwrap();
+        });
+        let mut c = std::net::TcpStream::connect(addr).unwrap();
+        let hello = client_handshake(&mut c).unwrap();
+        assert_eq!(hello, ServerHello { n_nodes: 3, max_active: 2 });
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn handshake_rejects_mesh_magic() {
+        // A node that dials a client port (or vice versa) must be told
+        // apart immediately: the mesh handshake starts with AMOE.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let rogue = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let err = server_handshake(&mut s, ServerHello { n_nodes: 1, max_active: 1 })
+                .unwrap_err();
+            assert!(err.to_string().contains("bad magic"), "{err}");
+        });
+        let mut c = std::net::TcpStream::connect(addr).unwrap();
+        use std::io::Write;
+        c.write_all(b"AMOE\x01\x00").unwrap();
+        rogue.join().unwrap();
+    }
+}

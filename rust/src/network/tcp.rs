@@ -38,13 +38,23 @@ pub struct TcpOptions {
     /// How long to keep redialing peers that have not bound yet (also
     /// bounds the whole mesh establishment, including handshakes).
     pub connect_timeout: Duration,
+    /// Bound on a single accepted connection's `AMOE` handshake read.
+    /// Without it, one dialer that connects and then stalls holds the
+    /// accept loop for the whole `connect_timeout` — a wedged (or
+    /// merely curious) socket must cost at most this long before the
+    /// next accept.
+    pub handshake_timeout: Duration,
     /// Disable Nagle coalescing (keep `true`: §3.1 latency regime).
     pub nodelay: bool,
 }
 
 impl Default for TcpOptions {
     fn default() -> Self {
-        TcpOptions { connect_timeout: Duration::from_secs(120), nodelay: true }
+        TcpOptions {
+            connect_timeout: Duration::from_secs(120),
+            handshake_timeout: Duration::from_secs(5),
+            nodelay: true,
+        }
     }
 }
 
@@ -272,7 +282,10 @@ fn establish(
     let mut accepted = 0;
     while accepted < n - node - 1 {
         let mut stream = accept_deadline(&listener, deadline)?;
-        stream.set_read_timeout(Some(time_left(deadline)?))?;
+        // The handshake read gets its own (much tighter) deadline: a
+        // connect-then-silent socket must not consume the rest of the
+        // mesh-establishment window (see `TcpOptions::handshake_timeout`).
+        stream.set_read_timeout(Some(time_left(deadline)?.min(opts.handshake_timeout)))?;
         let (pid, pn) = match read_handshake(&mut stream) {
             Ok(hs) => hs,
             Err(e) => {
@@ -326,7 +339,7 @@ pub fn endpoint(node: usize, addrs: &[String], opts: &TcpOptions) -> Result<Endp
 /// `net-bench`): binds `n` ephemeral ports and meshes `n` endpoints
 /// concurrently. Returned in node order.
 pub fn loopback_fabric(n: usize) -> Result<Vec<Endpoint>, NetError> {
-    let opts = TcpOptions { connect_timeout: Duration::from_secs(30), nodelay: true };
+    let opts = TcpOptions { connect_timeout: Duration::from_secs(30), ..Default::default() };
     let mut listeners = Vec::with_capacity(n);
     let mut addrs = Vec::with_capacity(n);
     for _ in 0..n {
@@ -458,6 +471,48 @@ mod tests {
             let env = b.recv_tag(tag(1, 0, i as u32), T).unwrap();
             assert_eq!(env.payload, payload);
         }
+    }
+
+    #[test]
+    fn silent_dialer_cannot_hang_mesh_establishment() {
+        // Regression: a socket that connects to a joining node and then
+        // goes silent must cost at most `handshake_timeout`, not the
+        // whole `connect_timeout`, before the real peer's join is
+        // accepted.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = format!("127.0.0.1:{}", listener.local_addr().unwrap().port());
+        let opts = TcpOptions {
+            connect_timeout: Duration::from_secs(30),
+            handshake_timeout: Duration::from_millis(200),
+            nodelay: true,
+        };
+        // The wedge: connect and never send a byte. Kept alive for the
+        // whole test so the stall is real, not an EOF.
+        let silent = TcpStream::connect(&addr).unwrap();
+        // Give the wedged connection a head start in the accept queue.
+        std::thread::sleep(Duration::from_millis(50));
+        let addrs = vec![addr.clone(), "127.0.0.1:1".to_string()];
+        let peer_addrs = addrs.clone();
+        let peer_opts = opts.clone();
+        let peer = std::thread::spawn(move || {
+            // Node 1 dials node 0 and handshakes properly.
+            let mut s = connect_retry(&peer_addrs[0], Instant::now() + T).unwrap();
+            s.set_read_timeout(Some(T)).unwrap();
+            write_handshake(&mut s, 1, 2).unwrap();
+            let (pid, pn) = read_handshake(&mut s).unwrap();
+            assert_eq!((pid, pn), (0, 2));
+            s // keep the mesh connection alive until node 0 is done
+        });
+        let t0 = Instant::now();
+        let transport = establish(0, listener, &addrs, &opts).unwrap();
+        let dt = t0.elapsed();
+        assert_eq!(transport.n_nodes(), 2);
+        assert!(
+            dt < Duration::from_secs(10),
+            "mesh establishment took {dt:?} — silent dialer wedged the accept loop"
+        );
+        let _peer_stream = peer.join().unwrap();
+        drop(silent);
     }
 
     #[test]

@@ -42,6 +42,11 @@ pub enum NetError {
     Timeout(Duration),
     #[error("gather timed out after {timeout:?}: no message from node(s) {missing:?}")]
     GatherTimeout { timeout: Duration, missing: Vec<usize> },
+    #[error(
+        "leader silent for {0:?} (no control message or heartbeat): node 0 is gone or \
+         unreachable"
+    )]
+    LeaderLost(Duration),
     #[error("fabric closed")]
     Closed,
     #[error("handshake failed: {0}")]

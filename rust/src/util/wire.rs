@@ -1,0 +1,73 @@
+//! Little-endian byte cursor shared by the wire codecs
+//! (`engine::request`'s admission codec, `network::proto`'s client
+//! protocol): bounds-checked reads that reject truncated payloads, plus
+//! a completeness check so trailing bytes are rejected too (a corrupt
+//! message must not half-apply).
+
+use anyhow::Result;
+
+pub struct Cursor<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(b: &'a [u8]) -> Cursor<'a> {
+        Cursor { b, at: 0 }
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(self.at + n <= self.b.len(), "truncated wire payload");
+        let s = &self.b[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    /// True once every byte has been consumed (decoders assert this to
+    /// reject trailing bytes).
+    pub fn done(&self) -> bool {
+        self.at == self.b.len()
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_in_order_and_rejects_overruns() {
+        let mut b = Vec::new();
+        b.push(7u8);
+        b.extend_from_slice(&9u32.to_le_bytes());
+        b.extend_from_slice(&u64::MAX.to_le_bytes());
+        b.extend_from_slice(&1.5f64.to_le_bytes());
+        let mut c = Cursor::new(&b);
+        assert!(!c.done());
+        assert_eq!(c.u8().unwrap(), 7);
+        assert_eq!(c.u32().unwrap(), 9);
+        assert_eq!(c.u64().unwrap(), u64::MAX);
+        assert_eq!(c.f64().unwrap(), 1.5);
+        assert!(c.done());
+        assert!(c.u8().is_err());
+    }
+}

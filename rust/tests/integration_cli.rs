@@ -85,9 +85,23 @@ fn node_and_launch_validate_args() {
     assert!(run("node").is_err());
     assert!(run("node --id 0").is_err());
     assert!(run("node --id 0 --cluster /nonexistent/hosts.toml").is_err());
+    // Only the scheduler (node 0) can own the client port.
+    assert!(run("node --id 1 --cluster /nonexistent/hosts.toml --client-port 7533").is_err());
+    assert!(run("node --id 0 --cluster /nonexistent/hosts.toml --client-port notaport").is_err());
     // `launch` cross-checks --nodes against the hosts file.
     assert!(run("launch --nodes 0").is_err());
     assert!(run("launch --cluster /nonexistent/hosts.toml").is_err());
+}
+
+#[test]
+fn client_validates_args_before_dialing() {
+    // All of these fail during flag parsing, before any socket is
+    // opened (so no daemon is needed).
+    assert!(run("client").is_err()); // --connect required
+    assert!(run("client --connect 127.0.0.1:1 --prompt 1,2 --requests 2").is_err());
+    assert!(run("client --connect 127.0.0.1:1 --prompt x,y").is_err());
+    assert!(run("client --connect 127.0.0.1:1 --prompt ,").is_err());
+    assert!(run("client --connect 127.0.0.1:1 --sampler bogus").is_err());
 }
 
 #[test]

@@ -9,12 +9,14 @@
 //! `make artifacts` has run (like every live-cluster test).
 
 use std::path::{Path, PathBuf};
-use std::process::Command;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
 
 use apple_moe::cluster::live::{LiveCluster, LiveConfig};
-use apple_moe::config::{Balancing, Topology};
+use apple_moe::config::{Balancing, ClusterHosts, Topology};
+use apple_moe::engine::api::{Engine, TokenEvent};
 use apple_moe::engine::scheduler::SchedPolicy;
-use apple_moe::engine::Request;
+use apple_moe::engine::{RemoteEngine, Request};
 
 const N_REQUESTS: usize = 2;
 const PROMPT_TOKENS: usize = 4;
@@ -164,6 +166,260 @@ fn tcp_fabric_in_process_nodes_match_mpsc_fabric() {
     assert!(decode.net_msgs > 0);
     // And the serving surface is metered on the TCP path too.
     assert!(results[0][0].metrics.latency_ns > 0);
+}
+
+// ---------------- remote serving protocol ----------------
+
+/// Kill-on-drop guard so a failing assertion can't leak daemon
+/// processes into the test runner.
+struct Daemon(Child);
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn free_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0")
+        .unwrap()
+        .local_addr()
+        .unwrap()
+        .port()
+}
+
+/// `apple-moe launch --client-port ...` with no local requests: a pure
+/// remote-serving daemon cluster (2 OS processes over loopback TCP).
+fn spawn_daemon(dir: &Path, topology: &str, balancing: &str, concurrency: usize, port: u16) -> Daemon {
+    let child = Command::new(env!("CARGO_BIN_EXE_apple-moe"))
+        .args([
+            "launch",
+            "--nodes",
+            "2",
+            "--topology",
+            topology,
+            "--balancing",
+            balancing,
+            "--requests",
+            "0",
+            "--concurrency",
+            &concurrency.to_string(),
+            "--client-port",
+            &port.to_string(),
+            "--recv-timeout-secs",
+            "120",
+            "--artifacts",
+        ])
+        .arg(dir)
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawning apple-moe launch --client-port");
+    Daemon(child)
+}
+
+/// Dial the daemon's client port, retrying while its node processes
+/// compile their runtimes.
+fn connect_retry(port: u16, deadline: Duration) -> RemoteEngine {
+    let addr = format!("127.0.0.1:{port}");
+    let t0 = Instant::now();
+    loop {
+        match RemoteEngine::connect(&addr) {
+            Ok(e) => return e,
+            Err(e) => {
+                assert!(
+                    t0.elapsed() < deadline,
+                    "daemon never started serving clients on {addr}: {e:#}"
+                );
+                std::thread::sleep(Duration::from_millis(200));
+            }
+        }
+    }
+}
+
+/// Submit over the wire, capturing both the streamed tokens and the
+/// joined result (they must agree).
+fn remote_generate(eng: &mut RemoteEngine, req: Request) -> Vec<u32> {
+    let handle = eng.submit(req).unwrap();
+    let mut streamed = Vec::new();
+    let result = loop {
+        match handle.next_event().expect("stream ended early") {
+            TokenEvent::Token { id, .. } => streamed.push(id),
+            TokenEvent::Done { result } => break result,
+            TokenEvent::Failed { error, .. } => panic!("remote request failed: {error}"),
+            _ => {}
+        }
+    };
+    assert_eq!(streamed, result.generated, "streamed tokens diverge from joined result");
+    assert!(result.metrics.latency_ns > 0, "serving metrics crossed the wire");
+    result.generated
+}
+
+/// The acceptance criterion for the remote serving protocol: a remote
+/// client against a `launch`-spawned daemon streams tokens identical
+/// to the in-process `Engine::submit` path, on both topologies.
+fn remote_matches_in_process(topology: Topology, topo: &str, balancing: Balancing, bal: &str) {
+    let Some(dir) = artifacts_dir() else { return };
+    let want = in_process_tokens(&dir, topology, balancing);
+    let port = free_port();
+    let mut daemon = spawn_daemon(&dir, topo, bal, 2, port);
+    let mut eng = connect_retry(port, Duration::from_secs(300));
+    let got: Vec<Vec<u32>> =
+        requests().into_iter().map(|r| remote_generate(&mut eng, r)).collect();
+    assert_eq!(got, want, "remote client tokens diverge from in-process fabric ({topo})");
+    let link = eng.stats();
+    assert!(link.sent_msgs >= N_REQUESTS as u64, "client sends unmetered");
+    assert!(link.recv_bytes > 0, "client receives unmetered");
+    // Administrative shutdown: the daemon cluster drains and exits 0.
+    eng.shutdown_server().unwrap();
+    drop(eng);
+    let t0 = Instant::now();
+    loop {
+        if let Some(status) = daemon.0.try_wait().unwrap() {
+            assert!(status.success(), "daemon exited with {status}");
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(60),
+            "daemon did not exit after client --shutdown"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+#[test]
+fn remote_client_matches_in_process_decentralized() {
+    remote_matches_in_process(
+        Topology::Decentralized,
+        "decentralized",
+        Balancing::RouterAided,
+        "router-aided",
+    );
+}
+
+#[test]
+fn remote_client_matches_in_process_centralized() {
+    remote_matches_in_process(
+        Topology::Centralized,
+        "centralized",
+        Balancing::SelectedOnly,
+        "selected-only",
+    );
+}
+
+/// Dead-client slot reclamation end to end: with `--concurrency 1`, a
+/// client that vanishes mid-decode must free the single slot (its
+/// request self-cancels at the next sweep) so a second client's
+/// request still completes — with tokens identical to the in-process
+/// reference.
+#[test]
+fn vanished_remote_client_frees_its_slot() {
+    let Some(dir) = artifacts_dir() else { return };
+    let want = in_process_tokens(&dir, Topology::Decentralized, Balancing::RouterAided);
+    let port = free_port();
+    let _daemon = spawn_daemon(&dir, "decentralized", "router-aided", 1, port);
+
+    // Client A grabs the only slot with a long request and dies after
+    // the first streamed token.
+    let mut a = connect_retry(port, Duration::from_secs(300));
+    let mut long = Request::synthetic(777, PROMPT_TOKENS, 512, 512);
+    long.sampling.seed ^= 777;
+    let ha = a.submit(long).unwrap();
+    loop {
+        match ha.next_event().expect("stream ended early") {
+            TokenEvent::Token { .. } => break,
+            TokenEvent::Failed { error, .. } => panic!("long request failed: {error}"),
+            _ => {}
+        }
+    }
+    drop(ha);
+    drop(a); // the socket closes abruptly: no Cancel frame, no goodbye
+
+    // Client B must still be served, token-identically.
+    let mut b = connect_retry(port, Duration::from_secs(60));
+    let got = remote_generate(&mut b, requests().remove(0));
+    assert_eq!(got, want[0], "second client's tokens diverge after a client death");
+    b.shutdown_server().unwrap();
+}
+
+/// Follower liveness end to end (3 real node processes): killing node 0
+/// mid-idle must make BOTH followers exit promptly with the named
+/// leader-lost error, instead of idling until all peers hang up.
+#[test]
+fn followers_exit_when_leader_process_dies_mid_idle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let n = 3;
+    // Liveness bound for the test cluster. Also bounds each follower's
+    // FIRST wait (while the leader may still be compiling its runtime),
+    // so it must comfortably cover node-to-node startup skew.
+    let recv_timeout_secs = 20u64;
+    let mut hosts = Vec::new();
+    for _ in 0..n {
+        hosts.push(format!("127.0.0.1:{}", free_port()));
+    }
+    let cfg = ClusterHosts {
+        hosts,
+        recv_timeout: Duration::from_secs(recv_timeout_secs),
+        connect_timeout: Duration::from_secs(120),
+    };
+    let hosts_path = std::env::temp_dir()
+        .join(format!("apple-moe-liveness-{}.toml", std::process::id()));
+    std::fs::write(&hosts_path, cfg.render()).unwrap();
+
+    let client_port = free_port();
+    let spawn_node = |id: usize| -> Daemon {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_apple-moe"));
+        cmd.args(["node", "--id", &id.to_string(), "--cluster"])
+            .arg(&hosts_path)
+            .args(["--requests", "0", "--artifacts"])
+            .arg(&dir)
+            .stdout(Stdio::null())
+            .stderr(Stdio::piped());
+        if id == 0 {
+            // The client port keeps node 0 alive (a daemon idling for
+            // remote clients) so there is a mid-idle leader to kill.
+            cmd.args(["--client-port", &client_port.to_string()]);
+        }
+        Daemon(cmd.spawn().expect("spawning node"))
+    };
+    let mut leader = spawn_node(0);
+    let mut followers = vec![spawn_node(1), spawn_node(2)];
+
+    // The cluster is fully up (mesh + runtimes + serve loops) once the
+    // client port answers a handshake.
+    let eng = connect_retry(client_port, Duration::from_secs(300));
+    drop(eng);
+
+    let _ = leader.0.kill();
+    let _ = leader.0.wait();
+    let t_kill = Instant::now();
+    let bound = Duration::from_secs(recv_timeout_secs) + Duration::from_secs(25);
+    for f in &mut followers {
+        loop {
+            if let Some(status) = f.0.try_wait().unwrap() {
+                // Followers exit non-zero, naming the lost leader.
+                assert!(!status.success(), "follower exited cleanly after leader death");
+                break;
+            }
+            assert!(
+                t_kill.elapsed() < bound,
+                "follower still running {bound:?} after leader death"
+            );
+            std::thread::sleep(Duration::from_millis(100));
+        }
+    }
+    let mut stderr = String::new();
+    for f in &mut followers {
+        use std::io::Read;
+        if let Some(e) = f.0.stderr.as_mut() {
+            let _ = e.read_to_string(&mut stderr);
+        }
+    }
+    assert!(
+        stderr.contains("leader silent"),
+        "follower exit did not name the lost leader:\n{stderr}"
+    );
+    let _ = std::fs::remove_file(&hosts_path);
 }
 
 /// `serve --transport tcp --json` end-to-end through the binary: the
