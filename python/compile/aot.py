@@ -19,6 +19,11 @@ fresh):
                         device-resident decode path (see
                         `lower_device_artifacts`) — buffers chain between
                         executables without host staging
+  dev_b{B}_*.hlo.txt    the BATCHED family of the same roles at leading
+                        dim B in BATCH_BUCKETS (see
+                        `lower_batched_artifacts`): B concurrent
+                        requests share one forward pass per scheduler
+                        iteration (continuous batching)
   weights.npz           all model weights (float32, flat names)
   manifest.txt          dims + artifact inventory for the rust side
 """
@@ -218,6 +223,79 @@ def lower_device_artifacts(cfg=CFG, donate_caches=False):
     return arts
 
 
+# Bucket sizes of the batched decode family (`dev_b{B}_*`): the live
+# scheduler packs its active requests into the smallest bucket that
+# fits, so concurrent requests share one forward pass per iteration
+# (continuous batching). B = 1 is the plain `dev_*` family.
+BATCH_BUCKETS = (2, 4, 8)
+
+
+def lower_batched_artifacts(cfg=CFG):
+    """Return {name: hlo_text} for the ``dev_b{B}_*`` batched roles.
+
+    Every artifact is untupled (single array root) like the `dev_*`
+    family, lowered once per bucket size in `BATCH_BUCKETS`. Roles whose
+    math is row-wise reuse the batch-1 functions at [B, ...] shapes; the
+    appends/attention/router/experts use the dedicated batched
+    formulations in `model.py` (per-slot cache banks stay SEPARATE
+    [Hkv, S, hd] buffers — the same shape the batch-1 `DeviceState`
+    owns — so a request keeps its cache across bucket up/downshifts and
+    the batched attention takes them as 2B direct arguments).
+    """
+    d, dq, e, k = cfg.d_embed, cfg.d_qkv, cfg.n_experts, cfg.top_k
+    nh, nk, hd, s, v = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.max_seq, cfg.vocab
+    arts = {}
+    for bsz in BATCH_BUCKETS:
+        p = f"dev_b{bsz}_"
+        arts[p + "embed"] = to_hlo_text_untupled(
+            jax.jit(M.embed_step).lower(f32(v, d), i32(bsz))
+        )
+        arts[p + "qkv"] = to_hlo_text_untupled(
+            jax.jit(M.qkv_step).lower(f32(d), f32(d, dq), f32(bsz, d))
+        )
+        arts[p + "k_append"] = to_hlo_text_untupled(
+            jax.jit(M.batched_k_append_step).lower(
+                f32(nk, s, hd), f32(bsz, dq), i32(bsz), i32()
+            )
+        )
+        arts[p + "v_append"] = to_hlo_text_untupled(
+            jax.jit(M.batched_v_append_step).lower(
+                f32(nk, s, hd), f32(bsz, dq), i32(bsz), i32()
+            )
+        )
+        cache_specs = [f32(nk, s, hd)] * (2 * bsz)
+        arts[p + "attn_out"] = to_hlo_text_untupled(
+            jax.jit(M.batched_attn_out_step).lower(
+                f32(nh * hd, d), f32(bsz, d), f32(bsz, dq), i32(bsz), *cache_specs
+            )
+        )
+        arts[p + "moe_norm"] = to_hlo_text_untupled(
+            jax.jit(M.moe_norm_step).lower(f32(d), f32(bsz, d))
+        )
+        arts[p + "router"] = to_hlo_text_untupled(
+            jax.jit(M.batched_router_step).lower(f32(d, e), f32(bsz, d))
+        )
+        # Rows route to different experts, so the batched expert role
+        # gathers per-row slots from the node's stacked residents — one
+        # variant per (resident count, slot count) like the fast family.
+        for el in (8, 16):
+            for ns in (k, NUM_SLOTS):
+                arts[p + f"experts_el{el}_ns{ns}"] = to_hlo_text_untupled(
+                    jax.jit(M.batched_experts_forward).lower(
+                        f32(el, d, cfg.d_ffn), f32(el, d, cfg.d_ffn),
+                        f32(el, cfg.d_ffn, d),
+                        f32(bsz, d), i32(bsz, ns), f32(bsz, ns),
+                    )
+                )
+        arts[p + "residual"] = to_hlo_text_untupled(
+            jax.jit(M.residual_add_step).lower(f32(bsz, d), f32(bsz, d))
+        )
+        arts[p + "lm_head"] = to_hlo_text_untupled(
+            jax.jit(M.lm_head_step).lower(f32(d), f32(d, v), f32(bsz, d))
+        )
+    return arts
+
+
 def write_manifest(path, cfg=CFG):
     with open(path, "w") as fh:
         fh.write("# dbrx-nano artifact manifest (parsed by rust/src/runtime)\n")
@@ -237,6 +315,10 @@ def write_manifest(path, cfg=CFG):
             # The untupled dev_* artifact set is present (device-resident
             # decode path; rust falls back to the host path when 0/absent).
             ("device_artifacts", 1),
+            # Largest bucket of the batched `dev_b{B}_*` decode family
+            # (buckets are the powers of two from 2 up to this value;
+            # 0/absent = no batched artifacts, serial decode only).
+            ("max_batch", max(BATCH_BUCKETS)),
         ]:
             fh.write(f"{kk} = {vv}\n")
 
@@ -256,6 +338,7 @@ def main():
 
     arts = lower_artifacts()
     arts.update(lower_device_artifacts(donate_caches=args.donate_caches))
+    arts.update(lower_batched_artifacts())
     for name, text in arts.items():
         path = os.path.join(args.out_dir, f"{name}.hlo.txt")
         with open(path, "w") as fh:

@@ -309,6 +309,128 @@ def residual_add_step(h, moe_sum):
     return h + moe_sum
 
 
+# --------------------------------------------------------------------------
+# Batched device-resident decomposition (§Perf: continuous batching).
+#
+# The per-role shapes above are batch-1; these variants carry a leading
+# batch dim B so B concurrent requests share ONE forward pass per
+# scheduler iteration (Orca-style continuous batching on the live
+# cluster). Roles whose math is already row-wise (`embed_step`,
+# `qkv_step`, `moe_norm_step`, `residual_add_step`, `lm_head_step`) are
+# simply lowered again at [B, ...] shapes; the roles below need real
+# batched formulations:
+#
+# - the K/V appends write ONE row's keys into that row's own cache at
+#   that row's own position (requests sit at different decode offsets,
+#   so the position is a per-slot vector);
+# - attention takes the B per-request caches as separate arguments
+#   (stacked on device) with a per-row causal mask, so cache banks stay
+#   per-request buffers and bucket up/downshift never copies a cache;
+# - the router packs per-row top-k;
+# - the experts gather per-row slot indices from the node's stacked
+#   resident weights — rows route to different experts, so the
+#   direct-args formulation cannot be shared across the batch.
+#
+# Per-row math is identical to the batch-1 roles (asserted by
+# test_model.py::TestBatchedDecomposition); rows are independent, so a
+# padding row (bucket > active requests) cannot perturb live rows.
+# --------------------------------------------------------------------------
+
+
+def batched_k_append_step(k_cache, qkv, positions, row, cfg: NanoConfig = CFG):
+    """Write row `row`'s K rows into ITS cache at ITS position.
+
+    Args:
+      k_cache: [Hkv, S, hd] the row's own cache; qkv: [B, (H+2Hkv)*hd];
+      positions: i32[B] per-slot decode offsets; row: i32[] this slot's
+      batch row.
+    """
+    nh, nk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k_new = jax.lax.dynamic_slice(qkv, (row, nh * hd), (1, nk * hd)).reshape(nk, hd)
+    return jax.lax.dynamic_update_slice(
+        k_cache, k_new[:, None, :], (0, positions[row], 0)
+    )
+
+
+def batched_v_append_step(v_cache, qkv, positions, row, cfg: NanoConfig = CFG):
+    """Write row `row`'s V rows into ITS cache at ITS position."""
+    nh, nk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    v_new = jax.lax.dynamic_slice(
+        qkv, (row, nh * hd + nk * hd), (1, nk * hd)
+    ).reshape(nk, hd)
+    return jax.lax.dynamic_update_slice(
+        v_cache, v_new[:, None, :], (0, positions[row], 0)
+    )
+
+
+def batched_attn_out_step(wo, x, qkv, positions, *caches, cfg: NanoConfig = CFG):
+    """GQA attention for B rows over B per-request caches: -> h [B, D].
+
+    Args:
+      x: [B, D]; qkv: [B, (H+2Hkv)*hd]; positions: i32[B] per-row causal
+      bounds; caches: B k-caches then B v-caches, each [Hkv, S, hd]
+      (already appended). Row b attends only to its own cache up to its
+      own position, so rows are fully independent.
+    """
+    nh, nk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    bsz = x.shape[0]
+    assert len(caches) == 2 * bsz
+    ks = jnp.stack(caches[:bsz])  # [B, Hkv, S, hd] (device-side stack)
+    vs = jnp.stack(caches[bsz:])
+    q = qkv[:, : nh * hd].reshape(bsz, nh, hd)
+    group = nh // nk
+    kq = jnp.repeat(ks, group, axis=1)  # [B, H, S, hd]
+    vq = jnp.repeat(vs, group, axis=1)
+    scores = jnp.einsum("bhd,bhsd->bhs", q, kq) / jnp.sqrt(float(hd))
+    mask = jnp.arange(cfg.max_seq)[None, :] <= positions[:, None]  # [B, S]
+    scores = jnp.where(mask[:, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    attn = jnp.einsum("bhs,bhsd->bhd", probs, vq).reshape(bsz, nh * hd)
+    return x + attn @ wo
+
+
+def batched_router_step(wr, moe_in, cfg: NanoConfig = CFG):
+    """Per-row top-k routing packed into one [B, 2K] f32 array.
+
+    Row layout matches `router_step`: [top_w .. top_i] per row, indices
+    as exact small-integer f32s. One download carries the whole batch's
+    routing to the host planner.
+    """
+    logits = moe_in @ wr  # [B, E]
+    rows = []
+    for b in range(moe_in.shape[0]):  # unrolled at trace time
+        top_vals, top_i = _topk(logits[b], cfg.top_k)
+        rows.append(
+            jnp.concatenate([jax.nn.softmax(top_vals), top_i.astype(jnp.float32)])
+        )
+    return jnp.stack(rows)
+
+
+def batched_experts_forward(w1s, v1s, w2s, moe_in, slot_idx, slot_w):
+    """One node's weighted partial sums for B rows in one dispatch.
+
+    Args:
+      w1s/v1s/w2s: [E_local, ...] the node's prestacked resident experts.
+      moe_in: [B, D]; slot_idx: i32[B, NS] per-row *local* stack indices;
+      slot_w: [B, NS] per-row combine weights (0 for padding slots AND
+      for padding rows).
+    Returns:
+      [B, D] partial sums (all-reduced across nodes row-wise).
+    """
+    bsz, d = moe_in.shape
+    ns = slot_idx.shape[1]
+    out = jnp.zeros((bsz, d), moe_in.dtype)
+    for s in range(ns):  # unrolled at trace time — same slot order as batch-1
+        g1 = jnp.take(w1s, slot_idx[:, s], axis=0)  # [B, D, F]
+        gv = jnp.take(v1s, slot_idx[:, s], axis=0)
+        g2 = jnp.take(w2s, slot_idx[:, s], axis=0)  # [B, F, D]
+        h = jax.nn.silu(jnp.einsum("bd,bdf->bf", moe_in, g1)) * jnp.einsum(
+            "bd,bdf->bf", moe_in, gv
+        )
+        out = out + slot_w[:, s][:, None] * jnp.einsum("bf,bfd->bd", h, g2)
+    return out
+
+
 def moe_layer_ref(p, l, moe_in, cfg: NanoConfig = CFG):
     """Reference full-MoE block for one layer (selected experts only)."""
     logits = (moe_in @ p[f"layer{l}.wr"])[0]

@@ -248,6 +248,114 @@ class TestDeviceDecomposition:
         np.testing.assert_array_equal(M.residual_add_step(h, s), h + s)
 
 
+class TestBatchedDecomposition:
+    """The batched `dev_b{B}_*` roles must reproduce the batch-1 device
+    roles row for row — the numerical contract behind continuous
+    batching on the live cluster (B concurrent requests share one
+    forward pass, tokens identical to serial decode)."""
+
+    @pytest.mark.parametrize("bsz", [2, 4])
+    def test_batched_rows_equal_serial_rows(self, params, bsz):
+        rs = np.random.RandomState(21)
+        l = 0
+        ln1, wqkv, wo, ln2, wr = (
+            params[f"layer{l}.{n}"] for n in ["ln1", "wqkv", "wo", "ln2", "wr"]
+        )
+        shape = (CFG.n_kv_heads, CFG.max_seq, CFG.head_dim)
+        # Per-row caches and positions: rows sit at DIFFERENT offsets
+        # (mixed prompt lengths in flight).
+        caches_k = [jnp.asarray(rs.randn(*shape).astype(np.float32)) * 0.1 for _ in range(bsz)]
+        caches_v = [jnp.asarray(rs.randn(*shape).astype(np.float32)) * 0.1 for _ in range(bsz)]
+        positions = jnp.asarray([3 + 2 * b for b in range(bsz)], dtype=jnp.int32)
+        x = jnp.asarray(rs.randn(bsz, CFG.d_embed).astype(np.float32))
+
+        # Batched pipeline.
+        qkv = M.qkv_step(ln1, wqkv, x)
+        new_k = [
+            M.batched_k_append_step(caches_k[b], qkv, positions, jnp.int32(b))
+            for b in range(bsz)
+        ]
+        new_v = [
+            M.batched_v_append_step(caches_v[b], qkv, positions, jnp.int32(b))
+            for b in range(bsz)
+        ]
+        h = M.batched_attn_out_step(wo, x, qkv, positions, *(new_k + new_v))
+        moe_in = M.moe_norm_step(ln2, h)
+        packed = M.batched_router_step(wr, moe_in)
+        assert packed.shape == (bsz, 2 * CFG.top_k)
+
+        # Serial batch-1 pipeline per row.
+        for b in range(bsz):
+            xb = x[b : b + 1]
+            qkv_b = M.qkv_step(ln1, wqkv, xb)
+            np.testing.assert_allclose(qkv[b : b + 1], qkv_b, rtol=1e-5, atol=1e-6)
+            kc_b = M.k_append_step(caches_k[b], qkv_b, positions[b])
+            vc_b = M.v_append_step(caches_v[b], qkv_b, positions[b])
+            np.testing.assert_allclose(new_k[b], kc_b, rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(new_v[b], vc_b, rtol=1e-5, atol=1e-6)
+            h_b = M.attn_out_step(wo, xb, qkv_b, kc_b, vc_b, positions[b])
+            np.testing.assert_allclose(h[b : b + 1], h_b, rtol=1e-5, atol=1e-6)
+            moe_b = M.moe_norm_step(ln2, h_b)
+            packed_b = M.router_step(wr, moe_b)
+            np.testing.assert_allclose(packed[b], packed_b, rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("bsz", [2, 4])
+    def test_batched_experts_equal_serial(self, params, bsz):
+        rs = np.random.RandomState(22)
+        l = 1
+        w1s = params[f"layer{l}.w1"][:8]
+        v1s = params[f"layer{l}.v1"][:8]
+        w2s = params[f"layer{l}.w2"][:8]
+        moe_in = jnp.asarray(rs.randn(bsz, CFG.d_embed).astype(np.float32))
+        ns = CFG.top_k
+        idx = jnp.asarray(rs.randint(0, 8, size=(bsz, ns)), dtype=jnp.int32)
+        w = jnp.asarray(rs.rand(bsz, ns).astype(np.float32))
+        out = M.batched_experts_forward(w1s, v1s, w2s, moe_in, idx, w)
+        assert out.shape == (bsz, CFG.d_embed)
+        for b in range(bsz):
+            want = M.experts_forward_fast(
+                w1s, v1s, w2s, moe_in[b : b + 1], idx[b], w[b]
+            )
+            np.testing.assert_allclose(out[b : b + 1], want, rtol=1e-5, atol=1e-6)
+
+    def test_padding_rows_do_not_change_live_rows(self, params):
+        """A bucket larger than the active-request count carries padding
+        rows (dummy token, weight-0 slots, a borrowed cache). Rows are
+        independent, so live rows must be bit-compatible with a batch
+        that never had the padding."""
+        rs = np.random.RandomState(23)
+        l = 0
+        ln1, wqkv, wo, ln2, wr = (
+            params[f"layer{l}.{n}"] for n in ["ln1", "wqkv", "wo", "ln2", "wr"]
+        )
+        shape = (CFG.n_kv_heads, CFG.max_seq, CFG.head_dim)
+        kc = [jnp.asarray(rs.randn(*shape).astype(np.float32)) * 0.1 for _ in range(2)]
+        vc = [jnp.asarray(rs.randn(*shape).astype(np.float32)) * 0.1 for _ in range(2)]
+        x2 = jnp.asarray(rs.randn(2, CFG.d_embed).astype(np.float32))
+        # Bucket-4 batch: rows 0-1 live, rows 2-3 padding (zero x, row 0's
+        # cache, position 0 — exactly what the rust driver feeds).
+        x4 = jnp.concatenate([x2, jnp.zeros((2, CFG.d_embed), jnp.float32)])
+        pos2 = jnp.asarray([5, 9], dtype=jnp.int32)
+        pos4 = jnp.asarray([5, 9, 0, 0], dtype=jnp.int32)
+        qkv2 = M.qkv_step(ln1, wqkv, x2)
+        qkv4 = M.qkv_step(ln1, wqkv, x4)
+        k2 = [M.batched_k_append_step(kc[b], qkv2, pos2, jnp.int32(b)) for b in range(2)]
+        v2 = [M.batched_v_append_step(vc[b], qkv2, pos2, jnp.int32(b)) for b in range(2)]
+        k4 = [M.batched_k_append_step(kc[b], qkv4, pos4, jnp.int32(b)) for b in range(2)]
+        v4 = [M.batched_v_append_step(vc[b], qkv4, pos4, jnp.int32(b)) for b in range(2)]
+        h2 = M.batched_attn_out_step(wo, x2, qkv2, pos2, *(k2 + v2))
+        h4 = M.batched_attn_out_step(
+            wo, x4, qkv4, pos4, *(k4 + [k4[0], k4[0]] + v4 + [v4[0], v4[0]])
+        )
+        np.testing.assert_allclose(h4[:2], h2, rtol=1e-5, atol=1e-6)
+        moe2 = M.moe_norm_step(ln2, h2)
+        moe4 = M.moe_norm_step(ln2, h4)
+        np.testing.assert_allclose(moe4[:2], moe2, rtol=1e-5, atol=1e-6)
+        p2 = M.batched_router_step(wr, moe2)
+        p4 = M.batched_router_step(wr, moe4)
+        np.testing.assert_allclose(p4[:2], p2, rtol=1e-5, atol=1e-6)
+
+
 class TestAotPipeline:
     def test_lower_all_artifacts(self):
         arts = aot.lower_artifacts()
@@ -286,6 +394,33 @@ class TestAotPipeline:
             "dev_attn_out", "dev_moe_norm", "dev_router", "dev_residual",
             "dev_experts_ns4", "dev_experts_ns8", "dev_lm_head",
         }
+        for name, text in arts.items():
+            assert text.startswith("HloModule"), f"{name} not HLO text"
+            mod = xc._xla.hlo_module_from_text(text)
+            assert mod is not None, name
+            root = [ln for ln in text.splitlines() if "ROOT" in ln]
+            assert root and "tuple(" not in root[-1], f"{name} root is a tuple"
+
+    def test_batched_artifacts_lower_untupled(self):
+        """The dev_b{B}_* batched family: complete per bucket, ARRAY
+        roots throughout (buffers must chain on device exactly like the
+        batch-1 dev_* set)."""
+        from jax._src.lib import xla_client as xc
+
+        arts = aot.lower_batched_artifacts()
+        roles = [
+            "embed", "qkv", "k_append", "v_append", "attn_out",
+            "moe_norm", "router", "residual", "lm_head",
+        ]
+        expect = set()
+        for b in aot.BATCH_BUCKETS:
+            expect |= {f"dev_b{b}_{r}" for r in roles}
+            expect |= {
+                f"dev_b{b}_experts_el{el}_ns{ns}"
+                for el in (8, 16)
+                for ns in (CFG.top_k, NUM_SLOTS)
+            }
+        assert set(arts) == expect
         for name, text in arts.items():
             assert text.startswith("HloModule"), f"{name} not HLO text"
             mod = xc._xla.hlo_module_from_text(text)

@@ -122,7 +122,8 @@ pub(crate) fn parse_policy(args: &mut Args) -> Result<SchedPolicy> {
     match args.str_or("policy", "round-robin").as_str() {
         "round-robin" | "rr" => Ok(SchedPolicy::RoundRobin),
         "fcfs" | "run-to-completion" => Ok(SchedPolicy::RunToCompletion),
-        other => anyhow::bail!("unknown policy '{other}'"),
+        "sjf" | "shortest-job-first" => Ok(SchedPolicy::ShortestJobFirst),
+        other => anyhow::bail!("unknown policy '{other}' (round-robin|fcfs|sjf)"),
     }
 }
 

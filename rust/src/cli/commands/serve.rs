@@ -93,6 +93,7 @@ pub fn run(args: &mut Args) -> Result<()> {
         "latency (s)".to_string(),
         "prefill tok/s".to_string(),
         "decode tok/s".to_string(),
+        "occupancy".to_string(),
     ]];
     let mut decode_tps = Vec::new();
     let mut total_tokens = 0usize;
@@ -106,6 +107,7 @@ pub fn run(args: &mut Args) -> Result<()> {
             format!("{:.2}", r.metrics.latency_s()),
             format!("{:.1}", r.metrics.prefill.tokens_per_sec()),
             format!("{:.1}", r.metrics.decode.tokens_per_sec()),
+            format!("{:.2}", r.metrics.decode.mean_batch_occupancy()),
         ]);
     }
     print!("{}", render_table(&rows));
@@ -142,7 +144,8 @@ pub(crate) fn json_report(
         let d = &r.metrics.decode;
         s.push_str(&format!(
             "{{\"id\":{},\"ttft_s\":{:.6},\"queueing_s\":{:.6},\"latency_s\":{:.6},\
-             \"decode_tps\":{:.3},\"generated\":{},\"net_bytes\":{}}}",
+             \"decode_tps\":{:.3},\"generated\":{},\"net_bytes\":{},\
+             \"mean_occupancy\":{:.3},\"exec_calls_per_token\":{:.2}}}",
             r.id,
             r.metrics.ttft_s(),
             r.metrics.queueing_s(),
@@ -150,12 +153,21 @@ pub(crate) fn json_report(
             d.tokens_per_sec(),
             r.generated.len(),
             d.net_bytes + r.metrics.prefill.net_bytes,
+            d.mean_batch_occupancy(),
+            d.exec_calls_per_token(),
         ));
     }
+    // Aggregate occupancy: decode-token-weighted mean over the batch
+    // (1.0 = serial; → concurrency under a saturated batched scheduler).
+    let (occ_sum, occ_tokens) = results.iter().fold((0.0f64, 0u64), |(s, n), r| {
+        let d = &r.metrics.decode;
+        (s + d.mean_batch_occupancy() * d.tokens as f64, n + d.tokens)
+    });
     s.push_str(&format!(
         "],\"nodes\":{nodes},\"concurrency\":{concurrency},\"wall_s\":{wall_s:.6},\
-         \"aggregate_tps\":{:.3}}}",
+         \"aggregate_tps\":{:.3},\"mean_occupancy\":{:.3}}}",
         if wall_s > 0.0 { total as f64 / wall_s } else { 0.0 },
+        if occ_tokens > 0 { occ_sum / occ_tokens as f64 } else { 1.0 },
     ));
     s
 }
@@ -190,11 +202,37 @@ mod tests {
             "\"decode_tps\":",
             "\"net_bytes\":",
             "\"generated\":3",
+            "\"mean_occupancy\":",
+            "\"exec_calls_per_token\":",
             "\"nodes\":2",
             "\"concurrency\":2",
             "\"aggregate_tps\":2.000",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
+    }
+
+    #[test]
+    fn json_report_aggregates_occupancy() {
+        // Two requests whose decode phases ran at occupancy 4 and 2 for
+        // 3 and 1 tokens respectively: the aggregate is token-weighted.
+        use crate::metrics::TokenBreakdown;
+        let mk = |occ: u32, tokens: usize, id: u64| {
+            let mut m = RunMetrics::default();
+            for _ in 0..tokens {
+                m.decode.push(TokenBreakdown { batch_rows: occ, ..Default::default() });
+            }
+            RequestResult {
+                id,
+                generated: vec![0; tokens],
+                finish: FinishReason::Length,
+                metrics: m,
+            }
+        };
+        let j = json_report(&[mk(4, 3, 0), mk(2, 1, 1)], 1.0, 2, 4);
+        assert!(j.contains("\"mean_occupancy\":4.000"), "{j}");
+        assert!(j.contains("\"mean_occupancy\":2.000"), "{j}");
+        // (4*3 + 2*1) / 4 = 3.5 aggregate.
+        assert!(j.ends_with("\"mean_occupancy\":3.500}"), "{j}");
     }
 }

@@ -124,13 +124,42 @@
 //! replays the identical sampler stream.
 //!
 //! **Multi-user scheduling.** `serve` (and `node`/`launch`) take
-//! `--concurrency N --policy round-robin|fcfs`: node 0 runs the
+//! `--concurrency N --policy round-robin|fcfs|sjf`: node 0 runs the
 //! Orca-style iteration-level scheduler — each in-flight request owns
-//! its own device-resident decode state, and every iteration advances
-//! one request by one token. Per-request queueing delay, TTFT and
-//! latency are metered on real hardware and reported (machine-readable
-//! with `serve --json`); `serve --transport tcp` runs the same thing
-//! over real loopback sockets.
+//! its own device-resident decode state. `sjf` (shortest job first, by
+//! remaining `max_new_tokens`) admits and advances the smallest
+//! generation budget first, the classic mean-latency win under
+//! saturation (cross-validated against the simulator's fairness
+//! metrics). Per-request queueing delay, TTFT and latency are metered
+//! on real hardware and reported (machine-readable with `serve
+//! --json`); `serve --transport tcp` runs the same thing over real
+//! loopback sockets.
+//!
+//! ## Continuous batching
+//!
+//! With the batched artifact family present (`dev_b{B}_*`, emitted by
+//! `aot.py` at bucket sizes B ∈ {2, 4, 8}; `max_batch` in
+//! manifest.txt), the scheduler iteration is a REAL batched step: all
+//! active requests pack into the smallest bucket that fits and share
+//! ONE forward pass — embed/attention/router/experts/head each
+//! dispatch once at leading dim B, requests at different decode
+//! offsets riding a per-slot position vector, and the per-layer host
+//! crossings (router top-k, all-reduce payload, logits) each carry the
+//! whole batch in one `[B, ...]` transfer. Up to `--concurrency`
+//! tokens come out of every iteration, on both topologies. A request's
+//! cache bank IS its per-request decode state, so admission/completion
+//! map to slot acquire/release and bucket up/downshifts never copy a
+//! cache; with one request in flight (or artifacts that predate the
+//! family) decode falls back to the serial batch-1 iteration.
+//!
+//! The win is measured, not assumed: every request's `RunMetrics`
+//! phases carry the per-iteration batch occupancy (`occupancy` column
+//! in the `serve` table; `mean_occupancy` per request and aggregate in
+//! `serve --json`) and the dispatch amortization
+//! (`exec_calls_per_token` — B-way batching divides it by ~B). CI's
+//! BENCH_batch.json tracks aggregate tokens/s and occupancy at
+//! `--concurrency 1` vs `4` on every push; batched output tokens are
+//! asserted identical to serial batch-1 decode on both topologies.
 
 pub mod args;
 pub mod commands;
@@ -179,7 +208,8 @@ SUBCOMMANDS
                    --max-nodes N  --network 10gbe|rocev2|ib
   cost           cost-efficiency comparison (Table 5)
   multiuser      concurrent-user serving on the simulated cluster
-                   --requests N --rate REQ_PER_S --policy round-robin|fcfs
+                   --requests N --rate REQ_PER_S
+                   --policy round-robin|fcfs|sjf
   cluster-info   model arithmetic + expert placement for a cluster
                    --nodes N  --model dbrx-132b|dbrx-nano
   generate       LIVE run: nano model over a threaded cluster via PJRT,
@@ -188,15 +218,18 @@ SUBCOMMANDS
                    --topology decentralized|centralized  --artifacts DIR
                    --sampler greedy|top-k --top-k K --temperature T
                    --seed S --stop \"id,id,...\"
-  serve          LIVE multi-user serving: iteration-level scheduler,
+  serve          LIVE multi-user serving: iteration-level scheduler with
+                 continuous batching (all active requests share one
+                 forward pass per iteration; batch occupancy reported),
                  per-request TTFT/queueing/latency (+sampling flags)
-                   --requests N --concurrency N --policy round-robin|fcfs
+                   --requests N --concurrency N
+                   --policy round-robin|fcfs|sjf
                    --nodes N --transport inproc|tcp --json --stream
                    --artifacts DIR
   node           LIVE multi-process: run ONE node over the real TCP fabric
                  (node 0 schedules; followers need no request flags)
                    --id N --cluster hosts.toml --requests N --gen-tokens N
-                   --concurrency N --policy round-robin|fcfs
+                   --concurrency N --policy round-robin|fcfs|sjf
                    --topology decentralized|centralized --artifacts DIR
                    --client-port P   (node 0: serve remote clients, daemon mode)
   launch         LIVE multi-process: spawn N loopback node processes

@@ -16,30 +16,44 @@
 //!   scatters `moe_in` + slot assignments to workers, which run experts
 //!   and send partials back — 2 communications per layer.
 //!
-//! # Scheduling
+//! # Scheduling — continuous batching
 //!
-//! Node 0 is the scheduler (Orca-style iteration-level round-robin,
+//! Node 0 is the scheduler (Orca-style iteration-level scheduling,
 //! ported from the virtual-time `engine::scheduler` onto real
 //! hardware): every in-flight request owns its own decode state (a
 //! [`DeviceState`] on the device-resident path, per-layer K/V host
-//! tensors on the reference path), and each scheduler iteration
-//! advances ONE request by ONE token. Admission is capped at
-//! `LiveConfig::max_active`; requests beyond the cap queue, and their
-//! queueing delay / TTFT / end-to-end latency are metered into
-//! [`RunMetrics`].
+//! tensors on the reference path). With the batched `dev_b{B}_*`
+//! artifact family present, each scheduler iteration packs ALL active
+//! requests into the smallest bucket B ∈ {2, 4, 8} that fits and runs
+//! ONE shared forward pass — up to `max_active` tokens come out of one
+//! iteration (continuous batching; see [`crate::runtime::BatchedRun`]).
+//! Requests at different decode offsets share the dispatch via the
+//! per-slot position vector; admission/completion map to slot
+//! acquire/release (a slot IS the request's `DeviceState`, so bucket
+//! up/downshifts never move a cache). With one active request — or on
+//! the host reference path, or with pre-batching artifacts — an
+//! iteration advances ONE request by ONE token as before, under the
+//! configured [`SchedPolicy`] (round-robin, FCFS, or shortest-job-first
+//! by remaining budget). Admission is capped at `LiveConfig::max_active`;
+//! requests beyond the cap queue, and their queueing delay / TTFT /
+//! end-to-end latency are metered into [`RunMetrics`], along with the
+//! per-iteration batch occupancy (`PhaseMetrics::occupancy`).
 //!
 //! The schedule must be identical on every node of the decentralized
 //! topology (they all hold per-request KV caches and replicated
 //! samplers), so node 0 broadcasts each scheduling decision on a
-//! control plane (`PHASE_CTRL`, ops admit/step/cancel/shutdown) that
-//! followers replay in order; the admission message carries the full
-//! encoded request, so only node 0 ever needs to know the workload.
-//! Centralized workers are stateless per iteration — each scatter
-//! carries its layer id and a global sequence number, so they need no
-//! control plane at all (an empty scatter is the shutdown marker).
-//! Data-plane messages are tagged per request
+//! control plane (`PHASE_CTRL`, ops admit/step/batch-step/cancel/
+//! shutdown) that followers replay in order; the admission message
+//! carries the full encoded request, so only node 0 ever needs to know
+//! the workload, and the batch-step message carries the packed
+//! participant list (bucket and row order derive from it
+//! deterministically). Centralized workers are stateless per iteration
+//! — each scatter carries its layer id, row count and a global sequence
+//! number, so they need no control plane at all (an empty scatter is
+//! the shutdown marker). Data-plane messages are tagged per request
 //! ([`transport::req_tag`]): partials of different in-flight requests
-//! demultiplex by admission sequence number.
+//! demultiplex by admission sequence number (a batched iteration's
+//! shared payload rides under its first row's tag).
 //!
 //! All coordination logic (layout, planning, LRU) is the same
 //! `moe::Planner` the virtual-time DES uses. Interleaving cannot change
@@ -77,7 +91,7 @@ use crate::network::transport::{
     self, bytes_to_f32s, f32s_to_bytes, req_tag, tag, Endpoint, Envelope, NetError,
 };
 use crate::runtime::nano::resident_index;
-use crate::runtime::{DeviceState, HostTensor, NanoRuntime};
+use crate::runtime::{BatchedRun, DeviceState, HostTensor, NanoRuntime};
 use crate::util::rng::Rng;
 
 /// Default bound on any single wire wait (`LiveConfig::recv_timeout`,
@@ -87,6 +101,11 @@ const PHASE_PARTIAL: u8 = 1;
 const PHASE_SCATTER: u8 = 2;
 const PHASE_GATHER: u8 = 3;
 const PHASE_CTRL: u8 = 4;
+/// Follower→leader liveness beacons (fixed tag per follower, see
+/// [`beacon_tag`]): the symmetric twin of the leader heartbeat, so the
+/// idle leader detects follower death instead of only finding out at
+/// its next gather.
+const PHASE_FB: u8 = 5;
 
 /// Control-plane opcodes (first payload byte of a `PHASE_CTRL` message).
 const OP_SHUTDOWN: u8 = 0;
@@ -97,6 +116,11 @@ const OP_CANCEL: u8 = 3;
 /// (decentralized control plane; the centralized topology uses
 /// [`SCATTER_HEARTBEAT`]). Followers replay and discard it.
 const OP_HEARTBEAT: u8 = 4;
+/// One continuously-batched scheduler iteration: the body is the packed
+/// participant list (u16 count, then each request's admission seq in
+/// row order). Every node derives the same sampling, bucket and row
+/// packing from it.
+const OP_BATCH: u8 = 5;
 
 /// Centralized heartbeat marker: a 1-byte scatter payload (a real
 /// scatter is ≥ 4 + 4·d bytes, an empty one is the shutdown marker).
@@ -500,6 +524,35 @@ fn emit_done(a: ActiveRequest, finish: FinishReason) {
     }
 }
 
+/// Stream one sampled token on the request's handle (no-op on
+/// followers, whose requests carry no sender): `Started` with the
+/// measured TTFT precedes the first token; a dropped handle self-cancels
+/// so the next scheduler sweep frees the decode state.
+fn emit_token(a: &mut ActiveRequest, tok: u32, lp: f32) {
+    if a.first_token.is_none() {
+        a.first_token = Some(Instant::now());
+        if let Some(s) = a.submitted {
+            a.metrics.ttft_ns = s.elapsed().as_nanos() as u64;
+        }
+        if let Some(ev) = &a.events {
+            let _ = ev.send(TokenEvent::Started {
+                ttft_s: a.metrics.ttft_ns as f64 / 1e9,
+                queued_s: a.metrics.queueing_ns as f64 / 1e9,
+            });
+        }
+    }
+    if let Some(ev) = &a.events {
+        if ev.send(TokenEvent::Token { id: tok, logprob: Some(lp) }).is_err() {
+            // The handle was dropped without cancel(): nobody can
+            // observe this stream. Self-cancel so the next sweep frees
+            // the decode state (and tells followers).
+            if let Some(c) = &a.cancel {
+                c.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
 fn emit_failed(a: &ActiveRequest, error: &str) {
     if let Some(ev) = &a.events {
         let _ = ev.send(TokenEvent::Failed { id: a.req.id, error: error.to_string() });
@@ -528,6 +581,13 @@ struct NodeWorker {
     /// Centralized topology: global scatter/gather sequence number (one
     /// per (request, layer) iteration, shared leader/workers).
     wseq: u32,
+    /// Follower side: the periodic liveness beacon to node 0 (None on
+    /// the leader and on single-node clusters).
+    beacon: Option<Beacon>,
+    /// Leader side: when each follower last proved it was alive (a
+    /// beacon while idle, or any completed gather). Checked against
+    /// `recv_timeout` only while the leader idles.
+    followers_heard: Vec<Instant>,
 }
 
 impl NodeWorker {
@@ -543,6 +603,12 @@ impl NodeWorker {
         let experts = rt.build_node_experts(&layout.resident[node])?;
         let peer_index = layout.resident.iter().map(|r| resident_index(r)).collect();
         let planner = Planner::new(cfg.balancing, layout);
+        let beacon = if node != 0 && ep.n_nodes() > 1 {
+            Some(Beacon::new(node, cfg.heartbeat_period()))
+        } else {
+            None
+        };
+        let followers_heard = vec![Instant::now(); ep.n_nodes()];
         Ok(NodeWorker {
             node,
             cfg,
@@ -553,6 +619,8 @@ impl NodeWorker {
             ep,
             ctrl_seq: 0,
             wseq: 0,
+            beacon,
+            followers_heard,
         })
     }
 
@@ -625,13 +693,14 @@ impl NodeWorker {
 
     // ---------------- leader: the iteration-level scheduler ----------
 
-    /// Node 0's serve loop: pump submissions, admit up to `max_active`,
-    /// interleave one token per active request per iteration under the
-    /// configured policy, stream events, and replicate every decision to
-    /// the followers. Exits when told to shut down, or when the command
-    /// channel closes and all work has drained. On error — a wire or
-    /// runtime failure dooms the whole schedule, since peers are
-    /// mid-protocol — everything in flight gets a terminal `Failed`
+    /// Node 0's serve loop: pump submissions, admit up to `max_active`
+    /// (admission order set by the policy), run one scheduler iteration
+    /// — continuously batched (all active requests share one forward)
+    /// or serial batch-1 — stream events, and replicate every decision
+    /// to the followers. Exits when told to shut down, or when the
+    /// command channel closes and all work has drained. On error — a
+    /// wire or runtime failure dooms the whole schedule, since peers
+    /// are mid-protocol — everything in flight gets a terminal `Failed`
     /// event and the followers are told to exit before bubbling up.
     fn lead(&mut self, rx: &Receiver<Cmd>) -> Result<()> {
         let mut pending: VecDeque<Pending> = VecDeque::new();
@@ -714,6 +783,12 @@ impl NodeWorker {
                     None => break,
                 }
             }
+            // Symmetric liveness: drain the followers' idle beacons and
+            // bound their silence. The loop passes through here once
+            // per heartbeat period while idle and once per iteration
+            // while serving (where every gather refreshes the
+            // deadlines, so only a truly silent follower can trip it).
+            self.check_followers()?;
             if !open && active.is_empty() && pending.is_empty() {
                 // All submitters are gone and the work has drained: a
                 // clean end of service (the `run_node` path). Followers
@@ -762,9 +837,26 @@ impl NodeWorker {
                 }
             }
 
-            // 3. Admission up to the concurrency cap.
+            // 3. Admission up to the concurrency cap (SJF admits the
+            //    smallest generation budget first; other policies admit
+            //    in arrival order).
             while active.len() < self.cfg.max_active.max(1) {
-                let Some(p) = pending.pop_front() else { break };
+                let idx = match self.cfg.policy {
+                    SchedPolicy::ShortestJobFirst => pending
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, p)| p.req.sampling.max_new_tokens)
+                        .map(|(i, _)| i),
+                    _ => {
+                        if pending.is_empty() {
+                            None
+                        } else {
+                            Some(0)
+                        }
+                    }
+                };
+                let Some(idx) = idx else { break };
+                let p = pending.remove(idx).expect("index in bounds");
                 let seq = next_seq;
                 next_seq = next_seq.wrapping_add(1);
                 if self.cfg.topology == Topology::Decentralized {
@@ -783,19 +875,61 @@ impl NodeWorker {
                 continue;
             }
 
-            // 4. One iteration: pick a request, advance it one token.
-            let i = match self.cfg.policy {
-                SchedPolicy::RoundRobin => rr % active.len(),
-                SchedPolicy::RunToCompletion => 0,
-            };
-            rr = rr.wrapping_add(1);
-            self.lead_one(&mut active[i])?;
-            if active[i].finish.is_some() {
-                let a = active.remove(i);
-                let finish = a.finish.expect("checked above");
-                emit_done(a, finish);
+            // 4. One iteration. Continuous batching: every active
+            //    request advances together through ONE shared forward
+            //    pass (the participant list replicates to followers).
+            //    Serial fallback (one request, host path, or
+            //    pre-batching artifacts): pick one request under the
+            //    policy and advance it one token.
+            if self.batched_ok(active) {
+                if self.cfg.topology == Topology::Decentralized {
+                    let mut body = (active.len() as u16).to_le_bytes().to_vec();
+                    for a in active.iter() {
+                        body.extend_from_slice(&a.seq.to_le_bytes());
+                    }
+                    self.ctrl(OP_BATCH, &body)?;
+                }
+                self.batch_iteration(active)?;
+                let mut i = 0;
+                while i < active.len() {
+                    if active[i].finish.is_some() {
+                        let a = active.remove(i);
+                        let finish = a.finish.expect("checked above");
+                        emit_done(a, finish);
+                    } else {
+                        i += 1;
+                    }
+                }
+            } else {
+                let i = match self.cfg.policy {
+                    SchedPolicy::RoundRobin => rr % active.len(),
+                    SchedPolicy::RunToCompletion => 0,
+                    SchedPolicy::ShortestJobFirst => active
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, a)| {
+                            a.req.sampling.max_new_tokens.saturating_sub(a.generated.len())
+                        })
+                        .map(|(i, _)| i)
+                        .unwrap_or(0),
+                };
+                rr = rr.wrapping_add(1);
+                self.lead_one(&mut active[i])?;
+                if active[i].finish.is_some() {
+                    let a = active.remove(i);
+                    let finish = a.finish.expect("checked above");
+                    emit_done(a, finish);
+                }
             }
         }
+    }
+
+    /// The continuous-batching iteration applies: >1 active request on
+    /// the device-resident path with the batched artifact family
+    /// present. (A lone request decodes serially — the bucket floor —
+    /// and the host reference path always decodes serially.)
+    fn batched_ok(&self, active: &[ActiveRequest]) -> bool {
+        active.len() > 1 && self.use_device() && self.rt.has_batched_path()
     }
 
     /// Replicate the step decision (decentralized) and run it locally,
@@ -804,32 +938,7 @@ impl NodeWorker {
         if self.cfg.topology == Topology::Decentralized {
             self.ctrl(OP_STEP, &a.seq.to_le_bytes())?;
         }
-        let decoded = self.step(a)?;
-        if let Some((tok, lp)) = decoded {
-            if a.first_token.is_none() {
-                a.first_token = Some(Instant::now());
-                if let Some(s) = a.submitted {
-                    a.metrics.ttft_ns = s.elapsed().as_nanos() as u64;
-                }
-                if let Some(ev) = &a.events {
-                    let _ = ev.send(TokenEvent::Started {
-                        ttft_s: a.metrics.ttft_ns as f64 / 1e9,
-                        queued_s: a.metrics.queueing_ns as f64 / 1e9,
-                    });
-                }
-            }
-            if let Some(ev) = &a.events {
-                if ev.send(TokenEvent::Token { id: tok, logprob: Some(lp) }).is_err() {
-                    // The handle was dropped without cancel(): nobody can
-                    // observe this stream. Self-cancel so the next sweep
-                    // frees the decode state (and tells followers).
-                    if let Some(c) = &a.cancel {
-                        c.store(true, Ordering::Relaxed);
-                    }
-                }
-            }
-        }
-        Ok(())
+        self.step(a)
     }
 
     /// Broadcast one scheduling decision to the followers (decentralized
@@ -865,6 +974,43 @@ impl NodeWorker {
                     let _ = self.ep.broadcast(tag(PHASE_SCATTER, 0, w), &[SCATTER_HEARTBEAT]);
                 }
             }
+        }
+    }
+
+    /// Leader-side symmetric liveness: drain the followers' idle
+    /// beacons, then error with the silent node ids once any follower
+    /// has gone `recv_timeout` without proving it is alive (beacon or
+    /// completed gather). Called only from the idle loop — while the
+    /// cluster serves, every all-reduce/gather already bounds follower
+    /// silence and refreshes the deadlines via
+    /// [`NodeWorker::note_followers_alive`].
+    fn check_followers(&mut self) -> Result<()> {
+        if self.node != 0 || self.ep.n_nodes() == 1 {
+            return Ok(());
+        }
+        for f in 1..self.ep.n_nodes() {
+            while self.ep.recv_tag(beacon_tag(f), Duration::ZERO).is_ok() {
+                self.followers_heard[f] = Instant::now();
+            }
+        }
+        let bound = self.cfg.recv_timeout;
+        let missing: Vec<usize> = (1..self.ep.n_nodes())
+            .filter(|&f| self.followers_heard[f].elapsed() > bound)
+            .collect();
+        if missing.is_empty() {
+            Ok(())
+        } else {
+            Err(NetError::FollowerLost(missing, bound).into())
+        }
+    }
+
+    /// Every peer just delivered a gather: all followers are provably
+    /// alive right now (the idle-time beacon deadlines restart here, so
+    /// a busy stretch can never read as follower silence).
+    fn note_followers_alive(&mut self) {
+        let now = Instant::now();
+        for t in &mut self.followers_heard {
+            *t = now;
         }
     }
 
@@ -920,6 +1066,7 @@ impl NodeWorker {
                 t,
                 self.cfg.recv_timeout,
                 IDLE_POLL,
+                self.beacon.as_mut(),
             )?));
         };
         let deadline = Instant::now() + self.cfg.recv_timeout;
@@ -935,6 +1082,9 @@ impl NodeWorker {
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => return Ok(None),
                 }
+            }
+            if let Some(b) = self.beacon.as_mut() {
+                b.tick(&mut self.ep);
             }
             match self.ep.recv_tag(t, IDLE_POLL) {
                 Ok(env) => return Ok(Some(env)),
@@ -992,6 +1142,31 @@ impl NodeWorker {
                         active.retain(|a| a.finish.is_none());
                     }
                 }
+                OP_BATCH => {
+                    // One continuously-batched iteration: the packed
+                    // participant list must mirror this node's active
+                    // order exactly (admissions/cancels replicate in
+                    // order, so it does unless the planes desynced).
+                    anyhow::ensure!(body.len() >= 2, "short batch message");
+                    let nr = u16::from_le_bytes(body[0..2].try_into().unwrap()) as usize;
+                    anyhow::ensure!(
+                        body.len() == 2 + 2 * nr,
+                        "batch message length mismatch"
+                    );
+                    let seqs: Vec<u16> = (0..nr)
+                        .map(|r| {
+                            u16::from_le_bytes(body[2 + 2 * r..4 + 2 * r].try_into().unwrap())
+                        })
+                        .collect();
+                    anyhow::ensure!(
+                        seqs.len() == active.len()
+                            && active.iter().zip(&seqs).all(|(a, &s)| a.seq == s),
+                        "node {}: batch participants desynced from the admission order",
+                        self.node
+                    );
+                    self.batch_iteration(&mut active)?;
+                    active.retain(|a| a.finish.is_none());
+                }
                 other => anyhow::bail!("node {}: unknown ctrl opcode {other}", self.node),
             }
         }
@@ -1018,24 +1193,45 @@ impl NodeWorker {
                 continue;
             }
             anyhow::ensure!(
-                env.payload.len() >= 4 + d * 4,
+                env.payload.len() >= 8 + d * 4,
                 "node {}: short scatter payload",
                 self.node
             );
             let layer =
                 u32::from_le_bytes(env.payload[0..4].try_into().unwrap()) as usize;
-            let moe_in = bytes_to_f32s(&env.payload[4..4 + d * 4]);
-            let rest = &env.payload[4 + d * 4..];
-            let ns = rest.len() / 8; // slot count rides on the wire
-            let mut idx = vec![0usize; ns];
-            let mut w = vec![0f32; ns];
-            for s in 0..ns {
+            let rows = u32::from_le_bytes(env.payload[4..8].try_into().unwrap()) as usize;
+            anyhow::ensure!(
+                (1..=64).contains(&rows) && env.payload.len() >= 8 + rows * d * 4,
+                "node {}: malformed scatter payload (rows {rows})",
+                self.node
+            );
+            let moe_in = bytes_to_f32s(&env.payload[8..8 + rows * d * 4]);
+            let rest = &env.payload[8 + rows * d * 4..];
+            anyhow::ensure!(
+                !rest.is_empty() && rest.len() % (8 * rows) == 0,
+                "node {}: malformed slot assignment",
+                self.node
+            );
+            let ns = rest.len() / (8 * rows); // slot count rides on the wire
+            let total = rows * ns;
+            let mut idx = vec![0i32; total];
+            let mut w = vec![0f32; total];
+            for s in 0..total {
                 let o = s * 8;
-                idx[s] = i32::from_le_bytes(rest[o..o + 4].try_into().unwrap()) as usize;
+                idx[s] = i32::from_le_bytes(rest[o..o + 4].try_into().unwrap());
                 w[s] = f32::from_le_bytes(rest[o + 4..o + 8].try_into().unwrap());
             }
-            let partial =
-                self.rt.node_experts_direct(&self.experts, layer, &moe_in, &idx, &w)?;
+            // rows == 1 is the serial iteration; rows > 1 is one
+            // continuously-batched iteration — this node's experts run
+            // for the whole batch in ONE dispatch and reply with the
+            // [rows, D] partial in ONE message.
+            let partial = if rows == 1 {
+                let idx: Vec<usize> = idx.iter().map(|&i| i as usize).collect();
+                self.rt.node_experts_direct(&self.experts, layer, &moe_in, &idx, &w)?
+            } else {
+                self.rt
+                    .node_experts_batched(&self.experts, layer, rows, &moe_in, &idx, &w)?
+            };
             self.ep
                 .send(0, tag(PHASE_GATHER, 0, self.wseq), f32s_to_bytes(&partial))?;
             self.wseq = self.wseq.wrapping_add(1);
@@ -1044,33 +1240,53 @@ impl NodeWorker {
 
     // ---------------- one engine iteration ----------
 
-    /// Advance `a` by one iteration: consume the next prompt token
-    /// during prefill, else sample one token and run its forward pass.
-    /// Sets `a.finish` when the request completed. Returns the token
-    /// sampled this iteration (with its logprob) if this was a decode
-    /// iteration.
-    fn step(&mut self, a: &mut ActiveRequest) -> Result<Option<(u32, f32)>> {
+    /// Phase A of ANY iteration, replicated on every node: decide the
+    /// request's next input token — consume the next prompt token, or
+    /// sample from its own logits with its own sampler stream (the
+    /// token is recorded, streamed, and checked against the stop set
+    /// here). Returns `None` when the request finished instead of
+    /// needing a forward pass (stop token sampled, or context window
+    /// exhausted), `Some((token, is_prefill))` otherwise.
+    ///
+    /// Load-bearing for cross-node determinism: the serial (`OP_STEP`)
+    /// and batched (`OP_BATCH`) iterations share this exact sequence,
+    /// so the draw count and order can never diverge between them.
+    fn decide_token(&self, a: &mut ActiveRequest) -> Option<(u32, bool)> {
         if a.pos >= self.rt.manifest.max_seq {
             a.finish = Some(FinishReason::Length);
-            return Ok(None);
+            return None;
         }
-        let is_prefill = a.pos < a.req.prompt.len();
-        let (tok, decoded) = if is_prefill {
-            (a.req.prompt[a.pos], None)
-        } else {
-            // Replicated on every decentralized node: same seed, same
-            // draw count, same token.
-            let (t, lp) = a.req.sampling.sampler.sample_lp(&a.last_logits, &mut a.rng);
-            a.generated.push(t);
-            if a.req.sampling.stop.contains(&t) {
-                // The stop token is recorded but its forward pass is
-                // skipped.
-                a.finish = Some(FinishReason::Stop);
-                return Ok(Some((t, lp)));
-            }
-            (t, Some((t, lp)))
-        };
+        if a.pos < a.req.prompt.len() {
+            return Some((a.req.prompt[a.pos], true));
+        }
+        // Replicated on every decentralized node: same seed, same draw
+        // count, same token.
+        let (t, lp) = a.req.sampling.sampler.sample_lp(&a.last_logits, &mut a.rng);
+        a.generated.push(t);
+        emit_token(a, t, lp);
+        if a.req.sampling.stop.contains(&t) {
+            // The stop token is recorded but its forward pass is
+            // skipped.
+            a.finish = Some(FinishReason::Stop);
+            return None;
+        }
+        Some((t, false))
+    }
 
+    /// Advance `a` by one serial iteration: decide its token
+    /// ([`NodeWorker::decide_token`]) and run its batch-1 forward pass.
+    /// Sets `a.finish` when the request completed.
+    fn step(&mut self, a: &mut ActiveRequest) -> Result<()> {
+        match self.decide_token(a) {
+            None => Ok(()),
+            Some((tok, is_prefill)) => self.advance_one(a, tok, is_prefill),
+        }
+    }
+
+    /// Run one request's batch-1 forward pass for `tok` and book its
+    /// metrics/position (the tail of [`NodeWorker::step`], shared with
+    /// the batched iteration's lone-runner floor).
+    fn advance_one(&mut self, a: &mut ActiveRequest, tok: u32, is_prefill: bool) -> Result<()> {
         let on_device = matches!(a.state, DecodeState::Dev(_));
         let b = match (self.cfg.topology, on_device) {
             (Topology::Decentralized, true) => self.forward_decentralized_dev(a, tok)?,
@@ -1089,7 +1305,252 @@ impl NodeWorker {
         if a.generated.len() >= a.req.sampling.max_new_tokens {
             a.finish = Some(FinishReason::Length);
         }
-        Ok(decoded)
+        Ok(())
+    }
+
+    // ---------------- the continuously-batched iteration ----------
+
+    /// One continuous-batching iteration over the packed participants
+    /// (the whole active list, in schedule order): replicated verbatim
+    /// on every decentralized node from the `OP_BATCH` participant
+    /// list.
+    ///
+    /// Phase A decides each request's token — consume the next prompt
+    /// token, or sample from its own logits with its own replicated
+    /// sampler stream. A sampled stop token (or an exhausted context
+    /// window) finishes the request WITHOUT a forward pass, exactly as
+    /// on the serial path. Phase B packs the remaining runners into the
+    /// largest fitting bucket and runs ONE shared forward (chunking
+    /// only when the active count exceeds the largest compiled bucket;
+    /// a lone runner takes the batch-1 path — the bucket floor).
+    fn batch_iteration(&mut self, active: &mut [ActiveRequest]) -> Result<()> {
+        let mut runners: Vec<usize> = Vec::new();
+        let mut tokens: Vec<u32> = Vec::new();
+        let mut prefill: Vec<bool> = Vec::new();
+        for (i, a) in active.iter_mut().enumerate() {
+            if a.finish.is_some() {
+                continue;
+            }
+            if let Some((tok, is_prefill)) = self.decide_token(a) {
+                runners.push(i);
+                tokens.push(tok);
+                prefill.push(is_prefill);
+            }
+        }
+        let max_bucket = *self
+            .rt
+            .manifest
+            .batch_buckets()
+            .last()
+            .context("batched iteration without batched artifacts")?;
+        let mut c = 0;
+        while c < runners.len() {
+            let n = (runners.len() - c).min(max_bucket);
+            if n == 1 {
+                let i = runners[c];
+                let (tok, pref) = (tokens[c], prefill[c]);
+                self.advance_one(&mut active[i], tok, pref)?;
+            } else {
+                let chunk: Vec<usize> = runners[c..c + n].to_vec();
+                let toks: Vec<u32> = tokens[c..c + n].to_vec();
+                let pref: Vec<bool> = prefill[c..c + n].to_vec();
+                self.forward_batch(active, &chunk, &toks, &pref)?;
+            }
+            c += n;
+        }
+        Ok(())
+    }
+
+    /// ONE shared forward pass for the runner rows (`rows` indexes into
+    /// `active`, ascending; 2 ≤ rows ≤ bucket). The runners'
+    /// [`DeviceState`]s become the batch rows of a [`BatchedRun`]; per
+    /// layer, every node executes the same per-row plans in the same
+    /// row order, and the data plane carries ONE `[B, ...]` payload per
+    /// exchange (tagged by the first row's identity). The shared
+    /// iteration cost is attributed evenly: each row books a 1/B share
+    /// of the breakdown with `batch_rows = B`.
+    fn forward_batch(
+        &mut self,
+        active: &mut [ActiveRequest],
+        rows: &[usize],
+        toks: &[u32],
+        pref: &[bool],
+    ) -> Result<()> {
+        let n = rows.len();
+        let bucket = self
+            .rt
+            .bucket_for(n)
+            .with_context(|| format!("no artifact bucket fits {n} rows"))?;
+        let n_layers = self.rt.manifest.n_layers;
+        let vocab = self.rt.manifest.vocab;
+        let ns = self.plan_ns();
+        let mut b = TokenBreakdown::default();
+        self.rt.take_transfer_stats();
+        self.ep.take_stats();
+
+        // The shared payloads ride under the first row's identity —
+        // replicated state, so identical on every node and unique per
+        // iteration (that row's step advances each time).
+        let seq0 = active[rows[0]].seq;
+        let step0 = active[rows[0]].step;
+        let positions: Vec<usize> = rows.iter().map(|&i| active[i].pos).collect();
+
+        // Split borrow: the runners' DeviceStates become the batch rows;
+        // everything else on the requests is touched only after the
+        // forward completes.
+        let mut in_batch = vec![false; active.len()];
+        for &i in rows {
+            in_batch[i] = true;
+        }
+        let mut states: Vec<&mut DeviceState> = Vec::with_capacity(n);
+        for (i, a) in active.iter_mut().enumerate() {
+            if in_batch[i] {
+                match &mut a.state {
+                    DecodeState::Dev(d) => states.push(d),
+                    DecodeState::Host { .. } => {
+                        anyhow::bail!("batched forward on host state")
+                    }
+                }
+            }
+        }
+
+        let t_embed = Instant::now();
+        let mut run = BatchedRun::begin(&self.rt, bucket, states, toks, &positions)?;
+        b.misc_ns += t_embed.elapsed().as_nanos() as u64;
+
+        for l in 0..n_layers {
+            let t_misc = Instant::now();
+            let draws = run.attn_router(&self.rt, l)?;
+            let mut plans = Vec::with_capacity(draws.len());
+            for (top_w, top_i) in draws {
+                plans.push(
+                    self.planner.plan_layer(&RouterDraw { selected: top_i, weights: top_w }),
+                );
+            }
+            b.misc_ns += t_misc.elapsed().as_nanos() as u64;
+
+            match self.cfg.topology {
+                Topology::Decentralized => {
+                    let t_moe = Instant::now();
+                    let (idx, w) = self.batch_slots(&plans, self.node, bucket, ns);
+                    let partial = run.node_experts(&self.rt, &self.experts, l, &idx, &w)?;
+                    b.moe_ns += t_moe.elapsed().as_nanos() as u64;
+
+                    if self.ep.n_nodes() == 1 {
+                        let t_sum = Instant::now();
+                        run.finish_layer_device(&self.rt, &partial)?;
+                        b.misc_ns += t_sum.elapsed().as_nanos() as u64;
+                    } else {
+                        // ONE [B, D] all-reduce for the whole batch.
+                        let t_comm = Instant::now();
+                        let mine = self.rt.download_f32(&partial)?;
+                        let summed = self.all_reduce(&mine, seq0, l as u32, step0)?;
+                        b.comm_ns += t_comm.elapsed().as_nanos() as u64;
+
+                        let t_sum = Instant::now();
+                        run.finish_layer_host(&self.rt, &summed)?;
+                        b.misc_ns += t_sum.elapsed().as_nanos() as u64;
+                    }
+                }
+                Topology::Centralized => {
+                    let w_iter = self.next_wseq();
+                    let t_comm = Instant::now();
+                    if let Some(w_iter) = w_iter {
+                        let moe_in = run.moe_in_host(&self.rt)?; // [B, D] scatter payload
+                        self.scatter_rows(&plans, &moe_in, bucket, l as u32, w_iter)?;
+                    }
+                    b.comm_ns += t_comm.elapsed().as_nanos() as u64;
+
+                    let t_moe = Instant::now();
+                    let (idx, w) = self.batch_slots(&plans, 0, bucket, ns);
+                    let partial = run.node_experts(&self.rt, &self.experts, l, &idx, &w)?;
+                    b.moe_ns += t_moe.elapsed().as_nanos() as u64;
+
+                    match w_iter {
+                        None => {
+                            let t_sum = Instant::now();
+                            run.finish_layer_device(&self.rt, &partial)?;
+                            b.misc_ns += t_sum.elapsed().as_nanos() as u64;
+                        }
+                        Some(w_iter) => {
+                            let t_gather = Instant::now();
+                            let mine = self.rt.download_f32(&partial)?;
+                            let sum = self.gather_partials(mine, w_iter, l as u32)?;
+                            b.comm_ns += t_gather.elapsed().as_nanos() as u64;
+
+                            let t_sum = Instant::now();
+                            run.finish_layer_host(&self.rt, &sum)?;
+                            b.misc_ns += t_sum.elapsed().as_nanos() as u64;
+                        }
+                    }
+                }
+            }
+        }
+
+        // ONE [B, V] logits download for the whole batch — each row's
+        // share lands in its request's own `last_logits` below.
+        let t_head = Instant::now();
+        let mut all_logits = Vec::new();
+        run.logits_into(&self.rt, &mut all_logits)?;
+        b.misc_ns += t_head.elapsed().as_nanos() as u64;
+        drop(run); // release the DeviceState borrows before bookkeeping
+        note_transfers(&mut b, &self.rt);
+        note_wire(&mut b, self.ep.take_stats());
+
+        // Attribute the shared iteration evenly: a 1/B share per row
+        // (integer division; the remainder ns/bytes are dropped).
+        let nd = n as u64;
+        let share = TokenBreakdown {
+            moe_ns: b.moe_ns / nd,
+            comm_ns: b.comm_ns / nd,
+            misc_ns: b.misc_ns / nd,
+            h2d_ns: b.h2d_ns / nd,
+            d2h_ns: b.d2h_ns / nd,
+            h2d_bytes: b.h2d_bytes / nd,
+            d2h_bytes: b.d2h_bytes / nd,
+            net_msgs: b.net_msgs / nd,
+            net_bytes: b.net_bytes / nd,
+            batch_rows: n as u32,
+            exec_calls: b.exec_calls / nd,
+        };
+        for (r, &i) in rows.iter().enumerate() {
+            let a = &mut active[i];
+            a.last_logits.clear();
+            a.last_logits.extend_from_slice(&all_logits[r * vocab..(r + 1) * vocab]);
+            if pref[r] {
+                a.metrics.prefill.push(share);
+            } else {
+                a.metrics.decode.push(share);
+            }
+            a.pos += 1;
+            a.step += 1;
+            if a.generated.len() >= a.req.sampling.max_new_tokens {
+                a.finish = Some(FinishReason::Length);
+            }
+        }
+        Ok(())
+    }
+
+    /// Row-major `[bucket, ns]` slot arrays for `node` from the per-row
+    /// plans (weight 0 on padding slots and on padding rows beyond the
+    /// planned ones).
+    fn batch_slots(
+        &self,
+        plans: &[crate::moe::balance::LayerPlan],
+        node: usize,
+        bucket: usize,
+        ns: usize,
+    ) -> (Vec<i32>, Vec<f32>) {
+        let mut idx = vec![0i32; bucket * ns];
+        let mut w = vec![0f32; bucket * ns];
+        for (r, plan) in plans.iter().enumerate() {
+            let (ri, rw) = slots_from_index(&plan.per_node[node], &self.peer_index[node], ns);
+            for s in 0..ns {
+                idx[r * ns + s] = ri[s] as i32;
+                w[r * ns + s] = rw[s];
+            }
+        }
+        (idx, w)
     }
 
     // ---------------- decentralized (P-L_R-D wire protocol) ----------
@@ -1205,7 +1666,7 @@ impl NodeWorker {
             }
         }
         let t_head = Instant::now();
-        a.last_logits = state.logits(&self.rt)?;
+        state.logits_into(&self.rt, &mut a.last_logits)?;
         b.misc_ns += t_head.elapsed().as_nanos() as u64;
         note_transfers(&mut b, &self.rt);
         note_wire(&mut b, self.ep.take_stats());
@@ -1232,6 +1693,7 @@ impl NodeWorker {
             .with_context(|| {
                 format!("node {}: all-reduce, request seq {seq}, layer {layer}", self.node)
             })?;
+        self.note_followers_alive();
         let mut parts: Vec<(usize, Vec<f32>)> =
             envs.into_iter().map(|e| (e.from, bytes_to_f32s(&e.payload))).collect();
         parts.push((self.node, partial.to_vec()));
@@ -1299,7 +1761,7 @@ impl NodeWorker {
             let w_iter = self.next_wseq();
             let t_comm = Instant::now();
             if let Some(w_iter) = w_iter {
-                self.scatter_layer(&plan, &ar.moe_in, l as u32, w_iter)?;
+                self.scatter_rows(std::slice::from_ref(&plan), &ar.moe_in, 1, l as u32, w_iter)?;
             }
             b.comm_ns += t_comm.elapsed().as_nanos() as u64;
 
@@ -1361,7 +1823,7 @@ impl NodeWorker {
             let t_comm = Instant::now();
             if let Some(w_iter) = w_iter {
                 let moe_in = state.moe_in_host(&self.rt)?; // scatter payload
-                self.scatter_layer(&plan, &moe_in, l as u32, w_iter)?;
+                self.scatter_rows(std::slice::from_ref(&plan), &moe_in, 1, l as u32, w_iter)?;
             }
             b.comm_ns += t_comm.elapsed().as_nanos() as u64;
 
@@ -1389,7 +1851,7 @@ impl NodeWorker {
             }
         }
         let t_head = Instant::now();
-        a.last_logits = state.logits(&self.rt)?;
+        state.logits_into(&self.rt, &mut a.last_logits)?;
         b.misc_ns += t_head.elapsed().as_nanos() as u64;
         note_transfers(&mut b, &self.rt);
         note_wire(&mut b, self.ep.take_stats());
@@ -1407,27 +1869,45 @@ impl NodeWorker {
         Some(w)
     }
 
-    /// Leader-side scatter: layer + `moe_in` + per-worker slot
-    /// assignments (shared by the host and device-resident centralized
-    /// loops).
-    fn scatter_layer(
+    /// Leader-side scatter: layer + row count + `[rows, D]` moe_in +
+    /// per-row per-worker slot assignments, all under one sequence
+    /// number (shared by the host, device-resident and batched
+    /// centralized loops — `rows == 1` is the serial case). Rows beyond
+    /// `plans.len()` are bucket padding: zero weights, so the worker's
+    /// padded partial rows are exact zeros.
+    fn scatter_rows(
         &mut self,
-        plan: &crate::moe::balance::LayerPlan,
+        plans: &[crate::moe::balance::LayerPlan],
         moe_in: &[f32],
+        rows: usize,
         layer: u32,
         wseq: u32,
     ) -> Result<()> {
         let ns = self.plan_ns();
+        debug_assert_eq!(moe_in.len(), rows * self.rt.manifest.d_embed);
         for peer in 1..self.ep.n_nodes() {
-            let work = &plan.per_node[peer];
-            let mut payload = Vec::with_capacity(4 + moe_in.len() * 4 + ns * 8);
+            let mut payload = Vec::with_capacity(8 + moe_in.len() * 4 + rows * ns * 8);
             payload.extend_from_slice(&layer.to_le_bytes());
+            payload.extend_from_slice(&(rows as u32).to_le_bytes());
             payload.extend_from_slice(&f32s_to_bytes(moe_in));
-            // slot assignment appended: ns × (i32 idx, f32 w)
-            let (idx, w) = slots_from_index(work, &self.peer_index[peer], ns);
-            for s in 0..idx.len() {
-                payload.extend_from_slice(&(idx[s] as i32).to_le_bytes());
-                payload.extend_from_slice(&w[s].to_le_bytes());
+            // Per-row slot assignment appended: rows × ns × (i32, f32).
+            for r in 0..rows {
+                match plans.get(r) {
+                    Some(plan) => {
+                        let (idx, w) =
+                            slots_from_index(&plan.per_node[peer], &self.peer_index[peer], ns);
+                        for s in 0..ns {
+                            payload.extend_from_slice(&(idx[s] as i32).to_le_bytes());
+                            payload.extend_from_slice(&w[s].to_le_bytes());
+                        }
+                    }
+                    None => {
+                        for _ in 0..ns {
+                            payload.extend_from_slice(&0i32.to_le_bytes());
+                            payload.extend_from_slice(&0f32.to_le_bytes());
+                        }
+                    }
+                }
             }
             self.ep.send(peer, tag(PHASE_SCATTER, 0, wseq), payload)?;
         }
@@ -1440,6 +1920,7 @@ impl NodeWorker {
             .ep
             .gather(tag(PHASE_GATHER, 0, wseq), self.cfg.recv_timeout)
             .with_context(|| format!("leader: gathering partials, layer {layer}"))?;
+        self.note_followers_alive();
         let mut sum = mine;
         for e in envs {
             for (a, v) in sum.iter_mut().zip(bytes_to_f32s(&e.payload)) {
@@ -1468,6 +1949,47 @@ fn slots_from_index(
     (idx, w)
 }
 
+/// The fixed tag a follower's liveness beacons ride on (leader side
+/// drains it per follower while idle).
+pub fn beacon_tag(node: usize) -> u64 {
+    tag(PHASE_FB, node as u32, 0)
+}
+
+/// A follower's periodic liveness beacon to node 0 — the symmetric twin
+/// of the leader heartbeat (ROADMAP ">2-node follower liveness"
+/// follow-up): before it, a follower that died mid-idle was only
+/// noticed when the leader's NEXT gather timed out and named it; now
+/// the idle leader bounds each follower's silence the same way
+/// followers bound the leader's.
+///
+/// Beacons are sent from inside the follower's idle wait loops (every
+/// poll tick once `period` has elapsed), so they flow exactly when the
+/// follower is otherwise silent; while the cluster serves, the data
+/// plane itself proves liveness and the leader refreshes its deadlines
+/// on every gather instead.
+pub struct Beacon {
+    tag: u64,
+    period: Duration,
+    last: Option<Instant>,
+}
+
+impl Beacon {
+    pub fn new(node: usize, period: Duration) -> Beacon {
+        Beacon { tag: beacon_tag(node), period, last: None }
+    }
+
+    /// Send a beacon if one is due (immediately on the first call).
+    /// Best effort: a failed send either races a legitimate teardown or
+    /// precedes an error the next real wire call will surface.
+    pub fn tick(&mut self, ep: &mut Endpoint) {
+        let due = self.last.map_or(true, |t| t.elapsed() >= self.period);
+        if due {
+            let _ = ep.send(0, self.tag, vec![1]);
+            self.last = Some(Instant::now());
+        }
+    }
+}
+
 /// Liveness-bounded idle wait for the leader's next `t`-tagged message.
 ///
 /// Polls in `poll`-sized slices so the wait stays responsive, and
@@ -1477,15 +1999,21 @@ fn slots_from_index(
 /// times shorter than any sane `bound`. This is the liveness fix for
 /// >2-node TCP meshes — the surviving followers' connections keep the
 /// fabric open, so leader death used to be invisible to an idle
-/// follower.
+/// follower. A [`Beacon`], when provided, makes the liveness symmetric:
+/// the follower proves ITS liveness to the idle leader on every poll
+/// tick.
 pub fn recv_from_leader(
     ep: &mut Endpoint,
     t: u64,
     bound: Duration,
     poll: Duration,
+    mut beacon: Option<&mut Beacon>,
 ) -> Result<Envelope, NetError> {
     let deadline = Instant::now() + bound;
     loop {
+        if let Some(b) = beacon.as_deref_mut() {
+            b.tick(ep);
+        }
         let left = deadline.saturating_duration_since(Instant::now());
         if left.is_zero() {
             return Err(NetError::LeaderLost(bound));
@@ -1505,6 +2033,7 @@ fn note_transfers(b: &mut TokenBreakdown, rt: &NanoRuntime) {
     b.d2h_ns = ts.d2h_ns;
     b.h2d_bytes = ts.h2d_bytes;
     b.d2h_bytes = ts.d2h_bytes;
+    b.exec_calls = ts.exec_calls;
 }
 
 /// Fold the endpoint's per-token wire meter into a breakdown.
@@ -1543,6 +2072,7 @@ mod tests {
                         tag(PHASE_CTRL, 0, seq),
                         bound,
                         Duration::from_millis(20),
+                        None,
                     ) {
                         Ok(env) => {
                             assert_eq!(env.payload, vec![OP_HEARTBEAT]);
@@ -1580,6 +2110,61 @@ mod tests {
         );
     }
 
+    /// The symmetric liveness satellite: a follower that dies mid-idle
+    /// must be detectable by the idle leader via the beacon deadlines
+    /// (before this, only the leader's next gather named a dead
+    /// follower). A follower that keeps beaconing must NOT trip the
+    /// bound, however long it idles.
+    #[test]
+    fn idle_leader_detects_follower_death_via_beacons() {
+        let bound = Duration::from_millis(500);
+        let mut eps = crate::network::tcp::loopback_fabric(3).unwrap();
+        let f2 = eps.pop().unwrap();
+        let mut f1 = eps.pop().unwrap();
+        let mut leader = eps.pop().unwrap();
+
+        // Follower 2 dies immediately, without a word; follower 1 keeps
+        // beaconing the way its idle wait loop does.
+        drop(f2);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_f = stop.clone();
+        let h = std::thread::spawn(move || {
+            let mut b = Beacon::new(1, Duration::from_millis(50));
+            while !stop_f.load(Ordering::Relaxed) {
+                b.tick(&mut f1);
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        });
+
+        // Leader side: drain beacons + check deadlines, exactly as the
+        // idle heartbeat loop does.
+        let mut heard = vec![Instant::now(); 3];
+        let t0 = Instant::now();
+        let missing = loop {
+            for f in 1..3usize {
+                while leader.recv_tag(beacon_tag(f), Duration::ZERO).is_ok() {
+                    heard[f] = Instant::now();
+                }
+            }
+            let overdue: Vec<usize> =
+                (1..3).filter(|&f| heard[f].elapsed() > bound).collect();
+            if !overdue.is_empty() {
+                break overdue;
+            }
+            assert!(
+                t0.elapsed() < bound + Duration::from_secs(3),
+                "follower death never detected"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        };
+        assert_eq!(missing, vec![2], "only the dead follower may be overdue");
+        // The live follower was never misread: detection took at least
+        // the bound, during which its beacons kept arriving.
+        assert!(t0.elapsed() >= bound);
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
     /// While heartbeats keep arriving, the bound never fires — liveness
     /// must not misread an idle-but-healthy leader as dead.
     #[test]
@@ -1595,6 +2180,7 @@ mod tests {
                     tag(PHASE_CTRL, 0, seq),
                     bound,
                     Duration::from_millis(10),
+                    None,
                 )
                 .expect("heartbeat arrived within the bound");
             }

@@ -130,6 +130,7 @@ fn breakdown(wall: Instant, ts: TransferStats) -> TokenBreakdown {
         d2h_ns: ts.d2h_ns,
         h2d_bytes: ts.h2d_bytes,
         d2h_bytes: ts.d2h_bytes,
+        exec_calls: ts.exec_calls,
         ..Default::default()
     }
 }

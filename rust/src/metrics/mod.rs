@@ -42,6 +42,16 @@ pub struct TokenBreakdown {
     pub net_msgs: u64,
     /// Wire bytes exchanged with peers for this token (sent + recv).
     pub net_bytes: u64,
+    /// How many requests shared the forward pass that produced this
+    /// token (continuous batching). 0 is legacy/serial and reads as 1.
+    /// When > 1, the time/byte fields above are this request's 1/B
+    /// share of the shared iteration.
+    pub batch_rows: u32,
+    /// Executable dispatches attributed to this token (shared batched
+    /// dispatches divided across the rows): the counter that proves one
+    /// scheduler iteration issued ONE batched forward, not B serial
+    /// ones.
+    pub exec_calls: u64,
 }
 
 impl TokenBreakdown {
@@ -71,6 +81,13 @@ pub struct PhaseMetrics {
     /// Wire (node↔node) traffic sub-accounting (see [`TokenBreakdown`]).
     pub net_msgs: u64,
     pub net_bytes: u64,
+    /// Per-token batch occupancy (how many requests shared each forward
+    /// pass): mean 1.0 is serial decode, mean ≈ B is a saturated
+    /// continuously-batched scheduler. Min/max expose bucket up/downshifts.
+    pub occupancy: Welford,
+    /// Executable dispatches attributed to this phase (see
+    /// [`TokenBreakdown::exec_calls`]).
+    pub exec_calls: u64,
 }
 
 impl PhaseMetrics {
@@ -86,6 +103,27 @@ impl PhaseMetrics {
         self.d2h_bytes += b.d2h_bytes;
         self.net_msgs += b.net_msgs;
         self.net_bytes += b.net_bytes;
+        self.occupancy.push(b.batch_rows.max(1) as f64);
+        self.exec_calls += b.exec_calls;
+    }
+
+    /// Mean requests per forward pass over this phase (1.0 = serial).
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.tokens == 0 {
+            1.0
+        } else {
+            self.occupancy.mean()
+        }
+    }
+
+    /// Mean executable dispatches per token — the dispatch-amortization
+    /// headline: B-way batching divides it by ~B.
+    pub fn exec_calls_per_token(&self) -> f64 {
+        if self.tokens == 0 {
+            0.0
+        } else {
+            self.exec_calls as f64 / self.tokens as f64
+        }
     }
 
     /// Mean host↔device bytes moved per token (the §Perf headline: the
@@ -213,6 +251,7 @@ mod tests {
             d2h_bytes: 2048,
             net_msgs: 4,
             net_bytes: 512,
+            ..Default::default()
         };
         assert_eq!(b.total_ns(), 200);
         assert_eq!(b.transfer_bytes(), 3072);
@@ -257,6 +296,30 @@ mod tests {
         let p = PhaseMetrics::default();
         assert_eq!(p.tokens_per_sec(), 0.0);
         assert_eq!(p.comm_fraction(), 0.0);
+        assert_eq!(p.mean_batch_occupancy(), 1.0);
+        assert_eq!(p.exec_calls_per_token(), 0.0);
+    }
+
+    #[test]
+    fn occupancy_and_dispatch_accounting() {
+        let mut p = PhaseMetrics::default();
+        // Legacy serial token (batch_rows 0 reads as occupancy 1).
+        p.push(TokenBreakdown { moe_ns: 10, exec_calls: 34, ..Default::default() });
+        // Two tokens decoded in shared 4-row forwards.
+        for _ in 0..2 {
+            p.push(TokenBreakdown {
+                moe_ns: 10,
+                batch_rows: 4,
+                exec_calls: 10,
+                ..Default::default()
+            });
+        }
+        assert_eq!(p.tokens, 3);
+        assert!((p.mean_batch_occupancy() - 3.0).abs() < 1e-9); // (1+4+4)/3
+        assert_eq!(p.occupancy.min(), 1.0);
+        assert_eq!(p.occupancy.max(), 4.0);
+        assert_eq!(p.exec_calls, 54);
+        assert!((p.exec_calls_per_token() - 18.0).abs() < 1e-9);
     }
 
     #[test]

@@ -42,7 +42,7 @@ use crate::util::wire::Cursor;
 
 /// Client-port handshake magic (distinct from the mesh's `AMOE`).
 pub const CLIENT_MAGIC: [u8; 4] = *b"AMOC";
-pub const CLIENT_PROTOCOL_VERSION: u16 = 1;
+pub const CLIENT_PROTOCOL_VERSION: u16 = 2;
 /// Corrupt-stream guard; prompts are token ids, nothing legitimate
 /// comes near this.
 const MAX_CLIENT_FRAME: u32 = 1 << 26;
@@ -300,10 +300,26 @@ fn check_magic_version(buf: &[u8]) -> Result<()> {
 
 fn encode_phase(b: &mut Vec<u8>, p: &PhaseMetrics) {
     b.extend_from_slice(&p.tokens.to_le_bytes());
-    for mean in [p.moe.mean(), p.comm.mean(), p.misc.mean(), p.h2d.mean(), p.d2h.mean()] {
+    for mean in [
+        p.moe.mean(),
+        p.comm.mean(),
+        p.misc.mean(),
+        p.h2d.mean(),
+        p.d2h.mean(),
+        p.occupancy.mean(),
+    ] {
         b.extend_from_slice(&mean.to_le_bytes());
     }
-    for n in [p.h2d_bytes, p.d2h_bytes, p.net_msgs, p.net_bytes] {
+    // Occupancy additionally ships min/max: they are the documented
+    // bucket up/downshift signal, which a mean alone cannot carry.
+    let (occ_min, occ_max) = if p.tokens == 0 {
+        (0.0, 0.0)
+    } else {
+        (p.occupancy.min(), p.occupancy.max())
+    };
+    b.extend_from_slice(&occ_min.to_le_bytes());
+    b.extend_from_slice(&occ_max.to_le_bytes());
+    for n in [p.h2d_bytes, p.d2h_bytes, p.net_msgs, p.net_bytes, p.exec_calls] {
         b.extend_from_slice(&n.to_le_bytes());
     }
 }
@@ -313,7 +329,9 @@ fn decode_phase(c: &mut Cursor) -> Result<PhaseMetrics> {
     // The rebuild below iterates `tokens` times; cap it so a corrupt
     // (or hostile) frame cannot spin the decoder.
     anyhow::ensure!(tokens <= 1 << 24, "implausible token count {tokens} on the wire");
-    let (moe, comm, misc, h2d, d2h) = (c.f64()?, c.f64()?, c.f64()?, c.f64()?, c.f64()?);
+    let (moe, comm, misc, h2d, d2h, occ) =
+        (c.f64()?, c.f64()?, c.f64()?, c.f64()?, c.f64()?, c.f64()?);
+    let (occ_min, occ_max) = (c.f64()?, c.f64()?);
     let mut p = PhaseMetrics::default();
     // Rebuild the accumulators from the per-token means: pushing the
     // mean `tokens` times reproduces mean and count exactly (Welford's
@@ -327,11 +345,32 @@ fn decode_phase(c: &mut Cursor) -> Result<PhaseMetrics> {
         p.h2d.push(h2d);
         p.d2h.push(d2h);
     }
+    // Occupancy: one push of min, one of max, and an adjusted filler
+    // for the rest reproduce mean AND min/max exactly (the filler
+    // always lies in [min, max]: n·mean - min - max ∈
+    // [(n-2)·min, (n-2)·max] because mean does).
+    match tokens {
+        0 => {}
+        1 => p.occupancy.push(occ),
+        2 => {
+            p.occupancy.push(occ_min);
+            p.occupancy.push(occ_max);
+        }
+        n => {
+            p.occupancy.push(occ_min);
+            p.occupancy.push(occ_max);
+            let adj = (occ * n as f64 - occ_min - occ_max) / (n - 2) as f64;
+            for _ in 0..n - 2 {
+                p.occupancy.push(adj);
+            }
+        }
+    }
     p.tokens = tokens;
     p.h2d_bytes = c.u64()?;
     p.d2h_bytes = c.u64()?;
     p.net_msgs = c.u64()?;
     p.net_bytes = c.u64()?;
+    p.exec_calls = c.u64()?;
     Ok(p)
 }
 
@@ -414,9 +453,20 @@ mod tests {
             d2h_bytes: g.u64_in(0..1 << 20),
             net_msgs: g.u64_in(0..64),
             net_bytes: g.u64_in(0..1 << 20),
+            batch_rows: g.u64_in(1..9) as u32,
+            exec_calls: g.u64_in(0..256),
         };
         for _ in 0..g.usize_in(0..32) {
             p.push(b);
+        }
+        // A stretch at a different occupancy (a bucket downshift): the
+        // occupancy min/max must survive the wire, not just the
+        // constant case.
+        if g.bool() {
+            let shifted = TokenBreakdown { batch_rows: 1, ..b };
+            for _ in 0..g.usize_in(1..4) {
+                p.push(shifted);
+            }
         }
         p
     }
@@ -455,6 +505,13 @@ mod tests {
             && a.d2h_bytes == b.d2h_bytes
             && a.net_msgs == b.net_msgs
             && a.net_bytes == b.net_bytes
+            && close(a.occupancy.mean(), b.occupancy.mean())
+            // min/max are ±INF on empty phases (INF − INF = NaN fails
+            // `close`), so compare them only when tokens flowed.
+            && (a.tokens == 0
+                || (close(a.occupancy.min(), b.occupancy.min())
+                    && close(a.occupancy.max(), b.occupancy.max())))
+            && a.exec_calls == b.exec_calls
     }
 
     fn result_eq(a: &RequestResult, b: &RequestResult) -> bool {

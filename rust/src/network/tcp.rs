@@ -25,7 +25,11 @@ use std::time::{Duration, Instant};
 
 use crate::network::transport::{Endpoint, Envelope, NetError, Transport};
 
-pub const PROTOCOL_VERSION: u16 = 1;
+/// v2: the centralized scatter payload gained a row-count field
+/// (continuous batching) — a v1 worker would misparse it as activation
+/// bytes and silently compute garbage, so mixed meshes must fail the
+/// handshake instead.
+pub const PROTOCOL_VERSION: u16 = 2;
 const MAGIC: [u8; 4] = *b"AMOE";
 const HANDSHAKE_LEN: usize = 14;
 const FRAME_HEADER_LEN: usize = 20;

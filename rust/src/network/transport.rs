@@ -47,6 +47,11 @@ pub enum NetError {
          unreachable"
     )]
     LeaderLost(Duration),
+    #[error(
+        "follower node(s) {0:?} silent for {1:?} (no beacon while idle): dead or \
+         unreachable"
+    )]
+    FollowerLost(Vec<usize>, Duration),
     #[error("fabric closed")]
     Closed,
     #[error("handshake failed: {0}")]

@@ -1,0 +1,258 @@
+//! Continuous batching on the device-resident path: one shared forward
+//! pass per scheduler iteration for B concurrent requests.
+//!
+//! PR 3's iteration-level scheduler interleaved requests fairly but ran
+//! one batch-1 forward per request per iteration, so `max_active > 1`
+//! bought latency hiding and zero throughput. [`BatchedRun`] drives the
+//! `dev_b{B}_*` artifact family (`aot.py::lower_batched_artifacts`):
+//! the active requests are packed into the smallest bucket B ∈ {2,4,8}
+//! that fits, and embed/qkv/attention/router/experts/head each run ONCE
+//! at leading dim B instead of B times at batch 1.
+//!
+//! # Slots are requests, caches never migrate
+//!
+//! Each request keeps owning its per-layer `[Hkv, S, hd]` cache buffers
+//! inside its [`DeviceState`] — the batched attention artifact takes the
+//! B caches as 2B direct arguments and stacks them on device. Packing a
+//! request into a batch row therefore just *borrows* its caches for the
+//! iteration:
+//!
+//! - bucket up/downshift (active count changes) moves no data;
+//! - a finished/cancelled request frees its slot by dropping its
+//!   `DeviceState`, exactly as on the serial path;
+//! - a fresh request needs no cache reset beyond `DeviceState::new`.
+//!
+//! Rows sit at *different* decode offsets, so the per-slot position
+//! vector rides as an `i32[B]` upload and each row's cache append is a
+//! per-slot dynamic-update-slice at `positions[row]`.
+//!
+//! # Padding rows
+//!
+//! When the bucket exceeds the active count, padding rows feed token 0
+//! at position 0 and borrow an active row's caches; their expert slots carry
+//! weight 0 and their logits rows are never read. Every batched role is
+//! row-wise, so padding cannot perturb live rows (asserted by
+//! `test_model.py::TestBatchedDecomposition` and end-to-end by the
+//! batched-vs-serial identity tests in `integration_cluster.rs`).
+//!
+//! # Host crossings
+//!
+//! Identical in KIND to the batch-1 device path — router top-k,
+//! all-reduce payload, logits — but each is now one `[B, ...]` transfer
+//! instead of B separate `[1, ...]` transfers, and every per-layer
+//! dispatch is shared by the whole batch (see
+//! `TransferStats::exec_calls`).
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::nano::NodeExperts;
+use crate::runtime::{DeviceState, NanoRuntime};
+
+/// One scheduler iteration's shared forward pass: borrows the packed
+/// requests' [`DeviceState`]s as batch rows and chains the `dev_b{B}_*`
+/// executables across layers. Dropped at the end of the iteration (the
+/// transient x/h/moe_in activations die with it; the caches live on in
+/// their owners).
+pub struct BatchedRun<'a> {
+    bucket: usize,
+    states: Vec<&'a mut DeviceState>,
+    /// Residual stream [B, D] (valid between `begin` and `logits_into`).
+    x: Option<xla::PjRtBuffer>,
+    /// Post-attention residual [B, D] (valid within a layer).
+    h: Option<xla::PjRtBuffer>,
+    /// Normed MoE input [B, D] (valid within a layer).
+    moe_in: Option<xla::PjRtBuffer>,
+    /// Per-slot decode offsets, uploaded once per iteration (i32[B]).
+    positions_buf: xla::PjRtBuffer,
+}
+
+impl<'a> BatchedRun<'a> {
+    /// Pack `states` (the active requests, in schedule order) into a
+    /// `bucket`-row batch and embed their tokens into the device-
+    /// resident residual stream.
+    pub fn begin(
+        rt: &NanoRuntime,
+        bucket: usize,
+        states: Vec<&'a mut DeviceState>,
+        tokens: &[u32],
+        positions: &[usize],
+    ) -> Result<BatchedRun<'a>> {
+        let rows = states.len();
+        if rows == 0 || rows > bucket {
+            bail!("{rows} rows do not fit bucket {bucket}");
+        }
+        if tokens.len() != rows || positions.len() != rows {
+            bail!("tokens/positions length mismatch");
+        }
+        let exes = rt.batched(bucket)?;
+        let mut toks = vec![0i32; bucket]; // padding rows feed token 0
+        let mut pos = vec![0i32; bucket]; // ... at position 0
+        for r in 0..rows {
+            toks[r] = tokens[r] as i32;
+            pos[r] = positions[r] as i32;
+        }
+        let tok_buf = rt.buf_i32(&toks, &[bucket])?;
+        let x = rt.run_dev(&exes.embed, &[rt.embed_weight_buf(), &tok_buf])?;
+        let positions_buf = rt.buf_i32(&pos, &[bucket])?;
+        Ok(BatchedRun {
+            bucket,
+            states,
+            x: Some(x),
+            h: None,
+            moe_in: None,
+            positions_buf,
+        })
+    }
+
+    pub fn bucket(&self) -> usize {
+        self.bucket
+    }
+
+    pub fn rows(&self) -> usize {
+        self.states.len()
+    }
+
+    /// One layer's attention + routing for the whole batch: per-slot
+    /// cache appends, shared attention/norm/router dispatches, ONE
+    /// packed `[B, 2K]` top-k download. Returns `(top_w, top_i)` per
+    /// ACTIVE row.
+    #[allow(clippy::type_complexity)]
+    pub fn attn_router(
+        &mut self,
+        rt: &NanoRuntime,
+        layer: usize,
+    ) -> Result<Vec<(Vec<f32>, Vec<usize>)>> {
+        let exes = rt.batched(self.bucket)?;
+        let w = rt.attn_weights(layer);
+        let (ln1, wqkv, wo, ln2, wr) = (&w[0], &w[1], &w[2], &w[3], &w[4]);
+        let x = self.x.take().context("begin not called")?;
+        let qkv = rt.run_dev(&exes.qkv, &[ln1, wqkv, &x])?;
+
+        // Per-slot appends: each row writes its own cache at its own
+        // position (B tiny dispatches; the heavy roles below are
+        // shared). The row-index scalars are cached constants on the
+        // device (`BatchedExes::row_bufs`) — zero uploads here.
+        for r in 0..self.states.len() {
+            let kc = self.states[r].k[layer].take().context("cache buffer missing")?;
+            let vc = self.states[r].v[layer].take().context("cache buffer missing")?;
+            let new_k = rt.run_dev(
+                &exes.k_append,
+                &[&kc, &qkv, &self.positions_buf, &exes.row_bufs[r]],
+            )?;
+            let new_v = rt.run_dev(
+                &exes.v_append,
+                &[&vc, &qkv, &self.positions_buf, &exes.row_bufs[r]],
+            )?;
+            self.states[r].k[layer] = Some(new_k);
+            self.states[r].v[layer] = Some(new_v);
+        }
+
+        // Shared attention over the B per-request caches (padding rows
+        // borrow the last active row's — masked to position 0, and rows
+        // are independent, so whose cache they see cannot matter).
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(4 + 2 * self.bucket);
+        args.push(wo);
+        args.push(&x);
+        args.push(&qkv);
+        args.push(&self.positions_buf);
+        for r in 0..self.bucket {
+            let s = &self.states[r.min(self.states.len() - 1)];
+            args.push(s.k[layer].as_ref().context("cache buffer missing")?);
+        }
+        for r in 0..self.bucket {
+            let s = &self.states[r.min(self.states.len() - 1)];
+            args.push(s.v[layer].as_ref().context("cache buffer missing")?);
+        }
+        let h = rt.run_dev(&exes.attn_out, &args)?;
+        let moe_in = rt.run_dev(&exes.moe_norm, &[ln2, &h])?;
+        let packed_buf = rt.run_dev(&exes.router, &[wr, &moe_in])?;
+        let packed = rt.download_f32(&packed_buf)?;
+
+        self.x = Some(x);
+        self.h = Some(h);
+        self.moe_in = Some(moe_in);
+
+        let k = rt.manifest.top_k;
+        if packed.len() != self.bucket * 2 * k {
+            bail!("router returned {} values, expected {}", packed.len(), self.bucket * 2 * k);
+        }
+        let mut draws = Vec::with_capacity(self.states.len());
+        for r in 0..self.states.len() {
+            let row = &packed[r * 2 * k..(r + 1) * 2 * k];
+            let top_w = row[..k].to_vec();
+            let top_i = row[k..].iter().map(|&f| f.round() as usize).collect();
+            draws.push((top_w, top_i));
+        }
+        Ok(draws)
+    }
+
+    /// Download the current `[B, D]` MoE input (centralized leader only:
+    /// the scatter payload must hit the wire — one message now carries
+    /// the whole batch).
+    pub fn moe_in_host(&self, rt: &NanoRuntime) -> Result<Vec<f32>> {
+        let b = self.moe_in.as_ref().context("no moe_in: run attn_router first")?;
+        rt.download_f32(b)
+    }
+
+    /// Run this node's experts for ALL rows in one dispatch: `slot_idx`
+    /// / `slot_w` are `[bucket * ns]` row-major per-row local slot
+    /// assignments (weight 0 on padding slots and padding rows). The
+    /// `[B, D]` partial stays on device.
+    pub fn node_experts(
+        &mut self,
+        rt: &NanoRuntime,
+        node: &NodeExperts,
+        layer: usize,
+        slot_idx: &[i32],
+        slot_w: &[f32],
+    ) -> Result<xla::PjRtBuffer> {
+        if slot_idx.len() != slot_w.len() || slot_idx.len() % self.bucket != 0 {
+            bail!("slot_idx/slot_w shape mismatch");
+        }
+        let ns = slot_idx.len() / self.bucket;
+        let exes = rt.batched(self.bucket)?;
+        let exe = exes.experts_exe(node.resident.len(), ns, &rt.manifest)?;
+        let moe_in = self.moe_in.take().context("no moe_in: run attn_router first")?;
+        let ib = rt.buf_i32(slot_idx, &[self.bucket, ns])?;
+        let wb = rt.buf_f32(slot_w, &[self.bucket, ns])?;
+        let le = &node.layers[layer];
+        let partial = rt.run_dev(exe, &[&le.w1, &le.v1, &le.w2, &moe_in, &ib, &wb])?;
+        self.moe_in = Some(moe_in);
+        Ok(partial)
+    }
+
+    /// Close the layer with a `[B, D]` sum that is already on device
+    /// (single-node case: the local partial IS the sum).
+    pub fn finish_layer_device(
+        &mut self,
+        rt: &NanoRuntime,
+        moe_sum: &xla::PjRtBuffer,
+    ) -> Result<()> {
+        let exes = rt.batched(self.bucket)?;
+        let h = self.h.take().context("no h: run attn_router first")?;
+        self.x = Some(rt.run_dev(&exes.residual, &[&h, moe_sum])?);
+        self.moe_in = None;
+        Ok(())
+    }
+
+    /// Close the layer with a host-side `[B * D]` sum (multi-node: the
+    /// all-reduced rows came off the wire in one payload).
+    pub fn finish_layer_host(&mut self, rt: &NanoRuntime, moe_sum: &[f32]) -> Result<()> {
+        let d = rt.manifest.d_embed;
+        if moe_sum.len() != self.bucket * d {
+            bail!("moe sum has {} elements, expected {}", moe_sum.len(), self.bucket * d);
+        }
+        let sum = rt.buf_f32(moe_sum, &[self.bucket, d])?;
+        self.finish_layer_device(rt, &sum)
+    }
+
+    /// Final norm + logits for the whole batch, downloaded in ONE
+    /// `[B * V]` crossing into the caller's staging buffer; the caller
+    /// slices row `r * vocab .. (r+1) * vocab` per request.
+    pub fn logits_into(&self, rt: &NanoRuntime, out: &mut Vec<f32>) -> Result<()> {
+        let exes = rt.batched(self.bucket)?;
+        let x = self.x.as_ref().context("no residual stream: batch not run")?;
+        let b = rt.run_dev(&exes.lm_head, &[rt.lnf_buf(), rt.head_buf(), x])?;
+        rt.download_f32_into(&b, out)
+    }
+}

@@ -41,6 +41,12 @@ use crate::runtime::nano::NodeExperts;
 use crate::runtime::{HostTensor, NanoRuntime};
 
 /// Per-request decode state kept as `PjRtBuffer`s across the whole loop.
+///
+/// The per-layer cache buffers are `pub(crate)` so the continuous-
+/// batching driver ([`crate::runtime::batch::BatchedRun`]) can borrow a
+/// set of requests' caches as the per-slot banks of one shared batched
+/// forward pass — the cache shape is identical on both paths, which is
+/// what makes bucket up/downshifts free (no cache ever migrates).
 pub struct DeviceState {
     /// Residual stream [1, D] (valid between `begin_token` and `logits`).
     x: Option<xla::PjRtBuffer>,
@@ -49,8 +55,8 @@ pub struct DeviceState {
     /// Normed MoE input [1, D] (valid within a layer).
     moe_in: Option<xla::PjRtBuffer>,
     /// Per-layer K/V caches [Hkv, S, hd], resident for the request.
-    k: Vec<Option<xla::PjRtBuffer>>,
-    v: Vec<Option<xla::PjRtBuffer>>,
+    pub(crate) k: Vec<Option<xla::PjRtBuffer>>,
+    pub(crate) v: Vec<Option<xla::PjRtBuffer>>,
     /// Reused upload of the position scalar (same for all layers of a
     /// token: one 4-byte upload per token instead of one per role call).
     pos_cache: Option<(i32, xla::PjRtBuffer)>,
@@ -225,8 +231,20 @@ impl DeviceState {
     /// Final norm + logits, downloaded for the host-side sampler (the
     /// one per-token crossing; sampler-on-device is a tracked gap).
     pub fn logits(&self, rt: &NanoRuntime) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.logits_into(rt, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`DeviceState::logits`] into a caller-owned slot: the serve loop
+    /// hands its request's `last_logits` straight to the download, so
+    /// one live logits buffer exists per request at any time and no
+    /// extra `[1, V]` `Vec` travels up the stack per token (see
+    /// `NanoRuntime::download_f32_into` for what can and cannot be
+    /// elided under the pinned xla-rs API).
+    pub fn logits_into(&self, rt: &NanoRuntime, out: &mut Vec<f32>) -> Result<()> {
         let x = self.x.as_ref().context("no residual stream: token not run")?;
         let b = rt.run_dev(&rt.dev()?.lm_head, &[rt.lnf_buf(), rt.head_buf(), x])?;
-        rt.download_f32(&b)
+        rt.download_f32_into(&b, out)
     }
 }

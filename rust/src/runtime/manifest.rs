@@ -27,6 +27,11 @@ pub struct Manifest {
     /// decode path). Older artifact dirs lack it; the runtime then falls
     /// back to the host-tensor reference path.
     pub device_artifacts: bool,
+    /// Largest bucket of the batched `dev_b{B}_*` decode family; the
+    /// buckets are the powers of two from 2 up to this value (so 8 →
+    /// B ∈ {2, 4, 8}). 0 = artifacts predate continuous batching; the
+    /// live scheduler then decodes serially (batch-1 per iteration).
+    pub max_batch: usize,
 }
 
 impl Manifest {
@@ -60,6 +65,7 @@ impl Manifest {
                 }
             },
             device_artifacts: doc.int_or("device_artifacts", 0) != 0,
+            max_batch: doc.int_or("max_batch", 0).max(0) as usize,
         };
         m.validate()?;
         Ok(m)
@@ -83,6 +89,19 @@ impl Manifest {
             bail!("num_slots < top_k");
         }
         Ok(())
+    }
+
+    /// Bucket sizes of the batched decode family, ascending (empty when
+    /// the artifacts predate continuous batching). The live scheduler
+    /// packs active requests into the smallest bucket that fits.
+    pub fn batch_buckets(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut b = 2;
+        while b <= self.max_batch {
+            out.push(b);
+            b *= 2;
+        }
+        out
     }
 
     /// The matching `ModelDims` (for layout/planning at nano scale).
@@ -139,6 +158,17 @@ fast_num_slots = 4
         assert!(!Manifest::parse(SAMPLE).unwrap().device_artifacts);
         let with = format!("{SAMPLE}device_artifacts = 1\n");
         assert!(Manifest::parse(&with).unwrap().device_artifacts);
+    }
+
+    #[test]
+    fn batch_buckets_derive_from_max_batch() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.max_batch, 0);
+        assert!(m.batch_buckets().is_empty());
+        let with = format!("{SAMPLE}max_batch = 8\n");
+        assert_eq!(Manifest::parse(&with).unwrap().batch_buckets(), vec![2, 4, 8]);
+        let with = format!("{SAMPLE}max_batch = 4\n");
+        assert_eq!(Manifest::parse(&with).unwrap().batch_buckets(), vec![2, 4]);
     }
 
     #[test]

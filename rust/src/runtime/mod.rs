@@ -18,10 +18,12 @@
 //! bytes per token (and tests can assert the device path stays off the
 //! PCIe-equivalent).
 
+pub mod batch;
 pub mod device;
 pub mod manifest;
 pub mod nano;
 
+pub use batch::BatchedRun;
 pub use device::DeviceState;
 pub use manifest::Manifest;
 pub use nano::{AttnRouterOut, NanoRuntime, NodeExperts};
@@ -38,6 +40,10 @@ pub struct TransferStats {
     pub d2h_ns: u64,
     pub h2d_bytes: u64,
     pub d2h_bytes: u64,
+    /// Executable dispatches (`execute` calls) — the counter that proves
+    /// continuous batching collapses per-request forward passes into one
+    /// shared pass (B requests per iteration at ~1/B the dispatches).
+    pub exec_calls: u64,
 }
 
 impl TransferStats {
@@ -46,6 +52,7 @@ impl TransferStats {
         self.d2h_ns += other.d2h_ns;
         self.h2d_bytes += other.h2d_bytes;
         self.d2h_bytes += other.d2h_bytes;
+        self.exec_calls += other.exec_calls;
     }
 }
 
@@ -129,11 +136,29 @@ mod tests {
 
     #[test]
     fn transfer_stats_accumulate() {
-        let mut a = TransferStats { h2d_ns: 1, d2h_ns: 2, h2d_bytes: 3, d2h_bytes: 4 };
-        a.add(TransferStats { h2d_ns: 10, d2h_ns: 20, h2d_bytes: 30, d2h_bytes: 40 });
+        let mut a = TransferStats {
+            h2d_ns: 1,
+            d2h_ns: 2,
+            h2d_bytes: 3,
+            d2h_bytes: 4,
+            exec_calls: 5,
+        };
+        a.add(TransferStats {
+            h2d_ns: 10,
+            d2h_ns: 20,
+            h2d_bytes: 30,
+            d2h_bytes: 40,
+            exec_calls: 50,
+        });
         assert_eq!(
             a,
-            TransferStats { h2d_ns: 11, d2h_ns: 22, h2d_bytes: 33, d2h_bytes: 44 }
+            TransferStats {
+                h2d_ns: 11,
+                d2h_ns: 22,
+                h2d_bytes: 33,
+                d2h_bytes: 44,
+                exec_calls: 55,
+            }
         );
     }
 }

@@ -108,6 +108,89 @@ impl DeviceExes {
     }
 }
 
+/// The untupled batched executables of ONE bucket size B of the
+/// `dev_b{B}_*` family (`aot.py::lower_batched_artifacts`): B concurrent
+/// requests share one forward pass per scheduler iteration (continuous
+/// batching). Cache banks stay per-request `[Hkv, S, hd]` buffers — the
+/// batched attention takes 2B of them as direct arguments — so a
+/// request keeps its cache across bucket up/downshifts.
+pub(crate) struct BatchedExes {
+    pub(crate) bucket: usize,
+    pub(crate) embed: xla::PjRtLoadedExecutable,
+    pub(crate) qkv: xla::PjRtLoadedExecutable,
+    pub(crate) k_append: xla::PjRtLoadedExecutable,
+    pub(crate) v_append: xla::PjRtLoadedExecutable,
+    pub(crate) attn_out: xla::PjRtLoadedExecutable,
+    pub(crate) moe_norm: xla::PjRtLoadedExecutable,
+    pub(crate) router: xla::PjRtLoadedExecutable,
+    pub(crate) residual: xla::PjRtLoadedExecutable,
+    pub(crate) lm_head: xla::PjRtLoadedExecutable,
+    /// Batched experts keyed (residents, slots):
+    /// [el8_fast, el8_full, el16_fast, el16_full].
+    pub(crate) experts: [xla::PjRtLoadedExecutable; 4],
+    /// Device-resident row-index scalars 0..bucket for the per-slot
+    /// cache appends — compile-time constants per bucket, uploaded once
+    /// here instead of every iteration (and deliberately outside the
+    /// h2d meter: they are setup, not serving traffic).
+    pub(crate) row_bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl BatchedExes {
+    fn compile(
+        client: &xla::PjRtClient,
+        dir: &Path,
+        m: &Manifest,
+        bucket: usize,
+    ) -> Result<BatchedExes> {
+        let role = |r: &str| format!("dev_b{bucket}_{r}");
+        let experts =
+            |el: usize, ns: usize| format!("dev_b{bucket}_experts_el{el}_ns{ns}");
+        let mut row_bufs = Vec::with_capacity(bucket);
+        for r in 0..bucket {
+            row_bufs.push(client.buffer_from_host_buffer(&[r as i32], &[], None)?);
+        }
+        Ok(BatchedExes {
+            bucket,
+            embed: compile_artifact(client, dir, &role("embed"))?,
+            qkv: compile_artifact(client, dir, &role("qkv"))?,
+            k_append: compile_artifact(client, dir, &role("k_append"))?,
+            v_append: compile_artifact(client, dir, &role("v_append"))?,
+            attn_out: compile_artifact(client, dir, &role("attn_out"))?,
+            moe_norm: compile_artifact(client, dir, &role("moe_norm"))?,
+            router: compile_artifact(client, dir, &role("router"))?,
+            residual: compile_artifact(client, dir, &role("residual"))?,
+            lm_head: compile_artifact(client, dir, &role("lm_head"))?,
+            experts: [
+                compile_artifact(client, dir, &experts(8, m.fast_num_slots))?,
+                compile_artifact(client, dir, &experts(8, m.num_slots))?,
+                compile_artifact(client, dir, &experts(16, m.fast_num_slots))?,
+                compile_artifact(client, dir, &experts(16, m.num_slots))?,
+            ],
+            row_bufs,
+        })
+    }
+
+    /// The batched experts executable for a node with `el` residents
+    /// running `ns` slots per row.
+    pub(crate) fn experts_exe(
+        &self,
+        el: usize,
+        ns: usize,
+        m: &Manifest,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        match (el, ns) {
+            (8, n) if n == m.fast_num_slots => Ok(&self.experts[0]),
+            (8, n) if n == m.num_slots => Ok(&self.experts[1]),
+            (16, n) if n == m.fast_num_slots => Ok(&self.experts[2]),
+            (16, n) if n == m.num_slots => Ok(&self.experts[3]),
+            (el, n) => bail!(
+                "no batched experts executable for el={el}, ns={n} (bucket {})",
+                self.bucket
+            ),
+        }
+    }
+}
+
 /// Compiled executables + weights for the nano model.
 pub struct NanoRuntime {
     pub manifest: Manifest,
@@ -127,6 +210,10 @@ pub struct NanoRuntime {
     /// use (host-path-only runs never pay the 11 extra compilations;
     /// pre-`dev_*` artifact dirs never populate it).
     device_exes: OnceCell<DeviceExes>,
+    /// Batched decode families, compiled lazily PER BUCKET on first use
+    /// (a serve run at concurrency 2 never pays for the B=8 set).
+    /// Indexed log2(bucket) - 1: buckets 2/4/8/16 → slots 0..4.
+    batched_exes: [OnceCell<BatchedExes>; 4],
     /// Where the artifacts were loaded from (for lazy compilation).
     artifact_dir: PathBuf,
     /// Host↔device transfer meter (single-threaded per node — PJRT
@@ -214,6 +301,7 @@ impl NanoRuntime {
             lm_head_exe,
             dense_exe,
             device_exes: OnceCell::new(),
+            batched_exes: Default::default(),
             artifact_dir: dir.to_path_buf(),
             transfers: Cell::new(TransferStats::default()),
             host_weights,
@@ -250,6 +338,41 @@ impl NanoRuntime {
         Ok(self.device_exes.get().expect("just populated"))
     }
 
+    /// The batched `dev_b{B}_*` family is available (continuous
+    /// batching). Cheap: consults the manifest, does not compile.
+    pub fn has_batched_path(&self) -> bool {
+        self.manifest.device_artifacts && self.manifest.max_batch >= 2
+    }
+
+    /// Smallest artifact bucket that fits `n` rows (`None` when `n`
+    /// exceeds the largest bucket — the caller then chunks).
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.manifest.batch_buckets().into_iter().find(|&b| b >= n)
+    }
+
+    /// The batched executables for one bucket, compiled on first use.
+    pub(crate) fn batched(&self, bucket: usize) -> Result<&BatchedExes> {
+        if !self.has_batched_path() {
+            bail!("artifacts lack the dev_b* batched set — re-run `make artifacts`");
+        }
+        if bucket > self.manifest.max_batch {
+            bail!("bucket {bucket} exceeds the artifacts' max_batch {}", self.manifest.max_batch);
+        }
+        let idx = match bucket {
+            2 => 0,
+            4 => 1,
+            8 => 2,
+            16 => 3,
+            other => bail!("no batched artifact family for bucket {other}"),
+        };
+        if self.batched_exes[idx].get().is_none() {
+            let exes =
+                BatchedExes::compile(&self.client, &self.artifact_dir, &self.manifest, bucket)?;
+            let _ = self.batched_exes[idx].set(exes);
+        }
+        Ok(self.batched_exes[idx].get().expect("just populated"))
+    }
+
     pub(crate) fn attn_weights(&self, layer: usize) -> &[xla::PjRtBuffer; 5] {
         &self.attn_bufs[layer]
     }
@@ -279,6 +402,15 @@ impl NanoRuntime {
         let mut t = self.transfers.get();
         t.d2h_bytes += bytes;
         t.d2h_ns += ns;
+        self.transfers.set(t);
+    }
+
+    /// One executable dispatch (the counter behind the continuous-
+    /// batching acceptance: B requests per iteration at ~1/B the
+    /// dispatches of serial decode).
+    fn note_exec(&self) {
+        let mut t = self.transfers.get();
+        t.exec_calls += 1;
         self.transfers.set(t);
     }
 
@@ -321,6 +453,23 @@ impl NanoRuntime {
         Ok(out)
     }
 
+    /// [`download_f32`] into a caller-owned slot. The buffer `to_vec`
+    /// materializes is moved in (never copied); the caller's previous
+    /// allocation is dropped here instead of travelling up the stack,
+    /// so hot-path staging like `last_logits` holds exactly one live
+    /// buffer per request at any time. (True allocation elision would
+    /// need a literal→slice copy API the pinned xla-rs does not expose;
+    /// the real hot-path win is the batched `[B, V]` download, which
+    /// amortizes this one materialization across B requests.)
+    pub fn download_f32_into(&self, buf: &xla::PjRtBuffer, out: &mut Vec<f32>) -> Result<()> {
+        let t0 = Instant::now();
+        let lit = buf.to_literal_sync()?;
+        let v = lit.to_vec::<f32>()?;
+        self.note_d2h(4 * v.len() as u64, t0.elapsed().as_nanos() as u64);
+        *out = v;
+        Ok(())
+    }
+
     /// Execute and unpack the tuple root into literals (host path: the
     /// whole output tuple — caches included — crosses to the host).
     fn run(
@@ -328,6 +477,7 @@ impl NanoRuntime {
         exe: &xla::PjRtLoadedExecutable,
         args: &[&xla::PjRtBuffer],
     ) -> Result<Vec<xla::Literal>> {
+        self.note_exec();
         let out = exe.execute_b(args)?;
         let t0 = Instant::now();
         let lit = out[0][0].to_literal_sync()?;
@@ -349,6 +499,7 @@ impl NanoRuntime {
         exe: &xla::PjRtLoadedExecutable,
         args: &[&xla::PjRtBuffer],
     ) -> Result<xla::PjRtBuffer> {
+        self.note_exec();
         let mut out = exe.execute_b(args)?;
         let mut replica = out.pop().context("executable returned no replicas")?;
         if replica.len() != 1 {
@@ -553,6 +704,39 @@ impl NanoRuntime {
         }
         let parts = self.run(exe, &args)?;
         Ok(parts[0].to_vec::<f32>()?)
+    }
+
+    /// Batched expert execution for `rows` concurrent requests in ONE
+    /// dispatch (the centralized worker's continuous-batching path):
+    /// per-row *local* slot indices gather from the node's stacked
+    /// residents, padding rows/slots carry weight 0. `rows` must match
+    /// a compiled bucket; host in/out because the inputs arrive off the
+    /// wire and the partial goes straight back onto it.
+    pub fn node_experts_batched(
+        &self,
+        node: &NodeExperts,
+        layer: usize,
+        rows: usize,
+        moe_in: &[f32],
+        slot_idx: &[i32],
+        slot_w: &[f32],
+    ) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        if moe_in.len() != rows * m.d_embed {
+            bail!("moe_in has {} elements, expected {} x {}", moe_in.len(), rows, m.d_embed);
+        }
+        if slot_idx.len() != slot_w.len() || rows == 0 || slot_idx.len() % rows != 0 {
+            bail!("slot_idx/slot_w shape mismatch");
+        }
+        let ns = slot_idx.len() / rows;
+        let exes = self.batched(rows)?;
+        let exe = exes.experts_exe(node.resident.len(), ns, m)?;
+        let le = &node.layers[layer];
+        let xb = self.buf_f32(moe_in, &[rows, m.d_embed])?;
+        let ib = self.buf_i32(slot_idx, &[rows, ns])?;
+        let wb = self.buf_f32(slot_w, &[rows, ns])?;
+        let out = self.run_dev(exe, &[&le.w1, &le.v1, &le.w2, &xb, &ib, &wb])?;
+        self.download_f32(&out)
     }
 
     /// Final norm + logits [1, V].

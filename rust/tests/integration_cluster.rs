@@ -310,6 +310,232 @@ fn concurrent_round_robin_matches_serial() {
     }
 }
 
+fn batched_artifacts(dir: &Path, min_bucket: usize) -> bool {
+    let manifest = apple_moe::runtime::Manifest::load(dir).unwrap();
+    if manifest.max_batch < min_bucket {
+        eprintln!("skipping: artifacts predate the dev_b* batched set");
+        return false;
+    }
+    true
+}
+
+/// The continuous-batching acceptance: concurrent requests with MIXED
+/// prompt lengths (slots sit at different decode offsets) generate
+/// tokens identical to serial batch-1 serving on BOTH topologies at
+/// B ∈ {2, 4}, while actually sharing forward passes — batch occupancy
+/// well above 1 and strictly fewer executable dispatches per token
+/// than serial decode (one batched forward per scheduler iteration,
+/// not B serial ones).
+#[test]
+fn batched_decode_matches_serial_and_amortizes_dispatch() {
+    let Some(dir) = artifacts_dir() else { return };
+    if !batched_artifacts(&dir, 4) {
+        return;
+    }
+    let reqs = [
+        Request::new(60, vec![3, 141, 59, 26], 8),
+        Request::new(61, vec![10, 20, 30], 8),
+        Request::new(62, vec![100, 200], 8),
+        Request::new(63, vec![7, 77, 177, 250, 333], 8),
+    ];
+
+    for topology in [Topology::Decentralized, Topology::Centralized] {
+        let mk = |max_active: usize| {
+            let mut cfg = LiveConfig::new(dir.clone(), 2);
+            cfg.topology = topology;
+            if topology == Topology::Centralized {
+                cfg.balancing = Balancing::SelectedOnly;
+            }
+            cfg.max_active = max_active;
+            LiveCluster::start(cfg).unwrap()
+        };
+
+        // Serial reference: one at a time, batch-1 forwards throughout.
+        let serial = mk(1);
+        let serial_res: Vec<RequestResult> =
+            reqs.iter().map(|r| serve_one(&serial, r)).collect();
+        serial.shutdown();
+        let serial_exec = serial_res[0].metrics.decode.exec_calls_per_token();
+        assert!(serial_exec > 0.0, "dispatch counter not metered");
+        for r in &serial_res {
+            assert!(
+                (r.metrics.decode.mean_batch_occupancy() - 1.0).abs() < 1e-9,
+                "serial decode must report occupancy 1, got {}",
+                r.metrics.decode.mean_batch_occupancy()
+            );
+        }
+
+        for concurrency in [2usize, 4] {
+            let cluster = mk(concurrency);
+            let handles: Vec<_> =
+                reqs.iter().map(|r| cluster.submit(r.clone()).unwrap()).collect();
+            let results: Vec<RequestResult> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            cluster.shutdown();
+
+            for (r, w) in results.iter().zip(&serial_res) {
+                assert_eq!(
+                    r.generated, w.generated,
+                    "batched tokens diverge from serial \
+                     ({topology:?}, concurrency {concurrency}, req {})",
+                    r.id
+                );
+            }
+            // At c4 everything is admitted at once, so every request
+            // decodes mostly at full occupancy; at c2 the LAST request
+            // ends up decoding its tail alone (its pair finished
+            // first), pulling its mean toward ~1.5.
+            let min_occ = if concurrency >= 4 { 1.5 } else { 1.2 };
+            for r in &results {
+                let d = &r.metrics.decode;
+                assert!(
+                    d.mean_batch_occupancy() > min_occ,
+                    "no sharing observed ({topology:?}, c{concurrency}, req {}): \
+                     occupancy {}",
+                    r.id,
+                    d.mean_batch_occupancy()
+                );
+                // Shared dispatches divide across rows; the tail tokens
+                // decoded at lower occupancy dilute the win, so the
+                // bound scales with the concurrency.
+                let ratio = if concurrency >= 4 { 0.7 } else { 0.9 };
+                let max_exec = ratio * serial_exec;
+                assert!(
+                    d.exec_calls_per_token() < max_exec,
+                    "dispatches not amortized ({topology:?}, c{concurrency}, req {}): \
+                     {} vs serial {}",
+                    r.id,
+                    d.exec_calls_per_token(),
+                    serial_exec
+                );
+            }
+            // The steady stretch runs at full occupancy: every request
+            // saw at least one forward shared by `concurrency` rows.
+            for r in &results {
+                assert!(
+                    r.metrics.decode.occupancy.max() >= concurrency as f64,
+                    "bucket never filled ({topology:?}, c{concurrency}, req {}): max {}",
+                    r.id,
+                    r.metrics.decode.occupancy.max()
+                );
+            }
+        }
+    }
+}
+
+/// Bucket downshift: with mixed generation budgets at concurrency 4,
+/// the batch shrinks as requests complete — the longest request's
+/// occupancy spans the full range (4 early, 1 once it decodes alone)
+/// while the shortest lives its whole decode at full occupancy. Tokens
+/// stay identical to serial throughout the shifts.
+#[test]
+fn bucket_downshift_as_requests_complete() {
+    let Some(dir) = artifacts_dir() else { return };
+    if !batched_artifacts(&dir, 4) {
+        return;
+    }
+    let reqs = [
+        Request::new(80, vec![3, 141], 4),
+        Request::new(81, vec![10, 20], 6),
+        Request::new(82, vec![100, 200], 8),
+        Request::new(83, vec![7, 77], 16),
+    ];
+    let want: Vec<Vec<u32>> = reqs.iter().map(|r| dense_tokens(&dir, r)).collect();
+
+    let mut cfg = LiveConfig::new(dir, 2);
+    cfg.max_active = 4;
+    let cluster = LiveCluster::start(cfg).unwrap();
+    let handles: Vec<_> = reqs.iter().map(|r| cluster.submit(r.clone()).unwrap()).collect();
+    let results: Vec<RequestResult> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    cluster.shutdown();
+
+    for (r, w) in results.iter().zip(&want) {
+        assert_eq!(r.generated, w, "tokens diverge across bucket shifts (req {})", r.id);
+    }
+    let short = &results[0].metrics.decode;
+    let long = &results[3].metrics.decode;
+    assert!(
+        (short.mean_batch_occupancy() - 4.0).abs() < 1e-9,
+        "shortest request should decode entirely at occupancy 4, got {}",
+        short.mean_batch_occupancy()
+    );
+    assert!(
+        long.occupancy.max() >= 4.0 && long.occupancy.min() <= 1.0,
+        "longest request should span occupancy 4 → 1, got {} → {}",
+        long.occupancy.max(),
+        long.occupancy.min()
+    );
+    assert!(
+        long.mean_batch_occupancy() < short.mean_batch_occupancy(),
+        "downshift not reflected in mean occupancy"
+    );
+}
+
+/// Mid-batch cancellation frees the slot while the batch keeps
+/// decoding, and a subsequently submitted request reuses the freed
+/// capacity (batching with the survivor) — all token-identical to the
+/// uncancelled references.
+#[test]
+fn mid_batch_cancel_frees_slot_for_reuse() {
+    let Some(dir) = artifacts_dir() else { return };
+    if !batched_artifacts(&dir, 2) {
+        return;
+    }
+    let long = Request::new(70, vec![3, 141, 59, 26], 64);
+    let mid = Request::new(71, vec![10, 20, 30], 24);
+    let after = Request::new(72, vec![9, 9, 9], 8);
+    let long_want = dense_tokens(&dir, &long);
+    let mid_want = dense_tokens(&dir, &mid);
+    let after_want = dense_tokens(&dir, &after);
+
+    let mut cfg = LiveConfig::new(dir, 2);
+    cfg.max_active = 2;
+    let cluster = LiveCluster::start(cfg).unwrap();
+    let h_long = cluster.submit(long).unwrap();
+    let h_mid = cluster.submit(mid).unwrap();
+
+    // Wait until the long request is demonstrably mid-batch (both
+    // requests decoding in shared forwards), then cancel it.
+    let mut seen = 0;
+    while seen < 2 {
+        match h_long.next_event().expect("stream died") {
+            TokenEvent::Token { .. } => seen += 1,
+            TokenEvent::Done { .. } | TokenEvent::Failed { .. } => {
+                panic!("long request finished before cancel")
+            }
+            _ => {}
+        }
+    }
+    h_long.cancel();
+    let cancelled = h_long.join().unwrap();
+    assert_eq!(cancelled.finish, FinishReason::Cancelled);
+    assert!(
+        cancelled.generated.len() >= 2 && cancelled.generated.len() < 64,
+        "expected a partial stream, got {} tokens",
+        cancelled.generated.len()
+    );
+    assert_eq!(
+        cancelled.generated[..],
+        long_want[..cancelled.generated.len()],
+        "cancelled prefix diverged"
+    );
+
+    // The freed slot is reused: the third request joins the surviving
+    // one and they batch together (occupancy above 1 for both).
+    let h_after = cluster.submit(after.clone()).unwrap();
+    let mid_res = h_mid.join().unwrap();
+    let after_res = h_after.join().unwrap();
+    cluster.shutdown();
+    assert_eq!(mid_res.generated, mid_want, "survivor diverged after cancel");
+    assert_eq!(after_res.generated, after_want, "slot reuse diverged");
+    assert!(
+        after_res.metrics.decode.mean_batch_occupancy() > 1.0,
+        "reused slot never batched with the survivor: occupancy {}",
+        after_res.metrics.decode.mean_batch_occupancy()
+    );
+}
+
 /// Cancellation: cancelling one of two in-flight requests mid-decode
 /// frees its slot while the other request (and a subsequently submitted
 /// one) complete with unchanged tokens.
