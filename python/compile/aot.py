@@ -24,6 +24,11 @@ fresh):
                         `lower_batched_artifacts`): B concurrent
                         requests share one forward pass per scheduler
                         iteration (continuous batching)
+  dev[_b{B}]_sample_*.hlo.txt
+                        on-device sampler roles (greedy / seeded top-k /
+                        stop mask) chained off the lm_head buffer so a
+                        decode iteration downloads [B, 2] + [B] instead
+                        of [B, V] logits (see `lower_sampler_artifacts`)
   weights.npz           all model weights (float32, flat names)
   manifest.txt          dims + artifact inventory for the rust side
 """
@@ -287,11 +292,51 @@ def lower_batched_artifacts(cfg=CFG):
                         f32(bsz, d), i32(bsz, ns), f32(bsz, ns),
                     )
                 )
+        # Dedup variant: when the bucket's rows route to <= ns DISTINCT
+        # experts on this node, each distinct expert runs once over the
+        # whole batch instead of once per (row, slot) weight gather.
+        for el in (8, 16):
+            for ns in (k, NUM_SLOTS):
+                arts[p + f"experts_dedup_el{el}_ns{ns}"] = to_hlo_text_untupled(
+                    jax.jit(M.batched_experts_dedup).lower(
+                        f32(el, d, cfg.d_ffn), f32(el, d, cfg.d_ffn),
+                        f32(el, cfg.d_ffn, d),
+                        f32(bsz, d), i32(ns), i32(bsz, ns), f32(bsz, ns),
+                    )
+                )
         arts[p + "residual"] = to_hlo_text_untupled(
             jax.jit(M.residual_add_step).lower(f32(bsz, d), f32(bsz, d))
         )
         arts[p + "lm_head"] = to_hlo_text_untupled(
             jax.jit(M.lm_head_step).lower(f32(d), f32(d, v), f32(bsz, d))
+        )
+    return arts
+
+
+def lower_sampler_artifacts(cfg=CFG):
+    """Return {name: hlo_text} for the on-device sampler roles.
+
+    Three untupled roles per batch width — greedy argmax, seeded top-k
+    softmax sampling, stop membership — at B = 1 (`dev_sample_*`,
+    chained off `dev_lm_head`) and every bucket in `BATCH_BUCKETS`
+    (`dev_b{B}_sample_*`, chained off `dev_b{B}_lm_head`). With these,
+    a decode iteration downloads the [B, 2] packed (token, logprob) and
+    the [B] stop mask instead of the [B, V] logits.
+    """
+    v = cfg.vocab
+    arts = {}
+    for bsz in (1,) + BATCH_BUCKETS:
+        p = "dev_sample_" if bsz == 1 else f"dev_b{bsz}_sample_"
+        arts[p + "greedy"] = to_hlo_text_untupled(
+            jax.jit(M.sample_greedy_step).lower(f32(bsz, v))
+        )
+        arts[p + "topk"] = to_hlo_text_untupled(
+            jax.jit(M.sample_topk_step).lower(
+                f32(bsz, v), i32(bsz), f32(bsz), i32(bsz), i32(bsz), i32(bsz)
+            )
+        )
+        arts[p + "stop"] = to_hlo_text_untupled(
+            jax.jit(M.sample_stop_step).lower(f32(bsz, 2), f32(bsz, M.SAMPLER_MAX_STOP))
         )
     return arts
 
@@ -319,6 +364,15 @@ def write_manifest(path, cfg=CFG):
             # (buckets are the powers of two from 2 up to this value;
             # 0/absent = no batched artifacts, serial decode only).
             ("max_batch", max(BATCH_BUCKETS)),
+            # On-device sampler roles (`dev_sample_*` / `dev_b{B}_sample_*`)
+            # are present; 0/absent = host sampling only. The max_top_k /
+            # max_stop values are the artifacts' static operand widths.
+            ("sampler_artifacts", 1),
+            ("sampler_max_top_k", M.SAMPLER_MAX_TOP_K),
+            ("sampler_max_stop", M.SAMPLER_MAX_STOP),
+            # Dedup expert roles (`dev_b{B}_experts_dedup_el{el}_ns{ns}`)
+            # are present; 0/absent = gathered batched experts only.
+            ("dedup_artifacts", 1),
         ]:
             fh.write(f"{kk} = {vv}\n")
 
@@ -339,6 +393,7 @@ def main():
     arts = lower_artifacts()
     arts.update(lower_device_artifacts(donate_caches=args.donate_caches))
     arts.update(lower_batched_artifacts())
+    arts.update(lower_sampler_artifacts())
     for name, text in arts.items():
         path = os.path.join(args.out_dir, f"{name}.hlo.txt")
         with open(path, "w") as fh:

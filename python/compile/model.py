@@ -431,6 +431,211 @@ def batched_experts_forward(w1s, v1s, w2s, moe_in, slot_idx, slot_w):
     return out
 
 
+def batched_experts_dedup(w1s, v1s, w2s, moe_in, expert_ids, sel, slot_w):
+    """Dedup formulation of `batched_experts_forward`: each *distinct*
+    expert runs ONCE over the whole `[B, D]` batch.
+
+    The gathered formulation materializes one `[B, D, F]` weight copy
+    per slot, so rows routing to the same expert duplicate that expert's
+    weights (and its matmuls) B times per iteration. Here the host
+    passes the distinct local expert ids once (`expert_ids`, padding
+    repeats id 0) and a per-row selection map into them; weights are
+    dynamic-sliced once per distinct expert — never per row — and each
+    row recombines its slots in the ORIGINAL slot order (exact one-hot
+    selects, same accumulation order as the gathered path). Row values
+    can differ from the gathered path only by matmul reassociation
+    (`[B, D] @ [D, F]` vs the per-row gathered einsum), ~1 ulp;
+    determinism across nodes is unaffected because every node picks the
+    dedup-vs-gathered path from the same replicated routing decision.
+
+    Args:
+      w1s/v1s/w2s: [E_local, ...] prestacked resident experts.
+      moe_in: [B, D]; expert_ids: i32[NS] distinct local stack ids
+        (padding repeats id 0); sel: i32[B, NS] per-(row, slot) index
+        into `expert_ids`; slot_w: [B, NS] combine weights (0 padding).
+    Returns:
+      [B, D] partial sums, numerically equivalent to
+      `batched_experts_forward` with the per-row `slot_idx`.
+    """
+    bsz, d = moe_in.shape
+    ns = expert_ids.shape[0]
+    ys = []
+    for j in range(ns):  # unrolled: one FFN per DISTINCT expert
+        g1 = jax.lax.dynamic_slice_in_dim(w1s, expert_ids[j], 1, 0)[0]
+        gv = jax.lax.dynamic_slice_in_dim(v1s, expert_ids[j], 1, 0)[0]
+        g2 = jax.lax.dynamic_slice_in_dim(w2s, expert_ids[j], 1, 0)[0]
+        h = jax.nn.silu(moe_in @ g1) * (moe_in @ gv)
+        ys.append(h @ g2)  # [B, D]
+    ys = jnp.stack(ys)  # [NS, B, D]
+    out = jnp.zeros((bsz, d), moe_in.dtype)
+    cols = jnp.arange(ns, dtype=jnp.int32)[None, :]
+    for s in range(ns):  # unrolled — same slot order as the gathered path
+        onehot = (sel[:, s][:, None] == cols).astype(moe_in.dtype)  # [B, NS]
+        y = jnp.einsum("bn,nbd->bd", onehot, ys)  # exact select (adds 0s)
+        out = out + slot_w[:, s][:, None] * y
+    return out
+
+
+# --------------------------------------------------------------------------
+# Device-side sampling (§Perf: the last [B, V] download on the token loop).
+#
+# Until these roles, every decode iteration downloaded the full [B, V]
+# f32 logits solely because argmax/top-k ran on the host. The sampler
+# roles chain off the lm_head buffer ON DEVICE and return [B, 2] packed
+# (token id as exact small-integer f32, full-softmax logprob) — the
+# router_step packing idiom — plus an optional [B] stop done-mask, so
+# the per-iteration download collapses from B*V floats to 2B (+B).
+#
+# Determinism contract: every decentralized node derives bit-identical
+# tokens because (a) the RNG is the stateless counter-based Threefry2x32
+# keyed on (request seed, sequence position) — implemented here in
+# uint32 jnp ops and mirrored word-for-word in rust
+# (util/threefry.rs); (b) top-k selection is the iterative first-max
+# argmax (ties break to the lowest index, matching the host's scan);
+# (c) the softmax-CDF walk runs in f32 with a sequentially unrolled
+# cumulative sum, mirrored op-for-op by the host reference sampler
+# (engine/sampling.rs). The only op that may diverge is exp's final ulp
+# (XLA vs libm) — deterministic per platform and asserted equivalent
+# end-to-end by the integration tests.
+# --------------------------------------------------------------------------
+
+# Static unroll bound of the on-device top-k (requests with larger k fall
+# back to host sampling for the whole batch that iteration).
+SAMPLER_MAX_TOP_K = 64
+# Stop-token operand width of `sample_stop_step` (pad with -1.0).
+SAMPLER_MAX_STOP = 8
+# Counter word 1 of the sampler's Threefry stream (ASCII "SAMP");
+# counter word 0 is the sequence position the sampled token occupies.
+SAMPLE_STREAM_TAG = 0x53414D50
+
+
+def _threefry2x32(key0, key1, ctr0, ctr1):
+    """Threefry2x32-20 on uint32 arrays — mirrors rust util/threefry.rs."""
+    ks0, ks1 = key0, key1
+    ks2 = jnp.uint32(0x1BD11BDA) ^ key0 ^ key1
+    ks = (ks0, ks1, ks2)
+    x0 = ctr0 + ks0
+    x1 = ctr1 + ks1
+    rotations = ((13, 15, 26, 6), (17, 29, 16, 24))
+    for g in range(5):
+        for r in rotations[g % 2]:
+            x0 = x0 + x1
+            x1 = (x1 << jnp.uint32(r)) | (x1 >> jnp.uint32(32 - r))
+            x1 = x0 ^ x1
+        x0 = x0 + ks[(g + 1) % 3]
+        x1 = x1 + ks[(g + 2) % 3] + jnp.uint32(g + 1)
+    return x0, x1
+
+
+def _sample_uniform(key0, key1, positions):
+    """Per-row uniform in [0, 1) for the position AFTER each row's
+    current one (the sampled token's own sequence position).
+
+    Args: i32[B] key halves (u32 bit patterns) and i32[B] forward-input
+    positions. Both conversion steps are exact in f32 (24 mantissa bits,
+    power-of-two scale), so the value is bit-identical to the rust
+    `sample_uniform`.
+    """
+    k0 = jax.lax.bitcast_convert_type(key0, jnp.uint32)
+    k1 = jax.lax.bitcast_convert_type(key1, jnp.uint32)
+    c0 = jax.lax.bitcast_convert_type(positions + jnp.int32(1), jnp.uint32)
+    c1 = jnp.full(positions.shape, SAMPLE_STREAM_TAG, dtype=jnp.uint32)
+    x0, _ = _threefry2x32(k0, k1, c0, c1)
+    return (x0 >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def _topk_rows(logits, k):
+    """Vectorized iterative argmax top-k over rows: [B, V] -> ([B, k]
+    values desc, [B, k] i32 indices). First-max tie-break per round
+    (lowest index wins), matching the host's strictly-greater scan."""
+    x = logits
+    cols = jnp.arange(logits.shape[1], dtype=jnp.int32)[None, :]
+    vals, idxs = [], []
+    for _ in range(k):  # unrolled at trace time
+        i = jnp.argmax(x, axis=-1).astype(jnp.int32)  # [B]
+        vals.append(jnp.max(x, axis=-1))
+        idxs.append(i)
+        x = jnp.where(cols == i[:, None], -jnp.inf, x)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def _full_softmax_logprob(logits, v_tok, m):
+    """log softmax(logits)[tok] given the chosen value and the row max."""
+    z = jnp.sum(jnp.exp(logits - m[:, None]), axis=-1)
+    return (v_tok - m) - jnp.log(z)
+
+
+def sample_greedy_step(logits):
+    """Per-row greedy argmax: [B, V] -> [B, 2] packed (token, logprob).
+
+    Tie-break is jnp.argmax's first maximum — identical to the host
+    sampler's strictly-greater scan. The token id rides as an exact
+    small-integer f32 (V << 2^24), the logprob is the full-softmax
+    logprob of the chosen token.
+    """
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B]
+    m = jnp.max(logits, axis=-1)  # == chosen value for greedy
+    lp = _full_softmax_logprob(logits, m, m)
+    return jnp.stack([tok.astype(jnp.float32), lp], axis=-1)
+
+
+def sample_topk_step(logits, ks, temps, key0, key1, positions):
+    """Per-row seeded top-k softmax sampling at temperature.
+
+    Args:
+      logits: [B, V]; ks: i32[B] per-row k (clipped to
+        [1, SAMPLER_MAX_TOP_K]); temps: f32[B]; key0/key1: i32[B] u32
+        bit patterns of each row's request seed (hi, lo); positions:
+        i32[B] forward-input positions (the draw counter is pos + 1, the
+        sampled token's own sequence position).
+    Returns:
+      [B, 2] packed (token id as exact f32, full-softmax logprob).
+
+    Op-for-op mirror of the host reference (engine/sampling.rs): top-k
+    by iterative first-max argmax, e_i = exp((v_i - v_0) / max(t, 1e-6))
+    masked beyond k, sequential cumulative sum, threshold u * Z, chosen
+    index = #(c_i < thr) clamped to k - 1.
+    """
+    kmax = min(SAMPLER_MAX_TOP_K, logits.shape[1])
+    vals, idxs = _topk_rows(logits, kmax)  # [B, K] / [B, K]
+    m = vals[:, 0]  # row max (first selected)
+    kc = jnp.clip(ks, 1, kmax)
+    t = jnp.maximum(temps, jnp.float32(1e-6))
+    lanes = jnp.arange(kmax, dtype=jnp.int32)[None, :]
+    live = lanes < kc[:, None]
+    e = jnp.where(live, jnp.exp((vals - m[:, None]) / t[:, None]), jnp.float32(0.0))
+    # Sequential (unrolled) cumulative sum — the summation ORDER is part
+    # of the cross-host determinism contract, so no tree-shaped cumsum.
+    acc = e[:, 0]
+    cums = [acc]
+    for i in range(1, kmax):
+        acc = acc + e[:, i]
+        cums.append(acc)
+    c = jnp.stack(cums, axis=-1)  # [B, K]
+    z = c[:, -1]
+    u = _sample_uniform(key0, key1, positions)
+    thr = u * z
+    j = jnp.sum((c < thr[:, None]).astype(jnp.int32), axis=-1)
+    j = jnp.minimum(j, kc - 1)
+    onehot = (lanes == j[:, None]).astype(logits.dtype)  # [B, K]
+    tok_f = jnp.sum(onehot * idxs.astype(jnp.float32), axis=-1)
+    v_tok = jnp.sum(onehot * vals, axis=-1)
+    lp = _full_softmax_logprob(logits, v_tok, m)
+    return jnp.stack([tok_f, lp], axis=-1)
+
+
+def sample_stop_step(sampled, stops):
+    """Per-row stop-token membership: ([B, 2] packed sample, [B, MAX_STOP]
+    stop ids as exact f32s padded with -1.0) -> [B] done mask (1.0/0.0).
+
+    Token ids are exact small-integer f32s on both sides, so equality
+    compare is exact; the -1.0 padding can never match a token id.
+    """
+    tok = sampled[:, 0]
+    hit = jnp.any(stops == tok[:, None], axis=-1)
+    return hit.astype(jnp.float32)
+
+
 def moe_layer_ref(p, l, moe_in, cfg: NanoConfig = CFG):
     """Reference full-MoE block for one layer (selected experts only)."""
     logits = (moe_in @ p[f"layer{l}.wr"])[0]

@@ -318,6 +318,47 @@ class TestBatchedDecomposition:
             )
             np.testing.assert_allclose(out[b : b + 1], want, rtol=1e-5, atol=1e-6)
 
+    @pytest.mark.parametrize("bsz", [2, 4])
+    def test_dedup_experts_equal_gathered(self, params, bsz):
+        """The dedup formulation (each DISTINCT expert runs once over the
+        whole batch) must be numerically equivalent to the gathered
+        per-row formulation — same selections, same combine weights, up
+        to matmul reassociation (~1 ulp per element)."""
+        rs = np.random.RandomState(24)
+        l = 2
+        w1s = params[f"layer{l}.w1"][:8]
+        v1s = params[f"layer{l}.v1"][:8]
+        w2s = params[f"layer{l}.w2"][:8]
+        moe_in = jnp.asarray(rs.randn(bsz, CFG.d_embed).astype(np.float32))
+        ns = CFG.top_k
+        # Rows deliberately SHARE experts (the dedup win case) — draw
+        # per-row slots from a small distinct pool.
+        pool = [1, 4, 6]
+        slot_idx = np.asarray(
+            [[pool[rs.randint(len(pool))] for _ in range(ns)] for _ in range(bsz)],
+            dtype=np.int32,
+        )
+        slot_w = rs.rand(bsz, ns).astype(np.float32)
+        # Host-side dedup planning: distinct ids (padding repeats id 0)
+        # plus the per-(row, slot) map into them — what runtime/batch.rs
+        # computes per layer.
+        distinct = sorted(set(slot_idx.flatten().tolist()))
+        expert_ids = np.asarray(
+            distinct + [0] * (ns - len(distinct)), dtype=np.int32
+        )
+        sel = np.asarray(
+            [[distinct.index(int(e)) for e in row] for row in slot_idx],
+            dtype=np.int32,
+        )
+        got = M.batched_experts_dedup(
+            w1s, v1s, w2s, moe_in, jnp.asarray(expert_ids),
+            jnp.asarray(sel), jnp.asarray(slot_w),
+        )
+        want = M.batched_experts_forward(
+            w1s, v1s, w2s, moe_in, jnp.asarray(slot_idx), jnp.asarray(slot_w)
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
     def test_padding_rows_do_not_change_live_rows(self, params):
         """A bucket larger than the active-request count carries padding
         rows (dummy token, weight-0 slots, a borrowed cache). Rows are
@@ -401,6 +442,25 @@ class TestAotPipeline:
             root = [ln for ln in text.splitlines() if "ROOT" in ln]
             assert root and "tuple(" not in root[-1], f"{name} root is a tuple"
 
+    def test_sampler_artifacts_lower_untupled(self):
+        """The sampler roles (`dev_sample_*` / `dev_b{B}_sample_*`):
+        greedy/topk/stop per batch width, ARRAY roots so they chain off
+        the lm_head buffer like every other device role."""
+        from jax._src.lib import xla_client as xc
+
+        arts = aot.lower_sampler_artifacts()
+        expect = set()
+        for b in (1,) + aot.BATCH_BUCKETS:
+            p = "dev_sample_" if b == 1 else f"dev_b{b}_sample_"
+            expect |= {p + r for r in ("greedy", "topk", "stop")}
+        assert set(arts) == expect
+        for name, text in arts.items():
+            assert text.startswith("HloModule"), f"{name} not HLO text"
+            mod = xc._xla.hlo_module_from_text(text)
+            assert mod is not None, name
+            root = [ln for ln in text.splitlines() if "ROOT" in ln]
+            assert root and "tuple(" not in root[-1], f"{name} root is a tuple"
+
     def test_batched_artifacts_lower_untupled(self):
         """The dev_b{B}_* batched family: complete per bucket, ARRAY
         roots throughout (buffers must chain on device exactly like the
@@ -416,7 +476,8 @@ class TestAotPipeline:
         for b in aot.BATCH_BUCKETS:
             expect |= {f"dev_b{b}_{r}" for r in roles}
             expect |= {
-                f"dev_b{b}_experts_el{el}_ns{ns}"
+                f"dev_b{b}_experts_{var}el{el}_ns{ns}"
+                for var in ("", "dedup_")
                 for el in (8, 16)
                 for ns in (CFG.top_k, NUM_SLOTS)
             }
@@ -427,3 +488,164 @@ class TestAotPipeline:
             assert mod is not None, name
             root = [ln for ln in text.splitlines() if "ROOT" in ln]
             assert root and "tuple(" not in root[-1], f"{name} root is a tuple"
+
+
+# Pure-Python (arbitrary-precision int) Threefry2x32-20 — the reference
+# both the rust and jnp implementations must match bit-for-bit.
+def _py_threefry2x32(k0, k1, c0, c1):
+    m = 0xFFFFFFFF
+    ks = [k0, k1, 0x1BD11BDA ^ k0 ^ k1]
+    x0, x1 = (c0 + ks[0]) & m, (c1 + ks[1]) & m
+    rotations = ((13, 15, 26, 6), (17, 29, 16, 24))
+    for g in range(5):
+        for r in rotations[g % 2]:
+            x0 = (x0 + x1) & m
+            x1 = ((x1 << r) | (x1 >> (32 - r))) & m
+            x1 ^= x0
+        x0 = (x0 + ks[(g + 1) % 3]) & m
+        x1 = (x1 + ks[(g + 2) % 3] + g + 1) & m
+    return x0, x1
+
+
+def _py_uniform(seed, pos):
+    """Mirror of rust `threefry::sample_uniform(seed, pos)`."""
+    x0, _ = _py_threefry2x32(
+        (seed >> 32) & 0xFFFFFFFF, seed & 0xFFFFFFFF, pos, M.SAMPLE_STREAM_TAG
+    )
+    return np.float32(x0 >> 8) * np.float32(1.0 / (1 << 24))
+
+
+def _host_topk_token(row, k, temp, seed, pos):
+    """The rust host reference sampler (engine/sampling.rs), mirrored in
+    f32 numpy: first-max lane order, masked exp, sequential cumsum,
+    threshold count. `pos` is the sampled token's own sequence position
+    (the Threefry draw counter)."""
+    v = np.asarray(row, dtype=np.float32)
+    k = max(1, min(k, len(v)))
+    lanes = sorted(range(len(v)), key=lambda i: (-v[i], i))[:k]
+    m = v[lanes[0]]
+    t = np.float32(max(temp, 1e-6))
+    acc = np.float32(0.0)
+    cum = []
+    for lane in lanes:
+        acc = np.float32(acc + np.float32(np.exp(np.float32((v[lane] - m) / t))))
+        cum.append(acc)
+    thr = np.float32(_py_uniform(seed, pos) * acc)
+    j = min(sum(1 for c in cum if c < thr), k - 1)
+    return lanes[j]
+
+
+def _as_i32_bits(u32s):
+    """u32 values -> the i32 bit patterns the sampler operands ride."""
+    return jnp.asarray(np.asarray(u32s, dtype=np.uint32).view(np.int32))
+
+
+class TestSamplerDecomposition:
+    """The on-device sampler roles must reproduce the host reference
+    sampler token-for-token — the determinism contract behind the [B]
+    download (every decentralized node AND the device derive the same
+    token from (request seed, position))."""
+
+    def test_threefry_known_answers(self):
+        # Random123 kat_vectors for Threefry2x32-20 — the same vectors
+        # pinned in rust util/threefry.rs.
+        kats = [
+            ((0, 0), (0, 0), (0x6B200159, 0x99BA4EFE)),
+            (
+                (0xFFFFFFFF, 0xFFFFFFFF),
+                (0xFFFFFFFF, 0xFFFFFFFF),
+                (0x1CB996FC, 0xBB002BE7),
+            ),
+            (
+                (0x13198A2E, 0x03707344),
+                (0x243F6A88, 0x85A308D3),
+                (0xC4923A9C, 0x483DF7A0),
+            ),
+        ]
+        for (k0, k1), (c0, c1), want in kats:
+            assert _py_threefry2x32(k0, k1, c0, c1) == want
+            x0, x1 = M._threefry2x32(
+                jnp.uint32(k0), jnp.uint32(k1), jnp.uint32(c0), jnp.uint32(c1)
+            )
+            assert (int(x0), int(x1)) == want
+
+    def test_uniform_matches_host_formula(self):
+        # The jnp uniform (ctr0 = forward position + 1) must equal the
+        # host's sample_uniform(seed, pos + 1) bit for bit.
+        seeds = [0xD8B2, 0xDEADBEEF0BADF00D, 1]
+        positions = np.asarray([0, 3, 17, 200], dtype=np.int32)
+        for seed in seeds:
+            k0 = _as_i32_bits([(seed >> 32) & 0xFFFFFFFF] * len(positions))
+            k1 = _as_i32_bits([seed & 0xFFFFFFFF] * len(positions))
+            got = M._sample_uniform(k0, k1, jnp.asarray(positions))
+            want = [_py_uniform(seed, int(p) + 1) for p in positions]
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+            assert all(0.0 <= float(u) < 1.0 for u in np.asarray(got))
+
+    def test_greedy_role_argmax_and_tiebreak(self):
+        # Duplicate maxima: first max (lowest index) wins, matching the
+        # host's strictly-greater scan; token rides as exact f32.
+        logits = np.full((2, 16), -1.0, dtype=np.float32)
+        logits[0, 5] = logits[0, 9] = 7.25
+        logits[1, 11] = 3.0
+        packed = np.asarray(M.sample_greedy_step(jnp.asarray(logits)))
+        assert packed.shape == (2, 2)
+        assert packed[0, 0] == 5.0 and packed[1, 0] == 11.0
+        # Logprob is the FULL-softmax logprob of the chosen token.
+        for b in range(2):
+            row = logits[b].astype(np.float64)
+            want = row[int(packed[b, 0])] - np.log(np.exp(row - row.max()).sum()) - row.max()
+            np.testing.assert_allclose(packed[b, 1], want, rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("k,temp", [(1, 1.0), (4, 0.7), (16, 1.3), (64, 2.0)])
+    def test_topk_role_matches_host_reference(self, k, temp):
+        rs = np.random.RandomState(31)
+        bsz, v = 4, 512
+        logits = rs.randn(bsz, v).astype(np.float32) * 2.0
+        logits[3] = logits[0]  # identical row + draw below -> same token
+        seeds = [0xD8B2, 0xDEADBEEF0BADF00D, 7, 0xD8B2]
+        positions = np.asarray([2, 9, 40, 2], dtype=np.int32)
+        packed = np.asarray(
+            M.sample_topk_step(
+                jnp.asarray(logits),
+                jnp.asarray([k] * bsz, dtype=np.int32),
+                jnp.asarray([temp] * bsz, dtype=np.float32),
+                _as_i32_bits([(s >> 32) & 0xFFFFFFFF for s in seeds]),
+                _as_i32_bits([s & 0xFFFFFFFF for s in seeds]),
+                jnp.asarray(positions),
+            )
+        )
+        for b in range(bsz):
+            want = _host_topk_token(logits[b], k, temp, seeds[b], int(positions[b]) + 1)
+            assert int(packed[b, 0]) == want, f"row {b}"
+            # Rows 0 and 3 share (seed, position): identical draws.
+        assert packed[0, 0] == packed[3, 0]
+
+    def test_topk_k1_equals_greedy_whatever_the_draw(self):
+        # A greedy row riding a top-k batch sets k = 1: the CDF walk
+        # always lands on lane 0 = first-max argmax.
+        rs = np.random.RandomState(32)
+        logits = rs.randn(3, 64).astype(np.float32)
+        greedy = np.asarray(M.sample_greedy_step(jnp.asarray(logits)))
+        for seed in (1, 99, 0xFFFFFFFFFFFFFFFF):
+            topk = np.asarray(
+                M.sample_topk_step(
+                    jnp.asarray(logits),
+                    jnp.asarray([1, 1, 1], dtype=np.int32),
+                    jnp.asarray([1.7, 0.2, 1.0], dtype=np.float32),
+                    _as_i32_bits([(seed >> 32) & 0xFFFFFFFF] * 3),
+                    _as_i32_bits([seed & 0xFFFFFFFF] * 3),
+                    jnp.asarray([0, 5, 11], dtype=np.int32),
+                )
+            )
+            np.testing.assert_array_equal(topk[:, 0], greedy[:, 0])
+            np.testing.assert_allclose(topk[:, 1], greedy[:, 1], rtol=1e-6)
+
+    def test_stop_role_membership_and_padding(self):
+        sampled = jnp.asarray([[7.0, -0.5], [509.0, -1.2], [0.0, -2.0]])
+        stops = np.full((3, M.SAMPLER_MAX_STOP), -1.0, dtype=np.float32)
+        stops[0, 0] = 7.0     # hit
+        stops[1, 0] = 7.0     # miss (row samples 509)
+        stops[2, 1] = 0.0     # hit in a later slot
+        mask = np.asarray(M.sample_stop_step(sampled, jnp.asarray(stops)))
+        np.testing.assert_array_equal(mask, [1.0, 0.0, 1.0])

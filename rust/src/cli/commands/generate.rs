@@ -33,6 +33,9 @@ pub fn run(args: &mut Args) -> Result<()> {
     // Force the host-tensor reference path (per-layer cache round trips;
     // the default device-resident path is the §Perf-optimized regime).
     let host_path = args.flag("host-path");
+    // Force the host-side reference sampler (downloads the full [1, V]
+    // logits per token; the default samples on device).
+    let host_sampler = args.flag("host-sampler");
     let dir = artifacts_dir(args);
     args.finish()?;
 
@@ -41,6 +44,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     cfg.balancing = balancing;
     cfg.network = network;
     cfg.device_resident = !host_path;
+    cfg.host_sampler = host_sampler;
     cfg.recv_timeout = Duration::from_secs(recv_timeout.max(1));
 
     eprintln!("starting {nodes}-node live cluster (compiling artifacts on every node)...");
@@ -97,6 +101,11 @@ pub fn run(args: &mut Args) -> Result<()> {
         "host<->device: {:.1} KiB/token ({:.4} s/token in transfers)",
         d.transfer_bytes_per_token() / 1024.0,
         d.transfer_secs_per_token(),
+    );
+    println!(
+        "  of which device->host: {:.1} B/token (on-device sampling downloads \
+         sampled ids, not logits)",
+        d.d2h_bytes_per_token(),
     );
     println!(
         "wire traffic: {:.1} KiB/token across {} messages",

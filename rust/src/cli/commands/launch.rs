@@ -30,6 +30,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     let seed = args.u64_or("seed", 0xD8B2)?;
     let recv_timeout_flag = args.get("recv-timeout-secs");
     let host_path = args.flag("host-path");
+    let host_sampler = args.flag("host-sampler");
     let out = args.get("out");
     let artifacts = args.str_or("artifacts", "artifacts");
     args.finish()?;
@@ -97,6 +98,9 @@ pub fn run(args: &mut Args) -> Result<()> {
             .arg(&artifacts);
         if host_path {
             cmd.arg("--host-path");
+        }
+        if host_sampler {
+            cmd.arg("--host-sampler");
         }
         if id == 0 {
             if let Some(out) = &out {

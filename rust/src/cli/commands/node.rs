@@ -60,6 +60,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     let policy = parse_policy(args)?;
     let sampling = parse_sampling(args, gen_tokens)?;
     let host_path = args.flag("host-path");
+    let host_sampler = args.flag("host-sampler");
     let out = args.get("out");
     let dir = artifacts_dir(args);
     args.finish()?;
@@ -81,6 +82,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     cfg.topology = topology;
     cfg.balancing = balancing;
     cfg.device_resident = !host_path;
+    cfg.host_sampler = host_sampler;
     cfg.recv_timeout = hosts.recv_timeout;
     cfg.max_active = concurrency;
     cfg.policy = policy;

@@ -4,7 +4,10 @@
 //! decode, and report per-request TTFT / queueing / latency plus the
 //! aggregate. `--json` emits the machine-readable per-request report CI
 //! tracks (the BENCH_serve.json perf trajectory); `--transport tcp`
-//! runs the node mesh over real loopback sockets.
+//! runs the node mesh over real loopback sockets; `--host-sampler`
+//! forces the `[B, V]` logits download + host reference sampler (the
+//! default samples on device — `d2h_bytes_per_token` in the JSON
+//! report meters the collapse).
 
 use anyhow::Result;
 use std::time::{Duration, Instant};
@@ -35,6 +38,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     let balancing = parse_balancing(args)?;
     let recv_timeout = args.u64_or("recv-timeout-secs", 120)?;
     let host_path = args.flag("host-path");
+    let host_sampler = args.flag("host-sampler");
     let stream = args.flag("stream");
     let json = args.flag("json");
     let sampling = parse_sampling(args, gen_tokens)?;
@@ -47,6 +51,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     cfg.topology = topology;
     cfg.balancing = balancing;
     cfg.device_resident = !host_path;
+    cfg.host_sampler = host_sampler;
     cfg.recv_timeout = Duration::from_secs(recv_timeout.max(1));
     cfg.max_active = concurrency;
     cfg.policy = policy;
@@ -145,7 +150,8 @@ pub(crate) fn json_report(
         s.push_str(&format!(
             "{{\"id\":{},\"ttft_s\":{:.6},\"queueing_s\":{:.6},\"latency_s\":{:.6},\
              \"decode_tps\":{:.3},\"generated\":{},\"net_bytes\":{},\
-             \"mean_occupancy\":{:.3},\"exec_calls_per_token\":{:.2}}}",
+             \"mean_occupancy\":{:.3},\"exec_calls_per_token\":{:.2},\
+             \"d2h_bytes_per_token\":{:.1}}}",
             r.id,
             r.metrics.ttft_s(),
             r.metrics.queueing_s(),
@@ -155,6 +161,7 @@ pub(crate) fn json_report(
             d.net_bytes + r.metrics.prefill.net_bytes,
             d.mean_batch_occupancy(),
             d.exec_calls_per_token(),
+            d.d2h_bytes_per_token(),
         ));
     }
     // Aggregate occupancy: decode-token-weighted mean over the batch
@@ -204,6 +211,7 @@ mod tests {
             "\"generated\":3",
             "\"mean_occupancy\":",
             "\"exec_calls_per_token\":",
+            "\"d2h_bytes_per_token\":",
             "\"nodes\":2",
             "\"concurrency\":2",
             "\"aggregate_tps\":2.000",

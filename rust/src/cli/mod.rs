@@ -160,6 +160,35 @@
 //! BENCH_batch.json tracks aggregate tokens/s and occupancy at
 //! `--concurrency 1` vs `4` on every push; batched output tokens are
 //! asserted identical to serial batch-1 decode on both topologies.
+//!
+//! ## Sampling on device
+//!
+//! With the sampler artifact family present (`dev_sample_*` /
+//! `dev_b{B}_sample_*`, emitted by `aot.py::lower_sampler_artifacts`;
+//! `sampler_artifacts` in manifest.txt), sampling chains on device off
+//! the lm_head logits buffer: a decode iteration downloads the `[B]`
+//! sampled token ids plus their `[B]` full-softmax logprobs (8 bytes
+//! per row, plus a 4-byte stop mask when the request has stop tokens)
+//! instead of the `[B, V]` f32 logits — a ≥10× collapse of
+//! device→host traffic per token at the nano vocab, and growing with
+//! V. Pure prefill iterations skip lm_head entirely.
+//!
+//! Tokens are IDENTICAL to host-side sampling: the device roles mirror
+//! the host sampler op for op — first-max-tie-break argmax for greedy,
+//! and for top-k a counter-based threefry2x32 stream keyed on
+//! `(request seed, position)`, so the draw depends only on where the
+//! token lands, never on which path (host/device, serial/batched,
+//! bucket size) computed it. Every decentralized node — and the
+//! artifact — derives the same bits. `--host-sampler` (on
+//! `generate`/`serve`/`node`/`launch`) forces the `[B, V]` logits
+//! download + host reference sampler, the audit path kept for
+//! equivalence tests and bisection, like `--host-path` for the
+//! forward. Requests whose parameters exceed the artifact operand
+//! widths (`--top-k` > 64, more than 8 stop ids) fall back to host
+//! sampling automatically; a batch samples on device only when every
+//! packed row is eligible. The collapse is metered:
+//! `d2h_bytes_per_token` in `serve --json` (CI's BENCH_sampler.json
+//! compares device vs `--host-sampler` on every push).
 
 pub mod args;
 pub mod commands;
@@ -218,6 +247,9 @@ SUBCOMMANDS
                    --topology decentralized|centralized  --artifacts DIR
                    --sampler greedy|top-k --top-k K --temperature T
                    --seed S --stop \"id,id,...\"
+                   --host-sampler    (force the [1,V] logits download +
+                                      host reference sampler; default
+                                      samples on device)
   serve          LIVE multi-user serving: iteration-level scheduler with
                  continuous batching (all active requests share one
                  forward pass per iteration; batch occupancy reported),
@@ -225,7 +257,7 @@ SUBCOMMANDS
                    --requests N --concurrency N
                    --policy round-robin|fcfs|sjf
                    --nodes N --transport inproc|tcp --json --stream
-                   --artifacts DIR
+                   --artifacts DIR --host-sampler
   node           LIVE multi-process: run ONE node over the real TCP fabric
                  (node 0 schedules; followers need no request flags)
                    --id N --cluster hosts.toml --requests N --gen-tokens N

@@ -82,6 +82,7 @@ use anyhow::{Context, Result};
 use crate::config::{Balancing, ClusterConfig, NetworkProfile, Strategy, Topology};
 use crate::engine::api::{Engine, RequestHandle, TokenEvent};
 use crate::engine::request::{FinishReason, Request, RequestResult};
+use crate::engine::sampling::DeviceSampleInputs;
 use crate::engine::scheduler::SchedPolicy;
 use crate::metrics::{RunMetrics, TokenBreakdown};
 use crate::model::layout::ExpertLayout;
@@ -91,8 +92,7 @@ use crate::network::transport::{
     self, bytes_to_f32s, f32s_to_bytes, req_tag, tag, Endpoint, Envelope, NetError,
 };
 use crate::runtime::nano::resident_index;
-use crate::runtime::{BatchedRun, DeviceState, HostTensor, NanoRuntime};
-use crate::util::rng::Rng;
+use crate::runtime::{BatchedRun, DeviceSample, DeviceState, HostTensor, NanoRuntime};
 
 /// Default bound on any single wire wait (`LiveConfig::recv_timeout`,
 /// `[cluster] recv_timeout_secs` in hosts.toml).
@@ -160,6 +160,15 @@ pub struct LiveConfig {
     /// the host-tensor reference path when the artifacts predate the
     /// `dev_*` set. `false` forces the reference path.
     pub device_resident: bool,
+    /// Force the host-side reference sampler even when the artifacts
+    /// carry the `dev_sample_*` roles: every iteration downloads the
+    /// full `[B, V]` logits and samples on the CPU (`--host-sampler`).
+    /// The default (`false`) samples on device whenever possible — the
+    /// per-iteration download collapses to `[B]` token ids + `[B]`
+    /// logprobs. Tokens are identical either way (the device roles
+    /// mirror the host sampler op for op); keep the host path only as
+    /// the audit/bisect reference, like `--host-path` for the forward.
+    pub host_sampler: bool,
     /// Bound on any single wire wait (all-reduce/scatter/gather); a
     /// breach is reported with the ids of the peers that went silent.
     pub recv_timeout: Duration,
@@ -182,6 +191,7 @@ impl LiveConfig {
             balancing: Balancing::RouterAided,
             network: None,
             device_resident: true,
+            host_sampler: false,
             recv_timeout: DEFAULT_RECV_TIMEOUT,
             max_active: 2,
             policy: SchedPolicy::RoundRobin,
@@ -497,11 +507,17 @@ struct ActiveRequest {
     /// data-plane traffic (`req_tag`) and names it on the control plane.
     seq: u16,
     state: DecodeState,
-    /// The request's private sampler stream (identical on every
-    /// replicated-sampling node: seeded from `req.sampling.seed`).
-    rng: Rng,
     pos: usize,
     step: u32,
+    /// The token the device sampler drew at the end of the last forward
+    /// pass, waiting for the next iteration's Phase A to record it.
+    /// `None` on the host-sampler path (Phase A then samples from
+    /// `last_logits`). Identical on every replicated-sampling node:
+    /// sampling is stateless, keyed on `(req.sampling.seed, pos)`.
+    pending_sample: Option<DeviceSample>,
+    /// The last iteration's `[V]` logits — populated only on the
+    /// host-sampler path (on the device-sampler path logits never cross
+    /// the host boundary; this stays empty).
     last_logits: Vec<f32>,
     generated: Vec<u32>,
     metrics: RunMetrics,
@@ -653,6 +669,32 @@ impl NodeWorker {
         self.cfg.device_resident && self.rt.has_device_path()
     }
 
+    /// This request samples on device: device-resident state, sampler
+    /// artifacts present, not forced off (`--host-sampler`), and the
+    /// request's parameters fit the artifact operand widths. Every
+    /// input is replicated (config, manifest, request), so all
+    /// decentralized nodes take the same branch.
+    fn use_device_sampler(&self, a: &ActiveRequest) -> bool {
+        !self.cfg.host_sampler
+            && matches!(a.state, DecodeState::Dev(_))
+            && self.rt.has_sampler_path()
+            && a.req.sampling.device_compatible(
+                self.rt.manifest.sampler_max_top_k,
+                self.rt.manifest.sampler_max_stop,
+            )
+    }
+
+    /// Will the iteration AFTER this forward pass sample a token? False
+    /// during prefill (bar the last prompt position) and once the
+    /// request is certain to finish on length — the device sampler is
+    /// then skipped entirely, which also skips lm_head: prefill
+    /// iterations stop paying for logits nobody reads.
+    fn will_sample(&self, a: &ActiveRequest) -> bool {
+        a.pos + 1 >= a.req.prompt.len()
+            && a.pos + 1 < self.rt.manifest.max_seq
+            && a.generated.len() < a.req.sampling.max_new_tokens
+    }
+
     /// Allocate decode state and book-keeping for a newly admitted
     /// request.
     fn admit(
@@ -672,14 +714,13 @@ impl NodeWorker {
             let vc = kc.clone();
             DecodeState::Host { kc, vc }
         };
-        let rng = Rng::new(req.sampling.seed);
         Ok(ActiveRequest {
             req,
             seq,
             state,
-            rng,
             pos: 0,
             step: 0,
+            pending_sample: None,
             last_logits: Vec::new(),
             generated: Vec::new(),
             metrics: RunMetrics::default(),
@@ -1241,16 +1282,20 @@ impl NodeWorker {
     // ---------------- one engine iteration ----------
 
     /// Phase A of ANY iteration, replicated on every node: decide the
-    /// request's next input token — consume the next prompt token, or
-    /// sample from its own logits with its own sampler stream (the
-    /// token is recorded, streamed, and checked against the stop set
-    /// here). Returns `None` when the request finished instead of
-    /// needing a forward pass (stop token sampled, or context window
+    /// request's next input token — consume the next prompt token, take
+    /// the token the device sampler drew at the end of the previous
+    /// forward pass, or (host-sampler path) sample from the downloaded
+    /// logits (the token is recorded, streamed, and checked against the
+    /// stop set here). Returns `None` when the request finished instead
+    /// of needing a forward pass (stop token sampled, or context window
     /// exhausted), `Some((token, is_prefill))` otherwise.
     ///
     /// Load-bearing for cross-node determinism: the serial (`OP_STEP`)
     /// and batched (`OP_BATCH`) iterations share this exact sequence,
-    /// so the draw count and order can never diverge between them.
+    /// and sampling is stateless — the draw for the token at position
+    /// `a.pos` is `threefry(seed, a.pos)` on both the host and device
+    /// paths, so tokens can never diverge between nodes, paths, or
+    /// bucket shifts.
     fn decide_token(&self, a: &mut ActiveRequest) -> Option<(u32, bool)> {
         if a.pos >= self.rt.manifest.max_seq {
             a.finish = Some(FinishReason::Length);
@@ -1259,12 +1304,23 @@ impl NodeWorker {
         if a.pos < a.req.prompt.len() {
             return Some((a.req.prompt[a.pos], true));
         }
-        // Replicated on every decentralized node: same seed, same draw
-        // count, same token.
-        let (t, lp) = a.req.sampling.sampler.sample_lp(&a.last_logits, &mut a.rng);
+        let (t, lp, stop_hit) = match a.pending_sample.take() {
+            // The previous forward's device sampler already drew at
+            // counter `a.pos` (its forward position + 1) and checked
+            // the stop set on device.
+            Some(s) => (s.token, s.logprob, s.stop_hit),
+            None => {
+                let (t, lp) = a.req.sampling.sampler.sample_lp_at(
+                    &a.last_logits,
+                    a.req.sampling.seed,
+                    a.pos as u32,
+                );
+                (t, lp, a.req.sampling.stop.contains(&t))
+            }
+        };
         a.generated.push(t);
         emit_token(a, t, lp);
-        if a.req.sampling.stop.contains(&t) {
+        if stop_hit {
             // The stop token is recorded but its forward pass is
             // skipped.
             a.finish = Some(FinishReason::Stop);
@@ -1395,6 +1451,20 @@ impl NodeWorker {
         let step0 = active[rows[0]].step;
         let positions: Vec<usize> = rows.iter().map(|&i| active[i].pos).collect();
 
+        // Whole-batch sampler decision, replicated on every node: the
+        // chunk samples on device only when EVERY row is eligible — one
+        // incompatible request (k or stop set beyond the artifact
+        // operand widths) drops the whole chunk back to the [B, V]
+        // logits download; its rows still produce identical tokens
+        // because the host sampler draws the same stateless counters.
+        let dev_sampling = rows.iter().all(|&i| self.use_device_sampler(&active[i]));
+        let wills: Vec<bool> = rows.iter().map(|&i| self.will_sample(&active[i])).collect();
+        let dev_inputs: Option<Vec<DeviceSampleInputs>> =
+            (dev_sampling && wills.iter().any(|&w| w)).then(|| {
+                let max_stop = self.rt.manifest.sampler_max_stop;
+                rows.iter().map(|&i| active[i].req.sampling.device_inputs(max_stop)).collect()
+            });
+
         // Split borrow: the runners' DeviceStates become the batch rows;
         // everything else on the requests is touched only after the
         // forward completes.
@@ -1487,11 +1557,19 @@ impl NodeWorker {
             }
         }
 
-        // ONE [B, V] logits download for the whole batch — each row's
-        // share lands in its request's own `last_logits` below.
+        // ONE download closes the iteration: the [B, 2] packed samples
+        // (+ [B] stop mask) on the device-sampler path, the full [B, V]
+        // logits on the host-sampler reference path. A chunk whose rows
+        // are ALL mid-prefill on the device-sampler path skips lm_head
+        // and the download entirely.
         let t_head = Instant::now();
         let mut all_logits = Vec::new();
-        run.logits_into(&self.rt, &mut all_logits)?;
+        let mut samples: Vec<DeviceSample> = Vec::new();
+        if let Some(inputs) = &dev_inputs {
+            samples = run.sample_on_device(&self.rt, inputs)?;
+        } else if !dev_sampling {
+            run.logits_into(&self.rt, &mut all_logits)?;
+        }
         b.misc_ns += t_head.elapsed().as_nanos() as u64;
         drop(run); // release the DeviceState borrows before bookkeeping
         note_transfers(&mut b, &self.rt);
@@ -1516,7 +1594,12 @@ impl NodeWorker {
         for (r, &i) in rows.iter().enumerate() {
             let a = &mut active[i];
             a.last_logits.clear();
-            a.last_logits.extend_from_slice(&all_logits[r * vocab..(r + 1) * vocab]);
+            if dev_sampling {
+                a.pending_sample = wills[r].then(|| samples[r]);
+            } else {
+                a.pending_sample = None;
+                a.last_logits.extend_from_slice(&all_logits[r * vocab..(r + 1) * vocab]);
+            }
             if pref[r] {
                 a.metrics.prefill.push(share);
             } else {
@@ -1625,6 +1708,8 @@ impl NodeWorker {
     ) -> Result<TokenBreakdown> {
         let n_layers = self.rt.manifest.n_layers;
         let mut b = TokenBreakdown::default();
+        let sample_dev = self.use_device_sampler(a);
+        let will_sample = self.will_sample(a);
         self.rt.take_transfer_stats();
         self.ep.take_stats();
         let DecodeState::Dev(state) = &mut a.state else {
@@ -1666,7 +1751,19 @@ impl NodeWorker {
             }
         }
         let t_head = Instant::now();
-        state.logits_into(&self.rt, &mut a.last_logits)?;
+        if sample_dev {
+            // The d2h collapse: 8 bytes of (token, logprob) — plus a
+            // 4-byte stop mask — instead of the [1, V] logits. Pure
+            // prefill iterations skip lm_head + sampler entirely.
+            a.pending_sample = if will_sample {
+                let inp = a.req.sampling.device_inputs(self.rt.manifest.sampler_max_stop);
+                Some(state.sample_on_device(&self.rt, &inp, a.pos)?)
+            } else {
+                None
+            };
+        } else {
+            state.logits_into(&self.rt, &mut a.last_logits)?;
+        }
         b.misc_ns += t_head.elapsed().as_nanos() as u64;
         note_transfers(&mut b, &self.rt);
         note_wire(&mut b, self.ep.take_stats());
@@ -1803,6 +1900,8 @@ impl NodeWorker {
     ) -> Result<TokenBreakdown> {
         let n_layers = self.rt.manifest.n_layers;
         let mut b = TokenBreakdown::default();
+        let sample_dev = self.use_device_sampler(a);
+        let will_sample = self.will_sample(a);
         self.rt.take_transfer_stats();
         self.ep.take_stats();
         let DecodeState::Dev(state) = &mut a.state else {
@@ -1851,7 +1950,19 @@ impl NodeWorker {
             }
         }
         let t_head = Instant::now();
-        state.logits_into(&self.rt, &mut a.last_logits)?;
+        if sample_dev {
+            // Same d2h collapse as the decentralized path; the workers
+            // cannot tell the difference (the wire protocol carries no
+            // logits either way).
+            a.pending_sample = if will_sample {
+                let inp = a.req.sampling.device_inputs(self.rt.manifest.sampler_max_stop);
+                Some(state.sample_on_device(&self.rt, &inp, a.pos)?)
+            } else {
+                None
+            };
+        } else {
+            state.logits_into(&self.rt, &mut a.last_logits)?;
+        }
         b.misc_ns += t_head.elapsed().as_nanos() as u64;
         note_transfers(&mut b, &self.rt);
         note_wire(&mut b, self.ep.take_stats());

@@ -19,7 +19,6 @@ use crate::engine::api::{Engine, RequestHandle, TokenEvent};
 use crate::engine::request::{FinishReason, Request, RequestResult};
 use crate::metrics::{RunMetrics, TokenBreakdown};
 use crate::runtime::{HostTensor, Manifest, NanoRuntime, TransferStats};
-use crate::util::rng::Rng;
 
 struct Job {
     req: Request,
@@ -144,7 +143,6 @@ fn generate(rt: &NanoRuntime, job: &Job) -> Result<RequestResult> {
         queueing_ns: job.submitted.elapsed().as_nanos() as u64,
         ..Default::default()
     };
-    let mut rng = Rng::new(req.sampling.seed);
     let mut kc: HostTensor = rt.empty_dense_cache();
     let mut vc: HostTensor = rt.empty_dense_cache();
     let mut pos = 0usize;
@@ -179,7 +177,11 @@ fn generate(rt: &NanoRuntime, job: &Job) -> Result<RequestResult> {
             if pos >= max_seq {
                 break;
             }
-            let (next, lp) = req.sampling.sampler.sample_lp(&last_logits, &mut rng);
+            // `pos` is the position the sampled token will occupy — the
+            // stateless draw counter shared with the live scheduler and
+            // the device sampler artifacts.
+            let (next, lp) =
+                req.sampling.sampler.sample_lp_at(&last_logits, req.sampling.seed, pos as u32);
             generated.push(next);
             if generated.len() == 1 {
                 metrics.ttft_ns = job.submitted.elapsed().as_nanos() as u64;

@@ -15,5 +15,5 @@ pub use api::{Canceller, Engine, RequestHandle, TokenEvent};
 pub use generation::DenseEngine;
 pub use remote::RemoteEngine;
 pub use request::{FinishReason, Request, RequestResult};
-pub use sampling::{Sampler, SamplingParams};
+pub use sampling::{DeviceSampleInputs, Sampler, SamplingParams};
 pub use scheduler::{serve_workload, SchedOutcome, SchedPolicy, SchedReport, SimEngine};

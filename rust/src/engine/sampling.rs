@@ -1,7 +1,19 @@
 //! Next-token sampling over the LM-head logits, and the per-request
 //! sampling configuration of the streaming serving API.
+//!
+//! Sampling is STATELESS: the draw for a token is a pure function of
+//! `(request seed, sequence position)` through the counter-based
+//! Threefry stream ([`crate::util::threefry`]). That is what lets the
+//! sampler run anywhere — on the host below, on every decentralized
+//! node identically, or inside the lowered `dev_sample_*` artifacts —
+//! and always produce the same token. The host top-k walk below is an
+//! op-for-op f32 mirror of the artifact (`model.py::sample_topk_step`):
+//! first-max lane order, masked exp, sequential cumulative sum,
+//! threshold count. The only op that may differ is `exp`'s final ulp
+//! (libm vs XLA) — deterministic per platform and asserted equivalent
+//! end-to-end by the integration equivalence suite.
 
-use crate::util::rng::Rng;
+use crate::util::threefry::{key_from_seed, sample_uniform};
 
 /// Sampling configuration.
 #[derive(Debug, Clone, PartialEq)]
@@ -18,10 +30,11 @@ pub enum Sampler {
 #[derive(Debug, Clone, PartialEq)]
 pub struct SamplingParams {
     pub sampler: Sampler,
-    /// Seed of the request's private RNG stream. On the decentralized
-    /// live topology every node derives the identical stream from it
-    /// (deterministic replicated sampling), so it rides the admission
-    /// broadcast.
+    /// Seed of the request's sampling stream. The draw at a position is
+    /// `threefry(seed, position)`, so on the decentralized live topology
+    /// every node — and the device sampler artifact — derives the
+    /// identical token from it (deterministic replicated sampling); it
+    /// rides the admission broadcast.
     pub seed: u64,
     /// Generation stops once a sampled token is in this set. The stop
     /// token IS included in the output (finish reason `Stop`) — keeping
@@ -40,6 +53,44 @@ impl SamplingParams {
             max_new_tokens,
         }
     }
+
+    /// The request fits the device sampler artifact's static operand
+    /// widths (`manifest.sampler_max_top_k` / `sampler_max_stop`).
+    /// Incompatible requests sample on the host from downloaded logits.
+    pub fn device_compatible(&self, max_top_k: usize, max_stop: usize) -> bool {
+        let k_ok = match self.sampler {
+            Sampler::Greedy => true,
+            Sampler::TopK { k, .. } => k.max(1) <= max_top_k,
+        };
+        k_ok && self.stop.len() <= max_stop
+    }
+
+    /// Map these params onto the device sampler's operand block.
+    /// `max_stop` is the artifact's stop-operand width.
+    pub fn device_inputs(&self, max_stop: usize) -> DeviceSampleInputs {
+        let (key0, key1) = key_from_seed(self.seed);
+        let (greedy, k, temperature) = match self.sampler {
+            Sampler::Greedy => (true, 1, 1.0f32),
+            Sampler::TopK { k, temperature } => (false, k.max(1) as i32, temperature as f32),
+        };
+        let stops = if self.stop.is_empty() {
+            Vec::new()
+        } else {
+            let mut s = vec![-1.0f32; max_stop];
+            for (slot, &t) in s.iter_mut().zip(&self.stop) {
+                *slot = t as f32;
+            }
+            s
+        };
+        DeviceSampleInputs {
+            greedy,
+            k,
+            temperature,
+            key0: key0 as i32,
+            key1: key1 as i32,
+            stops,
+        }
+    }
 }
 
 impl Default for SamplingParams {
@@ -48,42 +99,61 @@ impl Default for SamplingParams {
     }
 }
 
+/// Host-side operand block of the on-device sampler roles — the
+/// per-request scalars [`SamplingParams::device_inputs`] maps onto the
+/// artifact inputs (`runtime::device::DeviceState::sample_on_device` /
+/// `runtime::batch::BatchedRun::sample_on_device`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSampleInputs {
+    /// Use the greedy role (no RNG operands needed).
+    pub greedy: bool,
+    /// Top-k operands. A greedy row riding a top-k *batch* sets k = 1:
+    /// the CDF walk then always lands on lane 0 = the first-max argmax,
+    /// identical to the greedy role whatever the uniform draws.
+    pub k: i32,
+    pub temperature: f32,
+    /// The request seed's u32 halves as i32 bit patterns (hi, lo) —
+    /// they ride i32 operand buffers and are bitcast on device.
+    pub key0: i32,
+    pub key1: i32,
+    /// Stop ids as exact small-integer f32s, padded with -1.0 to the
+    /// artifact width; empty when the request has no stop set (the
+    /// caller then skips the stop role entirely).
+    pub stops: Vec<f32>,
+}
+
 impl Sampler {
-    /// Pick the next token id from `logits`.
-    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
-        self.sample_lp(logits, rng).0
+    /// Pick the token for sequence position `pos` (the position the
+    /// sampled token itself will occupy — the Threefry draw counter).
+    pub fn sample_at(&self, logits: &[f32], seed: u64, pos: u32) -> u32 {
+        self.sample_lp_at(logits, seed, pos).0
     }
 
-    /// Pick the next token id and return its log-probability under the
+    /// [`Sampler::sample_at`] plus the token's log-probability under the
     /// FULL softmax of `logits` (temperature-free): streamed logprobs
     /// stay comparable across sampler kinds and requests.
-    pub fn sample_lp(&self, logits: &[f32], rng: &mut Rng) -> (u32, f32) {
+    pub fn sample_lp_at(&self, logits: &[f32], seed: u64, pos: u32) -> (u32, f32) {
         let tok = match self {
             Sampler::Greedy => argmax(logits) as u32,
             Sampler::TopK { k, temperature } => {
                 let k = (*k).clamp(1, logits.len());
-                let t = temperature.max(1e-6);
-                // Indices of the k largest logits.
-                let mut idx: Vec<usize> = (0..logits.len()).collect();
-                idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
-                idx.truncate(k);
-                // Softmax over the survivors at temperature t.
-                let m = logits[idx[0]] as f64;
-                let exps: Vec<f64> = idx
-                    .iter()
-                    .map(|&i| ((logits[i] as f64 - m) / t).exp())
-                    .collect();
-                let z: f64 = exps.iter().sum();
-                let mut u = rng.f64() * z;
-                let mut chosen = idx[k - 1];
-                for (j, &e) in exps.iter().enumerate() {
-                    u -= e;
-                    if u <= 0.0 {
-                        chosen = idx[j];
-                        break;
-                    }
+                let lanes = top_k_lanes(logits, k);
+                // The artifact's f32 pipeline, op for op: softmax
+                // numerators over the k lanes at temperature t, a
+                // SEQUENTIAL cumulative sum (summation order is part of
+                // the determinism contract), then count lanes whose
+                // cumsum lies below u * Z.
+                let m = logits[lanes[0] as usize];
+                let t = (*temperature as f32).max(1e-6);
+                let mut cum = Vec::with_capacity(k);
+                let mut acc = 0.0f32;
+                for &lane in &lanes {
+                    acc += ((logits[lane as usize] - m) / t).exp();
+                    cum.push(acc);
                 }
-                chosen as u32
+                let thr = sample_uniform(seed, pos) * acc;
+                let j = cum.iter().filter(|&&c| c < thr).count().min(k - 1);
+                lanes[j]
             }
         };
         (tok, log_softmax_at(logits, tok as usize))
@@ -100,6 +170,28 @@ fn argmax(xs: &[f32]) -> usize {
     best
 }
 
+/// Indices of the `k` largest logits in FIRST-MAX order — value
+/// descending, IEEE-equal values (±0 included) ordered by ascending
+/// index — exactly the lane order the device's iterative argmax
+/// produces. Partial select + small sort: O(V + k log k) instead of the
+/// former full O(V log V) vocab sort per token.
+fn top_k_lanes(logits: &[f32], k: usize) -> Vec<u32> {
+    debug_assert!(k >= 1 && k <= logits.len());
+    let cmp = |a: &u32, b: &u32| {
+        logits[*b as usize]
+            .partial_cmp(&logits[*a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(b))
+    };
+    let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, cmp);
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(cmp);
+    idx
+}
+
 /// `ln softmax(logits)[i]`, computed stably (f64 accumulation).
 fn log_softmax_at(logits: &[f32], i: usize) -> f32 {
     let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -113,65 +205,97 @@ mod tests {
 
     #[test]
     fn greedy_picks_max() {
-        let mut rng = Rng::new(1);
         let logits = vec![0.1, 3.0, -1.0, 2.9];
-        assert_eq!(Sampler::Greedy.sample(&logits, &mut rng), 1);
+        assert_eq!(Sampler::Greedy.sample_at(&logits, 1, 0), 1);
+    }
+
+    #[test]
+    fn greedy_tie_breaks_to_lowest_index() {
+        // Duplicate maxima: the first-max scan (and the device argmax)
+        // must both choose the LOWEST index.
+        let logits = vec![0.5, 7.25, -1.0, 7.25, 7.25];
+        assert_eq!(Sampler::Greedy.sample_at(&logits, 1, 0), 1);
     }
 
     #[test]
     fn topk_stays_in_topk() {
-        let mut rng = Rng::new(2);
         let logits = vec![-10.0, 5.0, 4.0, -20.0, 4.5];
         let s = Sampler::TopK { k: 3, temperature: 1.0 };
-        for _ in 0..200 {
-            let t = s.sample(&logits, &mut rng);
+        for pos in 0..200 {
+            let t = s.sample_at(&logits, 2, pos);
             assert!([1u32, 2, 4].contains(&t), "sampled {t}");
         }
     }
 
     #[test]
     fn low_temperature_approaches_greedy() {
-        let mut rng = Rng::new(3);
         let logits = vec![0.0, 1.0, 0.9];
         let s = Sampler::TopK { k: 3, temperature: 0.01 };
-        let hits = (0..100)
-            .filter(|_| s.sample(&logits, &mut rng) == 1)
-            .count();
+        let hits = (0..100).filter(|&p| s.sample_at(&logits, 3, p) == 1).count();
         assert!(hits > 95, "{hits}");
     }
 
     #[test]
     fn topk_k_one_is_greedy() {
-        let mut rng = Rng::new(4);
         let logits = vec![0.5, 0.4, 9.0];
         let s = Sampler::TopK { k: 1, temperature: 2.0 };
-        assert_eq!(s.sample(&logits, &mut rng), 2);
+        for pos in 0..16 {
+            assert_eq!(s.sample_at(&logits, 4, pos), 2);
+        }
+    }
+
+    #[test]
+    fn sampling_is_stateless_and_position_keyed() {
+        let logits: Vec<f32> = (0..64).map(|i| ((i * 37) % 11) as f32 * 0.3).collect();
+        let s = Sampler::TopK { k: 8, temperature: 1.0 };
+        // Same (seed, pos) -> same token, independent of call order.
+        let a = s.sample_at(&logits, 9, 5);
+        let _ = s.sample_at(&logits, 9, 6);
+        assert_eq!(a, s.sample_at(&logits, 9, 5));
+        // Different seeds decouple the streams somewhere.
+        let diverged = (0..64).any(|p| s.sample_at(&logits, 9, p) != s.sample_at(&logits, 10, p));
+        assert!(diverged);
+    }
+
+    #[test]
+    fn top_k_lanes_matches_full_sort_reference() {
+        // Partial select must reproduce the old full-sort order exactly,
+        // duplicates included.
+        let logits = vec![1.0, 3.0, 3.0, -2.0, 5.0, 3.0, 0.0, 5.0];
+        for k in 1..=logits.len() {
+            let mut full: Vec<u32> = (0..logits.len() as u32).collect();
+            full.sort_by(|&a, &b| {
+                logits[b as usize]
+                    .partial_cmp(&logits[a as usize])
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            full.truncate(k);
+            assert_eq!(top_k_lanes(&logits, k), full, "k={k}");
+        }
     }
 
     #[test]
     fn handles_singleton_vocab() {
-        let mut rng = Rng::new(5);
-        assert_eq!(Sampler::Greedy.sample(&[1.0], &mut rng), 0);
+        assert_eq!(Sampler::Greedy.sample_at(&[1.0], 5, 0), 0);
         let s = Sampler::TopK { k: 5, temperature: 1.0 };
-        assert_eq!(s.sample(&[1.0], &mut rng), 0);
+        assert_eq!(s.sample_at(&[1.0], 5, 0), 0);
     }
 
     #[test]
     fn logprob_is_full_softmax() {
-        let mut rng = Rng::new(6);
         // Uniform logits: every token has probability 1/4.
-        let (_, lp) = Sampler::Greedy.sample_lp(&[2.0, 2.0, 2.0, 2.0], &mut rng);
+        let (_, lp) = Sampler::Greedy.sample_lp_at(&[2.0, 2.0, 2.0, 2.0], 6, 0);
         assert!((lp - (0.25f32).ln()).abs() < 1e-5, "{lp}");
         // Singleton vocab: probability 1.
-        let (_, lp) = Sampler::Greedy.sample_lp(&[3.7], &mut rng);
+        let (_, lp) = Sampler::Greedy.sample_lp_at(&[3.7], 6, 0);
         assert!(lp.abs() < 1e-6, "{lp}");
     }
 
     #[test]
     fn logprob_tracks_the_chosen_token() {
-        let mut rng = Rng::new(7);
         let logits = vec![0.0, 5.0, 0.0];
-        let (tok, lp) = Sampler::Greedy.sample_lp(&logits, &mut rng);
+        let (tok, lp) = Sampler::Greedy.sample_lp_at(&logits, 7, 0);
         assert_eq!(tok, 1);
         // p ~= e^5 / (e^5 + 2) => logprob just under 0.
         assert!(lp < 0.0 && lp > -0.05, "{lp}");
@@ -184,5 +308,40 @@ mod tests {
         assert_eq!(p.sampler, Sampler::Greedy);
         assert!(p.stop.is_empty());
         assert_eq!(SamplingParams::greedy(7).max_new_tokens, 7);
+    }
+
+    #[test]
+    fn device_compatibility_gates_on_artifact_widths() {
+        let mut p = SamplingParams::greedy(8);
+        assert!(p.device_compatible(64, 8));
+        p.sampler = Sampler::TopK { k: 40, temperature: 0.8 };
+        assert!(p.device_compatible(64, 8));
+        p.sampler = Sampler::TopK { k: 65, temperature: 0.8 };
+        assert!(!p.device_compatible(64, 8));
+        p.sampler = Sampler::TopK { k: 4, temperature: 0.8 };
+        p.stop = vec![0; 9];
+        assert!(!p.device_compatible(64, 8));
+    }
+
+    #[test]
+    fn device_inputs_map_params_onto_operands() {
+        let mut p = SamplingParams::greedy(8);
+        p.seed = 0xDEAD_BEEF_0BAD_F00D;
+        p.stop = vec![7, 509];
+        let inp = p.device_inputs(8);
+        assert!(inp.greedy);
+        assert_eq!(inp.k, 1);
+        assert_eq!(inp.key0 as u32, 0xDEAD_BEEF);
+        assert_eq!(inp.key1 as u32, 0x0BAD_F00D);
+        assert_eq!(inp.stops.len(), 8);
+        assert_eq!(&inp.stops[..3], &[7.0, 509.0, -1.0]);
+
+        p.sampler = Sampler::TopK { k: 40, temperature: 0.8 };
+        p.stop.clear();
+        let inp = p.device_inputs(8);
+        assert!(!inp.greedy);
+        assert_eq!(inp.k, 40);
+        assert!((inp.temperature - 0.8).abs() < 1e-7);
+        assert!(inp.stops.is_empty(), "no stop set -> skip the stop role");
     }
 }

@@ -136,6 +136,18 @@ impl PhaseMetrics {
         }
     }
 
+    /// Mean device→host bytes downloaded per token — the on-device
+    /// sampler headline: with sampling chained on device a decode
+    /// iteration downloads packed (token, logprob) [+ stop mask]
+    /// instead of the `[B, V]` f32 logits, collapsing this by ≥10×.
+    pub fn d2h_bytes_per_token(&self) -> f64 {
+        if self.tokens == 0 {
+            0.0
+        } else {
+            self.d2h_bytes as f64 / self.tokens as f64
+        }
+    }
+
     /// Mean seconds spent in host↔device transfers per token.
     pub fn transfer_secs_per_token(&self) -> f64 {
         (self.h2d.mean() + self.d2h.mean()) / 1e9
@@ -263,6 +275,7 @@ mod tests {
         assert_eq!(p.net_msgs, 8);
         assert_eq!(p.net_bytes, 1024);
         assert!((p.transfer_bytes_per_token() - 3072.0).abs() < 1e-9);
+        assert!((p.d2h_bytes_per_token() - 2048.0).abs() < 1e-9);
         assert!((p.transfer_secs_per_token() - 70e-9).abs() < 1e-15);
         assert!((p.wire_bytes_per_token() - 512.0).abs() < 1e-9);
         // total time unchanged by transfer/wire sub-accounting
@@ -298,6 +311,7 @@ mod tests {
         assert_eq!(p.comm_fraction(), 0.0);
         assert_eq!(p.mean_batch_occupancy(), 1.0);
         assert_eq!(p.exec_calls_per_token(), 0.0);
+        assert_eq!(p.d2h_bytes_per_token(), 0.0);
     }
 
     #[test]

@@ -45,7 +45,9 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::nano::NodeExperts;
+use crate::engine::sampling::DeviceSampleInputs;
+use crate::runtime::device::DeviceSample;
+use crate::runtime::nano::{dedup_plan, NodeExperts};
 use crate::runtime::{DeviceState, NanoRuntime};
 
 /// One scheduler iteration's shared forward pass: borrows the packed
@@ -211,12 +213,34 @@ impl<'a> BatchedRun<'a> {
         }
         let ns = slot_idx.len() / self.bucket;
         let exes = rt.batched(self.bucket)?;
-        let exe = exes.experts_exe(node.resident.len(), ns, &rt.manifest)?;
         let moe_in = self.moe_in.take().context("no moe_in: run attn_router first")?;
-        let ib = rt.buf_i32(slot_idx, &[self.bucket, ns])?;
         let wb = rt.buf_f32(slot_w, &[self.bucket, ns])?;
         let le = &node.layers[layer];
-        let partial = rt.run_dev(exe, &[&le.w1, &le.v1, &le.w2, &moe_in, &ib, &wb])?;
+        // Per-row expert dedup: when the bucket's rows reference at most
+        // ns DISTINCT experts on this node, each distinct expert's
+        // weights are sliced once for the whole [B, D] batch instead of
+        // gathered once per (row, slot) — rows routing to the same
+        // expert stop re-materializing its weights per row.
+        let partial = if let Some((ids, sel)) = dedup_plan(self.bucket, ns, slot_idx, slot_w)
+            .filter(|_| rt.manifest.dedup_artifacts)
+        {
+            match exes.dedup_exe(node.resident.len(), ns, &rt.manifest) {
+                Some(exe) => {
+                    let eb = rt.buf_i32(&ids, &[ns])?;
+                    let sb = rt.buf_i32(&sel, &[self.bucket, ns])?;
+                    rt.run_dev(exe, &[&le.w1, &le.v1, &le.w2, &moe_in, &eb, &sb, &wb])?
+                }
+                None => {
+                    let exe = exes.experts_exe(node.resident.len(), ns, &rt.manifest)?;
+                    let ib = rt.buf_i32(slot_idx, &[self.bucket, ns])?;
+                    rt.run_dev(exe, &[&le.w1, &le.v1, &le.w2, &moe_in, &ib, &wb])?
+                }
+            }
+        } else {
+            let exe = exes.experts_exe(node.resident.len(), ns, &rt.manifest)?;
+            let ib = rt.buf_i32(slot_idx, &[self.bucket, ns])?;
+            rt.run_dev(exe, &[&le.w1, &le.v1, &le.w2, &moe_in, &ib, &wb])?
+        };
         self.moe_in = Some(moe_in);
         Ok(partial)
     }
@@ -248,11 +272,90 @@ impl<'a> BatchedRun<'a> {
 
     /// Final norm + logits for the whole batch, downloaded in ONE
     /// `[B * V]` crossing into the caller's staging buffer; the caller
-    /// slices row `r * vocab .. (r+1) * vocab` per request.
+    /// slices row `r * vocab .. (r+1) * vocab` per request — the
+    /// reference/fallback path (`--host-sampler`, device-incompatible
+    /// requests); the hot path is [`BatchedRun::sample_on_device`].
     pub fn logits_into(&self, rt: &NanoRuntime, out: &mut Vec<f32>) -> Result<()> {
         let exes = rt.batched(self.bucket)?;
         let x = self.x.as_ref().context("no residual stream: batch not run")?;
         let b = rt.run_dev(&exes.lm_head, &[rt.lnf_buf(), rt.head_buf(), x])?;
         rt.download_f32_into(&b, out)
+    }
+
+    /// Final norm + lm_head + the on-device sampler for the whole batch,
+    /// chained on device: the download is the `[B, 2]` packed
+    /// (token, logprob) — plus a `[B]` stop mask when any row carries a
+    /// stop set — instead of the `[B, V]` logits.
+    ///
+    /// `inputs` is one [`DeviceSampleInputs`] per ACTIVE row; padding
+    /// rows sample greedily at position 0 and their outputs are never
+    /// read. Each active row draws at counter `positions[row] + 1`, the
+    /// position its sampled token will occupy — the same stateless
+    /// counter the serial device path and the host reference use, so a
+    /// request's tokens are identical across bucket shifts and paths.
+    pub fn sample_on_device(
+        &self,
+        rt: &NanoRuntime,
+        inputs: &[DeviceSampleInputs],
+    ) -> Result<Vec<DeviceSample>> {
+        let rows = self.states.len();
+        if inputs.len() != rows {
+            bail!("{} sampler inputs for {rows} rows", inputs.len());
+        }
+        let exes = rt.batched(self.bucket)?;
+        let x = self.x.as_ref().context("no residual stream: batch not run")?;
+        let logits = rt.run_dev(&exes.lm_head, &[rt.lnf_buf(), rt.head_buf(), x])?;
+        let s = rt.sampler(self.bucket)?;
+        let packed_buf = if inputs.iter().all(|i| i.greedy) {
+            rt.run_dev(&s.greedy, &[&logits])?
+        } else {
+            // A mixed batch rides the top-k role: greedy rows set k = 1
+            // (the CDF walk then always lands on lane 0 = the first-max
+            // argmax), as do padding rows.
+            let mut ks = vec![1i32; self.bucket];
+            let mut ts = vec![1.0f32; self.bucket];
+            let mut k0 = vec![0i32; self.bucket];
+            let mut k1 = vec![0i32; self.bucket];
+            for (r, i) in inputs.iter().enumerate() {
+                ks[r] = i.k;
+                ts[r] = i.temperature;
+                k0[r] = i.key0;
+                k1[r] = i.key1;
+            }
+            let kb = rt.buf_i32(&ks, &[self.bucket])?;
+            let tb = rt.buf_f32(&ts, &[self.bucket])?;
+            let k0b = rt.buf_i32(&k0, &[self.bucket])?;
+            let k1b = rt.buf_i32(&k1, &[self.bucket])?;
+            rt.run_dev(&s.topk, &[&logits, &kb, &tb, &k0b, &k1b, &self.positions_buf])?
+        };
+        let max_stop = rt.manifest.sampler_max_stop;
+        let stop_mask = if inputs.iter().any(|i| !i.stops.is_empty()) {
+            let mut stops = vec![-1.0f32; self.bucket * max_stop];
+            for (r, i) in inputs.iter().enumerate() {
+                if i.stops.is_empty() {
+                    continue; // stays all -1.0: no token id matches
+                }
+                if i.stops.len() != max_stop {
+                    bail!("row {r}: {} stop slots, expected {max_stop}", i.stops.len());
+                }
+                stops[r * max_stop..(r + 1) * max_stop].copy_from_slice(&i.stops);
+            }
+            let sb = rt.buf_f32(&stops, &[self.bucket, max_stop])?;
+            let mask = rt.run_dev(&s.stop, &[&packed_buf, &sb])?;
+            rt.download_f32(&mask)?
+        } else {
+            vec![0.0; self.bucket]
+        };
+        let packed = rt.download_f32(&packed_buf)?;
+        if packed.len() != self.bucket * 2 || stop_mask.len() != self.bucket {
+            bail!("sampler returned {} values, expected {}", packed.len(), self.bucket * 2);
+        }
+        Ok((0..rows)
+            .map(|r| DeviceSample {
+                token: packed[2 * r] as u32,
+                logprob: packed[2 * r + 1],
+                stop_hit: stop_mask[r] != 0.0,
+            })
+            .collect())
     }
 }

@@ -24,8 +24,10 @@
 //! Per layer, the only host crossings left are the two the protocol
 //! itself demands: the router's packed top-k (the host-side planner
 //! consumes it) and the expert partial/all-reduce payload (it must hit
-//! the wire). Remaining residency gaps (sampler-on-device, wire-direct
-//! DMA) are tracked in ROADMAP.md "Open items".
+//! the wire). Per token, sampling chains on device too
+//! ([`DeviceState::sample_on_device`]): the download is the sampled
+//! token + logprob, not the `[1, V]` logits. Remaining residency gaps
+//! (wire-direct DMA) are tracked in ROADMAP.md "Open items".
 //!
 //! One `DeviceState` per (request, node); like the runtime itself it is
 //! thread-local by construction (PJRT handles are not `Send`).
@@ -37,8 +39,24 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::engine::sampling::DeviceSampleInputs;
 use crate::runtime::nano::NodeExperts;
 use crate::runtime::{HostTensor, NanoRuntime};
+
+/// One request's on-device sampling result: what crosses the host
+/// boundary instead of the `[1, V]` logits — 8 bytes of packed
+/// (token, logprob), plus 4 bytes of stop mask when a stop set exists.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceSample {
+    pub token: u32,
+    /// Full-softmax log-probability of the token (f32 on-device
+    /// reduction; the host reference accumulates in f64, so the values
+    /// agree to ~1e-5, not bitwise).
+    pub logprob: f32,
+    /// The token is in the request's stop set (computed on device; the
+    /// stop role is skipped when the request has no stop set).
+    pub stop_hit: bool,
+}
 
 /// Per-request decode state kept as `PjRtBuffer`s across the whole loop.
 ///
@@ -228,8 +246,9 @@ impl DeviceState {
         self.finish_layer_device(rt, &sum)
     }
 
-    /// Final norm + logits, downloaded for the host-side sampler (the
-    /// one per-token crossing; sampler-on-device is a tracked gap).
+    /// Final norm + logits, downloaded for the host-side sampler — the
+    /// reference/fallback path (`--host-sampler`, incompatible
+    /// requests); the hot path is [`DeviceState::sample_on_device`].
     pub fn logits(&self, rt: &NanoRuntime) -> Result<Vec<f32>> {
         let mut out = Vec::new();
         self.logits_into(rt, &mut out)?;
@@ -246,5 +265,47 @@ impl DeviceState {
         let x = self.x.as_ref().context("no residual stream: token not run")?;
         let b = rt.run_dev(&rt.dev()?.lm_head, &[rt.lnf_buf(), rt.head_buf(), x])?;
         rt.download_f32_into(&b, out)
+    }
+
+    /// Final norm + lm_head + the on-device sampler, chained on device:
+    /// the download is the `[1, 2]` packed (token, logprob) — plus a
+    /// `[1]` stop mask when the request has stop tokens — instead of
+    /// the `[1, V]` logits (the d2h collapse `TransferStats` meters).
+    ///
+    /// `pos` is the forward-input position of the token just run; the
+    /// artifact draws at counter `pos + 1`, the position the sampled
+    /// token itself will occupy — the same counter the host reference
+    /// uses, so tokens are identical either way.
+    pub fn sample_on_device(
+        &self,
+        rt: &NanoRuntime,
+        inp: &DeviceSampleInputs,
+        pos: usize,
+    ) -> Result<DeviceSample> {
+        let x = self.x.as_ref().context("no residual stream: token not run")?;
+        let logits = rt.run_dev(&rt.dev()?.lm_head, &[rt.lnf_buf(), rt.head_buf(), x])?;
+        let s = rt.sampler(1)?;
+        let packed_buf = if inp.greedy {
+            rt.run_dev(&s.greedy, &[&logits])?
+        } else {
+            let ks = rt.buf_i32(&[inp.k], &[1])?;
+            let ts = rt.buf_f32(&[inp.temperature], &[1])?;
+            let k0 = rt.buf_i32(&[inp.key0], &[1])?;
+            let k1 = rt.buf_i32(&[inp.key1], &[1])?;
+            let pb = rt.buf_i32(&[pos as i32], &[1])?;
+            rt.run_dev(&s.topk, &[&logits, &ks, &ts, &k0, &k1, &pb])?
+        };
+        let stop_hit = if inp.stops.is_empty() {
+            false
+        } else {
+            let sb = rt.buf_f32(&inp.stops, &[1, inp.stops.len()])?;
+            let mask = rt.run_dev(&s.stop, &[&packed_buf, &sb])?;
+            rt.download_f32(&mask)?[0] != 0.0
+        };
+        let packed = rt.download_f32(&packed_buf)?;
+        if packed.len() != 2 {
+            bail!("sampler returned {} values, expected 2", packed.len());
+        }
+        Ok(DeviceSample { token: packed[0] as u32, logprob: packed[1], stop_hit })
     }
 }

@@ -32,6 +32,18 @@ pub struct Manifest {
     /// B ∈ {2, 4, 8}). 0 = artifacts predate continuous batching; the
     /// live scheduler then decodes serially (batch-1 per iteration).
     pub max_batch: usize,
+    /// The on-device sampler roles (`dev_sample_*` / `dev_b{B}_sample_*`)
+    /// are present. Older artifact dirs lack them; the runtime then
+    /// samples on the host from downloaded logits.
+    pub sampler_artifacts: bool,
+    /// Static unroll bound of the device top-k role (requests with
+    /// larger k fall back to host sampling). 0 when absent.
+    pub sampler_max_top_k: usize,
+    /// Stop-token operand width of the device stop role. 0 when absent.
+    pub sampler_max_stop: usize,
+    /// The dedup expert roles (`dev_b{B}_experts_dedup_el{el}_ns{ns}`)
+    /// are present; otherwise batched decode always gathers per row.
+    pub dedup_artifacts: bool,
 }
 
 impl Manifest {
@@ -66,6 +78,10 @@ impl Manifest {
             },
             device_artifacts: doc.int_or("device_artifacts", 0) != 0,
             max_batch: doc.int_or("max_batch", 0).max(0) as usize,
+            sampler_artifacts: doc.int_or("sampler_artifacts", 0) != 0,
+            sampler_max_top_k: doc.int_or("sampler_max_top_k", 0).max(0) as usize,
+            sampler_max_stop: doc.int_or("sampler_max_stop", 0).max(0) as usize,
+            dedup_artifacts: doc.int_or("dedup_artifacts", 0) != 0,
         };
         m.validate()?;
         Ok(m)
@@ -169,6 +185,28 @@ fast_num_slots = 4
         assert_eq!(Manifest::parse(&with).unwrap().batch_buckets(), vec![2, 4, 8]);
         let with = format!("{SAMPLE}max_batch = 4\n");
         assert_eq!(Manifest::parse(&with).unwrap().batch_buckets(), vec![2, 4]);
+    }
+
+    #[test]
+    fn sampler_artifacts_default_off() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(!m.sampler_artifacts);
+        assert_eq!(m.sampler_max_top_k, 0);
+        assert_eq!(m.sampler_max_stop, 0);
+        let with = format!(
+            "{SAMPLE}sampler_artifacts = 1\nsampler_max_top_k = 64\nsampler_max_stop = 8\n"
+        );
+        let m = Manifest::parse(&with).unwrap();
+        assert!(m.sampler_artifacts);
+        assert_eq!(m.sampler_max_top_k, 64);
+        assert_eq!(m.sampler_max_stop, 8);
+    }
+
+    #[test]
+    fn dedup_artifacts_default_off() {
+        assert!(!Manifest::parse(SAMPLE).unwrap().dedup_artifacts);
+        let with = format!("{SAMPLE}dedup_artifacts = 1\n");
+        assert!(Manifest::parse(&with).unwrap().dedup_artifacts);
     }
 
     #[test]

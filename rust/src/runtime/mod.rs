@@ -24,7 +24,7 @@ pub mod manifest;
 pub mod nano;
 
 pub use batch::BatchedRun;
-pub use device::DeviceState;
+pub use device::{DeviceSample, DeviceState};
 pub use manifest::Manifest;
 pub use nano::{AttnRouterOut, NanoRuntime, NodeExperts};
 

@@ -128,6 +128,11 @@ pub(crate) struct BatchedExes {
     /// Batched experts keyed (residents, slots):
     /// [el8_fast, el8_full, el16_fast, el16_full].
     pub(crate) experts: [xla::PjRtLoadedExecutable; 4],
+    /// Dedup variant of the batched experts (same keying); present when
+    /// the manifest advertises `dedup_artifacts`. Each DISTINCT expert
+    /// runs once over the whole [B, D] batch instead of gathering its
+    /// weights once per (row, slot) — see `dedup_plan`.
+    pub(crate) experts_dedup: Option<[xla::PjRtLoadedExecutable; 4]>,
     /// Device-resident row-index scalars 0..bucket for the per-slot
     /// cache appends — compile-time constants per bucket, uploaded once
     /// here instead of every iteration (and deliberately outside the
@@ -166,6 +171,18 @@ impl BatchedExes {
                 compile_artifact(client, dir, &experts(16, m.fast_num_slots))?,
                 compile_artifact(client, dir, &experts(16, m.num_slots))?,
             ],
+            experts_dedup: if m.dedup_artifacts {
+                let dedup =
+                    |el: usize, ns: usize| format!("dev_b{bucket}_experts_dedup_el{el}_ns{ns}");
+                Some([
+                    compile_artifact(client, dir, &dedup(8, m.fast_num_slots))?,
+                    compile_artifact(client, dir, &dedup(8, m.num_slots))?,
+                    compile_artifact(client, dir, &dedup(16, m.fast_num_slots))?,
+                    compile_artifact(client, dir, &dedup(16, m.num_slots))?,
+                ])
+            } else {
+                None
+            },
             row_bufs,
         })
     }
@@ -189,6 +206,85 @@ impl BatchedExes {
             ),
         }
     }
+
+    /// The dedup experts executable for (el, ns), when the artifacts
+    /// carry the dedup family (`None` otherwise, or for an unknown key —
+    /// the caller then falls back to the gathered path).
+    pub(crate) fn dedup_exe(
+        &self,
+        el: usize,
+        ns: usize,
+        m: &Manifest,
+    ) -> Option<&xla::PjRtLoadedExecutable> {
+        let set = self.experts_dedup.as_ref()?;
+        match (el, ns) {
+            (8, n) if n == m.fast_num_slots => Some(&set[0]),
+            (8, n) if n == m.num_slots => Some(&set[1]),
+            (16, n) if n == m.fast_num_slots => Some(&set[2]),
+            (16, n) if n == m.num_slots => Some(&set[3]),
+            _ => None,
+        }
+    }
+}
+
+/// The untupled on-device sampler executables of one batch width
+/// (`dev_sample_*` at B = 1, `dev_b{B}_sample_*` for the buckets;
+/// `aot.py::lower_sampler_artifacts`). Chained off the lm_head logits
+/// buffer they collapse the per-iteration download from the `[B, V]`
+/// f32 logits to `[B, 2]` packed (token id, full-softmax logprob) plus
+/// an optional `[B]` stop mask.
+pub(crate) struct SamplerExes {
+    pub(crate) greedy: xla::PjRtLoadedExecutable,
+    pub(crate) topk: xla::PjRtLoadedExecutable,
+    pub(crate) stop: xla::PjRtLoadedExecutable,
+}
+
+impl SamplerExes {
+    fn compile(client: &xla::PjRtClient, dir: &Path, width: usize) -> Result<SamplerExes> {
+        let prefix =
+            if width == 1 { "dev_sample_".to_string() } else { format!("dev_b{width}_sample_") };
+        Ok(SamplerExes {
+            greedy: compile_artifact(client, dir, &format!("{prefix}greedy"))?,
+            topk: compile_artifact(client, dir, &format!("{prefix}topk"))?,
+            stop: compile_artifact(client, dir, &format!("{prefix}stop"))?,
+        })
+    }
+}
+
+/// Plan a dedup expert dispatch: the distinct local ids among the
+/// nonzero-weight slots (padded with id 0 up to `ns`) and the
+/// per-(row, slot) selection map into them. `None` when more than `ns`
+/// distinct experts are referenced — the caller then gathers per row.
+/// Zero-weight slots map to entry 0; their product is 0 either way.
+pub(crate) fn dedup_plan(
+    rows: usize,
+    ns: usize,
+    slot_idx: &[i32],
+    slot_w: &[f32],
+) -> Option<(Vec<i32>, Vec<i32>)> {
+    debug_assert_eq!(slot_idx.len(), rows * ns);
+    let mut ids: Vec<i32> = Vec::with_capacity(ns);
+    for (i, &w) in slot_w.iter().enumerate() {
+        if w != 0.0 && !ids.contains(&slot_idx[i]) {
+            if ids.len() == ns {
+                return None;
+            }
+            ids.push(slot_idx[i]);
+        }
+    }
+    let sel = slot_idx
+        .iter()
+        .zip(slot_w)
+        .map(|(&id, &w)| {
+            if w != 0.0 {
+                ids.iter().position(|&e| e == id).expect("id collected above") as i32
+            } else {
+                0
+            }
+        })
+        .collect();
+    ids.resize(ns, 0);
+    Some((ids, sel))
 }
 
 /// Compiled executables + weights for the nano model.
@@ -214,6 +310,11 @@ pub struct NanoRuntime {
     /// (a serve run at concurrency 2 never pays for the B=8 set).
     /// Indexed log2(bucket) - 1: buckets 2/4/8/16 → slots 0..4.
     batched_exes: [OnceCell<BatchedExes>; 4],
+    /// On-device sampler role sets, compiled lazily per batch width.
+    /// Slot 0 = width 1 (`dev_sample_*`), then log2(bucket): widths
+    /// 2/4/8/16 → slots 1..5. Pre-sampler artifact dirs never populate
+    /// them (gated on `manifest.sampler_artifacts`).
+    sampler_exes: [OnceCell<SamplerExes>; 5],
     /// Where the artifacts were loaded from (for lazy compilation).
     artifact_dir: PathBuf,
     /// Host↔device transfer meter (single-threaded per node — PJRT
@@ -302,6 +403,7 @@ impl NanoRuntime {
             dense_exe,
             device_exes: OnceCell::new(),
             batched_exes: Default::default(),
+            sampler_exes: Default::default(),
             artifact_dir: dir.to_path_buf(),
             transfers: Cell::new(TransferStats::default()),
             host_weights,
@@ -371,6 +473,40 @@ impl NanoRuntime {
             let _ = self.batched_exes[idx].set(exes);
         }
         Ok(self.batched_exes[idx].get().expect("just populated"))
+    }
+
+    /// The on-device sampler roles are available (token ids, not
+    /// logits, cross the host boundary). Cheap: consults the manifest.
+    pub fn has_sampler_path(&self) -> bool {
+        self.manifest.device_artifacts && self.manifest.sampler_artifacts
+    }
+
+    /// The sampler executables for batch width `width` (1 for the
+    /// serial decode path, else a batched bucket), compiled on first
+    /// use.
+    pub(crate) fn sampler(&self, width: usize) -> Result<&SamplerExes> {
+        if !self.has_sampler_path() {
+            bail!("artifacts lack the dev_sample_* set — re-run `make artifacts`");
+        }
+        let idx = match width {
+            1 => 0,
+            2 => 1,
+            4 => 2,
+            8 => 3,
+            16 => 4,
+            other => bail!("no sampler artifact family for batch width {other}"),
+        };
+        if width > 1 && width > self.manifest.max_batch {
+            bail!(
+                "sampler width {width} exceeds the artifacts' max_batch {}",
+                self.manifest.max_batch
+            );
+        }
+        if self.sampler_exes[idx].get().is_none() {
+            let exes = SamplerExes::compile(&self.client, &self.artifact_dir, width)?;
+            let _ = self.sampler_exes[idx].set(exes);
+        }
+        Ok(self.sampler_exes[idx].get().expect("just populated"))
     }
 
     pub(crate) fn attn_weights(&self, layer: usize) -> &[xla::PjRtBuffer; 5] {
@@ -681,6 +817,13 @@ impl NanoRuntime {
         if slot_w.len() != ns {
             bail!("local_ids/slot_w length mismatch");
         }
+        // All-padding slots (none of this node's residents selected):
+        // the artifact would sum ns exactly-zero terms, so skip the
+        // dispatch and return the zeros directly. This is where batched
+        // expert dedup shows up in `TransferStats::exec_calls`.
+        if slot_w.iter().all(|&w| w == 0.0) {
+            return Ok(vec![0.0; m.d_embed]);
+        }
         let exe = if ns == m.fast_num_slots {
             &self.experts_direct_exes[0]
         } else if ns == m.num_slots {
@@ -729,12 +872,31 @@ impl NanoRuntime {
             bail!("slot_idx/slot_w shape mismatch");
         }
         let ns = slot_idx.len() / rows;
+        // No row routes to this node this iteration: every term of the
+        // artifact's sum is exactly zero, so skip the dispatch (the
+        // saved exec shows in `TransferStats::exec_calls`).
+        if slot_w.iter().all(|&w| w == 0.0) {
+            return Ok(vec![0.0; rows * m.d_embed]);
+        }
         let exes = self.batched(rows)?;
-        let exe = exes.experts_exe(node.resident.len(), ns, m)?;
         let le = &node.layers[layer];
         let xb = self.buf_f32(moe_in, &[rows, m.d_embed])?;
-        let ib = self.buf_i32(slot_idx, &[rows, ns])?;
         let wb = self.buf_f32(slot_w, &[rows, ns])?;
+        // Dedup when the bucket references at most ns distinct experts:
+        // each distinct expert's weights are sliced once for the whole
+        // batch instead of gathered once per (row, slot).
+        if let Some((ids, sel)) = dedup_plan(rows, ns, slot_idx, slot_w)
+            .filter(|_| self.manifest.dedup_artifacts)
+        {
+            if let Some(exe) = exes.dedup_exe(node.resident.len(), ns, m) {
+                let eb = self.buf_i32(&ids, &[ns])?;
+                let sb = self.buf_i32(&sel, &[rows, ns])?;
+                let out = self.run_dev(exe, &[&le.w1, &le.v1, &le.w2, &xb, &eb, &sb, &wb])?;
+                return self.download_f32(&out);
+            }
+        }
+        let exe = exes.experts_exe(node.resident.len(), ns, m)?;
+        let ib = self.buf_i32(slot_idx, &[rows, ns])?;
         let out = self.run_dev(exe, &[&le.w1, &le.v1, &le.w2, &xb, &ib, &wb])?;
         self.download_f32(&out)
     }

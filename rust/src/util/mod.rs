@@ -9,6 +9,7 @@ pub mod logging;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod threefry;
 pub mod wire;
 
 pub use fmt::{format_bytes, format_duration_ns};

@@ -13,7 +13,7 @@ use apple_moe::cluster::live::{LiveCluster, LiveConfig};
 use apple_moe::config::{Balancing, Topology};
 use apple_moe::engine::request::RequestResult;
 use apple_moe::engine::scheduler::SchedPolicy;
-use apple_moe::engine::{DenseEngine, FinishReason, Request, TokenEvent};
+use apple_moe::engine::{DenseEngine, FinishReason, Request, Sampler, TokenEvent};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -628,4 +628,148 @@ fn dropping_cluster_joins_threads_and_fails_inflight() {
     // The in-flight request ends in a terminal failure (or a closed
     // stream), never a hang.
     assert!(handle.join().is_err(), "abandoned request should fail");
+}
+
+/// Like [`drain`], but also collect the per-token logprobs (the device
+/// sampler returns them from the on-device full-softmax; host and
+/// device values must agree to f32 accumulation error).
+fn drain_lp(handle: &apple_moe::engine::RequestHandle) -> (Vec<u32>, Vec<f32>, RequestResult) {
+    let mut streamed = Vec::new();
+    let mut lps = Vec::new();
+    loop {
+        match handle.next_event().expect("stream ended without terminal event") {
+            TokenEvent::Started { .. } => {}
+            TokenEvent::Token { id, logprob } => {
+                streamed.push(id);
+                lps.push(logprob.expect("live engines report logprobs"));
+            }
+            TokenEvent::Done { result } => return (streamed, lps, result),
+            TokenEvent::Failed { error, .. } => panic!("request failed: {error}"),
+        }
+    }
+}
+
+/// The PR 6 tentpole acceptance: the on-device sampler generates
+/// tokens IDENTICAL to the host reference sampler — across both
+/// topologies, serial and batched serving (B ∈ {1, 2, 4}), greedy and
+/// seeded top-k streams, and stop-token requests (finish-reason
+/// parity) — with logprobs agreeing to f32 accumulation error.
+#[test]
+fn device_sampler_matches_host_sampler_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = apple_moe::runtime::Manifest::load(&dir).unwrap();
+    if !manifest.sampler_artifacts || !batched_artifacts(&dir, 4) {
+        eprintln!("skipping: artifacts predate the dev_sample_* set");
+        return;
+    }
+
+    // Mixed request set: greedy, two distinct top-k streams, and a
+    // greedy request with a REAL stop token (derived from the dense
+    // stream, first occurrence) so `FinishReason::Stop` parity is
+    // exercised on the device stop role, not just the length path.
+    let greedy = Request::new(90, vec![3, 141, 59, 26], 8);
+    let want = dense_tokens(&dir, &greedy);
+    let j = (0..want.len())
+        .rev()
+        .find(|&j| !want[..j].contains(&want[j]))
+        .unwrap();
+    let mut topk_a = Request::new(91, vec![10, 20, 30], 8);
+    topk_a.sampling.sampler = Sampler::TopK { k: 8, temperature: 0.9 };
+    topk_a.sampling.seed = 0xBEEF_CAFE;
+    let mut topk_b = Request::new(92, vec![100, 200], 8);
+    topk_b.sampling.sampler = Sampler::TopK { k: 3, temperature: 1.3 };
+    topk_b.sampling.seed = 7;
+    let mut stopped = Request::new(93, vec![3, 141, 59, 26], 8);
+    stopped.sampling.stop = vec![want[j]];
+    let reqs = [greedy, topk_a, topk_b, stopped];
+
+    for topology in [Topology::Decentralized, Topology::Centralized] {
+        for concurrency in [1usize, 2, 4] {
+            let run = |host_sampler: bool| -> Vec<(Vec<u32>, Vec<f32>, RequestResult)> {
+                let mut cfg = LiveConfig::new(dir.clone(), 2);
+                cfg.topology = topology;
+                if topology == Topology::Centralized {
+                    cfg.balancing = Balancing::SelectedOnly;
+                }
+                cfg.max_active = concurrency;
+                cfg.host_sampler = host_sampler;
+                let cluster = LiveCluster::start(cfg).unwrap();
+                let handles: Vec<_> =
+                    reqs.iter().map(|r| cluster.submit(r.clone()).unwrap()).collect();
+                let out = handles.iter().map(drain_lp).collect();
+                cluster.shutdown();
+                out
+            };
+            let host = run(true);
+            let dev = run(false);
+            for ((ht, hl, hr), (dt, dl, dr)) in host.iter().zip(&dev) {
+                assert_eq!(
+                    dt, ht,
+                    "device sampler tokens diverge from host reference \
+                     ({topology:?}, c{concurrency}, req {})",
+                    hr.id
+                );
+                assert_eq!(
+                    dr.finish, hr.finish,
+                    "finish reason diverges ({topology:?}, c{concurrency}, req {})",
+                    hr.id
+                );
+                // Host logprobs accumulate in f64, device in f32.
+                for (i, (a, b)) in dl.iter().zip(hl).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-3,
+                        "logprob diverges ({topology:?}, c{concurrency}, req {}, tok {i}): \
+                         {a} vs {b}",
+                        hr.id
+                    );
+                }
+            }
+            // The stop request actually stopped — on BOTH samplers.
+            assert_eq!(dev[3].2.finish, FinishReason::Stop);
+            assert_eq!(dev[3].0, want[..=j].to_vec());
+        }
+    }
+}
+
+/// The headline perf claim, metered end to end: on a single-node
+/// cluster (whose decode d2h is exactly router top-k + logits — no
+/// multi-node partial downloads diluting the ratio) sampling on device
+/// cuts decode d2h bytes/token by >= 10x vs the `[1, V]` logits
+/// download of the host-sampler path, with identical tokens.
+#[test]
+fn device_sampler_collapses_decode_d2h() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = apple_moe::runtime::Manifest::load(&dir).unwrap();
+    if !manifest.device_artifacts || !manifest.sampler_artifacts {
+        eprintln!("skipping: artifacts predate the dev_sample_* set");
+        return;
+    }
+    let logits_bytes = 4.0 * manifest.vocab as f64;
+
+    let run = |host_sampler: bool| {
+        let mut cfg = LiveConfig::new(dir.clone(), 1);
+        cfg.host_sampler = host_sampler;
+        let cluster = LiveCluster::start(cfg).unwrap();
+        let res = serve_one(&cluster, &Request::new(95, vec![3, 141, 59, 26], 12));
+        cluster.shutdown();
+        res
+    };
+    let host = run(true);
+    let dev = run(false);
+    assert_eq!(dev.generated, host.generated, "sampler paths diverged");
+
+    let host_bpt = host.metrics.decode.d2h_bytes_per_token();
+    let dev_bpt = dev.metrics.decode.d2h_bytes_per_token();
+    assert!(
+        host_bpt > logits_bytes,
+        "host path must download the [1, V] logits every token: {host_bpt} B/token"
+    );
+    assert!(
+        dev_bpt < logits_bytes / 8.0,
+        "device path still downloading logits-scale data: {dev_bpt} B/token"
+    );
+    assert!(
+        dev_bpt < host_bpt / 10.0,
+        "d2h not collapsed >=10x: {dev_bpt} vs {host_bpt} B/token"
+    );
 }

@@ -8,6 +8,8 @@ use std::path::{Path, PathBuf};
 
 use apple_moe::runtime::{DeviceState, HostTensor, NanoRuntime};
 
+use apple_moe::engine::{Sampler, SamplingParams};
+
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.txt").exists() {
@@ -274,4 +276,177 @@ fn padding_slots_change_nothing() {
     }
     let b = rt.node_experts(&node, 0, &ar.moe_in, &idx2, &w).unwrap();
     assert_eq!(a, b);
+}
+
+/// Zero-weight dispatch skip (batched-dedup rider): an expert call
+/// where NO slot carries weight must return exact zeros WITHOUT
+/// dispatching an executable — the saved dispatches are visible in
+/// `TransferStats::exec_calls`.
+#[test]
+fn zero_weight_dispatches_are_skipped() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = NanoRuntime::load(&dir, false).unwrap();
+    let m = rt.manifest.clone();
+    if m.max_batch < 2 {
+        eprintln!("skipping: artifacts predate the dev_b* batched set");
+        return;
+    }
+    let node = rt.build_node_experts(&(0..8).collect::<Vec<_>>()).unwrap();
+    let ns = m.fast_num_slots;
+
+    // Batched: no row routes to this node this iteration.
+    let rows = 2;
+    let moe_in = vec![0.1f32; rows * m.d_embed];
+    rt.take_transfer_stats();
+    let out = rt
+        .node_experts_batched(&node, 0, rows, &moe_in, &vec![0i32; rows * ns], &vec![
+            0f32;
+            rows * ns
+        ])
+        .unwrap();
+    let ts = rt.take_transfer_stats();
+    assert!(out.iter().all(|&x| x == 0.0), "skip must return exact zeros");
+    assert_eq!(ts.exec_calls, 0, "all-zero-weight batched dispatch not skipped");
+
+    // One live slot: exactly ONE shared dispatch for the whole bucket.
+    let mut w = vec![0f32; rows * ns];
+    w[0] = 1.0;
+    rt.node_experts_batched(&node, 0, rows, &moe_in, &vec![0i32; rows * ns], &w).unwrap();
+    let ts = rt.take_transfer_stats();
+    assert_eq!(ts.exec_calls, 1);
+
+    // Serial direct path skips too.
+    rt.take_transfer_stats();
+    let out = rt
+        .node_experts_direct(&node, 0, &moe_in[..m.d_embed], &vec![0usize; ns], &vec![0f32; ns])
+        .unwrap();
+    let ts = rt.take_transfer_stats();
+    assert!(out.iter().all(|&x| x == 0.0));
+    assert_eq!(ts.exec_calls, 0, "all-zero-weight direct dispatch not skipped");
+}
+
+/// Per-row expert dedup (batched decode): rows routing to the SAME
+/// experts must produce partials numerically equivalent to the per-row
+/// gathered/serial formulation (the dedup artifact slices each distinct
+/// expert's weights once for the whole batch; only matmul reassociation
+/// may differ, ~1 ulp — the live batched-vs-serial token-identity tests
+/// in integration_cluster.rs pin it end to end).
+#[test]
+fn batched_dedup_matches_per_row_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = NanoRuntime::load(&dir, false).unwrap();
+    let m = rt.manifest.clone();
+    if m.max_batch < 2 || !m.dedup_artifacts {
+        eprintln!("skipping: artifacts predate the dedup set");
+        return;
+    }
+    let node = rt.build_node_experts(&(0..8).collect::<Vec<_>>()).unwrap();
+    let ns = m.fast_num_slots;
+    let rows = 2;
+    let mut moe_in = rt.embed(5).unwrap();
+    moe_in.extend(rt.embed(17).unwrap());
+
+    // Both rows reference the same 3 distinct experts (the dedup win
+    // case; <= ns distinct, so the dedup executable takes the dispatch).
+    let slot_idx: Vec<i32> = vec![1, 4, 6, 1, 4, 6, 1, 2];
+    let slot_w: Vec<f32> = vec![0.4, 0.3, 0.3, 0.0, 0.5, 0.25, 0.25, 0.0];
+    assert_eq!(slot_idx.len(), rows * ns);
+    rt.take_transfer_stats();
+    let got = rt.node_experts_batched(&node, 0, rows, &moe_in, &slot_idx, &slot_w).unwrap();
+    let ts = rt.take_transfer_stats();
+    assert_eq!(ts.exec_calls, 1, "dedup still costs exactly one shared dispatch");
+    assert_eq!(got.len(), rows * m.d_embed);
+    for r in 0..rows {
+        let want = rt
+            .node_experts_fast(
+                &node,
+                0,
+                &moe_in[r * m.d_embed..(r + 1) * m.d_embed],
+                &slot_idx[r * ns..(r + 1) * ns],
+                &slot_w[r * ns..(r + 1) * ns],
+            )
+            .unwrap();
+        assert!(
+            allclose(&got[r * m.d_embed..(r + 1) * m.d_embed], &want, 1e-4),
+            "dedup row {r} diverges from the per-row reference"
+        );
+    }
+}
+
+/// The PR 6 tentpole at the runtime layer: the on-device sampler roles
+/// reproduce the host reference sampler token-for-token on real decode
+/// logits — greedy and seeded top-k — while downloading 8 bytes per
+/// draw instead of the `[1, V]` logits, and the stop role's on-device
+/// membership compare matches the host's.
+#[test]
+fn serial_device_sampler_matches_host_reference_and_collapses_d2h() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = NanoRuntime::load(&dir, false).unwrap();
+    if !rt.has_device_path() || !rt.has_sampler_path() {
+        eprintln!("skipping: artifacts predate the dev_sample_* set");
+        return;
+    }
+    let m = rt.manifest.clone();
+    let node = rt.build_node_experts(&(0..16).collect::<Vec<_>>()).unwrap();
+    let mut st = DeviceState::new(&rt).unwrap();
+
+    let greedy = SamplingParams::greedy(8);
+    let mut topk = SamplingParams::greedy(8);
+    topk.sampler = Sampler::TopK { k: 8, temperature: 0.9 };
+    topk.seed = 0xBEEF_CAFE;
+
+    let mut tok = 3u32;
+    for pos in 0..6 {
+        st.begin_token(&rt, tok).unwrap();
+        for l in 0..m.n_layers {
+            let (top_w, top_i) = st.attn_router(&rt, l, pos).unwrap();
+            let ids: Vec<usize> =
+                top_i.iter().map(|&e| node.local_index(e).unwrap()).collect();
+            let partial = st.node_experts(&rt, &node, l, &ids, &top_w).unwrap();
+            st.finish_layer_device(&rt, &partial).unwrap();
+        }
+        // Reference: download the [1, V] logits, sample on the host at
+        // draw counter pos + 1 (the sampled token's own position).
+        rt.take_transfer_stats();
+        let logits = st.logits(&rt).unwrap();
+        let ts = rt.take_transfer_stats();
+        assert_eq!(ts.d2h_bytes, 4 * m.vocab as u64, "logits download meter");
+        let ctr = (pos + 1) as u32;
+        let (want_g, want_glp) = greedy.sampler.sample_lp_at(&logits, greedy.seed, ctr);
+        let (want_t, want_tlp) = topk.sampler.sample_lp_at(&logits, topk.seed, ctr);
+
+        // Device: 8 bytes of packed (token, logprob) cross instead.
+        rt.take_transfer_stats();
+        let got_g =
+            st.sample_on_device(&rt, &greedy.device_inputs(m.sampler_max_stop), pos).unwrap();
+        let ts = rt.take_transfer_stats();
+        assert_eq!(ts.d2h_bytes, 8, "greedy device sample must download 8 bytes");
+        let got_t =
+            st.sample_on_device(&rt, &topk.device_inputs(m.sampler_max_stop), pos).unwrap();
+
+        assert_eq!(got_g.token, want_g, "greedy token diverges at pos {pos}");
+        assert_eq!(got_t.token, want_t, "top-k token diverges at pos {pos}");
+        // Host logprob accumulates in f64, device in f32: close, not bitwise.
+        assert!((got_g.logprob - want_glp).abs() < 1e-3, "greedy logprob at pos {pos}");
+        assert!((got_t.logprob - want_tlp).abs() < 1e-3, "top-k logprob at pos {pos}");
+        assert!(!got_g.stop_hit && !got_t.stop_hit, "no stop set -> no stop hit");
+
+        // Stop role: membership computed on device (+4 bytes of mask),
+        // hit exactly when the sampled token is in the stop set.
+        let mut with_stop = greedy.clone();
+        with_stop.stop = vec![want_g];
+        rt.take_transfer_stats();
+        let hit =
+            st.sample_on_device(&rt, &with_stop.device_inputs(m.sampler_max_stop), pos).unwrap();
+        let ts = rt.take_transfer_stats();
+        assert_eq!(ts.d2h_bytes, 12, "packed + stop mask download meter");
+        assert!(hit.stop_hit && hit.token == want_g);
+        let mut without = greedy.clone();
+        without.stop = vec![want_g ^ 1];
+        let miss =
+            st.sample_on_device(&rt, &without.device_inputs(m.sampler_max_stop), pos).unwrap();
+        assert!(!miss.stop_hit);
+
+        tok = got_g.token;
+    }
 }
