@@ -28,7 +28,8 @@ pub fn run(args: &mut Args) -> Result<()> {
         .get("connect")
         .ok_or_else(|| anyhow::anyhow!("--connect host:port is required (the daemon's --client-port)"))?;
     let shutdown = args.flag("shutdown");
-    let n_requests = args.usize_or("requests", if shutdown { 0 } else { 1 })?;
+    let stats = args.flag("stats");
+    let n_requests = args.usize_or("requests", if shutdown || stats { 0 } else { 1 })?;
     let prompt = args.get("prompt");
     let prompt_tokens = args.usize_or("prompt-tokens", 16)?;
     let gen_tokens = args.usize_or("gen-tokens", 32)?;
@@ -88,6 +89,16 @@ pub fn run(args: &mut Args) -> Result<()> {
     let idle_limit = Duration::from_secs(idle_secs.max(1));
     let drained = drain_handles(&handles, stream, json, idle_limit);
     let wall = t_all.elapsed().as_secs_f64();
+
+    // Live counters, pulled AFTER the requests drain (so a combined
+    // `--requests N --stats` run reports the traffic it just caused)
+    // and BEFORE any shutdown.
+    if stats {
+        let snap = engine
+            .server_stats(Duration::from_secs(10))
+            .context("pulling daemon stats")?;
+        print_stats(&snap);
+    }
 
     // An asked-for shutdown is sent even when a request failed: the
     // user's intent was "drain, then stop the cluster", and leaving the
@@ -150,4 +161,38 @@ pub fn run(args: &mut Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Render a live [`StatsSnapshot`] (`--stats`): gateway totals,
+/// scheduler occupancy, per-peer mesh traffic, decode tails.
+fn print_stats(s: &crate::network::proto::StatsSnapshot) {
+    println!(
+        "gateway: {} connection(s), {} remote request(s); scheduler: {} active, {} queued",
+        s.connections, s.requests, s.active, s.queued
+    );
+    println!(
+        "gateway link: sent {} msgs / {} B, recv {} msgs / {} B",
+        s.gateway_link.sent_msgs,
+        s.gateway_link.sent_bytes,
+        s.gateway_link.recv_msgs,
+        s.gateway_link.recv_bytes
+    );
+    for (peer, l) in s.mesh_links.iter().enumerate() {
+        if l.msgs() == 0 {
+            continue;
+        }
+        println!(
+            "mesh link node {peer}: sent {} msgs / {} B, recv {} msgs / {} B",
+            l.sent_msgs, l.sent_bytes, l.recv_msgs, l.recv_bytes
+        );
+    }
+    if s.decode.tokens > 0 {
+        let (p50, p90, p99) = s.decode.token_latency_quantiles_s();
+        println!(
+            "decode ({} tokens): token latency p50 {p50:.4} s / p90 {p90:.4} s / p99 {p99:.4} s",
+            s.decode.tokens
+        );
+        let (c50, c90, c99) = s.decode.comm_quantiles_s();
+        println!("comm wait: p50 {c50:.4} s / p90 {c90:.4} s / p99 {c99:.4} s");
+    }
 }

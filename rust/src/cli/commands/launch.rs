@@ -31,6 +31,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     let recv_timeout_flag = args.get("recv-timeout-secs");
     let host_path = args.flag("host-path");
     let host_sampler = args.flag("host-sampler");
+    let trace_out = args.get("trace-out");
     let out = args.get("out");
     let artifacts = args.str_or("artifacts", "artifacts");
     args.finish()?;
@@ -101,6 +102,12 @@ pub fn run(args: &mut Args) -> Result<()> {
         }
         if host_sampler {
             cmd.arg("--host-sampler");
+        }
+        // Forwarded to EVERY node: followers use the flag as the trace
+        // enable bit and ship their spans to node 0 at shutdown; only
+        // node 0 writes the merged Chrome-trace file.
+        if let Some(t) = &trace_out {
+            cmd.arg("--trace-out").arg(t);
         }
         if id == 0 {
             if let Some(out) = &out {

@@ -61,6 +61,9 @@ pub fn run(args: &mut Args) -> Result<()> {
     let sampling = parse_sampling(args, gen_tokens)?;
     let host_path = args.flag("host-path");
     let host_sampler = args.flag("host-sampler");
+    // Every node takes --trace-out: followers use it as the enable bit
+    // (their spans ship to node 0 at shutdown); node 0 writes the file.
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
     let out = args.get("out");
     let dir = artifacts_dir(args);
     args.finish()?;
@@ -86,6 +89,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     cfg.recv_timeout = hosts.recv_timeout;
     cfg.max_active = concurrency;
     cfg.policy = policy;
+    cfg.trace = trace_out;
 
     eprintln!(
         "node {id}: listening on {}, joining {}-node cluster...",

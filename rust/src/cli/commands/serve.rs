@@ -19,6 +19,7 @@ use crate::cli::commands::{
 };
 use crate::cluster::live::{LiveCluster, LiveConfig, TransportKind};
 use crate::engine::request::{Request, RequestResult};
+use crate::metrics::PhaseMetrics;
 use crate::util::fmt::render_table;
 use crate::util::stats::Summary;
 
@@ -41,6 +42,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     let host_sampler = args.flag("host-sampler");
     let stream = args.flag("stream");
     let json = args.flag("json");
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
     let sampling = parse_sampling(args, gen_tokens)?;
     let dir = artifacts_dir(args);
     args.finish()?;
@@ -56,6 +58,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     cfg.max_active = concurrency;
     cfg.policy = policy;
     cfg.transport = transport;
+    cfg.trace = trace_out;
 
     eprintln!(
         "starting {nodes}-node live cluster ({} transport, concurrency {concurrency})...",
@@ -170,13 +173,52 @@ pub(crate) fn json_report(
         let d = &r.metrics.decode;
         (s + d.mean_batch_occupancy() * d.tokens as f64, n + d.tokens)
     });
+    // Aggregate tails: ONE merged decode phase across requests (the
+    // tail histograms merge exactly), exact across-request TTFT /
+    // queueing percentiles, and total mesh wire traffic — so the
+    // BENCH_*.json trajectory tracks p99s and bytes-on-the-wire, not
+    // just means.
+    let mut agg = PhaseMetrics::default();
+    let mut ttfts: Vec<f64> = Vec::with_capacity(results.len());
+    let mut queues: Vec<f64> = Vec::with_capacity(results.len());
+    let (mut net_msgs, mut net_bytes) = (0u64, 0u64);
+    for r in results {
+        agg.merge(&r.metrics.decode);
+        ttfts.push(r.metrics.ttft_s());
+        queues.push(r.metrics.queueing_s());
+        net_msgs += r.metrics.prefill.net_msgs + r.metrics.decode.net_msgs;
+        net_bytes += r.metrics.prefill.net_bytes + r.metrics.decode.net_bytes;
+    }
+    ttfts.sort_by(f64::total_cmp);
+    queues.sort_by(f64::total_cmp);
     s.push_str(&format!(
         "],\"nodes\":{nodes},\"concurrency\":{concurrency},\"wall_s\":{wall_s:.6},\
-         \"aggregate_tps\":{:.3},\"mean_occupancy\":{:.3}}}",
+         \"aggregate_tps\":{:.3},\"net_msgs_total\":{net_msgs},\
+         \"net_bytes_total\":{net_bytes},\"token_latency_s\":{},\"comm_s\":{},\
+         \"d2h_s\":{},\"ttft_s\":{},\"queueing_s\":{},\"mean_occupancy\":{:.3}}}",
         if wall_s > 0.0 { total as f64 / wall_s } else { 0.0 },
+        quantile_json(agg.token_latency_quantiles_s()),
+        quantile_json(agg.comm_quantiles_s()),
+        quantile_json(agg.d2h_quantiles_s()),
+        quantile_json((pct(&ttfts, 0.5), pct(&ttfts, 0.9), pct(&ttfts, 0.99))),
+        quantile_json((pct(&queues, 0.5), pct(&queues, 0.9), pct(&queues, 0.99))),
         if occ_tokens > 0 { occ_sum / occ_tokens as f64 } else { 1.0 },
     ));
     s
+}
+
+/// `{"p50":…,"p90":…,"p99":…}` for a quantile triple in seconds.
+fn quantile_json((p50, p90, p99): (f64, f64, f64)) -> String {
+    format!("{{\"p50\":{p50:.6},\"p90\":{p90:.6},\"p99\":{p99:.6}}}")
+}
+
+/// Exact percentile of a sorted sample (nearest-rank; 0.0 when empty).
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
 }
 
 #[cfg(test)]
@@ -215,9 +257,52 @@ mod tests {
             "\"nodes\":2",
             "\"concurrency\":2",
             "\"aggregate_tps\":2.000",
+            "\"net_msgs_total\":",
+            "\"net_bytes_total\":",
+            "\"token_latency_s\":{\"p50\":",
+            "\"comm_s\":{\"p50\":",
+            "\"d2h_s\":{\"p50\":",
+            "\"ttft_s\":{\"p50\":0.100000,\"p90\":0.100000,\"p99\":0.100000}",
+            "\"queueing_s\":{\"p50\":0.005000",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
+    }
+
+    #[test]
+    fn json_report_tail_quantiles_see_the_straggler() {
+        // 100 decode tokens, 10 of them 100× slower: the aggregate p50
+        // stays fast while p99 reports the straggler tail — the whole
+        // point of shipping histograms instead of means.
+        use crate::metrics::TokenBreakdown;
+        let mut m = RunMetrics::default();
+        for i in 0..100u64 {
+            let slow = i % 10 == 9;
+            m.decode.push(TokenBreakdown {
+                misc_ns: if slow { 200_000_000 } else { 2_000_000 },
+                ..Default::default()
+            });
+        }
+        let r = RequestResult {
+            id: 0,
+            generated: vec![1; 100],
+            finish: FinishReason::Length,
+            metrics: m,
+        };
+        let j = json_report(&[r], 1.0, 1, 1);
+        let grab = |key: &str| -> (f64, f64, f64) {
+            let at = j.find(key).unwrap_or_else(|| panic!("missing {key} in {j}"));
+            let obj = &j[at + key.len()..];
+            let end = obj.find('}').unwrap();
+            let mut vals = obj[..end].split(',').map(|kv| {
+                kv.split(':').nth(1).unwrap().parse::<f64>().unwrap()
+            });
+            (vals.next().unwrap(), vals.next().unwrap(), vals.next().unwrap())
+        };
+        let (p50, p90, p99) = grab("\"token_latency_s\":{");
+        assert!(p50 < 0.01, "p50 {p50} should sit with the fast tokens");
+        assert!(p99 > 0.1, "p99 {p99} should see the straggler");
+        assert!(p50 <= p90 && p90 <= p99);
     }
 
     #[test]

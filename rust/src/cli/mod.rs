@@ -189,6 +189,51 @@
 //! packed row is eligible. The collapse is metered:
 //! `d2h_bytes_per_token` in `serve --json` (CI's BENCH_sampler.json
 //! compares device vs `--host-sampler` on every push).
+//!
+//! # Observability
+//!
+//! Three complementary views into a running cluster, all compiled in
+//! and all off by default (the tracer's disabled path is a single
+//! atomic load — CI guards the overhead):
+//!
+//! **Tracing** (`--trace-out FILE` on `serve`/`node`/`launch`): every
+//! node records scheduler iterations, per-layer attention/router and
+//! expert-dispatch phases, collective waits, sampling/logits
+//! downloads, transport send/recv and gateway activity into a
+//! per-node ring buffer (`obs`) on a monotonic clock. At shutdown the
+//! followers ship their buffers to node 0 over the mesh
+//! (`PHASE_TRACE`), which rebases them onto its own clock using the
+//! per-peer offsets measured during the TCP handshake (ping-pong
+//! midpoint) and writes ONE merged Chrome Trace Event Format JSON —
+//! load it in Perfetto (or `chrome://tracing`) and the lanes line up:
+//! node 1's expert dispatch sits inside node 0's all-reduce wait.
+//! `launch --trace-out trace.json` forwards the flag to every spawned
+//! node, so one command yields a cross-process trace.
+//!
+//! **Tail metrics**: serving metrics carry bounded log-linear
+//! histograms (`util::stats::Histogram`, mergeable across requests
+//! and nodes like the Welford accumulators), so `serve --json` and
+//! `client --json` report p50/p90/p99 — not just means — for token
+//! latency, comm wait, d2h wait, TTFT and queueing delay
+//! (`token_latency_s`, `comm_s`, `d2h_s`, `ttft_s`, `queueing_s`).
+//!
+//! **Live pull** (`client --stats`): a `Stats` admin frame asks a
+//! running daemon for its current `StatsSnapshot` — gateway
+//! connection/request totals, scheduler occupancy (active/queued),
+//! per-peer mesh link counters and the decode-phase histograms —
+//! without disturbing the serve loop (node 0 publishes the snapshot
+//! at iteration boundaries). Combine with `--requests N` to measure
+//! the traffic a workload just caused.
+//!
+//! *Attribution caveat:* PJRT executions are asynchronous — device
+//! work is enqueued and only observed at the next host sync (a
+//! download or buffer-ready wait). Phase timings and spans therefore
+//! attribute device time to the phase that *synchronized*, not the
+//! one that enqueued: `d2h` waits absorb upstream compute, and an
+//! `experts.dispatch` span can look instant while its FLOPs surface
+//! inside the next router download. Wire counters (bytes/messages)
+//! are exact; on-device phase *durations* are best read as "time the
+//! host waited here".
 
 pub mod args;
 pub mod commands;
@@ -258,20 +303,28 @@ SUBCOMMANDS
                    --policy round-robin|fcfs|sjf
                    --nodes N --transport inproc|tcp --json --stream
                    --artifacts DIR --host-sampler
+                   --trace-out FILE  (write a Chrome-trace JSON of the run;
+                                      open in Perfetto / chrome://tracing)
   node           LIVE multi-process: run ONE node over the real TCP fabric
                  (node 0 schedules; followers need no request flags)
                    --id N --cluster hosts.toml --requests N --gen-tokens N
                    --concurrency N --policy round-robin|fcfs|sjf
                    --topology decentralized|centralized --artifacts DIR
                    --client-port P   (node 0: serve remote clients, daemon mode)
+                   --trace-out FILE  (followers ship spans to node 0, which
+                                      writes the merged Chrome-trace JSON)
   launch         LIVE multi-process: spawn N loopback node processes
                    --nodes N --requests N --gen-tokens N --concurrency N
                    [--cluster hosts.toml] [--client-port P]
+                   [--trace-out FILE]  (forwarded to every node; node 0
+                                        merges the cross-process trace)
   client         remote client for a --client-port daemon: submit over TCP,
                  stream tokens back, report ttft/queueing/latency
                    --connect host:port --requests N --prompt-tokens N
                    --gen-tokens N [--prompt "id,id,..."] [--stream] [--json]
                    [--out FILE] [--shutdown]  (+sampling flags)
+                   [--stats]  (pull the daemon's live counters: gateway and
+                               mesh traffic, occupancy, decode p50/p90/p99)
   net-bench      transport microbenchmark: RTT percentiles + bandwidth
                    --backend inproc|tcp|both --payload BYTES --iters N
   help           this text

@@ -34,8 +34,15 @@ use anyhow::Result;
 
 use crate::engine::api::{RequestHandle, TokenEvent};
 use crate::engine::request::Request;
-use crate::network::proto::{self, ClientMsg, ServerHello, ServerMsg};
+use crate::network::proto::{self, ClientMsg, ServerHello, ServerMsg, StatsSnapshot};
 use crate::network::transport::LinkStats;
+use crate::obs;
+
+/// Supplies the cluster-side half of a [`StatsSnapshot`] (occupancy,
+/// queue depths, mesh traffic, phase histograms) when a client pulls
+/// `--stats`; the gateway overlays its own connection/request/link
+/// counters before replying.
+pub type StatsProvider = Arc<dyn Fn() -> StatsSnapshot + Send + Sync>;
 
 /// Default bound on a client connection's handshake read (a
 /// connect-then-silent socket must not wedge the accept loop, mirroring
@@ -79,6 +86,7 @@ struct Inner {
     /// Finished threads are reaped opportunistically by the accept loop.
     threads: Mutex<Vec<JoinHandle<()>>>,
     stats: Mutex<GatewayStats>,
+    stats_provider: StatsProvider,
 }
 
 impl Inner {
@@ -106,12 +114,16 @@ pub struct ClientGateway {
 impl ClientGateway {
     /// Start accepting clients on `listener`. `submit` injects one
     /// request into the scheduler and returns its streaming handle —
-    /// it is cloned into every connection thread.
+    /// it is cloned into every connection thread. `stats_provider`
+    /// answers live `--stats` pulls with the cluster-side snapshot
+    /// half (pass `Arc::new(StatsSnapshot::default)` when there is no
+    /// scheduler to ask).
     pub fn start<F>(
         listener: TcpListener,
         hello: ServerHello,
         handshake_timeout: Duration,
         submit: F,
+        stats_provider: StatsProvider,
     ) -> Result<ClientGateway>
     where
         F: Fn(Request) -> Result<RequestHandle> + Clone + Send + 'static,
@@ -124,6 +136,7 @@ impl ClientGateway {
             conns: Mutex::new(HashMap::new()),
             threads: Mutex::new(Vec::new()),
             stats: Mutex::new(GatewayStats::default()),
+            stats_provider,
         });
         let accept_inner = inner.clone();
         let accept = std::thread::spawn(move || {
@@ -232,10 +245,15 @@ fn conn_entry<F>(
 ) where
     F: Fn(Request) -> Result<RequestHandle>,
 {
+    // The gateway only runs on node 0; its threads trace on their own
+    // lane so client traffic is distinguishable from the scheduler.
+    obs::set_track(0, "gateway");
+    let accept_sp = obs::span("gw.accept").arg("conn", conn_id);
     if let Err(e) = handshake_conn(&mut stream, handshake_timeout, inner.hello) {
         log::debug!("client gateway: dropping {peer}: {e:#}");
         return;
     }
+    drop(accept_sp);
     if let Ok(clone) = stream.try_clone() {
         inner.conns.lock().expect("conns lock").insert(conn_id, clone);
     } else {
@@ -328,6 +346,7 @@ fn conn_loop<F>(
         match msg {
             ClientMsg::Submit(req) => {
                 let id = req.id;
+                let _sp = obs::span("gw.submit").arg("req", id);
                 let in_flight = cancels.lock().expect("cancels lock").contains_key(&id);
                 let outcome = if in_flight {
                     Err(anyhow::anyhow!(
@@ -374,6 +393,24 @@ fn conn_loop<F>(
                 inner.request_stop();
                 break;
             }
+            ClientMsg::Stats => {
+                let mut snap = (inner.stats_provider)();
+                {
+                    let g = inner.stats.lock().expect("stats lock");
+                    snap.connections = g.connections;
+                    snap.requests = g.requests;
+                    snap.gateway_link = g.link;
+                }
+                // The aggregate meter only absorbs a connection when it
+                // closes; fold in this live connection's traffic so the
+                // pull sees itself.
+                snap.gateway_link.add(*link.lock().expect("link lock"));
+                let msg = ServerMsg::Stats(Box::new(snap));
+                if write_server_counted(&writer, &link, &msg).is_err() {
+                    graceful = false;
+                    break;
+                }
+            }
         }
     }
     if !graceful {
@@ -413,7 +450,9 @@ fn forward(
     cancels: Arc<Mutex<HashMap<u64, crate::engine::api::Canceller>>>,
     handle: RequestHandle,
 ) {
+    obs::set_track(0, "gateway");
     let id = handle.id();
+    let _sp = obs::span("gw.stream").arg("req", id);
     let canceller = handle.canceller();
     let mut saw_terminal = false;
     while let Some(ev) = handle.next_event() {
@@ -534,6 +573,7 @@ mod tests {
             ServerHello { n_nodes: 2, max_active: 2 },
             Duration::from_millis(500),
             fake_engine(token_delay, cancels),
+            Arc::new(StatsSnapshot::default),
         )
         .unwrap();
         let addr = gw.local_addr();
@@ -703,6 +743,53 @@ mod tests {
             );
             std::thread::sleep(Duration::from_millis(10));
         }
+        gw.finish();
+    }
+
+    #[test]
+    fn stats_pull_reports_live_counters() {
+        let cancels = Arc::new(AtomicU64::new(0));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        // A provider standing in for the scheduler: fixed cluster-side
+        // numbers so the overlay is observable.
+        let provider: StatsProvider = Arc::new(|| StatsSnapshot {
+            active: 2,
+            queued: 7,
+            mesh_links: vec![LinkStats { sent_msgs: 11, ..Default::default() }; 3],
+            ..Default::default()
+        });
+        let gw = ClientGateway::start(
+            listener,
+            ServerHello { n_nodes: 3, max_active: 2 },
+            Duration::from_millis(500),
+            fake_engine(Duration::ZERO, cancels),
+            provider,
+        )
+        .unwrap();
+        let (mut s, _) = connect(gw.local_addr());
+        proto::write_client(&mut s, &ClientMsg::Submit(Request::new(5, vec![1], 2))).unwrap();
+        loop {
+            match proto::read_server(&mut s).unwrap() {
+                ServerMsg::Done { .. } => break,
+                ServerMsg::Failed { error, .. } => panic!("failed: {error}"),
+                _ => {}
+            }
+        }
+        proto::write_client(&mut s, &ClientMsg::Stats).unwrap();
+        let ServerMsg::Stats(snap) = proto::read_server(&mut s).unwrap() else {
+            panic!("expected a stats reply");
+        };
+        // Cluster half comes from the provider, gateway half is overlaid.
+        assert_eq!(snap.active, 2);
+        assert_eq!(snap.queued, 7);
+        assert_eq!(snap.mesh_links.len(), 3);
+        assert_eq!(snap.mesh_links[1].sent_msgs, 11);
+        assert_eq!(snap.connections, 1);
+        assert_eq!(snap.requests, 1);
+        // Our own live connection is folded in: Started + 2 tokens +
+        // Done went out, Submit + Stats came in.
+        assert!(snap.gateway_link.sent_msgs >= 4, "{:?}", snap.gateway_link);
+        assert!(snap.gateway_link.recv_msgs >= 2, "{:?}", snap.gateway_link);
         gw.finish();
     }
 

@@ -73,7 +73,7 @@ use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -88,9 +88,11 @@ use crate::metrics::{RunMetrics, TokenBreakdown};
 use crate::model::layout::ExpertLayout;
 use crate::moe::balance::Planner;
 use crate::moe::router::RouterDraw;
+use crate::network::proto::StatsSnapshot;
 use crate::network::transport::{
     self, bytes_to_f32s, f32s_to_bytes, req_tag, tag, Endpoint, Envelope, NetError,
 };
+use crate::obs;
 use crate::runtime::nano::resident_index;
 use crate::runtime::{BatchedRun, DeviceSample, DeviceState, HostTensor, NanoRuntime};
 
@@ -106,6 +108,10 @@ const PHASE_CTRL: u8 = 4;
 /// idle leader detects follower death instead of only finding out at
 /// its next gather.
 const PHASE_FB: u8 = 5;
+/// Follower→leader shipment of a drained trace-event buffer
+/// ([`crate::obs::encode_events`] payload, one message per node) so
+/// node 0 can merge every node's spans into one Chrome-trace file.
+const PHASE_TRACE: u8 = 6;
 
 /// Control-plane opcodes (first payload byte of a `PHASE_CTRL` message).
 const OP_SHUTDOWN: u8 = 0;
@@ -121,6 +127,9 @@ const OP_HEARTBEAT: u8 = 4;
 /// row order). Every node derives the same sampling, bucket and row
 /// packing from it.
 const OP_BATCH: u8 = 5;
+/// Ask a follower to drain its trace ring and ship it to the leader on
+/// `PHASE_TRACE` now (normally that happens once, at shutdown).
+const OP_TRACE_FLUSH: u8 = 6;
 
 /// Centralized heartbeat marker: a 1-byte scatter payload (a real
 /// scatter is ≥ 4 + 4·d bytes, an empty one is the shutdown marker).
@@ -180,6 +189,13 @@ pub struct LiveConfig {
     pub policy: SchedPolicy,
     /// Fabric backend for the node threads.
     pub transport: TransportKind,
+    /// Record execution spans (`crate::obs`) on every node and, on
+    /// node 0, merge them — follower buffers ship over `PHASE_TRACE` at
+    /// shutdown, offset-corrected by the handshake clock sync — into one
+    /// Chrome Trace Event Format JSON at this path (`--trace-out`).
+    /// Followers in other processes receive the same flag and use it
+    /// purely as the enable bit; only node 0 writes the file.
+    pub trace: Option<PathBuf>,
 }
 
 impl LiveConfig {
@@ -196,6 +212,7 @@ impl LiveConfig {
             max_active: 2,
             policy: SchedPolicy::RoundRobin,
             transport: TransportKind::InProcess,
+            trace: None,
         }
     }
 
@@ -391,6 +408,7 @@ pub fn run_node_serving(
     let mut w = NodeWorker::new(node, cfg.clone(), layout, ep)?;
     if node != 0 {
         w.follow(None)?;
+        w.ship_trace();
         return Ok(Vec::new());
     }
     // Node 0: drive the scheduler over a local queue. Everything runs on
@@ -441,11 +459,18 @@ pub fn run_node_serving(
                 n_nodes: cfg.n_nodes as u32,
                 max_active: cfg.max_active.max(1) as u32,
             };
+            // Live `--stats` pulls read whatever the scheduler loop
+            // last published (same thread as `lead`, so the snapshot is
+            // always from a consistent iteration boundary).
+            let live = w.live_stats.clone();
+            let stats: crate::cluster::gateway::StatsProvider =
+                Arc::new(move || live.lock().expect("live stats").clone());
             let gw = crate::cluster::gateway::ClientGateway::start(
                 c.listener,
                 hello,
                 c.handshake_timeout,
                 submit,
+                stats,
             )?;
             log::info!("node 0: serving remote clients on {}", gw.local_addr());
             gateway = Some(gw);
@@ -475,6 +500,7 @@ pub fn run_node_serving(
         );
     }
     served?;
+    w.finish_trace();
     let mut out = Vec::with_capacity(event_rxs.len());
     for (id, handle) in event_rxs {
         let mut result = None;
@@ -604,11 +630,20 @@ struct NodeWorker {
     /// beacon while idle, or any completed gather). Checked against
     /// `recv_timeout` only while the leader idles.
     followers_heard: Vec<Instant>,
+    /// Leader side: the snapshot a gateway `--stats` pull reads. The
+    /// scheduler republishes occupancy/queue depth each iteration and
+    /// folds each finished request's decode metrics in, so the admin
+    /// frame never has to interrupt the serve loop.
+    live_stats: Arc<Mutex<StatsSnapshot>>,
 }
 
 impl NodeWorker {
     /// Load this node's runtime + expert shard and attach the endpoint.
     fn new(node: usize, cfg: LiveConfig, layout: ExpertLayout, ep: Endpoint) -> Result<NodeWorker> {
+        if cfg.trace.is_some() {
+            obs::enable();
+            obs::set_track(node, if node == 0 { "scheduler" } else { "worker" });
+        }
         let rt = NanoRuntime::load(&cfg.artifacts, false)?;
         if cfg.device_resident && !rt.has_device_path() {
             log::warn!(
@@ -637,6 +672,7 @@ impl NodeWorker {
             wseq: 0,
             beacon,
             followers_heard,
+            live_stats: Arc::new(Mutex::new(StatsSnapshot::default())),
         })
     }
 
@@ -659,10 +695,13 @@ impl NodeWorker {
             }
         };
         if node == 0 {
-            w.lead(&rx)
+            w.lead(&rx)?;
+            w.finish_trace();
         } else {
-            w.follow(Some(&rx))
+            w.follow(Some(&rx))?;
+            w.ship_trace();
         }
+        Ok(())
     }
 
     fn use_device(&self) -> bool {
@@ -744,6 +783,7 @@ impl NodeWorker {
     /// are mid-protocol — everything in flight gets a terminal `Failed`
     /// event and the followers are told to exit before bubbling up.
     fn lead(&mut self, rx: &Receiver<Cmd>) -> Result<()> {
+        let _run_sp = obs::span("run");
         let mut pending: VecDeque<Pending> = VecDeque::new();
         let mut active: Vec<ActiveRequest> = Vec::new();
         let r = self.lead_loop(rx, &mut pending, &mut active);
@@ -872,6 +912,7 @@ impl NodeWorker {
                     if self.cfg.topology == Topology::Decentralized {
                         self.ctrl(OP_CANCEL, &a.seq.to_le_bytes())?;
                     }
+                    self.book_finished(&a);
                     emit_done(a, FinishReason::Cancelled);
                 } else {
                     i += 1;
@@ -912,9 +953,11 @@ impl NodeWorker {
                 a.metrics.queueing_ns = submitted.elapsed().as_nanos() as u64;
                 active.push(a);
             }
+            self.publish_stats(active.len(), pending.len());
             if active.is_empty() {
                 continue;
             }
+            let _sp = obs::span("sched.iteration").arg("active", active.len() as u64);
 
             // 4. One iteration. Continuous batching: every active
             //    request advances together through ONE shared forward
@@ -936,6 +979,7 @@ impl NodeWorker {
                     if active[i].finish.is_some() {
                         let a = active.remove(i);
                         let finish = a.finish.expect("checked above");
+                        self.book_finished(&a);
                         emit_done(a, finish);
                     } else {
                         i += 1;
@@ -959,9 +1003,85 @@ impl NodeWorker {
                 if active[i].finish.is_some() {
                     let a = active.remove(i);
                     let finish = a.finish.expect("checked above");
+                    self.book_finished(&a);
                     emit_done(a, finish);
                 }
             }
+        }
+    }
+
+    /// Republish the snapshot a gateway `Stats` pull reads: scheduler
+    /// occupancy, queue depth and the cumulative per-peer link totals.
+    /// Runs once per scheduler pass on the serve thread, so a pull
+    /// always sees a consistent iteration boundary.
+    fn publish_stats(&self, active: usize, queued: usize) {
+        let mut s = self.live_stats.lock().expect("live stats");
+        s.active = active as u32;
+        s.queued = queued as u32;
+        s.mesh_links = self.ep.peer_totals().to_vec();
+    }
+
+    /// Fold a finished request's decode-phase metrics into the live
+    /// snapshot (Welford moments and tail histograms both merge).
+    fn book_finished(&self, a: &ActiveRequest) {
+        let mut s = self.live_stats.lock().expect("live stats");
+        s.decode.merge(&a.metrics.decode);
+    }
+
+    /// Follower side: drain this node's trace ring and ship it to
+    /// node 0 over `PHASE_TRACE`. Best effort — tracing must never fail
+    /// a clean shutdown — and a no-op when tracing is off.
+    fn ship_trace(&mut self) {
+        if self.cfg.trace.is_none() || self.node == 0 {
+            return;
+        }
+        let events = obs::drain_node(self.node);
+        let payload = obs::encode_events(&events);
+        if let Err(e) = self.ep.send(0, tag(PHASE_TRACE, self.node as u32, 0), payload) {
+            log::warn!(
+                "node {}: could not ship {} trace events to the leader: {e}",
+                self.node,
+                events.len()
+            );
+        }
+    }
+
+    /// Leader side: collect every node's trace buffer — the local ring
+    /// drained directly, follower rings shipped over `PHASE_TRACE` at
+    /// shutdown — map each onto node 0's timeline with the handshake
+    /// clock offsets, and write ONE merged Chrome Trace Event Format
+    /// JSON. Best effort: a missing follower buffer is logged, never
+    /// fatal, so a trace always comes out of whatever survived.
+    fn finish_trace(&mut self) {
+        let Some(path) = self.cfg.trace.clone() else { return };
+        let own = obs::drain_node(self.node);
+        let mut groups: Vec<(i64, Vec<obs::WireEvent>)> =
+            vec![(0, own.iter().map(obs::WireEvent::from).collect())];
+        for peer in 1..self.ep.n_nodes() {
+            let t = tag(PHASE_TRACE, peer as u32, 0);
+            let mut evs = Vec::new();
+            match self.ep.recv_tag(t, Duration::from_secs(5)) {
+                Ok(env) => match obs::decode_events(&env.payload) {
+                    Ok(mut v) => evs.append(&mut v),
+                    Err(e) => log::warn!("node {peer}: undecodable trace buffer: {e:#}"),
+                },
+                Err(e) => log::warn!("node {peer}: no trace buffer at shutdown: {e}"),
+            }
+            // A mid-run OP_TRACE_FLUSH may have queued earlier
+            // shipments; sweep the stash without blocking.
+            while let Ok(env) = self.ep.recv_tag(t, Duration::ZERO) {
+                match obs::decode_events(&env.payload) {
+                    Ok(mut v) => evs.append(&mut v),
+                    Err(e) => log::warn!("node {peer}: undecodable trace buffer: {e:#}"),
+                }
+            }
+            groups.push((self.ep.clock_offset_ns(peer), evs));
+        }
+        let n: usize = groups.iter().map(|(_, g)| g.len()).sum();
+        let json = obs::chrome_trace_json(&groups);
+        match std::fs::write(&path, json) {
+            Ok(()) => log::info!("trace: wrote {n} events to {}", path.display()),
+            Err(e) => log::warn!("trace: could not write {}: {e}", path.display()),
         }
     }
 
@@ -1172,6 +1292,7 @@ impl NodeWorker {
                 OP_STEP => {
                     anyhow::ensure!(body.len() == 2, "short step message");
                     let seq = u16::from_le_bytes(body[0..2].try_into().unwrap());
+                    let _sp = obs::span("sched.iteration").arg("active", 1);
                     let Some(a) = active.iter_mut().find(|a| a.seq == seq) else {
                         anyhow::bail!(
                             "node {}: step for unknown request seq {seq}",
@@ -1205,9 +1326,12 @@ impl NodeWorker {
                         "node {}: batch participants desynced from the admission order",
                         self.node
                     );
+                    let _sp =
+                        obs::span("sched.iteration").arg("active", active.len() as u64);
                     self.batch_iteration(&mut active)?;
                     active.retain(|a| a.finish.is_none());
                 }
+                OP_TRACE_FLUSH => self.ship_trace(),
                 other => anyhow::bail!("node {}: unknown ctrl opcode {other}", self.node),
             }
         }
@@ -1266,6 +1390,7 @@ impl NodeWorker {
             // continuously-batched iteration — this node's experts run
             // for the whole batch in ONE dispatch and reply with the
             // [rows, D] partial in ONE message.
+            let sp = obs::span("experts.dispatch").arg("layer", layer as u64);
             let partial = if rows == 1 {
                 let idx: Vec<usize> = idx.iter().map(|&i| i as usize).collect();
                 self.rt.node_experts_direct(&self.experts, layer, &moe_in, &idx, &w)?
@@ -1273,6 +1398,7 @@ impl NodeWorker {
                 self.rt
                     .node_experts_batched(&self.experts, layer, rows, &moe_in, &idx, &w)?
             };
+            drop(sp);
             self.ep
                 .send(0, tag(PHASE_GATHER, 0, self.wseq), f32s_to_bytes(&partial))?;
             self.wseq = self.wseq.wrapping_add(1);
@@ -1490,6 +1616,7 @@ impl NodeWorker {
 
         for l in 0..n_layers {
             let t_misc = Instant::now();
+            let sp = obs::span("attn.router").arg("layer", l as u64);
             let draws = run.attn_router(&self.rt, l)?;
             let mut plans = Vec::with_capacity(draws.len());
             for (top_w, top_i) in draws {
@@ -1497,13 +1624,16 @@ impl NodeWorker {
                     self.planner.plan_layer(&RouterDraw { selected: top_i, weights: top_w }),
                 );
             }
+            drop(sp);
             b.misc_ns += t_misc.elapsed().as_nanos() as u64;
 
             match self.cfg.topology {
                 Topology::Decentralized => {
                     let t_moe = Instant::now();
+                    let sp = obs::span("experts.dispatch").arg("layer", l as u64);
                     let (idx, w) = self.batch_slots(&plans, self.node, bucket, ns);
                     let partial = run.node_experts(&self.rt, &self.experts, l, &idx, &w)?;
+                    drop(sp);
                     b.moe_ns += t_moe.elapsed().as_nanos() as u64;
 
                     if self.ep.n_nodes() == 1 {
@@ -1532,8 +1662,10 @@ impl NodeWorker {
                     b.comm_ns += t_comm.elapsed().as_nanos() as u64;
 
                     let t_moe = Instant::now();
+                    let sp = obs::span("experts.dispatch").arg("layer", l as u64);
                     let (idx, w) = self.batch_slots(&plans, 0, bucket, ns);
                     let partial = run.node_experts(&self.rt, &self.experts, l, &idx, &w)?;
+                    drop(sp);
                     b.moe_ns += t_moe.elapsed().as_nanos() as u64;
 
                     match w_iter {
@@ -1563,6 +1695,8 @@ impl NodeWorker {
         // are ALL mid-prefill on the device-sampler path skips lm_head
         // and the download entirely.
         let t_head = Instant::now();
+        let head_sp =
+            obs::span(if dev_inputs.is_some() { "sample.device" } else { "logits.d2h" });
         let mut all_logits = Vec::new();
         let mut samples: Vec<DeviceSample> = Vec::new();
         if let Some(inputs) = &dev_inputs {
@@ -1570,6 +1704,7 @@ impl NodeWorker {
         } else if !dev_sampling {
             run.logits_into(&self.rt, &mut all_logits)?;
         }
+        drop(head_sp);
         b.misc_ns += t_head.elapsed().as_nanos() as u64;
         drop(run); // release the DeviceState borrows before bookkeeping
         note_transfers(&mut b, &self.rt);
@@ -1656,6 +1791,7 @@ impl NodeWorker {
         };
         for l in 0..n_layers {
             let t_misc = Instant::now();
+            let sp = obs::span("attn.router").arg("layer", l as u64);
             let ar = self.rt.attn_router(l, &x, &kc[l], &vc[l], a.pos)?;
             kc[l] = ar.k_cache;
             vc[l] = ar.v_cache;
@@ -1664,13 +1800,16 @@ impl NodeWorker {
                 weights: ar.top_w.clone(),
             };
             let plan = self.planner.plan_layer(&draw);
+            drop(sp);
             b.misc_ns += t_misc.elapsed().as_nanos() as u64;
 
             // Local expert slots.
             let t_moe = Instant::now();
+            let sp = obs::span("experts.dispatch").arg("layer", l as u64);
             let (idx, w) = self.slots_for(&plan.per_node[self.node]);
             let partial =
                 self.rt.node_experts_direct(&self.experts, l, &ar.moe_in, &idx, &w)?;
+            drop(sp);
             b.moe_ns += t_moe.elapsed().as_nanos() as u64;
 
             // All-reduce (the envoy exchange of Fig. 7), demultiplexed
@@ -1686,7 +1825,9 @@ impl NodeWorker {
             b.misc_ns += t_sum.elapsed().as_nanos() as u64;
         }
         let t_head = Instant::now();
+        let head_sp = obs::span("lm_head");
         a.last_logits = self.rt.lm_head(&x)?;
+        drop(head_sp);
         b.misc_ns += t_head.elapsed().as_nanos() as u64;
         note_transfers(&mut b, &self.rt);
         note_wire(&mut b, self.ep.take_stats());
@@ -1721,14 +1862,18 @@ impl NodeWorker {
 
         for l in 0..n_layers {
             let t_misc = Instant::now();
+            let sp = obs::span("attn.router").arg("layer", l as u64);
             let (top_w, top_i) = state.attn_router(&self.rt, l, a.pos)?;
             let draw = RouterDraw { selected: top_i, weights: top_w };
             let plan = self.planner.plan_layer(&draw);
+            drop(sp);
             b.misc_ns += t_misc.elapsed().as_nanos() as u64;
 
             let t_moe = Instant::now();
+            let sp = obs::span("experts.dispatch").arg("layer", l as u64);
             let (idx, w) = self.slots_for(&plan.per_node[self.node]);
             let partial = state.node_experts(&self.rt, &self.experts, l, &idx, &w)?;
+            drop(sp);
             b.moe_ns += t_moe.elapsed().as_nanos() as u64;
 
             if self.ep.n_nodes() == 1 {
@@ -1751,6 +1896,7 @@ impl NodeWorker {
             }
         }
         let t_head = Instant::now();
+        let head_sp = obs::span(if sample_dev { "sample.device" } else { "logits.d2h" });
         if sample_dev {
             // The d2h collapse: 8 bytes of (token, logprob) — plus a
             // 4-byte stop mask — instead of the [1, V] logits. Pure
@@ -1764,6 +1910,7 @@ impl NodeWorker {
         } else {
             state.logits_into(&self.rt, &mut a.last_logits)?;
         }
+        drop(head_sp);
         b.misc_ns += t_head.elapsed().as_nanos() as u64;
         note_transfers(&mut b, &self.rt);
         note_wire(&mut b, self.ep.take_stats());
@@ -1782,6 +1929,7 @@ impl NodeWorker {
         if self.ep.n_nodes() == 1 {
             return Ok(partial.to_vec());
         }
+        let _sp = obs::span("allreduce.wait").arg("layer", layer as u64);
         let t = req_tag(PHASE_PARTIAL, seq, layer, step);
         self.ep.broadcast(t, &f32s_to_bytes(partial))?;
         let envs = self
@@ -1843,6 +1991,7 @@ impl NodeWorker {
         };
         for l in 0..n_layers {
             let t_misc = Instant::now();
+            let sp = obs::span("attn.router").arg("layer", l as u64);
             let ar = self.rt.attn_router(l, &x, &kc[l], &vc[l], a.pos)?;
             kc[l] = ar.k_cache;
             vc[l] = ar.v_cache;
@@ -1851,6 +2000,7 @@ impl NodeWorker {
                 weights: ar.top_w.clone(),
             };
             let plan = self.planner.plan_layer(&draw);
+            drop(sp);
             b.misc_ns += t_misc.elapsed().as_nanos() as u64;
 
             // Scatter: layer + moe_in + per-worker slot assignments
@@ -1864,9 +2014,11 @@ impl NodeWorker {
 
             // Own experts.
             let t_moe = Instant::now();
+            let sp = obs::span("experts.dispatch").arg("layer", l as u64);
             let (idx, w) = self.slots_for(&plan.per_node[0]);
             let mine =
                 self.rt.node_experts_direct(&self.experts, l, &ar.moe_in, &idx, &w)?;
+            drop(sp);
             b.moe_ns += t_moe.elapsed().as_nanos() as u64;
 
             // Gather partials.
@@ -1882,7 +2034,9 @@ impl NodeWorker {
             }
         }
         let t_head = Instant::now();
+        let head_sp = obs::span("lm_head");
         a.last_logits = self.rt.lm_head(&x)?;
+        drop(head_sp);
         b.misc_ns += t_head.elapsed().as_nanos() as u64;
         note_transfers(&mut b, &self.rt);
         note_wire(&mut b, self.ep.take_stats());
@@ -1913,9 +2067,11 @@ impl NodeWorker {
 
         for l in 0..n_layers {
             let t_misc = Instant::now();
+            let sp = obs::span("attn.router").arg("layer", l as u64);
             let (top_w, top_i) = state.attn_router(&self.rt, l, a.pos)?;
             let draw = RouterDraw { selected: top_i, weights: top_w };
             let plan = self.planner.plan_layer(&draw);
+            drop(sp);
             b.misc_ns += t_misc.elapsed().as_nanos() as u64;
 
             let w_iter = self.next_wseq();
@@ -1927,8 +2083,10 @@ impl NodeWorker {
             b.comm_ns += t_comm.elapsed().as_nanos() as u64;
 
             let t_moe = Instant::now();
+            let sp = obs::span("experts.dispatch").arg("layer", l as u64);
             let (idx, w) = self.slots_for(&plan.per_node[0]);
             let partial = state.node_experts(&self.rt, &self.experts, l, &idx, &w)?;
+            drop(sp);
             b.moe_ns += t_moe.elapsed().as_nanos() as u64;
 
             match w_iter {
@@ -1950,6 +2108,7 @@ impl NodeWorker {
             }
         }
         let t_head = Instant::now();
+        let head_sp = obs::span(if sample_dev { "sample.device" } else { "logits.d2h" });
         if sample_dev {
             // Same d2h collapse as the decentralized path; the workers
             // cannot tell the difference (the wire protocol carries no
@@ -1963,6 +2122,7 @@ impl NodeWorker {
         } else {
             state.logits_into(&self.rt, &mut a.last_logits)?;
         }
+        drop(head_sp);
         b.misc_ns += t_head.elapsed().as_nanos() as u64;
         note_transfers(&mut b, &self.rt);
         note_wire(&mut b, self.ep.take_stats());
@@ -1996,6 +2156,7 @@ impl NodeWorker {
     ) -> Result<()> {
         let ns = self.plan_ns();
         debug_assert_eq!(moe_in.len(), rows * self.rt.manifest.d_embed);
+        let _sp = obs::span("scatter.send").arg("layer", layer as u64);
         for peer in 1..self.ep.n_nodes() {
             let mut payload = Vec::with_capacity(8 + moe_in.len() * 4 + rows * ns * 8);
             payload.extend_from_slice(&layer.to_le_bytes());
@@ -2027,6 +2188,7 @@ impl NodeWorker {
 
     /// Leader-side gather: sum own partial with every worker's.
     fn gather_partials(&mut self, mine: Vec<f32>, wseq: u32, layer: u32) -> Result<Vec<f32>> {
+        let _sp = obs::span("gather.wait").arg("layer", layer as u64);
         let envs = self
             .ep
             .gather(tag(PHASE_GATHER, 0, wseq), self.cfg.recv_timeout)

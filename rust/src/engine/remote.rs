@@ -15,11 +15,11 @@
 //! stream ends with `Done { finish: Cancelled }` like any local
 //! cancel.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::BufReader;
 use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::Sender;
+use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -28,7 +28,7 @@ use anyhow::{Context, Result};
 
 use crate::engine::api::{Canceller, Engine, RequestHandle, TokenEvent};
 use crate::engine::request::Request;
-use crate::network::proto::{self, ClientMsg, ServerHello, ServerMsg};
+use crate::network::proto::{self, ClientMsg, ServerHello, ServerMsg, StatsSnapshot};
 use crate::network::transport::LinkStats;
 
 /// How often the cancel pump scans for locally-cancelled requests.
@@ -56,6 +56,9 @@ struct Shared {
     inflight: Mutex<HashMap<u64, InFlight>>,
     writer: Mutex<TcpStream>,
     stats: Mutex<LinkStats>,
+    /// Callers blocked in `server_stats`, oldest first: replies come
+    /// back in order on the one socket, so FIFO pairing is exact.
+    stats_waiters: Mutex<VecDeque<Sender<Box<StatsSnapshot>>>>,
     closed: AtomicBool,
 }
 
@@ -90,6 +93,8 @@ impl Shared {
         for (id, f) in map.drain() {
             let _ = f.events.send(TokenEvent::Failed { id, error: error.to_string() });
         }
+        // Dropping the senders fails any blocked `server_stats` call.
+        self.stats_waiters.lock().expect("stats waiters").clear();
     }
 }
 
@@ -117,6 +122,7 @@ impl RemoteEngine {
             inflight: Mutex::new(HashMap::new()),
             writer: Mutex::new(stream.try_clone()?),
             stats: Mutex::new(LinkStats::default()),
+            stats_waiters: Mutex::new(VecDeque::new()),
             closed: AtomicBool::new(false),
         });
         let stop = Arc::new(AtomicBool::new(false));
@@ -142,6 +148,22 @@ impl RemoteEngine {
     /// Client-side wire accounting since connect.
     pub fn stats(&self) -> LinkStats {
         *self.shared.stats.lock().expect("stats lock")
+    }
+
+    /// Pull the daemon's live counters (`apple-moe client --stats`):
+    /// gateway totals, scheduler occupancy/queue depth, per-peer mesh
+    /// link counters, and the decode-phase tail histograms — whatever
+    /// the serve loop last published at an iteration boundary.
+    pub fn server_stats(&self, timeout: Duration) -> Result<StatsSnapshot> {
+        let (tx, rx) = channel();
+        self.shared.stats_waiters.lock().expect("stats waiters").push_back(tx);
+        self.shared
+            .write_msg(&ClientMsg::Stats)
+            .context("sending stats request to the serving daemon")?;
+        let snap = rx
+            .recv_timeout(timeout)
+            .context("waiting for the daemon's stats reply")?;
+        Ok(*snap)
     }
 
     /// Ask the daemon to drain in-flight requests and shut the whole
@@ -236,6 +258,18 @@ fn reader_loop(shared: Arc<Shared>, stream: TcpStream) {
                 shared.fail_all(&why);
                 return;
             }
+        };
+        // Admin replies are not request-scoped — pair them with the
+        // oldest waiting `server_stats` call before the id demux.
+        let msg = match msg {
+            ServerMsg::Stats(snap) => {
+                let w = shared.stats_waiters.lock().expect("stats waiters").pop_front();
+                if let Some(tx) = w {
+                    let _ = tx.send(snap);
+                }
+                continue;
+            }
+            other => other,
         };
         let id = msg.id();
         let mut map = shared.inflight.lock().expect("inflight lock");
@@ -366,6 +400,16 @@ mod tests {
                     ClientMsg::Cancel(id) => {
                         cancelled.lock().unwrap().insert(id);
                     }
+                    ClientMsg::Stats => {
+                        let snap = StatsSnapshot {
+                            connections: 1,
+                            requests: 9,
+                            active: 1,
+                            ..Default::default()
+                        };
+                        let mut w = writer.lock().unwrap();
+                        let _ = proto::write_server(&mut *w, &ServerMsg::Stats(Box::new(snap)));
+                    }
                     ClientMsg::Shutdown => break,
                 }
             }
@@ -416,6 +460,19 @@ mod tests {
         assert_eq!(s2, r2.generated);
         assert_eq!(r1.generated, vec![10, 11, 12]);
         assert_eq!(r2.generated, vec![20, 21, 22]);
+        eng.shutdown_server().unwrap();
+        drop(eng);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn stats_pull_roundtrip() {
+        let (addr, server) = mock_server(1, Duration::ZERO);
+        let eng = RemoteEngine::connect(&addr).unwrap();
+        let snap = eng.server_stats(Duration::from_secs(5)).unwrap();
+        assert_eq!(snap.connections, 1);
+        assert_eq!(snap.requests, 9);
+        assert_eq!(snap.active, 1);
         eng.shutdown_server().unwrap();
         drop(eng);
         server.join().unwrap();

@@ -24,6 +24,7 @@ pub mod metrics;
 pub mod model;
 pub mod moe;
 pub mod network;
+pub mod obs;
 pub mod packing;
 pub mod perfmodel;
 pub mod runtime;

@@ -4,7 +4,7 @@
 //! **Misc** (self-attention, router, weighted sum).
 
 use crate::simclock::Nanos;
-use crate::util::stats::Welford;
+use crate::util::stats::{Histogram, Welford};
 
 /// Time breakdown of one generated token.
 ///
@@ -16,13 +16,13 @@ use crate::util::stats::Welford;
 /// K/V caches (§Perf), and are NOT added into `total_ns`.
 ///
 /// Bucket-attribution caveat for the live device-resident path: PJRT
-/// execution is asynchronous until something blocks, and that path
-/// only blocks at downloads. Expert compute enqueued in the MoE bucket
-/// may therefore complete inside the next blocking call (the partial
-/// download timed as Comm, or the logits download timed as Misc), so
-/// the per-bucket split is shifted relative to the host path, whose
-/// every role call ends in a blocking tuple download. `total_ns` and
-/// the transfer counters remain directly comparable across paths.
+/// execution is asynchronous until something blocks, so per-bucket
+/// splits attribute device time to the phase that *synchronized*, not
+/// the one that enqueued it. The full discussion lives in the CLI
+/// docs (`cli/mod.rs`, "Observability") and the README; the short
+/// version: `total_ns` and the transfer counters remain directly
+/// comparable across paths, individual buckets are "time the host
+/// waited here".
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TokenBreakdown {
     pub moe_ns: Nanos,
@@ -88,6 +88,13 @@ pub struct PhaseMetrics {
     /// Executable dispatches attributed to this phase (see
     /// [`TokenBreakdown::exec_calls`]).
     pub exec_calls: u64,
+    /// Tail-quantile companions to the Welford means above: per-token
+    /// total time, comm wait and d2h time (ns). Welford keeps the mean
+    /// exactly; these keep the distribution shape (p50/p90/p99 at
+    /// ~6% relative error) and merge the same way.
+    pub hist_total: Histogram,
+    pub hist_comm: Histogram,
+    pub hist_d2h: Histogram,
 }
 
 impl PhaseMetrics {
@@ -105,6 +112,59 @@ impl PhaseMetrics {
         self.net_bytes += b.net_bytes;
         self.occupancy.push(b.batch_rows.max(1) as f64);
         self.exec_calls += b.exec_calls;
+        self.hist_total.push(b.total_ns() as f64);
+        self.hist_comm.push(b.comm_ns as f64);
+        self.hist_d2h.push(b.d2h_ns as f64);
+    }
+
+    /// Fold another phase into this one (aggregation across requests,
+    /// or across nodes). Welford merges keep counts and means exact;
+    /// histograms add bucket-wise, so merged quantiles equal those of
+    /// the concatenated stream.
+    pub fn merge(&mut self, o: &PhaseMetrics) {
+        self.tokens += o.tokens;
+        self.moe.merge(&o.moe);
+        self.comm.merge(&o.comm);
+        self.misc.merge(&o.misc);
+        self.total.merge(&o.total);
+        self.h2d.merge(&o.h2d);
+        self.d2h.merge(&o.d2h);
+        self.h2d_bytes += o.h2d_bytes;
+        self.d2h_bytes += o.d2h_bytes;
+        self.net_msgs += o.net_msgs;
+        self.net_bytes += o.net_bytes;
+        self.occupancy.merge(&o.occupancy);
+        self.exec_calls += o.exec_calls;
+        self.hist_total.merge(&o.hist_total);
+        self.hist_comm.merge(&o.hist_comm);
+        self.hist_d2h.merge(&o.hist_d2h);
+    }
+
+    /// (p50, p90, p99) of per-token total time, in seconds.
+    pub fn token_latency_quantiles_s(&self) -> (f64, f64, f64) {
+        (
+            self.hist_total.quantile(0.50) / 1e9,
+            self.hist_total.quantile(0.90) / 1e9,
+            self.hist_total.quantile(0.99) / 1e9,
+        )
+    }
+
+    /// (p50, p90, p99) of per-token comm wait, in seconds.
+    pub fn comm_quantiles_s(&self) -> (f64, f64, f64) {
+        (
+            self.hist_comm.quantile(0.50) / 1e9,
+            self.hist_comm.quantile(0.90) / 1e9,
+            self.hist_comm.quantile(0.99) / 1e9,
+        )
+    }
+
+    /// (p50, p90, p99) of per-token device→host download time, in seconds.
+    pub fn d2h_quantiles_s(&self) -> (f64, f64, f64) {
+        (
+            self.hist_d2h.quantile(0.50) / 1e9,
+            self.hist_d2h.quantile(0.90) / 1e9,
+            self.hist_d2h.quantile(0.99) / 1e9,
+        )
     }
 
     /// Mean requests per forward pass over this phase (1.0 = serial).
@@ -334,6 +394,76 @@ mod tests {
         assert_eq!(p.occupancy.max(), 4.0);
         assert_eq!(p.exec_calls, 54);
         assert!((p.exec_calls_per_token() - 18.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phase_histograms_track_token_times() {
+        let mut p = PhaseMetrics::default();
+        // 90 fast tokens and 10 stragglers: the mean hides the tail,
+        // the histogram p99 must surface it.
+        for _ in 0..90 {
+            p.push(TokenBreakdown {
+                moe_ns: 800_000,
+                comm_ns: 150_000,
+                misc_ns: 50_000,
+                d2h_ns: 10_000,
+                ..Default::default()
+            });
+        }
+        for _ in 0..10 {
+            p.push(TokenBreakdown {
+                moe_ns: 800_000,
+                comm_ns: 99_150_000,
+                misc_ns: 50_000,
+                d2h_ns: 10_000,
+                ..Default::default()
+            });
+        }
+        assert_eq!(p.hist_total.count(), 100);
+        let (p50, p90, p99) = p.token_latency_quantiles_s();
+        assert!(p50 <= p90 && p90 <= p99);
+        assert!((p50 - 1e-3).abs() < 1e-4, "{p50}");
+        assert!(p99 > 50e-3, "p99 {p99} must surface the straggler");
+        let (c50, _, c99) = p.comm_quantiles_s();
+        assert!(c50 < 1e-3 && c99 > 50e-3);
+        let (d50, _, d99) = p.d2h_quantiles_s();
+        assert!((d50 - 10e-6).abs() < 2e-6 && d99 < 11e-6);
+    }
+
+    #[test]
+    fn phase_merge_matches_sequential_pushes() {
+        let fast = TokenBreakdown {
+            moe_ns: 700_000,
+            comm_ns: 100_000,
+            misc_ns: 40_000,
+            d2h_ns: 8_000,
+            net_msgs: 2,
+            net_bytes: 512,
+            batch_rows: 4,
+            exec_calls: 3,
+            ..Default::default()
+        };
+        let slow = TokenBreakdown { comm_ns: 80_000_000, batch_rows: 1, ..fast };
+        let mut whole = PhaseMetrics::default();
+        let (mut a, mut b) = (PhaseMetrics::default(), PhaseMetrics::default());
+        for i in 0..60 {
+            let t = if i % 6 == 5 { slow } else { fast };
+            whole.push(t);
+            if i < 30 { &mut a } else { &mut b }.push(t);
+        }
+        a.merge(&b);
+        assert_eq!(a.tokens, whole.tokens);
+        assert_eq!(a.net_msgs, whole.net_msgs);
+        assert_eq!(a.net_bytes, whole.net_bytes);
+        assert_eq!(a.exec_calls, whole.exec_calls);
+        assert!((a.comm.mean() - whole.comm.mean()).abs() < 1e-6);
+        assert_eq!(a.occupancy.min(), whole.occupancy.min());
+        assert_eq!(a.occupancy.max(), whole.occupancy.max());
+        // Quantiles of the merged histograms equal the whole-stream ones
+        // exactly (bucket counts are additive).
+        assert_eq!(a.token_latency_quantiles_s(), whole.token_latency_quantiles_s());
+        assert_eq!(a.comm_quantiles_s(), whole.comm_quantiles_s());
+        assert_eq!(a.d2h_quantiles_s(), whole.d2h_quantiles_s());
     }
 
     #[test]

@@ -20,17 +20,21 @@
 //!   [`Request`] ([`Request::encode`], the same codec the scheduler's
 //!   admission broadcast uses); `Cancel` carries the request id;
 //!   `Shutdown` asks the daemon to drain in-flight requests and exit
-//!   (the administrative stop `apple-moe client --shutdown` sends).
+//!   (the administrative stop `apple-moe client --shutdown` sends);
+//!   `Stats` asks for a live [`StatsSnapshot`] without disturbing the
+//!   serving loop (`apple-moe client --stats`).
 //! - **Server → client** ([`ServerMsg`]): mirrors
 //!   [`crate::engine::api::TokenEvent`] with the request id added to
 //!   every message, so any number of in-flight requests multiplex over
-//!   one connection: `Started`/`Token`/`Done`/`Failed`.
+//!   one connection: `Started`/`Token`/`Done`/`Failed`. The one
+//!   request-less message is `Stats`, the reply to a `Stats` pull.
 //!
 //! `Done` ships the full [`RequestResult`]: generated tokens, finish
 //! reason, and the serving metrics. Phase metrics cross the wire as
 //! per-token *means* plus counters (the Welford accumulators cannot be
-//! serialized losslessly); per-token means, totals, throughput and the
-//! byte counters survive exactly, higher moments (variance) do not.
+//! serialized losslessly); per-token means, totals, throughput, the
+//! byte counters and the tail histograms (shipped sparsely, bucket by
+//! bucket) survive exactly, higher moments (variance) do not.
 
 use std::io::{Read, Write};
 
@@ -38,11 +42,16 @@ use anyhow::Result;
 
 use crate::engine::request::{FinishReason, Request, RequestResult};
 use crate::metrics::{PhaseMetrics, RunMetrics};
+use crate::network::transport::LinkStats;
+use crate::util::stats::{Histogram, HIST_BUCKETS};
 use crate::util::wire::Cursor;
 
 /// Client-port handshake magic (distinct from the mesh's `AMOE`).
 pub const CLIENT_MAGIC: [u8; 4] = *b"AMOC";
-pub const CLIENT_PROTOCOL_VERSION: u16 = 2;
+/// v3: `Stats`/stats-reply admin frames, and phase metrics grew sparse
+/// tail histograms — a v2 peer would mis-parse the extended `Done`
+/// body, so this is a hard version break.
+pub const CLIENT_PROTOCOL_VERSION: u16 = 3;
 /// Corrupt-stream guard; prompts are token ids, nothing legitimate
 /// comes near this.
 const MAX_CLIENT_FRAME: u32 = 1 << 26;
@@ -50,10 +59,12 @@ const MAX_CLIENT_FRAME: u32 = 1 << 26;
 const K_SUBMIT: u8 = 1;
 const K_CANCEL: u8 = 2;
 const K_SHUTDOWN: u8 = 3;
+const K_STATS: u8 = 4;
 const K_STARTED: u8 = 16;
 const K_TOKEN: u8 = 17;
 const K_DONE: u8 = 18;
 const K_FAILED: u8 = 19;
+const K_STATS_REPLY: u8 = 20;
 
 /// What the server tells a freshly-handshaken client about itself.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -73,6 +84,31 @@ pub enum ClientMsg {
     /// Administrative: stop accepting clients, drain in-flight
     /// requests, shut the whole cluster down.
     Shutdown,
+    /// Administrative: pull a live [`StatsSnapshot`] from the daemon.
+    Stats,
+}
+
+/// A live observability pull from a running daemon: gateway counters,
+/// per-mesh-peer wire traffic, and the aggregate decode-phase metrics
+/// (occupancy accumulator plus tail histograms) as of the last
+/// scheduler sweep.
+#[derive(Debug, Clone, Default)]
+pub struct StatsSnapshot {
+    /// Client connections that completed the handshake.
+    pub connections: u64,
+    /// Requests submitted into the scheduler on behalf of clients.
+    pub requests: u64,
+    /// Requests currently holding a decode slot.
+    pub active: u32,
+    /// Requests admitted but waiting for a free slot.
+    pub queued: u32,
+    /// Client-facing wire traffic (the gateway's aggregate meter).
+    pub gateway_link: LinkStats,
+    /// Mesh wire traffic by peer node id (node 0's own slot is zero).
+    pub mesh_links: Vec<LinkStats>,
+    /// Aggregate decode-phase metrics across completed requests —
+    /// occupancy min/mean/max and the p50/p90/p99 latency histograms.
+    pub decode: PhaseMetrics,
 }
 
 /// One event from the serving daemon to a client — `TokenEvent` with
@@ -84,6 +120,9 @@ pub enum ServerMsg {
     Token { id: u64, token: u32, logprob: Option<f32> },
     Done { result: RequestResult },
     Failed { id: u64, error: String },
+    /// Reply to [`ClientMsg::Stats`] — the one message that belongs to
+    /// the connection, not to a request.
+    Stats(Box<StatsSnapshot>),
 }
 
 impl ClientMsg {
@@ -99,6 +138,7 @@ impl ClientMsg {
                 b.extend_from_slice(&id.to_le_bytes());
             }
             ClientMsg::Shutdown => b.push(K_SHUTDOWN),
+            ClientMsg::Stats => b.push(K_STATS),
         }
         b
     }
@@ -117,19 +157,27 @@ impl ClientMsg {
                 anyhow::ensure!(rest.is_empty(), "trailing bytes in shutdown message");
                 Ok(ClientMsg::Shutdown)
             }
+            K_STATS => {
+                anyhow::ensure!(rest.is_empty(), "trailing bytes in stats message");
+                Ok(ClientMsg::Stats)
+            }
             k => anyhow::bail!("unknown client message kind {k}"),
         }
     }
 }
 
 impl ServerMsg {
-    /// The request this event belongs to.
+    /// The request this event belongs to. `Stats` replies belong to the
+    /// connection, not a request — callers must branch on them before
+    /// demuxing by id (the sentinel here never collides with a real id
+    /// only by convention).
     pub fn id(&self) -> u64 {
         match self {
             ServerMsg::Started { id, .. }
             | ServerMsg::Token { id, .. }
             | ServerMsg::Failed { id, .. } => *id,
             ServerMsg::Done { result } => result.id,
+            ServerMsg::Stats(_) => u64::MAX,
         }
     }
 
@@ -164,6 +212,10 @@ impl ServerMsg {
                 b.extend_from_slice(&(error.len() as u32).to_le_bytes());
                 b.extend_from_slice(error.as_bytes());
             }
+            ServerMsg::Stats(snap) => {
+                b.push(K_STATS_REPLY);
+                encode_snapshot(b, snap);
+            }
         }
         b
     }
@@ -197,6 +249,7 @@ impl ServerMsg {
                     .map_err(|_| anyhow::anyhow!("non-utf8 error string"))?;
                 ServerMsg::Failed { id, error }
             }
+            K_STATS_REPLY => ServerMsg::Stats(Box::new(decode_snapshot(&mut c)?)),
             k => anyhow::bail!("unknown server message kind {k}"),
         };
         anyhow::ensure!(c.done(), "trailing bytes in server message");
@@ -298,6 +351,76 @@ fn check_magic_version(buf: &[u8]) -> Result<()> {
 
 // ---------------- result codec ----------------
 
+/// Sparse histogram encoding: min/max, then only the occupied buckets
+/// as `(u32 index, u64 count)` pairs. Exact — unlike the Welford
+/// accumulators, a histogram IS its counts, so quantiles survive the
+/// wire bit-for-bit.
+fn encode_hist(b: &mut Vec<u8>, h: &Histogram) {
+    b.extend_from_slice(&h.min().to_le_bytes());
+    b.extend_from_slice(&h.max().to_le_bytes());
+    let nz = h.nonzero();
+    b.extend_from_slice(&(nz.len() as u32).to_le_bytes());
+    for (idx, count) in nz {
+        b.extend_from_slice(&idx.to_le_bytes());
+        b.extend_from_slice(&count.to_le_bytes());
+    }
+}
+
+fn decode_hist(c: &mut Cursor) -> Result<Histogram> {
+    let (min, max) = (c.f64()?, c.f64()?);
+    let n = c.u32()? as usize;
+    anyhow::ensure!(n <= HIST_BUCKETS, "implausible bucket count {n} on the wire");
+    let mut buckets = Vec::with_capacity(n);
+    for _ in 0..n {
+        buckets.push((c.u32()?, c.u64()?));
+    }
+    Ok(Histogram::from_sparse(min, max, &buckets))
+}
+
+fn encode_link(b: &mut Vec<u8>, l: &LinkStats) {
+    for n in [l.sent_msgs, l.sent_bytes, l.send_ns, l.recv_msgs, l.recv_bytes, l.recv_wait_ns]
+    {
+        b.extend_from_slice(&n.to_le_bytes());
+    }
+}
+
+fn decode_link(c: &mut Cursor) -> Result<LinkStats> {
+    Ok(LinkStats {
+        sent_msgs: c.u64()?,
+        sent_bytes: c.u64()?,
+        send_ns: c.u64()?,
+        recv_msgs: c.u64()?,
+        recv_bytes: c.u64()?,
+        recv_wait_ns: c.u64()?,
+    })
+}
+
+fn encode_snapshot(b: &mut Vec<u8>, s: &StatsSnapshot) {
+    b.extend_from_slice(&s.connections.to_le_bytes());
+    b.extend_from_slice(&s.requests.to_le_bytes());
+    b.extend_from_slice(&s.active.to_le_bytes());
+    b.extend_from_slice(&s.queued.to_le_bytes());
+    encode_link(b, &s.gateway_link);
+    b.extend_from_slice(&(s.mesh_links.len() as u32).to_le_bytes());
+    for l in &s.mesh_links {
+        encode_link(b, l);
+    }
+    encode_phase(b, &s.decode);
+}
+
+fn decode_snapshot(c: &mut Cursor) -> Result<StatsSnapshot> {
+    let connections = c.u64()?;
+    let requests = c.u64()?;
+    let active = c.u32()?;
+    let queued = c.u32()?;
+    let gateway_link = decode_link(c)?;
+    let n = c.u32()? as usize;
+    anyhow::ensure!(n <= 4096, "implausible mesh size {n} on the wire");
+    let mesh_links = (0..n).map(|_| decode_link(c)).collect::<Result<Vec<_>>>()?;
+    let decode = decode_phase(c)?;
+    Ok(StatsSnapshot { connections, requests, active, queued, gateway_link, mesh_links, decode })
+}
+
 fn encode_phase(b: &mut Vec<u8>, p: &PhaseMetrics) {
     b.extend_from_slice(&p.tokens.to_le_bytes());
     for mean in [
@@ -321,6 +444,9 @@ fn encode_phase(b: &mut Vec<u8>, p: &PhaseMetrics) {
     b.extend_from_slice(&occ_max.to_le_bytes());
     for n in [p.h2d_bytes, p.d2h_bytes, p.net_msgs, p.net_bytes, p.exec_calls] {
         b.extend_from_slice(&n.to_le_bytes());
+    }
+    for h in [&p.hist_total, &p.hist_comm, &p.hist_d2h] {
+        encode_hist(b, h);
     }
 }
 
@@ -371,6 +497,11 @@ fn decode_phase(c: &mut Cursor) -> Result<PhaseMetrics> {
     p.net_msgs = c.u64()?;
     p.net_bytes = c.u64()?;
     p.exec_calls = c.u64()?;
+    // Unlike the mean-rebuilt accumulators above, the tail histograms
+    // arrive exactly: the wire counts ARE the distribution.
+    p.hist_total = decode_hist(c)?;
+    p.hist_comm = decode_hist(c)?;
+    p.hist_d2h = decode_hist(c)?;
     Ok(p)
 }
 
@@ -512,6 +643,18 @@ mod tests {
                 || (close(a.occupancy.min(), b.occupancy.min())
                     && close(a.occupancy.max(), b.occupancy.max())))
             && a.exec_calls == b.exec_calls
+            && hist_eq(&a.hist_total, &b.hist_total)
+            && hist_eq(&a.hist_comm, &b.hist_comm)
+            && hist_eq(&a.hist_d2h, &b.hist_d2h)
+    }
+
+    /// Histograms ship exactly — bucket counts and min/max must survive
+    /// bit-for-bit (to_bits so the ±INF of an empty histogram compares).
+    fn hist_eq(a: &crate::util::stats::Histogram, b: &crate::util::stats::Histogram) -> bool {
+        a.nonzero() == b.nonzero()
+            && a.count() == b.count()
+            && a.min().to_bits() == b.min().to_bits()
+            && a.max().to_bits() == b.max().to_bits()
     }
 
     fn result_eq(a: &RequestResult, b: &RequestResult) -> bool {
@@ -524,6 +667,37 @@ mod tests {
             && a.metrics.latency_ns == b.metrics.latency_ns
             && phase_eq(&a.metrics.prefill, &b.metrics.prefill)
             && phase_eq(&a.metrics.decode, &b.metrics.decode)
+    }
+
+    fn gen_snapshot(g: &mut Gen) -> StatsSnapshot {
+        let gen_link = |g: &mut Gen| LinkStats {
+            sent_msgs: g.u64_in(0..1 << 20),
+            sent_bytes: g.u64_in(0..1 << 30),
+            send_ns: g.u64_in(0..1 << 40),
+            recv_msgs: g.u64_in(0..1 << 20),
+            recv_bytes: g.u64_in(0..1 << 30),
+            recv_wait_ns: g.u64_in(0..1 << 40),
+        };
+        let n_peers = g.usize_in(0..5);
+        StatsSnapshot {
+            connections: g.u64_in(0..1 << 16),
+            requests: g.u64_in(0..1 << 20),
+            active: g.u64_in(0..16) as u32,
+            queued: g.u64_in(0..64) as u32,
+            gateway_link: gen_link(g),
+            mesh_links: (0..n_peers).map(|_| gen_link(g)).collect(),
+            decode: gen_phase(g),
+        }
+    }
+
+    fn snapshot_eq(a: &StatsSnapshot, b: &StatsSnapshot) -> bool {
+        a.connections == b.connections
+            && a.requests == b.requests
+            && a.active == b.active
+            && a.queued == b.queued
+            && a.gateway_link == b.gateway_link
+            && a.mesh_links == b.mesh_links
+            && phase_eq(&a.decode, &b.decode)
     }
 
     fn server_msg_eq(a: &ServerMsg, b: &ServerMsg) -> bool {
@@ -543,6 +717,7 @@ mod tests {
                 ServerMsg::Failed { id: ia, error: ea },
                 ServerMsg::Failed { id: ib, error: eb },
             ) => ia == ib && ea == eb,
+            (ServerMsg::Stats(sa), ServerMsg::Stats(sb)) => snapshot_eq(sa, sb),
             _ => false,
         }
     }
@@ -550,9 +725,10 @@ mod tests {
     #[test]
     fn client_msg_roundtrip_property() {
         forall("client frames round-trip", 128, |g| {
-            let msg = match g.usize_in(0..3) {
+            let msg = match g.usize_in(0..4) {
                 0 => ClientMsg::Submit(gen_request(g)),
                 1 => ClientMsg::Cancel(g.u64_in(0..u64::MAX >> 1)),
+                2 => ClientMsg::Stats,
                 _ => ClientMsg::Shutdown,
             };
             let mut wire = Vec::new();
@@ -564,7 +740,7 @@ mod tests {
     #[test]
     fn server_msg_roundtrip_property() {
         forall("server frames round-trip", 128, |g| {
-            let msg = match g.usize_in(0..4) {
+            let msg = match g.usize_in(0..5) {
                 0 => ServerMsg::Started {
                     id: g.u64_in(0..1 << 48),
                     ttft_s: g.f64_unit() * 100.0,
@@ -579,6 +755,7 @@ mod tests {
                     id: g.u64_in(0..1 << 48),
                     error: format!("wire error {}", g.u64_in(0..1000)),
                 },
+                3 => ServerMsg::Stats(Box::new(gen_snapshot(g))),
                 _ => ServerMsg::Done { result: gen_result(g) },
             };
             let mut wire = Vec::new();
@@ -586,6 +763,45 @@ mod tests {
             let back = read_server(&mut std::io::Cursor::new(wire)).unwrap();
             server_msg_eq(&msg, &back)
         });
+    }
+
+    #[test]
+    fn stats_snapshot_quantiles_survive_the_wire() {
+        // The point of shipping histograms sparsely: a client-side p99
+        // must equal the daemon-side p99 exactly, stragglers included.
+        let mut p = PhaseMetrics::default();
+        for i in 0..100u64 {
+            let straggler = i >= 90;
+            p.push(TokenBreakdown {
+                moe_ns: 800_000 + i * 1_000,
+                comm_ns: if straggler { 99_000_000 } else { 150_000 },
+                misc_ns: 50_000,
+                d2h_ns: 10_000,
+                batch_rows: 4,
+                ..Default::default()
+            });
+        }
+        let snap = StatsSnapshot {
+            connections: 2,
+            requests: 5,
+            active: 1,
+            queued: 3,
+            mesh_links: vec![LinkStats::default(); 2],
+            decode: p,
+            ..Default::default()
+        };
+        let wire = ServerMsg::Stats(Box::new(snap.clone())).encode();
+        let ServerMsg::Stats(back) = ServerMsg::decode(&wire).unwrap() else {
+            panic!("stats reply decoded as a different message kind");
+        };
+        assert!(snapshot_eq(&snap, &back));
+        assert_eq!(
+            snap.decode.token_latency_quantiles_s(),
+            back.decode.token_latency_quantiles_s()
+        );
+        assert_eq!(snap.decode.comm_quantiles_s(), back.decode.comm_quantiles_s());
+        let (_, _, p99) = back.decode.comm_quantiles_s();
+        assert!(p99 > 0.050, "straggler tail lost on the wire: p99 = {p99}");
     }
 
     #[test]

@@ -29,12 +29,21 @@ use crate::network::transport::{Endpoint, Envelope, NetError, Transport};
 /// (continuous batching) — a v1 worker would misparse it as activation
 /// bytes and silently compute garbage, so mixed meshes must fail the
 /// handshake instead.
-pub const PROTOCOL_VERSION: u16 = 2;
+///
+/// v3: every connection runs a clock-sync ping-pong right after the
+/// handshake (see [`clock_sync_measure`]) — a v2 peer would read the
+/// ping as a frame header, so mixed meshes must fail the handshake.
+pub const PROTOCOL_VERSION: u16 = 3;
 const MAGIC: [u8; 4] = *b"AMOE";
 const HANDSHAKE_LEN: usize = 14;
 const FRAME_HEADER_LEN: usize = 20;
 /// Corrupt-stream guard: no protocol message comes close to this.
 const MAX_FRAME_PAYLOAD: u32 = 1 << 30;
+/// Ping-pong rounds per connection for the clock-offset estimate; the
+/// round with the smallest RTT wins (same approach as `net-bench`'s
+/// RTT measurement — the minimum is the least queueing-polluted
+/// sample).
+const CLOCK_SYNC_ROUNDS: usize = 5;
 
 /// Socket knobs for one node's fabric attachment.
 #[derive(Debug, Clone)]
@@ -119,6 +128,48 @@ fn read_handshake(s: &mut TcpStream) -> Result<(usize, usize), NetError> {
     Ok((node, n))
 }
 
+/// Cross-process clock correlation, measurer side (always the
+/// LOWER-id node of a connection — node 0 therefore measures every
+/// peer directly). Each round sends our trace-clock reading
+/// (`obs::epoch_ns`), the peer echoes its own, and the midpoint of the
+/// lowest-RTT round estimates the offset mapping the peer's timestamps
+/// onto ours: `t_here = t_peer + offset`. The final frame ships the
+/// chosen offset to the peer so both ends of the link agree (negated
+/// on the far side).
+fn clock_sync_measure(s: &mut TcpStream) -> Result<i64, NetError> {
+    let mut buf = [0u8; 8];
+    let mut best_rtt = u64::MAX;
+    let mut best_off = 0i64;
+    for _ in 0..CLOCK_SYNC_ROUNDS {
+        let m0 = crate::obs::epoch_ns();
+        s.write_all(&m0.to_le_bytes())?;
+        s.read_exact(&mut buf)?;
+        let m1 = crate::obs::epoch_ns();
+        let rtt = m1.saturating_sub(m0);
+        if rtt < best_rtt {
+            best_rtt = rtt;
+            let peer_mid = u64::from_le_bytes(buf);
+            best_off = ((m0 + m1) / 2) as i64 - peer_mid as i64;
+        }
+    }
+    s.write_all(&best_off.to_le_bytes())?;
+    Ok(best_off)
+}
+
+/// Clock correlation, echo side (the HIGHER-id node): answer each ping
+/// with our trace-clock reading, then receive the measurer's chosen
+/// offset. Negated so this side's entry also satisfies
+/// `t_here = t_peer + offset`.
+fn clock_sync_echo(s: &mut TcpStream) -> Result<i64, NetError> {
+    let mut buf = [0u8; 8];
+    for _ in 0..CLOCK_SYNC_ROUNDS {
+        s.read_exact(&mut buf)?;
+        s.write_all(&crate::obs::epoch_ns().to_le_bytes())?;
+    }
+    s.read_exact(&mut buf)?;
+    Ok(-i64::from_le_bytes(buf))
+}
+
 /// Socket-backed transport: full mesh of `TcpStream`s, one reader
 /// thread per peer feeding a shared channel.
 pub struct TcpTransport {
@@ -126,6 +177,9 @@ pub struct TcpTransport {
     n_nodes: usize,
     /// Write halves, indexed by peer id (`None` at our own slot).
     writers: Vec<Option<TcpStream>>,
+    /// Per-peer clock offsets measured at handshake (0 at our slot):
+    /// `t_here = t_peer + offsets[peer]`.
+    offsets: Vec<i64>,
     rx: Receiver<Envelope>,
 }
 
@@ -136,6 +190,10 @@ impl Transport for TcpTransport {
 
     fn n_nodes(&self) -> usize {
         self.n_nodes
+    }
+
+    fn clock_offset_ns(&self, peer: usize) -> i64 {
+        self.offsets.get(peer).copied().unwrap_or(0)
     }
 
     fn send_raw(&mut self, env: Envelope) -> Result<(), NetError> {
@@ -264,11 +322,14 @@ fn establish(
     let n = addrs.len();
     let deadline = Instant::now() + opts.connect_timeout;
     let mut writers: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+    let mut offsets = vec![0i64; n];
 
-    // Dial every lower-id peer.
+    // Dial every lower-id peer. The acceptor (lower id) runs the
+    // clock-sync measurement, so we take the echo role here.
     for peer in 0..node {
         let mut stream = connect_retry(&addrs[peer], deadline)?;
         stream.set_read_timeout(Some(time_left(deadline)?))?;
+        stream.set_nodelay(true)?; // ping-pong below is latency-critical
         write_handshake(&mut stream, node, n)?;
         let (pid, pn) = read_handshake(&mut stream)?;
         if pid != peer || pn != n {
@@ -277,6 +338,7 @@ fn establish(
                 addrs[peer]
             )));
         }
+        offsets[peer] = clock_sync_echo(&mut stream)?;
         writers[peer] = Some(stream);
     }
     // Accept one connection from every higher-id peer (any order). A
@@ -307,7 +369,11 @@ fn establish(
         if writers[pid].is_some() {
             return Err(NetError::Handshake(format!("node {pid} connected twice")));
         }
+        stream.set_nodelay(true)?; // ping-pong below is latency-critical
         write_handshake(&mut stream, node, n)?;
+        // We are the lower id on every accepted connection: measure the
+        // peer's clock offset (node 0 thereby measures ALL peers).
+        offsets[pid] = clock_sync_measure(&mut stream)?;
         writers[pid] = Some(stream);
         accepted += 1;
     }
@@ -323,7 +389,7 @@ fn establish(
             std::thread::spawn(move || reader_loop(rdr, tx, node, peer));
         }
     }
-    Ok(TcpTransport { node, n_nodes: n, writers, rx })
+    Ok(TcpTransport { node, n_nodes: n, writers, offsets, rx })
 }
 
 /// Join a cluster as `node`: bind `addrs[node]`, mesh up with every
@@ -505,6 +571,7 @@ mod tests {
             write_handshake(&mut s, 1, 2).unwrap();
             let (pid, pn) = read_handshake(&mut s).unwrap();
             assert_eq!((pid, pn), (0, 2));
+            let _off = clock_sync_echo(&mut s).unwrap(); // v3 post-handshake step
             s // keep the mesh connection alive until node 0 is done
         });
         let t0 = Instant::now();
@@ -517,6 +584,26 @@ mod tests {
         );
         let _peer_stream = peer.join().unwrap();
         drop(silent);
+    }
+
+    #[test]
+    fn clock_offsets_are_antisymmetric_and_small_on_loopback() {
+        // Both endpoints share one process (one trace clock), so the
+        // true offset is 0: the estimate is bounded by the loopback
+        // RTT, and the two ends of each link must agree up to sign.
+        let eps = loopback_fabric(3).unwrap();
+        for a in 0..3 {
+            for b in 0..3 {
+                if a == b {
+                    assert_eq!(eps[a].clock_offset_ns(b), 0);
+                    continue;
+                }
+                let ab = eps[a].clock_offset_ns(b);
+                let ba = eps[b].clock_offset_ns(a);
+                assert_eq!(ab, -ba, "link {a}<->{b} disagrees on its offset");
+                assert!(ab.abs() < 50_000_000, "offset {ab} ns implausible on loopback");
+            }
+        }
     }
 
     #[test]

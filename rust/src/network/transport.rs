@@ -72,6 +72,13 @@ pub trait Transport: Send {
     fn send_raw(&mut self, env: Envelope) -> Result<(), NetError>;
     /// Blocking receive of the next envelope, any tag.
     fn recv_raw(&mut self, timeout: Duration) -> Result<Envelope, NetError>;
+    /// Estimated offset (ns) mapping `peer`'s trace clock onto ours
+    /// (`t_here = t_peer + offset`). Backends that share one process —
+    /// and therefore one monotonic clock — return 0; the TCP backend
+    /// measures it during its handshake (see `network::tcp`).
+    fn clock_offset_ns(&self, _peer: usize) -> i64 {
+        0
+    }
 }
 
 /// Per-endpoint traffic accounting: messages, bytes and time spent in
@@ -118,6 +125,11 @@ pub struct Endpoint {
     /// by tag (FIFO per tag).
     stash: HashMap<u64, VecDeque<Envelope>>,
     stats: LinkStats,
+    /// Cumulative per-peer counters (indexed by peer node id, own slot
+    /// stays zero). Never drained — `take_stats` resets only the
+    /// per-token meter above — so a live `--stats` pull or an
+    /// end-of-run report sees the whole conversation.
+    totals: Vec<LinkStats>,
 }
 
 /// Build a fully-connected in-process fabric of `n` endpoints.
@@ -148,7 +160,8 @@ pub fn fabric(n: usize, profile: Option<NetworkProfile>) -> Vec<Endpoint> {
 
 impl Endpoint {
     pub fn new(backend: Box<dyn Transport>) -> Endpoint {
-        Endpoint { backend, stash: HashMap::new(), stats: LinkStats::default() }
+        let totals = vec![LinkStats::default(); backend.n_nodes()];
+        Endpoint { backend, stash: HashMap::new(), stats: LinkStats::default(), totals }
     }
 
     pub fn node(&self) -> usize {
@@ -169,15 +182,34 @@ impl Endpoint {
         std::mem::take(&mut self.stats)
     }
 
+    /// Cumulative per-peer traffic since construction (own slot zero);
+    /// unaffected by `take_stats`.
+    pub fn peer_totals(&self) -> &[LinkStats] {
+        &self.totals
+    }
+
+    /// Clock offset mapping `peer`'s trace timestamps onto this node's
+    /// timeline (see [`Transport::clock_offset_ns`]).
+    pub fn clock_offset_ns(&self, peer: usize) -> i64 {
+        self.backend.clock_offset_ns(peer)
+    }
+
     /// Send `payload` to `to`.
     pub fn send(&mut self, to: usize, tag: u64, payload: Vec<u8>) -> Result<(), NetError> {
         let from = self.backend.node();
         let bytes = payload.len() as u64;
+        let _sp = crate::obs::span("net.send").arg("to", to as u64).arg("bytes", bytes);
         let t0 = Instant::now();
         self.backend.send_raw(Envelope { from, to, tag, payload })?;
+        let ns = t0.elapsed().as_nanos() as u64;
         self.stats.sent_msgs += 1;
         self.stats.sent_bytes += bytes;
-        self.stats.send_ns += t0.elapsed().as_nanos() as u64;
+        self.stats.send_ns += ns;
+        if let Some(t) = self.totals.get_mut(to) {
+            t.sent_msgs += 1;
+            t.sent_bytes += bytes;
+            t.send_ns += ns;
+        }
         Ok(())
     }
 
@@ -227,7 +259,23 @@ impl Endpoint {
     fn note_recv(&mut self, env: &Envelope, t0: Instant) {
         self.stats.recv_msgs += 1;
         self.stats.recv_bytes += env.payload.len() as u64;
-        self.stats.recv_wait_ns += t0.elapsed().as_nanos() as u64;
+        let wait_ns = t0.elapsed().as_nanos() as u64;
+        self.stats.recv_wait_ns += wait_ns;
+        if let Some(t) = self.totals.get_mut(env.from) {
+            t.recv_msgs += 1;
+            t.recv_bytes += env.payload.len() as u64;
+            t.recv_wait_ns += wait_ns;
+        }
+        // Trace only *successful* receives (polling timeouts would spam
+        // the timeline): the span covers the whole tagged wait.
+        if crate::obs::enabled() {
+            crate::obs::record_span(
+                "net.recv",
+                crate::obs::epoch_ns().saturating_sub(wait_ns),
+                wait_ns,
+                &[("from", env.from as u64), ("bytes", env.payload.len() as u64)],
+            );
+        }
     }
 
     /// Gather one `tag` message from every other node. A timeout names

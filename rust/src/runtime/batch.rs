@@ -86,6 +86,9 @@ impl<'a> BatchedRun<'a> {
         if tokens.len() != rows || positions.len() != rows {
             bail!("tokens/positions length mismatch");
         }
+        let _sp = crate::obs::span("batch.begin")
+            .arg("bucket", bucket as u64)
+            .arg("rows", rows as u64);
         let exes = rt.batched(bucket)?;
         let mut toks = vec![0i32; bucket]; // padding rows feed token 0
         let mut pos = vec![0i32; bucket]; // ... at position 0
@@ -124,6 +127,7 @@ impl<'a> BatchedRun<'a> {
         rt: &NanoRuntime,
         layer: usize,
     ) -> Result<Vec<(Vec<f32>, Vec<usize>)>> {
+        let _sp = crate::obs::span("batch.attn_router").arg("layer", layer as u64);
         let exes = rt.batched(self.bucket)?;
         let w = rt.attn_weights(layer);
         let (ln1, wqkv, wo, ln2, wr) = (&w[0], &w[1], &w[2], &w[3], &w[4]);
@@ -168,7 +172,9 @@ impl<'a> BatchedRun<'a> {
         let h = rt.run_dev(&exes.attn_out, &args)?;
         let moe_in = rt.run_dev(&exes.moe_norm, &[ln2, &h])?;
         let packed_buf = rt.run_dev(&exes.router, &[wr, &moe_in])?;
+        let topk_sp = crate::obs::span("router.topk_d2h").arg("layer", layer as u64);
         let packed = rt.download_f32(&packed_buf)?;
+        drop(topk_sp);
 
         self.x = Some(x);
         self.h = Some(h);
@@ -211,6 +217,7 @@ impl<'a> BatchedRun<'a> {
         if slot_idx.len() != slot_w.len() || slot_idx.len() % self.bucket != 0 {
             bail!("slot_idx/slot_w shape mismatch");
         }
+        let _sp = crate::obs::span("batch.experts").arg("layer", layer as u64);
         let ns = slot_idx.len() / self.bucket;
         let exes = rt.batched(self.bucket)?;
         let moe_in = self.moe_in.take().context("no moe_in: run attn_router first")?;
@@ -276,6 +283,7 @@ impl<'a> BatchedRun<'a> {
     /// reference/fallback path (`--host-sampler`, device-incompatible
     /// requests); the hot path is [`BatchedRun::sample_on_device`].
     pub fn logits_into(&self, rt: &NanoRuntime, out: &mut Vec<f32>) -> Result<()> {
+        let _sp = crate::obs::span("batch.logits_d2h").arg("bucket", self.bucket as u64);
         let exes = rt.batched(self.bucket)?;
         let x = self.x.as_ref().context("no residual stream: batch not run")?;
         let b = rt.run_dev(&exes.lm_head, &[rt.lnf_buf(), rt.head_buf(), x])?;
@@ -302,6 +310,7 @@ impl<'a> BatchedRun<'a> {
         if inputs.len() != rows {
             bail!("{} sampler inputs for {rows} rows", inputs.len());
         }
+        let _sp = crate::obs::span("batch.sample").arg("rows", rows as u64);
         let exes = rt.batched(self.bucket)?;
         let x = self.x.as_ref().context("no residual stream: batch not run")?;
         let logits = rt.run_dev(&exes.lm_head, &[rt.lnf_buf(), rt.head_buf(), x])?;

@@ -1,11 +1,27 @@
 //! Minimal `log` backend writing to stderr with level filtering via the
 //! `APPLE_MOE_LOG` environment variable (`error|warn|info|debug|trace`).
+//!
+//! Each line is prefixed with the elapsed monotonic time since this
+//! process installed the logger (`[+12.345s]`), so the interleaved
+//! stderr of a multi-process `launch` run can be ordered by eye even
+//! though the node processes share one terminal.
+
+use std::sync::OnceLock;
+use std::time::Instant;
 
 use log::{Level, LevelFilter, Metadata, Record};
 
 struct StderrLogger;
 
 static LOGGER: StderrLogger = StderrLogger;
+
+/// Process-wide epoch for the elapsed-time prefix, pinned at `init()`.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Seconds since `init()` (0.0 if the logger was never installed).
+pub fn elapsed_s() -> f64 {
+    EPOCH.get().map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0)
+}
 
 impl log::Log for StderrLogger {
     fn enabled(&self, metadata: &Metadata) -> bool {
@@ -23,26 +39,40 @@ impl log::Log for StderrLogger {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
-        eprintln!("[{lvl}] {}: {}", record.target(), record.args());
+        eprintln!("[+{:9.3}s] [{lvl}] {}: {}", elapsed_s(), record.target(), record.args());
     }
 
     fn flush(&self) {}
 }
 
 /// Install the logger (idempotent). Level from `APPLE_MOE_LOG`, default
-/// `info`.
+/// `info`. A SET but unrecognized value (`APPLE_MOE_LOG=inof`) falls
+/// back to `info` with one warning, instead of silently meaning `info`.
 pub fn init() {
-    let level = match std::env::var("APPLE_MOE_LOG").as_deref() {
+    EPOCH.get_or_init(Instant::now);
+    let var = std::env::var("APPLE_MOE_LOG");
+    let level = match var.as_deref() {
         Ok("error") => LevelFilter::Error,
         Ok("warn") => LevelFilter::Warn,
+        Ok("info") => LevelFilter::Info,
         Ok("debug") => LevelFilter::Debug,
         Ok("trace") => LevelFilter::Trace,
         Ok("off") => LevelFilter::Off,
         _ => LevelFilter::Info,
     };
     // set_logger fails if called twice; that's fine.
-    let _ = log::set_logger(&LOGGER);
+    let first = log::set_logger(&LOGGER).is_ok();
     log::set_max_level(level);
+    if first {
+        if let Ok(v) = var.as_deref() {
+            if !matches!(v, "error" | "warn" | "info" | "debug" | "trace" | "off") {
+                log::warn!(
+                    "unrecognized APPLE_MOE_LOG value '{v}' (want \
+                     error|warn|info|debug|trace|off); defaulting to info"
+                );
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -52,5 +82,6 @@ mod tests {
         super::init();
         super::init();
         log::info!("logging works");
+        assert!(super::elapsed_s() >= 0.0);
     }
 }

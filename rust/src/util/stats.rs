@@ -67,13 +67,23 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
 
 /// Welford online mean/variance accumulator — used by hot-path metric
 /// counters where we cannot afford to keep every observation.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Welford {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+/// NOT derived: `#[derive(Default)]` would zero min/max, so the first
+/// real sample could never lower `min` below 0.0 — every
+/// default-constructed accumulator (e.g. in `PhaseMetrics::default()`)
+/// would report a bogus range.
+impl Default for Welford {
+    fn default() -> Self {
+        Welford::new()
+    }
 }
 
 impl Welford {
@@ -153,6 +163,179 @@ impl Welford {
     }
 }
 
+/// Subdivisions per power of two in [`Histogram`] — the resolution
+/// knob: quantile estimates are exact to within one sub-bucket, i.e. a
+/// relative error of at most `1/SUBDIV` (~6%).
+const SUBDIV: usize = 16;
+
+/// Number of power-of-two octaves tracked. `2^42` ns ≈ 73 minutes —
+/// beyond any span we meter; larger values clamp into the last bucket.
+const E_MAX: usize = 42;
+
+/// Total bucket count: one underflow bucket for `v < 1.0` plus
+/// `SUBDIV` log-linear buckets per exponent.
+pub const HIST_BUCKETS: usize = 1 + E_MAX * SUBDIV;
+
+/// Bounded log-linear histogram — the tail-quantile companion to
+/// [`Welford`]. Fixed bucket count (no allocation after construction),
+/// O(1) push, mergeable by adding counts, and `quantile()` accurate to
+/// ~`1/SUBDIV` relative error. Designed for nanosecond latencies:
+/// bucket 0 absorbs sub-nanosecond (and negative/non-finite) values,
+/// buckets above split each octave `[2^e, 2^(e+1))` into `SUBDIV`
+/// equal-width slices.
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Box<[u64; HIST_BUCKETS]>,
+    n: u64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("n", &self.n)
+            .field("min", &self.min)
+            .field("max", &self.max)
+            .finish()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: Box::new([0u64; HIST_BUCKETS]),
+            n: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Bucket index for a value. Exponent and mantissa come straight
+    /// from the f64 bit pattern, so this is branch-light and exact.
+    #[inline]
+    fn index(v: f64) -> usize {
+        if v.is_nan() || v < 1.0 {
+            return 0; // underflow bucket (also NaN / negative)
+        }
+        let bits = v.to_bits();
+        let e = ((bits >> 52) & 0x7ff) as usize - 1023;
+        if e >= E_MAX {
+            return HIST_BUCKETS - 1;
+        }
+        // Top SUBDIV bits of the mantissa = which equal-width slice of
+        // the octave the value falls in.
+        let sub = ((bits >> (52 - SUBDIV.trailing_zeros())) & (SUBDIV as u64 - 1)) as usize;
+        1 + e * SUBDIV + sub
+    }
+
+    /// Lower/upper value bounds of a bucket.
+    fn bounds(idx: usize) -> (f64, f64) {
+        if idx == 0 {
+            return (0.0, 1.0);
+        }
+        let e = (idx - 1) / SUBDIV;
+        let sub = (idx - 1) % SUBDIV;
+        let base = (2.0f64).powi(e as i32);
+        let width = base / SUBDIV as f64;
+        (base + sub as f64 * width, base + (sub + 1) as f64 * width)
+    }
+
+    #[inline]
+    pub fn push(&mut self, v: f64) {
+        self.counts[Self::index(v)] += 1;
+        self.n += 1;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Estimated quantile, `q ∈ [0, 1]`. Walks the cumulative counts to
+    /// the target rank and interpolates linearly inside the landing
+    /// bucket, clamped to the exact observed [min, max]. Returns 0.0
+    /// for an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = q * self.n as f64;
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if (next as f64) >= target {
+                let (lo, hi) = Self::bounds(idx);
+                let frac = (target - cum as f64) / c as f64;
+                let v = lo + frac * (hi - lo);
+                return v.clamp(self.min, self.max);
+            }
+            cum = next;
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one (bucket-wise add) — the
+    /// same parallel-combine contract as [`Welford::merge`].
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Sparse view for wire encoding: the non-empty buckets only.
+    pub fn nonzero(&self) -> Vec<(u32, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i as u32, c))
+            .collect()
+    }
+
+    /// Rebuild from a sparse bucket list (`n` is implied by the
+    /// counts; min/max travel separately since buckets only bound them).
+    pub fn from_sparse(min: f64, max: f64, buckets: &[(u32, u64)]) -> Histogram {
+        let mut h = Histogram::new();
+        for &(idx, c) in buckets {
+            let idx = (idx as usize).min(HIST_BUCKETS - 1);
+            h.counts[idx] += c;
+            h.n += c;
+        }
+        if h.n > 0 {
+            h.min = min;
+            h.max = max;
+        }
+        h
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,6 +384,113 @@ mod tests {
         assert!((w.std_dev() - s.std_dev).abs() < 1e-9);
         assert_eq!(w.min(), s.min);
         assert_eq!(w.max(), s.max);
+    }
+
+    #[test]
+    fn welford_default_matches_new() {
+        // Regression: the derived Default zeroed min/max, so a first
+        // sample of e.g. 5.0 left min() at 0.0 forever.
+        let mut w = Welford::default();
+        assert_eq!(w.min(), f64::INFINITY);
+        assert_eq!(w.max(), f64::NEG_INFINITY);
+        w.push(5.0);
+        assert_eq!(w.min(), 5.0);
+        assert_eq!(w.max(), 5.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_match_exact_percentiles() {
+        // Several known shapes: the histogram estimate must land
+        // within one sub-bucket (1/SUBDIV relative) of the exact
+        // sorted-sample percentile.
+        let shapes: Vec<Vec<f64>> = vec![
+            (1..=1000).map(|i| i as f64).collect(), // uniform
+            (0..1000).map(|i| 1.01f64.powi(i)).collect(), // log-uniform
+            (0..2000)
+                .map(|i| if i % 10 == 0 { 5e6 } else { 1e3 + i as f64 })
+                .collect(), // bimodal w/ heavy tail
+        ];
+        for xs in shapes {
+            let mut h = Histogram::new();
+            for &x in &xs {
+                h.push(x);
+            }
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.5, 0.9, 0.99] {
+                let exact = percentile_sorted(&sorted, q);
+                let est = h.quantile(q);
+                // One sub-bucket of relative error, plus slack for the
+                // rank-definition difference (q·n vs q·(n−1)).
+                let tol = exact * 2.0 / SUBDIV as f64 + 1e-9;
+                assert!(
+                    (est - exact).abs() <= tol,
+                    "q={q}: est {est} vs exact {exact} (tol {tol})"
+                );
+            }
+            assert_eq!(h.count(), xs.len() as u64);
+            assert_eq!(h.quantile(0.0), sorted[0]);
+            assert_eq!(h.quantile(1.0), sorted[sorted.len() - 1]);
+        }
+    }
+
+    #[test]
+    fn histogram_underflow_and_overflow_clamp() {
+        let mut h = Histogram::new();
+        h.push(0.25); // underflow bucket
+        h.push(-3.0); // negative → underflow bucket
+        h.push(1e18); // beyond E_MAX → last bucket
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.min(), -3.0);
+        assert_eq!(h.max(), 1e18);
+        // Quantiles stay inside the observed range despite clamping.
+        assert!(h.quantile(0.99) <= 1e18);
+        assert!(h.quantile(0.01) >= -3.0);
+    }
+
+    #[test]
+    fn histogram_merge_is_associative_and_matches_sequential() {
+        let xs: Vec<f64> = (0..900).map(|i| ((i * 37) % 1000) as f64 + 1.0).collect();
+        let mut parts: Vec<Histogram> = (0..3).map(|_| Histogram::new()).collect();
+        for (i, &x) in xs.iter().enumerate() {
+            parts[i % 3].push(x);
+        }
+        let mut all = Histogram::new();
+        for &x in &xs {
+            all.push(x);
+        }
+        // (a ⊕ b) ⊕ c
+        let mut left = parts[0].clone();
+        left.merge(&parts[1]);
+        left.merge(&parts[2]);
+        // a ⊕ (b ⊕ c)
+        let mut right_tail = parts[1].clone();
+        right_tail.merge(&parts[2]);
+        let mut right = parts[0].clone();
+        right.merge(&right_tail);
+        for h in [&left, &right] {
+            assert_eq!(h.count(), all.count());
+            assert_eq!(h.min(), all.min());
+            assert_eq!(h.max(), all.max());
+            for q in [0.1, 0.5, 0.9, 0.99] {
+                assert_eq!(h.quantile(q), all.quantile(q));
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_sparse_roundtrip() {
+        let mut h = Histogram::new();
+        for x in [0.5, 3.0, 17.0, 1e6, 2.5e9] {
+            h.push(x);
+        }
+        let r = Histogram::from_sparse(h.min(), h.max(), &h.nonzero());
+        assert_eq!(r.count(), h.count());
+        assert_eq!(r.min(), h.min());
+        assert_eq!(r.max(), h.max());
+        for q in [0.25, 0.5, 0.75, 0.99] {
+            assert_eq!(r.quantile(q), h.quantile(q));
+        }
     }
 
     #[test]

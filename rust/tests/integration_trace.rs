@@ -1,0 +1,314 @@
+//! Integration: the cross-process trace pipeline. `apple-moe launch
+//! --trace-out` spawns real OS processes; every node records spans into
+//! its own ring, the follower ships its buffer to node 0 over the mesh
+//! at shutdown (`PHASE_TRACE`), and node 0 writes ONE merged Chrome
+//! Trace Event Format JSON with the follower's timestamps rebased onto
+//! its clock (the per-peer offset measured during the TCP handshake).
+//! The assertions here are the subsystem's acceptance criteria: the
+//! file is valid JSON in the Chrome-trace schema, BOTH processes
+//! contributed spans, and the follower's scheduler iterations nest
+//! inside the leader's run window after offset correction.
+//! Skips politely until `make artifacts` has run.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Minimal strict JSON checker (the crate deliberately carries no JSON
+// dependency): parses the full grammar and panics on any malformation,
+// so a trace that chrome://tracing would reject fails the test here.
+
+struct Json<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Json<'_> {
+    fn fail(&self, why: &str) -> ! {
+        panic!("invalid JSON at byte {}: {why}", self.i)
+    }
+
+    fn peek(&self) -> u8 {
+        match self.b.get(self.i) {
+            Some(c) => *c,
+            None => self.fail("truncated"),
+        }
+    }
+
+    fn bump(&mut self) -> u8 {
+        let c = self.peek();
+        self.i += 1;
+        c
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn value(&mut self) {
+        match self.peek() {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => self.string(),
+            b't' => self.lit(b"true"),
+            b'f' => self.lit(b"false"),
+            b'n' => self.lit(b"null"),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => self.fail(&format!("unexpected byte {c:#x}")),
+        }
+    }
+
+    fn lit(&mut self, want: &[u8]) {
+        if self.b.len() < self.i + want.len() || &self.b[self.i..self.i + want.len()] != want {
+            self.fail("bad literal");
+        }
+        self.i += want.len();
+    }
+
+    fn number(&mut self) {
+        let start = self.i;
+        if self.peek() == b'-' {
+            self.bump();
+        }
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            self.i += 1;
+        }
+        let ok = std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .is_some();
+        if !ok {
+            self.fail("bad number");
+        }
+    }
+
+    fn string(&mut self) {
+        if self.bump() != b'"' {
+            self.fail("expected string");
+        }
+        loop {
+            match self.bump() {
+                b'"' => return,
+                b'\\' => {
+                    self.bump();
+                }
+                c if c < 0x20 => self.fail("raw control char in string"),
+                _ => {}
+            }
+        }
+    }
+
+    fn array(&mut self) {
+        self.bump();
+        self.ws();
+        if self.peek() == b']' {
+            self.bump();
+            return;
+        }
+        loop {
+            self.value();
+            self.ws();
+            match self.bump() {
+                b',' => self.ws(),
+                b']' => return,
+                _ => self.fail("expected , or ]"),
+            }
+        }
+    }
+
+    fn object(&mut self) {
+        self.bump();
+        self.ws();
+        if self.peek() == b'}' {
+            self.bump();
+            return;
+        }
+        loop {
+            self.string();
+            self.ws();
+            if self.bump() != b':' {
+                self.fail("expected :");
+            }
+            self.ws();
+            self.value();
+            self.ws();
+            match self.bump() {
+                b',' => self.ws(),
+                b'}' => return,
+                _ => self.fail("expected , or }"),
+            }
+        }
+    }
+}
+
+fn check_json(s: &str) {
+    let mut p = Json { b: s.as_bytes(), i: 0 };
+    p.ws();
+    p.value();
+    p.ws();
+    assert_eq!(p.i, p.b.len(), "trailing garbage after JSON value");
+}
+
+// ---------------------------------------------------------------------------
+// Event extraction. The emitter writes one flat object per event, so
+// top-level-brace scanning inside `traceEvents` splits them exactly.
+
+fn events(trace: &str) -> Vec<String> {
+    let tag = "\"traceEvents\":[";
+    let start = trace.find(tag).expect("traceEvents array") + tag.len();
+    let body = &trace[start..trace.rfind("]}").expect("closing ]}")];
+    let mut out = Vec::new();
+    let (mut depth, mut obj_start, mut in_str, mut esc) = (0usize, 0usize, false, false);
+    for (i, c) in body.char_indices() {
+        if esc {
+            esc = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => esc = true,
+            '"' => in_str = !in_str,
+            '{' if !in_str => {
+                if depth == 0 {
+                    obj_start = i;
+                }
+                depth += 1;
+            }
+            '}' if !in_str => {
+                depth -= 1;
+                if depth == 0 {
+                    out.push(body[obj_start..=i].to_string());
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+fn str_field(obj: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":\"");
+    let i = obj.find(&pat)? + pat.len();
+    let j = obj[i..].find('"')? + i;
+    Some(obj[i..j].to_string())
+}
+
+fn num_field(obj: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let i = obj.find(&pat)? + pat.len();
+    let rest = &obj[i..];
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+// ---------------------------------------------------------------------------
+
+#[test]
+fn launch_trace_out_merges_spans_from_both_processes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let trace_path =
+        std::env::temp_dir().join(format!("apple-moe-trace-{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&trace_path);
+    let status = Command::new(env!("CARGO_BIN_EXE_apple-moe"))
+        .args([
+            "launch",
+            "--nodes",
+            "2",
+            "--requests",
+            "2",
+            "--prompt-tokens",
+            "4",
+            "--gen-tokens",
+            "6",
+            "--concurrency",
+            "2",
+            "--recv-timeout-secs",
+            "120",
+            "--trace-out",
+        ])
+        .arg(&trace_path)
+        .arg("--artifacts")
+        .arg(&dir)
+        .status()
+        .expect("spawning apple-moe launch --trace-out");
+    assert!(status.success(), "launch --trace-out exited with {status}");
+    let trace = std::fs::read_to_string(&trace_path).expect("trace file written by node 0");
+    let _ = std::fs::remove_file(&trace_path);
+
+    // Schema: strictly valid JSON, Chrome-trace envelope, and every "X"
+    // span carries name/ts/dur/pid/tid.
+    check_json(&trace);
+    assert!(
+        trace.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["),
+        "unexpected envelope: {}",
+        &trace[..trace.len().min(80)]
+    );
+    let evs = events(&trace);
+    let spans: Vec<&String> =
+        evs.iter().filter(|e| str_field(e, "ph").as_deref() == Some("X")).collect();
+    assert!(!spans.is_empty(), "trace has no spans");
+    for e in &spans {
+        assert!(str_field(e, "name").is_some(), "span without name: {e}");
+        for k in ["ts", "dur", "pid", "tid"] {
+            assert!(num_field(e, k).is_some(), "span missing {k}: {e}");
+        }
+    }
+
+    // Cross-process merge: BOTH node processes contributed spans (pid =
+    // node id), i.e. the follower's ship-to-leader path worked.
+    let pid_of = |e: &str| num_field(e, "pid").expect("pid") as i64;
+    assert!(spans.iter().any(|e| pid_of(e) == 0), "no node-0 spans in merged trace");
+    assert!(
+        spans.iter().any(|e| pid_of(e) == 1),
+        "no node-1 spans in merged trace (follower shipping broken)"
+    );
+    for name in ["sched.iteration", "experts.dispatch"] {
+        assert!(
+            spans.iter().any(|e| str_field(e, "name").as_deref() == Some(name)),
+            "missing '{name}' spans"
+        );
+    }
+
+    // Clock correlation: after offset correction, every follower
+    // scheduler iteration must nest inside node 0's serve-loop window
+    // ("run" wraps the whole lead loop, and the leader blocks on
+    // follower partials within each of its own iterations). Allow a
+    // small slack for the ping-pong midpoint's error — microseconds on
+    // loopback, bounded here at 2 ms (ts/dur are in µs).
+    let run = spans
+        .iter()
+        .find(|e| pid_of(e) == 0 && str_field(e, "name").as_deref() == Some("run"))
+        .expect("node 0 'run' span");
+    let run_t0 = num_field(run, "ts").expect("ts");
+    let run_t1 = run_t0 + num_field(run, "dur").expect("dur");
+    let iters: Vec<&&String> = spans
+        .iter()
+        .filter(|e| pid_of(e) == 1 && str_field(e, "name").as_deref() == Some("sched.iteration"))
+        .collect();
+    assert!(!iters.is_empty(), "follower recorded no sched.iteration spans");
+    let slack_us = 2_000.0;
+    for it in &iters {
+        let t0 = num_field(it, "ts").expect("ts");
+        let t1 = t0 + num_field(it, "dur").expect("dur");
+        assert!(
+            t0 >= run_t0 - slack_us && t1 <= run_t1 + slack_us,
+            "follower iteration [{t0:.0}, {t1:.0}] µs escapes leader run window \
+             [{run_t0:.0}, {run_t1:.0}] µs: clock offset correction broken"
+        );
+    }
+}
