@@ -4,6 +4,9 @@
 //! Paper shape to reproduce: curves overlap at T_wait < 8 ms; unstacking
 //! departs at ≥ 8 ms; prestacking stays flat until 512 ms then blows up.
 
+// Test code: a panic is the failure report (see clippy.toml).
+#![allow(clippy::unwrap_used)]
+
 use apple_moe::config::Packing;
 use apple_moe::packing::{run_point, run_sweep, PackingBenchConfig};
 use apple_moe::util::bench::section;

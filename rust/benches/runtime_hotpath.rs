@@ -2,6 +2,9 @@
 //! artifact execution latency and the end-to-end live decode step, on
 //! real PJRT. Requires `make artifacts`; skips politely otherwise.
 
+// Test code: a panic is the failure report (see clippy.toml).
+#![allow(clippy::unwrap_used)]
+
 use std::path::Path;
 
 use apple_moe::cluster::live::{LiveCluster, LiveConfig};

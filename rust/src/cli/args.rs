@@ -32,7 +32,7 @@ impl Args {
             }
             match it.peek() {
                 Some(v) if !v.starts_with("--") => {
-                    let v = it.next().unwrap();
+                    let v = it.next().expect("peeked value exists");
                     if a.values.insert(key.to_string(), v).is_some() {
                         bail!("duplicate flag --{key}");
                     }

@@ -16,10 +16,9 @@ use crate::util::fmt::render_table;
 use crate::util::stats::Summary;
 
 const BENCH_TIMEOUT: Duration = Duration::from_secs(60);
-const PHASE_PING: u8 = 9;
-const PHASE_PONG: u8 = 10;
-const PHASE_STREAM: u8 = 11;
-const PHASE_ACK: u8 = 12;
+// Bench channels 9-12 live in the shared tag table so they can never
+// collide with the live-cluster phases (`cargo xtask lint` enforces it).
+use crate::network::tags::{PHASE_ACK, PHASE_PING, PHASE_PONG, PHASE_STREAM};
 
 pub fn run(args: &mut Args) -> Result<()> {
     let payload = args.usize_or("payload", 24_576)?;
@@ -50,8 +49,8 @@ pub fn run(args: &mut Args) -> Result<()> {
             "tcp" => tcp::loopback_fabric(2)?,
             _ => transport::fabric(2, None),
         };
-        let b = eps.pop().unwrap();
-        let a = eps.pop().unwrap();
+        let b = eps.pop().expect("fabric(2) yields two endpoints");
+        let a = eps.pop().expect("fabric(2) yields two endpoints");
         let (rtt, bw) = bench_pair(a, b, payload, warmup, iters, stream_msgs)?;
         rows.push(vec![
             kind.to_string(),

@@ -234,6 +234,31 @@
 //! inside the next router download. Wire counters (bytes/messages)
 //! are exact; on-device phase *durations* are best read as "time the
 //! host waited here".
+//!
+//! # Static analysis & concurrency checks
+//!
+//! The protocol invariants behind all of the above are machine-checked
+//! by a repo-specific pass (the `rust/xtask` workspace member):
+//!
+//! ```text
+//! cargo xtask lint                 three analyzers over rust/src
+//! cargo xtask lint --report r.txt  …also write the report (CI artifact)
+//! cargo xtask lint --bless         re-bless rust/schema.lock after an
+//!                                  INTENTIONAL protocol version bump
+//! ```
+//!
+//! - *block-under-lock*: blocking calls (socket I/O, `recv_timeout`,
+//!   `join`, `Condvar` waits) while a `MutexGuard` is live, one call
+//!   hop deep. Deliberate exceptions carry an in-source
+//!   `// xtask: allow(block_under_lock): <why>` audit line.
+//! - *lock-order*: the nested-acquisition lock graph must stay acyclic;
+//!   a cycle prints both conflicting acquisition paths.
+//! - *wire-schema drift*: the `AMOC`/`AMOE` codec surfaces and the
+//!   `PHASE_*`/`OP_*` tag table are fingerprinted into
+//!   `rust/schema.lock`; a codec edit without the matching
+//!   `CLIENT_PROTOCOL_VERSION`/`PROTOCOL_VERSION` bump fails, as do
+//!   colliding tag values. `tools/schema_lock.py` mirrors the
+//!   fingerprint for toolchain-free blessing.
 
 pub mod args;
 pub mod commands;

@@ -99,41 +99,12 @@ use crate::runtime::{BatchedRun, DeviceSample, DeviceState, HostTensor, NanoRunt
 /// Default bound on any single wire wait (`LiveConfig::recv_timeout`,
 /// `[cluster] recv_timeout_secs` in hosts.toml).
 pub const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(120);
-const PHASE_PARTIAL: u8 = 1;
-const PHASE_SCATTER: u8 = 2;
-const PHASE_GATHER: u8 = 3;
-const PHASE_CTRL: u8 = 4;
-/// Follower→leader liveness beacons (fixed tag per follower, see
-/// [`beacon_tag`]): the symmetric twin of the leader heartbeat, so the
-/// idle leader detects follower death instead of only finding out at
-/// its next gather.
-const PHASE_FB: u8 = 5;
-/// Follower→leader shipment of a drained trace-event buffer
-/// ([`crate::obs::encode_events`] payload, one message per node) so
-/// node 0 can merge every node's spans into one Chrome-trace file.
-const PHASE_TRACE: u8 = 6;
-
-/// Control-plane opcodes (first payload byte of a `PHASE_CTRL` message).
-const OP_SHUTDOWN: u8 = 0;
-const OP_ADMIT: u8 = 1;
-const OP_STEP: u8 = 2;
-const OP_CANCEL: u8 = 3;
-/// Leader liveness beacon while the cluster idles between requests
-/// (decentralized control plane; the centralized topology uses
-/// [`SCATTER_HEARTBEAT`]). Followers replay and discard it.
-const OP_HEARTBEAT: u8 = 4;
-/// One continuously-batched scheduler iteration: the body is the packed
-/// participant list (u16 count, then each request's admission seq in
-/// row order). Every node derives the same sampling, bucket and row
-/// packing from it.
-const OP_BATCH: u8 = 5;
-/// Ask a follower to drain its trace ring and ship it to the leader on
-/// `PHASE_TRACE` now (normally that happens once, at shutdown).
-const OP_TRACE_FLUSH: u8 = 6;
-
-/// Centralized heartbeat marker: a 1-byte scatter payload (a real
-/// scatter is ≥ 4 + 4·d bytes, an empty one is the shutdown marker).
-const SCATTER_HEARTBEAT: u8 = 0xAB;
+// The PHASE_*/OP_* tag table lives in `network::tags` (single source of
+// truth, fingerprinted into rust/schema.lock by `cargo xtask lint`).
+pub(crate) use crate::network::tags::{
+    OP_ADMIT, OP_BATCH, OP_CANCEL, OP_HEARTBEAT, OP_SHUTDOWN, OP_STEP, OP_TRACE_FLUSH, PHASE_CTRL,
+    PHASE_FB, PHASE_GATHER, PHASE_PARTIAL, PHASE_SCATTER, PHASE_TRACE, SCATTER_HEARTBEAT,
+};
 
 /// Poll interval while a node idles between requests (waiting for the
 /// next control message or scatter). Idleness is *served* by the leader
@@ -1278,7 +1249,7 @@ impl NodeWorker {
                 OP_HEARTBEAT => {} // liveness beacon; the seq bump above replays it
                 OP_ADMIT => {
                     anyhow::ensure!(body.len() > 2, "short admit message");
-                    let seq = u16::from_le_bytes(body[0..2].try_into().unwrap());
+                    let seq = u16::from_le_bytes(body[0..2].try_into().expect("2-byte slice"));
                     let req = Request::decode(&body[2..])
                         .with_context(|| format!("node {}: decoding admission", self.node))?;
                     let a = self.admit(req, seq, None, None, None)?;
@@ -1286,12 +1257,12 @@ impl NodeWorker {
                 }
                 OP_CANCEL => {
                     anyhow::ensure!(body.len() == 2, "short cancel message");
-                    let seq = u16::from_le_bytes(body[0..2].try_into().unwrap());
+                    let seq = u16::from_le_bytes(body[0..2].try_into().expect("2-byte slice"));
                     active.retain(|a| a.seq != seq);
                 }
                 OP_STEP => {
                     anyhow::ensure!(body.len() == 2, "short step message");
-                    let seq = u16::from_le_bytes(body[0..2].try_into().unwrap());
+                    let seq = u16::from_le_bytes(body[0..2].try_into().expect("2-byte slice"));
                     let _sp = obs::span("sched.iteration").arg("active", 1);
                     let Some(a) = active.iter_mut().find(|a| a.seq == seq) else {
                         anyhow::bail!(
@@ -1310,14 +1281,16 @@ impl NodeWorker {
                     // order exactly (admissions/cancels replicate in
                     // order, so it does unless the planes desynced).
                     anyhow::ensure!(body.len() >= 2, "short batch message");
-                    let nr = u16::from_le_bytes(body[0..2].try_into().unwrap()) as usize;
+                    let nr =
+                        u16::from_le_bytes(body[0..2].try_into().expect("2-byte slice")) as usize;
                     anyhow::ensure!(
                         body.len() == 2 + 2 * nr,
                         "batch message length mismatch"
                     );
                     let seqs: Vec<u16> = (0..nr)
                         .map(|r| {
-                            u16::from_le_bytes(body[2 + 2 * r..4 + 2 * r].try_into().unwrap())
+                            let b = body[2 + 2 * r..4 + 2 * r].try_into().expect("2-byte slice");
+                            u16::from_le_bytes(b)
                         })
                         .collect();
                     anyhow::ensure!(
@@ -1363,8 +1336,9 @@ impl NodeWorker {
                 self.node
             );
             let layer =
-                u32::from_le_bytes(env.payload[0..4].try_into().unwrap()) as usize;
-            let rows = u32::from_le_bytes(env.payload[4..8].try_into().unwrap()) as usize;
+                u32::from_le_bytes(env.payload[0..4].try_into().expect("4-byte slice")) as usize;
+            let rows =
+                u32::from_le_bytes(env.payload[4..8].try_into().expect("4-byte slice")) as usize;
             anyhow::ensure!(
                 (1..=64).contains(&rows) && env.payload.len() >= 8 + rows * d * 4,
                 "node {}: malformed scatter payload (rows {rows})",
@@ -1383,8 +1357,8 @@ impl NodeWorker {
             let mut w = vec![0f32; total];
             for s in 0..total {
                 let o = s * 8;
-                idx[s] = i32::from_le_bytes(rest[o..o + 4].try_into().unwrap());
-                w[s] = f32::from_le_bytes(rest[o + 4..o + 8].try_into().unwrap());
+                idx[s] = i32::from_le_bytes(rest[o..o + 4].try_into().expect("4-byte slice"));
+                w[s] = f32::from_le_bytes(rest[o + 4..o + 8].try_into().expect("4-byte slice"));
             }
             // rows == 1 is the serial iteration; rows > 1 is one
             // continuously-batched iteration — this node's experts run

@@ -66,6 +66,10 @@ impl Shared {
     fn write_msg(&self, msg: &ClientMsg) -> std::io::Result<()> {
         let body = msg.encode();
         let mut w = self.writer.lock().expect("writer lock");
+        // This mutex exists to serialize frames onto the one socket;
+        // the write is bounded by WRITE_TIMEOUT and nothing else is
+        // ever taken under it.
+        // xtask: allow(block_under_lock): socket-serializing mutex
         if let Err(e) = proto::write_frame(&mut *w, &body) {
             // A failed (possibly partial) write desyncs the frame
             // stream: poison the socket so the reader fails every
@@ -86,11 +90,17 @@ impl Shared {
     /// Marks the connection closed UNDER the inflight lock: `submit`
     /// checks the flag under the same lock, so a request can never be
     /// registered after this drain (it would hang forever with no
-    /// reader left to fail it).
+    /// reader left to fail it). The drained entries are notified with
+    /// the lock RELEASED, and the `stats_waiters` lock is only taken
+    /// after it, so `fail_all` never nests one lock inside another
+    /// (the `cargo xtask lint` lock-order graph stays edge-free).
     fn fail_all(&self, error: &str) {
-        let mut map = self.inflight.lock().expect("inflight lock");
-        self.closed.store(true, Ordering::Relaxed);
-        for (id, f) in map.drain() {
+        let drained: Vec<(u64, InFlight)> = {
+            let mut map = self.inflight.lock().expect("inflight lock");
+            self.closed.store(true, Ordering::Relaxed);
+            map.drain().collect()
+        };
+        for (id, f) in drained {
             let _ = f.events.send(TokenEvent::Failed { id, error: error.to_string() });
         }
         // Dropping the senders fails any blocked `server_stats` call.

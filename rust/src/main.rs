@@ -1,5 +1,8 @@
 //! `apple-moe` CLI — see `apple-moe help` or `rust/src/cli/mod.rs`.
 
+// The one sanctioned `exit` (the workspace denies `clippy::exit`
+// elsewhere): the process boundary, after the error has been printed.
+#[allow(clippy::exit)]
 fn main() {
     apple_moe::util::logging::init();
     let argv: Vec<String> = std::env::args().skip(1).collect();

@@ -13,9 +13,13 @@
 //!   the same wire protocols span OS processes and machines;
 //! - `proto`: the client-facing remote serving protocol (submit over
 //!   the socket, stream `TokenEvent`s back) spoken between `apple-moe
-//!   client` / `RemoteEngine` and the client listener on node 0.
+//!   client` / `RemoteEngine` and the client listener on node 0;
+//! - `tags`: the shared `PHASE_*`/`OP_*` tag table every mesh frame
+//!   uses (single source of truth for `cargo xtask lint`'s schema
+//!   fingerprint and tag-uniqueness checks).
 
 pub mod proto;
+pub(crate) mod tags;
 pub mod tcp;
 pub mod transport;
 

@@ -151,7 +151,9 @@ impl ClientMsg {
             K_SUBMIT => Ok(ClientMsg::Submit(Request::decode(rest)?)),
             K_CANCEL => {
                 anyhow::ensure!(rest.len() == 8, "short cancel message");
-                Ok(ClientMsg::Cancel(u64::from_le_bytes(rest.try_into().unwrap())))
+                Ok(ClientMsg::Cancel(u64::from_le_bytes(
+                    rest.try_into().expect("length checked above"),
+                )))
             }
             K_SHUTDOWN => {
                 anyhow::ensure!(rest.is_empty(), "trailing bytes in shutdown message");
@@ -315,8 +317,8 @@ pub fn client_handshake(s: &mut (impl Read + Write)) -> Result<ServerHello> {
         .map_err(|e| anyhow::anyhow!("reading server hello: {e} (is this a client port?)"))?;
     check_magic_version(&buf)?;
     Ok(ServerHello {
-        n_nodes: u32::from_le_bytes(buf[6..10].try_into().unwrap()),
-        max_active: u32::from_le_bytes(buf[10..14].try_into().unwrap()),
+        n_nodes: u32::from_le_bytes(buf[6..10].try_into().expect("4-byte slice")),
+        max_active: u32::from_le_bytes(buf[10..14].try_into().expect("4-byte slice")),
     })
 }
 
@@ -761,6 +763,33 @@ mod tests {
             let mut wire = Vec::new();
             write_server(&mut wire, &msg).unwrap();
             let back = read_server(&mut std::io::Cursor::new(wire)).unwrap();
+            server_msg_eq(&msg, &back)
+        });
+    }
+
+    #[test]
+    fn stats_reply_roundtrip_property_with_edge_snapshots() {
+        // The general server-frame property only draws a Stats reply in
+        // one of five branches; this one pins the snapshot codec itself,
+        // including its boundary shapes: a fresh daemon (all-default
+        // snapshot, zero-token phase whose occupancy min/max are ±INF
+        // in memory and 0 on the wire) and a peerless node (empty
+        // `mesh_links`, whose length prefix must round-trip as 0).
+        forall("stats snapshot round-trips", 128, |g| {
+            let snap = match g.usize_in(0..4) {
+                0 => StatsSnapshot::default(),
+                1 => StatsSnapshot { mesh_links: Vec::new(), ..gen_snapshot(g) },
+                2 => StatsSnapshot { decode: PhaseMetrics::default(), ..gen_snapshot(g) },
+                _ => gen_snapshot(g),
+            };
+            let msg = ServerMsg::Stats(Box::new(snap));
+            let body = msg.encode();
+            assert!(
+                body.len() as u32 <= MAX_CLIENT_FRAME,
+                "stats reply overflows the frame cap: {} bytes",
+                body.len()
+            );
+            let back = ServerMsg::decode(&body).unwrap();
             server_msg_eq(&msg, &back)
         });
     }

@@ -1,0 +1,102 @@
+//! The control-plane tag table: every `PHASE_*` channel and `OP_*`
+//! opcode that rides inside `AMOE` mesh frames, in one place.
+//!
+//! Phases 1–6 are the live-cluster data/control planes
+//! ([`crate::cluster::live`]); 9–12 are the `net-bench` microbenchmark
+//! channels, kept in the same namespace so a bench against a live
+//! cluster can never collide with real traffic. Renumbering any value
+//! here is a wire-protocol change and must come with a
+//! [`crate::network::tcp::PROTOCOL_VERSION`] bump — `cargo xtask lint`
+//! fingerprints this file into `rust/schema.lock` and enforces both
+//! that rule and namespace-wide uniqueness.
+
+/// Per-layer partial activations (decentralized all-reduce ring).
+pub(crate) const PHASE_PARTIAL: u8 = 1;
+/// Leader→follower hidden-state scatter (centralized fork-join).
+pub(crate) const PHASE_SCATTER: u8 = 2;
+/// Follower→leader expert-output gather (centralized fork-join).
+pub(crate) const PHASE_GATHER: u8 = 3;
+/// Control-plane messages; first payload byte is an `OP_*` opcode.
+pub(crate) const PHASE_CTRL: u8 = 4;
+/// Follower→leader liveness beacons (fixed tag per follower): the
+/// symmetric twin of the leader heartbeat, so the idle leader detects
+/// follower death instead of only finding out at its next gather.
+pub(crate) const PHASE_FB: u8 = 5;
+/// Follower→leader shipment of a drained trace-event buffer
+/// ([`crate::obs::encode_events`] payload, one message per node) so
+/// node 0 can merge every node's spans into one Chrome-trace file.
+pub(crate) const PHASE_TRACE: u8 = 6;
+
+/// `net-bench` ping-pong request.
+pub(crate) const PHASE_PING: u8 = 9;
+/// `net-bench` ping-pong reply.
+pub(crate) const PHASE_PONG: u8 = 10;
+/// `net-bench` streaming-bandwidth payload.
+pub(crate) const PHASE_STREAM: u8 = 11;
+/// `net-bench` stream acknowledgement.
+pub(crate) const PHASE_ACK: u8 = 12;
+
+/// Control-plane opcodes (first payload byte of a [`PHASE_CTRL`]
+/// message).
+pub(crate) const OP_SHUTDOWN: u8 = 0;
+pub(crate) const OP_ADMIT: u8 = 1;
+pub(crate) const OP_STEP: u8 = 2;
+pub(crate) const OP_CANCEL: u8 = 3;
+/// Leader liveness beacon while the cluster idles between requests
+/// (decentralized control plane; the centralized topology uses
+/// [`SCATTER_HEARTBEAT`]). Followers replay and discard it.
+pub(crate) const OP_HEARTBEAT: u8 = 4;
+/// One continuously-batched scheduler iteration: the body is the packed
+/// participant list (u16 count, then each request's admission seq in
+/// row order). Every node derives the same sampling, bucket and row
+/// packing from it.
+pub(crate) const OP_BATCH: u8 = 5;
+/// Ask a follower to drain its trace ring and ship it to the leader on
+/// [`PHASE_TRACE`] now (normally that happens once, at shutdown).
+pub(crate) const OP_TRACE_FLUSH: u8 = 6;
+
+/// Centralized heartbeat marker: a 1-byte scatter payload (a real
+/// scatter is ≥ 4 + 4·d bytes, an empty one is the shutdown marker).
+pub(crate) const SCATTER_HEARTBEAT: u8 = 0xAB;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_tags_are_unique() {
+        let phases = [
+            ("PHASE_PARTIAL", PHASE_PARTIAL),
+            ("PHASE_SCATTER", PHASE_SCATTER),
+            ("PHASE_GATHER", PHASE_GATHER),
+            ("PHASE_CTRL", PHASE_CTRL),
+            ("PHASE_FB", PHASE_FB),
+            ("PHASE_TRACE", PHASE_TRACE),
+            ("PHASE_PING", PHASE_PING),
+            ("PHASE_PONG", PHASE_PONG),
+            ("PHASE_STREAM", PHASE_STREAM),
+            ("PHASE_ACK", PHASE_ACK),
+        ];
+        for (i, (na, va)) in phases.iter().enumerate() {
+            for (nb, vb) in &phases[i + 1..] {
+                assert_ne!(va, vb, "{na} collides with {nb}");
+            }
+        }
+    }
+
+    #[test]
+    fn op_codes_are_unique_and_dense() {
+        let ops = [
+            OP_SHUTDOWN,
+            OP_ADMIT,
+            OP_STEP,
+            OP_CANCEL,
+            OP_HEARTBEAT,
+            OP_BATCH,
+            OP_TRACE_FLUSH,
+        ];
+        for (i, a) in ops.iter().enumerate() {
+            assert_eq!(*a as usize, i, "opcodes are a dense 0..N table");
+        }
+    }
+}

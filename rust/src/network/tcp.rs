@@ -95,7 +95,7 @@ pub fn decode_frame(r: &mut impl Read) -> std::io::Result<Envelope> {
     }
     let from = u32::from_le_bytes([header[4], header[5], header[6], header[7]]) as usize;
     let to = u32::from_le_bytes([header[8], header[9], header[10], header[11]]) as usize;
-    let tag = u64::from_le_bytes(header[12..20].try_into().unwrap());
+    let tag = u64::from_le_bytes(header[12..20].try_into().expect("8-byte slice"));
     let mut payload = vec![0u8; len as usize];
     r.read_exact(&mut payload)?;
     Ok(Envelope { from, to, tag, payload })

@@ -351,7 +351,9 @@ impl Transport for InProcess {
         loop {
             if !self.pending.is_empty() {
                 // Earliest-delivering pending message (ties: FIFO).
-                let i = (0..self.pending.len()).min_by_key(|&i| self.pending[i].0).unwrap();
+                let i = (0..self.pending.len())
+                    .min_by_key(|&i| self.pending[i].0)
+                    .expect("pending is non-empty here");
                 let at = self.pending[i].0;
                 // While its latency runs, keep draining arrivals — one
                 // of them may be deliverable even earlier.

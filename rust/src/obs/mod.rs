@@ -209,27 +209,41 @@ pub fn record(e: Event) {
     }
     RECORDED.fetch_add(1, Ordering::Relaxed);
     let mut r = RING.lock().expect("obs ring lock");
-    if r.buf.len() < RING_CAP {
-        r.buf.push(e);
-    } else {
-        let head = r.head;
-        r.buf[head] = e;
-        r.head = (head + 1) % RING_CAP;
-        r.dropped += 1;
-    }
+    ring_push(&mut r, e, RING_CAP);
 }
 
 /// Remove and return this node's buffered events, oldest first. Other
 /// nodes' events (thread-per-node transports) stay buffered.
 pub fn drain_node(node: usize) -> Vec<Event> {
     let mut r = RING.lock().expect("obs ring lock");
-    // Restore chronological order across the wrap point first.
+    ring_drain(&mut r, node as u16)
+}
+
+/// Push into the bounded ring: append while below `cap`, then overwrite
+/// the oldest slot. The cap is a parameter (not `RING_CAP`) so the
+/// model tests can exhaustively drive a tiny ring through every
+/// interleaving; production callers always pass `RING_CAP`.
+fn ring_push(r: &mut Ring, e: Event, cap: usize) {
+    if r.buf.len() < cap {
+        r.buf.push(e);
+    } else {
+        let head = r.head;
+        r.buf[head] = e;
+        r.head = (head + 1) % cap;
+        r.dropped += 1;
+    }
+}
+
+/// Drain one node's events in chronological order, keeping the rest
+/// buffered. Restores linear order across the wrap point first, which
+/// also re-anchors `head` so subsequent pushes stay consistent.
+fn ring_drain(r: &mut Ring, node: u16) -> Vec<Event> {
     let head = r.head;
     r.buf.rotate_left(head);
     r.head = 0;
     let mut mine = Vec::new();
     r.buf.retain(|e| {
-        if e.node == node as u16 {
+        if e.node == node {
             mine.push(*e);
             false
         } else {
@@ -503,6 +517,76 @@ mod tests {
         assert!(j.contains("\"name\":\"node 0\""), "{j}");
         assert!(j.contains("\"name\":\"node 1\""), "{j}");
         assert!(j.contains("\"step\":1"), "{j}");
+    }
+
+    /// Exhaustive operation-level model check of the ring, in the loom
+    /// spirit (the offline crate cache has no `loom`, so the schedule
+    /// enumeration is hand-rolled). This is sound because the real
+    /// `RING` mutex makes `record`/`drain_node` atomic: the complete
+    /// behavior space of concurrently recording threads IS the set of
+    /// operation interleavings, and a 2-producer/2-drainer alphabet
+    /// over a cap-3 ring is enumerated here in full (4^6 schedules)
+    /// against a bounded-deque reference model.
+    #[test]
+    fn ring_model_matches_bounded_deque_for_all_interleavings() {
+        use std::collections::VecDeque;
+        const CAP: usize = 3;
+        const OPS: u32 = 6;
+        fn ev(node: u16, seq: u64) -> Event {
+            Event {
+                node,
+                lane: "model",
+                name: "e",
+                t_start_ns: seq,
+                dur_ns: 0,
+                args: [("", 0); MAX_ARGS],
+                n_args: 0,
+            }
+        }
+        for word in 0..4usize.pow(OPS) {
+            let mut ring = Ring { buf: Vec::new(), head: 0, dropped: 0 };
+            let mut oracle: VecDeque<Event> = VecDeque::new();
+            let mut oracle_dropped = 0u64;
+            let mut seq = 0u64;
+            let mut w = word;
+            for _ in 0..OPS {
+                let op = w % 4;
+                w /= 4;
+                match op {
+                    0 | 1 => {
+                        let e = ev(op as u16 + 1, seq);
+                        seq += 1;
+                        ring_push(&mut ring, e, CAP);
+                        if oracle.len() == CAP {
+                            oracle.pop_front();
+                            oracle_dropped += 1;
+                        }
+                        oracle.push_back(e);
+                    }
+                    n => {
+                        let node = (n - 1) as u16;
+                        let got: Vec<u64> =
+                            ring_drain(&mut ring, node).iter().map(|e| e.t_start_ns).collect();
+                        let want: Vec<u64> = oracle
+                            .iter()
+                            .filter(|e| e.node == node)
+                            .map(|e| e.t_start_ns)
+                            .collect();
+                        oracle.retain(|e| e.node != node);
+                        assert_eq!(got, want, "schedule {word}: drain({node}) diverged");
+                    }
+                }
+                assert!(ring.buf.len() <= CAP, "schedule {word}: cap exceeded");
+            }
+            assert_eq!(ring.dropped, oracle_dropped, "schedule {word}: dropped count");
+            for node in [1u16, 2] {
+                let got: Vec<u64> =
+                    ring_drain(&mut ring, node).iter().map(|e| e.t_start_ns).collect();
+                let want: Vec<u64> =
+                    oracle.iter().filter(|e| e.node == node).map(|e| e.t_start_ns).collect();
+                assert_eq!(got, want, "schedule {word}: final drain({node})");
+            }
+        }
     }
 
     #[test]

@@ -51,7 +51,7 @@ pub fn render_table(rows: &[Vec<String>]) -> String {
     if rows.is_empty() {
         return String::new();
     }
-    let cols = rows.iter().map(|r| r.len()).max().unwrap();
+    let cols = rows.iter().map(|r| r.len()).max().expect("rows is non-empty here");
     let mut widths = vec![0usize; cols];
     for row in rows {
         for (i, cell) in row.iter().enumerate() {

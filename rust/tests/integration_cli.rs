@@ -3,6 +3,9 @@
 //! table shapes. The live subcommands are covered by
 //! `integration_cluster.rs`; here we exercise the analysis commands.
 
+// Test code: a panic is the failure report (see clippy.toml).
+#![allow(clippy::unwrap_used)]
+
 use apple_moe::cli;
 
 fn run(cmd: &str) -> anyhow::Result<()> {

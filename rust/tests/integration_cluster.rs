@@ -7,6 +7,9 @@
 //! token-identical to serial serving, and cancellation must free a
 //! request's decode state without disturbing the others.
 
+// Test code: a panic is the failure report (see clippy.toml).
+#![allow(clippy::unwrap_used)]
+
 use std::path::{Path, PathBuf};
 
 use apple_moe::cluster::live::{LiveCluster, LiveConfig};

@@ -8,6 +8,9 @@
 //! token-identical to serial in-process serving. Skips politely until
 //! `make artifacts` has run (like every live-cluster test).
 
+// Test code: a panic is the failure report (see clippy.toml).
+#![allow(clippy::unwrap_used)]
+
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};

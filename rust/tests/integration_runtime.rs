@@ -4,6 +4,9 @@
 //!
 //! Requires `make artifacts` (skipped with a message otherwise).
 
+// Test code: a panic is the failure report (see clippy.toml).
+#![allow(clippy::unwrap_used)]
+
 use std::path::{Path, PathBuf};
 
 use apple_moe::runtime::{DeviceState, HostTensor, NanoRuntime};

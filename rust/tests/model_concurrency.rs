@@ -1,0 +1,140 @@
+//! Model tests for the `Endpoint` tag-demux stash, in the loom spirit
+//! (the offline crate cache has no `loom`, so the schedule space is
+//! enumerated by hand). Soundness: `Endpoint` is single-threaded over a
+//! `Transport` backend, and concurrency only enters through arrival
+//! order — two peers' messages can interleave arbitrarily on the wire.
+//! So the complete behavior space is (all merges of the two producers'
+//! send sequences) × (all consumer receive orders), and both are
+//! enumerated exhaustively here against the FIFO-per-(peer, tag)
+//! contract a real run relies on (scatter/gather frames must never be
+//! reordered within a channel, and a foreign-tag arrival must never be
+//! lost while a different tag is being awaited).
+#![allow(clippy::unwrap_used)]
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use apple_moe::network::transport::{Endpoint, Envelope, NetError, Transport};
+
+const TAG_A: u64 = 101;
+const TAG_B: u64 = 202;
+const TIMEOUT: Duration = Duration::from_millis(50);
+
+/// A backend whose arrivals are a fixed script: `recv_raw` pops the
+/// next scripted envelope, and an empty script times out (models a
+/// quiet wire).
+struct ScriptedTransport {
+    arrivals: VecDeque<Envelope>,
+}
+
+impl Transport for ScriptedTransport {
+    fn node(&self) -> usize {
+        0
+    }
+    fn n_nodes(&self) -> usize {
+        3
+    }
+    fn send_raw(&mut self, _env: Envelope) -> Result<(), NetError> {
+        Ok(())
+    }
+    fn recv_raw(&mut self, timeout: Duration) -> Result<Envelope, NetError> {
+        self.arrivals.pop_front().ok_or(NetError::Timeout(timeout))
+    }
+}
+
+fn env(from: usize, tag: u64, seq: u8) -> Envelope {
+    Envelope { from, to: 0, tag, payload: vec![seq] }
+}
+
+/// All order-preserving merges of two sequences (the wire can
+/// interleave two peers' streams arbitrarily, but never reorders one
+/// peer's own messages).
+fn merges<T: Clone>(a: &[T], b: &[T]) -> Vec<Vec<T>> {
+    if a.is_empty() {
+        return vec![b.to_vec()];
+    }
+    if b.is_empty() {
+        return vec![a.to_vec()];
+    }
+    let mut out = Vec::new();
+    for mut m in merges(&a[1..], b) {
+        m.insert(0, a[0].clone());
+        out.push(m);
+    }
+    for mut m in merges(a, &b[1..]) {
+        m.insert(0, b[0].clone());
+        out.push(m);
+    }
+    out
+}
+
+#[test]
+fn stash_demux_is_fifo_per_peer_and_tag_for_all_schedules() {
+    // Peer 1 sends A,B,A; peer 2 sends B,A,B — seq stamps the per-peer
+    // send order into the payload.
+    let p1 = [env(1, TAG_A, 0), env(1, TAG_B, 1), env(1, TAG_A, 2)];
+    let p2 = [env(2, TAG_B, 0), env(2, TAG_A, 1), env(2, TAG_B, 2)];
+    let arrival_orders = merges(&p1, &p2); // C(6,3) = 20
+    let recv_orders = merges(&[TAG_A; 3], &[TAG_B; 3]); // 20 distinct
+    let mut schedules = 0usize;
+    for arrivals in &arrival_orders {
+        for recv_order in &recv_orders {
+            schedules += 1;
+            let mut ep = Endpoint::new(Box::new(ScriptedTransport {
+                arrivals: arrivals.iter().cloned().collect(),
+            }));
+            let mut got: Vec<Envelope> = Vec::new();
+            for &tag in recv_order {
+                let e = ep
+                    .recv_tag(tag, TIMEOUT)
+                    .unwrap_or_else(|err| panic!("schedule {schedules}: lost a message: {err}"));
+                assert_eq!(e.tag, tag, "schedule {schedules}: wrong tag demuxed");
+                got.push(e);
+            }
+            // No message lost, none duplicated.
+            let mut ids: Vec<(usize, u8)> = got.iter().map(|e| (e.from, e.payload[0])).collect();
+            ids.sort_unstable();
+            assert_eq!(
+                ids,
+                vec![(1, 0), (1, 1), (1, 2), (2, 0), (2, 1), (2, 2)],
+                "schedule {schedules}: delivery is not exactly-once"
+            );
+            // FIFO within every (peer, tag) channel.
+            for from in [1usize, 2] {
+                for tag in [TAG_A, TAG_B] {
+                    let seqs: Vec<u8> = got
+                        .iter()
+                        .filter(|e| e.from == from && e.tag == tag)
+                        .map(|e| e.payload[0])
+                        .collect();
+                    assert!(
+                        seqs.windows(2).all(|w| w[0] < w[1]),
+                        "schedule {schedules}: peer {from} tag {tag} reordered: {seqs:?}"
+                    );
+                }
+            }
+            // Everything consumed: the stash holds nothing back.
+            assert!(
+                matches!(ep.recv_tag(TAG_A, TIMEOUT), Err(NetError::Timeout(_))),
+                "schedule {schedules}: stash retained an extra message"
+            );
+        }
+    }
+    assert_eq!(schedules, 400, "the schedule space must be covered in full");
+}
+
+#[test]
+fn timeout_waiting_for_absent_tag_loses_nothing() {
+    // Both A messages arrive while the consumer is waiting for a B that
+    // never comes: the wait must time out, and the stashed A messages
+    // must still be delivered in order afterwards.
+    let arrivals = [env(1, TAG_A, 0), env(1, TAG_A, 1)];
+    let mut ep = Endpoint::new(Box::new(ScriptedTransport {
+        arrivals: arrivals.iter().cloned().collect(),
+    }));
+    assert!(matches!(ep.recv_tag(TAG_B, TIMEOUT), Err(NetError::Timeout(_))));
+    let a0 = ep.recv_tag(TAG_A, TIMEOUT).unwrap();
+    let a1 = ep.recv_tag(TAG_A, TIMEOUT).unwrap();
+    assert_eq!((a0.payload[0], a1.payload[0]), (0, 1), "stash must stay FIFO across a timeout");
+    assert_eq!(ep.stats().recv_msgs, 2);
+}

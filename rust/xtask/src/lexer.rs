@@ -1,0 +1,349 @@
+//! A small Rust lexer — just enough structure for the protocol
+//! analyzers: identifiers, punctuation, literals and lifetimes, with
+//! line numbers, comments stripped, and `xtask: allow(...)` comment
+//! directives collected on the side.
+//!
+//! This is NOT a full Rust lexer (no exponent floats, no multi-char
+//! operator gluing — `->` lexes as `-`, `>`). That is fine for both
+//! consumers: the analyzers match token *sequences*, and the schema
+//! fingerprints only need the tokenization to be deterministic.
+
+/// Token classes the analyzers care about.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Literal,
+    Lifetime,
+    Punct,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub text: String,
+    pub kind: Kind,
+    pub line: u32,
+}
+
+/// One `// xtask: allow(<analyzer>): <why>` directive. The finding it
+/// suppresses must sit on the same line or the line directly below.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub line: u32,
+    pub analyzer: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub allows: Vec<Allow>,
+}
+
+impl Lexed {
+    /// True when `analyzer` findings are suppressed at `line`.
+    pub fn allowed(&self, analyzer: &str, line: u32) -> bool {
+        self.allows
+            .iter()
+            .any(|a| a.analyzer == analyzer && (a.line == line || a.line + 1 == line))
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn scan_allow(comment: &str, line: u32, allows: &mut Vec<Allow>) {
+    // Directive shape: `xtask: allow(name)`; anything after is the
+    // (mandatory by convention, unchecked) justification.
+    if let Some(at) = comment.find("xtask: allow(") {
+        let rest = &comment[at + "xtask: allow(".len()..];
+        if let Some(end) = rest.find(')') {
+            allows.push(Allow { line, analyzer: rest[..end].trim().to_string() });
+        }
+    }
+}
+
+/// Lex `src`, stripping comments and whitespace. Mirrored by
+/// `tools/schema_lock.py` (the offline bless path) — any change here
+/// must land there too, then `cargo xtask lint --bless`.
+pub fn lex(src: &str) -> Lexed {
+    let mut out = Lexed::default();
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut i = 0;
+    let mut line: u32 = 1;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also doc comments `///` / `//!`).
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            scan_allow(&text, line, &mut out.allows);
+            continue;
+        }
+        // Block comment, nesting like Rust's.
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                }
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            let text: String = b[start..i].iter().collect();
+            scan_allow(&text, start_line, &mut out.allows);
+            continue;
+        }
+        // Raw strings (r"", r#""#, ...) and raw byte strings, checked
+        // before plain identifiers so `r` / `br` prefixes win.
+        if c == 'r' || (c == 'b' && i + 1 < n && b[i + 1] == 'r') {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            let mut hashes = 0;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' && !(hashes > 0 && c == 'r' && is_raw_ident(&b, i)) {
+                j += 1;
+                loop {
+                    if j >= n {
+                        break;
+                    }
+                    if b[j] == '\n' {
+                        line += 1;
+                    }
+                    if b[j] == '"' && closes_raw(&b, j, hashes) {
+                        j += 1 + hashes;
+                        break;
+                    }
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    text: b[i..j.min(n)].iter().collect(),
+                    kind: Kind::Literal,
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            // `r#ident` raw identifier: fall through to ident lexing
+            // below (the `#` is consumed there).
+            if hashes == 1 && c == 'r' && j < n && is_ident_start(b[j]) {
+                let start = i;
+                i = j;
+                while i < n && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+                out.toks.push(Tok {
+                    text: b[start..i].iter().collect(),
+                    kind: Kind::Ident,
+                    line,
+                });
+                continue;
+            }
+        }
+        // String / byte-string literals.
+        if c == '"' || (c == 'b' && i + 1 < n && b[i + 1] == '"') {
+            let start = i;
+            i += if c == 'b' { 2 } else { 1 };
+            while i < n {
+                if b[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '\n' {
+                    line += 1;
+                }
+                if b[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            out.toks.push(Tok {
+                text: b[start..i.min(n)].iter().collect(),
+                kind: Kind::Literal,
+                line,
+            });
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            // Lifetime: 'ident NOT followed by a closing quote.
+            if i + 1 < n && is_ident_start(b[i + 1]) {
+                let mut j = i + 1;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                if j >= n || b[j] != '\'' {
+                    out.toks.push(Tok {
+                        text: b[i..j].iter().collect(),
+                        kind: Kind::Lifetime,
+                        line,
+                    });
+                    i = j;
+                    continue;
+                }
+            }
+            // Char literal: 'x' or '\n' / '\u{..}' escapes.
+            let start = i;
+            i += 1;
+            if i < n && b[i] == '\\' {
+                i += 2;
+                while i < n && b[i] != '\'' {
+                    i += 1;
+                }
+            } else {
+                while i < n && b[i] != '\'' {
+                    i += 1;
+                }
+            }
+            i = (i + 1).min(n);
+            out.toks.push(Tok {
+                text: b[start..i].iter().collect(),
+                kind: Kind::Literal,
+                line,
+            });
+            continue;
+        }
+        // Identifiers and keywords.
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            out.toks.push(Tok {
+                text: b[start..i].iter().collect(),
+                kind: Kind::Ident,
+                line,
+            });
+            continue;
+        }
+        // Numbers: digits then ident-continuation (0x1F, 26u64, 1_000),
+        // with one `.` fraction when a digit follows (1.5 but not 0..4).
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            if i + 1 < n && b[i] == '.' && b[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < n && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+            }
+            out.toks.push(Tok {
+                text: b[start..i].iter().collect(),
+                kind: Kind::Literal,
+                line,
+            });
+            continue;
+        }
+        // Everything else: one punctuation char per token.
+        out.toks.push(Tok { text: c.to_string(), kind: Kind::Punct, line });
+        i += 1;
+    }
+    out
+}
+
+/// True when the `r#...` at `i` is a raw identifier (`r#fn`), not a raw
+/// string (`r#"..."#`).
+fn is_raw_ident(b: &[char], i: usize) -> bool {
+    i + 2 < b.len() && b[i + 1] == '#' && is_ident_start(b[i + 2])
+}
+
+/// True when the quote at `j` is followed by `hashes` `#` chars.
+fn closes_raw(b: &[char], j: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| j + k < b.len() && b[j + k] == '#')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn idents_puncts_numbers() {
+        assert_eq!(
+            texts("let x = a.lock(); x += 0x1F;"),
+            vec!["let", "x", "=", "a", ".", "lock", "(", ")", ";", "x", "+", "=", "0x1F", ";"]
+        );
+    }
+
+    #[test]
+    fn ranges_do_not_eat_floats() {
+        assert_eq!(texts("0..4"), vec!["0", ".", ".", "4"]);
+        assert_eq!(texts("1.5 + 2"), vec!["1.5", "+", "2"]);
+    }
+
+    #[test]
+    fn comments_are_stripped_but_counted() {
+        let l = lex("a // one\n/* two\nlines */ b");
+        assert_eq!(l.toks.len(), 2);
+        assert_eq!(l.toks[0].line, 1);
+        assert_eq!(l.toks[1].line, 3, "block comment newlines must advance the line counter");
+    }
+
+    #[test]
+    fn strings_protect_comment_markers() {
+        assert_eq!(texts(r#"x("// not a comment")"#), vec!["x", "(", "\"// not a comment\"", ")"]);
+        assert_eq!(texts(r#""esc \" quote""#), vec![r#""esc \" quote""#]);
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        assert_eq!(texts(r##"r#"raw "inner" text"#"##), vec![r##"r#"raw "inner" text"#"##]);
+        assert_eq!(texts(r#"b"AMOC""#), vec![r#"b"AMOC""#]);
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let l = lex("&'static str; 'x'; '\\n'");
+        assert_eq!(l.toks[1].kind, Kind::Lifetime);
+        assert_eq!(l.toks[1].text, "'static");
+        assert_eq!(l.toks[4].kind, Kind::Literal);
+        assert_eq!(l.toks[4].text, "'x'");
+        assert_eq!(l.toks[6].text, "'\\n'");
+    }
+
+    #[test]
+    fn allow_directives_collected() {
+        let l = lex("a\n// xtask: allow(block_under_lock): mutex guards the socket\nb");
+        assert_eq!(l.allows.len(), 1);
+        assert_eq!(l.allows[0].analyzer, "block_under_lock");
+        assert_eq!(l.allows[0].line, 2);
+        assert!(l.allowed("block_under_lock", 2));
+        assert!(l.allowed("block_under_lock", 3), "suppression covers the next line");
+        assert!(!l.allowed("block_under_lock", 4));
+        assert!(!l.allowed("lock_order", 3));
+    }
+}

@@ -1,0 +1,733 @@
+//! Guard-liveness analyzers: **block-under-lock** (a blocking call
+//! reachable while a `MutexGuard` is live — the PR 4 cancel-pump bug
+//! class) and **lock-order** (nested guard acquisitions across the
+//! concurrency modules; a cycle in the acquisition graph is a
+//! potential deadlock).
+//!
+//! The model is deliberately simple and conservative, matching how the
+//! main crate actually uses locks (`Mutex` only, guards bound with
+//! `let` or used as statement temporaries, `std::mem::drop` for early
+//! release):
+//!
+//! - `expr.lock()` is an acquisition. A `let`-bound guard lives to the
+//!   end of its enclosing brace scope, unless `drop(name)` releases it
+//!   earlier (or the pattern is `_`, which drops immediately). An
+//!   unbound (temporary) guard lives to the end of its statement —
+//!   which, as in Rust, keeps it alive across a whole `for` /
+//!   `if let` / `match` body when the acquisition sits in the header.
+//! - Blocking is a fixed call set (socket writes/reads, channel
+//!   receives, thread joins, condvar waits) plus ONE inter-procedural
+//!   hop: calling a crate function whose own body contains a direct
+//!   blocking call counts as blocking.
+//! - `#[cfg(test)] mod tests` bodies are skipped: tests hold guards
+//!   across joins on purpose (`TEST_GUARD` serialization).
+//!
+//! Intentional sites — e.g. a mutex that exists precisely to serialize
+//! a socket, with the write bounded by `set_write_timeout` — carry a
+//! `// xtask: allow(block_under_lock): <why>` comment on the line
+//! above, which is the reviewable audit trail for every exception.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::lexer::{Kind, Lexed, Tok};
+
+/// Calls that can block the calling thread indefinitely (or for a
+/// socket-timeout-scale duration). `join`/`recv` only count with an
+/// empty argument list, so `Vec::join(sep)` and `iter.recv(x)` helpers
+/// stay out; `wait` always counts (`Condvar::wait(guard)` and
+/// `Child::wait()` both block).
+const BLOCKING: &[(&str, bool)] = &[
+    ("write_all", false),
+    ("flush", false),
+    ("read_exact", false),
+    ("read_to_end", false),
+    ("recv", true),
+    ("recv_timeout", false),
+    ("join", true),
+    ("wait", false),
+    ("wait_timeout", false),
+    ("wait_while", false),
+];
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {}", self.file, self.line, self.message)
+    }
+}
+
+/// One function body: name plus the token range of `{ ... }`.
+struct Func {
+    name: String,
+    body: (usize, usize),
+}
+
+/// Split a lexed file into function bodies, skipping `mod tests`.
+fn functions(toks: &[Tok]) -> Vec<Func> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].kind == Kind::Ident && toks[i].text == "mod" {
+            if let Some(open) = toks[i..].iter().position(|t| t.text == "{" || t.text == ";") {
+                let at = i + open;
+                if toks[at].text == "{" && toks[i + 1].text == "tests" {
+                    i = match_brace(toks, at);
+                    continue;
+                }
+            }
+        }
+        if toks[i].kind == Kind::Ident && toks[i].text == "fn" && i + 1 < toks.len() {
+            let name = toks[i + 1].text.clone();
+            // The body `{` is the first brace outside the parameter
+            // parens (return types in this codebase never carry braces).
+            let mut j = i + 2;
+            let mut paren = 0i32;
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "(" => paren += 1,
+                    ")" => paren -= 1,
+                    "{" if paren == 0 => break,
+                    ";" if paren == 0 => break, // trait method, no body
+                    _ => {}
+                }
+                j += 1;
+            }
+            if j < toks.len() && toks[j].text == "{" {
+                let end = match_brace(toks, j);
+                out.push(Func { name, body: (j, end) });
+                i = end;
+                continue;
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Index just past the brace that closes the one at `open`.
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut i = open;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+/// True when `toks[i]` starts `.name(` for a blocking method, honouring
+/// the empty-args requirement for the ambiguous names.
+fn blocking_method_at(toks: &[Tok], i: usize) -> Option<&'static str> {
+    if toks[i].text != "." || i + 2 >= toks.len() || toks[i + 2].text != "(" {
+        return None;
+    }
+    let name = toks[i + 1].text.as_str();
+    for &(b, needs_empty_args) in BLOCKING {
+        if name == b && (!needs_empty_args || toks.get(i + 3).map(|t| t.text.as_str()) == Some(")"))
+        {
+            return Some(b);
+        }
+    }
+    None
+}
+
+/// Pass 1 of the one-hop inter-procedural check: every crate function
+/// whose body contains a direct blocking call.
+pub fn blocking_fns(files: &[(String, Lexed)]) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for (_, lexed) in files {
+        for f in functions(&lexed.toks) {
+            let (lo, hi) = f.body;
+            for i in lo..hi {
+                if blocking_method_at(&lexed.toks, i).is_some() {
+                    out.insert(f.name.clone());
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A live guard while walking a function body.
+#[derive(Debug, Clone)]
+struct Guard {
+    /// Lock key: the last identifier of the receiver chain
+    /// (`self.inner.conns.lock()` → `conns`).
+    key: String,
+    /// `let`-bound name, if any (None = statement temporary).
+    name: Option<String>,
+    /// Brace depth the guard's scope ends at (named guards).
+    depth: i32,
+    /// Statement id the temporary dies at (temporaries).
+    stmt: Option<u64>,
+    /// How many `spawn(...)` argument lists enclosed the acquisition:
+    /// guards only interact (edges, blocking) within one generation,
+    /// since a spawned closure runs without its spawner's guards.
+    sgen: usize,
+    line: u32,
+}
+
+/// The lock key for the acquisition whose `.` sits at `dot`: walk the
+/// receiver chain backwards over `ident . ident :: ...` and take the
+/// last field/name. `SCREAMING_CASE` receivers (lock statics) keep
+/// their exact name so cross-module edges on the same global merge.
+fn lock_key(toks: &[Tok], dot: usize) -> String {
+    let mut j = dot;
+    let mut last_ident = String::new();
+    while j > 0 {
+        let t = &toks[j - 1];
+        match t.kind {
+            Kind::Ident if last_ident.is_empty() => last_ident = t.text.clone(),
+            Kind::Ident => {}
+            Kind::Punct if t.text == "." || t.text == ":" => {}
+            _ => break,
+        }
+        j -= 1;
+    }
+    if last_ident.is_empty() {
+        "<expr>".into()
+    } else {
+        last_ident
+    }
+}
+
+/// Walk one function body, reporting block-under-lock findings into
+/// `findings` and nested-acquisition edges into `edges`
+/// (key-held → key-acquired, with the acquisition site).
+#[allow(clippy::too_many_arguments)]
+fn walk_body(
+    file: &str,
+    fn_name: &str,
+    lexed: &Lexed,
+    body: (usize, usize),
+    blocking: &BTreeSet<String>,
+    findings: &mut Vec<Finding>,
+    edges: &mut BTreeMap<(String, String), Finding>,
+) {
+    let toks = &lexed.toks;
+    let (lo, hi) = body;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut depth = 0i32;
+    let mut stmt: u64 = 0;
+    // Per-block header statement: a temporary acquired in a `for` /
+    // `if let` / `match` header lives across the whole block (as in
+    // Rust) and dies at the block's closing brace.
+    let mut blocks: Vec<u64> = Vec::new();
+    // Call-argument context: blocking calls inside `spawn(...)` run on
+    // another thread, without the caller's guards (guards are !Send).
+    let mut calls: Vec<bool> = Vec::new();
+    // Pending `let` binding for the statement being scanned: set at
+    // `let`, consumed by the next acquisition in the same statement.
+    let mut let_name: Option<String> = None;
+    let mut i = lo;
+    while i < hi {
+        let t = &toks[i];
+        match t.text.as_str() {
+            "(" => {
+                let prev = toks.get(i.wrapping_sub(1)).map(|t| t.text.as_str());
+                calls.push(prev == Some("spawn"));
+                i += 1;
+                continue;
+            }
+            ")" => {
+                calls.pop();
+                i += 1;
+                continue;
+            }
+            "{" => {
+                blocks.push(stmt);
+                depth += 1;
+                stmt += 1;
+                i += 1;
+                continue;
+            }
+            "}" => {
+                guards.retain(|g| !(g.name.is_some() && g.depth >= depth));
+                let hdr = blocks.pop();
+                guards.retain(|g| g.stmt.is_none() || g.stmt != hdr);
+                depth -= 1;
+                stmt += 1;
+                let_name = None;
+                i += 1;
+                continue;
+            }
+            ";" => {
+                let ended = stmt;
+                guards.retain(|g| g.stmt != Some(ended));
+                stmt += 1;
+                let_name = None;
+                i += 1;
+                continue;
+            }
+            "let" if t.kind == Kind::Ident => {
+                // `let x` / `let mut x` bind a name; `let _`, tuple and
+                // enum patterns are treated as temporaries (the guard
+                // cannot be `drop`ped by name, and `_` drops at once).
+                let mut j = i + 1;
+                if toks.get(j).map(|t| t.text.as_str()) == Some("mut") {
+                    j += 1;
+                }
+                let_name = match toks.get(j) {
+                    Some(t)
+                        if t.kind == Kind::Ident
+                            && t.text != "_"
+                            && toks.get(j + 1).map(|t| t.text.as_str()) == Some("=") =>
+                    {
+                        Some(t.text.clone())
+                    }
+                    _ => None,
+                };
+                i = j;
+                continue;
+            }
+            "drop" if t.kind == Kind::Ident => {
+                // `drop(name)` / `mem::drop(name)` releases a guard.
+                if toks.get(i + 1).map(|t| t.text.as_str()) == Some("(") {
+                    if let Some(name) = toks.get(i + 2) {
+                        guards.retain(|g| g.name.as_deref() != Some(name.text.as_str()));
+                    }
+                }
+                i += 1;
+                continue;
+            }
+            _ => {}
+        }
+        // Acquisition: `.lock()` — record the guard and any nesting
+        // edge against the guards already live.
+        if t.text == "."
+            && toks.get(i + 1).map(|t| t.text.as_str()) == Some("lock")
+            && toks.get(i + 2).map(|t| t.text.as_str()) == Some("(")
+            && toks.get(i + 3).map(|t| t.text.as_str()) == Some(")")
+        {
+            let sgen = calls.iter().filter(|&&b| b).count();
+            let key = lock_key(toks, i);
+            for g in &guards {
+                if g.key != key && g.sgen == sgen {
+                    edges.entry((g.key.clone(), key.clone())).or_insert_with(|| Finding {
+                        file: file.into(),
+                        line: t.line,
+                        message: format!(
+                            "{fn_name}: acquires `{key}` while holding `{}` (held since \
+                             line {})",
+                            g.key, g.line
+                        ),
+                    });
+                }
+            }
+            guards.push(Guard {
+                key,
+                name: let_name.take(),
+                depth,
+                stmt: None,
+                sgen,
+                line: t.line,
+            });
+            let g = guards.last_mut().expect("just pushed");
+            if g.name.is_none() {
+                g.stmt = Some(stmt);
+            }
+            i += 4;
+            continue;
+        }
+        // Blocking call while a same-generation guard is live? (Code in
+        // a `spawn(...)` argument runs on another thread, without the
+        // spawner's guards.)
+        let sgen = calls.iter().filter(|&&b| b).count();
+        if guards.iter().any(|g| g.sgen == sgen) {
+            let mut hit: Option<String> = None;
+            if let Some(b) = blocking_method_at(toks, i) {
+                hit = Some(format!(".{b}()"));
+            } else if t.kind == Kind::Ident
+                && toks.get(i + 1).map(|t| t.text.as_str()) == Some("(")
+                && blocking.contains(&t.text)
+                && !toks.get(i.wrapping_sub(1)).is_some_and(|p| p.text == "fn")
+            {
+                hit = Some(format!("{}() [calls a blocking op one hop down]", t.text));
+            }
+            if let Some(what) = hit {
+                if !lexed.allowed("block_under_lock", t.line) {
+                    let held: Vec<String> = guards
+                        .iter()
+                        .filter(|g| g.sgen == sgen)
+                        .map(|g| format!("`{}` (line {})", g.key, g.line))
+                        .collect();
+                    findings.push(Finding {
+                        file: file.into(),
+                        line: t.line,
+                        message: format!(
+                            "{fn_name}: blocking call {what} while holding {}",
+                            held.join(", ")
+                        ),
+                    });
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Analyzer 1: blocking calls under a live guard, across `files`.
+pub fn block_under_lock(files: &[(String, Lexed)]) -> Vec<Finding> {
+    let blocking = blocking_fns(files);
+    let mut findings = Vec::new();
+    let mut edges = BTreeMap::new();
+    for (path, lexed) in files {
+        for f in functions(&lexed.toks) {
+            walk_body(path, &f.name, lexed, f.body, &blocking, &mut findings, &mut edges);
+        }
+    }
+    findings
+}
+
+/// Analyzer 2: build the nested-acquisition graph and fail on cycles.
+/// Returns `(edges, findings)` — the edge inventory is printed even on
+/// success so reviewers can see the lock hierarchy the code implies.
+pub fn lock_order(files: &[(String, Lexed)]) -> (Vec<String>, Vec<Finding>) {
+    let blocking = blocking_fns(files);
+    let mut edges: BTreeMap<(String, String), Finding> = BTreeMap::new();
+    let mut scratch = Vec::new();
+    for (path, lexed) in files {
+        for f in functions(&lexed.toks) {
+            walk_body(path, &f.name, lexed, f.body, &blocking, &mut scratch, &mut edges);
+        }
+    }
+    let inventory: Vec<String> =
+        edges.iter().map(|((a, b), f)| format!("{a} -> {b}  ({f})")).collect();
+    // DFS cycle detection over the key graph; report each cycle once
+    // with both conflicting acquisition sites.
+    let mut findings = Vec::new();
+    let keys: BTreeSet<&String> = edges.keys().flat_map(|(a, b)| [a, b]).collect();
+    for start in &keys {
+        // A cycle through `start` exists iff `start` is reachable from
+        // one of its successors.
+        let mut stack: Vec<&String> = edges
+            .iter()
+            .filter(|((a, _), _)| a == *start)
+            .map(|((_, b), _)| b)
+            .collect();
+        let mut seen: BTreeSet<&String> = BTreeSet::new();
+        let mut path_hit = None;
+        while let Some(k) = stack.pop() {
+            if k == *start {
+                path_hit = Some(k);
+                break;
+            }
+            if seen.insert(k) {
+                stack.extend(
+                    edges.iter().filter(|((a, _), _)| a == k).map(|((_, b), _)| b),
+                );
+            }
+        }
+        if path_hit.is_some() {
+            // Name the two directly conflicting edges when the cycle is
+            // a 2-cycle (the common deadlock shape); otherwise list
+            // every edge that leaves `start`.
+            let involved: Vec<String> = edges
+                .iter()
+                .filter(|((a, b), _)| a == *start || b == *start)
+                .map(|((a, b), f)| format!("  {a} -> {b}: {f}"))
+                .collect();
+            let first = edges
+                .iter()
+                .find(|((a, _), _)| a == *start)
+                .map(|(_, f)| (f.file.clone(), f.line))
+                .unwrap_or_default();
+            findings.push(Finding {
+                file: first.0,
+                line: first.1,
+                message: format!(
+                    "lock-order cycle through `{start}` (potential deadlock); conflicting \
+                     acquisition paths:\n{}",
+                    involved.join("\n")
+                ),
+            });
+        }
+    }
+    // One report per cycle, not one per participating key: drop
+    // findings whose key set duplicates an earlier one.
+    findings.dedup_by(|a, b| a.message.split('\n').nth(1) == b.message.split('\n').nth(1));
+    (inventory, findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn analyze(src: &str) -> Vec<Finding> {
+        block_under_lock(&[("fixture.rs".to_string(), lex(src))])
+    }
+
+    // ---- seeded-negative fixtures: the analyzer MUST fire on these ----
+
+    #[test]
+    fn fires_on_socket_write_under_named_guard() {
+        let f = analyze(
+            r#"
+            fn bad(&self) {
+                let mut w = self.writer.lock().expect("writer");
+                self.sock.write_all(&buf).unwrap();
+            }
+            "#,
+        );
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("write_all"), "{}", f[0].message);
+        assert!(f[0].message.contains("`writer`"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn fires_on_recv_timeout_and_condvar_wait_under_guard() {
+        let f = analyze(
+            r#"
+            fn bad(&self) {
+                let g = self.state.lock().unwrap();
+                let x = self.rx.recv_timeout(T);
+                let g2 = self.cv.wait(g);
+            }
+            "#,
+        );
+        assert_eq!(f.len(), 2, "{f:?}");
+    }
+
+    #[test]
+    fn fires_on_join_under_temporary_guard_in_for_header() {
+        // The PR 4 bug class: a statement-temporary guard in a `for`
+        // header lives across the whole loop body.
+        let f = analyze(
+            r#"
+            fn bad(&self) {
+                for h in self.threads.lock().unwrap().drain(..) {
+                    h.join().unwrap();
+                }
+            }
+            "#,
+        );
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("join"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn fires_one_hop_interprocedurally() {
+        let f = analyze(
+            r#"
+            fn wire_write(&self) {
+                self.sock.write_all(&[0]).unwrap();
+            }
+            fn bad(&self) {
+                let g = self.inflight.lock().unwrap();
+                wire_write(&self.x);
+            }
+            "#,
+        );
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("one hop"), "{}", f[0].message);
+    }
+
+    // ---- positive fixtures: correct code stays clean ----
+
+    #[test]
+    fn fires_on_join_after_other_statements_in_loop_body() {
+        // Header temporaries live to the loop's closing brace, not just
+        // to the first `;` inside the body.
+        let f = analyze(
+            r#"
+            fn bad(&self) {
+                for h in self.threads.lock().unwrap().drain(..) {
+                    let id = h.id();
+                    h.join().unwrap();
+                }
+            }
+            "#,
+        );
+        assert_eq!(f.len(), 1, "{f:?}");
+    }
+
+    #[test]
+    fn spawned_closures_do_not_inherit_guards() {
+        // A blocking call inside `spawn(...)` runs on another thread;
+        // guards are !Send, so the spawner's locks are not held there.
+        // But a lock taken *inside* the closure is.
+        let f = analyze(
+            r#"
+            fn reader(&self) {
+                self.sock.read_exact(&mut buf).unwrap();
+            }
+            fn good(&self) {
+                let mut threads = self.threads.lock().unwrap();
+                threads.push(thread::spawn(move || reader(&inner)));
+                threads.push(thread::spawn(move || {
+                    sock.write_all(&buf).unwrap();
+                }));
+            }
+            fn bad(&self) {
+                thread::spawn(move || {
+                    let g = state.lock().unwrap();
+                    sock.flush().unwrap();
+                });
+            }
+            "#,
+        );
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("flush"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn clean_after_drop_or_scope_end() {
+        let f = analyze(
+            r#"
+            fn good(&self) {
+                let ids: Vec<u64> = {
+                    let map = self.inflight.lock().unwrap();
+                    map.keys().copied().collect()
+                };
+                let mut w = self.writer.lock().unwrap();
+                w.shutdown();
+                drop(w);
+                for h in handles {
+                    h.join().unwrap();
+                }
+            }
+            "#,
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn string_join_and_arg_recv_do_not_count() {
+        let f = analyze(
+            r#"
+            fn good(&self) {
+                let g = self.state.lock().unwrap();
+                let s = parts.join(", ");
+                let v = digits.join("");
+            }
+            "#,
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn allow_comment_suppresses_with_audit_trail() {
+        let f = analyze(
+            r#"
+            fn write_msg(&self) {
+                let mut w = self.writer.lock().unwrap();
+                // xtask: allow(block_under_lock): the mutex serializes the socket
+                w.write_all(&buf).unwrap();
+            }
+            "#,
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn test_modules_are_skipped() {
+        let f = analyze(
+            r#"
+            mod tests {
+                fn helper() {
+                    let _g = TEST_GUARD.lock().unwrap();
+                    h.join().unwrap();
+                }
+            }
+            "#,
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    // ---- lock-order fixtures ----
+
+    #[test]
+    fn lock_order_cycle_is_detected_with_both_paths() {
+        let src = r#"
+            fn path_a(&self) {
+                let a = self.inflight.lock().unwrap();
+                let b = self.waiters.lock().unwrap();
+            }
+            fn path_b(&self) {
+                let b = self.waiters.lock().unwrap();
+                let a = self.inflight.lock().unwrap();
+            }
+        "#;
+        let (inventory, findings) =
+            lock_order(&[("fixture.rs".to_string(), lex(src))]);
+        assert_eq!(inventory.len(), 2, "{inventory:?}");
+        assert_eq!(findings.len(), 1, "one cycle, one report: {findings:?}");
+        let msg = &findings[0].message;
+        assert!(msg.contains("cycle"), "{msg}");
+        assert!(msg.contains("path_a") && msg.contains("path_b"), "{msg}");
+    }
+
+    #[test]
+    fn consistent_nesting_is_no_cycle() {
+        let src = r#"
+            fn one(&self) {
+                let a = self.outer.lock().unwrap();
+                let b = self.inner.lock().unwrap();
+            }
+            fn two(&self) {
+                let a = self.outer.lock().unwrap();
+                let b = self.inner.lock().unwrap();
+            }
+        "#;
+        let (inventory, findings) = lock_order(&[("fixture.rs".to_string(), lex(src))]);
+        assert_eq!(inventory.len(), 1, "{inventory:?}");
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn regression_remote_fail_all_narrowed_scope_has_no_edge() {
+        // The real finding this PR fixed: `fail_all` used to drain the
+        // inflight map AND clear the stats waiters under the inflight
+        // guard. The pre-fix shape must report the nested edge...
+        let pre_fix = r#"
+            fn fail_all(&self) {
+                let mut map = self.inflight.lock().expect("inflight lock");
+                self.closed.store(true, Ordering::Relaxed);
+                for (id, f) in map.drain() {
+                    let _ = f.events.send(ev(id));
+                }
+                self.stats_waiters.lock().expect("stats waiters").clear();
+            }
+        "#;
+        let (edges, _) = lock_order(&[("remote.rs".to_string(), lex(pre_fix))]);
+        assert_eq!(edges.len(), 1, "{edges:?}");
+        assert!(edges[0].starts_with("inflight -> stats_waiters"), "{edges:?}");
+        // ...and the post-fix shape (drain under the guard, notify
+        // after it drops) must not.
+        let post_fix = r#"
+            fn fail_all(&self) {
+                let drained = {
+                    let mut map = self.inflight.lock().expect("inflight lock");
+                    self.closed.store(true, Ordering::Relaxed);
+                    map.drain().collect::<Vec<_>>()
+                };
+                for (id, f) in drained {
+                    let _ = f.events.send(ev(id));
+                }
+                self.stats_waiters.lock().expect("stats waiters").clear();
+            }
+        "#;
+        let (edges, findings) = lock_order(&[("remote.rs".to_string(), lex(post_fix))]);
+        assert!(edges.is_empty(), "{edges:?}");
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+}

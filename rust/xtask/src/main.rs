@@ -1,0 +1,141 @@
+//! `cargo xtask lint` — repo-specific protocol-invariant analysis.
+//!
+//! Subcommands:
+//!
+//! - `lint [--bless] [--report PATH]` — run all three analyzers
+//!   (block-under-lock, lock-order, wire-schema drift + tag collisions)
+//!   over `rust/src`. `--bless` rewrites `rust/schema.lock` from the
+//!   current sources (only do this together with an intentional
+//!   `PROTOCOL_VERSION` / `CLIENT_PROTOCOL_VERSION` bump). `--report`
+//!   additionally writes the findings and the lock-order edge
+//!   inventory to a file (uploaded as a CI artifact).
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/io error.
+
+mod lexer;
+mod lock;
+mod schema;
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut bless = false;
+    let mut report: Option<PathBuf> = None;
+    let mut it = args.iter();
+    match it.next().map(String::as_str) {
+        Some("lint") => {}
+        _ => {
+            eprintln!("usage: cargo xtask lint [--bless] [--report PATH]");
+            return ExitCode::from(2);
+        }
+    }
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--bless" => bless = true,
+            "--report" => match it.next() {
+                Some(p) => report = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("--report needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("unknown flag: {other}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    match run(bless, report.as_deref()) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(e) => {
+            eprintln!("xtask: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// `rust/` — xtask lives at `rust/xtask`, sources at `rust/src`.
+fn rust_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("xtask has a parent dir").to_path_buf()
+}
+
+fn collect_sources(dir: &Path, out: &mut Vec<(String, String)>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_sources(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push((p.to_string_lossy().replace('\\', "/"), std::fs::read_to_string(&p)?));
+        }
+    }
+    Ok(())
+}
+
+fn run(bless: bool, report: Option<&Path>) -> std::io::Result<bool> {
+    let root = rust_root();
+    let mut files = Vec::new();
+    collect_sources(&root.join("src"), &mut files)?;
+    // The guard analyzers work on token streams; lex each file once.
+    let lexed: Vec<(String, lexer::Lexed)> =
+        files.iter().map(|(p, src)| (p.clone(), lexer::lex(src))).collect();
+    let mut out = String::new();
+    let mut n_findings = 0usize;
+
+    // 1. block-under-lock
+    let findings = lock::block_under_lock(&lexed);
+    let _ = writeln!(out, "== block-under-lock: {} finding(s)", findings.len());
+    for f in &findings {
+        let _ = writeln!(out, "  {f}");
+    }
+    n_findings += findings.len();
+
+    // 2. lock-order
+    let (edges, findings) = lock::lock_order(&lexed);
+    let _ = writeln!(
+        out,
+        "== lock-order: {} nested-acquisition edge(s), {} cycle(s)",
+        edges.len(),
+        findings.len()
+    );
+    for e in &edges {
+        let _ = writeln!(out, "  edge: {e}");
+    }
+    for f in &findings {
+        let _ = writeln!(out, "  {f}");
+    }
+    n_findings += findings.len();
+
+    // 3. wire-schema drift + tag collisions
+    let (fps, mut findings) = schema::fingerprints(&files);
+    let lock_path = root.join("schema.lock");
+    if bless && findings.is_empty() {
+        std::fs::write(&lock_path, schema::render_lock(&fps))?;
+        let _ = writeln!(out, "== schema: blessed {}", lock_path.display());
+    } else {
+        let lock_text = std::fs::read_to_string(&lock_path).unwrap_or_default();
+        findings.extend(schema::verify(&fps, &lock_text));
+    }
+    findings.extend(schema::tag_collisions(&files));
+    let _ = writeln!(out, "== schema-drift: {} finding(s)", findings.len());
+    for f in &fps {
+        let _ = writeln!(out, "  {} version={} fp=0x{:016x}", f.name, f.version, f.fp);
+    }
+    for f in &findings {
+        let _ = writeln!(out, "  {f}");
+    }
+    n_findings += findings.len();
+
+    let verdict = if n_findings == 0 { "clean" } else { "FAILED" };
+    let _ = writeln!(out, "xtask lint: {verdict} ({n_findings} finding(s), {} files)", files.len());
+    print!("{out}");
+    if let Some(p) = report {
+        std::fs::write(p, &out)?;
+    }
+    Ok(n_findings == 0)
+}

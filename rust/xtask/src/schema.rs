@@ -1,0 +1,597 @@
+//! Wire-schema drift analyzer: fingerprint the normalized token
+//! streams of the codec surfaces into `rust/schema.lock`, and fail any
+//! PR that changes a codec without bumping the matching protocol
+//! version constant.
+//!
+//! Three surfaces are locked:
+//!
+//! - `client_proto` — the `AMOC` client protocol (`network/proto.rs`
+//!   message types, codecs, handshakes), versioned by
+//!   `CLIENT_PROTOCOL_VERSION`.
+//! - `mesh_proto` — the `AMOE` mesh protocol (`network/tcp.rs` frame +
+//!   handshake + clock sync, plus the `Envelope`/tag packing and f32
+//!   byte layout in `network/transport.rs`), versioned by
+//!   `PROTOCOL_VERSION`.
+//! - `tags` — the control-plane tag table (`network/tags.rs`), also
+//!   versioned by `PROTOCOL_VERSION`: phase and op tags ride inside
+//!   mesh frames, so renumbering them is a mesh-protocol change.
+//!
+//! A fingerprint is FNV-1a over the item token texts, so formatting and
+//! comment changes never trip the check — only token-level edits do.
+//! The version constants live *inside* their surface, so a bump always
+//! changes the fingerprint too; the verifier distinguishes "changed
+//! without a bump" (hard error: DRIFT) from "changed with a bump"
+//! (actionable error: re-bless the lockfile).
+//!
+//! `tools/schema_lock.py` mirrors the lexer + this normalization so the
+//! lockfile can be (re)generated without a Rust toolchain.
+
+use std::collections::BTreeMap;
+
+use crate::lexer::{lex, Kind, Tok};
+use crate::lock::Finding;
+
+/// A top-level item: `kind` keyword, declared name, normalized text
+/// (token texts joined with single spaces, visibility and attributes
+/// stripped).
+#[derive(Debug, Clone)]
+pub struct Item {
+    pub kind: String,
+    pub name: String,
+    pub text: String,
+}
+
+const ITEM_KEYWORDS: &[&str] =
+    &["const", "static", "fn", "struct", "enum", "trait", "type", "impl", "mod", "use"];
+
+/// Extract top-level items from a token stream. Span rule (mirrored in
+/// `tools/schema_lock.py`): an item runs from its keyword to the first
+/// `;` at zero paren/bracket depth, or through the matching `}` of the
+/// first `{` at zero depth, whichever comes first.
+pub fn items(toks: &[Tok]) -> Vec<Item> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        let t = &toks[i];
+        // Attributes `#[...]` and visibility are normalization noise.
+        if t.text == "#" && toks.get(i + 1).map(|t| t.text.as_str()) == Some("[") {
+            let mut depth = 0i32;
+            i += 1;
+            while i < toks.len() {
+                match toks[i].text.as_str() {
+                    "[" => depth += 1,
+                    "]" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            i += 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                i += 1;
+            }
+            continue;
+        }
+        if t.kind == Kind::Ident && t.text == "pub" {
+            i += 1;
+            if toks.get(i).map(|t| t.text.as_str()) == Some("(") {
+                while i < toks.len() && toks[i].text != ")" {
+                    i += 1;
+                }
+                i += 1;
+            }
+            continue;
+        }
+        if t.kind == Kind::Ident && ITEM_KEYWORDS.contains(&t.text.as_str()) {
+            let kind = t.text.clone();
+            let start = i;
+            let end = item_end(toks, i);
+            let name = item_name(&kind, &toks[start..end]);
+            let text: Vec<&str> = toks[start..end].iter().map(|t| t.text.as_str()).collect();
+            out.push(Item { kind, name, text: text.join(" ") });
+            i = end;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+fn item_end(toks: &[Tok], start: usize) -> usize {
+    let mut depth = 0i32;
+    let mut i = start;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "(" | "[" => depth += 1,
+            ")" | "]" => depth -= 1,
+            ";" if depth == 0 => return i + 1,
+            "{" if depth == 0 => {
+                let mut braces = 0i32;
+                while i < toks.len() {
+                    match toks[i].text.as_str() {
+                        "{" => braces += 1,
+                        "}" => {
+                            braces -= 1;
+                            if braces == 0 {
+                                return i + 1;
+                            }
+                        }
+                        _ => {}
+                    }
+                    i += 1;
+                }
+                return toks.len();
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+fn item_name(kind: &str, item: &[Tok]) -> String {
+    if kind == "impl" {
+        // `impl Trait for Target {` / `impl Target {`: the last
+        // identifier in the header names the target.
+        let header_end = item.iter().position(|t| t.text == "{").unwrap_or(item.len());
+        return item[..header_end]
+            .iter()
+            .rev()
+            .find(|t| t.kind == Kind::Ident)
+            .map(|t| t.text.clone())
+            .unwrap_or_else(|| "<impl>".into());
+    }
+    item.iter()
+        .skip(1)
+        .find(|t| t.kind == Kind::Ident && t.text != "mut")
+        .map(|t| t.text.clone())
+        .unwrap_or_else(|| format!("<{kind}>"))
+}
+
+/// FNV-1a 64 (same constants in `tools/schema_lock.py`).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Which items of `file` (matched by path suffix) belong to `surface`.
+fn selected(surface: &str, file: &str, it: &Item) -> bool {
+    let kind = it.kind.as_str();
+    let name = it.name.as_str();
+    match surface {
+        "client_proto" if file.ends_with("network/proto.rs") => match kind {
+            "const" => {
+                matches!(name, "CLIENT_MAGIC" | "CLIENT_PROTOCOL_VERSION" | "MAX_CLIENT_FRAME")
+                    || name.starts_with("K_")
+            }
+            "struct" | "enum" => {
+                matches!(name, "ServerHello" | "ClientMsg" | "StatsSnapshot" | "ServerMsg")
+            }
+            "impl" => matches!(name, "ClientMsg" | "ServerMsg"),
+            "fn" => {
+                matches!(
+                    name,
+                    "write_frame"
+                        | "read_frame"
+                        | "write_client"
+                        | "read_client"
+                        | "write_server"
+                        | "read_server"
+                        | "client_handshake"
+                        | "server_handshake"
+                        | "check_magic_version"
+                ) || name.starts_with("encode_")
+                    || name.starts_with("decode_")
+            }
+            _ => false,
+        },
+        "mesh_proto" if file.ends_with("network/tcp.rs") => match kind {
+            "const" => matches!(
+                name,
+                "PROTOCOL_VERSION"
+                    | "MAGIC"
+                    | "HANDSHAKE_LEN"
+                    | "FRAME_HEADER_LEN"
+                    | "MAX_FRAME_PAYLOAD"
+                    | "CLOCK_SYNC_ROUNDS"
+            ),
+            "fn" => matches!(
+                name,
+                "encode_frame"
+                    | "decode_frame"
+                    | "write_handshake"
+                    | "read_handshake"
+                    | "clock_sync_measure"
+                    | "clock_sync_echo"
+            ),
+            _ => false,
+        },
+        "mesh_proto" if file.ends_with("network/transport.rs") => match kind {
+            "struct" => name == "Envelope",
+            "fn" => matches!(name, "tag" | "req_tag" | "f32s_to_bytes" | "bytes_to_f32s"),
+            _ => false,
+        },
+        "tags" if file.ends_with("network/tags.rs") => kind == "const",
+        _ => false,
+    }
+}
+
+/// Where each surface's version constant lives.
+const SURFACES: &[(&str, &str, &str)] = &[
+    ("client_proto", "network/proto.rs", "CLIENT_PROTOCOL_VERSION"),
+    ("mesh_proto", "network/tcp.rs", "PROTOCOL_VERSION"),
+    ("tags", "network/tcp.rs", "PROTOCOL_VERSION"),
+];
+
+#[derive(Debug, Clone)]
+pub struct SurfaceFp {
+    pub name: &'static str,
+    pub version_const: &'static str,
+    pub version: String,
+    pub fp: u64,
+}
+
+/// Compute the three surface fingerprints from `(path, source)` pairs.
+/// Missing version constants are findings; a surface with no selected
+/// items at all is also a finding (a rename would otherwise silently
+/// empty the surface).
+pub fn fingerprints(files: &[(String, String)]) -> (Vec<SurfaceFp>, Vec<Finding>) {
+    let parsed: Vec<(String, Vec<Item>)> =
+        files.iter().map(|(p, src)| (p.clone(), items(&lex(src).toks))).collect();
+    let mut out = Vec::new();
+    let mut findings = Vec::new();
+    for &(surface, version_file, version_const) in SURFACES {
+        let mut buf = String::new();
+        let mut n_items = 0usize;
+        for (path, its) in &parsed {
+            for it in its {
+                if selected(surface, path, it) {
+                    buf.push_str(&it.name);
+                    buf.push('\n');
+                    buf.push_str(&it.text);
+                    buf.push('\n');
+                    n_items += 1;
+                }
+            }
+        }
+        if n_items == 0 {
+            findings.push(Finding {
+                file: version_file.into(),
+                line: 0,
+                message: format!(
+                    "schema surface `{surface}` selected no items — codec files moved or \
+                     renamed? Update xtask/src/schema.rs and tools/schema_lock.py together."
+                ),
+            });
+            continue;
+        }
+        let version = parsed
+            .iter()
+            .filter(|(p, _)| p.ends_with(version_file))
+            .flat_map(|(_, its)| its.iter())
+            .find(|it| it.kind == "const" && it.name == version_const)
+            .and_then(|it| {
+                let toks: Vec<&str> = it.text.split(' ').collect();
+                let eq = toks.iter().position(|t| *t == "=")?;
+                toks.get(eq + 1).map(|s| s.to_string())
+            });
+        let version = match version {
+            Some(v) => v,
+            None => {
+                findings.push(Finding {
+                    file: version_file.into(),
+                    line: 0,
+                    message: format!(
+                        "schema surface `{surface}`: version constant `{version_const}` not \
+                         found in {version_file}"
+                    ),
+                });
+                continue;
+            }
+        };
+        out.push(SurfaceFp { name: surface, version_const, version, fp: fnv1a(buf.as_bytes()) });
+    }
+    (out, findings)
+}
+
+/// Render `schema.lock` content for the computed fingerprints.
+pub fn render_lock(fps: &[SurfaceFp]) -> String {
+    let mut s = String::from(
+        "# apple-moe wire-schema lock: surface fingerprints vs protocol versions.\n\
+         # Regenerate after an INTENTIONAL protocol change (with a version bump):\n\
+         #   cargo xtask lint --bless        (or: python3 tools/schema_lock.py --bless)\n\
+         # Do not hand-edit.\n",
+    );
+    for f in fps {
+        s.push_str(&format!("{} version={} fp=0x{:016x}\n", f.name, f.version, f.fp));
+    }
+    s
+}
+
+fn parse_lock(lock: &str) -> BTreeMap<String, (String, u64)> {
+    let mut out = BTreeMap::new();
+    for l in lock.lines() {
+        let l = l.trim();
+        if l.is_empty() || l.starts_with('#') {
+            continue;
+        }
+        let mut parts = l.split_whitespace();
+        let (Some(name), Some(v), Some(fp)) = (parts.next(), parts.next(), parts.next()) else {
+            continue;
+        };
+        let (Some(v), Some(fp)) = (v.strip_prefix("version="), fp.strip_prefix("fp=0x")) else {
+            continue;
+        };
+        if let Ok(fp) = u64::from_str_radix(fp, 16) {
+            out.insert(name.to_string(), (v.to_string(), fp));
+        }
+    }
+    out
+}
+
+/// Compare computed fingerprints against the committed lock.
+pub fn verify(current: &[SurfaceFp], lock: &str) -> Vec<Finding> {
+    let locked = parse_lock(lock);
+    let mut findings = Vec::new();
+    for f in current {
+        match locked.get(f.name) {
+            None => findings.push(Finding {
+                file: "rust/schema.lock".into(),
+                line: 0,
+                message: format!(
+                    "surface `{}` missing from schema.lock — run `cargo xtask lint --bless`",
+                    f.name
+                ),
+            }),
+            Some((lv, lfp)) => {
+                if *lfp == f.fp && *lv == f.version {
+                    continue;
+                }
+                if *lv == f.version {
+                    findings.push(Finding {
+                        file: "rust/schema.lock".into(),
+                        line: 0,
+                        message: format!(
+                            "DRIFT: surface `{}` changed (fp 0x{:016x}, locked 0x{lfp:016x}) \
+                             but `{}` is still {} — wire-format changes require a version \
+                             bump, compat-preserving refactors should not touch the codec \
+                             token stream",
+                            f.name, f.fp, f.version_const, f.version
+                        ),
+                    });
+                } else {
+                    findings.push(Finding {
+                        file: "rust/schema.lock".into(),
+                        line: 0,
+                        message: format!(
+                            "surface `{}`: `{}` bumped {} -> {} — intentional protocol \
+                             change, run `cargo xtask lint --bless` to update schema.lock",
+                            f.name, f.version_const, lv, f.version
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    for name in locked.keys() {
+        if !current.iter().any(|f| f.name == name.as_str()) {
+            findings.push(Finding {
+                file: "rust/schema.lock".into(),
+                line: 0,
+                message: format!("locked surface `{name}` no longer exists in the source tree"),
+            });
+        }
+    }
+    findings
+}
+
+/// Tag-collision check: within each tag namespace (`PHASE_*`, `OP_*`
+/// in `network/tags.rs`; `K_*` in `network/proto.rs`), two constants
+/// with the same value are a wire ambiguity.
+pub fn tag_collisions(files: &[(String, String)]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for (prefix, file_suffix) in
+        [("PHASE_", "network/tags.rs"), ("OP_", "network/tags.rs"), ("K_", "network/proto.rs")]
+    {
+        let mut by_value: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+        for (path, src) in files {
+            if !path.ends_with(file_suffix) {
+                continue;
+            }
+            for it in items(&lex(src).toks) {
+                if it.kind != "const" || !it.name.starts_with(prefix) {
+                    continue;
+                }
+                let toks: Vec<&str> = it.text.split(' ').collect();
+                let Some(eq) = toks.iter().position(|t| *t == "=") else { continue };
+                let Some(lit) = toks.get(eq + 1) else { continue };
+                let parsed = lit
+                    .strip_prefix("0x")
+                    .map(|h| u64::from_str_radix(&h.replace('_', ""), 16))
+                    .unwrap_or_else(|| lit.replace('_', "").parse::<u64>());
+                if let Ok(v) = parsed {
+                    by_value.entry(v).or_default().push(it.name.clone());
+                }
+            }
+        }
+        for (v, names) in by_value {
+            if names.len() > 1 {
+                findings.push(Finding {
+                    file: file_suffix.into(),
+                    line: 0,
+                    message: format!(
+                        "tag collision in the `{prefix}*` namespace: {} all equal {v}",
+                        names.join(", ")
+                    ),
+                });
+            }
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PROTO_FIXTURE: &str = r#"
+        pub const CLIENT_MAGIC: [u8; 4] = *b"AMOC";
+        pub const CLIENT_PROTOCOL_VERSION: u16 = 3;
+        const K_SUBMIT: u8 = 1;
+        const K_CANCEL: u8 = 2;
+        pub enum ClientMsg {
+            Submit { id: u64 },
+            Cancel { id: u64 },
+        }
+        pub fn write_client(w: &mut impl Write, m: &ClientMsg) -> std::io::Result<()> {
+            w.write_all(&[1u8])
+        }
+        fn helper_not_in_surface() {}
+    "#;
+
+    const TCP_FIXTURE: &str = r#"
+        pub const PROTOCOL_VERSION: u16 = 3;
+        const MAGIC: [u8; 4] = *b"AMOE";
+        pub fn encode_frame(env: &Envelope) -> Vec<u8> { Vec::new() }
+    "#;
+
+    const TRANSPORT_FIXTURE: &str = r#"
+        pub struct Envelope {
+            pub src: usize,
+            pub tag: u64,
+        }
+        pub fn tag(phase: u8, layer: u32, token: u32) -> u64 { 0 }
+    "#;
+
+    const TAGS_FIXTURE: &str = r#"
+        pub(crate) const PHASE_PARTIAL: u8 = 1;
+        pub(crate) const PHASE_SCATTER: u8 = 2;
+        pub(crate) const OP_SHUTDOWN: u8 = 0;
+    "#;
+
+    fn fixture() -> Vec<(String, String)> {
+        vec![
+            ("src/network/proto.rs".into(), PROTO_FIXTURE.into()),
+            ("src/network/tcp.rs".into(), TCP_FIXTURE.into()),
+            ("src/network/transport.rs".into(), TRANSPORT_FIXTURE.into()),
+            ("src/network/tags.rs".into(), TAGS_FIXTURE.into()),
+        ]
+    }
+
+    #[test]
+    fn item_extraction_names_and_spans() {
+        let its = items(&lex(PROTO_FIXTURE).toks);
+        let names: Vec<&str> = its.iter().map(|i| i.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "CLIENT_MAGIC",
+                "CLIENT_PROTOCOL_VERSION",
+                "K_SUBMIT",
+                "K_CANCEL",
+                "ClientMsg",
+                "write_client",
+                "helper_not_in_surface"
+            ]
+        );
+        assert!(its[4].text.starts_with("enum ClientMsg {"), "{}", its[4].text);
+        assert!(its[4].text.ends_with("}"), "{}", its[4].text);
+    }
+
+    #[test]
+    fn bless_then_verify_passes() {
+        let (fps, findings) = fingerprints(&fixture());
+        assert!(findings.is_empty(), "{findings:?}");
+        assert_eq!(fps.len(), 3);
+        let lock = render_lock(&fps);
+        assert!(verify(&fps, &lock).is_empty());
+    }
+
+    #[test]
+    fn formatting_changes_do_not_drift() {
+        let (a, _) = fingerprints(&fixture());
+        let mut reformatted = fixture();
+        reformatted[0].1 = PROTO_FIXTURE
+            .replace("Submit { id: u64 },", "Submit {\n            // a comment\n id: u64 },");
+        let (b, _) = fingerprints(&reformatted);
+        assert_eq!(a[0].fp, b[0].fp, "whitespace/comments must not change the fingerprint");
+    }
+
+    #[test]
+    fn codec_edit_without_bump_is_drift() {
+        // The acceptance-criteria demonstration: edit a proto.rs codec
+        // (add a field to a ClientMsg variant) with the version
+        // untouched — the drift check must fail.
+        let (fps, _) = fingerprints(&fixture());
+        let lock = render_lock(&fps);
+        let mut edited = fixture();
+        edited[0].1 = PROTO_FIXTURE.replace("Submit { id: u64 }", "Submit { id: u64, ttl: u32 }");
+        let (fps2, _) = fingerprints(&edited);
+        let findings = verify(&fps2, &lock);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("DRIFT"), "{}", findings[0].message);
+        assert!(findings[0].message.contains("CLIENT_PROTOCOL_VERSION"), "{}", findings[0].message);
+    }
+
+    #[test]
+    fn codec_edit_with_bump_asks_for_bless() {
+        let (fps, _) = fingerprints(&fixture());
+        let lock = render_lock(&fps);
+        let mut edited = fixture();
+        edited[0].1 = PROTO_FIXTURE
+            .replace("Submit { id: u64 }", "Submit { id: u64, ttl: u32 }")
+            .replace("CLIENT_PROTOCOL_VERSION: u16 = 3", "CLIENT_PROTOCOL_VERSION: u16 = 4");
+        let (fps2, _) = fingerprints(&edited);
+        let findings = verify(&fps2, &lock);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("--bless"), "{}", findings[0].message);
+        assert!(findings[0].message.contains("3 -> 4"), "{}", findings[0].message);
+    }
+
+    #[test]
+    fn mesh_surface_covers_transport_packing() {
+        let (fps, _) = fingerprints(&fixture());
+        let lock = render_lock(&fps);
+        let mut edited = fixture();
+        edited[2].1 = TRANSPORT_FIXTURE.replace("pub tag: u64", "pub tag: u32");
+        let (fps2, _) = fingerprints(&edited);
+        let findings = verify(&fps2, &lock);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("`mesh_proto`"), "{}", findings[0].message);
+    }
+
+    #[test]
+    fn tag_collisions_fire_within_namespace_only() {
+        let mut files = fixture();
+        assert!(tag_collisions(&files).is_empty());
+        // PHASE_SCATTER=2 colliding with a new PHASE_GATHER=2: error.
+        files[3].1 = TAGS_FIXTURE.replace(
+            "pub(crate) const OP_SHUTDOWN: u8 = 0;",
+            "pub(crate) const PHASE_GATHER: u8 = 2;\n pub(crate) const OP_SHUTDOWN: u8 = 0;",
+        );
+        let findings = tag_collisions(&files);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("PHASE_GATHER"), "{}", findings[0].message);
+        // OP_SHUTDOWN=0 vs PHASE_*: different namespace, no collision.
+    }
+
+    #[test]
+    fn missing_surface_and_stale_lock_are_reported() {
+        let (fps, _) = fingerprints(&fixture());
+        let lock = render_lock(&fps);
+        // Drop the tags file entirely: fingerprints() reports the empty
+        // surface, verify() reports the orphaned lock entry.
+        let files: Vec<_> = fixture().into_iter().take(3).collect();
+        let (fps2, findings) = fingerprints(&files);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("`tags`"), "{}", findings[0].message);
+        let vfind = verify(&fps2, &lock);
+        assert_eq!(vfind.len(), 1, "{vfind:?}");
+        assert!(vfind[0].message.contains("no longer exists"), "{}", vfind[0].message);
+    }
+}

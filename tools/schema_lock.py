@@ -1,0 +1,377 @@
+#!/usr/bin/env python3
+"""Offline mirror of `cargo xtask lint`'s wire-schema fingerprinting.
+
+Regenerates (--bless) or checks rust/schema.lock without a Rust
+toolchain. The algorithm mirrors rust/xtask/src/lexer.rs (tokenizer)
+and rust/xtask/src/schema.rs (item extraction, surface selection,
+FNV-1a 64) — any change on either side must land on the other, and
+`cargo xtask lint` is the source of truth when they disagree.
+
+Usage:
+    python3 tools/schema_lock.py            # verify, exit 1 on mismatch
+    python3 tools/schema_lock.py --bless    # rewrite rust/schema.lock
+"""
+
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RUST = os.path.join(REPO, "rust")
+LOCK = os.path.join(RUST, "schema.lock")
+
+IDENT, LITERAL, LIFETIME, PUNCT = "ident", "literal", "lifetime", "punct"
+
+
+def is_ident_start(c):
+    return c.isascii() and (c.isalpha() or c == "_")
+
+
+def is_ident_cont(c):
+    return c.isascii() and (c.isalnum() or c == "_")
+
+
+def lex(src):
+    """Tokenize like rust/xtask/src/lexer.rs: comments stripped, raw and
+    plain strings as single literal tokens, one punct char per token."""
+    b = src
+    n = len(b)
+    out = []
+    i = 0
+    while i < n:
+        c = b[i]
+        if c.isspace():
+            i += 1
+            continue
+        if c == "/" and i + 1 < n and b[i + 1] == "/":
+            while i < n and b[i] != "\n":
+                i += 1
+            continue
+        if c == "/" and i + 1 < n and b[i + 1] == "*":
+            depth = 1
+            i += 2
+            while i < n and depth > 0:
+                if b[i] == "/" and i + 1 < n and b[i + 1] == "*":
+                    depth += 1
+                    i += 2
+                elif b[i] == "*" and i + 1 < n and b[i + 1] == "/":
+                    depth -= 1
+                    i += 2
+                else:
+                    i += 1
+            continue
+        if c == "r" or (c == "b" and i + 1 < n and b[i + 1] == "r"):
+            j = i + (2 if c == "b" else 1)
+            hashes = 0
+            while j < n and b[j] == "#":
+                hashes += 1
+                j += 1
+            raw_ident = (
+                i + 2 < n and b[i + 1] == "#" and is_ident_start(b[i + 2])
+            )
+            if j < n and b[j] == '"' and not (hashes > 0 and c == "r" and raw_ident):
+                j += 1
+                while j < n:
+                    if b[j] == '"' and all(
+                        j + k < n and b[j + k] == "#" for k in range(1, hashes + 1)
+                    ):
+                        j += 1 + hashes
+                        break
+                    j += 1
+                out.append((b[i:min(j, n)], LITERAL))
+                i = j
+                continue
+            if hashes == 1 and c == "r" and j < n and is_ident_start(b[j]):
+                start = i
+                i = j
+                while i < n and is_ident_cont(b[i]):
+                    i += 1
+                out.append((b[start:i], IDENT))
+                continue
+        if c == '"' or (c == "b" and i + 1 < n and b[i + 1] == '"'):
+            start = i
+            i += 2 if c == "b" else 1
+            while i < n:
+                if b[i] == "\\":
+                    i += 2
+                    continue
+                if b[i] == '"':
+                    i += 1
+                    break
+                i += 1
+            out.append((b[start:min(i, n)], LITERAL))
+            continue
+        if c == "'":
+            if i + 1 < n and is_ident_start(b[i + 1]):
+                j = i + 1
+                while j < n and is_ident_cont(b[j]):
+                    j += 1
+                if j >= n or b[j] != "'":
+                    out.append((b[i:j], LIFETIME))
+                    i = j
+                    continue
+            start = i
+            i += 1
+            if i < n and b[i] == "\\":
+                i += 2
+                while i < n and b[i] != "'":
+                    i += 1
+            else:
+                while i < n and b[i] != "'":
+                    i += 1
+            i = min(i + 1, n)
+            out.append((b[start:i], LITERAL))
+            continue
+        if is_ident_start(c):
+            start = i
+            while i < n and is_ident_cont(b[i]):
+                i += 1
+            out.append((b[start:i], IDENT))
+            continue
+        if c.isdigit() and c.isascii():
+            start = i
+            while i < n and is_ident_cont(b[i]):
+                i += 1
+            if i + 1 < n and b[i] == "." and b[i + 1].isdigit() and b[i + 1].isascii():
+                i += 1
+                while i < n and is_ident_cont(b[i]):
+                    i += 1
+            out.append((b[start:i], LITERAL))
+            continue
+        out.append((c, PUNCT))
+        i += 1
+    return out
+
+
+ITEM_KEYWORDS = {
+    "const", "static", "fn", "struct", "enum", "trait", "type", "impl", "mod", "use",
+}
+
+
+def item_end(toks, start):
+    depth = 0
+    i = start
+    while i < len(toks):
+        t = toks[i][0]
+        if t in ("(", "["):
+            depth += 1
+        elif t in (")", "]"):
+            depth -= 1
+        elif t == ";" and depth == 0:
+            return i + 1
+        elif t == "{" and depth == 0:
+            braces = 0
+            while i < len(toks):
+                if toks[i][0] == "{":
+                    braces += 1
+                elif toks[i][0] == "}":
+                    braces -= 1
+                    if braces == 0:
+                        return i + 1
+                i += 1
+            return len(toks)
+        i += 1
+    return len(toks)
+
+
+def item_name(kind, item):
+    if kind == "impl":
+        header = item
+        for idx, (t, _) in enumerate(item):
+            if t == "{":
+                header = item[:idx]
+                break
+        for t, k in reversed(header):
+            if k == IDENT:
+                return t
+        return "<impl>"
+    for t, k in item[1:]:
+        if k == IDENT and t != "mut":
+            return t
+    return "<%s>" % kind
+
+
+def items(toks):
+    out = []
+    i = 0
+    while i < len(toks):
+        text, kind = toks[i]
+        if text == "#" and i + 1 < len(toks) and toks[i + 1][0] == "[":
+            depth = 0
+            i += 1
+            while i < len(toks):
+                if toks[i][0] == "[":
+                    depth += 1
+                elif toks[i][0] == "]":
+                    depth -= 1
+                    if depth == 0:
+                        i += 1
+                        break
+                i += 1
+            continue
+        if kind == IDENT and text == "pub":
+            i += 1
+            if i < len(toks) and toks[i][0] == "(":
+                while i < len(toks) and toks[i][0] != ")":
+                    i += 1
+                i += 1
+            continue
+        if kind == IDENT and text in ITEM_KEYWORDS:
+            end = item_end(toks, i)
+            span = toks[i:end]
+            out.append(
+                (text, item_name(text, span), " ".join(t for t, _ in span))
+            )
+            i = end
+            continue
+        i += 1
+    return out
+
+
+def fnv1a(data):
+    h = 0xCBF29CE484222325
+    for byte in data:
+        h ^= byte
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+CLIENT_PROTO_FNS = {
+    "write_frame", "read_frame", "write_client", "read_client", "write_server",
+    "read_server", "client_handshake", "server_handshake", "check_magic_version",
+}
+MESH_TCP_CONSTS = {
+    "PROTOCOL_VERSION", "MAGIC", "HANDSHAKE_LEN", "FRAME_HEADER_LEN",
+    "MAX_FRAME_PAYLOAD", "CLOCK_SYNC_ROUNDS",
+}
+MESH_TCP_FNS = {
+    "encode_frame", "decode_frame", "write_handshake", "read_handshake",
+    "clock_sync_measure", "clock_sync_echo",
+}
+
+
+def selected(surface, path, kind, name):
+    if surface == "client_proto" and path.endswith("network/proto.rs"):
+        if kind == "const":
+            return name in (
+                "CLIENT_MAGIC", "CLIENT_PROTOCOL_VERSION", "MAX_CLIENT_FRAME"
+            ) or name.startswith("K_")
+        if kind in ("struct", "enum"):
+            return name in ("ServerHello", "ClientMsg", "StatsSnapshot", "ServerMsg")
+        if kind == "impl":
+            return name in ("ClientMsg", "ServerMsg")
+        if kind == "fn":
+            return (
+                name in CLIENT_PROTO_FNS
+                or name.startswith("encode_")
+                or name.startswith("decode_")
+            )
+        return False
+    if surface == "mesh_proto" and path.endswith("network/tcp.rs"):
+        if kind == "const":
+            return name in MESH_TCP_CONSTS
+        if kind == "fn":
+            return name in MESH_TCP_FNS
+        return False
+    if surface == "mesh_proto" and path.endswith("network/transport.rs"):
+        if kind == "struct":
+            return name == "Envelope"
+        if kind == "fn":
+            return name in ("tag", "req_tag", "f32s_to_bytes", "bytes_to_f32s")
+        return False
+    if surface == "tags" and path.endswith("network/tags.rs"):
+        return kind == "const"
+    return False
+
+
+SURFACES = [
+    ("client_proto", "network/proto.rs", "CLIENT_PROTOCOL_VERSION"),
+    ("mesh_proto", "network/tcp.rs", "PROTOCOL_VERSION"),
+    ("tags", "network/tcp.rs", "PROTOCOL_VERSION"),
+]
+
+
+def collect_sources(root):
+    out = []
+
+    def walk(d):
+        for entry in sorted(os.listdir(d)):
+            p = os.path.join(d, entry)
+            if os.path.isdir(p):
+                walk(p)
+            elif p.endswith(".rs"):
+                with open(p, encoding="utf-8") as f:
+                    out.append((p.replace("\\", "/"), f.read()))
+
+    walk(root)
+    return out
+
+
+def fingerprints(files):
+    parsed = [(path, items(lex(src))) for path, src in files]
+    fps = []
+    for surface, version_file, version_const in SURFACES:
+        buf = []
+        for path, its in parsed:
+            for kind, name, text in its:
+                if selected(surface, path, kind, name):
+                    buf.append(name + "\n" + text + "\n")
+        if not buf:
+            raise SystemExit(
+                "schema surface `%s` selected no items — codec files moved?" % surface
+            )
+        version = None
+        for path, its in parsed:
+            if not path.endswith(version_file):
+                continue
+            for kind, name, text in its:
+                if kind == "const" and name == version_const:
+                    toks = text.split(" ")
+                    if "=" in toks:
+                        version = toks[toks.index("=") + 1]
+        if version is None:
+            raise SystemExit(
+                "version constant `%s` not found in %s" % (version_const, version_file)
+            )
+        fps.append((surface, version, fnv1a("".join(buf).encode("utf-8"))))
+    return fps
+
+
+def render_lock(fps):
+    lines = [
+        "# apple-moe wire-schema lock: surface fingerprints vs protocol versions.\n"
+        "# Regenerate after an INTENTIONAL protocol change (with a version bump):\n"
+        "#   cargo xtask lint --bless        (or: python3 tools/schema_lock.py --bless)\n"
+        "# Do not hand-edit.\n"
+    ]
+    for name, version, fp in fps:
+        lines.append("%s version=%s fp=0x%016x\n" % (name, version, fp))
+    return "".join(lines)
+
+
+def main(argv):
+    bless = "--bless" in argv
+    fps = fingerprints(collect_sources(os.path.join(RUST, "src")))
+    text = render_lock(fps)
+    if bless:
+        with open(LOCK, "w", encoding="utf-8") as f:
+            f.write(text)
+        print("blessed %s" % LOCK)
+        for name, version, fp in fps:
+            print("  %s version=%s fp=0x%016x" % (name, version, fp))
+        return 0
+    try:
+        with open(LOCK, encoding="utf-8") as f:
+            current = f.read()
+    except FileNotFoundError:
+        current = ""
+    if current == text:
+        print("schema.lock is up to date")
+        return 0
+    print("schema.lock is stale — run `cargo xtask lint --bless` after an")
+    print("intentional protocol change (this mirror cannot tell drift from a bump):")
+    sys.stdout.write(text)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
