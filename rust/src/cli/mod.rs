@@ -259,6 +259,31 @@
 //!   `CLIENT_PROTOCOL_VERSION`/`PROTOCOL_VERSION` bump fails, as do
 //!   colliding tag values. `tools/schema_lock.py` mirrors the
 //!   fingerprint for toolchain-free blessing.
+//!
+//! A second subcommand analyzes the protocol FLOW rather than its
+//! shape:
+//!
+//! ```text
+//! cargo xtask protocol             communication graph + 4 failure classes
+//! cargo xtask protocol --bless     regenerate rust/protocol.map after an
+//!                                  INTENTIONAL protocol-flow change
+//! ```
+//!
+//! Every fabric `send`/`broadcast` and `recv_tag`/`gather` call site is
+//! resolved to its `PHASE_*` tag (through aliases, wrapper functions
+//! and struct fields) and its role (leader/follower/worker by
+//! reachability from the cluster loop roots). Failures: orphan sends,
+//! dead channels, unbounded `.recv()` calls (escape:
+//! `// xtask: allow(unbounded_recv): <why>` directly above) and `OP_*`
+//! opcodes emitted but never dispatched or vice versa. The graph lives
+//! in `rust/protocol.map` (edge list + mermaid sequence diagram),
+//! drift-checked like `schema.lock` and mirrored by
+//! `tools/protocol_map.py`. Its dynamic twin is
+//! `network::transport::SchedExplore` — seeded adversarial delivery
+//! schedules driven through the real control plane by
+//! `tests/model_protocol.rs` (pinned seed corpus in tier-1;
+//! `MODEL_PROTOCOL_SEEDS=N` sweeps fresh seeds and prints any failing
+//! one).
 
 pub mod args;
 pub mod commands;

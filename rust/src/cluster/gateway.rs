@@ -460,7 +460,20 @@ fn forward(
     let _sp = obs::span("gw.stream").arg("req", id);
     let canceller = handle.canceller();
     let mut saw_terminal = false;
-    while let Some(ev) = handle.next_event() {
+    let mut engine_wedged = false;
+    // Inactivity-bounded pump: a wedged engine must not leave this
+    // thread (and the client's connection slot) hanging forever — the
+    // hang mode `cargo xtask protocol` flags as unbounded_recv. The
+    // bound resets on every event, so stream length never matters.
+    loop {
+        let ev = match handle.next_event_timeout(crate::engine::api::JOIN_IDLE_BOUND) {
+            Ok(Some(ev)) => ev,
+            Ok(None) => break, // stream over: terminal delivered or engine gone
+            Err(_) => {
+                engine_wedged = true;
+                break;
+            }
+        };
         let msg = match ev {
             TokenEvent::Started { ttft_s, queued_s } => {
                 ServerMsg::Started { id, ttft_s, queued_s }
@@ -489,7 +502,17 @@ fn forward(
         }
     }
     if !saw_terminal {
-        if !canceller.is_cancelled() {
+        if engine_wedged {
+            // Best effort: free the request's scheduler slot if the
+            // engine ever comes back, and tell the client why its
+            // stream died instead of going silent.
+            canceller.cancel();
+            let msg = ServerMsg::Failed {
+                id,
+                error: "engine produced no event within the inactivity bound".into(),
+            };
+            let _ = write_server_counted(&writer, &link, &msg);
+        } else if !canceller.is_cancelled() {
             // The engine dropped the stream without a terminal event
             // (it shut down mid-request); tell the client rather than
             // going silent.

@@ -217,6 +217,11 @@ struct Pending {
 
 enum Cmd {
     Submit(Box<Pending>),
+    /// Ask every node to drain its trace ring mid-run: the leader
+    /// relays it as `OP_TRACE_FLUSH` on the control plane and followers
+    /// ship their buffers on `PHASE_TRACE` (collected by the leader's
+    /// `finish_trace` stash sweep at shutdown).
+    TraceFlush,
     Shutdown,
 }
 
@@ -280,6 +285,17 @@ impl LiveCluster {
             .send(Cmd::Submit(Box::new(p)))
             .map_err(|_| anyhow::anyhow!("cluster is down (node 0 exited)"))?;
         Ok(handle)
+    }
+
+    /// Ask every node to drain its trace ring NOW instead of waiting
+    /// for shutdown: node 0 relays the request to its followers as
+    /// `OP_TRACE_FLUSH` on the control plane, and their shipped buffers
+    /// queue on `PHASE_TRACE` until the leader's shutdown-time merge
+    /// sweeps them up. A no-op unless the cluster was started with
+    /// `LiveConfig::trace`. Best effort: a cluster that already exited
+    /// has nothing left to flush.
+    pub fn flush_trace(&self) {
+        let _ = self.cmd_txs[0].send(Cmd::TraceFlush);
     }
 
     /// Stop the cluster: in-flight requests receive a terminal `Failed`
@@ -819,6 +835,17 @@ impl NodeWorker {
                 };
                 match cmd {
                     Some(Cmd::Submit(p)) => pending.push_back(*p),
+                    Some(Cmd::TraceFlush) => {
+                        // Relay to the followers (decentralized control
+                        // plane; centralized workers carry no trace
+                        // ring worth flushing mid-run — their buffers
+                        // ship at shutdown). Best effort, like the
+                        // heartbeat: tracing must never kill a serve
+                        // loop.
+                        if self.cfg.topology == Topology::Decentralized {
+                            let _ = self.ctrl(OP_TRACE_FLUSH, &[]);
+                        }
+                    }
                     Some(Cmd::Shutdown) => {
                         for p in pending.drain(..) {
                             fail_pending(&p, "cluster shut down");
@@ -1211,6 +1238,11 @@ impl NodeWorker {
                         // failed rather than silently dropped.
                         fail_pending(&p, "submitted to a follower node");
                     }
+                    // `LiveCluster::flush_trace` targets node 0, which
+                    // relays `OP_TRACE_FLUSH` over the control plane;
+                    // a follower handed the command directly just
+                    // ships its own ring.
+                    Ok(Cmd::TraceFlush) => self.ship_trace(),
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => return Ok(None),
                 }

@@ -59,6 +59,13 @@ pub trait Engine {
     fn submit(&mut self, req: Request) -> Result<RequestHandle>;
 }
 
+/// Inactivity bound [`RequestHandle::join`] applies: no event for this
+/// long means the engine is wedged (hung accelerator call, dead serve
+/// loop) — every legitimate silence (queueing behind `max_active`,
+/// a cold artifact compile) is far shorter. The clock resets on every
+/// event, so generation length never matters.
+pub const JOIN_IDLE_BOUND: std::time::Duration = std::time::Duration::from_secs(600);
+
 /// Caller's end of one in-flight request: an event stream plus a
 /// cooperative cancellation flag.
 pub struct RequestHandle {
@@ -102,31 +109,47 @@ impl RequestHandle {
 
     /// Next event, blocking. `None` once the stream is over (a terminal
     /// event was delivered, or the engine went away).
+    ///
+    /// This is the raw stream-read primitive and deliberately has no
+    /// bound of its own: the engine side guarantees a terminal event or
+    /// a dropped sender on every path, and callers that must survive a
+    /// wedged engine layer a bound on top
+    /// ([`RequestHandle::next_event_timeout`] / [`RequestHandle::join`]).
     pub fn next_event(&self) -> Option<TokenEvent> {
+        // Blocking stream-read API contract: a dropped engine ends the
+        // stream; bounded callers use next_event_timeout.
+        // xtask: allow(unbounded_recv): terminal event or dropped sender
         self.events.recv().ok()
     }
 
-    /// Non-blocking poll for the next event.
-    pub fn try_event(&self) -> Option<TokenEvent> {
-        self.events.try_recv().ok()
+    /// [`RequestHandle::next_event`] bounded by an inactivity timeout:
+    /// `Ok(None)` once the stream is over, `Err` if `idle` elapses with
+    /// no event at all (a wedged engine — the hang mode a streaming
+    /// surface like the gateway must not inherit).
+    pub fn next_event_timeout(
+        &self,
+        idle: std::time::Duration,
+    ) -> Result<Option<TokenEvent>> {
+        match self.events.recv_timeout(idle) {
+            Ok(ev) => Ok(Some(ev)),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Ok(None),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => anyhow::bail!(
+                "request {}: no event for {idle:?} — engine wedged?",
+                self.id
+            ),
+        }
     }
 
     /// Drain the stream to its terminal event and return the result
     /// (the blocking-serve compatibility path: `submit(req)?.join()`).
+    ///
+    /// Bounded by [`JOIN_IDLE_BOUND`] of inactivity — generous enough
+    /// that any live engine (whose slowest legitimate silence is a cold
+    /// artifact compile) streams well inside it, so the only way to
+    /// trip it is a genuinely wedged engine. Callers that want a
+    /// different bound use [`RequestHandle::join_timeout`] directly.
     pub fn join(self) -> Result<RequestResult> {
-        loop {
-            match self.events.recv() {
-                Ok(TokenEvent::Done { result }) => return Ok(result),
-                Ok(TokenEvent::Failed { id, error }) => {
-                    anyhow::bail!("request {id} failed: {error}")
-                }
-                Ok(_) => {}
-                Err(_) => anyhow::bail!(
-                    "request {}: engine dropped the stream before completion",
-                    self.id
-                ),
-            }
-        }
+        self.join_timeout(JOIN_IDLE_BOUND)
     }
 
     /// Like [`RequestHandle::join`], but bounded by an INACTIVITY
@@ -239,6 +262,22 @@ mod tests {
         });
         let r = h.join_timeout(Duration::from_millis(500)).unwrap();
         assert_eq!(r.generated.len(), 5);
+    }
+
+    #[test]
+    fn next_event_timeout_trips_on_silence_and_ends_cleanly() {
+        use std::time::Duration;
+        let (h, tx, _cancel) = RequestHandle::channel(11);
+        // A silent-but-alive engine trips the inactivity bound.
+        assert!(h.next_event_timeout(Duration::from_millis(20)).is_err());
+        tx.send(TokenEvent::Token { id: 1, logprob: None }).unwrap();
+        assert!(matches!(
+            h.next_event_timeout(Duration::from_secs(5)).unwrap(),
+            Some(TokenEvent::Token { id: 1, .. })
+        ));
+        // A dropped engine ends the stream cleanly, not with an error.
+        drop(tx);
+        assert!(h.next_event_timeout(Duration::from_secs(5)).unwrap().is_none());
     }
 
     #[test]

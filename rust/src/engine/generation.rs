@@ -8,10 +8,10 @@
 
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -19,6 +19,11 @@ use crate::engine::api::{Engine, RequestHandle, TokenEvent};
 use crate::engine::request::{FinishReason, Request, RequestResult};
 use crate::metrics::{RunMetrics, TokenBreakdown};
 use crate::runtime::{HostTensor, Manifest, NanoRuntime, TransferStats};
+
+/// Bound on the worker's ready report (dominated by the PJRT compile of
+/// the dense artifact set) — the same bound `cluster::live` puts on its
+/// node-ready waits.
+const LOAD_TIMEOUT: Duration = Duration::from_secs(300);
 
 struct Job {
     req: Request,
@@ -54,21 +59,37 @@ impl DenseEngine {
                     return;
                 }
             };
+            // Worker idle loop: Drop closes the queue, which ends this
+            // recv with Err and exits the thread.
+            // xtask: allow(unbounded_recv): queue-close bounds this recv
             while let Ok(job) = rx.recv() {
                 serve_job(&rt, job);
             }
         });
-        match ready_rx.recv() {
+        // Bounded like the live cluster's node-ready wait: a wedged
+        // artifact compile must surface as an error, not hang `load`.
+        match ready_rx.recv_timeout(LOAD_TIMEOUT) {
             Ok(Ok(())) => Ok(DenseEngine { tx: Some(tx), worker: Some(worker), manifest }),
             Ok(Err(e)) => {
                 drop(tx); // close the queue so the worker cannot outlive us
                 let _ = worker.join();
                 anyhow::bail!("dense engine failed to load: {e}")
             }
-            Err(_) => {
+            Err(RecvTimeoutError::Disconnected) => {
                 drop(tx);
                 let _ = worker.join();
                 anyhow::bail!("dense engine worker died during load")
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                // Not joined: the worker is stuck inside the runtime
+                // load; with the queue closed it exits on its own if the
+                // load ever returns, and joining here would just move
+                // the hang into `load`'s caller.
+                drop(tx);
+                anyhow::bail!(
+                    "dense engine worker silent for {LOAD_TIMEOUT:?} during load \
+                     (artifact compile wedged?)"
+                )
             }
         }
     }

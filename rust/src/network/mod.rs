@@ -18,8 +18,38 @@
 //!   uses (single source of truth for `cargo xtask lint`'s schema
 //!   fingerprint and tag-uniqueness checks).
 
+/// Declares the control-plane tag table ([`tags`]): every constant
+/// declaration passes through verbatim, and the macro additionally
+/// derives one named inventory slice per group (`ALL_PHASES`,
+/// `ALL_OPS`) so the uniqueness/density tests — and the
+/// `cargo xtask protocol` tag table — enumerate a newly added constant
+/// by construction instead of by hand-maintained lists that silently
+/// go stale.
+///
+/// `cargo xtask lint`'s schema fingerprint reads the *source token
+/// stream* of `tags.rs` (macro name and group braces are non-item
+/// tokens; each `const` item is extracted verbatim), so wrapping the
+/// table in this macro leaves `rust/schema.lock` untouched.
+macro_rules! tag_table {
+    (
+        phases { $($(#[$pa:meta])* $pv:vis const $p:ident: u8 = $pe:expr;)+ }
+        ops { $($(#[$oa:meta])* $ov:vis const $o:ident: u8 = $oe:expr;)+ }
+        markers { $($(#[$ma:meta])* $mv:vis const $m:ident: u8 = $me:expr;)* }
+    ) => {
+        $($(#[$pa])* $pv const $p: u8 = $pe;)+
+        $($(#[$oa])* $ov const $o: u8 = $oe;)+
+        $($(#[$ma])* $mv const $m: u8 = $me;)*
+        /// Every `PHASE_*` constant, by name — derived from the
+        /// declarations above by `tag_table!`.
+        pub const ALL_PHASES: &[(&str, u8)] = &[$((stringify!($p), $p)),+];
+        /// Every `OP_*` constant, by name, in opcode order — derived
+        /// from the declarations above by `tag_table!`.
+        pub const ALL_OPS: &[(&str, u8)] = &[$((stringify!($o), $o)),+];
+    };
+}
+
 pub mod proto;
-pub(crate) mod tags;
+pub mod tags;
 pub mod tcp;
 pub mod transport;
 

@@ -9,55 +9,67 @@
 //! [`crate::network::tcp::PROTOCOL_VERSION`] bump — `cargo xtask lint`
 //! fingerprints this file into `rust/schema.lock` and enforces both
 //! that rule and namespace-wide uniqueness.
+//!
+//! The `tag_table!` wrapper (defined in [`crate::network`]) derives
+//! [`ALL_PHASES`] and [`ALL_OPS`] from the declarations themselves, so
+//! the uniqueness/density tests below and `cargo xtask protocol`'s tag
+//! table can never drift from the constants: a new entry is enumerated
+//! by construction.
 
-/// Per-layer partial activations (decentralized all-reduce ring).
-pub(crate) const PHASE_PARTIAL: u8 = 1;
-/// Leader→follower hidden-state scatter (centralized fork-join).
-pub(crate) const PHASE_SCATTER: u8 = 2;
-/// Follower→leader expert-output gather (centralized fork-join).
-pub(crate) const PHASE_GATHER: u8 = 3;
-/// Control-plane messages; first payload byte is an `OP_*` opcode.
-pub(crate) const PHASE_CTRL: u8 = 4;
-/// Follower→leader liveness beacons (fixed tag per follower): the
-/// symmetric twin of the leader heartbeat, so the idle leader detects
-/// follower death instead of only finding out at its next gather.
-pub(crate) const PHASE_FB: u8 = 5;
-/// Follower→leader shipment of a drained trace-event buffer
-/// ([`crate::obs::encode_events`] payload, one message per node) so
-/// node 0 can merge every node's spans into one Chrome-trace file.
-pub(crate) const PHASE_TRACE: u8 = 6;
+tag_table! {
+    phases {
+        /// Per-layer partial activations (decentralized all-reduce ring).
+        pub const PHASE_PARTIAL: u8 = 1;
+        /// Leader→follower hidden-state scatter (centralized fork-join).
+        pub const PHASE_SCATTER: u8 = 2;
+        /// Follower→leader expert-output gather (centralized fork-join).
+        pub const PHASE_GATHER: u8 = 3;
+        /// Control-plane messages; first payload byte is an `OP_*` opcode.
+        pub const PHASE_CTRL: u8 = 4;
+        /// Follower→leader liveness beacons (fixed tag per follower): the
+        /// symmetric twin of the leader heartbeat, so the idle leader detects
+        /// follower death instead of only finding out at its next gather.
+        pub const PHASE_FB: u8 = 5;
+        /// Follower→leader shipment of a drained trace-event buffer
+        /// ([`crate::obs::encode_events`] payload, one message per node) so
+        /// node 0 can merge every node's spans into one Chrome-trace file.
+        pub const PHASE_TRACE: u8 = 6;
 
-/// `net-bench` ping-pong request.
-pub(crate) const PHASE_PING: u8 = 9;
-/// `net-bench` ping-pong reply.
-pub(crate) const PHASE_PONG: u8 = 10;
-/// `net-bench` streaming-bandwidth payload.
-pub(crate) const PHASE_STREAM: u8 = 11;
-/// `net-bench` stream acknowledgement.
-pub(crate) const PHASE_ACK: u8 = 12;
-
-/// Control-plane opcodes (first payload byte of a [`PHASE_CTRL`]
-/// message).
-pub(crate) const OP_SHUTDOWN: u8 = 0;
-pub(crate) const OP_ADMIT: u8 = 1;
-pub(crate) const OP_STEP: u8 = 2;
-pub(crate) const OP_CANCEL: u8 = 3;
-/// Leader liveness beacon while the cluster idles between requests
-/// (decentralized control plane; the centralized topology uses
-/// [`SCATTER_HEARTBEAT`]). Followers replay and discard it.
-pub(crate) const OP_HEARTBEAT: u8 = 4;
-/// One continuously-batched scheduler iteration: the body is the packed
-/// participant list (u16 count, then each request's admission seq in
-/// row order). Every node derives the same sampling, bucket and row
-/// packing from it.
-pub(crate) const OP_BATCH: u8 = 5;
-/// Ask a follower to drain its trace ring and ship it to the leader on
-/// [`PHASE_TRACE`] now (normally that happens once, at shutdown).
-pub(crate) const OP_TRACE_FLUSH: u8 = 6;
-
-/// Centralized heartbeat marker: a 1-byte scatter payload (a real
-/// scatter is ≥ 4 + 4·d bytes, an empty one is the shutdown marker).
-pub(crate) const SCATTER_HEARTBEAT: u8 = 0xAB;
+        /// `net-bench` ping-pong request.
+        pub const PHASE_PING: u8 = 9;
+        /// `net-bench` ping-pong reply.
+        pub const PHASE_PONG: u8 = 10;
+        /// `net-bench` streaming-bandwidth payload.
+        pub const PHASE_STREAM: u8 = 11;
+        /// `net-bench` stream acknowledgement.
+        pub const PHASE_ACK: u8 = 12;
+    }
+    ops {
+        /// Control-plane opcodes (first payload byte of a [`PHASE_CTRL`]
+        /// message).
+        pub const OP_SHUTDOWN: u8 = 0;
+        pub const OP_ADMIT: u8 = 1;
+        pub const OP_STEP: u8 = 2;
+        pub const OP_CANCEL: u8 = 3;
+        /// Leader liveness beacon while the cluster idles between requests
+        /// (decentralized control plane; the centralized topology uses
+        /// [`SCATTER_HEARTBEAT`]). Followers replay and discard it.
+        pub const OP_HEARTBEAT: u8 = 4;
+        /// One continuously-batched scheduler iteration: the body is the packed
+        /// participant list (u16 count, then each request's admission seq in
+        /// row order). Every node derives the same sampling, bucket and row
+        /// packing from it.
+        pub const OP_BATCH: u8 = 5;
+        /// Ask a follower to drain its trace ring and ship it to the leader on
+        /// [`PHASE_TRACE`] now (normally that happens once, at shutdown).
+        pub const OP_TRACE_FLUSH: u8 = 6;
+    }
+    markers {
+        /// Centralized heartbeat marker: a 1-byte scatter payload (a real
+        /// scatter is ≥ 4 + 4·d bytes, an empty one is the shutdown marker).
+        pub const SCATTER_HEARTBEAT: u8 = 0xAB;
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -65,20 +77,8 @@ mod tests {
 
     #[test]
     fn phase_tags_are_unique() {
-        let phases = [
-            ("PHASE_PARTIAL", PHASE_PARTIAL),
-            ("PHASE_SCATTER", PHASE_SCATTER),
-            ("PHASE_GATHER", PHASE_GATHER),
-            ("PHASE_CTRL", PHASE_CTRL),
-            ("PHASE_FB", PHASE_FB),
-            ("PHASE_TRACE", PHASE_TRACE),
-            ("PHASE_PING", PHASE_PING),
-            ("PHASE_PONG", PHASE_PONG),
-            ("PHASE_STREAM", PHASE_STREAM),
-            ("PHASE_ACK", PHASE_ACK),
-        ];
-        for (i, (na, va)) in phases.iter().enumerate() {
-            for (nb, vb) in &phases[i + 1..] {
+        for (i, (na, va)) in ALL_PHASES.iter().enumerate() {
+            for (nb, vb) in &ALL_PHASES[i + 1..] {
                 assert_ne!(va, vb, "{na} collides with {nb}");
             }
         }
@@ -86,17 +86,19 @@ mod tests {
 
     #[test]
     fn op_codes_are_unique_and_dense() {
-        let ops = [
-            OP_SHUTDOWN,
-            OP_ADMIT,
-            OP_STEP,
-            OP_CANCEL,
-            OP_HEARTBEAT,
-            OP_BATCH,
-            OP_TRACE_FLUSH,
-        ];
-        for (i, a) in ops.iter().enumerate() {
-            assert_eq!(*a as usize, i, "opcodes are a dense 0..N table");
+        for (i, (name, v)) in ALL_OPS.iter().enumerate() {
+            assert_eq!(*v as usize, i, "{name}: opcodes are a dense 0..N table");
         }
+    }
+
+    #[test]
+    fn derived_inventories_pin_the_table_size() {
+        // Additions enumerate themselves (the slices come from the
+        // declarations); a *removal* must be loud, so pin the counts.
+        assert_eq!(ALL_PHASES.len(), 10);
+        assert_eq!(ALL_OPS.len(), 7);
+        assert_eq!(ALL_PHASES[0], ("PHASE_PARTIAL", PHASE_PARTIAL));
+        assert_eq!(ALL_OPS[OP_TRACE_FLUSH as usize], ("OP_TRACE_FLUSH", OP_TRACE_FLUSH));
+        let _ = SCATTER_HEARTBEAT;
     }
 }

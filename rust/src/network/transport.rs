@@ -386,6 +386,256 @@ fn swap_pair((env, at): (Envelope, Instant)) -> (Instant, Envelope) {
     (at, env)
 }
 
+// ---------------- schedule exploration ----------------
+
+/// Knobs for the schedule-exploring fabric ([`sched_explore_fabric`]).
+#[derive(Debug, Clone)]
+pub struct SchedOpts {
+    /// Maximum number of delivery rounds a message can be held back
+    /// (0 = no reordering, only drops). Each failed receive poll ages
+    /// every held head by one round, so a hold can delay but never
+    /// starve a delivery.
+    pub max_hold: u32,
+    /// Per-phase drop table `(phase, percent)`: a message whose tag's
+    /// phase byte matches is dropped with that (deterministic, seeded)
+    /// probability. Only meaningful for phases the protocol treats as
+    /// best-effort (beacons, trace shipments) — dropping a reliable
+    /// phase just deadlocks the protocol under test, by design.
+    pub drop: Vec<(u8, u8)>,
+    /// Poll slice while waiting for new arrivals; also the aging cadence
+    /// for held messages. Small values explore more interleavings per
+    /// wall-clock second.
+    pub tick: Duration,
+}
+
+impl Default for SchedOpts {
+    fn default() -> SchedOpts {
+        SchedOpts { max_hold: 3, drop: Vec::new(), tick: Duration::from_millis(2) }
+    }
+}
+
+/// One perturbed arrival waiting inside [`SchedExplore`].
+struct Held {
+    /// Remaining delivery rounds before this message becomes ready.
+    hold: u32,
+    /// Tie-break among ready heads (lower delivers first).
+    prio: u32,
+    env: Envelope,
+}
+
+/// Deterministic schedule-exploring transport: wraps a backend (the
+/// in-process fabric) and perturbs *delivery* on the receiving side —
+/// holding messages back a bounded number of rounds to reorder
+/// cross-sender interleavings, and dropping configured best-effort
+/// phases — so the real protocol code runs through adversarial
+/// schedules that plain thread timing almost never produces.
+///
+/// Determinism contract: every message's fate (drop / hold rounds /
+/// priority) is a pure function of `(seed, receiver, sender, phase,
+/// per-sender arrival index)`. The backend preserves per-sender FIFO,
+/// so the per-sender index — and with it the fate sequence — is
+/// identical on every run with the same seed; a failing schedule
+/// reproduces from its printed seed. Per-sender order is preserved
+/// (hold ranks apply to queue *heads*), which matches what any real
+/// ordered transport (TCP) guarantees; everything across senders is
+/// fair game.
+pub struct SchedExplore {
+    inner: Box<dyn Transport>,
+    seed: u64,
+    opts: SchedOpts,
+    /// Per-sender FIFO of perturbed arrivals (indexed by `from`).
+    held: Vec<VecDeque<Held>>,
+    /// Per-sender arrival counters: the deterministic fate key.
+    arrivals: Vec<u64>,
+    /// Messages dropped so far (observability for tests/logs).
+    dropped: u64,
+    /// The backend reported `Closed`: drain held mail, then surface it.
+    closed: bool,
+}
+
+/// splitmix64: the standard 64-bit finalizer (same constants as
+/// `util::threefry`'s neighbours in the literature) — good avalanche,
+/// no state.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl SchedExplore {
+    pub fn new(inner: Box<dyn Transport>, seed: u64, opts: SchedOpts) -> SchedExplore {
+        let n = inner.n_nodes();
+        SchedExplore {
+            inner,
+            seed,
+            opts,
+            held: (0..n).map(|_| VecDeque::new()).collect(),
+            arrivals: vec![0; n],
+            dropped: 0,
+            closed: false,
+        }
+    }
+
+    /// The deterministic fate word for one arrival.
+    fn fate(&self, from: usize, phase: u8, index: u64) -> u64 {
+        let key = (self.inner.node() as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ ((from as u64) << 40)
+            ^ ((phase as u64) << 32)
+            ^ index;
+        splitmix64(self.seed ^ splitmix64(key))
+    }
+
+    /// Perturb one arrival: drop it (per-phase table) or queue it with
+    /// a seeded hold rank + priority.
+    fn intake(&mut self, env: Envelope) {
+        let from = env.from;
+        let phase = (env.tag >> 56) as u8;
+        let index = self.arrivals[from];
+        self.arrivals[from] += 1;
+        let h = self.fate(from, phase, index);
+        if let Some(&(_, pct)) = self.opts.drop.iter().find(|(p, _)| *p == phase) {
+            if (h % 100) < pct as u64 {
+                self.dropped += 1;
+                return;
+            }
+        }
+        let hold = if self.opts.max_hold == 0 {
+            0
+        } else {
+            ((h >> 8) % (self.opts.max_hold as u64 + 1)) as u32
+        };
+        let prio = (h >> 32) as u32;
+        self.held[from].push_back(Held { hold, prio, env });
+    }
+
+    /// Messages discarded by the drop table so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Deliver the minimum-priority ready head, if any (per-sender FIFO:
+    /// only queue heads are candidates).
+    fn pop_ready(&mut self) -> Option<Envelope> {
+        let mut best: Option<(usize, u32)> = None;
+        for (from, q) in self.held.iter().enumerate() {
+            if let Some(h) = q.front() {
+                let better = match best {
+                    Some((_, p)) => h.prio < p,
+                    None => true,
+                };
+                if h.hold == 0 && better {
+                    best = Some((from, h.prio));
+                }
+            }
+        }
+        let (from, _) = best?;
+        Some(self.held[from].pop_front().expect("ready head exists").env)
+    }
+
+    /// Age every held head one round (called when a poll comes up
+    /// empty, so holds delay deliveries but can never starve them).
+    fn age(&mut self) {
+        for q in &mut self.held {
+            if let Some(h) = q.front_mut() {
+                h.hold = h.hold.saturating_sub(1);
+            }
+        }
+    }
+
+    fn any_held(&self) -> bool {
+        self.held.iter().any(|q| !q.is_empty())
+    }
+}
+
+impl Transport for SchedExplore {
+    fn node(&self) -> usize {
+        self.inner.node()
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.inner.n_nodes()
+    }
+
+    fn send_raw(&mut self, env: Envelope) -> Result<(), NetError> {
+        self.inner.send_raw(env)
+    }
+
+    fn recv_raw(&mut self, timeout: Duration) -> Result<Envelope, NetError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            // Drain everything the backend already has, without
+            // blocking, so holds rank against the full arrival set.
+            while !self.closed {
+                match self.inner.recv_raw(Duration::ZERO) {
+                    Ok(env) => self.intake(env),
+                    Err(NetError::Timeout(_)) => break,
+                    Err(NetError::Closed) => self.closed = true,
+                    Err(e) => return Err(e),
+                }
+            }
+            if let Some(env) = self.pop_ready() {
+                return Ok(env);
+            }
+            if self.closed {
+                if self.any_held() {
+                    // Senders are gone but mail is still held: age it
+                    // out rather than losing it to the teardown race.
+                    self.age();
+                    continue;
+                }
+                return Err(NetError::Closed);
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                // Even a zero-budget poll makes aging progress, so
+                // `Duration::ZERO` sweep loops still release holds.
+                self.age();
+                return Err(NetError::Timeout(timeout));
+            }
+            match self.inner.recv_raw(self.opts.tick.min(remaining)) {
+                Ok(env) => self.intake(env),
+                Err(NetError::Timeout(_)) => self.age(),
+                Err(NetError::Closed) => self.closed = true,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn clock_offset_ns(&self, peer: usize) -> i64 {
+        self.inner.clock_offset_ns(peer)
+    }
+}
+
+/// Build a fully-connected in-process fabric whose `n` endpoints all
+/// perturb delivery through [`SchedExplore`] with the same `seed`
+/// (receiver-side fates are keyed on the receiving node, so sharing one
+/// seed still explores distinct per-receiver schedules).
+pub fn sched_explore_fabric(n: usize, seed: u64, opts: SchedOpts) -> Vec<Endpoint> {
+    let mut txs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel::<(Envelope, Instant)>();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    rxs.into_iter()
+        .enumerate()
+        .map(|(node, rx)| {
+            let inner = InProcess {
+                node,
+                n_nodes: n,
+                rx,
+                txs: txs.clone(),
+                profile: None,
+                pending: Vec::new(),
+            };
+            Endpoint::new(Box::new(SchedExplore::new(Box::new(inner), seed, opts.clone())))
+        })
+        .collect()
+}
+
 fn wait_until(t: Instant) {
     let now = Instant::now();
     if t > now {
@@ -579,6 +829,96 @@ mod tests {
         assert_ne!(a, tag(2, 2, 3));
         assert_ne!(a, tag(1, 3, 3));
         assert_ne!(a, tag(1, 2, 4));
+    }
+
+    #[test]
+    fn sched_explore_delivers_everything_despite_holds() {
+        // Two senders enqueue before the receiver polls; seeded holds
+        // reorder cross-sender delivery but aging guarantees every
+        // message eventually lands.
+        let mut eps = sched_explore_fabric(3, 0xC0FFEE, SchedOpts::default());
+        let mut c = eps.pop().unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        for i in 0..8u32 {
+            a.send(2, tag(1, 1, i), vec![i as u8]).unwrap();
+            b.send(2, tag(1, 2, i), vec![i as u8]).unwrap();
+        }
+        for i in 0..8u32 {
+            assert_eq!(c.recv_tag(tag(1, 1, i), T).unwrap().payload, vec![i as u8]);
+            assert_eq!(c.recv_tag(tag(1, 2, i), T).unwrap().payload, vec![i as u8]);
+        }
+    }
+
+    #[test]
+    fn sched_explore_preserves_per_sender_fifo() {
+        // Hold ranks apply only to queue heads, so a single sender's
+        // stream arrives in send order no matter the seed.
+        let opts = SchedOpts { max_hold: 5, ..SchedOpts::default() };
+        let mut eps = sched_explore_fabric(2, 42, opts);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let t = tag(4, 0, 0);
+        for i in 0..10u8 {
+            a.send(1, t, vec![i]).unwrap();
+        }
+        for i in 0..10u8 {
+            assert_eq!(b.recv_tag(t, T).unwrap().payload, vec![i]);
+        }
+    }
+
+    #[test]
+    fn sched_explore_drops_only_configured_phases() {
+        // 100% drop on phase 5; phase 4 must be untouched.
+        let opts = SchedOpts { max_hold: 0, drop: vec![(5, 100)], ..SchedOpts::default() };
+        let mut eps = sched_explore_fabric(2, 7, opts);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        for i in 0..4u32 {
+            a.send(1, tag(5, 0, i), vec![0]).unwrap();
+            a.send(1, tag(4, 0, i), vec![1]).unwrap();
+        }
+        for i in 0..4u32 {
+            assert_eq!(b.recv_tag(tag(4, 0, i), T).unwrap().payload, vec![1]);
+        }
+        assert!(matches!(
+            b.recv_tag(tag(5, 0, 0), Duration::from_millis(30)),
+            Err(NetError::Timeout(_))
+        ));
+    }
+
+    #[test]
+    fn sched_explore_fates_reproduce_from_seed() {
+        // The per-message drop fate is a pure function of
+        // (seed, receiver, sender, phase, per-sender index): two runs
+        // with the same seed must produce the identical survival
+        // pattern — the property that makes a failing schedule
+        // reproducible from its printed seed.
+        let run = || {
+            let opts =
+                SchedOpts { max_hold: 2, drop: vec![(5, 50)], ..SchedOpts::default() };
+            let mut eps = sched_explore_fabric(2, 0xFEED, opts);
+            let mut b = eps.pop().unwrap();
+            let mut a = eps.pop().unwrap();
+            for i in 0..16u32 {
+                a.send(1, tag(5, 0, i), vec![i as u8]).unwrap();
+            }
+            (0..16u32)
+                .map(|i| b.recv_tag(tag(5, 0, i), Duration::from_millis(80)).is_ok())
+                .collect::<Vec<bool>>()
+        };
+        let first = run();
+        assert!(first.iter().any(|&s| s), "seed 0xFEED dropped everything");
+        assert!(first.iter().any(|&s| !s), "seed 0xFEED dropped nothing");
+        assert_eq!(first, run(), "same seed must reproduce identical fates");
+    }
+
+    #[test]
+    fn sched_explore_honours_caller_deadline() {
+        let mut eps = sched_explore_fabric(2, 1, SchedOpts::default());
+        let mut b = eps.pop().unwrap();
+        let err = b.recv_tag(1, Duration::from_millis(20)).unwrap_err();
+        assert!(matches!(err, NetError::Timeout(_)));
     }
 
     #[test]

@@ -1,0 +1,301 @@
+//! Schedule-exploration model tests for the live-cluster control plane:
+//! the dynamic twin of `cargo xtask protocol`'s static communication
+//! graph. A [`sched_explore_fabric`] wraps the in-process fabric in a
+//! deterministic adversary (seeded per-message holds, priorities and
+//! per-phase drops) and the *real* protocol building blocks —
+//! `recv_from_leader`, `Beacon`/`beacon_tag`, the seq-tagged ctrl
+//! broadcast shape, the `finish_trace` sweep shape, `Endpoint::gather`
+//! — are driven through adversarial interleavings of the historical
+//! hang classes:
+//!
+//! 1. seq-ordered ctrl replay (admit/cancel racing a client vanish),
+//! 2. idle leader vs dropped follower beacons (idle-leader class),
+//! 3. trace flush racing teardown (delayed/lost best-effort traffic),
+//! 4. follower death mid-gather (connect-then-silent dialer class).
+//!
+//! Every fate is a pure function of `(seed, receiver, sender, phase,
+//! per-sender arrival index)`, so a failure reproduces from its printed
+//! seed: `MODEL_PROTOCOL_SEEDS=N cargo test --test model_protocol`
+//! sweeps N derived seeds and prints any that fail; the pinned corpus
+//! below runs in tier-1 unconditionally.
+#![allow(clippy::unwrap_used)]
+
+use std::panic::AssertUnwindSafe;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use apple_moe::cluster::live::{beacon_tag, recv_from_leader, Beacon};
+use apple_moe::network::tags::{
+    OP_ADMIT, OP_CANCEL, OP_SHUTDOWN, PHASE_CTRL, PHASE_FB, PHASE_GATHER, PHASE_TRACE,
+};
+use apple_moe::network::transport::{sched_explore_fabric, tag, Endpoint, NetError, SchedOpts};
+
+/// Deterministic regression corpus: every seed here once stood in for a
+/// schedule family's hang class and stays green in tier-1 forever. The
+/// exact drop/hold fates per seed are fixed by the SchedExplore
+/// determinism contract (verified by `fates_reproduce_from_seed`).
+const PINNED_SEEDS: &[u64] = &[0x5EED_0001, 0x5EED_0002, 0x5EED_0003, 0xBEEF_CAFE, 0xFEED_F00D];
+
+fn pair(seed: u64, opts: SchedOpts) -> (Endpoint, Endpoint) {
+    let mut eps = sched_explore_fabric(2, seed, opts).into_iter();
+    (eps.next().unwrap(), eps.next().unwrap())
+}
+
+/// Family 1 — seq-ordered ctrl replay. The leader broadcasts a burst of
+/// admit/cancel ops (the client-vanish shape: cancels chasing admits)
+/// each on its own `tag(PHASE_CTRL, 0, seq)`; the follower replays seq
+/// by seq through `recv_from_leader` exactly like
+/// `follow_decentralized`. Holds may delay any message, but the
+/// seq-tagged demux must linearize the follower's view to the leader's
+/// send order — an out-of-order or lost ctrl op is a protocol bug, not
+/// an unlucky schedule.
+fn ctrl_replay_linearizes(seed: u64) {
+    let (mut leader, follower) = pair(seed, SchedOpts::default());
+    let script =
+        [OP_ADMIT, OP_ADMIT, OP_CANCEL, OP_ADMIT, OP_CANCEL, OP_CANCEL, OP_SHUTDOWN];
+    let h = thread::spawn(move || {
+        let mut f = follower;
+        let mut got = Vec::new();
+        for seq in 0..script.len() as u32 {
+            let env = recv_from_leader(
+                &mut f,
+                tag(PHASE_CTRL, 0, seq),
+                Duration::from_secs(10),
+                Duration::from_millis(2),
+                None,
+            )
+            .expect("leader is alive; ctrl is a reliable phase");
+            got.push(env.payload[0]);
+            if env.payload[0] == OP_SHUTDOWN {
+                break;
+            }
+        }
+        got
+    });
+    for (seq, op) in script.iter().enumerate() {
+        leader.broadcast(tag(PHASE_CTRL, 0, seq as u32), &[*op]).unwrap();
+    }
+    let got = h.join().unwrap();
+    assert_eq!(got, script, "seed 0x{seed:016x}: ctrl replay diverged from send order");
+}
+
+/// Family 2 — idle leader vs lossy beacons. The follower idles in
+/// `recv_from_leader` with a live [`Beacon`] while half its PHASE_FB
+/// beacons are dropped; the leader idles in the `check_followers`
+/// zero-timeout sweep shape. Neither side may wedge: the follower must
+/// exit via OP_SHUTDOWN (never `LeaderLost` — the leader IS alive), and
+/// with the pinned corpus the leader must still observe beacons through
+/// the loss (at 50% drop every pinned seed keeps ≥8 of the first 20).
+fn beacon_loss_wedges_nobody(seed: u64, check_seen: bool) {
+    let opts = SchedOpts { drop: vec![(PHASE_FB, 50)], ..SchedOpts::default() };
+    let (mut leader, follower) = pair(seed, opts);
+    let h = thread::spawn(move || {
+        let mut f = follower;
+        let mut beacon = Beacon::new(1, Duration::from_millis(1));
+        let env = recv_from_leader(
+            &mut f,
+            tag(PHASE_CTRL, 0, 0),
+            Duration::from_secs(10),
+            Duration::from_millis(1),
+            Some(&mut beacon),
+        )
+        .expect("an alive leader must never read as LeaderLost");
+        assert_eq!(env.payload[0], OP_SHUTDOWN);
+    });
+    // Idle-leader loop: drain this follower's beacon tag with
+    // zero-timeout sweeps (zero-budget polls still age held mail).
+    let bt = beacon_tag(1);
+    let mut seen = 0u32;
+    let deadline = Instant::now() + Duration::from_millis(150);
+    while Instant::now() < deadline && seen < 3 {
+        while leader.recv_tag(bt, Duration::ZERO).is_ok() {
+            seen += 1;
+        }
+        thread::sleep(Duration::from_millis(2));
+    }
+    if check_seen {
+        assert!(seen > 0, "seed 0x{seed:016x}: every beacon lost despite 50% drop rate");
+    }
+    leader.broadcast(tag(PHASE_CTRL, 0, 0), &[OP_SHUTDOWN]).unwrap();
+    h.join().unwrap();
+}
+
+/// Family 3 — trace flush racing teardown. Trace shipment is
+/// best-effort: with PHASE_TRACE dropped entirely the leader's
+/// `finish_trace`-shaped sweep (one bounded wait + a zero-timeout
+/// drain) must run off its bound and return — not hang the teardown.
+/// With delivery merely delayed (holds, no drops) every chunk must
+/// still arrive.
+fn trace_flush_survives_teardown_race(seed: u64) {
+    // Total loss: bounded sweep, no hang, nothing delivered.
+    let opts = SchedOpts { drop: vec![(PHASE_TRACE, 100)], ..SchedOpts::default() };
+    let (mut leader, follower) = pair(seed, opts);
+    let t = tag(PHASE_TRACE, 1, 0);
+    let h = thread::spawn(move || {
+        let mut f = follower;
+        for i in 0..3u8 {
+            f.send(0, t, vec![i]).unwrap();
+        }
+    });
+    h.join().unwrap();
+    let t0 = Instant::now();
+    assert!(
+        matches!(leader.recv_tag(t, Duration::from_millis(100)), Err(NetError::Timeout(_))),
+        "seed 0x{seed:016x}: dropped trace traffic must read as a timeout"
+    );
+    while leader.recv_tag(t, Duration::ZERO).is_ok() {}
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "seed 0x{seed:016x}: trace sweep wedged on dropped traffic"
+    );
+
+    // Delay-only twin: holds may reorder the arrival rounds but every
+    // chunk must be delivered to the bounded drain.
+    let (mut leader, follower) = pair(seed, SchedOpts::default());
+    let h = thread::spawn(move || {
+        let mut f = follower;
+        for i in 0..3u8 {
+            f.send(0, t, vec![i]).unwrap();
+        }
+    });
+    h.join().unwrap();
+    let mut chunks = Vec::new();
+    while let Ok(env) = leader.recv_tag(t, Duration::from_millis(100)) {
+        chunks.push(env.payload[0]);
+    }
+    assert_eq!(chunks, vec![0, 1, 2], "seed 0x{seed:016x}: held trace chunks were lost");
+}
+
+/// Family 4 — follower death mid-gather (the connect-then-silent
+/// dialer class). Node 1 contributes its partial; node 2 joined the
+/// fabric but never sends. The leader's gather must fail with
+/// `GatherTimeout` naming exactly the silent node — and the all-alive
+/// twin must succeed through the same adversarial schedule.
+fn gather_names_the_dead_follower(seed: u64) {
+    let mut eps = sched_explore_fabric(3, seed, SchedOpts::default()).into_iter();
+    let mut leader = eps.next().unwrap();
+    let f1 = eps.next().unwrap();
+    let _silent = eps.next().unwrap(); // connected, never speaks
+    let t = tag(PHASE_GATHER, 0, 7);
+    let h = thread::spawn(move || {
+        let mut f = f1;
+        f.send(0, t, vec![1]).unwrap();
+    });
+    match leader.gather(t, Duration::from_millis(150)) {
+        Err(NetError::GatherTimeout { missing, .. }) => {
+            assert_eq!(missing, vec![2], "seed 0x{seed:016x}: wrong culprit named");
+        }
+        other => panic!("seed 0x{seed:016x}: expected GatherTimeout, got {other:?}"),
+    }
+    h.join().unwrap();
+
+    let mut eps = sched_explore_fabric(3, seed, SchedOpts::default()).into_iter();
+    let mut leader = eps.next().unwrap();
+    let hs: Vec<_> = eps
+        .map(|ep| {
+            thread::spawn(move || {
+                let mut f = ep;
+                let node = f.node();
+                f.send(0, t, vec![node as u8]).unwrap();
+            })
+        })
+        .collect();
+    let envs = leader
+        .gather(t, Duration::from_secs(5))
+        .unwrap_or_else(|e| panic!("seed 0x{seed:016x}: all-alive gather failed: {e}"));
+    assert_eq!(envs.len(), 2);
+    for h in hs {
+        h.join().unwrap();
+    }
+}
+
+/// The survivor set of 16 stamped beacons under a 50% PHASE_FB drop —
+/// a pure function of the seed (fates key on the per-sender arrival
+/// index, not on timing), so it doubles as the reproducibility probe.
+fn beacon_survivors(seed: u64) -> Vec<u8> {
+    let opts = SchedOpts { drop: vec![(PHASE_FB, 50)], ..SchedOpts::default() };
+    let (mut leader, follower) = pair(seed, opts);
+    let h = thread::spawn(move || {
+        let mut f = follower;
+        for i in 0..16u8 {
+            f.send(0, beacon_tag(1), vec![i]).unwrap();
+        }
+    });
+    h.join().unwrap();
+    let mut got = Vec::new();
+    while let Ok(env) = leader.recv_tag(beacon_tag(1), Duration::from_millis(100)) {
+        got.push(env.payload[0]);
+    }
+    got
+}
+
+fn run_all_families(seed: u64, check_seen: bool) {
+    ctrl_replay_linearizes(seed);
+    beacon_loss_wedges_nobody(seed, check_seen);
+    trace_flush_survives_teardown_race(seed);
+    gather_names_the_dead_follower(seed);
+}
+
+#[test]
+fn pinned_corpus_ctrl_replay() {
+    for &seed in PINNED_SEEDS {
+        ctrl_replay_linearizes(seed);
+    }
+}
+
+#[test]
+fn pinned_corpus_beacon_loss() {
+    for &seed in PINNED_SEEDS {
+        beacon_loss_wedges_nobody(seed, true);
+    }
+}
+
+#[test]
+fn pinned_corpus_trace_flush() {
+    for &seed in PINNED_SEEDS {
+        trace_flush_survives_teardown_race(seed);
+    }
+}
+
+#[test]
+fn pinned_corpus_gather_death() {
+    for &seed in PINNED_SEEDS {
+        gather_names_the_dead_follower(seed);
+    }
+}
+
+#[test]
+fn fates_reproduce_from_seed() {
+    // Same seed, same fates — across two fully independent fabrics and
+    // thread schedules. The exact vector is pinned (computed from the
+    // splitmix64 fate function) so a silent change to the fate keying
+    // breaks loudly rather than just "still deterministic, different".
+    let a = beacon_survivors(0x5EED_0001);
+    assert_eq!(a, beacon_survivors(0x5EED_0001), "same seed must reproduce identical fates");
+    assert_eq!(a, vec![0, 1, 5, 6, 7, 10, 11, 14, 15], "fate keying changed");
+    // Different seeds explore different schedules.
+    assert_eq!(beacon_survivors(0x5EED_0002), vec![0, 1, 4, 5, 6, 8, 15]);
+}
+
+/// `MODEL_PROTOCOL_SEEDS=N` sweeps N derived seeds through every
+/// family, printing each failing seed for 1-seed reproduction. Unset
+/// (tier-1) it is a no-op beyond the pinned corpus above.
+#[test]
+fn seed_sweep_from_env() {
+    let n: u64 = std::env::var("MODEL_PROTOCOL_SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let mut failures = Vec::new();
+    for k in 0..n {
+        let seed = 0x5EED_BA5E_0000_0000_u64 ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        // Liveness-only on swept seeds: the beacon-observation count is
+        // corpus-verified, not a for-all-seeds property.
+        let ok = std::panic::catch_unwind(AssertUnwindSafe(|| run_all_families(seed, false)));
+        if ok.is_err() {
+            eprintln!("model_protocol: FAILING SEED 0x{seed:016x} (of {n} swept)");
+            failures.push(seed);
+        }
+    }
+    assert!(failures.is_empty(), "failing seeds: {failures:016x?}");
+}

@@ -1,8 +1,9 @@
-//! `cargo xtask lint` — repo-specific protocol-invariant analysis.
+//! `cargo xtask lint` / `cargo xtask protocol` — repo-specific
+//! protocol-invariant analysis.
 //!
 //! Subcommands:
 //!
-//! - `lint [--bless] [--report PATH]` — run all three analyzers
+//! - `lint [--bless] [--report PATH]` — run all three guard analyzers
 //!   (block-under-lock, lock-order, wire-schema drift + tag collisions)
 //!   over `rust/src`. `--bless` rewrites `rust/schema.lock` from the
 //!   current sources (only do this together with an intentional
@@ -10,10 +11,19 @@
 //!   additionally writes the findings and the lock-order edge
 //!   inventory to a file (uploaded as a CI artifact).
 //!
+//! - `protocol [--bless] [--report PATH]` — extract the fabric
+//!   communication graph (who sends / receives every `PHASE_*` tag, who
+//!   emits / dispatches every `OP_*` opcode), fail on orphan sends,
+//!   dead channels, unbounded blocking receives, and unmatched
+//!   opcodes, and drift-check the committed `rust/protocol.map`.
+//!   `--bless` regenerates the map after an intentional protocol-flow
+//!   change.
+//!
 //! Exit codes: 0 clean, 1 findings, 2 usage/io error.
 
 mod lexer;
 mod lock;
+mod protocol;
 mod schema;
 
 use std::fmt::Write as _;
@@ -25,13 +35,13 @@ fn main() -> ExitCode {
     let mut bless = false;
     let mut report: Option<PathBuf> = None;
     let mut it = args.iter();
-    match it.next().map(String::as_str) {
-        Some("lint") => {}
+    let cmd = match it.next().map(String::as_str) {
+        Some(c @ ("lint" | "protocol")) => c,
         _ => {
-            eprintln!("usage: cargo xtask lint [--bless] [--report PATH]");
+            eprintln!("usage: cargo xtask <lint|protocol> [--bless] [--report PATH]");
             return ExitCode::from(2);
         }
-    }
+    };
     while let Some(a) = it.next() {
         match a.as_str() {
             "--bless" => bless = true,
@@ -48,7 +58,11 @@ fn main() -> ExitCode {
             }
         }
     }
-    match run(bless, report.as_deref()) {
+    let result = match cmd {
+        "protocol" => run_protocol(bless, report.as_deref()),
+        _ => run(bless, report.as_deref()),
+    };
+    match result {
         Ok(true) => ExitCode::SUCCESS,
         Ok(false) => ExitCode::from(1),
         Err(e) => {
@@ -138,4 +152,45 @@ fn run(bless: bool, report: Option<&Path>) -> std::io::Result<bool> {
         std::fs::write(p, &out)?;
     }
     Ok(n_findings == 0)
+}
+
+fn run_protocol(bless: bool, report: Option<&Path>) -> std::io::Result<bool> {
+    let root = rust_root();
+    let mut files = Vec::new();
+    collect_sources(&root.join("src"), &mut files)?;
+    let lexed: Vec<(String, lexer::Lexed)> =
+        files.iter().map(|(p, src)| (p.clone(), lexer::lex(src))).collect();
+    let (graph, mut findings) = protocol::analyze(&lexed);
+    let map = protocol::render_map(&graph);
+
+    let map_path = root.join("protocol.map");
+    let mut out = String::new();
+    if bless && findings.is_empty() {
+        std::fs::write(&map_path, &map)?;
+        let _ = writeln!(out, "== protocol: blessed {}", map_path.display());
+    } else {
+        let committed = std::fs::read_to_string(&map_path).unwrap_or_default();
+        if committed != map {
+            findings.push(protocol::drift_finding());
+        }
+    }
+
+    let _ = writeln!(
+        out,
+        "== protocol: {} phase(s), {} fabric site(s), {} op(s), {} finding(s)",
+        graph.phases.len(),
+        graph.n_sites(),
+        graph.ops.len(),
+        findings.len()
+    );
+    for f in &findings {
+        let _ = writeln!(out, "  {f}");
+    }
+    let verdict = if findings.is_empty() { "clean" } else { "FAILED" };
+    let _ = writeln!(out, "xtask protocol: {verdict} ({} finding(s))", findings.len());
+    print!("{out}");
+    if let Some(p) = report {
+        std::fs::write(p, format!("{out}\n{map}"))?;
+    }
+    Ok(findings.is_empty())
 }

@@ -1,0 +1,1186 @@
+//! Protocol-flow analyzer (`cargo xtask protocol`): a token-level pass
+//! over `rust/src` that extracts every fabric send/broadcast and
+//! recv_tag/gather call site, resolves each site's tag back to a
+//! `PHASE_*` constant from `network::tags`, attributes the enclosing
+//! function to a role (leader / follower / centralized worker / bench)
+//! by call-graph reachability, and checks the resulting communication
+//! graph:
+//!
+//! 1. **orphan send** — a phase somebody sends on but nobody receives;
+//! 2. **dead channel** — a phase somebody receives on but nobody sends;
+//! 3. **unbounded recv** — a bare `.recv()` (no timeout) outside tests
+//!    without a `// xtask: allow(unbounded_recv): <why>` escape;
+//! 4. **unmatched opcode** — an `OP_*` dispatched in a control-plane
+//!    `match` that no sender emits, or emitted but never dispatched.
+//!
+//! Tag resolution handles the four shapes the crate actually uses:
+//! a direct `tag(PHASE_X, ..)` / `req_tag(PHASE_X, ..)` argument, a
+//! `let t = tag(..)` alias within the function, a call to a crate
+//! function whose body builds the tag (`beacon_tag`), and a
+//! `self.field` whose struct-literal initializer builds it
+//! (`Beacon { tag: beacon_tag(node), .. }`). Functions that receive on
+//! a tag *parameter* (`recv_from_leader`, `recv_or_shutdown`) become
+//! wrappers: their call sites are resolved transitively and the site is
+//! attributed to the caller.
+//!
+//! The graph is rendered to `rust/protocol.map` (machine-readable edge
+//! list + mermaid sequence diagram) and drift-checked against the
+//! committed copy, like `schema.lock`. `tools/protocol_map.py` mirrors
+//! this pass for toolchain-free regeneration.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::lexer::{Kind, Lexed, Tok};
+use crate::lock::Finding;
+
+/// One fabric communication site: where in the tree a phase is sent or
+/// received. Line numbers are deliberately absent — the committed map
+/// must not churn when unrelated code shifts lines.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Site {
+    /// Path relative to `src/`.
+    pub file: String,
+    /// Enclosing function.
+    pub func: String,
+    /// `|`-joined sorted role labels (`leader`, `follower`, `worker`,
+    /// `bench`) or `other` when unreachable from any role root.
+    pub roles: String,
+}
+
+impl std::fmt::Display for Site {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}@{}", self.roles, self.func, self.file)
+    }
+}
+
+/// The extracted communication graph.
+#[derive(Debug, Default)]
+pub struct Graph {
+    /// `(name, value)` sorted by value — from `network/tags.rs`.
+    pub phases: Vec<(String, u8)>,
+    pub ops: Vec<(String, u8)>,
+    pub sends: BTreeMap<String, BTreeSet<Site>>,
+    pub recvs: BTreeMap<String, BTreeSet<Site>>,
+    pub emits: BTreeMap<String, BTreeSet<Site>>,
+    pub dispatches: BTreeMap<String, BTreeSet<Site>>,
+}
+
+impl Graph {
+    pub fn n_sites(&self) -> usize {
+        self.sends.values().chain(self.recvs.values()).map(|s| s.len()).sum()
+    }
+}
+
+/// One function: name, parameter names (excluding `self`; `""` for
+/// pattern parameters, preserving argument-index alignment), body span.
+struct Func {
+    name: String,
+    params: Vec<String>,
+    body: (usize, usize),
+}
+
+/// Split a lexed file into functions (with parameter lists), skipping
+/// `mod tests` like the guard analyzers do.
+fn functions(toks: &[Tok]) -> Vec<Func> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].kind == Kind::Ident && toks[i].text == "mod" {
+            if let Some(open) = toks[i..].iter().position(|t| t.text == "{" || t.text == ";") {
+                let at = i + open;
+                if toks[at].text == "{" && toks[i + 1].text == "tests" {
+                    i = match_brace(toks, at);
+                    continue;
+                }
+            }
+        }
+        if toks[i].kind == Kind::Ident && toks[i].text == "fn" && i + 1 < toks.len() {
+            let name = toks[i + 1].text.clone();
+            // Find the parameter parens (skipping `<..>` generics).
+            let mut j = i + 2;
+            while j < toks.len() && toks[j].text != "(" && toks[j].text != "{" {
+                j += 1;
+            }
+            let mut params = Vec::new();
+            if j < toks.len() && toks[j].text == "(" {
+                let close = parse_params(toks, j, &mut params);
+                j = close;
+            }
+            // Body `{` is the first brace after the params (return
+            // types in this codebase never carry braces).
+            let mut paren = 0i32;
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "(" => paren += 1,
+                    ")" => paren -= 1,
+                    "{" if paren == 0 => break,
+                    ";" if paren == 0 => break, // trait method, no body
+                    _ => {}
+                }
+                j += 1;
+            }
+            if j < toks.len() && toks[j].text == "{" {
+                let end = match_brace(toks, j);
+                out.push(Func { name, params, body: (j, end) });
+                i = end;
+                continue;
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Parse the parameter list starting at the `(` at `open`; returns the
+/// index just past its `)`. Generic types track `<`/`>` depth so a
+/// comma inside `Option<Receiver<Cmd>>`-style types does not split.
+fn parse_params(toks: &[Tok], open: usize, params: &mut Vec<String>) -> usize {
+    let mut depth = 0i32;
+    let mut angle = 0i32;
+    let mut i = open;
+    let mut start = open + 1;
+    loop {
+        if i >= toks.len() {
+            return i;
+        }
+        let t = toks[i].text.as_str();
+        match t {
+            "(" | "[" => depth += 1,
+            ")" | "]" => {
+                depth -= 1;
+                if depth == 0 {
+                    push_param(toks, start, i, params);
+                    return i + 1;
+                }
+            }
+            "<" if depth == 1 => angle += 1,
+            ">" if depth == 1 => angle -= 1,
+            "," if depth == 1 && angle == 0 => {
+                push_param(toks, start, i, params);
+                start = i + 1;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+}
+
+fn push_param(toks: &[Tok], lo: usize, hi: usize, params: &mut Vec<String>) {
+    if lo >= hi {
+        return;
+    }
+    // Skip `&`, `mut` and lifetimes; a leading `self` is the receiver
+    // (not a call argument), everything else binds its first ident.
+    let mut i = lo;
+    while i < hi && (toks[i].text == "&" || toks[i].text == "mut" || toks[i].kind == Kind::Lifetime)
+    {
+        i += 1;
+    }
+    if i >= hi {
+        return;
+    }
+    if toks[i].text == "self" {
+        return;
+    }
+    if toks[i].kind == Kind::Ident {
+        params.push(toks[i].text.clone());
+    } else {
+        params.push(String::new()); // pattern param: keep index alignment
+    }
+}
+
+/// Index just past the brace that closes the one at `open`.
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut i = open;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+/// Split the argument list of the call whose `(` sits at `open` into
+/// top-level token spans (brace/bracket/paren aware).
+fn split_args(toks: &[Tok], open: usize) -> (Vec<(usize, usize)>, usize) {
+    let mut depth = 0i32;
+    let mut i = open;
+    let mut args = Vec::new();
+    let mut start = open + 1;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "(" | "[" | "{" => depth += 1,
+            ")" | "]" | "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    if start < i {
+                        args.push((start, i));
+                    }
+                    return (args, i + 1);
+                }
+            }
+            "," if depth == 1 => {
+                args.push((start, i));
+                start = i + 1;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    (args, i)
+}
+
+/// Path relative to `src/` (stable across checkouts).
+fn rel(path: &str) -> String {
+    match path.rsplit_once("src/") {
+        Some((_, r)) => r.to_string(),
+        None => path.to_string(),
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Dir {
+    Send,
+    Recv,
+}
+
+/// Outcome of resolving a tag expression.
+enum Res {
+    Phase(String),
+    /// The expression is (or forwards) a parameter of the enclosing
+    /// function: argument index for transitive call-site resolution.
+    Param(usize),
+    Unknown,
+}
+
+struct Ctx<'a> {
+    files: &'a [(String, Lexed)],
+    funcs: Vec<Vec<Func>>,
+    phases: BTreeMap<String, u8>,
+}
+
+impl<'a> Ctx<'a> {
+    /// Resolve the tag expression `toks[lo..hi]` evaluated inside
+    /// `func` of file `fi` to a phase constant.
+    fn resolve(&self, fi: usize, func: &Func, lo: usize, hi: usize, depth: u32) -> Res {
+        if depth == 0 || lo >= hi {
+            return Res::Unknown;
+        }
+        let toks = &self.files[fi].1.toks;
+        // 1. Any PHASE_* ident in the expression (covers the direct
+        //    `tag(PHASE_X, ..)` / `req_tag(PHASE_X, ..)` forms).
+        for t in &toks[lo..hi] {
+            if t.kind == Kind::Ident && self.phases.contains_key(&t.text) {
+                return Res::Phase(t.text.clone());
+            }
+        }
+        // 2. A single ident (possibly `&`-borrowed): a parameter of the
+        //    enclosing function, or a `let` alias defined in its body.
+        let mut s = lo;
+        while s < hi && toks[s].text == "&" {
+            s += 1;
+        }
+        if hi - s == 1 && toks[s].kind == Kind::Ident {
+            let name = toks[s].text.as_str();
+            if let Some(idx) = func.params.iter().position(|p| p == name) {
+                return Res::Param(idx);
+            }
+            if let Some(r) = self.resolve_let(fi, func, name, depth) {
+                return r;
+            }
+        }
+        // 3. A call to a crate function whose body builds the tag
+        //    (`beacon_tag(node)`): scan that body for a phase ident.
+        for i in lo..hi.saturating_sub(1) {
+            if toks[i].kind == Kind::Ident
+                && toks[i + 1].text == "("
+                && toks[i].text != "tag"
+                && toks[i].text != "req_tag"
+            {
+                if let Some(p) = self.phase_in_fn_body(&toks[i].text) {
+                    return Res::Phase(p);
+                }
+            }
+        }
+        // 4. `self.field` / `x.field`: resolve the field's struct-
+        //    literal initializer anywhere in the crate.
+        if hi - lo >= 2 && toks[hi - 1].kind == Kind::Ident && toks[hi - 2].text == "." {
+            if let Some(p) = self.resolve_field(&toks[hi - 1].text, depth) {
+                return Res::Phase(p);
+            }
+        }
+        Res::Unknown
+    }
+
+    /// `let <name> [: ty] = <expr>;` inside `func`'s body.
+    fn resolve_let(&self, fi: usize, func: &Func, name: &str, depth: u32) -> Option<Res> {
+        let toks = &self.files[fi].1.toks;
+        let (lo, hi) = func.body;
+        let mut i = lo;
+        while i + 2 < hi {
+            if toks[i].text == "let" && toks[i].kind == Kind::Ident {
+                let mut j = i + 1;
+                if toks[j].text == "mut" {
+                    j += 1;
+                }
+                if j < hi && toks[j].kind == Kind::Ident && toks[j].text == name {
+                    // Skip an optional `: ty` to the `=`.
+                    let mut k = j + 1;
+                    while k < hi && toks[k].text != "=" && toks[k].text != ";" {
+                        k += 1;
+                    }
+                    if k < hi && toks[k].text == "=" {
+                        // RHS runs to the `;` at zero nesting depth.
+                        let mut d = 0i32;
+                        let mut e = k + 1;
+                        while e < hi {
+                            match toks[e].text.as_str() {
+                                "(" | "[" | "{" => d += 1,
+                                ")" | "]" | "}" => d -= 1,
+                                ";" if d == 0 => break,
+                                _ => {}
+                            }
+                            e += 1;
+                        }
+                        return Some(self.resolve(fi, func, k + 1, e, depth - 1));
+                    }
+                }
+            }
+            i += 1;
+        }
+        None
+    }
+
+    /// First phase ident in the body of any crate function named `name`
+    /// (deterministic: files in sorted order).
+    fn phase_in_fn_body(&self, name: &str) -> Option<String> {
+        for (fi, funcs) in self.funcs.iter().enumerate() {
+            for f in funcs {
+                if f.name != name {
+                    continue;
+                }
+                let toks = &self.files[fi].1.toks;
+                for t in &toks[f.body.0..f.body.1] {
+                    if t.kind == Kind::Ident && self.phases.contains_key(&t.text) {
+                        return Some(t.text.clone());
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Resolve a struct-literal initializer `field: <expr>` found in
+    /// any function body of the crate.
+    fn resolve_field(&self, field: &str, depth: u32) -> Option<String> {
+        for (fi, funcs) in self.funcs.iter().enumerate() {
+            let toks = &self.files[fi].1.toks;
+            for f in funcs {
+                let (lo, hi) = f.body;
+                let mut i = lo;
+                while i + 2 < hi {
+                    if toks[i].kind == Kind::Ident
+                        && toks[i].text == field
+                        && toks[i + 1].text == ":"
+                        && toks[i + 2].text != ":"
+                    {
+                        // Expr runs to the `,` or closing brace at this
+                        // nesting level.
+                        let mut d = 0i32;
+                        let mut e = i + 2;
+                        while e < hi {
+                            match toks[e].text.as_str() {
+                                "(" | "[" | "{" => d += 1,
+                                ")" | "]" | "}" => {
+                                    if d == 0 {
+                                        break;
+                                    }
+                                    d -= 1;
+                                }
+                                "," if d == 0 => break,
+                                ";" if d == 0 => break,
+                                _ => {}
+                            }
+                            e += 1;
+                        }
+                        if let Res::Phase(p) = self.resolve(fi, f, i + 2, e, depth - 1) {
+                            return Some(p);
+                        }
+                        i = e;
+                        continue;
+                    }
+                    i += 1;
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Parse the phase / op tables out of `network/tags.rs` tokens: every
+/// `const PHASE_* / OP_*: u8 = <literal>;` — the shape works both bare
+/// and inside the `tag_table!` invocation (macro delimiters are just
+/// tokens to this pass).
+fn tag_tables(files: &[(String, Lexed)]) -> (BTreeMap<String, u8>, BTreeMap<String, u8>) {
+    let mut phases = BTreeMap::new();
+    let mut ops = BTreeMap::new();
+    for (path, lexed) in files {
+        if !path.ends_with("network/tags.rs") {
+            continue;
+        }
+        let toks = &lexed.toks;
+        let mut i = 0;
+        while i + 5 < toks.len() {
+            if toks[i].text == "const"
+                && toks[i + 1].kind == Kind::Ident
+                && toks[i + 2].text == ":"
+                && toks[i + 3].text == "u8"
+                && toks[i + 4].text == "="
+                && toks[i + 5].kind == Kind::Literal
+            {
+                let name = toks[i + 1].text.clone();
+                let lit = toks[i + 5].text.replace('_', "");
+                let val = match lit.strip_prefix("0x") {
+                    Some(h) => u8::from_str_radix(h, 16).ok(),
+                    None => lit.parse::<u8>().ok(),
+                };
+                if let Some(v) = val {
+                    if name.starts_with("PHASE_") {
+                        phases.insert(name, v);
+                    } else if name.starts_with("OP_") {
+                        ops.insert(name, v);
+                    }
+                }
+                i += 6;
+                continue;
+            }
+            i += 1;
+        }
+    }
+    (phases, ops)
+}
+
+/// Role roots: reachability in the same-file call graph from these
+/// functions labels every fabric site. `net_bench.rs` is labelled
+/// wholesale (its loops are the benchmark protocol on both ends).
+const ROLE_ROOTS: &[(&str, &str, &str)] = &[
+    ("cluster/live.rs", "lead_loop", "leader"),
+    ("cluster/live.rs", "finish_trace", "leader"),
+    ("cluster/live.rs", "follow_decentralized", "follower"),
+    ("cluster/live.rs", "follow_central_worker", "worker"),
+];
+
+/// Compute each function's role set via BFS over the same-file call
+/// graph (callee matched by name within the file).
+fn roles(files: &[(String, Lexed)], funcs: &[Vec<Func>]) -> Vec<BTreeMap<String, BTreeSet<String>>> {
+    let mut out: Vec<BTreeMap<String, BTreeSet<String>>> = Vec::with_capacity(files.len());
+    for (fi, (path, lexed)) in files.iter().enumerate() {
+        let file = rel(path);
+        let names: BTreeSet<&str> = funcs[fi].iter().map(|f| f.name.as_str()).collect();
+        // Edges: caller -> callees (same file only).
+        let mut edges: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+        for f in &funcs[fi] {
+            let toks = &lexed.toks;
+            let callees = edges.entry(f.name.clone()).or_default();
+            for i in f.body.0..f.body.1.saturating_sub(1) {
+                if toks[i].kind == Kind::Ident
+                    && toks[i + 1].text == "("
+                    && names.contains(toks[i].text.as_str())
+                    && toks[i].text != f.name
+                {
+                    callees.insert(toks[i].text.clone());
+                }
+            }
+        }
+        let mut labels: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+        if file.ends_with("cli/commands/net_bench.rs") {
+            for f in &funcs[fi] {
+                labels.entry(f.name.clone()).or_default().insert("bench".into());
+            }
+        }
+        for &(root_file, root_fn, label) in ROLE_ROOTS {
+            if !file.ends_with(root_file) {
+                continue;
+            }
+            let mut queue = vec![root_fn.to_string()];
+            let mut seen = BTreeSet::new();
+            while let Some(f) = queue.pop() {
+                if !seen.insert(f.clone()) {
+                    continue;
+                }
+                labels.entry(f.clone()).or_default().insert(label.to_string());
+                if let Some(cs) = edges.get(&f) {
+                    queue.extend(cs.iter().cloned());
+                }
+            }
+        }
+        out.push(labels);
+    }
+    out
+}
+
+/// One unresolved-yet site pending wrapper resolution.
+struct RawSite {
+    fi: usize,
+    func_idx: usize,
+    dir: Dir,
+    arg: (usize, usize),
+    line: u32,
+}
+
+/// Run the whole analysis over lexed `(path, Lexed)` files.
+pub fn analyze(files: &[(String, Lexed)]) -> (Graph, Vec<Finding>) {
+    let mut findings = Vec::new();
+    let (phases, ops) = tag_tables(files);
+    if phases.is_empty() {
+        findings.push(Finding {
+            file: "network/tags.rs".into(),
+            line: 0,
+            message: "protocol: no PHASE_* constants found — tags.rs moved or renamed? \
+                      Update xtask/src/protocol.rs and tools/protocol_map.py together."
+                .into(),
+        });
+        return (Graph::default(), findings);
+    }
+    let mut phase_list: Vec<(String, u8)> = phases.iter().map(|(n, v)| (n.clone(), *v)).collect();
+    phase_list.sort_by(|a, b| (a.1, &a.0).cmp(&(b.1, &b.0)));
+    let mut op_list: Vec<(String, u8)> = ops.iter().map(|(n, v)| (n.clone(), *v)).collect();
+    op_list.sort_by(|a, b| (a.1, &a.0).cmp(&(b.1, &b.0)));
+
+    let funcs: Vec<Vec<Func>> = files.iter().map(|(_, l)| functions(&l.toks)).collect();
+    let ctx = Ctx { files, funcs, phases };
+    let role_maps = roles(files, &ctx.funcs);
+
+    let mut graph = Graph { phases: phase_list, ops: op_list, ..Graph::default() };
+
+    let site = |fi: usize, func: &Func| -> Site {
+        let file = rel(&files[fi].0);
+        let roles = role_maps[fi]
+            .get(&func.name)
+            .filter(|s| !s.is_empty())
+            .map(|s| s.iter().cloned().collect::<Vec<_>>().join("|"))
+            .unwrap_or_else(|| "other".into());
+        Site { file, func: func.name.clone(), roles }
+    };
+
+    // Pass 1: primitive fabric calls. A function whose tag argument is
+    // one of its own parameters becomes a wrapper; its call sites are
+    // resolved transitively below.
+    let mut raw: Vec<RawSite> = Vec::new();
+    for (fi, (_, lexed)) in files.iter().enumerate() {
+        let toks = &lexed.toks;
+        for (func_idx, f) in ctx.funcs[fi].iter().enumerate() {
+            let (lo, hi) = f.body;
+            let mut i = lo;
+            while i + 2 < hi {
+                let is_method = toks[i].text == "."
+                    && toks[i + 1].kind == Kind::Ident
+                    && toks[i + 2].text == "(";
+                if is_method {
+                    let (args, after) = split_args(toks, i + 2);
+                    let hit = match (toks[i + 1].text.as_str(), args.len()) {
+                        ("send", 3) => Some((Dir::Send, args[1])),
+                        ("broadcast", 2) => Some((Dir::Send, args[0])),
+                        ("recv_tag", 2) => Some((Dir::Recv, args[0])),
+                        ("gather", 2) => Some((Dir::Recv, args[0])),
+                        _ => None,
+                    };
+                    if let Some((dir, arg)) = hit {
+                        raw.push(RawSite { fi, func_idx, dir, arg, line: toks[i + 1].line });
+                        i = after;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+
+    // Wrapper worklist: (fn name, dir, tag-argument index).
+    let mut wrappers: BTreeMap<(String, usize), Dir> = BTreeMap::new();
+    for r in &raw {
+        let f = &ctx.funcs[r.fi][r.func_idx];
+        match ctx.resolve(r.fi, f, r.arg.0, r.arg.1, 4) {
+            Res::Phase(p) => {
+                let map = if r.dir == Dir::Send { &mut graph.sends } else { &mut graph.recvs };
+                map.entry(p).or_default().insert(site(r.fi, f));
+            }
+            Res::Param(idx) => {
+                wrappers.insert((f.name.clone(), idx), r.dir);
+            }
+            Res::Unknown => {
+                if !files[r.fi].1.allowed("unresolved_tag", r.line) {
+                    findings.push(Finding {
+                        file: rel(&files[r.fi].0),
+                        line: r.line,
+                        message: format!(
+                            "protocol: {}: cannot resolve the tag of this fabric call to a \
+                             PHASE_* constant — use a direct tag(PHASE_*, ..) / req_tag(..) \
+                             expression, a local `let` alias, or annotate with `// xtask: \
+                             allow(unresolved_tag): <why>`",
+                            f.name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // Pass 2: resolve wrapper call sites, transitively (a caller that
+    // forwards its own parameter becomes a wrapper itself).
+    for _round in 0..8 {
+        let mut new_wrappers: BTreeMap<(String, usize), Dir> = BTreeMap::new();
+        for (fi, (_, lexed)) in files.iter().enumerate() {
+            let toks = &lexed.toks;
+            for f in &ctx.funcs[fi] {
+                let (lo, hi) = f.body;
+                let mut i = lo;
+                while i + 1 < hi {
+                    let t = &toks[i];
+                    let is_def = i > 0 && toks[i - 1].text == "fn";
+                    if t.kind == Kind::Ident && toks[i + 1].text == "(" && !is_def {
+                        // Collect every wrapper index registered for
+                        // this callee name.
+                        let entries: Vec<(usize, Dir)> = wrappers
+                            .iter()
+                            .filter(|((n, _), _)| n == &t.text)
+                            .map(|((_, idx), d)| (*idx, *d))
+                            .collect();
+                        if !entries.is_empty() {
+                            let (args, after) = split_args(toks, i + 1);
+                            for (idx, dir) in entries {
+                                let Some(&arg) = args.get(idx) else { continue };
+                                match ctx.resolve(fi, f, arg.0, arg.1, 4) {
+                                    Res::Phase(p) => {
+                                        let map = if dir == Dir::Send {
+                                            &mut graph.sends
+                                        } else {
+                                            &mut graph.recvs
+                                        };
+                                        map.entry(p).or_default().insert(site(fi, f));
+                                    }
+                                    Res::Param(pidx) => {
+                                        new_wrappers.insert((f.name.clone(), pidx), dir);
+                                    }
+                                    Res::Unknown => {}
+                                }
+                            }
+                            i = after;
+                            continue;
+                        }
+                    }
+                    i += 1;
+                }
+            }
+        }
+        let before = wrappers.len();
+        wrappers.extend(new_wrappers);
+        if wrappers.len() == before {
+            break;
+        }
+    }
+
+    // Pass 3: opcode emit/dispatch inventory + unbounded receives.
+    for (fi, (path, lexed)) in files.iter().enumerate() {
+        if path.ends_with("network/tags.rs") {
+            continue; // definitions + derived tables, not usage
+        }
+        let toks = &lexed.toks;
+        for f in &ctx.funcs[fi] {
+            let (lo, hi) = f.body;
+            let mut i = lo;
+            while i < hi {
+                let t = &toks[i];
+                if t.kind == Kind::Ident && ops.contains_key(&t.text) {
+                    let arm = toks.get(i + 1).map(|t| t.text.as_str()) == Some("=")
+                        && toks.get(i + 2).map(|t| t.text.as_str()) == Some(">");
+                    let eq_r = toks.get(i + 1).map(|t| t.text.as_str()) == Some("=")
+                        && toks.get(i + 2).map(|t| t.text.as_str()) == Some("=");
+                    let eq_l = i >= 2
+                        && toks[i - 1].text == "="
+                        && toks[i - 2].text == "="
+                        && toks.get(i.wrapping_sub(3)).map(|t| t.text.as_str()) != Some("=");
+                    let map = if arm || eq_r || eq_l {
+                        &mut graph.dispatches
+                    } else {
+                        &mut graph.emits
+                    };
+                    map.entry(t.text.clone()).or_default().insert(site(fi, f));
+                }
+                // Unbounded blocking receive: `.recv()` with no args.
+                if t.text == "."
+                    && toks.get(i + 1).map(|t| t.text.as_str()) == Some("recv")
+                    && toks.get(i + 2).map(|t| t.text.as_str()) == Some("(")
+                    && toks.get(i + 3).map(|t| t.text.as_str()) == Some(")")
+                {
+                    let line = toks[i + 1].line;
+                    if !lexed.allowed("unbounded_recv", line) {
+                        findings.push(Finding {
+                            file: rel(path),
+                            line,
+                            message: format!(
+                                "protocol: {}: unbounded blocking `.recv()` — a dead peer \
+                                 hangs this thread forever. Use `recv_timeout` with an \
+                                 explicit bound, or annotate with `// xtask: \
+                                 allow(unbounded_recv): <why>`",
+                                f.name
+                            ),
+                        });
+                    }
+                    i += 4;
+                    continue;
+                }
+                i += 1;
+            }
+        }
+    }
+
+    // Failure classes 1, 2, 4 over the assembled graph.
+    for (name, _) in &graph.phases {
+        let s = graph.sends.get(name).map_or(0, |s| s.len());
+        let r = graph.recvs.get(name).map_or(0, |s| s.len());
+        if s > 0 && r == 0 {
+            let from: Vec<String> =
+                graph.sends[name].iter().map(|s| s.to_string()).collect();
+            findings.push(Finding {
+                file: "network/tags.rs".into(),
+                line: 0,
+                message: format!(
+                    "protocol: orphan send on {name}: sent by [{}] but no receive site \
+                     exists — messages pile up in receiver stashes forever",
+                    from.join(", ")
+                ),
+            });
+        }
+        if r > 0 && s == 0 {
+            let at: Vec<String> = graph.recvs[name].iter().map(|s| s.to_string()).collect();
+            findings.push(Finding {
+                file: "network/tags.rs".into(),
+                line: 0,
+                message: format!(
+                    "protocol: dead channel {name}: received by [{}] but nothing sends it \
+                     — the receive can only ever time out",
+                    at.join(", ")
+                ),
+            });
+        }
+    }
+    for (name, _) in &graph.ops {
+        let e = graph.emits.get(name).map_or(0, |s| s.len());
+        let d = graph.dispatches.get(name).map_or(0, |s| s.len());
+        if d > 0 && e == 0 {
+            findings.push(Finding {
+                file: "network/tags.rs".into(),
+                line: 0,
+                message: format!(
+                    "protocol: opcode {name} is dispatched but no sender emits it — dead \
+                     control-plane arm"
+                ),
+            });
+        }
+        if e > 0 && d == 0 {
+            findings.push(Finding {
+                file: "network/tags.rs".into(),
+                line: 0,
+                message: format!(
+                    "protocol: opcode {name} is emitted but no handler dispatches it — \
+                     receivers drop it on the floor"
+                ),
+            });
+        }
+    }
+
+    (graph, findings)
+}
+
+/// The finding raised when the committed `rust/protocol.map` does not
+/// match the map rendered from the current sources.
+pub fn drift_finding() -> Finding {
+    Finding {
+        file: "protocol.map".into(),
+        line: 0,
+        message: "protocol: rust/protocol.map drifted from the sources — if the \
+                  protocol-flow change is intentional, regenerate with `cargo xtask \
+                  protocol --bless` (or `python3 tools/protocol_map.py --bless`) and \
+                  commit the result"
+            .into(),
+    }
+}
+
+/// Render the committed `rust/protocol.map` (byte-identical output is
+/// mirrored by `tools/protocol_map.py`).
+pub fn render_map(g: &Graph) -> String {
+    fn sites(set: Option<&BTreeSet<Site>>) -> String {
+        let inner: Vec<String> =
+            set.map(|s| s.iter().map(|x| x.to_string()).collect()).unwrap_or_default();
+        format!("[{}]", inner.join(", "))
+    }
+    let mut s = String::from(
+        "# apple-moe protocol map: the fabric communication graph extracted from\n\
+         # rust/src (send/broadcast vs recv_tag/gather sites per PHASE_*, opcode\n\
+         # emit vs dispatch sites per OP_*). Regenerate after an intentional\n\
+         # protocol-flow change:\n\
+         #   cargo xtask protocol --bless    (or: python3 tools/protocol_map.py --bless)\n\
+         # Do not hand-edit.\n\n[edges]\n",
+    );
+    for (name, val) in &g.phases {
+        let sends = sites(g.sends.get(name));
+        let recvs = sites(g.recvs.get(name));
+        if sends == "[]" && recvs == "[]" {
+            continue;
+        }
+        s.push_str(&format!("{name}={val} sends={sends} recvs={recvs}\n"));
+    }
+    s.push_str("\n[ops]\n");
+    for (name, val) in &g.ops {
+        let emit = sites(g.emits.get(name));
+        let dispatch = sites(g.dispatches.get(name));
+        if emit == "[]" && dispatch == "[]" {
+            continue;
+        }
+        s.push_str(&format!("{name}={val} emit={emit} dispatch={dispatch}\n"));
+    }
+    s.push_str("\n[mermaid]\nsequenceDiagram\n");
+    let mut arrows: Vec<(u8, String, String, String)> = Vec::new();
+    let mut seen = BTreeSet::new();
+    for (name, val) in &g.phases {
+        let senders: BTreeSet<String> = g
+            .sends
+            .get(name)
+            .into_iter()
+            .flatten()
+            .flat_map(|s| s.roles.split('|').map(String::from))
+            .collect();
+        let recvers: BTreeSet<String> = g
+            .recvs
+            .get(name)
+            .into_iter()
+            .flatten()
+            .flat_map(|s| s.roles.split('|').map(String::from))
+            .collect();
+        let mut pairs: Vec<(String, String)> = Vec::new();
+        for a in &senders {
+            for b in &recvers {
+                if a != b {
+                    pairs.push((a.clone(), b.clone()));
+                }
+            }
+        }
+        if pairs.is_empty() {
+            // Same-role traffic only (e.g. the bench loops): keep the
+            // self-arrow rather than losing the phase from the diagram.
+            for a in &senders {
+                if recvers.contains(a) {
+                    pairs.push((a.clone(), a.clone()));
+                }
+            }
+        }
+        for (a, b) in pairs {
+            if seen.insert((*val, a.clone(), b.clone())) {
+                arrows.push((*val, a, b, name.clone()));
+            }
+        }
+    }
+    arrows.sort();
+    let order = ["leader", "follower", "worker", "bench", "other"];
+    let used: BTreeSet<&str> = arrows
+        .iter()
+        .flat_map(|(_, a, b, _)| [a.as_str(), b.as_str()])
+        .collect();
+    for p in order {
+        if used.contains(p) {
+            s.push_str(&format!("    participant {p}\n"));
+        }
+    }
+    for (_, a, b, phase) in &arrows {
+        s.push_str(&format!("    {a}->>{b}: {phase}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    const FIX_TAGS: &str = r#"
+        tag_table! {
+            phases {
+                pub const PHASE_ALPHA: u8 = 1;
+                pub const PHASE_BETA: u8 = 2;
+            }
+            ops {
+                pub const OP_GO: u8 = 0;
+                pub const OP_HALT: u8 = 1;
+            }
+        }
+    "#;
+
+    fn analyze_src(files: &[(&str, &str)]) -> (Graph, Vec<Finding>) {
+        let lexed: Vec<(String, Lexed)> =
+            files.iter().map(|(p, s)| (p.to_string(), lex(s))).collect();
+        analyze(&lexed)
+    }
+
+    fn with_tags(live: &str) -> (Graph, Vec<Finding>) {
+        analyze_src(&[("src/network/tags.rs", FIX_TAGS), ("src/cluster/live.rs", live)])
+    }
+
+    #[test]
+    fn clean_roundtrip_resolves_aliases_wrappers_and_roles() {
+        let (g, f) = with_tags(
+            r#"
+            fn lead_loop(&mut self) {
+                let t = tag(PHASE_ALPHA, 0, self.seq);
+                self.ep.broadcast(t, &[OP_GO]);
+                self.halt();
+            }
+            fn halt(&mut self) {
+                self.ep.send(0, tag(PHASE_BETA, 0, 0), vec![OP_HALT]);
+            }
+            fn follow_decentralized(&mut self) {
+                let t = tag(PHASE_ALPHA, 0, self.seq);
+                let env = self.recv_wrapped(t, 5);
+                match env.payload[0] {
+                    OP_GO => {}
+                    OP_HALT => {}
+                }
+            }
+            fn recv_wrapped(&mut self, t: u64, poll: u64) -> Envelope {
+                self.ep.recv_tag(t, poll)
+            }
+            fn finish_trace(&mut self) {
+                self.ep.recv_tag(tag(PHASE_BETA, 0, 0), 5);
+            }
+            "#,
+        );
+        assert!(f.is_empty(), "{f:?}");
+        let alpha_sends = &g.sends["PHASE_ALPHA"];
+        assert_eq!(alpha_sends.len(), 1);
+        let s = alpha_sends.iter().next().unwrap();
+        assert_eq!((s.func.as_str(), s.roles.as_str()), ("lead_loop", "leader"));
+        // The wrapper call site is attributed to the CALLER, with its
+        // role — not to the wrapper function.
+        let alpha_recvs = &g.recvs["PHASE_ALPHA"];
+        assert_eq!(alpha_recvs.len(), 1, "{alpha_recvs:?}");
+        let r = alpha_recvs.iter().next().unwrap();
+        assert_eq!((r.func.as_str(), r.roles.as_str()), ("follow_decentralized", "follower"));
+        // halt() is reachable from lead_loop, so it inherits leader.
+        let beta_send = g.sends["PHASE_BETA"].iter().next().unwrap();
+        assert_eq!((beta_send.func.as_str(), beta_send.roles.as_str()), ("halt", "leader"));
+        assert!(g.emits.contains_key("OP_GO") && g.emits.contains_key("OP_HALT"));
+        assert!(g.dispatches.contains_key("OP_GO") && g.dispatches.contains_key("OP_HALT"));
+    }
+
+    #[test]
+    fn fires_on_orphan_send() {
+        let (_, f) = with_tags(
+            r#"
+            fn lead_loop(&mut self) {
+                self.ep.send(0, tag(PHASE_ALPHA, 0, 0), vec![1]);
+                self.ep.recv_tag(tag(PHASE_ALPHA, 0, 0), 5);
+                self.ep.broadcast(tag(PHASE_BETA, 0, 0), &[]);
+            }
+            "#,
+        );
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("orphan send on PHASE_BETA"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn fires_on_dead_channel() {
+        let (_, f) = with_tags(
+            r#"
+            fn follow_decentralized(&mut self) {
+                self.ep.recv_tag(tag(PHASE_BETA, 0, 0), 5);
+            }
+            "#,
+        );
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("dead channel PHASE_BETA"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn fires_on_unbounded_recv_and_regression_fixture() {
+        // The exact pre-fix shape of DenseEngine::load's ready wait —
+        // the real finding this PR fixed — must fire...
+        let pre_fix = r#"
+            fn load(artifacts: &Path) -> Result<DenseEngine> {
+                match ready_rx.recv() {
+                    Ok(Ok(())) => Ok(engine),
+                    Ok(Err(e)) => anyhow::bail!("dense engine failed to load: {e}"),
+                    Err(_) => anyhow::bail!("dense engine worker died during load"),
+                }
+            }
+        "#;
+        let (_, f) =
+            analyze_src(&[("src/network/tags.rs", FIX_TAGS), ("src/engine/generation.rs", pre_fix)]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("unbounded blocking `.recv()`"), "{}", f[0].message);
+        // ...and the post-fix recv_timeout shape must be clean, as must
+        // a justified escape.
+        let post_fix = r#"
+            fn load(artifacts: &Path) -> Result<DenseEngine> {
+                match ready_rx.recv_timeout(LOAD_TIMEOUT) {
+                    Ok(Ok(())) => Ok(engine),
+                    Err(RecvTimeoutError::Timeout) => anyhow::bail!("wedged"),
+                    _ => anyhow::bail!("dead"),
+                }
+            }
+            fn worker_loop(rx: Receiver<Job>) {
+                // xtask: allow(unbounded_recv): queue-close bounds this recv
+                while let Ok(job) = rx.recv() {
+                    serve_job(job);
+                }
+            }
+        "#;
+        let (_, f) =
+            analyze_src(&[("src/network/tags.rs", FIX_TAGS), ("src/engine/generation.rs", post_fix)]);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn fires_on_unmatched_opcode_both_directions() {
+        let (_, f) = with_tags(
+            r#"
+            fn lead_loop(&mut self) {
+                self.ep.broadcast(tag(PHASE_ALPHA, 0, 0), &[OP_GO]);
+            }
+            fn follow_decentralized(&mut self) {
+                let env = self.ep.recv_tag(tag(PHASE_ALPHA, 0, 0), 5);
+                match env.payload[0] {
+                    OP_HALT => {}
+                    _ => {}
+                }
+            }
+            "#,
+        );
+        assert_eq!(f.len(), 2, "{f:?}");
+        let all: String = f.iter().map(|x| x.message.clone()).collect();
+        assert!(all.contains("OP_HALT is dispatched but no sender emits"), "{all}");
+        assert!(all.contains("OP_GO is emitted but no handler dispatches"), "{all}");
+    }
+
+    #[test]
+    fn equality_comparison_counts_as_dispatch() {
+        let (g, f) = with_tags(
+            r#"
+            fn lead_loop(&mut self) {
+                self.ep.broadcast(tag(PHASE_ALPHA, 0, 0), &[OP_GO]);
+            }
+            fn follow_decentralized(&mut self) {
+                let env = self.ep.recv_tag(tag(PHASE_ALPHA, 0, 0), 5);
+                if env.payload[0] == OP_GO {
+                    go();
+                }
+            }
+            "#,
+        );
+        assert!(f.is_empty(), "{f:?}");
+        assert!(g.dispatches.contains_key("OP_GO"));
+    }
+
+    #[test]
+    fn struct_literal_field_and_fn_body_resolution() {
+        // The Beacon shape: `ep.send(0, self.tag, ..)` resolves through
+        // the struct literal's `tag: beacon_tag(node)` initializer into
+        // the beacon_tag body.
+        let (g, f) = with_tags(
+            r#"
+            pub fn beacon_tag(node: usize) -> u64 {
+                tag(PHASE_ALPHA, node as u32, 0)
+            }
+            fn new(node: usize) -> Beacon {
+                Beacon { tag: beacon_tag(node), last: None }
+            }
+            fn tick(&mut self, ep: &mut Endpoint) {
+                let _ = ep.send(0, self.tag, vec![1]);
+            }
+            fn lead_loop(&mut self) {
+                while self.ep.recv_tag(beacon_tag(3), 0).is_ok() {}
+            }
+            "#,
+        );
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(g.sends["PHASE_ALPHA"].iter().next().unwrap().func, "tick");
+        assert_eq!(g.recvs["PHASE_ALPHA"].iter().next().unwrap().func, "lead_loop");
+    }
+
+    #[test]
+    fn test_modules_do_not_count_as_receive_sites() {
+        // A receive that only exists inside `mod tests` must not save a
+        // send from being an orphan.
+        let (_, f) = with_tags(
+            r#"
+            fn lead_loop(&mut self) {
+                self.ep.broadcast(tag(PHASE_ALPHA, 0, 0), &[]);
+            }
+            mod tests {
+                fn covers_it() {
+                    ep.recv_tag(tag(PHASE_ALPHA, 0, 0), 5);
+                }
+            }
+            "#,
+        );
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("orphan send on PHASE_ALPHA"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn unresolvable_tag_is_reported_with_escape() {
+        let (_, f) = with_tags(
+            r#"
+            fn lead_loop(&mut self) {
+                self.ep.broadcast(mystery(), &[]);
+            }
+            "#,
+        );
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("cannot resolve the tag"), "{}", f[0].message);
+        let (_, f) = with_tags(
+            r#"
+            fn lead_loop(&mut self) {
+                // xtask: allow(unresolved_tag): computed fan-out tag
+                self.ep.broadcast(mystery(), &[]);
+            }
+            "#,
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn map_renders_deterministically_and_reflects_edits() {
+        let live = r#"
+            fn lead_loop(&mut self) {
+                self.ep.broadcast(tag(PHASE_ALPHA, 0, 0), &[OP_GO]);
+            }
+            fn follow_decentralized(&mut self) {
+                let env = self.ep.recv_tag(tag(PHASE_ALPHA, 0, 0), 5);
+                match env.payload[0] { OP_GO => {} _ => {} }
+            }
+        "#;
+        let (g1, f) = with_tags(live);
+        assert!(f.is_empty(), "{f:?}");
+        let (g2, _) = with_tags(live);
+        let m1 = render_map(&g1);
+        assert_eq!(m1, render_map(&g2), "same tree must render byte-identically");
+        assert!(m1.contains("sequenceDiagram"), "{m1}");
+        assert!(m1.contains("leader->>follower: PHASE_ALPHA"), "{m1}");
+        assert!(m1.contains("PHASE_ALPHA=1 sends=[leader:lead_loop@cluster/live.rs]"), "{m1}");
+        // Moving the send into a different function must change the map
+        // (that is what the drift check pins).
+        let (g3, _) = with_tags(&live.replace("lead_loop", "finish_trace"));
+        assert_ne!(m1, render_map(&g3));
+    }
+}

@@ -1,0 +1,348 @@
+#!/usr/bin/env python3
+"""Artifact contract: rust/src/runtime <-> python/compile/aot.py.
+
+The rust runtime compiles the device-resident artifact families by NAME
+(`DeviceExes::compile`, `BatchedExes::compile`, `SamplerExes::compile` in
+rust/src/runtime/nano.rs) and passes each executable a fixed number of
+operand buffers.  aot.py independently decides which names it lowers and
+how many parameters each entry computation takes.  Nothing at build time
+ties the two together — a renamed role or a reordered/added operand only
+surfaces when the full runtime loads real artifacts, which tier-1 CI
+never does.  This script is the missing static check, in the spirit of
+tools/schema_lock.py:
+
+  1. Mirror the runtime's name-construction rules into an expected
+     inventory {artifact name -> operand count}, with the batch buckets
+     derived from the manifest's `max_batch` the same way the rust side
+     derives them (powers of two from 2 up to max_batch).
+  2. Run the real lowering (`lower_device_artifacts`,
+     `lower_batched_artifacts`, `lower_sampler_artifacts`) and assert
+     the emitted name set matches the inventory exactly and that each
+     HLO ENTRY signature has the operand count the runtime will pass.
+  3. Scan rust/src/runtime/*.rs string literals for `dev_*` name
+     templates and require bidirectional coverage: every template names
+     at least one lowered artifact and every lowered artifact is
+     reachable from some template (catches renames on either side).
+  4. Round-trip the manifest: every key `write_manifest` emits must be
+     parsed by rust/src/runtime/manifest.rs, and the advertised widths
+     (max_batch, fast_num_slots, sampler_max_*) must agree with what was
+     actually lowered.
+
+Exit status: 0 when the contract holds (or jax is unavailable — the
+check is skipped with a notice so rust-only environments stay green),
+1 when any leg fails.  There is no --bless: the contract is derived, not
+locked.
+"""
+
+import os
+import re
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RUNTIME = os.path.join(REPO, "rust", "src", "runtime")
+PYTHON = os.path.join(REPO, "python")
+
+try:
+    import jax
+except Exception as exc:  # pragma: no cover - rust-only environments
+    print(f"artifact contract: skipped (jax unavailable: {exc})")
+    sys.exit(0)
+
+jax.config.update("jax_platform_name", "cpu")
+sys.path.insert(0, PYTHON)
+
+from compile import aot  # noqa: E402
+from compile import model as M  # noqa: E402
+from compile.model import CFG, NUM_SLOTS  # noqa: E402
+
+
+# --------------------------------------------------------------------------
+# Leg 1: the runtime's expected inventory, name -> operand count.
+# --------------------------------------------------------------------------
+
+
+def manifest_entries():
+    """Parse the manifest aot would write into {key: int}."""
+    # write_manifest opens its path itself; hand it a temp file.
+    with tempfile.NamedTemporaryFile("r", suffix=".txt", delete=False) as fh:
+        path = fh.name
+    try:
+        aot.write_manifest(path)
+        with open(path) as fh:
+            lines = fh.read().splitlines()
+    finally:
+        os.unlink(path)
+    out = {}
+    for line in lines:
+        line = line.split("#", 1)[0].strip()
+        if not line:
+            continue
+        k, _, v = line.partition("=")
+        out[k.strip()] = int(v.strip())
+    return out
+
+
+def buckets_from(max_batch):
+    """Powers of two from 2 up to max_batch — the runtime's bucket rule."""
+    out, b = [], 2
+    while b <= max_batch:
+        out.append(b)
+        b *= 2
+    return out
+
+
+def expected_inventory(manifest):
+    """Mirror of nano.rs compile_artifact call sites: name -> arity.
+
+    Arities are the operand counts the runtime hands `execute_b` for each
+    role — equivalently the spec lists in aot's lower_* functions.  Keep
+    the two columns in sync when touching either side.
+    """
+    fast_ns = manifest["fast_num_slots"]
+    full_ns = manifest["num_slots"]
+    buckets = buckets_from(manifest["max_batch"])
+
+    inv = {
+        # DeviceExes::compile — the B = 1 device-resident decode path.
+        "dev_embed": 2,  # (table, tok)
+        "dev_qkv": 3,  # (ln1, wqkv, x)
+        "dev_k_append": 3,  # (cache, qkv_row, pos)
+        "dev_v_append": 3,
+        "dev_attn_out": 6,  # (wo, x, qkv, k, v, pos)
+        "dev_moe_norm": 2,  # (ln2, h)
+        "dev_router": 2,  # (wr, moe_in)
+        "dev_residual": 2,  # (h, partial)
+        "dev_lm_head": 3,  # (ln_f, lm_head, h)
+    }
+    for ns in (fast_ns, full_ns):
+        inv[f"dev_experts_ns{ns}"] = 2 + 3 * ns  # (x, w, 3 mats per slot)
+
+    for b in buckets:
+        p = f"dev_b{b}_"
+        inv[p + "embed"] = 2
+        inv[p + "qkv"] = 3
+        inv[p + "k_append"] = 4  # (cache, rows, row_idx, pos)
+        inv[p + "v_append"] = 4
+        inv[p + "attn_out"] = 4 + 2 * b  # (wo, x, qkv, pos, B k-banks, B v-banks)
+        inv[p + "moe_norm"] = 2
+        inv[p + "router"] = 2
+        inv[p + "residual"] = 2
+        inv[p + "lm_head"] = 3
+        for el in (8, 16):
+            for ns in (fast_ns, full_ns):
+                # (w1s, v1s, w2s, x, idx, w)
+                inv[p + f"experts_el{el}_ns{ns}"] = 6
+                # (w1s, v1s, w2s, x, distinct_ids, sel, w)
+                inv[p + f"experts_dedup_el{el}_ns{ns}"] = 7
+
+    for b in [1] + buckets:
+        p = "dev_sample_" if b == 1 else f"dev_b{b}_sample_"
+        inv[p + "greedy"] = 1  # (logits)
+        inv[p + "topk"] = 6  # (logits, k, temp, seed, pos, req_id)
+        inv[p + "stop"] = 2  # (packed, stop_table)
+    return inv
+
+
+# --------------------------------------------------------------------------
+# Leg 2: the real lowering — names and ENTRY arities.
+# --------------------------------------------------------------------------
+
+
+def entry_arity(hlo_text):
+    """Operand count of the ENTRY computation of an HLO text module.
+
+    In this text dialect parameters are body instructions
+    (``Arg_0.1 = f32[...] parameter(0)``), so count the distinct
+    parameter indices between the ``ENTRY`` line and its closing brace.
+    """
+    lines = iter(hlo_text.splitlines())
+    for line in lines:
+        if line.lstrip().startswith("ENTRY "):
+            break
+    else:
+        raise ValueError("no ENTRY computation found")
+    indices = set()
+    for line in lines:
+        if line.rstrip() == "}":
+            break
+        m = re.search(r"= [^=]*\bparameter\((\d+)\)", line)
+        if m:
+            indices.add(int(m.group(1)))
+    if indices and indices != set(range(len(indices))):
+        raise ValueError(f"non-contiguous ENTRY parameter indices: {sorted(indices)}")
+    return len(indices)
+
+
+def lowered_arities():
+    arts = {}
+    arts.update(aot.lower_device_artifacts())
+    arts.update(aot.lower_batched_artifacts())
+    arts.update(aot.lower_sampler_artifacts())
+    return {name: entry_arity(text) for name, text in arts.items()}
+
+
+# --------------------------------------------------------------------------
+# Leg 3: dev_* name templates in the runtime sources.
+# --------------------------------------------------------------------------
+
+
+def string_literals(src):
+    """Every plain/raw string literal in a rust source file, in order.
+
+    Comments are skipped so doc prose like `dev_*.hlo.txt` does not leak
+    into the template set.  Escapes inside strings are passed through
+    verbatim — the artifact names contain none.
+    """
+    out, i, n = [], 0, len(src)
+    while i < n:
+        c = src[i]
+        if c == "/" and i + 1 < n and src[i + 1] == "/":
+            j = src.find("\n", i)
+            i = n if j < 0 else j + 1
+        elif c == "/" and i + 1 < n and src[i + 1] == "*":
+            j = src.find("*/", i + 2)
+            i = n if j < 0 else j + 2
+        elif c == '"':
+            j = i + 1
+            buf = []
+            while j < n and src[j] != '"':
+                if src[j] == "\\" and j + 1 < n:
+                    buf.append(src[j : j + 2])
+                    j += 2
+                else:
+                    buf.append(src[j])
+                    j += 1
+            out.append("".join(buf))
+            i = j + 1
+        elif c == "r" and i + 1 < n and src[i + 1] in '#"':
+            j = i + 1
+            hashes = 0
+            while j < n and src[j] == "#":
+                hashes += 1
+                j += 1
+            if j < n and src[j] == '"':
+                close = '"' + "#" * hashes
+                k = src.find(close, j + 1)
+                k = n if k < 0 else k
+                out.append(src[j + 1 : k])
+                i = k + len(close)
+            else:
+                i += 1
+        elif c == "'":
+            # char literal or lifetime; chars are never artifact names
+            if i + 2 < n and (src[i + 1] == "\\" or src[i + 2] == "'"):
+                j = src.find("'", i + 1 if src[i + 1] != "\\" else i + 2)
+                i = n if j < 0 else j + 1
+            else:
+                i += 1
+        else:
+            i += 1
+    return out
+
+
+def dev_templates():
+    """{template: file} for every dev_* string literal under runtime/."""
+    out = {}
+    for fname in sorted(os.listdir(RUNTIME)):
+        if not fname.endswith(".rs"):
+            continue
+        with open(os.path.join(RUNTIME, fname)) as fh:
+            src = fh.read()
+        for lit in string_literals(src):
+            if lit.startswith("dev_"):
+                out.setdefault(lit, fname)
+    return out
+
+
+def template_regex(template):
+    """format!-style template -> prefix regex ({holes} become wildcards)."""
+    parts = re.split(r"\{[^{}]*\}", template)
+    return re.compile("^" + ".+".join(re.escape(p) for p in parts))
+
+
+# --------------------------------------------------------------------------
+# Driver.
+# --------------------------------------------------------------------------
+
+
+def main():
+    findings = []
+
+    manifest = manifest_entries()
+    expected = expected_inventory(manifest)
+    lowered = lowered_arities()
+
+    # Leg 2a: exact name-set match.
+    for name in sorted(set(expected) - set(lowered)):
+        findings.append(f"runtime expects '{name}' but aot.py does not lower it")
+    for name in sorted(set(lowered) - set(expected)):
+        findings.append(f"aot.py lowers '{name}' but the runtime never loads it")
+
+    # Leg 2b: operand counts.
+    for name in sorted(set(expected) & set(lowered)):
+        if expected[name] != lowered[name]:
+            findings.append(
+                f"'{name}': runtime passes {expected[name]} operand(s), "
+                f"lowered ENTRY takes {lowered[name]}"
+            )
+
+    # Leg 3: template coverage, both directions.
+    templates = dev_templates()
+    regexes = {t: template_regex(t) for t in templates}
+    for t in sorted(templates):
+        if not any(regexes[t].match(name) for name in expected):
+            findings.append(
+                f"{templates[t]}: literal 'dev_' template \"{t}\" matches no "
+                "lowered artifact"
+            )
+    for name in sorted(expected):
+        if not any(rx.match(name) for rx in regexes.values()):
+            findings.append(
+                f"artifact '{name}' is unreachable from any rust/src/runtime "
+                "name template"
+            )
+
+    # Leg 4: manifest round-trip.
+    with open(os.path.join(RUNTIME, "manifest.rs")) as fh:
+        manifest_rs = set(string_literals(fh.read()))
+    for key in manifest:
+        if key not in manifest_rs:
+            findings.append(
+                f"manifest key '{key}' is written by aot.py but never parsed "
+                "by rust/src/runtime/manifest.rs"
+            )
+    checks = [
+        ("device_artifacts", 1),
+        ("sampler_artifacts", 1),
+        ("dedup_artifacts", 1),
+        ("max_batch", max(aot.BATCH_BUCKETS)),
+        ("fast_num_slots", CFG.top_k),
+        ("num_slots", NUM_SLOTS),
+        ("sampler_max_top_k", M.SAMPLER_MAX_TOP_K),
+        ("sampler_max_stop", M.SAMPLER_MAX_STOP),
+    ]
+    for key, want in checks:
+        got = manifest.get(key)
+        if got != want:
+            findings.append(f"manifest '{key}' = {got}, expected {want}")
+    if buckets_from(manifest.get("max_batch", 0)) != list(aot.BATCH_BUCKETS):
+        findings.append(
+            f"BATCH_BUCKETS {list(aot.BATCH_BUCKETS)} are not the powers of "
+            f"two implied by max_batch = {manifest.get('max_batch')}"
+        )
+
+    if findings:
+        for f in findings:
+            print(f"artifact contract: {f}")
+        print(f"artifact contract: FAILED ({len(findings)} finding(s))")
+        return 1
+    print(
+        f"artifact contract: OK ({len(expected)} artifact(s), "
+        f"{len(templates)} template(s), {len(manifest)} manifest key(s))"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,777 @@
+#!/usr/bin/env python3
+"""Offline mirror of `cargo xtask protocol` (rust/xtask/src/protocol.rs).
+
+Extracts the fabric communication graph from rust/src — every
+send/broadcast vs recv_tag/gather site per PHASE_* tag, every OP_*
+emit vs dispatch site — checks the four protocol-flow failure classes
+(orphan send, dead channel, unbounded blocking recv, unmatched opcode)
+and regenerates (--bless) or drift-checks rust/protocol.map without a
+Rust toolchain. The algorithm mirrors rust/xtask/src/lexer.rs and
+rust/xtask/src/protocol.rs — any change on either side must land on
+the other, and `cargo xtask protocol` is the source of truth when they
+disagree.
+
+Usage:
+    python3 tools/protocol_map.py            # verify, exit 1 on findings/drift
+    python3 tools/protocol_map.py --bless    # rewrite rust/protocol.map
+"""
+
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RUST = os.path.join(REPO, "rust")
+MAP = os.path.join(RUST, "protocol.map")
+
+IDENT, LITERAL, LIFETIME, PUNCT = "ident", "literal", "lifetime", "punct"
+
+
+def is_ident_start(c):
+    return c.isascii() and (c.isalpha() or c == "_")
+
+
+def is_ident_cont(c):
+    return c.isascii() and (c.isalnum() or c == "_")
+
+
+def scan_allow(comment, line, allows):
+    marker = "xtask: allow("
+    at = comment.find(marker)
+    if at >= 0:
+        rest = comment[at + len(marker):]
+        end = rest.find(")")
+        if end >= 0:
+            allows.append((line, rest[:end].strip()))
+
+
+def lex(src):
+    """Tokenize like rust/xtask/src/lexer.rs, tracking line numbers and
+    collecting `// xtask: allow(<name>): why` directives."""
+    b = src
+    n = len(b)
+    toks = []
+    allows = []
+    i = 0
+    line = 1
+    while i < n:
+        c = b[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c.isspace():
+            i += 1
+            continue
+        if c == "/" and i + 1 < n and b[i + 1] == "/":
+            start = i
+            while i < n and b[i] != "\n":
+                i += 1
+            scan_allow(b[start:i], line, allows)
+            continue
+        if c == "/" and i + 1 < n and b[i + 1] == "*":
+            start = i
+            start_line = line
+            depth = 1
+            i += 2
+            while i < n and depth > 0:
+                if b[i] == "\n":
+                    line += 1
+                if b[i] == "/" and i + 1 < n and b[i + 1] == "*":
+                    depth += 1
+                    i += 2
+                elif b[i] == "*" and i + 1 < n and b[i + 1] == "/":
+                    depth -= 1
+                    i += 2
+                else:
+                    i += 1
+            scan_allow(b[start:i], start_line, allows)
+            continue
+        if c == "r" or (c == "b" and i + 1 < n and b[i + 1] == "r"):
+            j = i + (2 if c == "b" else 1)
+            hashes = 0
+            while j < n and b[j] == "#":
+                hashes += 1
+                j += 1
+            raw_ident = i + 2 < n and b[i + 1] == "#" and is_ident_start(b[i + 2])
+            if j < n and b[j] == '"' and not (hashes > 0 and c == "r" and raw_ident):
+                j += 1
+                while j < n:
+                    if b[j] == "\n":
+                        line += 1
+                    if b[j] == '"' and all(
+                        j + k < n and b[j + k] == "#" for k in range(1, hashes + 1)
+                    ):
+                        j += 1 + hashes
+                        break
+                    j += 1
+                toks.append((b[i:min(j, n)], LITERAL, line))
+                i = j
+                continue
+            if hashes == 1 and c == "r" and j < n and is_ident_start(b[j]):
+                start = i
+                i = j
+                while i < n and is_ident_cont(b[i]):
+                    i += 1
+                toks.append((b[start:i], IDENT, line))
+                continue
+        if c == '"' or (c == "b" and i + 1 < n and b[i + 1] == '"'):
+            start = i
+            i += 2 if c == "b" else 1
+            while i < n:
+                if b[i] == "\\":
+                    i += 2
+                    continue
+                if b[i] == "\n":
+                    line += 1
+                if b[i] == '"':
+                    i += 1
+                    break
+                i += 1
+            toks.append((b[start:min(i, n)], LITERAL, line))
+            continue
+        if c == "'":
+            if i + 1 < n and is_ident_start(b[i + 1]):
+                j = i + 1
+                while j < n and is_ident_cont(b[j]):
+                    j += 1
+                if j >= n or b[j] != "'":
+                    toks.append((b[i:j], LIFETIME, line))
+                    i = j
+                    continue
+            start = i
+            i += 1
+            if i < n and b[i] == "\\":
+                i += 2
+                while i < n and b[i] != "'":
+                    i += 1
+            else:
+                while i < n and b[i] != "'":
+                    i += 1
+            i = min(i + 1, n)
+            toks.append((b[start:i], LITERAL, line))
+            continue
+        if is_ident_start(c):
+            start = i
+            while i < n and is_ident_cont(b[i]):
+                i += 1
+            toks.append((b[start:i], IDENT, line))
+            continue
+        if c.isdigit() and c.isascii():
+            start = i
+            while i < n and is_ident_cont(b[i]):
+                i += 1
+            if i + 1 < n and b[i] == "." and b[i + 1].isdigit() and b[i + 1].isascii():
+                i += 1
+                while i < n and is_ident_cont(b[i]):
+                    i += 1
+            toks.append((b[start:i], LITERAL, line))
+            continue
+        toks.append((c, PUNCT, line))
+        i += 1
+    return toks, allows
+
+
+def allowed(allows, analyzer, line):
+    return any(a == analyzer and (ln == line or ln + 1 == line) for ln, a in allows)
+
+
+class Func:
+    def __init__(self, name, params, body):
+        self.name = name
+        self.params = params
+        self.body = body
+
+
+def match_brace(toks, open_i):
+    depth = 0
+    i = open_i
+    while i < len(toks):
+        t = toks[i][0]
+        if t == "{":
+            depth += 1
+        elif t == "}":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+        i += 1
+    return len(toks)
+
+
+def push_param(toks, lo, hi, params):
+    if lo >= hi:
+        return
+    i = lo
+    while i < hi and (toks[i][0] in ("&", "mut") or toks[i][1] == LIFETIME):
+        i += 1
+    if i >= hi or toks[i][0] == "self":
+        return
+    if toks[i][1] == IDENT:
+        params.append(toks[i][0])
+    else:
+        params.append("")  # pattern param: keep index alignment
+
+
+def parse_params(toks, open_i, params):
+    depth = 0
+    angle = 0
+    i = open_i
+    start = open_i + 1
+    while i < len(toks):
+        t = toks[i][0]
+        if t in ("(", "["):
+            depth += 1
+        elif t in (")", "]"):
+            depth -= 1
+            if depth == 0:
+                push_param(toks, start, i, params)
+                return i + 1
+        elif t == "<" and depth == 1:
+            angle += 1
+        elif t == ">" and depth == 1:
+            angle -= 1
+        elif t == "," and depth == 1 and angle == 0:
+            push_param(toks, start, i, params)
+            start = i + 1
+        i += 1
+    return i
+
+
+def functions(toks):
+    out = []
+    i = 0
+    while i < len(toks):
+        if toks[i][1] == IDENT and toks[i][0] == "mod":
+            opens = [k for k in range(i, len(toks)) if toks[k][0] in ("{", ";")]
+            if opens and toks[opens[0]][0] == "{" and toks[i + 1][0] == "tests":
+                i = match_brace(toks, opens[0])
+                continue
+        if toks[i][1] == IDENT and toks[i][0] == "fn" and i + 1 < len(toks):
+            name = toks[i + 1][0]
+            j = i + 2
+            while j < len(toks) and toks[j][0] not in ("(", "{"):
+                j += 1
+            params = []
+            if j < len(toks) and toks[j][0] == "(":
+                j = parse_params(toks, j, params)
+            paren = 0
+            while j < len(toks):
+                t = toks[j][0]
+                if t == "(":
+                    paren += 1
+                elif t == ")":
+                    paren -= 1
+                elif t == "{" and paren == 0:
+                    break
+                elif t == ";" and paren == 0:
+                    break
+                j += 1
+            if j < len(toks) and toks[j][0] == "{":
+                end = match_brace(toks, j)
+                out.append(Func(name, params, (j, end)))
+                i = end
+                continue
+            i = j
+            continue
+        i += 1
+    return out
+
+
+def split_args(toks, open_i):
+    depth = 0
+    i = open_i
+    args = []
+    start = open_i + 1
+    while i < len(toks):
+        t = toks[i][0]
+        if t in ("(", "[", "{"):
+            depth += 1
+        elif t in (")", "]", "}"):
+            depth -= 1
+            if depth == 0:
+                if start < i:
+                    args.append((start, i))
+                return args, i + 1
+        elif t == "," and depth == 1:
+            args.append((start, i))
+            start = i + 1
+        i += 1
+    return args, i
+
+
+def rel(path):
+    if "src/" in path:
+        return path.rsplit("src/", 1)[1]
+    return path
+
+
+def tag_tables(files):
+    phases = {}
+    ops = {}
+    for path, (toks, _) in files:
+        if not path.endswith("network/tags.rs"):
+            continue
+        i = 0
+        while i + 5 < len(toks):
+            if (
+                toks[i][0] == "const"
+                and toks[i + 1][1] == IDENT
+                and toks[i + 2][0] == ":"
+                and toks[i + 3][0] == "u8"
+                and toks[i + 4][0] == "="
+                and toks[i + 5][1] == LITERAL
+            ):
+                name = toks[i + 1][0]
+                lit = toks[i + 5][0].replace("_", "")
+                try:
+                    val = int(lit, 16) if lit.startswith("0x") else int(lit)
+                except ValueError:
+                    val = None
+                if val is not None and 0 <= val <= 255:
+                    if name.startswith("PHASE_"):
+                        phases[name] = val
+                    elif name.startswith("OP_"):
+                        ops[name] = val
+                i += 6
+                continue
+            i += 1
+    return phases, ops
+
+
+ROLE_ROOTS = [
+    ("cluster/live.rs", "lead_loop", "leader"),
+    ("cluster/live.rs", "finish_trace", "leader"),
+    ("cluster/live.rs", "follow_decentralized", "follower"),
+    ("cluster/live.rs", "follow_central_worker", "worker"),
+]
+
+
+def role_maps(files, funcs):
+    out = []
+    for fi, (path, (toks, _)) in enumerate(files):
+        file = rel(path)
+        names = {f.name for f in funcs[fi]}
+        edges = {}
+        for f in funcs[fi]:
+            callees = edges.setdefault(f.name, set())
+            lo, hi = f.body
+            for i in range(lo, max(lo, hi - 1)):
+                if (
+                    toks[i][1] == IDENT
+                    and toks[i + 1][0] == "("
+                    and toks[i][0] in names
+                    and toks[i][0] != f.name
+                ):
+                    callees.add(toks[i][0])
+        labels = {}
+        if file.endswith("cli/commands/net_bench.rs"):
+            for f in funcs[fi]:
+                labels.setdefault(f.name, set()).add("bench")
+        for root_file, root_fn, label in ROLE_ROOTS:
+            if not file.endswith(root_file):
+                continue
+            queue = [root_fn]
+            seen = set()
+            while queue:
+                f = queue.pop()
+                if f in seen:
+                    continue
+                seen.add(f)
+                labels.setdefault(f, set()).add(label)
+                queue.extend(edges.get(f, ()))
+        out.append(labels)
+    return out
+
+
+class Ctx:
+    def __init__(self, files, funcs, phases):
+        self.files = files
+        self.funcs = funcs
+        self.phases = phases
+
+    def resolve(self, fi, func, lo, hi, depth):
+        if depth == 0 or lo >= hi:
+            return ("unknown", None)
+        toks = self.files[fi][1][0]
+        for t in toks[lo:hi]:
+            if t[1] == IDENT and t[0] in self.phases:
+                return ("phase", t[0])
+        s = lo
+        while s < hi and toks[s][0] == "&":
+            s += 1
+        if hi - s == 1 and toks[s][1] == IDENT:
+            name = toks[s][0]
+            if name in func.params:
+                return ("param", func.params.index(name))
+            r = self.resolve_let(fi, func, name, depth)
+            if r is not None:
+                return r
+        for i in range(lo, max(lo, hi - 1)):
+            if (
+                toks[i][1] == IDENT
+                and toks[i + 1][0] == "("
+                and toks[i][0] not in ("tag", "req_tag")
+            ):
+                p = self.phase_in_fn_body(toks[i][0])
+                if p is not None:
+                    return ("phase", p)
+        if hi - lo >= 2 and toks[hi - 1][1] == IDENT and toks[hi - 2][0] == ".":
+            p = self.resolve_field(toks[hi - 1][0], depth)
+            if p is not None:
+                return ("phase", p)
+        return ("unknown", None)
+
+    def resolve_let(self, fi, func, name, depth):
+        toks = self.files[fi][1][0]
+        lo, hi = func.body
+        i = lo
+        while i + 2 < hi:
+            if toks[i][0] == "let" and toks[i][1] == IDENT:
+                j = i + 1
+                if toks[j][0] == "mut":
+                    j += 1
+                if j < hi and toks[j][1] == IDENT and toks[j][0] == name:
+                    k = j + 1
+                    while k < hi and toks[k][0] not in ("=", ";"):
+                        k += 1
+                    if k < hi and toks[k][0] == "=":
+                        d = 0
+                        e = k + 1
+                        while e < hi:
+                            t = toks[e][0]
+                            if t in ("(", "[", "{"):
+                                d += 1
+                            elif t in (")", "]", "}"):
+                                d -= 1
+                            elif t == ";" and d == 0:
+                                break
+                            e += 1
+                        return self.resolve(fi, func, k + 1, e, depth - 1)
+            i += 1
+        return None
+
+    def phase_in_fn_body(self, name):
+        for fi, funcs in enumerate(self.funcs):
+            for f in funcs:
+                if f.name != name:
+                    continue
+                toks = self.files[fi][1][0]
+                for t in toks[f.body[0]:f.body[1]]:
+                    if t[1] == IDENT and t[0] in self.phases:
+                        return t[0]
+        return None
+
+    def resolve_field(self, field, depth):
+        for fi, funcs in enumerate(self.funcs):
+            toks = self.files[fi][1][0]
+            for f in funcs:
+                lo, hi = f.body
+                i = lo
+                while i + 2 < hi:
+                    if (
+                        toks[i][1] == IDENT
+                        and toks[i][0] == field
+                        and toks[i + 1][0] == ":"
+                        and toks[i + 2][0] != ":"
+                    ):
+                        d = 0
+                        e = i + 2
+                        while e < hi:
+                            t = toks[e][0]
+                            if t in ("(", "[", "{"):
+                                d += 1
+                            elif t in (")", "]", "}"):
+                                if d == 0:
+                                    break
+                                d -= 1
+                            elif t in (",", ";") and d == 0:
+                                break
+                            e += 1
+                        kind, p = self.resolve(fi, f, i + 2, e, depth - 1)
+                        if kind == "phase":
+                            return p
+                        i = e
+                        continue
+                    i += 1
+        return None
+
+
+def analyze(files):
+    """files: list of (path, (toks, allows)). Returns (graph, findings)."""
+    findings = []
+    phases, ops = tag_tables(files)
+    if not phases:
+        findings.append(("network/tags.rs", 0, "protocol: no PHASE_* constants found"))
+        return None, findings
+    phase_list = sorted(phases.items(), key=lambda kv: (kv[1], kv[0]))
+    op_list = sorted(ops.items(), key=lambda kv: (kv[1], kv[0]))
+    funcs = [functions(t) for _, (t, _) in files]
+    ctx = Ctx(files, funcs, phases)
+    roles = role_maps(files, funcs)
+    graph = {
+        "phases": phase_list,
+        "ops": op_list,
+        "sends": {},
+        "recvs": {},
+        "emits": {},
+        "dispatches": {},
+    }
+
+    def site(fi, func):
+        labels = roles[fi].get(func.name)
+        r = "|".join(sorted(labels)) if labels else "other"
+        return (rel(files[fi][0]), func.name, r)
+
+    # Pass 1: primitive fabric calls.
+    raw = []
+    for fi, (_, (toks, _)) in enumerate(files):
+        for func in funcs[fi]:
+            lo, hi = func.body
+            i = lo
+            while i + 2 < hi:
+                if toks[i][0] == "." and toks[i + 1][1] == IDENT and toks[i + 2][0] == "(":
+                    args, after = split_args(toks, i + 2)
+                    hit = {
+                        ("send", 3): ("send", 1),
+                        ("broadcast", 2): ("send", 0),
+                        ("recv_tag", 2): ("recv", 0),
+                        ("gather", 2): ("recv", 0),
+                    }.get((toks[i + 1][0], len(args)))
+                    if hit is not None:
+                        d, argi = hit
+                        raw.append((fi, func, d, args[argi], toks[i + 1][2]))
+                        i = after
+                        continue
+                i += 1
+
+    wrappers = {}
+    for fi, func, d, arg, line in raw:
+        kind, v = ctx.resolve(fi, func, arg[0], arg[1], 4)
+        if kind == "phase":
+            m = graph["sends"] if d == "send" else graph["recvs"]
+            m.setdefault(v, set()).add(site(fi, func))
+        elif kind == "param":
+            wrappers[(func.name, v)] = d
+        else:
+            _, allows = files[fi][1]
+            if not allowed(allows, "unresolved_tag", line):
+                findings.append((
+                    rel(files[fi][0]),
+                    line,
+                    "protocol: %s: cannot resolve the tag of this fabric call to a "
+                    "PHASE_* constant" % func.name,
+                ))
+
+    # Pass 2: wrapper call sites, transitively.
+    for _ in range(8):
+        new_wrappers = {}
+        for fi, (_, (toks, _)) in enumerate(files):
+            for f in funcs[fi]:
+                lo, hi = f.body
+                i = lo
+                while i + 1 < hi:
+                    is_def = i > 0 and toks[i - 1][0] == "fn"
+                    if toks[i][1] == IDENT and toks[i + 1][0] == "(" and not is_def:
+                        entries = sorted(
+                            (idx, d)
+                            for (n, idx), d in wrappers.items()
+                            if n == toks[i][0]
+                        )
+                        if entries:
+                            args, after = split_args(toks, i + 1)
+                            for idx, d in entries:
+                                if idx >= len(args):
+                                    continue
+                                a = args[idx]
+                                kind, v = ctx.resolve(fi, f, a[0], a[1], 4)
+                                if kind == "phase":
+                                    m = graph["sends"] if d == "send" else graph["recvs"]
+                                    m.setdefault(v, set()).add(site(fi, f))
+                                elif kind == "param":
+                                    new_wrappers[(f.name, v)] = d
+                            i = after
+                            continue
+                    i += 1
+        before = len(wrappers)
+        wrappers.update(new_wrappers)
+        if len(wrappers) == before:
+            break
+
+    # Pass 3: opcode inventory + unbounded receives.
+    for fi, (path, (toks, allows)) in enumerate(files):
+        if path.endswith("network/tags.rs"):
+            continue
+        for f in funcs[fi]:
+            lo, hi = f.body
+            i = lo
+            while i < hi:
+                t = toks[i]
+                if t[1] == IDENT and t[0] in ops:
+                    nxt = toks[i + 1][0] if i + 1 < len(toks) else ""
+                    nxt2 = toks[i + 2][0] if i + 2 < len(toks) else ""
+                    arm = nxt == "=" and nxt2 == ">"
+                    eq_r = nxt == "=" and nxt2 == "="
+                    eq_l = (
+                        i >= 2
+                        and toks[i - 1][0] == "="
+                        and toks[i - 2][0] == "="
+                        and (i < 3 or toks[i - 3][0] != "=")
+                    )
+                    key = "dispatches" if (arm or eq_r or eq_l) else "emits"
+                    graph[key].setdefault(t[0], set()).add(site(fi, f))
+                if (
+                    t[0] == "."
+                    and i + 3 < len(toks)
+                    and toks[i + 1][0] == "recv"
+                    and toks[i + 2][0] == "("
+                    and toks[i + 3][0] == ")"
+                ):
+                    line = toks[i + 1][2]
+                    if not allowed(allows, "unbounded_recv", line):
+                        findings.append((
+                            rel(path),
+                            line,
+                            "protocol: %s: unbounded blocking `.recv()`" % f.name,
+                        ))
+                    i += 4
+                    continue
+                i += 1
+
+    for name, _ in graph["phases"]:
+        s = graph["sends"].get(name, set())
+        r = graph["recvs"].get(name, set())
+        if s and not r:
+            findings.append((
+                "network/tags.rs",
+                0,
+                "protocol: orphan send on %s: sent by [%s] but no receive site exists"
+                % (name, ", ".join(fmt_site(x) for x in sorted(s))),
+            ))
+        if r and not s:
+            findings.append((
+                "network/tags.rs",
+                0,
+                "protocol: dead channel %s: received by [%s] but nothing sends it"
+                % (name, ", ".join(fmt_site(x) for x in sorted(r))),
+            ))
+    for name, _ in graph["ops"]:
+        e = graph["emits"].get(name, set())
+        d = graph["dispatches"].get(name, set())
+        if d and not e:
+            findings.append((
+                "network/tags.rs", 0,
+                "protocol: opcode %s is dispatched but no sender emits it" % name,
+            ))
+        if e and not d:
+            findings.append((
+                "network/tags.rs", 0,
+                "protocol: opcode %s is emitted but no handler dispatches it" % name,
+            ))
+
+    return graph, findings
+
+
+def fmt_site(s):
+    file, func, roles = s
+    return "%s:%s@%s" % (roles, func, file)
+
+
+def fmt_sites(st):
+    return "[%s]" % ", ".join(fmt_site(x) for x in sorted(st or ()))
+
+
+def render_map(g):
+    out = [
+        "# apple-moe protocol map: the fabric communication graph extracted from\n"
+        "# rust/src (send/broadcast vs recv_tag/gather sites per PHASE_*, opcode\n"
+        "# emit vs dispatch sites per OP_*). Regenerate after an intentional\n"
+        "# protocol-flow change:\n"
+        "#   cargo xtask protocol --bless    (or: python3 tools/protocol_map.py --bless)\n"
+        "# Do not hand-edit.\n\n[edges]\n"
+    ]
+    for name, val in g["phases"]:
+        sends = fmt_sites(g["sends"].get(name))
+        recvs = fmt_sites(g["recvs"].get(name))
+        if sends == "[]" and recvs == "[]":
+            continue
+        out.append("%s=%d sends=%s recvs=%s\n" % (name, val, sends, recvs))
+    out.append("\n[ops]\n")
+    for name, val in g["ops"]:
+        emit = fmt_sites(g["emits"].get(name))
+        dispatch = fmt_sites(g["dispatches"].get(name))
+        if emit == "[]" and dispatch == "[]":
+            continue
+        out.append("%s=%d emit=%s dispatch=%s\n" % (name, val, emit, dispatch))
+    out.append("\n[mermaid]\nsequenceDiagram\n")
+    arrows = []
+    seen = set()
+    for name, val in g["phases"]:
+        senders = set()
+        for s in g["sends"].get(name, ()):
+            senders.update(s[2].split("|"))
+        recvers = set()
+        for s in g["recvs"].get(name, ()):
+            recvers.update(s[2].split("|"))
+        pairs = [(a, b) for a in sorted(senders) for b in sorted(recvers) if a != b]
+        if not pairs:
+            pairs = [(a, a) for a in sorted(senders) if a in recvers]
+        for a, b in pairs:
+            if (val, a, b) not in seen:
+                seen.add((val, a, b))
+                arrows.append((val, a, b, name))
+    arrows.sort()
+    used = {x for _, a, b, _ in arrows for x in (a, b)}
+    for p in ("leader", "follower", "worker", "bench", "other"):
+        if p in used:
+            out.append("    participant %s\n" % p)
+    for _, a, b, phase in arrows:
+        out.append("    %s->>%s: %s\n" % (a, b, phase))
+    return "".join(out)
+
+
+def collect_sources(root):
+    out = []
+
+    def walk(d):
+        for entry in sorted(os.listdir(d)):
+            p = os.path.join(d, entry)
+            if os.path.isdir(p):
+                walk(p)
+            elif p.endswith(".rs"):
+                with open(p, encoding="utf-8") as f:
+                    out.append((p.replace("\\", "/"), f.read()))
+
+    walk(root)
+    return out
+
+
+def main(argv):
+    bless = "--bless" in argv
+    files = [(p, lex(src)) for p, src in collect_sources(os.path.join(RUST, "src"))]
+    graph, findings = analyze(files)
+    for file, line, msg in findings:
+        print("%s:%d: %s" % (file, line, msg))
+    if findings:
+        print("protocol: FAILED (%d finding(s))" % len(findings))
+        return 1
+    text = render_map(graph)
+    if bless:
+        with open(MAP, "w", encoding="utf-8") as f:
+            f.write(text)
+        print("blessed %s" % MAP)
+        return 0
+    try:
+        with open(MAP, encoding="utf-8") as f:
+            current = f.read()
+    except FileNotFoundError:
+        current = ""
+    if current == text:
+        print("protocol.map is up to date")
+        return 0
+    print("protocol.map is stale — run `cargo xtask protocol --bless` (or this")
+    print("script with --bless) after an intentional protocol-flow change:")
+    sys.stdout.write(text)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
