@@ -24,6 +24,11 @@ fresh):
                         `lower_batched_artifacts`): B concurrent
                         requests share one forward pass per scheduler
                         iteration (continuous batching)
+  dev_p{T}_*.hlo.txt    the chunked PREFILL family at chunk sizes T in
+                        PREFILL_CHUNKS (see `lower_prefill_artifacts`):
+                        T consecutive prompt positions of one request
+                        share each layer's dispatches; no lm_head role
+                        (prompt positions never produce logits)
   dev[_b{B}]_sample_*.hlo.txt
                         on-device sampler roles (greedy / seeded top-k /
                         stop mask) chained off the lm_head buffer so a
@@ -313,6 +318,74 @@ def lower_batched_artifacts(cfg=CFG):
     return arts
 
 
+# Chunk sizes of the prefill family (`dev_p{T}_*`): the live scheduler
+# evaluates T consecutive prompt positions of one request per dispatch
+# (ragged tails pad the T=8 chunk). Kept in sync with the rust mirror
+# (`runtime::prefill::PREFILL_CHUNKS`) through the manifest's
+# `prefill_chunk_max` (the chunks are the powers of 4 from 8 up to it).
+PREFILL_CHUNKS = (8, 32)
+
+
+def lower_prefill_artifacts(cfg=CFG):
+    """Return {name: hlo_text} for the ``dev_p{T}_*`` chunked prefill
+    roles (untupled, like every other `dev_*` family).
+
+    Per chunk size T in `PREFILL_CHUNKS`: the row-wise roles
+    (embed/qkv/moe_norm/residual) and the per-row router/experts are the
+    batch roles lowered again at leading dim T; the K/V appends write
+    all T rows at pos..pos+T in one dynamic-update-slice into the SAME
+    `[Hkv, S, hd]` per-request cache the decode families use, and the
+    attention role applies a causal mask over the chunk. No lm_head
+    variant exists — prompt positions never produce logits (the last
+    prompt token runs on the decode path, which samples).
+    """
+    d, dq, e, k = cfg.d_embed, cfg.d_qkv, cfg.n_experts, cfg.top_k
+    nh, nk, hd, s, v = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.max_seq, cfg.vocab
+    arts = {}
+    for t in PREFILL_CHUNKS:
+        p = f"dev_p{t}_"
+        arts[p + "embed"] = to_hlo_text_untupled(
+            jax.jit(M.embed_step).lower(f32(v, d), i32(t))
+        )
+        arts[p + "qkv"] = to_hlo_text_untupled(
+            jax.jit(M.qkv_step).lower(f32(d), f32(d, dq), f32(t, d))
+        )
+        arts[p + "k_append"] = to_hlo_text_untupled(
+            jax.jit(M.prefill_k_append_step).lower(f32(nk, s, hd), f32(t, dq), i32())
+        )
+        arts[p + "v_append"] = to_hlo_text_untupled(
+            jax.jit(M.prefill_v_append_step).lower(f32(nk, s, hd), f32(t, dq), i32())
+        )
+        arts[p + "attn_out"] = to_hlo_text_untupled(
+            jax.jit(M.prefill_attn_out_step).lower(
+                f32(nh * hd, d), f32(t, d), f32(t, dq), f32(nk, s, hd),
+                f32(nk, s, hd), i32(),
+            )
+        )
+        arts[p + "moe_norm"] = to_hlo_text_untupled(
+            jax.jit(M.moe_norm_step).lower(f32(d), f32(t, d))
+        )
+        arts[p + "router"] = to_hlo_text_untupled(
+            jax.jit(M.batched_router_step).lower(f32(d, e), f32(t, d))
+        )
+        # Chunk rows route independently like batch rows, so the expert
+        # role is the gathered batched formulation at leading dim T —
+        # one variant per (resident count, slot count).
+        for el in (8, 16):
+            for ns in (k, NUM_SLOTS):
+                arts[p + f"experts_el{el}_ns{ns}"] = to_hlo_text_untupled(
+                    jax.jit(M.batched_experts_forward).lower(
+                        f32(el, d, cfg.d_ffn), f32(el, d, cfg.d_ffn),
+                        f32(el, cfg.d_ffn, d),
+                        f32(t, d), i32(t, ns), f32(t, ns),
+                    )
+                )
+        arts[p + "residual"] = to_hlo_text_untupled(
+            jax.jit(M.residual_add_step).lower(f32(t, d), f32(t, d))
+        )
+    return arts
+
+
 def lower_sampler_artifacts(cfg=CFG):
     """Return {name: hlo_text} for the on-device sampler roles.
 
@@ -373,6 +446,10 @@ def write_manifest(path, cfg=CFG):
             # Dedup expert roles (`dev_b{B}_experts_dedup_el{el}_ns{ns}`)
             # are present; 0/absent = gathered batched experts only.
             ("dedup_artifacts", 1),
+            # Largest chunk of the `dev_p{T}_*` chunked prefill family
+            # (chunks are the powers of 4 from 8 up to this value, so
+            # 32 → T ∈ {8, 32}; 0/absent = serial prefill only).
+            ("prefill_chunk_max", max(PREFILL_CHUNKS)),
         ]:
             fh.write(f"{kk} = {vv}\n")
 
@@ -393,6 +470,7 @@ def main():
     arts = lower_artifacts()
     arts.update(lower_device_artifacts(donate_caches=args.donate_caches))
     arts.update(lower_batched_artifacts())
+    arts.update(lower_prefill_artifacts())
     arts.update(lower_sampler_artifacts())
     for name, text in arts.items():
         path = os.path.join(args.out_dir, f"{name}.hlo.txt")

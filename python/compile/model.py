@@ -477,6 +477,89 @@ def batched_experts_dedup(w1s, v1s, w2s, moe_in, expert_ids, sel, slot_w):
 
 
 # --------------------------------------------------------------------------
+# Chunked prefill decomposition (§Perf: mixed prefill/decode iterations).
+#
+# Decode evaluates one token per forward pass; a prompt evaluated that way
+# pays a full per-layer dispatch + router d2h + all-reduce round PER
+# PROMPT TOKEN. These roles carry a chunk dim T instead, so T consecutive
+# prompt positions of ONE request share each layer's dispatches: the
+# residual stream is [T, D], the K/V append writes T rows at
+# positions pos..pos+T in one dynamic-update-slice, and attention applies
+# a causal mask over the chunk (row t attends cache positions <= pos + t).
+#
+# The chunk chains off the SAME per-request [Hkv, S, hd] cache buffers the
+# decode roles use (`DeviceState`), so a request prefilled in chunks is
+# bit-identical to one prefilled serially — row t's attention sees exactly
+# the keys a serial step at pos + t would see, because rows t' > t are
+# masked out and rows t' <= t were appended by the same bulk write.
+#
+# Roles whose math is row-wise (`embed_step`, `qkv_step`, `moe_norm_step`,
+# `residual_add_step`) and the per-row router/experts
+# (`batched_router_step`, `batched_experts_forward`) are simply lowered
+# again at [T, ...] shapes by aot.py; only the appends and attention below
+# need chunk-specific formulations. Pure-prefill chunks never touch
+# lm_head — no prompt position ever produces logits (the LAST prompt
+# token runs on the decode path, which samples).
+#
+# Ragged tails (prompt remainder < T) are padded with token 0: padding
+# rows write garbage K/V at positions pos+real..pos+T, but every one of
+# those positions is overwritten by its real token's append before any
+# query attends to it (causal mask), and padding rows' expert weights are
+# zeroed by the coordinator. Equivalence is asserted by
+# test_model.py::TestPrefillDecomposition and end-to-end by
+# rust/tests/integration_cluster.rs.
+# --------------------------------------------------------------------------
+
+
+def prefill_k_append_step(k_cache, qkv, pos, cfg: NanoConfig = CFG):
+    """Write a chunk's K rows into the cache in ONE update.
+
+    Args:
+      k_cache: [Hkv, S, hd]; qkv: [T, (H+2Hkv)*hd] the chunk's QKV
+      projections; pos: i32[] sequence position of the chunk's first row.
+    Returns the cache with rows pos..pos+T replaced.
+    """
+    nh, nk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    t = qkv.shape[0]
+    k_new = qkv[:, nh * hd : nh * hd + nk * hd].reshape(t, nk, hd)
+    return jax.lax.dynamic_update_slice(
+        k_cache, jnp.transpose(k_new, (1, 0, 2)), (0, pos, 0)
+    )
+
+
+def prefill_v_append_step(v_cache, qkv, pos, cfg: NanoConfig = CFG):
+    """Write a chunk's V rows into the cache in ONE update."""
+    nh, nk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    t = qkv.shape[0]
+    v_new = qkv[:, nh * hd + nk * hd :].reshape(t, nk, hd)
+    return jax.lax.dynamic_update_slice(
+        v_cache, jnp.transpose(v_new, (1, 0, 2)), (0, pos, 0)
+    )
+
+
+def prefill_attn_out_step(wo, x, qkv, k_cache, v_cache, pos, cfg: NanoConfig = CFG):
+    """GQA attention for a T-row chunk over ONE request's (already
+    appended) caches, causal within the chunk: -> h [T, D].
+
+    Row t attends cache positions <= pos + t — exactly the window a
+    serial decode step at position pos + t would see.
+    """
+    nh, nk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    t = x.shape[0]
+    q = qkv[:, : nh * hd].reshape(t, nh, hd)
+    group = nh // nk
+    kq = jnp.repeat(k_cache, group, axis=0)  # [H, S, hd]
+    vq = jnp.repeat(v_cache, group, axis=0)
+    scores = jnp.einsum("thd,hsd->ths", q, kq) / jnp.sqrt(float(hd))
+    rows = pos + jnp.arange(t, dtype=jnp.int32)  # [T] absolute positions
+    mask = jnp.arange(cfg.max_seq)[None, :] <= rows[:, None]  # [T, S]
+    scores = jnp.where(mask[:, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    attn = jnp.einsum("ths,hsd->thd", probs, vq).reshape(t, nh * hd)
+    return x + attn @ wo
+
+
+# --------------------------------------------------------------------------
 # Device-side sampling (§Perf: the last [B, V] download on the token loop).
 #
 # Until these roles, every decode iteration downloaded the full [B, V]

@@ -397,6 +397,97 @@ class TestBatchedDecomposition:
         np.testing.assert_allclose(p4[:2], p2, rtol=1e-5, atol=1e-6)
 
 
+class TestPrefillDecomposition:
+    """The chunked `dev_p{T}_*` roles must reproduce T serial decode
+    steps exactly — the numerical contract behind mixed prefill/decode
+    iterations (a request prefilled in chunks is bit-identical to one
+    prefilled serially)."""
+
+    @pytest.mark.parametrize("t", [4, 8])
+    def test_chunk_equals_serial_steps(self, params, t):
+        rs = np.random.RandomState(31)
+        l = 0
+        ln1, wqkv, wo, ln2, wr = (
+            params[f"layer{l}.{n}"] for n in ["ln1", "wqkv", "wo", "ln2", "wr"]
+        )
+        shape = (CFG.n_kv_heads, CFG.max_seq, CFG.head_dim)
+        kc0 = jnp.asarray(rs.randn(*shape).astype(np.float32)) * 0.1
+        vc0 = jnp.asarray(rs.randn(*shape).astype(np.float32)) * 0.1
+        x = jnp.asarray(rs.randn(t, CFG.d_embed).astype(np.float32))
+        p0 = 5
+
+        # Chunked pipeline: one bulk append, one masked attention.
+        qkv = M.qkv_step(ln1, wqkv, x)
+        kc_c = M.prefill_k_append_step(kc0, qkv, jnp.int32(p0))
+        vc_c = M.prefill_v_append_step(vc0, qkv, jnp.int32(p0))
+        h_c = M.prefill_attn_out_step(wo, x, qkv, kc_c, vc_c, jnp.int32(p0))
+        moe_c = M.moe_norm_step(ln2, h_c)
+        packed_c = M.batched_router_step(wr, moe_c)
+        assert packed_c.shape == (t, 2 * CFG.top_k)
+
+        # Serial batch-1 pipeline: T decode steps advancing the cache.
+        kc_s, vc_s = kc0, vc0
+        for i in range(t):
+            xb = x[i : i + 1]
+            pos = jnp.int32(p0 + i)
+            qkv_b = M.qkv_step(ln1, wqkv, xb)
+            kc_s = M.k_append_step(kc_s, qkv_b, pos)
+            vc_s = M.v_append_step(vc_s, qkv_b, pos)
+            h_b = M.attn_out_step(wo, xb, qkv_b, kc_s, vc_s, pos)
+            np.testing.assert_allclose(h_c[i : i + 1], h_b, rtol=1e-5, atol=1e-6)
+            moe_b = M.moe_norm_step(ln2, h_b)
+            packed_b = M.router_step(wr, moe_b)
+            np.testing.assert_allclose(packed_c[i], packed_b, rtol=1e-5, atol=1e-6)
+        # The bulk append leaves the cache exactly where T serial appends
+        # would (same rows written, same values).
+        np.testing.assert_allclose(kc_c, kc_s, rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(vc_c, vc_s, rtol=1e-6, atol=1e-7)
+
+    def test_ragged_tail_padding_is_harmless(self, params):
+        """A padded tail chunk (real rows < T) must produce the same
+        outputs on the real rows as an unpadded evaluation, and the
+        padding rows' cache writes must sit strictly at positions a
+        later real append overwrites before any query attends there."""
+        rs = np.random.RandomState(32)
+        l = 1
+        ln1, wqkv, wo, ln2, wr = (
+            params[f"layer{l}.{n}"] for n in ["ln1", "wqkv", "wo", "ln2", "wr"]
+        )
+        shape = (CFG.n_kv_heads, CFG.max_seq, CFG.head_dim)
+        kc0 = jnp.asarray(rs.randn(*shape).astype(np.float32)) * 0.1
+        vc0 = jnp.asarray(rs.randn(*shape).astype(np.float32)) * 0.1
+        t, real, p0 = 8, 5, 3
+        x_real = jnp.asarray(rs.randn(real, CFG.d_embed).astype(np.float32))
+        # Padding rows feed token-0 embeddings in the rust driver; any
+        # value works for the invariant — use zeros.
+        x_pad = jnp.concatenate([x_real, jnp.zeros((t - real, CFG.d_embed), jnp.float32)])
+
+        qkv_p = M.qkv_step(ln1, wqkv, x_pad)
+        kc_p = M.prefill_k_append_step(kc0, qkv_p, jnp.int32(p0))
+        vc_p = M.prefill_v_append_step(vc0, qkv_p, jnp.int32(p0))
+        h_p = M.prefill_attn_out_step(wo, x_pad, qkv_p, kc_p, vc_p, jnp.int32(p0))
+
+        # Serial reference over just the real rows.
+        kc_s, vc_s = kc0, vc0
+        for i in range(real):
+            xb = x_real[i : i + 1]
+            pos = jnp.int32(p0 + i)
+            qkv_b = M.qkv_step(ln1, wqkv, xb)
+            kc_s = M.k_append_step(kc_s, qkv_b, pos)
+            vc_s = M.v_append_step(vc_s, qkv_b, pos)
+            h_b = M.attn_out_step(wo, xb, qkv_b, kc_s, vc_s, pos)
+            np.testing.assert_allclose(h_p[i : i + 1], h_b, rtol=1e-5, atol=1e-6)
+        # Cache rows 0..p0+real are identical to the serial reference;
+        # the padding writes land ONLY at p0+real..p0+t (positions the
+        # next real append overwrites before anything attends there).
+        np.testing.assert_allclose(
+            kc_p[:, : p0 + real], kc_s[:, : p0 + real], rtol=1e-6, atol=1e-7
+        )
+        np.testing.assert_allclose(
+            kc_p[:, p0 + t :], kc_s[:, p0 + t :], rtol=1e-6, atol=1e-7
+        )
+
+
 class TestAotPipeline:
     def test_lower_all_artifacts(self):
         arts = aot.lower_artifacts()
@@ -435,6 +526,34 @@ class TestAotPipeline:
             "dev_attn_out", "dev_moe_norm", "dev_router", "dev_residual",
             "dev_experts_ns4", "dev_experts_ns8", "dev_lm_head",
         }
+        for name, text in arts.items():
+            assert text.startswith("HloModule"), f"{name} not HLO text"
+            mod = xc._xla.hlo_module_from_text(text)
+            assert mod is not None, name
+            root = [ln for ln in text.splitlines() if "ROOT" in ln]
+            assert root and "tuple(" not in root[-1], f"{name} root is a tuple"
+
+    def test_prefill_artifacts_lower_untupled(self):
+        """The dev_p{T}_* chunked prefill family: complete per chunk
+        size, ARRAY roots, and — deliberately — NO lm_head role (prompt
+        positions never produce logits)."""
+        from jax._src.lib import xla_client as xc
+
+        arts = aot.lower_prefill_artifacts()
+        roles = [
+            "embed", "qkv", "k_append", "v_append", "attn_out",
+            "moe_norm", "router", "residual",
+        ]
+        expect = set()
+        for t in aot.PREFILL_CHUNKS:
+            expect |= {f"dev_p{t}_{r}" for r in roles}
+            expect |= {
+                f"dev_p{t}_experts_el{el}_ns{ns}"
+                for el in (8, 16)
+                for ns in (CFG.top_k, NUM_SLOTS)
+            }
+        assert set(arts) == expect
+        assert not any("lm_head" in n for n in arts)
         for name, text in arts.items():
             assert text.startswith("HloModule"), f"{name} not HLO text"
             mod = xc._xla.hlo_module_from_text(text)

@@ -36,6 +36,8 @@ pub fn run(args: &mut Args) -> Result<()> {
     // Force the host-side reference sampler (downloads the full [1, V]
     // logits per token; the default samples on device).
     let host_sampler = args.flag("host-sampler");
+    // Chunked-prefill cap (1 = serial token-by-token prompt evaluation).
+    let prefill_chunk = args.usize_or("prefill-chunk", 32)?;
     let dir = artifacts_dir(args);
     args.finish()?;
 
@@ -45,6 +47,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     cfg.network = network;
     cfg.device_resident = !host_path;
     cfg.host_sampler = host_sampler;
+    cfg.prefill_chunk = prefill_chunk;
     cfg.recv_timeout = Duration::from_secs(recv_timeout.max(1));
 
     eprintln!("starting {nodes}-node live cluster (compiling artifacts on every node)...");

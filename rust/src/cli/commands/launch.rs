@@ -26,6 +26,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     let prompt_tokens = args.usize_or("prompt-tokens", 16)?;
     let gen_tokens = args.usize_or("gen-tokens", 32)?;
     let concurrency = args.usize_or("concurrency", 2)?;
+    let prefill_chunk = args.usize_or("prefill-chunk", 32)?;
     let policy = args.str_or("policy", "round-robin");
     let seed = args.u64_or("seed", 0xD8B2)?;
     let recv_timeout_flag = args.get("recv-timeout-secs");
@@ -91,6 +92,8 @@ pub fn run(args: &mut Args) -> Result<()> {
             .arg(gen_tokens.to_string())
             .arg("--concurrency")
             .arg(concurrency.to_string())
+            .arg("--prefill-chunk")
+            .arg(prefill_chunk.to_string())
             .arg("--policy")
             .arg(&policy)
             .arg("--seed")

@@ -57,6 +57,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     let prompt_tokens = args.usize_or("prompt-tokens", 16)?;
     let gen_tokens = args.usize_or("gen-tokens", 32)?;
     let concurrency = args.usize_or("concurrency", 2)?;
+    let prefill_chunk = args.usize_or("prefill-chunk", 32)?;
     let policy = parse_policy(args)?;
     let sampling = parse_sampling(args, gen_tokens)?;
     let host_path = args.flag("host-path");
@@ -89,6 +90,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     cfg.recv_timeout = hosts.recv_timeout;
     cfg.max_active = concurrency;
     cfg.policy = policy;
+    cfg.prefill_chunk = prefill_chunk;
     cfg.trace = trace_out;
 
     eprintln!(

@@ -7,7 +7,14 @@
 //! runs the node mesh over real loopback sockets; `--host-sampler`
 //! forces the `[B, V]` logits download + host reference sampler (the
 //! default samples on device — `d2h_bytes_per_token` in the JSON
-//! report meters the collapse).
+//! report meters the collapse); `--prefill-chunk` caps the chunked
+//! prefill size (1 = serial token-by-token prompts — the JSON report's
+//! `prefill_tps` / `prefill_exec_calls_per_token` meter the difference).
+//! `--prompt-tokens` / `--gen-tokens` take a single length or a
+//! comma-separated cycle ("96,4,4": request i gets the i-mod-3rd
+//! length) so one invocation can mix a long prompt into a
+//! short-request stream — the workload the chunked-prefill decode-tail
+//! bench drives.
 
 use anyhow::Result;
 use std::time::{Duration, Instant};
@@ -26,9 +33,10 @@ use crate::util::stats::Summary;
 pub fn run(args: &mut Args) -> Result<()> {
     let nodes = args.usize_or("nodes", 2)?;
     let n_requests = args.usize_or("requests", 4)?;
-    let prompt_tokens = args.usize_or("prompt-tokens", 16)?;
-    let gen_tokens = args.usize_or("gen-tokens", 32)?;
+    let prompt_cycle = parse_len_cycle("prompt-tokens", &args.str_or("prompt-tokens", "16"))?;
+    let gen_cycle = parse_len_cycle("gen-tokens", &args.str_or("gen-tokens", "32"))?;
     let concurrency = args.usize_or("concurrency", 2)?;
+    let prefill_chunk = args.usize_or("prefill-chunk", 32)?;
     let policy = parse_policy(args)?;
     let transport = match args.str_or("transport", "inproc").as_str() {
         "inproc" | "in-process" => TransportKind::InProcess,
@@ -43,7 +51,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     let stream = args.flag("stream");
     let json = args.flag("json");
     let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
-    let sampling = parse_sampling(args, gen_tokens)?;
+    let sampling = parse_sampling(args, gen_cycle[0])?;
     let dir = artifacts_dir(args);
     args.finish()?;
     anyhow::ensure!(n_requests >= 1, "--requests must be >= 1");
@@ -57,6 +65,7 @@ pub fn run(args: &mut Args) -> Result<()> {
     cfg.recv_timeout = Duration::from_secs(recv_timeout.max(1));
     cfg.max_active = concurrency;
     cfg.policy = policy;
+    cfg.prefill_chunk = prefill_chunk;
     cfg.transport = transport;
     cfg.trace = trace_out;
 
@@ -75,9 +84,12 @@ pub fn run(args: &mut Args) -> Result<()> {
     let t_all = Instant::now();
     let mut handles = Vec::with_capacity(n_requests);
     for i in 0..n_requests {
+        let prompt_tokens = prompt_cycle[i % prompt_cycle.len()];
+        let gen_tokens = gen_cycle[i % gen_cycle.len()];
         let mut req = Request::synthetic(i as u64, prompt_tokens, 512, gen_tokens);
         let mut s = sampling.clone();
         s.seed ^= i as u64; // per-request sampler stream
+        s.max_new_tokens = gen_tokens;
         req.sampling = s;
         handles.push(cluster.submit(req)?);
     }
@@ -133,6 +145,27 @@ pub fn run(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--prompt-tokens` / `--gen-tokens`: a single length ("16") or
+/// a comma-separated cycle ("96,4,4") assigned round-robin across
+/// requests.
+fn parse_len_cycle(flag: &str, spec: &str) -> Result<Vec<usize>> {
+    let cycle: Vec<usize> = spec
+        .split(',')
+        .map(|v| {
+            let v = v.trim();
+            v.parse::<usize>().map_err(|_| {
+                anyhow::anyhow!("--{flag} expects integers, got '{v}' in '{spec}'")
+            })
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!cycle.is_empty(), "--{flag} must list at least one length");
+    anyhow::ensure!(
+        cycle.iter().all(|&t| t >= 1),
+        "--{flag} lengths must be >= 1 (got '{spec}')"
+    );
+    Ok(cycle)
+}
+
 /// Hand-rolled JSON (the offline crate cache has no serde): one record
 /// per request plus the aggregates, parsed by CI's multiproc-smoke job.
 /// Shared with `apple-moe client` (the BENCH_remote_serve.json report
@@ -150,8 +183,10 @@ pub(crate) fn json_report(
             s.push(',');
         }
         let d = &r.metrics.decode;
+        let p = &r.metrics.prefill;
         s.push_str(&format!(
             "{{\"id\":{},\"ttft_s\":{:.6},\"queueing_s\":{:.6},\"latency_s\":{:.6},\
+             \"prefill_tps\":{:.3},\"prefill_exec_calls_per_token\":{:.2},\
              \"decode_tps\":{:.3},\"generated\":{},\"net_bytes\":{},\
              \"mean_occupancy\":{:.3},\"exec_calls_per_token\":{:.2},\
              \"d2h_bytes_per_token\":{:.1}}}",
@@ -159,9 +194,11 @@ pub(crate) fn json_report(
             r.metrics.ttft_s(),
             r.metrics.queueing_s(),
             r.metrics.latency_s(),
+            p.tokens_per_sec(),
+            p.exec_calls_per_token(),
             d.tokens_per_sec(),
             r.generated.len(),
-            d.net_bytes + r.metrics.prefill.net_bytes,
+            d.net_bytes + p.net_bytes,
             d.mean_batch_occupancy(),
             d.exec_calls_per_token(),
             d.d2h_bytes_per_token(),
@@ -179,11 +216,13 @@ pub(crate) fn json_report(
     // BENCH_*.json trajectory tracks p99s and bytes-on-the-wire, not
     // just means.
     let mut agg = PhaseMetrics::default();
+    let mut agg_prefill = PhaseMetrics::default();
     let mut ttfts: Vec<f64> = Vec::with_capacity(results.len());
     let mut queues: Vec<f64> = Vec::with_capacity(results.len());
     let (mut net_msgs, mut net_bytes) = (0u64, 0u64);
     for r in results {
         agg.merge(&r.metrics.decode);
+        agg_prefill.merge(&r.metrics.prefill);
         ttfts.push(r.metrics.ttft_s());
         queues.push(r.metrics.queueing_s());
         net_msgs += r.metrics.prefill.net_msgs + r.metrics.decode.net_msgs;
@@ -193,10 +232,13 @@ pub(crate) fn json_report(
     queues.sort_by(f64::total_cmp);
     s.push_str(&format!(
         "],\"nodes\":{nodes},\"concurrency\":{concurrency},\"wall_s\":{wall_s:.6},\
-         \"aggregate_tps\":{:.3},\"net_msgs_total\":{net_msgs},\
+         \"aggregate_tps\":{:.3},\"prefill_tps\":{:.3},\
+         \"prefill_exec_calls_per_token\":{:.2},\"net_msgs_total\":{net_msgs},\
          \"net_bytes_total\":{net_bytes},\"token_latency_s\":{},\"comm_s\":{},\
          \"d2h_s\":{},\"ttft_s\":{},\"queueing_s\":{},\"mean_occupancy\":{:.3}}}",
         if wall_s > 0.0 { total as f64 / wall_s } else { 0.0 },
+        agg_prefill.tokens_per_sec(),
+        agg_prefill.exec_calls_per_token(),
         quantile_json(agg.token_latency_quantiles_s()),
         quantile_json(agg.comm_quantiles_s()),
         quantile_json(agg.d2h_quantiles_s()),
@@ -228,6 +270,16 @@ mod tests {
     use crate::metrics::RunMetrics;
 
     #[test]
+    fn len_cycle_parses_single_and_mixed() {
+        assert_eq!(parse_len_cycle("prompt-tokens", "16").unwrap(), vec![16]);
+        assert_eq!(parse_len_cycle("prompt-tokens", "96,4,4").unwrap(), vec![96, 4, 4]);
+        assert_eq!(parse_len_cycle("gen-tokens", " 8 , 2 ").unwrap(), vec![8, 2]);
+        assert!(parse_len_cycle("prompt-tokens", "").is_err());
+        assert!(parse_len_cycle("prompt-tokens", "4,zero").is_err());
+        assert!(parse_len_cycle("gen-tokens", "4,0").is_err());
+    }
+
+    #[test]
     fn json_report_shape() {
         let m = RunMetrics {
             queueing_ns: 5_000_000,
@@ -248,6 +300,8 @@ mod tests {
             "\"ttft_s\":0.100000",
             "\"queueing_s\":0.005000",
             "\"latency_s\":0.900000",
+            "\"prefill_tps\":",
+            "\"prefill_exec_calls_per_token\":",
             "\"decode_tps\":",
             "\"net_bytes\":",
             "\"generated\":3",

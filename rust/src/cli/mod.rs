@@ -190,6 +190,55 @@
 //! `d2h_bytes_per_token` in `serve --json` (CI's BENCH_sampler.json
 //! compares device vs `--host-sampler` on every push).
 //!
+//! ## Chunked prefill & mixed iterations
+//!
+//! With the prefill artifact family present (`dev_p{T}_*`, T ∈ {8, 32},
+//! emitted by `aot.py::lower_prefill_artifacts`; `prefill_chunk_max`
+//! in manifest.txt), prompts stop paying one full per-layer dispatch
+//! train per token: a `[T, D]` chunk evaluates T prompt positions
+//! through ONE train — causal attention over the chunk, bulk K/V
+//! append, `[T, 2K]` router top-k, experts over all rows — and the
+//! data plane carries one `[T, D]` payload per exchange instead of T.
+//! Prompt-phase `exec_calls_per_token` drops by ~T (≥4× is the CI
+//! floor); chunks never touch lm_head (nothing samples mid-prompt).
+//!
+//! Scheduling is Sarathi-style MIXED iterations: each scheduler pass
+//! runs at most ONE prefill chunk — from the longest-waiting admitted
+//! prompt — and then the decode batch as usual, so a 2k-token prompt
+//! neither monopolizes iterations nor starves anyone's decode. The
+//! chunk decision replicates to followers in the `OP_BATCH` prefill
+//! descriptor (decentralized) or rides the scatter header's
+//! `SCATTER_PREFILL_ROWS` bit (centralized).
+//!
+//! `--prefill-chunk N` (on `generate`/`serve`/`node`/`launch`, default
+//! 32) caps the chunk size; the scheduler snaps to the largest
+//! compiled `dev_p{T}` ≤ N and pads the final ragged tail (real-row
+//! count rides the wire, so padding rows never append K/V). `1` forces
+//! the serial token-by-token reference path. Chunk-size choice is the
+//! classic Sarathi trade: bigger chunks amortize more dispatches and
+//! finish the prompt in fewer iterations (better TTFT for the long
+//! request), but each mixed iteration grows by one chunk's wall time,
+//! which is what bounds OTHER requests' decode latency — hence the cap
+//! rather than always-32. TTFT caveats: a chunked prompt's TTFT
+//! improves roughly T-fold over serial, but decode requests sharing
+//! the cluster see per-token latency bounded (≤~1.5× the no-long-
+//! prompt baseline), not improved — the chunk still serializes into
+//! the single fork-join pipeline. Chunked prefill is bit-identical to
+//! serial: chunks only append K/V, and the LAST prompt token always
+//! runs on the decode path to produce logits and sample (asserted
+//! across both topologies × 1/2 nodes by `integration_cluster`).
+//!
+//! The split is metered: `prefill_tps` and
+//! `prefill_exec_calls_per_token` per request and aggregate in
+//! `serve --json` / `client --json` (prompt tokens no longer pollute
+//! decode tok/s). CI's BENCH_prefill.json serves a 96+4+4 prompt mix
+//! and gates the ≥4× dispatch amortization, the long-prompt TTFT win
+//! vs `--prefill-chunk 1`, and the bounded decode p99 on every push.
+//! The simulator cross-validates the schedule: `SimParams::chunked(N)`
+//! mirrors the live snap-to-artifact semantics with per-chunk dispatch
+//! accounting (`scheduler::sim` tests pin both the amortization and
+//! the bounded-decode-latency behavior).
+//!
 //! # Observability
 //!
 //! Three complementary views into a running cluster, all compiled in

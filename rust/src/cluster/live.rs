@@ -94,7 +94,7 @@ use crate::network::transport::{
 };
 use crate::obs;
 use crate::runtime::nano::resident_index;
-use crate::runtime::{BatchedRun, DeviceSample, DeviceState, HostTensor, NanoRuntime};
+use crate::runtime::{BatchedRun, DeviceSample, DeviceState, HostTensor, NanoRuntime, PrefillRun};
 
 /// Default bound on any single wire wait (`LiveConfig::recv_timeout`,
 /// `[cluster] recv_timeout_secs` in hosts.toml).
@@ -104,6 +104,7 @@ pub const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(120);
 pub(crate) use crate::network::tags::{
     OP_ADMIT, OP_BATCH, OP_CANCEL, OP_HEARTBEAT, OP_SHUTDOWN, OP_STEP, OP_TRACE_FLUSH, PHASE_CTRL,
     PHASE_FB, PHASE_GATHER, PHASE_PARTIAL, PHASE_SCATTER, PHASE_TRACE, SCATTER_HEARTBEAT,
+    SCATTER_PREFILL_ROWS,
 };
 
 /// Poll interval while a node idles between requests (waiting for the
@@ -158,6 +159,15 @@ pub struct LiveConfig {
     pub max_active: usize,
     /// Which in-flight request decodes next each iteration.
     pub policy: SchedPolicy,
+    /// Chunked-prefill cap (`--prefill-chunk`): prompt positions are
+    /// evaluated in `[T, D]` chunks of up to this many tokens per
+    /// scheduler iteration — the largest compiled `dev_p{T}_*` chunk
+    /// that fits, Sarathi-style: at most ONE chunk rides alongside each
+    /// decode batch, so a long prompt admits without stalling everyone
+    /// else's decode. `0` or `1` forces serial token-by-token prefill;
+    /// the scheduler also falls back to serial when the artifacts
+    /// predate the prefill family (`prefill_chunk_max = 0`).
+    pub prefill_chunk: usize,
     /// Fabric backend for the node threads.
     pub transport: TransportKind,
     /// Record execution spans (`crate::obs`) on every node and, on
@@ -182,6 +192,7 @@ impl LiveConfig {
             recv_timeout: DEFAULT_RECV_TIMEOUT,
             max_active: 2,
             policy: SchedPolicy::RoundRobin,
+            prefill_chunk: 32,
             transport: TransportKind::InProcess,
             trace: None,
         }
@@ -957,21 +968,40 @@ impl NodeWorker {
             }
             let _sp = obs::span("sched.iteration").arg("active", active.len() as u64);
 
-            // 4. One iteration. Continuous batching: every active
-            //    request advances together through ONE shared forward
-            //    pass (the participant list replicates to followers).
-            //    Serial fallback (one request, host path, or
-            //    pre-batching artifacts): pick one request under the
-            //    policy and advance it one token.
-            if self.batched_ok(active) {
+            // 4. One iteration. Mixed prefill/decode (Sarathi-style):
+            //    at most ONE prefill chunk — from the longest-waiting
+            //    admitted prompt — rides alongside the decode batch, so
+            //    a long prompt's positions share each layer's dispatch
+            //    train instead of paying it per token, while everyone
+            //    else's decode still advances every iteration.
+            //    Continuous batching: the remaining active requests
+            //    advance together through ONE shared forward pass (the
+            //    participant list + prefill descriptor replicate to
+            //    followers). Serial fallback (one decode-phase request,
+            //    host path, or pre-chunking artifacts): pick one
+            //    request under the policy and advance it one token.
+            let pre = self.select_prefill(active);
+            if pre.is_some() || self.batched_ok(active) {
                 if self.cfg.topology == Topology::Decentralized {
-                    let mut body = (active.len() as u16).to_le_bytes().to_vec();
-                    for a in active.iter() {
-                        body.extend_from_slice(&a.seq.to_le_bytes());
+                    let pi = pre.map(|(i, _, _)| i);
+                    let decoders = active.len() - pi.is_some() as usize;
+                    let mut body = (decoders as u16).to_le_bytes().to_vec();
+                    for (i, a) in active.iter().enumerate() {
+                        if Some(i) != pi {
+                            body.extend_from_slice(&a.seq.to_le_bytes());
+                        }
+                    }
+                    if let Some((i, chunk, real)) = pre {
+                        body.extend_from_slice(&active[i].seq.to_le_bytes());
+                        body.extend_from_slice(&(chunk as u16).to_le_bytes());
+                        body.extend_from_slice(&(real as u16).to_le_bytes());
                     }
                     self.ctrl(OP_BATCH, &body)?;
                 }
-                self.batch_iteration(active)?;
+                if let Some((i, chunk, real)) = pre {
+                    self.prefill_chunk_step(&mut active[i], chunk, real)?;
+                }
+                self.batch_iteration(active, pre.map(|(i, _, _)| i))?;
                 let mut i = 0;
                 while i < active.len() {
                     if active[i].finish.is_some() {
@@ -1089,6 +1119,44 @@ impl NodeWorker {
     /// and the host reference path always decodes serially.)
     fn batched_ok(&self, active: &[ActiveRequest]) -> bool {
         active.len() > 1 && self.use_device() && self.rt.has_batched_path()
+    }
+
+    /// Pick this iteration's prefill chunk (Sarathi-style mixed
+    /// iterations): at most ONE chunk per iteration, from the
+    /// longest-waiting admitted prompt (`active` is admission-ordered,
+    /// so the first mid-prompt request wins). Returns
+    /// `(index, chunk, real_rows)` — the largest compiled `dev_p{T}_*`
+    /// chunk that fits the remaining prompt and the `--prefill-chunk`
+    /// cap, padding the smallest chunk for short tails.
+    ///
+    /// Only positions `0..prompt.len()-1` ever enter a chunk: the LAST
+    /// prompt token always runs on the decode path, whose forward
+    /// produces logits and samples — which is what keeps chunked
+    /// prefill bit-identical to serial (the chunk only appends K/V).
+    fn select_prefill(&self, active: &[ActiveRequest]) -> Option<(usize, usize, usize)> {
+        if self.cfg.prefill_chunk < 2 || !self.use_device() || !self.rt.has_prefill_path() {
+            return None;
+        }
+        let smallest = *self.rt.manifest.prefill_chunks().first()?;
+        for (i, a) in active.iter().enumerate() {
+            if a.finish.is_some() || !matches!(a.state, DecodeState::Dev(_)) {
+                continue;
+            }
+            // Chunkable prompt positions left (last prompt token
+            // excluded — it decodes).
+            let remaining = a.req.prompt.len().saturating_sub(1).saturating_sub(a.pos);
+            if remaining < 2 {
+                continue; // a lone position is cheaper serial than padded
+            }
+            let cap = self.cfg.prefill_chunk.min(remaining);
+            let chunk = self.rt.prefill_chunk_for(cap).unwrap_or(smallest);
+            if a.pos + chunk > self.rt.manifest.max_seq {
+                continue; // no room to pad near max_seq: serial steps
+            }
+            let real = remaining.min(chunk).min(self.cfg.prefill_chunk);
+            return Some((i, chunk, real));
+        }
+        None
     }
 
     /// Replicate the step decision (decentralized) and run it locally,
@@ -1308,32 +1376,75 @@ impl NodeWorker {
                     }
                 }
                 OP_BATCH => {
-                    // One continuously-batched iteration: the packed
-                    // participant list must mirror this node's active
-                    // order exactly (admissions/cancels replicate in
-                    // order, so it does unless the planes desynced).
+                    // One mixed scheduler iteration: the packed decode
+                    // participant list (u16 count + u16 seq each), plus
+                    // an optional trailing prefill descriptor (u16 seq,
+                    // u16 chunk, u16 real rows). Participants must
+                    // mirror this node's active order — minus the
+                    // prefill row — exactly (admissions/cancels
+                    // replicate in order, so they do unless the planes
+                    // desynced).
                     anyhow::ensure!(body.len() >= 2, "short batch message");
                     let nr =
                         u16::from_le_bytes(body[0..2].try_into().expect("2-byte slice")) as usize;
-                    anyhow::ensure!(
-                        body.len() == 2 + 2 * nr,
-                        "batch message length mismatch"
-                    );
+                    let pre = match body.len() {
+                        n if n == 2 + 2 * nr => None,
+                        n if n == 2 + 2 * nr + 6 => {
+                            let o = 2 + 2 * nr;
+                            let two = |a: usize| -> u16 {
+                                u16::from_le_bytes(
+                                    body[a..a + 2].try_into().expect("2-byte slice"),
+                                )
+                            };
+                            Some((two(o), two(o + 2) as usize, two(o + 4) as usize))
+                        }
+                        _ => anyhow::bail!("batch message length mismatch"),
+                    };
                     let seqs: Vec<u16> = (0..nr)
                         .map(|r| {
                             let b = body[2 + 2 * r..4 + 2 * r].try_into().expect("2-byte slice");
                             u16::from_le_bytes(b)
                         })
                         .collect();
+                    let pi = match pre {
+                        None => None,
+                        Some((pseq, chunk, real)) => {
+                            anyhow::ensure!(
+                                self.rt.manifest.prefill_chunks().contains(&chunk)
+                                    && (1..=chunk).contains(&real),
+                                "node {}: malformed prefill descriptor \
+                                 (chunk {chunk}, real {real})",
+                                self.node
+                            );
+                            let pi = active
+                                .iter()
+                                .position(|a| a.seq == pseq)
+                                .with_context(|| {
+                                    format!(
+                                        "node {}: prefill chunk for unknown request seq {pseq}",
+                                        self.node
+                                    )
+                                })?;
+                            Some(pi)
+                        }
+                    };
+                    let expect: Vec<u16> = active
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| Some(*i) != pi)
+                        .map(|(_, a)| a.seq)
+                        .collect();
                     anyhow::ensure!(
-                        seqs.len() == active.len()
-                            && active.iter().zip(&seqs).all(|(a, &s)| a.seq == s),
+                        seqs == expect,
                         "node {}: batch participants desynced from the admission order",
                         self.node
                     );
                     let _sp =
                         obs::span("sched.iteration").arg("active", active.len() as u64);
-                    self.batch_iteration(&mut active)?;
+                    if let (Some(pi), Some((_, chunk, real))) = (pi, pre) {
+                        self.prefill_chunk_step(&mut active[pi], chunk, real)?;
+                    }
+                    self.batch_iteration(&mut active, pi)?;
                     active.retain(|a| a.finish.is_none());
                 }
                 OP_TRACE_FLUSH => self.ship_trace(),
@@ -1369,10 +1480,19 @@ impl NodeWorker {
             );
             let layer =
                 u32::from_le_bytes(env.payload[0..4].try_into().expect("4-byte slice")) as usize;
-            let rows =
-                u32::from_le_bytes(env.payload[4..8].try_into().expect("4-byte slice")) as usize;
+            let rows_field = u32::from_le_bytes(env.payload[4..8].try_into().expect("4-byte slice"));
+            // The high bit marks a chunked-prefill scatter: the row
+            // count is then a `dev_p{T}_*` chunk size (validated against
+            // the compiled family, not the decode-bucket bound).
+            let is_prefill = rows_field & SCATTER_PREFILL_ROWS != 0;
+            let rows = (rows_field & !SCATTER_PREFILL_ROWS) as usize;
+            let rows_ok = if is_prefill {
+                self.rt.manifest.prefill_chunks().contains(&rows)
+            } else {
+                (1..=64).contains(&rows)
+            };
             anyhow::ensure!(
-                (1..=64).contains(&rows) && env.payload.len() >= 8 + rows * d * 4,
+                rows_ok && env.payload.len() >= 8 + rows * d * 4,
                 "node {}: malformed scatter payload (rows {rows})",
                 self.node
             );
@@ -1393,11 +1513,14 @@ impl NodeWorker {
                 w[s] = f32::from_le_bytes(rest[o + 4..o + 8].try_into().expect("4-byte slice"));
             }
             // rows == 1 is the serial iteration; rows > 1 is one
-            // continuously-batched iteration — this node's experts run
-            // for the whole batch in ONE dispatch and reply with the
-            // [rows, D] partial in ONE message.
+            // continuously-batched iteration; a flagged scatter is one
+            // prefill chunk — either way this node's experts run for
+            // every row in ONE dispatch and reply with the [rows, D]
+            // partial in ONE message.
             let sp = obs::span("experts.dispatch").arg("layer", layer as u64);
-            let partial = if rows == 1 {
+            let partial = if is_prefill {
+                self.rt.node_experts_prefill(&self.experts, layer, rows, &moe_in, &idx, &w)?
+            } else if rows == 1 {
                 let idx: Vec<usize> = idx.iter().map(|&i| i as usize).collect();
                 self.rt.node_experts_direct(&self.experts, layer, &moe_in, &idx, &w)?
             } else {
@@ -1496,6 +1619,153 @@ impl NodeWorker {
         Ok(())
     }
 
+    // ---------------- the chunked-prefill iteration ----------
+
+    /// Run ONE prefill chunk for `a`: `real` prompt tokens at
+    /// `a.pos..a.pos+real`, evaluated through a `[chunk, D]` forward
+    /// pass ([`PrefillRun`]) that shares each layer's dispatch train
+    /// across all rows — the prompt phase pays ~1/chunk of the serial
+    /// per-token `exec_calls`, and the data plane carries ONE
+    /// `[chunk, D]` payload per exchange (all-reduce or scatter/gather,
+    /// the latter flagged with [`SCATTER_PREFILL_ROWS`]). Replicated on
+    /// every decentralized node from the `OP_BATCH` prefill descriptor;
+    /// centralized workers are driven by the flagged scatter alone.
+    ///
+    /// No logits and no sampling here: the last prompt token never
+    /// enters a chunk (see [`NodeWorker::select_prefill`]), so the only
+    /// state a chunk leaves behind is K/V appends — bit-identical to
+    /// `real` serial steps.
+    fn prefill_chunk_step(
+        &mut self,
+        a: &mut ActiveRequest,
+        chunk: usize,
+        real: usize,
+    ) -> Result<()> {
+        let n_layers = self.rt.manifest.n_layers;
+        let ns = self.plan_ns();
+        let mut b = TokenBreakdown::default();
+        self.rt.take_transfer_stats();
+        self.ep.take_stats();
+        anyhow::ensure!(
+            real >= 1 && a.pos + real < a.req.prompt.len(),
+            "prefill chunk overruns the prompt (pos {}, real {real}, prompt {})",
+            a.pos,
+            a.req.prompt.len()
+        );
+        let toks: Vec<u32> = a.req.prompt[a.pos..a.pos + real].to_vec();
+        let (seq, step0, pos) = (a.seq, a.step, a.pos);
+        let DecodeState::Dev(state) = &mut a.state else {
+            anyhow::bail!("chunked prefill on host state")
+        };
+
+        let t_embed = Instant::now();
+        let mut run = PrefillRun::begin(&self.rt, chunk, state, &toks, pos)?;
+        b.misc_ns += t_embed.elapsed().as_nanos() as u64;
+
+        for l in 0..n_layers {
+            let t_misc = Instant::now();
+            let sp = obs::span("attn.router").arg("layer", l as u64);
+            let draws = run.attn_router(&self.rt, l)?;
+            let mut plans = Vec::with_capacity(draws.len());
+            for (top_w, top_i) in draws {
+                plans.push(
+                    self.planner.plan_layer(&RouterDraw { selected: top_i, weights: top_w }),
+                );
+            }
+            drop(sp);
+            b.misc_ns += t_misc.elapsed().as_nanos() as u64;
+
+            match self.cfg.topology {
+                Topology::Decentralized => {
+                    let t_moe = Instant::now();
+                    let sp = obs::span("experts.dispatch").arg("layer", l as u64);
+                    let (idx, w) = self.batch_slots(&plans, self.node, chunk, ns);
+                    let partial = run.node_experts(&self.rt, &self.experts, l, &idx, &w)?;
+                    drop(sp);
+                    b.moe_ns += t_moe.elapsed().as_nanos() as u64;
+
+                    if self.ep.n_nodes() == 1 {
+                        let t_sum = Instant::now();
+                        run.finish_layer_device(&self.rt, &partial)?;
+                        b.misc_ns += t_sum.elapsed().as_nanos() as u64;
+                    } else {
+                        // ONE [chunk, D] all-reduce for the whole chunk.
+                        let t_comm = Instant::now();
+                        let mine = self.rt.download_f32(&partial)?;
+                        let summed = self.all_reduce(&mine, seq, l as u32, step0)?;
+                        b.comm_ns += t_comm.elapsed().as_nanos() as u64;
+
+                        let t_sum = Instant::now();
+                        run.finish_layer_host(&self.rt, &summed)?;
+                        b.misc_ns += t_sum.elapsed().as_nanos() as u64;
+                    }
+                }
+                Topology::Centralized => {
+                    let w_iter = self.next_wseq();
+                    let t_comm = Instant::now();
+                    if let Some(w_iter) = w_iter {
+                        let moe_in = run.moe_in_host(&self.rt)?; // [chunk, D] scatter
+                        self.scatter_rows(&plans, &moe_in, chunk, true, l as u32, w_iter)?;
+                    }
+                    b.comm_ns += t_comm.elapsed().as_nanos() as u64;
+
+                    let t_moe = Instant::now();
+                    let sp = obs::span("experts.dispatch").arg("layer", l as u64);
+                    let (idx, w) = self.batch_slots(&plans, 0, chunk, ns);
+                    let partial = run.node_experts(&self.rt, &self.experts, l, &idx, &w)?;
+                    drop(sp);
+                    b.moe_ns += t_moe.elapsed().as_nanos() as u64;
+
+                    match w_iter {
+                        None => {
+                            let t_sum = Instant::now();
+                            run.finish_layer_device(&self.rt, &partial)?;
+                            b.misc_ns += t_sum.elapsed().as_nanos() as u64;
+                        }
+                        Some(w_iter) => {
+                            let t_gather = Instant::now();
+                            let mine = self.rt.download_f32(&partial)?;
+                            let sum = self.gather_partials(mine, w_iter, l as u32)?;
+                            b.comm_ns += t_gather.elapsed().as_nanos() as u64;
+
+                            let t_sum = Instant::now();
+                            run.finish_layer_host(&self.rt, &sum)?;
+                            b.misc_ns += t_sum.elapsed().as_nanos() as u64;
+                        }
+                    }
+                }
+            }
+        }
+        drop(run); // release the DeviceState borrow before bookkeeping
+        note_transfers(&mut b, &self.rt);
+        note_wire(&mut b, self.ep.take_stats());
+
+        // Book a 1/real share per prompt position the chunk advanced:
+        // the prefill phase's per-token statistics (exec_calls_per_token
+        // above all) stay comparable to serial steps, and `batch_rows`
+        // records how many positions shared the dispatches.
+        let nd = real as u64;
+        let share = TokenBreakdown {
+            moe_ns: b.moe_ns / nd,
+            comm_ns: b.comm_ns / nd,
+            misc_ns: b.misc_ns / nd,
+            h2d_ns: b.h2d_ns / nd,
+            d2h_ns: b.d2h_ns / nd,
+            h2d_bytes: b.h2d_bytes / nd,
+            d2h_bytes: b.d2h_bytes / nd,
+            net_msgs: b.net_msgs / nd,
+            net_bytes: b.net_bytes / nd,
+            batch_rows: real as u32,
+            exec_calls: b.exec_calls / nd,
+        };
+        for _ in 0..real {
+            a.metrics.prefill.push(share);
+        }
+        a.pos += real;
+        a.step += 1;
+        Ok(())
+    }
+
     // ---------------- the continuously-batched iteration ----------
 
     /// One continuous-batching iteration over the packed participants
@@ -1511,12 +1781,16 @@ impl NodeWorker {
     /// largest fitting bucket and runs ONE shared forward (chunking
     /// only when the active count exceeds the largest compiled bucket;
     /// a lone runner takes the batch-1 path — the bucket floor).
-    fn batch_iteration(&mut self, active: &mut [ActiveRequest]) -> Result<()> {
+    ///
+    /// `skip` names the row a prefill chunk already advanced this
+    /// iteration (mixed iterations); it neither decides a token nor
+    /// joins the decode batch.
+    fn batch_iteration(&mut self, active: &mut [ActiveRequest], skip: Option<usize>) -> Result<()> {
         let mut runners: Vec<usize> = Vec::new();
         let mut tokens: Vec<u32> = Vec::new();
         let mut prefill: Vec<bool> = Vec::new();
         for (i, a) in active.iter_mut().enumerate() {
-            if a.finish.is_some() {
+            if Some(i) == skip || a.finish.is_some() {
                 continue;
             }
             if let Some((tok, is_prefill)) = self.decide_token(a) {
@@ -1525,12 +1799,9 @@ impl NodeWorker {
                 prefill.push(is_prefill);
             }
         }
-        let max_bucket = *self
-            .rt
-            .manifest
-            .batch_buckets()
-            .last()
-            .context("batched iteration without batched artifacts")?;
+        // Pre-batching artifacts degrade to size-1 groups (the batch-1
+        // path below) — mixed iterations still chunk the prompt.
+        let max_bucket = self.rt.manifest.batch_buckets().last().copied().unwrap_or(1);
         let mut c = 0;
         while c < runners.len() {
             let n = (runners.len() - c).min(max_bucket);
@@ -1663,7 +1934,7 @@ impl NodeWorker {
                     let t_comm = Instant::now();
                     if let Some(w_iter) = w_iter {
                         let moe_in = run.moe_in_host(&self.rt)?; // [B, D] scatter payload
-                        self.scatter_rows(&plans, &moe_in, bucket, l as u32, w_iter)?;
+                        self.scatter_rows(&plans, &moe_in, bucket, false, l as u32, w_iter)?;
                     }
                     b.comm_ns += t_comm.elapsed().as_nanos() as u64;
 
@@ -2014,7 +2285,7 @@ impl NodeWorker {
             let w_iter = self.next_wseq();
             let t_comm = Instant::now();
             if let Some(w_iter) = w_iter {
-                self.scatter_rows(std::slice::from_ref(&plan), &ar.moe_in, 1, l as u32, w_iter)?;
+                self.scatter_rows(std::slice::from_ref(&plan), &ar.moe_in, 1, false, l as u32, w_iter)?;
             }
             b.comm_ns += t_comm.elapsed().as_nanos() as u64;
 
@@ -2084,7 +2355,7 @@ impl NodeWorker {
             let t_comm = Instant::now();
             if let Some(w_iter) = w_iter {
                 let moe_in = state.moe_in_host(&self.rt)?; // scatter payload
-                self.scatter_rows(std::slice::from_ref(&plan), &moe_in, 1, l as u32, w_iter)?;
+                self.scatter_rows(std::slice::from_ref(&plan), &moe_in, 1, false, l as u32, w_iter)?;
             }
             b.comm_ns += t_comm.elapsed().as_nanos() as u64;
 
@@ -2148,25 +2419,30 @@ impl NodeWorker {
 
     /// Leader-side scatter: layer + row count + `[rows, D]` moe_in +
     /// per-row per-worker slot assignments, all under one sequence
-    /// number (shared by the host, device-resident and batched
-    /// centralized loops — `rows == 1` is the serial case). Rows beyond
-    /// `plans.len()` are bucket padding: zero weights, so the worker's
-    /// padded partial rows are exact zeros.
+    /// number (shared by the host, device-resident, batched and
+    /// chunked-prefill centralized loops — `rows == 1` is the serial
+    /// case). `prefill` sets the [`SCATTER_PREFILL_ROWS`] high bit on
+    /// the row count: `rows` is then a `dev_p{T}_*` chunk size and the
+    /// worker dispatches the prefill expert role. Rows beyond
+    /// `plans.len()` are bucket/chunk padding: zero weights, so the
+    /// worker's padded partial rows are exact zeros.
     fn scatter_rows(
         &mut self,
         plans: &[crate::moe::balance::LayerPlan],
         moe_in: &[f32],
         rows: usize,
+        prefill: bool,
         layer: u32,
         wseq: u32,
     ) -> Result<()> {
         let ns = self.plan_ns();
         debug_assert_eq!(moe_in.len(), rows * self.rt.manifest.d_embed);
+        let rows_field = rows as u32 | if prefill { SCATTER_PREFILL_ROWS } else { 0 };
         let _sp = obs::span("scatter.send").arg("layer", layer as u64);
         for peer in 1..self.ep.n_nodes() {
             let mut payload = Vec::with_capacity(8 + moe_in.len() * 4 + rows * ns * 8);
             payload.extend_from_slice(&layer.to_le_bytes());
-            payload.extend_from_slice(&(rows as u32).to_le_bytes());
+            payload.extend_from_slice(&rows_field.to_le_bytes());
             payload.extend_from_slice(&f32s_to_bytes(moe_in));
             // Per-row slot assignment appended: rows × ns × (i32, f32).
             for r in 0..rows {

@@ -42,6 +42,15 @@ pub struct SimParams {
     /// Prompt-evaluation chunk: weight loads / comms amortize over this
     /// many prompt tokens (MLX prompt processing, footnotes 3–4).
     pub prefill_chunk: usize,
+    /// Model the compiled chunked-prefill artifacts (`dev_p{T}`): one
+    /// graph-dispatch train per *chunk* instead of per token, so only
+    /// attention weight streaming stays per-token on the misc path. Off
+    /// by default — the footnote 3–4 calibration models MLX prompt
+    /// processing, which re-dispatches every token and only amortizes
+    /// weight loads / communications. Turn on via [`SimParams::chunked`]
+    /// to cross-validate mixed prefill/decode scheduling policies
+    /// against the live cluster's `--prefill-chunk` behaviour.
+    pub chunked_artifacts: bool,
 }
 
 impl Default for SimParams {
@@ -53,6 +62,33 @@ impl Default for SimParams {
             central_aggregate_ns: 750_000,
             peer_overhead_ns: 125_000,
             prefill_chunk: 2,
+            chunked_artifacts: false,
+        }
+    }
+}
+
+impl SimParams {
+    /// Parameters mirroring the live cluster's `--prefill-chunk CAP`:
+    /// the scheduler snaps the cap to the compiled artifact family
+    /// (`PREFILL_CHUNKS` = {8, 32} — the largest artifact ≤ cap, padding
+    /// the smallest when the cap sits below it), so the effective number
+    /// of prompt tokens consumed per engine step is `min(cap, artifact)`.
+    /// A cap below 2 is the serial token-by-token path.
+    pub fn chunked(cap: usize) -> SimParams {
+        use crate::runtime::PREFILL_CHUNKS;
+        if cap < 2 {
+            return SimParams { prefill_chunk: 1, ..SimParams::default() };
+        }
+        let artifact = PREFILL_CHUNKS
+            .iter()
+            .rev()
+            .find(|&&t| t <= cap)
+            .copied()
+            .unwrap_or(PREFILL_CHUNKS[0]);
+        SimParams {
+            prefill_chunk: cap.min(artifact),
+            chunked_artifacts: true,
+            ..SimParams::default()
         }
     }
 }
@@ -142,9 +178,7 @@ impl ClusterSim {
     /// interact with the driver's unwire logic (the paper reports driver
     /// processing on the expert path only).
     fn misc_layer_ns(&self) -> Nanos {
-        let m = &self.engine.model;
-        let sa_load =
-            (self.counts.sa_layer_bytes(m) as f64 / self.eff_bw() * 1e9) as Nanos;
+        let sa_load = self.sa_layer_load_ns();
         let dispatch = match self.cluster.strategy.packing() {
             Packing::Unstacked => self.params.dispatch_unstacked_ns,
             Packing::Prestacked => self.params.dispatch_prestacked_ns,
@@ -156,6 +190,14 @@ impl ClusterSim {
             _ => 0,
         };
         sa_load + dispatch + topo
+    }
+
+    /// The per-token part of the misc path: attention weight streaming.
+    /// (Dispatch overheads are the per-engine-step part — a compiled
+    /// `dev_p{T}` chunk pays them once for the whole chunk.)
+    fn sa_layer_load_ns(&self) -> Nanos {
+        let m = &self.engine.model;
+        (self.counts.sa_layer_bytes(m) as f64 / self.eff_bw() * 1e9) as Nanos
     }
 
     /// Per-layer communication cost for one token.
@@ -290,12 +332,23 @@ impl ClusterSim {
     /// whole chunk's breakdown (misc already multiplied). Used directly
     /// by the multi-user scheduler, where a chunked prompt step competes
     /// with other requests' decode steps for the single pipeline.
+    ///
+    /// Under [`SimParams::chunked_artifacts`] the follow-on tokens of
+    /// the chunk add only attention weight streaming: the compiled
+    /// `dev_p{T}` artifacts run one graph-dispatch train for the whole
+    /// chunk. The default (MLX prompt processing, footnotes 3–4)
+    /// re-dispatches every token, so the full misc cost stays per-token.
     pub fn prefill_chunk_step(&mut self, tokens: usize) -> TokenBreakdown {
         let t = tokens.max(1) as u64;
         let b = self.decode_token();
-        let extra_misc = (t - 1) * b.misc_ns;
+        let follow_on_misc = if self.params.chunked_artifacts {
+            self.engine.model.n_layers as u64 * self.sa_layer_load_ns()
+        } else {
+            b.misc_ns
+        };
+        let extra_misc = (t - 1) * follow_on_misc;
         self.now += extra_misc;
-        TokenBreakdown { misc_ns: t * b.misc_ns, ..b }
+        TokenBreakdown { misc_ns: b.misc_ns + extra_misc, ..b }
     }
 
     /// Run a full request: warmup (first request only), prefill, decode.
@@ -366,6 +419,65 @@ mod tests {
         );
         // Clock delta = (moe+comm) once + 4x misc.
         assert_eq!(chunk_ns, one.moe_ns + one.comm_ns + 4 * one.misc_ns);
+    }
+
+    #[test]
+    fn chunked_artifacts_amortize_dispatch_too() {
+        // The compiled dev_p{T} path pays ONE dispatch train per chunk:
+        // follow-on tokens add only attention weight streaming, so the
+        // chunk's misc lands strictly between one token's misc and the
+        // MLX per-token model's t x misc.
+        let mk = |params: SimParams| {
+            let mut s = ClusterSim::new(
+                ClusterConfig::new(2, Strategy::PLrD),
+                EngineConfig::default(),
+                params,
+            );
+            s.warmup();
+            s
+        };
+        let mut mlx = mk(SimParams::default());
+        let b_mlx = mlx.prefill_chunk_step(8);
+
+        let mut dev = mk(SimParams::chunked(8));
+        let t0 = dev.virtual_now();
+        let b_dev = dev.prefill_chunk_step(8);
+        let chunk_ns = dev.virtual_now() - t0;
+
+        // Same seed, same draws: moe/comm identical across the models.
+        assert_eq!(b_dev.moe_ns, b_mlx.moe_ns);
+        assert_eq!(b_dev.comm_ns, b_mlx.comm_ns);
+        assert!(
+            b_dev.misc_ns < b_mlx.misc_ns,
+            "artifact chunk must amortize dispatch: {} vs {}",
+            b_dev.misc_ns,
+            b_mlx.misc_ns
+        );
+        assert!(b_dev.misc_ns * 8 > b_mlx.misc_ns, "sa streaming stays per-token");
+        // Booked breakdown and virtual clock agree.
+        assert_eq!(chunk_ns, b_dev.moe_ns + b_dev.comm_ns + b_dev.misc_ns);
+    }
+
+    #[test]
+    fn chunked_params_snap_to_live_artifact_family() {
+        // SimParams::chunked mirrors the live scheduler: caps snap to
+        // the largest dev_p{T} artifact (T in {8, 32}) at or below the
+        // cap; below the smallest artifact the chunk is padded so only
+        // `cap` real tokens are consumed per step; caps < 2 are serial.
+        for (cap, want_chunk, want_dev) in [
+            (0, 1, false),
+            (1, 1, false),
+            (2, 2, true),
+            (5, 5, true),
+            (8, 8, true),
+            (12, 8, true),
+            (32, 32, true),
+            (100, 32, true),
+        ] {
+            let p = SimParams::chunked(cap);
+            assert_eq!(p.prefill_chunk, want_chunk, "cap {cap}");
+            assert_eq!(p.chunked_artifacts, want_dev, "cap {cap}");
+        }
     }
 
     /// Table 3, row "Naive": 1.2 t/s, breakdown 0.378 / 0.357 / 0.122.

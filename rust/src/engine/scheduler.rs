@@ -389,7 +389,9 @@ mod tests {
                 prompt_tokens: 32,
                 ..EngineConfig::default()
             };
-            let params = SimParams { prefill_chunk: chunk, ..SimParams::default() };
+            // Mirror the live `--prefill-chunk` semantics (dev_p{T}
+            // artifact snap + per-chunk dispatch).
+            let params = SimParams::chunked(chunk);
             let mut s = ClusterSim::new(
                 ClusterConfig::new(2, Strategy::PLrD),
                 engine,
@@ -406,6 +408,61 @@ mod tests {
             "chunked prefill should be faster: {} vs {}",
             fast.makespan_s,
             slow.makespan_s
+        );
+    }
+
+    #[test]
+    fn chunked_prefill_bounds_decode_latency_under_long_prompt() {
+        // Cross-validation of the live mixed prefill/decode iterations:
+        // a 256-token prompt admitted alongside short decode requests.
+        // Chunked (dev_p32) the prompt occupies 8 interleaved engine
+        // steps instead of 256, so it finishes several times sooner —
+        // while the short requests, which now share cycles with the
+        // (longer) chunk steps, stay within a small constant factor of
+        // their serial-schedule latency. This is the simulator-side twin
+        // of the BENCH_prefill decode-p99 acceptance gate.
+        let mk_workload = || {
+            let mut w = Workload::poisson(3, 100.0, 4, 16, 11); // near-simultaneous
+            w.requests[0].1.prompt = vec![1; 256]; // one long prompt
+            w
+        };
+        let run = |cap: usize| {
+            let engine = EngineConfig {
+                gen_tokens: 16,
+                prompt_tokens: 4,
+                ..EngineConfig::default()
+            };
+            let mut s = ClusterSim::new(
+                ClusterConfig::new(2, Strategy::PLrD),
+                engine,
+                SimParams::chunked(cap),
+            );
+            serve_workload(&mut s, &mk_workload(), SchedPolicy::RoundRobin)
+        };
+        let serial = run(1);
+        let chunked = run(32);
+        // The long-prompt request finishes far sooner (8 vs 256 prompt
+        // steps), which is what frees its scheduler slot for admission.
+        let long_s = serial.outcomes.iter().find(|o| o.id == 0).unwrap().latency_s;
+        let long_c = chunked.outcomes.iter().find(|o| o.id == 0).unwrap().latency_s;
+        assert!(
+            long_c < 0.5 * long_s,
+            "chunked long prompt should finish much sooner: {long_c} vs {long_s}"
+        );
+        // Worst short-request latency (ids 1, 2) stays bounded: each
+        // shared cycle carries one chunk step, costing extra attention
+        // streaming but never the 256-step monopolization.
+        let worst = |r: &SchedReport| {
+            r.outcomes
+                .iter()
+                .filter(|o| o.id != 0)
+                .map(|o| o.latency_s)
+                .fold(0.0f64, f64::max)
+        };
+        let (ws, wc) = (worst(&serial), worst(&chunked));
+        assert!(
+            wc < 2.5 * ws,
+            "short requests must not starve under chunked prefill: {wc} vs serial {ws}"
         );
     }
 }

@@ -71,6 +71,14 @@ tag_table! {
     }
 }
 
+/// Centralized scatter: the high bit of the `rows` field marks a
+/// chunked-prefill payload — `rows & !SCATTER_PREFILL_ROWS` is then a
+/// `dev_p{T}_*` chunk size, not a decode bucket, and the worker runs the
+/// prefill expert role instead of the batched decode one. Part of the
+/// wire format: changing it needs a
+/// [`crate::network::tcp::PROTOCOL_VERSION`] bump.
+pub const SCATTER_PREFILL_ROWS: u32 = 0x8000_0000;
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -33,7 +33,14 @@ use crate::network::transport::{Endpoint, Envelope, NetError, Transport};
 /// v3: every connection runs a clock-sync ping-pong right after the
 /// handshake (see [`clock_sync_measure`]) — a v2 peer would read the
 /// ping as a frame header, so mixed meshes must fail the handshake.
-pub const PROTOCOL_VERSION: u16 = 3;
+///
+/// v4: chunked prefill — `OP_BATCH` may carry a trailing 6-byte prefill
+/// descriptor (seq, chunk, real rows), and the centralized scatter's
+/// row-count field reserves its high bit as the prefill marker
+/// ([`crate::network::tags::SCATTER_PREFILL_ROWS`]). A v3 follower
+/// would reject the batch body length / misread a flagged row count,
+/// so mixed meshes must fail the handshake.
+pub const PROTOCOL_VERSION: u16 = 4;
 const MAGIC: [u8; 4] = *b"AMOE";
 const HANDSHAKE_LEN: usize = 14;
 const FRAME_HEADER_LEN: usize = 20;

@@ -44,6 +44,11 @@ pub struct Manifest {
     /// The dedup expert roles (`dev_b{B}_experts_dedup_el{el}_ns{ns}`)
     /// are present; otherwise batched decode always gathers per row.
     pub dedup_artifacts: bool,
+    /// Largest chunk of the `dev_p{T}_*` chunked prefill family; the
+    /// chunk sizes are the powers of FOUR from 8 up to this value (so
+    /// 32 → T ∈ {8, 32}). 0 = artifacts predate chunked prefill; the
+    /// live scheduler then evaluates prompts token by token.
+    pub prefill_chunk_max: usize,
 }
 
 impl Manifest {
@@ -82,6 +87,7 @@ impl Manifest {
             sampler_max_top_k: doc.int_or("sampler_max_top_k", 0).max(0) as usize,
             sampler_max_stop: doc.int_or("sampler_max_stop", 0).max(0) as usize,
             dedup_artifacts: doc.int_or("dedup_artifacts", 0) != 0,
+            prefill_chunk_max: doc.int_or("prefill_chunk_max", 0).max(0) as usize,
         };
         m.validate()?;
         Ok(m)
@@ -116,6 +122,20 @@ impl Manifest {
         while b <= self.max_batch {
             out.push(b);
             b *= 2;
+        }
+        out
+    }
+
+    /// Chunk sizes of the prefill family, ascending (empty when the
+    /// artifacts predate chunked prefill). The live scheduler picks the
+    /// largest chunk that fits the remaining prompt, padding the
+    /// smallest one for ragged tails.
+    pub fn prefill_chunks(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut t = 8;
+        while t <= self.prefill_chunk_max {
+            out.push(t);
+            t *= 4;
         }
         out
     }
@@ -200,6 +220,17 @@ fast_num_slots = 4
         assert!(m.sampler_artifacts);
         assert_eq!(m.sampler_max_top_k, 64);
         assert_eq!(m.sampler_max_stop, 8);
+    }
+
+    #[test]
+    fn prefill_chunks_derive_from_max() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.prefill_chunk_max, 0);
+        assert!(m.prefill_chunks().is_empty());
+        let with = format!("{SAMPLE}prefill_chunk_max = 32\n");
+        assert_eq!(Manifest::parse(&with).unwrap().prefill_chunks(), vec![8, 32]);
+        let with = format!("{SAMPLE}prefill_chunk_max = 8\n");
+        assert_eq!(Manifest::parse(&with).unwrap().prefill_chunks(), vec![8]);
     }
 
     #[test]

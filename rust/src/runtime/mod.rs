@@ -22,11 +22,13 @@ pub mod batch;
 pub mod device;
 pub mod manifest;
 pub mod nano;
+pub mod prefill;
 
 pub use batch::BatchedRun;
 pub use device::{DeviceSample, DeviceState};
 pub use manifest::Manifest;
 pub use nano::{AttnRouterOut, NanoRuntime, NodeExperts};
+pub use prefill::{PrefillRun, PREFILL_CHUNKS};
 
 /// Host↔device transfer accounting, accumulated inside the runtime and
 /// drained per token by the serving loops ([`NanoRuntime::take_transfer_stats`]).

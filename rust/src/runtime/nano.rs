@@ -251,6 +251,79 @@ impl SamplerExes {
     }
 }
 
+/// The untupled chunked-prefill executables of ONE chunk size T of the
+/// `dev_p{T}_*` family (`aot.py::lower_prefill_artifacts`): T
+/// consecutive prompt positions of ONE request share each layer's
+/// dispatches. The roles chain off the same per-request `[Hkv, S, hd]`
+/// cache buffers the decode families use — the bulk K/V append writes T
+/// rows at `pos..pos+T` in one dynamic-update-slice — so a request
+/// prefilled in chunks is bit-identical to one prefilled serially.
+/// There is deliberately NO lm_head/sampler member: prompt positions
+/// never produce logits (the last prompt token runs on the decode path).
+pub(crate) struct PrefillExes {
+    pub(crate) chunk: usize,
+    pub(crate) embed: xla::PjRtLoadedExecutable,
+    pub(crate) qkv: xla::PjRtLoadedExecutable,
+    pub(crate) k_append: xla::PjRtLoadedExecutable,
+    pub(crate) v_append: xla::PjRtLoadedExecutable,
+    pub(crate) attn_out: xla::PjRtLoadedExecutable,
+    pub(crate) moe_norm: xla::PjRtLoadedExecutable,
+    pub(crate) router: xla::PjRtLoadedExecutable,
+    pub(crate) residual: xla::PjRtLoadedExecutable,
+    /// Chunk experts keyed (residents, slots):
+    /// [el8_fast, el8_full, el16_fast, el16_full].
+    pub(crate) experts: [xla::PjRtLoadedExecutable; 4],
+}
+
+impl PrefillExes {
+    fn compile(
+        client: &xla::PjRtClient,
+        dir: &Path,
+        m: &Manifest,
+        chunk: usize,
+    ) -> Result<PrefillExes> {
+        let role = |r: &str| format!("dev_p{chunk}_{r}");
+        let experts = |el: usize, ns: usize| format!("dev_p{chunk}_experts_el{el}_ns{ns}");
+        Ok(PrefillExes {
+            chunk,
+            embed: compile_artifact(client, dir, &role("embed"))?,
+            qkv: compile_artifact(client, dir, &role("qkv"))?,
+            k_append: compile_artifact(client, dir, &role("k_append"))?,
+            v_append: compile_artifact(client, dir, &role("v_append"))?,
+            attn_out: compile_artifact(client, dir, &role("attn_out"))?,
+            moe_norm: compile_artifact(client, dir, &role("moe_norm"))?,
+            router: compile_artifact(client, dir, &role("router"))?,
+            residual: compile_artifact(client, dir, &role("residual"))?,
+            experts: [
+                compile_artifact(client, dir, &experts(8, m.fast_num_slots))?,
+                compile_artifact(client, dir, &experts(8, m.num_slots))?,
+                compile_artifact(client, dir, &experts(16, m.fast_num_slots))?,
+                compile_artifact(client, dir, &experts(16, m.num_slots))?,
+            ],
+        })
+    }
+
+    /// The chunk experts executable for a node with `el` residents
+    /// running `ns` slots per row.
+    pub(crate) fn experts_exe(
+        &self,
+        el: usize,
+        ns: usize,
+        m: &Manifest,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        match (el, ns) {
+            (8, n) if n == m.fast_num_slots => Ok(&self.experts[0]),
+            (8, n) if n == m.num_slots => Ok(&self.experts[1]),
+            (16, n) if n == m.fast_num_slots => Ok(&self.experts[2]),
+            (16, n) if n == m.num_slots => Ok(&self.experts[3]),
+            (el, n) => bail!(
+                "no prefill experts executable for el={el}, ns={n} (chunk {})",
+                self.chunk
+            ),
+        }
+    }
+}
+
 /// Plan a dedup expert dispatch: the distinct local ids among the
 /// nonzero-weight slots (padded with id 0 up to `ns`) and the
 /// per-(row, slot) selection map into them. `None` when more than `ns`
@@ -315,6 +388,10 @@ pub struct NanoRuntime {
     /// 2/4/8/16 → slots 1..5. Pre-sampler artifact dirs never populate
     /// them (gated on `manifest.sampler_artifacts`).
     sampler_exes: [OnceCell<SamplerExes>; 5],
+    /// Chunked prefill families, compiled lazily PER CHUNK SIZE on
+    /// first use (serial-prefill runs never pay for them). Indexed by
+    /// position in `manifest.prefill_chunks()`: chunks 8/32 → slots 0/1.
+    prefill_exes: [OnceCell<PrefillExes>; 2],
     /// Where the artifacts were loaded from (for lazy compilation).
     artifact_dir: PathBuf,
     /// Host↔device transfer meter (single-threaded per node — PJRT
@@ -404,6 +481,7 @@ impl NanoRuntime {
             device_exes: OnceCell::new(),
             batched_exes: Default::default(),
             sampler_exes: Default::default(),
+            prefill_exes: Default::default(),
             artifact_dir: dir.to_path_buf(),
             transfers: Cell::new(TransferStats::default()),
             host_weights,
@@ -473,6 +551,40 @@ impl NanoRuntime {
             let _ = self.batched_exes[idx].set(exes);
         }
         Ok(self.batched_exes[idx].get().expect("just populated"))
+    }
+
+    /// The chunked prefill `dev_p{T}_*` family is available. Cheap:
+    /// consults the manifest, does not compile.
+    pub fn has_prefill_path(&self) -> bool {
+        self.manifest.device_artifacts && self.manifest.prefill_chunk_max >= 8
+    }
+
+    /// Largest prefill chunk size that is at most `cap` (`None` when
+    /// even the smallest chunk exceeds the cap — serial prefill then).
+    pub fn prefill_chunk_for(&self, cap: usize) -> Option<usize> {
+        self.manifest.prefill_chunks().into_iter().rev().find(|&t| t <= cap)
+    }
+
+    /// The prefill executables for one chunk size, compiled on first use.
+    pub(crate) fn prefill(&self, chunk: usize) -> Result<&PrefillExes> {
+        if !self.has_prefill_path() {
+            bail!("artifacts lack the dev_p* prefill set — re-run `make artifacts`");
+        }
+        let idx = self
+            .manifest
+            .prefill_chunks()
+            .iter()
+            .position(|&t| t == chunk)
+            .with_context(|| format!("no prefill artifact family for chunk {chunk}"))?;
+        if idx >= self.prefill_exes.len() {
+            bail!("prefill chunk {chunk} beyond the compiled family slots");
+        }
+        if self.prefill_exes[idx].get().is_none() {
+            let exes =
+                PrefillExes::compile(&self.client, &self.artifact_dir, &self.manifest, chunk)?;
+            let _ = self.prefill_exes[idx].set(exes);
+        }
+        Ok(self.prefill_exes[idx].get().expect("just populated"))
     }
 
     /// The on-device sampler roles are available (token ids, not
@@ -897,6 +1009,44 @@ impl NanoRuntime {
         }
         let exe = exes.experts_exe(node.resident.len(), ns, m)?;
         let ib = self.buf_i32(slot_idx, &[rows, ns])?;
+        let out = self.run_dev(exe, &[&le.w1, &le.v1, &le.w2, &xb, &ib, &wb])?;
+        self.download_f32(&out)
+    }
+
+    /// Chunked-prefill expert execution for a T-row chunk in ONE
+    /// dispatch (the centralized worker's prefill path): per-row *local*
+    /// slot indices gather from the node's stacked residents, padding
+    /// rows/slots carry weight 0. `chunk` must match a compiled prefill
+    /// family; host in/out because the inputs arrive off the wire and
+    /// the partial goes straight back onto it.
+    pub fn node_experts_prefill(
+        &self,
+        node: &NodeExperts,
+        layer: usize,
+        chunk: usize,
+        moe_in: &[f32],
+        slot_idx: &[i32],
+        slot_w: &[f32],
+    ) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        if moe_in.len() != chunk * m.d_embed {
+            bail!("moe_in has {} elements, expected {} x {}", moe_in.len(), chunk, m.d_embed);
+        }
+        if slot_idx.len() != slot_w.len() || chunk == 0 || slot_idx.len() % chunk != 0 {
+            bail!("slot_idx/slot_w shape mismatch");
+        }
+        let ns = slot_idx.len() / chunk;
+        // No row routes to this node for this chunk: every term of the
+        // artifact's sum is exactly zero, so skip the dispatch.
+        if slot_w.iter().all(|&w| w == 0.0) {
+            return Ok(vec![0.0; chunk * m.d_embed]);
+        }
+        let exes = self.prefill(chunk)?;
+        let exe = exes.experts_exe(node.resident.len(), ns, m)?;
+        let le = &node.layers[layer];
+        let xb = self.buf_f32(moe_in, &[chunk, m.d_embed])?;
+        let ib = self.buf_i32(slot_idx, &[chunk, ns])?;
+        let wb = self.buf_f32(slot_w, &[chunk, ns])?;
         let out = self.run_dev(exe, &[&le.w1, &le.v1, &le.w2, &xb, &ib, &wb])?;
         self.download_f32(&out)
     }

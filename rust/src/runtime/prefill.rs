@@ -1,0 +1,241 @@
+//! Chunked prefill on the device-resident path: T consecutive prompt
+//! positions of ONE request share each layer's dispatches.
+//!
+//! Serial prefill runs the full decode pipeline once per prompt token —
+//! a per-layer dispatch train, a router d2h and an all-reduce round for
+//! EVERY prompt position, which is what makes long-prompt admission
+//! stall decode latency for everyone else. [`PrefillRun`] drives the
+//! `dev_p{T}_*` artifact family (`aot.py::lower_prefill_artifacts`):
+//! the chunk's residual stream is `[T, D]`, the K/V append writes T
+//! rows at `pos..pos+T` in one dynamic-update-slice, and attention
+//! applies a causal mask over the chunk (row t attends cache positions
+//! `<= pos + t` — exactly the window a serial step at `pos + t` sees).
+//!
+//! # Identity with serial prefill
+//!
+//! The chunk chains off the SAME per-request `[Hkv, S, hd]` cache
+//! buffers inside the request's [`DeviceState`]; nothing else about a
+//! prompt position persists across tokens (decode embeds each token
+//! fresh — the hidden state never carries over). So after a chunk the
+//! caches are bit-identical to T serial appends, which makes chunked
+//! and serial prefill produce identical downstream tokens (asserted by
+//! `test_model.py::TestPrefillDecomposition` and end-to-end by the
+//! chunked-vs-serial tests in `integration_cluster.rs`).
+//!
+//! # Ragged tails and padding rows
+//!
+//! A tail of fewer than T real tokens pads with token 0. Padding rows
+//! write garbage K/V at `pos+real..pos+T`, but the causal mask keeps
+//! every REAL row from attending there, and each of those positions is
+//! overwritten by its real token's append before any later query
+//! attends to it. Padding rows' expert slots carry weight 0. The one
+//! hard precondition is `pos + T <= max_seq`: XLA's
+//! dynamic-update-slice CLAMPS out-of-range start indices, which would
+//! silently shift the write window — [`PrefillRun::begin`] rejects
+//! chunks that do not fit instead.
+//!
+//! # No lm_head
+//!
+//! Prompt positions never produce logits. The LAST prompt token always
+//! runs on the decode path (serial or batched), which is where lm_head
+//! and sampling already live — so this module has no sampler coupling
+//! at all.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::nano::NodeExperts;
+use crate::runtime::{DeviceState, NanoRuntime};
+
+/// Chunk sizes of the prefill artifact family, ascending — the rust
+/// mirror of `aot.py::PREFILL_CHUNKS` (the manifest's
+/// `prefill_chunk_max` is the source of truth at run time; this
+/// constant pins the contract for the simulator and tests).
+pub const PREFILL_CHUNKS: [usize; 2] = [8, 32];
+
+/// One prefill chunk's forward pass: borrows the request's
+/// [`DeviceState`] caches and chains the `dev_p{T}_*` executables
+/// across layers. Dropped at the end of the chunk (the transient
+/// x/h/moe_in activations die with it; the caches live on in the
+/// request's state).
+pub struct PrefillRun<'a> {
+    chunk: usize,
+    state: &'a mut DeviceState,
+    real_rows: usize,
+    /// Residual stream [T, D] (valid between `begin` and the last layer).
+    x: Option<xla::PjRtBuffer>,
+    /// Post-attention residual [T, D] (valid within a layer).
+    h: Option<xla::PjRtBuffer>,
+    /// Normed MoE input [T, D] (valid within a layer).
+    moe_in: Option<xla::PjRtBuffer>,
+    /// First row's sequence position, uploaded once per chunk (i32[]).
+    pos_buf: xla::PjRtBuffer,
+}
+
+impl<'a> PrefillRun<'a> {
+    /// Embed `tokens` (the chunk's prompt slice, `1..=chunk` of them —
+    /// shorter slices pad with token 0) into a `[T, D]` residual stream
+    /// at sequence positions `pos..pos+tokens.len()`.
+    pub fn begin(
+        rt: &NanoRuntime,
+        chunk: usize,
+        state: &'a mut DeviceState,
+        tokens: &[u32],
+        pos: usize,
+    ) -> Result<PrefillRun<'a>> {
+        let rows = tokens.len();
+        if rows == 0 || rows > chunk {
+            bail!("{rows} prompt tokens do not fit prefill chunk {chunk}");
+        }
+        // dynamic-update-slice CLAMPS an out-of-range start index, which
+        // would silently shift the whole write window — refuse instead
+        // (the scheduler falls back to serial steps near max_seq).
+        if pos + chunk > rt.manifest.max_seq {
+            bail!(
+                "prefill chunk {chunk} at pos {pos} exceeds max_seq {}",
+                rt.manifest.max_seq
+            );
+        }
+        let _sp = crate::obs::span("prefill.begin")
+            .arg("chunk", chunk as u64)
+            .arg("rows", rows as u64);
+        let exes = rt.prefill(chunk)?;
+        let mut toks = vec![0i32; chunk]; // padding rows feed token 0
+        for (r, &t) in tokens.iter().enumerate() {
+            toks[r] = t as i32;
+        }
+        let tok_buf = rt.buf_i32(&toks, &[chunk])?;
+        let x = rt.run_dev(&exes.embed, &[rt.embed_weight_buf(), &tok_buf])?;
+        let pos_buf = rt.buf_i32(&[pos as i32], &[])?;
+        Ok(PrefillRun {
+            chunk,
+            state,
+            real_rows: rows,
+            x: Some(x),
+            h: None,
+            moe_in: None,
+            pos_buf,
+        })
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Real prompt rows in the chunk (the rest is padding).
+    pub fn rows(&self) -> usize {
+        self.real_rows
+    }
+
+    /// One layer's attention + routing for the whole chunk: one bulk
+    /// K/V append pair, shared attention/norm/router dispatches, ONE
+    /// packed `[T, 2K]` top-k download. Returns `(top_w, top_i)` per
+    /// REAL row (padding rows' routing is discarded — their expert
+    /// slots get weight 0 from the planner).
+    #[allow(clippy::type_complexity)]
+    pub fn attn_router(
+        &mut self,
+        rt: &NanoRuntime,
+        layer: usize,
+    ) -> Result<Vec<(Vec<f32>, Vec<usize>)>> {
+        let _sp = crate::obs::span("prefill.attn_router").arg("layer", layer as u64);
+        let exes = rt.prefill(self.chunk)?;
+        let w = rt.attn_weights(layer);
+        let (ln1, wqkv, wo, ln2, wr) = (&w[0], &w[1], &w[2], &w[3], &w[4]);
+        let x = self.x.take().context("begin not called")?;
+        let qkv = rt.run_dev(&exes.qkv, &[ln1, wqkv, &x])?;
+
+        // ONE append per cache side writes all T rows (vs T per side on
+        // the serial path) — the dispatch amortization this family buys.
+        let kc = self.state.k[layer].take().context("cache buffer missing")?;
+        let vc = self.state.v[layer].take().context("cache buffer missing")?;
+        let new_k = rt.run_dev(&exes.k_append, &[&kc, &qkv, &self.pos_buf])?;
+        let new_v = rt.run_dev(&exes.v_append, &[&vc, &qkv, &self.pos_buf])?;
+        let h = rt.run_dev(&exes.attn_out, &[wo, &x, &qkv, &new_k, &new_v, &self.pos_buf])?;
+        self.state.k[layer] = Some(new_k);
+        self.state.v[layer] = Some(new_v);
+
+        let moe_in = rt.run_dev(&exes.moe_norm, &[ln2, &h])?;
+        let packed_buf = rt.run_dev(&exes.router, &[wr, &moe_in])?;
+        let topk_sp = crate::obs::span("router.topk_d2h").arg("layer", layer as u64);
+        let packed = rt.download_f32(&packed_buf)?;
+        drop(topk_sp);
+
+        self.x = Some(x);
+        self.h = Some(h);
+        self.moe_in = Some(moe_in);
+
+        let k = rt.manifest.top_k;
+        if packed.len() != self.chunk * 2 * k {
+            bail!("router returned {} values, expected {}", packed.len(), self.chunk * 2 * k);
+        }
+        let mut draws = Vec::with_capacity(self.real_rows);
+        for r in 0..self.real_rows {
+            let row = &packed[r * 2 * k..(r + 1) * 2 * k];
+            let top_w = row[..k].to_vec();
+            let top_i = row[k..].iter().map(|&f| f.round() as usize).collect();
+            draws.push((top_w, top_i));
+        }
+        Ok(draws)
+    }
+
+    /// Download the current `[T, D]` MoE input (centralized leader
+    /// only: the scatter payload must hit the wire — one message now
+    /// carries the whole chunk).
+    pub fn moe_in_host(&self, rt: &NanoRuntime) -> Result<Vec<f32>> {
+        let b = self.moe_in.as_ref().context("no moe_in: run attn_router first")?;
+        rt.download_f32(b)
+    }
+
+    /// Run this node's experts for ALL chunk rows in one dispatch:
+    /// `slot_idx` / `slot_w` are `[chunk * ns]` row-major per-row local
+    /// slot assignments (weight 0 on padding slots and padding rows).
+    /// The `[T, D]` partial stays on device.
+    pub fn node_experts(
+        &mut self,
+        rt: &NanoRuntime,
+        node: &NodeExperts,
+        layer: usize,
+        slot_idx: &[i32],
+        slot_w: &[f32],
+    ) -> Result<xla::PjRtBuffer> {
+        if slot_idx.len() != slot_w.len() || slot_idx.len() % self.chunk != 0 {
+            bail!("slot_idx/slot_w shape mismatch");
+        }
+        let _sp = crate::obs::span("prefill.experts").arg("layer", layer as u64);
+        let ns = slot_idx.len() / self.chunk;
+        let exes = rt.prefill(self.chunk)?;
+        let exe = exes.experts_exe(node.resident.len(), ns, &rt.manifest)?;
+        let moe_in = self.moe_in.take().context("no moe_in: run attn_router first")?;
+        let le = &node.layers[layer];
+        let ib = rt.buf_i32(slot_idx, &[self.chunk, ns])?;
+        let wb = rt.buf_f32(slot_w, &[self.chunk, ns])?;
+        let partial = rt.run_dev(exe, &[&le.w1, &le.v1, &le.w2, &moe_in, &ib, &wb])?;
+        self.moe_in = Some(moe_in);
+        Ok(partial)
+    }
+
+    /// Close the layer with a `[T, D]` sum that is already on device
+    /// (single-node case: the local partial IS the sum).
+    pub fn finish_layer_device(
+        &mut self,
+        rt: &NanoRuntime,
+        moe_sum: &xla::PjRtBuffer,
+    ) -> Result<()> {
+        let exes = rt.prefill(self.chunk)?;
+        let h = self.h.take().context("no h: run attn_router first")?;
+        self.x = Some(rt.run_dev(&exes.residual, &[&h, moe_sum])?);
+        self.moe_in = None;
+        Ok(())
+    }
+
+    /// Close the layer with a host-side `[T * D]` sum (multi-node: the
+    /// all-reduced rows came off the wire in one payload).
+    pub fn finish_layer_host(&mut self, rt: &NanoRuntime, moe_sum: &[f32]) -> Result<()> {
+        let d = rt.manifest.d_embed;
+        if moe_sum.len() != self.chunk * d {
+            bail!("moe sum has {} elements, expected {}", moe_sum.len(), self.chunk * d);
+        }
+        let sum = rt.buf_f32(moe_sum, &[self.chunk, d])?;
+        self.finish_layer_device(rt, &sum)
+    }
+}

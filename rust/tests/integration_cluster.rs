@@ -734,6 +734,222 @@ fn device_sampler_matches_host_sampler_reference() {
     }
 }
 
+fn prefill_artifacts(dir: &Path) -> bool {
+    let manifest = apple_moe::runtime::Manifest::load(dir).unwrap();
+    if manifest.prefill_chunk_max < 8 {
+        eprintln!("skipping: artifacts predate the dev_p* chunked-prefill set");
+        return false;
+    }
+    true
+}
+
+/// The PR 10 tentpole acceptance: chunked prefill (`dev_p{T}` [T, D]
+/// chunks + mixed iterations) generates tokens IDENTICAL to serial
+/// token-by-token prompt evaluation — across both topologies and 1/2
+/// nodes — while the prompt phase issues >= 4x fewer executable
+/// dispatches per token. The 77-token prompt covers both compiled
+/// chunk sizes AND a padded ragged tail in one pass: 76 chunkable
+/// positions run as 32 + 32 + 8 + 8-padded-to-4 real rows, and the
+/// last prompt token always takes the decode path (it must sample).
+#[test]
+fn chunked_prefill_matches_serial_on_both_topologies() {
+    let Some(dir) = artifacts_dir() else { return };
+    if !prefill_artifacts(&dir) {
+        return;
+    }
+    let req = Request::synthetic(100, 77, 512, 6);
+
+    for topology in [Topology::Decentralized, Topology::Centralized] {
+        for nodes in [1usize, 2] {
+            let run = |prefill_chunk: usize| {
+                let mut cfg = LiveConfig::new(dir.clone(), nodes);
+                cfg.topology = topology;
+                if topology == Topology::Centralized {
+                    cfg.balancing = Balancing::SelectedOnly;
+                }
+                cfg.prefill_chunk = prefill_chunk;
+                let cluster = LiveCluster::start(cfg).unwrap();
+                let res = serve_one(&cluster, &req);
+                cluster.shutdown();
+                res
+            };
+            let serial = run(1);
+            let chunked = run(32);
+            assert_eq!(
+                chunked.generated, serial.generated,
+                "chunked prefill diverged from serial ({topology:?} x {nodes} nodes)"
+            );
+            // Dispatch amortization on the prompt phase (the acceptance
+            // floor is 4x; chunk 32 over 76 positions lands ~15x).
+            let se = serial.metrics.prefill.exec_calls_per_token();
+            let ce = chunked.metrics.prefill.exec_calls_per_token();
+            assert!(se > 0.0 && ce > 0.0, "prefill dispatches not metered");
+            assert!(
+                ce * 4.0 <= se,
+                "prompt dispatches not amortized >=4x ({topology:?} x {nodes}): \
+                 {ce} vs serial {se}"
+            );
+            // The [32, D] chunk really ran: 32 positions shared a train.
+            assert!(
+                chunked.metrics.prefill.occupancy.max() >= 32.0,
+                "no 32-row chunk observed ({topology:?} x {nodes}): max {}",
+                chunked.metrics.prefill.occupancy.max()
+            );
+        }
+    }
+
+    // The T=8 cap (the acceptance's "drops >=4x at T=8"): identical
+    // tokens and >=4x fewer prompt dispatches with ONLY dev_p8 chunks.
+    let mut cfg = LiveConfig::new(dir.clone(), 2);
+    cfg.prefill_chunk = 1;
+    let serial = {
+        let cluster = LiveCluster::start(cfg).unwrap();
+        let res = serve_one(&cluster, &req);
+        cluster.shutdown();
+        res
+    };
+    let mut cfg = LiveConfig::new(dir, 2);
+    cfg.prefill_chunk = 8;
+    let t8 = {
+        let cluster = LiveCluster::start(cfg).unwrap();
+        let res = serve_one(&cluster, &req);
+        cluster.shutdown();
+        res
+    };
+    assert_eq!(t8.generated, serial.generated, "T=8 chunked prefill diverged");
+    let (se, ce) =
+        (serial.metrics.prefill.exec_calls_per_token(), t8.metrics.prefill.exec_calls_per_token());
+    assert!(ce * 4.0 <= se, "T=8 prompt dispatches not amortized >=4x: {ce} vs {se}");
+    assert!(t8.metrics.prefill.occupancy.max() <= 8.0, "T=8 cap ignored");
+}
+
+/// Padded / ragged chunk shapes stay bit-identical to the dense
+/// reference: a prompt short enough that its ONLY chunk is padded
+/// (6 tokens -> one dev_p8 with 5 real rows), a chunk-plus-lone-serial
+/// tail (10 tokens -> one full dev_p8, then a single position too
+/// short to chunk), and an exact two-chunk fit (41 tokens -> 32 + 8).
+#[test]
+fn ragged_tail_chunks_match_dense() {
+    let Some(dir) = artifacts_dir() else { return };
+    if !prefill_artifacts(&dir) {
+        return;
+    }
+    let reqs = [
+        Request::synthetic(130, 6, 512, 5),
+        Request::synthetic(131, 10, 512, 5),
+        Request::synthetic(132, 41, 512, 5),
+    ];
+    let want: Vec<Vec<u32>> = reqs.iter().map(|r| dense_tokens(&dir, r)).collect();
+
+    let mut cfg = LiveConfig::new(dir, 2);
+    cfg.prefill_chunk = 32;
+    let cluster = LiveCluster::start(cfg).unwrap();
+    for (r, w) in reqs.iter().zip(&want) {
+        let res = serve_one(&cluster, r);
+        assert_eq!(
+            &res.generated, w,
+            "ragged-tail chunked prefill diverged (req {}, prompt {})",
+            r.id,
+            r.prompt.len()
+        );
+    }
+    cluster.shutdown();
+}
+
+/// Mixed prefill/decode iterations: a short request's decode tokens —
+/// emitted WHILE the long prompt is still chunking — are identical to
+/// one-at-a-time serial serving, and the short request's first token
+/// beats the long one's (the long prompt no longer monopolizes
+/// iterations).
+#[test]
+fn decode_during_prefill_matches_serial_schedule() {
+    let Some(dir) = artifacts_dir() else { return };
+    if !prefill_artifacts(&dir) || !batched_artifacts(&dir, 2) {
+        return;
+    }
+    let long = Request::synthetic(110, 96, 512, 6);
+    let short = Request::synthetic(111, 4, 512, 12);
+
+    let mk = |max_active: usize| {
+        let mut cfg = LiveConfig::new(dir.clone(), 2);
+        cfg.max_active = max_active;
+        cfg.policy = SchedPolicy::RunToCompletion;
+        LiveCluster::start(cfg).unwrap()
+    };
+
+    // Serial reference: one request at a time.
+    let serial = mk(1);
+    let long_want = serve_one(&serial, &long).generated;
+    let short_want = serve_one(&serial, &short).generated;
+    serial.shutdown();
+
+    // Mixed: both admitted at once; the long prompt chunks while the
+    // short request prefills serially alongside and then decodes.
+    let cluster = mk(2);
+    let h_long = cluster.submit(long).unwrap();
+    let h_short = cluster.submit(short).unwrap();
+    let long_res = h_long.join().unwrap();
+    let short_res = h_short.join().unwrap();
+    cluster.shutdown();
+
+    assert_eq!(long_res.generated, long_want, "long request diverged under mixing");
+    assert_eq!(short_res.generated, short_want, "decode-during-prefill diverged");
+    // Interleaving evidence: the short request needs ~4 iterations to
+    // its first token, the 96-token prompt ~6 chunk steps — so the
+    // short one must come out first (serial run-to-completion cannot
+    // do this: the long request was submitted first).
+    assert!(
+        short_res.metrics.ttft_s() < long_res.metrics.ttft_s(),
+        "short request did not overtake the long prefill: ttft {} vs {}",
+        short_res.metrics.ttft_s(),
+        long_res.metrics.ttft_s()
+    );
+    // The long prompt really ran chunked while the short one decoded.
+    assert!(long_res.metrics.prefill.occupancy.max() >= 32.0, "long prompt never chunked");
+}
+
+/// Cancelling a request while its prompt is still chunking frees the
+/// slot: the queued request behind it is admitted and serves identical
+/// tokens, and the cluster keeps serving chunked prompts afterwards.
+/// The 239-token prompt needs ~10 mixed iterations before its first
+/// token; the cancel flag lands within microseconds of submission, so
+/// the cancellation is always mid-prefill (zero tokens out).
+#[test]
+fn mid_prefill_cancel_frees_slot() {
+    let Some(dir) = artifacts_dir() else { return };
+    if !prefill_artifacts(&dir) {
+        return;
+    }
+    let long = Request::synthetic(120, 239, 512, 8);
+    let short = Request::synthetic(121, 3, 512, 6);
+    let short_want = dense_tokens(&dir, &short);
+
+    let mut cfg = LiveConfig::new(dir.clone(), 2);
+    cfg.max_active = 1; // the long request owns the only slot
+    cfg.prefill_chunk = 32;
+    let cluster = LiveCluster::start(cfg).unwrap();
+    let h_long = cluster.submit(long).unwrap();
+    let h_short = cluster.submit(short).unwrap();
+    h_long.cancel();
+    let cancelled = h_long.join().unwrap();
+    assert_eq!(cancelled.finish, FinishReason::Cancelled);
+    assert!(
+        cancelled.generated.is_empty(),
+        "cancel should land mid-prefill, before any token; got {}",
+        cancelled.generated.len()
+    );
+
+    // The freed slot admits the queued request; tokens are identical.
+    let short_res = h_short.join().unwrap();
+    assert_eq!(short_res.generated, short_want, "queued request diverged after cancel");
+    // And a fresh chunked-prefill request still serves correctly.
+    let after = serve_one(&cluster, &Request::synthetic(122, 77, 512, 4));
+    assert_eq!(after.generated.len(), 4);
+    assert_eq!(after.finish, FinishReason::Length);
+    assert!(after.metrics.prefill.occupancy.max() >= 32.0, "post-cancel prompt never chunked");
+    cluster.shutdown();
+}
+
 /// The headline perf claim, metered end to end: on a single-node
 /// cluster (whose decode d2h is exactly router top-k + logits — no
 /// multi-node partial downloads diluting the ratio) sampling on device

@@ -92,6 +92,16 @@ def buckets_from(max_batch):
     return out
 
 
+def prefill_chunks_from(chunk_max):
+    """Powers of four from 8 up to prefill_chunk_max — the runtime's
+    chunk rule (`Manifest::prefill_chunks`)."""
+    out, t = [], 8
+    while t <= chunk_max:
+        out.append(t)
+        t *= 4
+    return out
+
+
 def expected_inventory(manifest):
     """Mirror of nano.rs compile_artifact call sites: name -> arity.
 
@@ -141,6 +151,24 @@ def expected_inventory(manifest):
         inv[p + "greedy"] = 1  # (logits)
         inv[p + "topk"] = 6  # (logits, k, temp, seed, pos, req_id)
         inv[p + "stop"] = 2  # (packed, stop_table)
+
+    # PrefillExes::compile — the chunked [T, D] prompt-evaluation path.
+    # No lm_head (prompt positions never produce logits) and no dedup
+    # variant (chunks route like batch rows but dispatch once per layer).
+    for t in prefill_chunks_from(manifest.get("prefill_chunk_max", 0)):
+        p = f"dev_p{t}_"
+        inv[p + "embed"] = 2  # (table, toks)
+        inv[p + "qkv"] = 3  # (ln1, wqkv, x)
+        inv[p + "k_append"] = 3  # (cache, qkv, pos) — bulk T-row write
+        inv[p + "v_append"] = 3
+        inv[p + "attn_out"] = 6  # (wo, x, qkv, k, v, pos) — causal chunk
+        inv[p + "moe_norm"] = 2
+        inv[p + "router"] = 2
+        inv[p + "residual"] = 2
+        for el in (8, 16):
+            for ns in (fast_ns, full_ns):
+                # (w1s, v1s, w2s, x, idx, w)
+                inv[p + f"experts_el{el}_ns{ns}"] = 6
     return inv
 
 
@@ -179,6 +207,7 @@ def lowered_arities():
     arts.update(aot.lower_device_artifacts())
     arts.update(aot.lower_batched_artifacts())
     arts.update(aot.lower_sampler_artifacts())
+    arts.update(aot.lower_prefill_artifacts())
     return {name: entry_arity(text) for name, text in arts.items()}
 
 
@@ -321,6 +350,7 @@ def main():
         ("num_slots", NUM_SLOTS),
         ("sampler_max_top_k", M.SAMPLER_MAX_TOP_K),
         ("sampler_max_stop", M.SAMPLER_MAX_STOP),
+        ("prefill_chunk_max", max(aot.PREFILL_CHUNKS)),
     ]
     for key, want in checks:
         got = manifest.get(key)
@@ -330,6 +360,13 @@ def main():
         findings.append(
             f"BATCH_BUCKETS {list(aot.BATCH_BUCKETS)} are not the powers of "
             f"two implied by max_batch = {manifest.get('max_batch')}"
+        )
+    if prefill_chunks_from(manifest.get("prefill_chunk_max", 0)) != list(
+        aot.PREFILL_CHUNKS
+    ):
+        findings.append(
+            f"PREFILL_CHUNKS {list(aot.PREFILL_CHUNKS)} are not the powers of "
+            f"four implied by prefill_chunk_max = {manifest.get('prefill_chunk_max')}"
         )
 
     if findings:
